@@ -1,0 +1,83 @@
+//! ISA tour: assemble a hand-written SPEED kernel (the customized
+//! VSACFG/VSALD/VSAM instructions), show the encodings, run it on the
+//! functional simulator, and disassemble a compiler-generated conv.
+//!
+//! Run: `cargo run --release --example asm_demo`
+
+use speed::arch::{Precision, SpeedConfig};
+use speed::core::{ExecMode, Processor};
+use speed::dataflow::{compile_conv, ConvLayer, Strategy};
+use speed::isa::{assemble, disassemble, encode, Program};
+
+const DEMO: &str = r#"
+    # one 4x(4-lanes*4) output tile at int8, channel-first
+    vsacfg e8, cf, th4          # precision / strategy / TILE_H
+    vsacfg.shift 0              # requant shift on drain
+    addi t1, zero, 0
+    vsacfg.rowstride t1, 0      # dense A rows, no x auto-increment
+    addi t1, zero, 64
+    vsacfg.outstride t1         # output row pitch
+    addi t1, zero, 4
+    vsacfg.cstride t1           # output channel pitch
+    # load A (broadcast, 4 rows x 4 steps) and B (ordered, per-lane couts)
+    addi t6, zero, 16
+    vsetvli zero, t6, e16, m8
+    addi a0, zero, 256
+    vsald.b v0, (a0)
+    addi t6, zero, 64
+    vsetvli zero, t6, e16, m8
+    addi a1, zero, 1024
+    vsald.o v8, (a1)
+    # stream 4 unified elements through the SA core, drain with relu
+    addi t6, zero, 4
+    vsetvli zero, t6, e16, m8
+    vsam.macz acc0, v0, v8
+    addi a2, zero, 2048
+    vsam.st.relu acc0, (a2)
+"#;
+
+fn main() -> anyhow::Result<()> {
+    println!("== hand-written kernel ==");
+    let prog_instrs = assemble(DEMO)?;
+    for i in &prog_instrs {
+        println!("  {:08x}  {}", encode(i), disassemble(i));
+    }
+
+    // run it functionally
+    let cfg = SpeedConfig::default();
+    let mut m = Processor::new(cfg.clone(), 1 << 16, ExecMode::Functional)?;
+    // A: 16 elements × 4B (int8 groups of 4) at 256; B: 64 elements at 1024
+    let a_ops: Vec<i64> = (0..16 * 4).map(|i| (i % 5) as i64 - 2).collect();
+    let b_ops: Vec<i64> = (0..64 * 4).map(|i| (i % 3) as i64 - 1).collect();
+    let p = Precision::Int8;
+    m.dram.poke(256, &speed::arch::precision::pack_operands(p, &a_ops)?)?;
+    m.dram.poke(1024, &speed::arch::precision::pack_operands(p, &b_ops)?)?;
+    let mut prog = Program::new();
+    for i in &prog_instrs {
+        prog.push(*i);
+    }
+    m.run(&prog)?;
+    let s = m.stats();
+    println!(
+        "\nexecuted: {} instrs, {} cycles, {} MACs, first output bytes: {:?}",
+        s.instrs.total(),
+        s.cycles,
+        s.macs,
+        m.dram.peek(2048, 8)?
+    );
+
+    // show what the dataflow compiler emits for a tiny conv
+    println!("\n== compiler-generated conv (first 24 instructions) ==");
+    let layer = ConvLayer::new("demo", 8, 16, 6, 6, 3, 1, 1);
+    let cc = compile_conv(&cfg, &layer, p, Strategy::ChannelFirst, 6, true)?;
+    println!(
+        "{} instructions for {layer} ({} useful MACs)",
+        cc.program.len(),
+        cc.useful_macs
+    );
+    for i in cc.program.decode_all()?.iter().take(24) {
+        println!("  {}", disassemble(i));
+    }
+    println!("  ...");
+    Ok(())
+}

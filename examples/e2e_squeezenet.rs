@@ -1,0 +1,146 @@
+//! END-TO-END DRIVER — proves all layers of the stack compose:
+//!
+//! 1. **Correctness**: run the multi-precision TinyCNN (4 conv layers at
+//!    4/8/16-bit) *through the cycle-accurate functional simulator*,
+//!    layer by layer (ifmap packing between layers = the inter-layer DMA
+//!    model), and compare the final logits **bit-exactly** against the
+//!    XLA/PJRT golden network (`artifacts/tinycnn.hlo.txt`, lowered once
+//!    from the JAX + Pallas bit-split kernel).
+//! 2. **Headline metric**: run full SqueezeNet inference (all 26 conv
+//!    layers) on the timing engine at 16/8/4-bit with the mixed dataflow
+//!    and report the paper's metric (GOPS/mm²) against the Ara baseline.
+//!
+//! Requires `make artifacts`. Results are recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example e2e_squeezenet`
+
+use speed::arch::{AraConfig, Precision, SpeedConfig};
+use speed::baseline::simulate_layer_ara;
+use speed::coordinator::{run_functional_conv, simulate_layer};
+use speed::cost::{ara_area_mm2, speed_area_breakdown};
+use speed::dataflow::{ConvLayer, Strategy};
+use speed::mem::Tensor;
+use speed::models::model_by_name;
+use speed::runtime::{PjrtRuntime, TinycnnGolden};
+use speed::testutil::Prng;
+
+/// TinyCNN specs — must mirror `python/compile/model.py::TINYCNN_SPECS`.
+struct Spec {
+    name: &'static str,
+    cin: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    p: Precision,
+    shift: u8,
+    relu: bool,
+}
+
+const TINYCNN: [Spec; 4] = [
+    Spec { name: "conv1", cin: 3, cout: 8, k: 3, stride: 1, pad: 1, p: Precision::Int4, shift: 4, relu: true },
+    Spec { name: "conv2", cin: 8, cout: 16, k: 3, stride: 2, pad: 1, p: Precision::Int8, shift: 6, relu: true },
+    Spec { name: "conv3", cin: 16, cout: 16, k: 3, stride: 1, pad: 1, p: Precision::Int16, shift: 9, relu: true },
+    Spec { name: "head", cin: 16, cout: 10, k: 1, stride: 1, pad: 0, p: Precision::Int16, shift: 12, relu: false },
+];
+
+fn tinycnn_e2e() -> anyhow::Result<()> {
+    println!("== Part 1: TinyCNN end-to-end, simulator vs XLA golden ==\n");
+    let cfg = SpeedConfig::default();
+    let mut rng = Prng::new(0xE2E);
+    let input = Tensor::random(&[3, 16, 16], Precision::Int4, &mut rng);
+    let weights: Vec<Tensor> = TINYCNN
+        .iter()
+        .map(|s| Tensor::random(&[s.cout, s.cin, s.k, s.k], s.p, &mut rng))
+        .collect();
+
+    // (a) XLA golden: the whole network in one AOT-compiled executable
+    let mut rt = PjrtRuntime::new("artifacts")?;
+    let golden = TinycnnGolden::new(&mut rt).run(&input, &weights)?;
+
+    // (b) cycle-accurate functional simulator, one compiled program per
+    //     layer, host DMA repacks activations between layers
+    let mut act = input.clone();
+    let mut total_cycles = 0u64;
+    for (spec, w) in TINYCNN.iter().zip(&weights) {
+        let layer = ConvLayer::new(
+            spec.name, spec.cin, spec.cout, act.shape[1], act.shape[2], spec.k, spec.stride,
+            spec.pad,
+        );
+        // strategy per layer: the mixed policy (1x1 → CF, 3x3 → FF)
+        let strat =
+            if spec.k == 1 { Strategy::ChannelFirst } else { Strategy::FeatureFirst };
+        act = run_functional_conv(&cfg, &layer, spec.p, strat, &act, w, spec.shift, spec.relu)?;
+        let t = simulate_layer(&cfg, &layer, spec.p, Strategy::Mixed)?;
+        total_cycles += t.cycles;
+        println!(
+            "  {:<6} {:>9} cycles  {:>7.2} GOPS  out {:?}",
+            spec.name,
+            t.cycles,
+            t.gops(&cfg),
+            act.shape
+        );
+    }
+
+    assert_eq!(act.shape, golden.shape, "output shape mismatch");
+    assert_eq!(act.data, golden.data, "BIT-EXACT CHECK FAILED");
+    println!(
+        "\n  logits[0..10]: {:?}",
+        &act.data[..10.min(act.data.len())]
+    );
+    println!("  simulator == XLA golden: BIT-EXACT ({} values)", act.data.len());
+    println!("  total inference: {total_cycles} cycles = {:.2} µs @ {} MHz\n",
+        total_cycles as f64 / cfg.freq_mhz, cfg.freq_mhz);
+    Ok(())
+}
+
+fn squeezenet_inference() -> anyhow::Result<()> {
+    println!("== Part 2: full SqueezeNet inference (timing, mixed dataflow) ==\n");
+    let cfg = SpeedConfig::default();
+    let ara_cfg = AraConfig::default();
+    let area = speed_area_breakdown(&cfg).total();
+    let model = model_by_name("SqueezeNet").unwrap();
+    println!(
+        "{:>7} | {:>11} {:>8} {:>9} | {:>11} {:>9}",
+        "prec", "cycles", "ms/img", "GOPS/mm2", "Ara cycles", "speedup"
+    );
+    for p in [Precision::Int16, Precision::Int8, Precision::Int4] {
+        let mut cycles = 0u64;
+        let mut ops = 0u64;
+        let mut ara_cycles = 0u64;
+        for layer in &model.layers {
+            let r = simulate_layer(&cfg, layer, p, Strategy::Mixed)?;
+            cycles += r.cycles;
+            ops += 2 * r.useful_macs;
+            if p != Precision::Int4 {
+                ara_cycles += simulate_layer_ara(&ara_cfg, layer, p)?.cycles;
+            }
+        }
+        let secs = cycles as f64 / (cfg.freq_mhz * 1e6);
+        let gops = ops as f64 / secs / 1e9;
+        let (ara_s, speedup) = if ara_cycles > 0 {
+            (format!("{ara_cycles}"), format!("{:.2}x", ara_cycles as f64 / cycles as f64))
+        } else {
+            ("n/a".into(), "n/a".into())
+        };
+        println!(
+            "{:>7} | {:>11} {:>8.2} {:>9.2} | {:>11} {:>9}",
+            p.to_string(),
+            cycles,
+            secs * 1e3,
+            gops / area,
+            ara_s,
+            speedup
+        );
+    }
+    println!(
+        "\n(Ara area {:.2} mm² vs SPEED {area:.2} mm²; speedup is wall-clock.)",
+        ara_area_mm2()
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    tinycnn_e2e()?;
+    squeezenet_inference()
+}

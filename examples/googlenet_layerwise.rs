@@ -1,0 +1,26 @@
+//! Fig. 3 workload as a runnable example: layer-wise GoogLeNet @16-bit
+//! under FF-only / CF-only / Mixed, with the Ara baseline — prints the
+//! same rows the paper's Fig. 3 plots.
+//!
+//! Run: `cargo run --release --example googlenet_layerwise`
+
+use speed::arch::SpeedConfig;
+use speed::coordinator::experiments::run_fig3;
+use speed::coordinator::report::fig3_markdown;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SpeedConfig::default();
+    let fig3 = run_fig3(&cfg)?;
+    println!("{}", fig3_markdown(&fig3));
+
+    // the paper's qualitative claims, checked live:
+    let conv1x1_cf_wins = fig3.rows.iter().filter(|r| r.k == 1).all(|r| r.cf >= r.ff);
+    let big_kernel_ff_wins = fig3.rows.iter().filter(|r| r.k >= 5).all(|r| r.ff >= r.cf);
+    println!("CF wins every 1x1 layer: {conv1x1_cf_wins}");
+    println!("FF wins every K>=5 layer: {big_kernel_ff_wins}");
+    println!(
+        "mixed dominates both single strategies: {}",
+        fig3.eff_mixed >= fig3.eff_ff && fig3.eff_mixed >= fig3.eff_cf
+    );
+    Ok(())
+}

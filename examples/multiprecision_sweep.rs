@@ -1,0 +1,39 @@
+//! Fig. 4 workload as a runnable example: all four benchmark networks at
+//! 16/8/4-bit (SPEED mixed dataflow) vs Ara, plus a design-space mini
+//! ablation over TILE_R×TILE_C showing the parameterized SAU scaling.
+//!
+//! Run: `cargo run --release --example multiprecision_sweep`
+
+use speed::arch::{Precision, SpeedConfig};
+use speed::coordinator::experiments::run_fig4;
+use speed::coordinator::report::fig4_markdown;
+use speed::coordinator::simulate_layer;
+use speed::cost::speed_area_breakdown;
+use speed::dataflow::{ConvLayer, Strategy};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SpeedConfig::default();
+    let fig4 = run_fig4(&cfg)?;
+    println!("{}", fig4_markdown(&fig4));
+
+    // ablation: scale the SAU (the paper's "parameterized multi-precision
+    // SAU") and watch area efficiency respond.
+    println!("## SAU design-space ablation (ResNet conv3x3 @8-bit, mixed)\n");
+    println!("{:<10} {:>9} {:>10} {:>10}", "tile", "GOPS", "mm^2", "GOPS/mm^2");
+    let layer = ConvLayer::new("r3", 64, 64, 56, 56, 3, 1, 1);
+    for (tr, tc) in [(2, 2), (4, 4), (8, 8)] {
+        let mut c = cfg.clone();
+        c.tile_r = tr;
+        c.tile_c = tc;
+        let r = simulate_layer(&c, &layer, Precision::Int8, Strategy::Mixed)?;
+        let area = speed_area_breakdown(&c).total();
+        println!(
+            "{:<10} {:>9.2} {:>10.3} {:>10.2}",
+            format!("{tr}x{tc}"),
+            r.gops(&c),
+            area,
+            r.gops(&c) / area
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Quickstart: simulate one conv layer on SPEED at all precisions and
+//! strategies; print cycles / GOPS / utilization / roofline / traffic.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use speed::arch::{Precision, SpeedConfig};
+use speed::coordinator::simulate_layer;
+use speed::cost::{roofline_gops, speed_area_breakdown};
+use speed::dataflow::{ConvLayer, Strategy};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SpeedConfig::default();
+    let layer = ConvLayer::new("resnet_conv3x3", 64, 64, 56, 56, 3, 1, 1);
+    let area = speed_area_breakdown(&cfg).total();
+    println!(
+        "SPEED: {} lanes, VLEN {}, SAU {}x{}, {} MHz, {:.2} mm^2",
+        cfg.n_lanes, cfg.vlen_bits, cfg.tile_r, cfg.tile_c, cfg.freq_mhz, area
+    );
+    println!("layer: {layer}\n");
+    println!(
+        "{:<8} {:<6} {:>10} {:>8} {:>6} {:>9} {:>9} {:>10}",
+        "prec", "strat", "cycles", "GOPS", "util", "GOPS/mm2", "roofline", "DRAM rd"
+    );
+    for p in [Precision::Int16, Precision::Int8, Precision::Int4] {
+        for s in [Strategy::FeatureFirst, Strategy::ChannelFirst, Strategy::Mixed] {
+            let r = simulate_layer(&cfg, &layer, p, s)?;
+            println!(
+                "{:<8} {:<6} {:>10} {:>8.2} {:>6.3} {:>9.2} {:>9.1} {:>9}K",
+                p.to_string(),
+                format!("{s}"),
+                r.cycles,
+                r.gops(&cfg),
+                r.utilization(&cfg),
+                r.gops(&cfg) / area,
+                roofline_gops(&cfg, &layer, p),
+                r.stats.dram_read / 1024
+            );
+        }
+    }
+    Ok(())
+}

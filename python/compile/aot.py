@@ -1,0 +1,118 @@
+"""AOT lowering: JAX/Pallas golden computations → HLO text artifacts.
+
+Run once at build time (`make artifacts`); Python never runs on the
+request path. The Rust runtime loads these with
+`HloModuleProto::from_text_file` → `PjRtClient::cpu().compile()`.
+
+HLO **text** (not `.serialize()`) is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids which the crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Artifact inventory (shapes are frozen; `rust/src/runtime/golden.rs`
+mirrors them):
+
+| file                | computation                              | args |
+|---------------------|------------------------------------------|------|
+| gemm_i4.hlo.txt     | mp_gemm bits=4,  A[16,32] · B[16,32]ᵀ    | a, b |
+| gemm_i8.hlo.txt     | mp_gemm bits=8,  same shapes             | a, b |
+| gemm_i16.hlo.txt    | mp_gemm bits=16, same shapes             | a, b |
+| conv3x3_i8.hlo.txt  | conv2d_mp 8→16ch, 10×10, K3 s1 p1, sh6   | x, w |
+| conv1x1_i8.hlo.txt  | conv2d_mp 16→8ch, 6×6, K1 s1 p0, sh5 relu| x, w |
+| tinycnn.hlo.txt     | TinyCNN forward (4 layers, 4/8/16-bit)   | x, w1..w4 |
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.mp_gemm import mp_gemm
+from .kernels.conv import conv2d_mp
+from . import model
+
+GEMM_M, GEMM_K, GEMM_N = 16, 32, 16
+
+CONV3X3 = dict(cin=8, cout=16, h=10, w=10, k=3, stride=1, pad=1, shift=6, relu=False, bits=8)
+CONV1X1 = dict(cin=16, cout=8, h=6, w=6, k=1, stride=1, pad=0, shift=5, relu=True, bits=8)
+CONV3X3_I4 = dict(cin=32, cout=16, h=8, w=8, k=3, stride=1, pad=1, shift=4, relu=True, bits=4)
+CONV3X3_I16 = dict(cin=4, cout=8, h=8, w=8, k=3, stride=2, pad=1, shift=8, relu=False, bits=16)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def build_artifacts():
+    """Yield (filename, lowered, meta) for every artifact."""
+    for bits in (4, 8, 16):
+        fn = lambda a, b, bits=bits: (mp_gemm(a, b, bits=bits),)
+        lowered = jax.jit(fn).lower(_i32((GEMM_M, GEMM_K)), _i32((GEMM_N, GEMM_K)))
+        yield (
+            f"gemm_i{bits}.hlo.txt",
+            lowered,
+            {"kind": "gemm", "bits": bits, "m": GEMM_M, "k": GEMM_K, "n": GEMM_N},
+        )
+
+    for name, c in (
+        ("conv3x3_i8", CONV3X3),
+        ("conv1x1_i8", CONV1X1),
+        ("conv3x3_i4", CONV3X3_I4),
+        ("conv3x3_i16", CONV3X3_I16),
+    ):
+        fn = lambda x, w, c=c: (
+            conv2d_mp(x, w, c["stride"], c["pad"], c["shift"], c["relu"], c["bits"]),
+        )
+        lowered = jax.jit(fn).lower(
+            _i32((c["cin"], c["h"], c["w"])),
+            _i32((c["cout"], c["cin"], c["k"], c["k"])),
+        )
+        yield (f"{name}.hlo.txt", lowered, {"kind": "conv", **c})
+
+    fn = lambda x, *ws: (model.tinycnn_forward(x, *ws),)
+    args = [_i32(model.TINYCNN_INPUT_SHAPE)] + [_i32(s) for s in model.tinycnn_weight_shapes()]
+    lowered = jax.jit(fn).lower(*args)
+    yield (
+        "tinycnn.hlo.txt",
+        lowered,
+        {
+            "kind": "tinycnn",
+            "input": list(model.TINYCNN_INPUT_SHAPE),
+            "output": list(model.tinycnn_output_shape()),
+            "layers": [s.name for s in model.TINYCNN_SPECS],
+        },
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {}
+    for fname, lowered, meta in build_artifacts():
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[fname] = meta
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

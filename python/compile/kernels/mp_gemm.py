@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: multi-precision GEMM via the bit-split PE array.
+
+This is the paper's compute hot-spot re-expressed for the TPU model
+(DESIGN.md §Hardware-Adaptation): the SAU's *"sixteen 4-bit multipliers
+dynamically combined"* become a stack of nibble partial-product matmuls —
+one physical MXU-shaped contraction per (i, j) nibble pair, recombined
+with shifts. Precision is a static parameter: 16-bit → 16 partial
+products per MAC, 8-bit → 4, 4-bit → 1, exactly the PE's multiplier
+budget (`rust/src/pe/combine.rs` is the bit-exact twin).
+
+`BlockSpec` expresses the HBM↔VMEM schedule the SAU's operand requester
+and queues implement on-chip: A row-tiles and B column-tiles stream into
+VMEM while the full-K contraction stays resident.
+
+Always lowered with `interpret=True`: the CPU PJRT plugin cannot execute
+Mosaic custom-calls (see /opt/xla-example/README.md); real-TPU efficiency
+is estimated analytically in DESIGN.md/EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default VMEM tiling (MXU-aligned on real hardware; any value works in
+# interpret mode). Chosen so one (TILE_M × K) + (TILE_N × K) + out tile
+# fits a ~1 MiB VMEM budget for the artifact shapes (see aot.py).
+TILE_M = 8
+TILE_N = 8
+
+
+def _mp_gemm_kernel(a_ref, b_ref, o_ref, *, bits: int):
+    """One (TILE_M, TILE_N) output tile: stacked nibble matmuls over K."""
+    a = a_ref[...].astype(jnp.int32)  # [TILE_M, K]
+    b = b_ref[...].astype(jnp.int32)  # [TILE_N, K]
+    n = bits // 4
+    acc = jnp.zeros((a.shape[0], b.shape[0]), jnp.int32)
+    for i in range(n):
+        # interior slices unsigned, top slice keeps the sign (arithmetic
+        # shift) — the mult4/NibbleMode split of the RTL model.
+        na = (a >> (4 * i)) if i == n - 1 else ((a >> (4 * i)) & 0xF)
+        for j in range(n):
+            nb = (b >> (4 * j)) if j == n - 1 else ((b >> (4 * j)) & 0xF)
+            part = jnp.matmul(na, nb.T, preferred_element_type=jnp.int32)
+            acc = acc + (part << (4 * (i + j)))
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "tile_m", "tile_n"))
+def mp_gemm(a, b, bits: int = 8, tile_m: int = TILE_M, tile_n: int = TILE_N):
+    """Multi-precision GEMM: `C[m, n] = Σ_k A[m, k]·B[n, k]`.
+
+    `a: [M, K] int32`, `b: [N, K] int32`, operands must fit `bits`-bit
+    signed range. M and N must be multiples of the tile sizes (the AOT
+    shapes are; the dataflow compiler pads).
+    """
+    m, k = a.shape
+    n, k2 = b.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert m % tile_m == 0 and n % tile_n == 0, (m, n, tile_m, tile_n)
+    grid = (m // tile_m, n // tile_n)
+    return pl.pallas_call(
+        functools.partial(_mp_gemm_kernel, bits=bits),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_n, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j)),
+        interpret=True,
+    )(a.astype(jnp.int32), b.astype(jnp.int32))
+
+
+def vmem_bytes(k: int, tile_m: int = TILE_M, tile_n: int = TILE_N) -> int:
+    """Static VMEM footprint estimate of one grid step (int32 operands):
+    A tile + B tile + out tile. Used by the §Perf block-shape analysis."""
+    return 4 * (tile_m * k + tile_n * k + tile_m * tile_n)
+
+
+def mxu_utilization_estimate(bits: int, tile_m: int = TILE_M, tile_n: int = TILE_N) -> float:
+    """Fraction of MXU lanes doing useful work per nibble matmul, for an
+    (128×128) MXU model: tiles smaller than the MXU waste lanes; the
+    nibble stack multiplies the op count by (bits/4)² per useful MAC."""
+    mxu = 128.0
+    spatial = min(tile_m / mxu, 1.0) * min(tile_n / mxu, 1.0)
+    nibble_overhead = (bits / 4) ** 2 / 16.0  # vs the 16-product budget
+    return spatial * nibble_overhead

@@ -1,0 +1,114 @@
+"""Pure-jnp reference oracles for the multi-precision kernels.
+
+These are the correctness anchors of the whole build: the Pallas kernel
+(`mp_gemm.py`) is tested against them (pytest + hypothesis), and the AOT
+artifacts lowered from the kernel-calling model are what the Rust
+functional simulator is checked against. Everything is integer (int32
+carriers, wrapping semantics) so equality is exact end to end.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+# Signed range per supported precision.
+PRECISIONS = (4, 8, 16)
+
+
+def prange(bits: int):
+    """Inclusive signed range of a `bits`-bit operand."""
+    return -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+
+
+def ref_gemm(a, b):
+    """Reference GEMM: `C[m, n] = sum_k A[m, k] * B[n, k]` in int32.
+
+    `a: [M, K] int32`, `b: [N, K] int32` (operands must fit the target
+    precision; the carrier is int32, accumulation wraps like hardware).
+    """
+    return jnp.matmul(
+        a.astype(jnp.int32), b.astype(jnp.int32).T, preferred_element_type=jnp.int32
+    )
+
+
+def ref_nibble_decompose(x, bits: int):
+    """Split `bits`-bit signed values into 4-bit slices.
+
+    Returns a list of `bits // 4` int32 arrays; interior slices are the
+    unsigned magnitude bits, the top slice is arithmetic-shifted so it
+    keeps the sign — exactly the paper's PE decomposition (and
+    `rust/src/pe/mult4.rs`).
+    """
+    n = bits // 4
+    out = []
+    for i in range(n):
+        if i == n - 1:
+            out.append((x >> (4 * i)).astype(jnp.int32))  # arithmetic: signed top
+        else:
+            out.append(((x >> (4 * i)) & 0xF).astype(jnp.int32))
+    return out
+
+
+def ref_gemm_bitsplit(a, b, bits: int):
+    """GEMM computed via the 4-bit partial-product decomposition.
+
+    Mathematically equal to `ref_gemm` for in-range operands; used to
+    unit-test the decomposition itself.
+    """
+    na = ref_nibble_decompose(a.astype(jnp.int32), bits)
+    nb = ref_nibble_decompose(b.astype(jnp.int32), bits)
+    acc = jnp.zeros((a.shape[0], b.shape[0]), jnp.int32)
+    for i, ai in enumerate(na):
+        for j, bj in enumerate(nb):
+            part = jnp.matmul(ai, bj.T, preferred_element_type=jnp.int32)
+            acc = acc + (part << (4 * (i + j)))
+    return acc
+
+
+def ref_requant(acc, shift: int, relu: bool, bits: int):
+    """Requantize int32 accumulators: arithmetic shift, optional ReLU,
+    saturate to the `bits`-bit signed range (matches `pe::requant_i32`)."""
+    lo, hi = prange(bits)
+    v = acc >> shift
+    if relu:
+        v = jnp.maximum(v, 0)
+    return jnp.clip(v, lo, hi).astype(jnp.int32)
+
+
+def ref_conv2d(x, w, stride: int, pad: int, shift: int, relu: bool, bits: int):
+    """Reference quantized conv2d.
+
+    `x: [Cin, H, W] int32`, `w: [Cout, Cin, K, K] int32` →
+    `[Cout, Ho, Wo] int32` (requantized). Uses explicit im2col + GEMM so
+    the loop structure matches the kernel path exactly.
+    """
+    cin, h, wdt = x.shape
+    cout, cin2, kh, kw = w.shape
+    assert cin == cin2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (wdt + 2 * pad - kw) // stride + 1
+    patches = im2col(xp, kh, kw, stride, ho, wo)  # [Ho*Wo, Cin*K*K]
+    wmat = w.reshape(cout, cin * kh * kw)  # [Cout, Cin*K*K]
+    acc = ref_gemm(patches, wmat)  # [Ho*Wo, Cout]
+    out = ref_requant(acc, shift, relu, bits)
+    return out.T.reshape(cout, ho, wo)
+
+
+def im2col(xp, kh: int, kw: int, stride: int, ho: int, wo: int):
+    """Extract conv patches: `[Ho*Wo, Cin*Kh*Kw]`, channel-major within a
+    patch (matches the weight reshape `w.reshape(Cout, Cin*K*K)`)."""
+    cin = xp.shape[0]
+    cols = []
+    for ky in range(kh):
+        for kx in range(kw):
+            sl = xp[:, ky : ky + stride * ho : stride, kx : kx + stride * wo : stride]
+            cols.append(sl.reshape(cin, ho * wo))
+    # cols: Kh*Kw entries of [Cin, Ho*Wo] → [Ho*Wo, Cin*Kh*Kw]
+    stacked = jnp.stack(cols, axis=1)  # [Cin, Kh*Kw, Ho*Wo]
+    return stacked.reshape(cin * kh * kw, ho * wo).T
+
+
+def random_operands(rng: np.random.Generator, shape, bits: int):
+    """Deterministic random int32 operands within the precision range."""
+    lo, hi = prange(bits)
+    return rng.integers(lo, hi + 1, size=shape, dtype=np.int64).astype(np.int32)

@@ -1,0 +1,106 @@
+"""L2 JAX model: multi-precision quantized conv layers calling the L1
+Pallas kernel, plus the TinyCNN golden network used by the end-to-end
+example.
+
+Each layer is (conv → requant[shift, relu] → clamp) at a per-layer
+precision — the paper's multi-precision deployment: layers may run at
+4, 8 or 16 bits, and the golden graph mirrors what the Rust simulator
+executes layer by layer.
+"""
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.conv import conv2d_mp
+
+
+@dataclass(frozen=True)
+class QConvSpec:
+    """One quantized conv layer's static description."""
+
+    name: str
+    cin: int
+    cout: int
+    k: int
+    stride: int
+    pad: int
+    bits: int
+    shift: int
+    relu: bool
+
+
+def qconv_apply(spec: QConvSpec, x, w):
+    """Apply one quantized conv layer via the Pallas kernel path."""
+    return conv2d_mp(x, w, spec.stride, spec.pad, spec.shift, spec.relu, spec.bits)
+
+
+def qconv_apply_ref(spec: QConvSpec, x, w):
+    """Apply the same layer via the pure-jnp oracle."""
+    return ref.ref_conv2d(x, w, spec.stride, spec.pad, spec.shift, spec.relu, spec.bits)
+
+
+# ---------------------------------------------------------------------------
+# TinyCNN: the end-to-end golden (multi-precision: 8b → 4b → 16b → 8b head)
+# ---------------------------------------------------------------------------
+
+TINYCNN_INPUT_SHAPE: Tuple[int, int, int] = (3, 16, 16)
+TINYCNN_INPUT_BITS = 4
+
+# Precision ladder is non-decreasing (4b → 8b → 16b) so each layer's
+# requantized output (clamped to its own range) is always a valid operand
+# for the next layer — the same invariant the Rust simulator's fused
+# requant-store drain enforces.
+TINYCNN_SPECS = (
+    QConvSpec("conv1", 3, 8, 3, 1, 1, bits=4, shift=4, relu=True),
+    QConvSpec("conv2", 8, 16, 3, 2, 1, bits=8, shift=6, relu=True),
+    QConvSpec("conv3", 16, 16, 3, 1, 1, bits=16, shift=9, relu=True),
+    QConvSpec("head", 16, 10, 1, 1, 0, bits=16, shift=12, relu=False),
+)
+
+
+def tinycnn_weight_shapes():
+    """Weight tensor shapes in application order."""
+    return [(s.cout, s.cin, s.k, s.k) for s in TINYCNN_SPECS]
+
+
+def tinycnn_random_weights(seed: int = 2024):
+    """Deterministic weights, each layer in its own precision range."""
+    rng = np.random.default_rng(seed)
+    return [
+        ref.random_operands(rng, (s.cout, s.cin, s.k, s.k), s.bits) for s in TINYCNN_SPECS
+    ]
+
+
+def tinycnn_forward(x, *weights):
+    """Full TinyCNN forward on the kernel path.
+
+    `x: [3, 16, 16] int32` (int8-range values) → `[10, 8, 8] int32`
+    logits map. The inter-layer dtype stays int32; each layer's output is
+    already requantized to the *next* layer's operand range.
+    """
+    h = x
+    for spec, w in zip(TINYCNN_SPECS, weights):
+        h = qconv_apply(spec, h, w)
+    return h
+
+
+def tinycnn_forward_ref(x, *weights):
+    """Reference forward (pure jnp) for cross-checking."""
+    h = x
+    for spec, w in zip(TINYCNN_SPECS, weights):
+        h = qconv_apply_ref(spec, h, w)
+    return h
+
+
+def tinycnn_output_shape():
+    """Static output shape of the golden network."""
+    c, h, w = TINYCNN_INPUT_SHAPE
+    for s in TINYCNN_SPECS:
+        h = (h + 2 * s.pad - s.k) // s.stride + 1
+        w = (w + 2 * s.pad - s.k) // s.stride + 1
+        c = s.cout
+    return (c, h, w)

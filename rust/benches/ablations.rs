@@ -1,0 +1,94 @@
+//! BENCH ABLATIONS — the design-space studies DESIGN.md calls out:
+//! the paper's "parameterized multi-precision SAU" and "scalable
+//! modules" knobs, plus memory-bandwidth sensitivity. Not a paper
+//! figure, but the evidence that the models respond structurally (and
+//! the basis of the §Perf roofline discussion).
+//!
+//! Run: `cargo bench --bench ablations`
+
+use speed::arch::{Precision, SpeedConfig};
+use speed::coordinator::simulate_layer;
+use speed::cost::{roofline_gops, speed_area_breakdown};
+use speed::dataflow::{ConvLayer, Strategy};
+
+fn bench_layers() -> Vec<ConvLayer> {
+    vec![
+        ConvLayer::new("r3_56", 64, 64, 56, 56, 3, 1, 1),
+        ConvLayer::new("pw_28", 128, 128, 28, 28, 1, 1, 0),
+        ConvLayer::new("g5_14", 32, 64, 14, 14, 5, 1, 2),
+    ]
+}
+
+fn sweep(label: &str, cfg: &SpeedConfig, p: Precision) {
+    let area = speed_area_breakdown(cfg).total();
+    let mut tot_cycles = 0u64;
+    let mut tot_ops = 0u64;
+    for l in bench_layers() {
+        let r = simulate_layer(cfg, &l, p, Strategy::Mixed).expect("sim");
+        tot_cycles += r.cycles;
+        tot_ops += 2 * r.useful_macs;
+    }
+    let secs = tot_cycles as f64 / (cfg.freq_mhz * 1e6);
+    let gops = tot_ops as f64 / secs / 1e9;
+    println!(
+        "{label:<26} {:>9.2} GOPS {:>8.3} mm2 {:>9.2} GOPS/mm2",
+        gops,
+        area,
+        gops / area
+    );
+}
+
+fn main() {
+    let base = SpeedConfig::default();
+    let p = Precision::Int8;
+
+    println!("== SAU size (TILE_R x TILE_C), int8 ==");
+    let mut prev_eff = 0.0;
+    for (tr, tc) in [(2usize, 2usize), (4, 4), (8, 8)] {
+        let mut c = base.clone();
+        c.tile_r = tr;
+        c.tile_c = tc;
+        sweep(&format!("SAU {tr}x{tc}"), &c, p);
+        let _ = prev_eff;
+        prev_eff = 0.0;
+    }
+
+    println!("\n== lane count (VLEN scaled with lanes), int8 ==");
+    for lanes in [2usize, 4, 8] {
+        let mut c = base.clone();
+        c.n_lanes = lanes;
+        c.vlen_bits = 1024 * lanes;
+        sweep(&format!("{lanes} lanes"), &c, p);
+    }
+
+    println!("\n== DRAM bandwidth (bytes/cycle), int4 (most memory-bound) ==");
+    let mut last = f64::MAX;
+    for bw in [4.0, 8.0, 16.0, 32.0] {
+        let mut c = base.clone();
+        c.dram_bw_bytes_per_cycle = bw;
+        let mut cyc = 0u64;
+        for l in bench_layers() {
+            cyc += simulate_layer(&c, &l, Precision::Int4, Strategy::Mixed).unwrap().cycles;
+        }
+        println!("bw {bw:>5.0} B/cyc {cyc:>12} cycles");
+        assert!(cyc as f64 <= last * 1.001, "more bandwidth must not slow down");
+        last = cyc as f64;
+    }
+
+    println!("\n== roofline fractions at the default config ==");
+    for pp in [Precision::Int16, Precision::Int8, Precision::Int4] {
+        for l in bench_layers() {
+            let r = simulate_layer(&base, &l, pp, Strategy::Mixed).unwrap();
+            let roof = roofline_gops(&base, &l, pp);
+            println!(
+                "{:<8} {:<8} {:>7.2}/{:>7.2} GOPS = {:>5.2} of roofline",
+                pp.to_string(),
+                l.name,
+                r.gops(&base),
+                roof,
+                r.gops(&base) / roof
+            );
+        }
+    }
+    println!("\n[bench] ablations complete");
+}

@@ -1,0 +1,29 @@
+//! BENCH FIG3 — regenerates the paper's Fig. 3: layer-wise area
+//! efficiency of GoogLeNet @16-bit, FF-only vs CF-only vs Mixed vs Ara,
+//! plus the headline ratios (paper: mixed = 1.88× FF-only, 1.38×
+//! CF-only, 3.53× Ara).
+//!
+//! Run: `cargo bench --bench fig3_googlenet`
+
+use speed::arch::SpeedConfig;
+use speed::coordinator::experiments::run_fig3;
+use speed::coordinator::report::fig3_markdown;
+use std::time::Instant;
+
+fn main() {
+    let cfg = SpeedConfig::default();
+    let t0 = Instant::now();
+    let fig3 = run_fig3(&cfg).expect("fig3");
+    let dt = t0.elapsed();
+    println!("{}", fig3_markdown(&fig3));
+    println!(
+        "[bench] {} layer-sims in {:.2}s ({:.0} ms/layer-sim)",
+        fig3.rows.len() * 3,
+        dt.as_secs_f64(),
+        dt.as_secs_f64() * 1e3 / (fig3.rows.len() * 3) as f64
+    );
+    // shape assertions — fail the bench if the reproduction regresses
+    assert!(fig3.mixed_over_ff() > 1.2, "mixed must clearly beat FF-only");
+    assert!(fig3.mixed_over_cf() > 1.05, "mixed must beat CF-only");
+    assert!(fig3.mixed_over_ara() > 2.0, "mixed must clearly beat Ara");
+}

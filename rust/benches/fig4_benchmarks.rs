@@ -1,0 +1,42 @@
+//! BENCH FIG4 — regenerates the paper's Fig. 4: average area efficiency
+//! of VGG16 / ResNet18 / GoogLeNet / SqueezeNet at 16/8/4-bit, SPEED
+//! (mixed dataflow) vs Ara (paper: 2.77× @16b, 6.39× @8b, 4-bit only on
+//! SPEED).
+//!
+//! Run: `cargo bench --bench fig4_benchmarks`
+
+use speed::arch::{Precision, SpeedConfig};
+use speed::coordinator::experiments::run_fig4;
+use speed::coordinator::report::fig4_markdown;
+use std::time::Instant;
+
+fn main() {
+    let cfg = SpeedConfig::default();
+    let t0 = Instant::now();
+    let fig4 = run_fig4(&cfg).expect("fig4");
+    println!("{}", fig4_markdown(&fig4));
+    println!("[bench] full sweep in {:.1}s", t0.elapsed().as_secs_f64());
+    // shape assertions
+    let r16 = fig4.avg_ratio(Precision::Int16);
+    let r8 = fig4.avg_ratio(Precision::Int8);
+    assert!(r16 > 1.5, "SPEED must clearly beat Ara at 16-bit (got {r16:.2})");
+    assert!(r8 > r16, "the gap must widen at 8-bit ({r8:.2} vs {r16:.2})");
+    for p in [Precision::Int16, Precision::Int8, Precision::Int4] {
+        assert!(fig4.avg_speed_eff(p) > 0.0);
+    }
+    // every model individually: 4-bit beats 8-bit beats 16-bit on SPEED
+    for model in ["VGG16", "ResNet18", "GoogLeNet", "SqueezeNet"] {
+        let eff = |p: Precision| {
+            fig4.cells
+                .iter()
+                .find(|c| c.model == model && c.precision == p)
+                .unwrap()
+                .speed_eff
+        };
+        assert!(
+            eff(Precision::Int4) > eff(Precision::Int8)
+                && eff(Precision::Int8) > eff(Precision::Int16),
+            "{model}: efficiency must improve with lower precision"
+        );
+    }
+}

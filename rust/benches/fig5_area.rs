@@ -1,0 +1,46 @@
+//! BENCH FIG5 — regenerates the paper's Fig. 5: area breakdown of SPEED
+//! (lanes ≈ 90% of 1.10 mm²) and of a single lane (OP queues 25%,
+//! OP requester 17%, VRF 18%, SAU 26%), plus the structural-scaling
+//! ablation the analytical model supports.
+//!
+//! Run: `cargo bench --bench fig5_area`
+
+use speed::arch::SpeedConfig;
+use speed::coordinator::experiments::run_fig5;
+use speed::coordinator::report::fig5_markdown;
+
+fn main() {
+    let cfg = SpeedConfig::default();
+    let a = run_fig5(&cfg);
+    println!("{}", fig5_markdown(&a));
+
+    println!("## structural scaling (model ablation)\n");
+    println!("{:<22} {:>9} {:>9} {:>9}", "config", "total", "lanes", "SAU");
+    for (label, tr, tc, lanes, vlen) in [
+        ("default 4L/4x4", 4usize, 4usize, 4usize, 4096usize),
+        ("SAU 8x8", 8, 8, 4, 4096),
+        ("SAU 2x2", 2, 2, 4, 4096),
+        ("8 lanes", 4, 4, 8, 8192),
+    ] {
+        let mut c = cfg.clone();
+        c.tile_r = tr;
+        c.tile_c = tc;
+        c.n_lanes = lanes;
+        c.vlen_bits = vlen;
+        let b = run_fig5(&c);
+        println!(
+            "{:<22} {:>8.3} {:>8.3} {:>8.3}",
+            label,
+            b.total(),
+            b.lanes_total(),
+            b.sau
+        );
+    }
+
+    // Fig. 5 shape assertions
+    let lane = a.lanes_total();
+    assert!((lane / a.total() - 0.90).abs() < 0.02, "lanes ~90% of total");
+    assert!((a.sau / lane - 0.26).abs() < 0.02, "SAU ~26% of a lane");
+    assert!((a.op_queues / lane - 0.25).abs() < 0.02, "queues ~25%");
+    println!("\n[bench] Fig. 5 shares reproduced within ±2%");
+}

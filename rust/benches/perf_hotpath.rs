@@ -1,0 +1,100 @@
+//! BENCH PERF — the §Perf harness: micro-benchmarks of the stack's hot
+//! paths, used by the optimization pass (EXPERIMENTS.md §Perf records
+//! before/after for each change).
+//!
+//! - L3 timing engine: simulated-instructions/second and
+//!   simulated-cycles/second on a representative layer;
+//! - L3 functional engine: effective MAC/s through the bit-exact
+//!   nibble path;
+//! - codegen: compile throughput (instructions emitted/second);
+//! - encoder/decoder: word round-trips/second.
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+use speed::arch::{Precision, SpeedConfig};
+use speed::coordinator::{run_functional_conv, simulate_layer};
+use speed::dataflow::{compile_conv, ConvLayer, Strategy};
+use speed::isa::{decode, encode, Instr};
+use speed::mem::Tensor;
+use speed::testutil::Prng;
+use std::time::Instant;
+
+fn time<F: FnMut()>(label: &str, iters: u32, unit_count: f64, unit: &str, mut f: F) -> f64 {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let dt = t0.elapsed().as_secs_f64() / iters as f64;
+    let rate = unit_count / dt;
+    println!("{label:<44} {:>9.3} ms   {:>12.3e} {unit}/s", dt * 1e3, rate);
+    rate
+}
+
+fn main() {
+    let cfg = SpeedConfig::default();
+    let layer = ConvLayer::new("r3", 64, 64, 56, 56, 3, 1, 1);
+    println!("{:<44} {:>12} {:>18}", "hot path", "time", "rate");
+
+    // codegen
+    let cc = compile_conv(&cfg, &layer, Precision::Int8, Strategy::FeatureFirst, 6, false)
+        .expect("compile");
+    let n_instr = cc.program.len() as f64;
+    time("compile conv3x3@8b (FF)", 3, n_instr, "instr", || {
+        let _ =
+            compile_conv(&cfg, &layer, Precision::Int8, Strategy::FeatureFirst, 6, false)
+                .unwrap();
+    });
+
+    // timing-mode simulation (the fig3/fig4/table1 inner loop)
+    let r = simulate_layer(&cfg, &layer, Precision::Int8, Strategy::FeatureFirst).unwrap();
+    time(
+        "simulate conv3x3@8b FF (timing mode)",
+        3,
+        r.stats.instrs.total() as f64,
+        "sim-instr",
+        || {
+            let _ =
+                simulate_layer(&cfg, &layer, Precision::Int8, Strategy::FeatureFirst).unwrap();
+        },
+    );
+
+    // functional mode on a smaller layer (bit-exact MAC path)
+    let small = ConvLayer::new("f", 16, 16, 12, 12, 3, 1, 1);
+    let mut rng = Prng::new(1);
+    let input = Tensor::random(&[16, 12, 12], Precision::Int8, &mut rng);
+    let weights = Tensor::random(&[16, 16, 3, 3], Precision::Int8, &mut rng);
+    time(
+        "functional conv (bit-exact nibble MACs)",
+        3,
+        small.macs() as f64,
+        "MAC",
+        || {
+            let _ = run_functional_conv(
+                &cfg,
+                &small,
+                Precision::Int8,
+                Strategy::ChannelFirst,
+                &input,
+                &weights,
+                6,
+                false,
+            )
+            .unwrap();
+        },
+    );
+
+    // ISA encode/decode round-trip
+    let words: Vec<u32> = cc.program.words().iter().copied().take(100_000).collect();
+    time("decode 100k words", 10, words.len() as f64, "word", || {
+        let mut acc = 0u32;
+        for &w in &words {
+            if let Ok(i) = decode(w) {
+                acc ^= encode(&i);
+            }
+        }
+        std::hint::black_box(acc);
+    });
+    let _ = Instr::is_vector;
+}

@@ -1,0 +1,38 @@
+//! BENCH TAB1 — regenerates the paper's Table I: peak integer
+//! throughput / area efficiency / energy efficiency of SPEED (16/8/4-bit)
+//! and Ara (16/8-bit) over every conv layer of all four benchmarks.
+//!
+//! Run: `cargo bench --bench table1_peak`
+
+use speed::arch::SpeedConfig;
+use speed::coordinator::experiments::run_table1;
+use speed::coordinator::report::table1_markdown;
+use std::time::Instant;
+
+fn main() {
+    let cfg = SpeedConfig::default();
+    let t0 = Instant::now();
+    let t1 = run_table1(&cfg).expect("table1");
+    println!("{}", table1_markdown(&t1));
+    println!("[bench] full peak sweep in {:.1}s", t0.elapsed().as_secs_f64());
+
+    // shape assertions (who wins, direction of precision scaling)
+    assert_eq!(t1.speed.len(), 3);
+    assert_eq!(t1.ara.len(), 2);
+    // SPEED peaks grow as precision drops
+    assert!(t1.speed[1].peak_gops > t1.speed[0].peak_gops, "8b > 16b");
+    assert!(t1.speed[2].peak_gops > t1.speed[1].peak_gops, "4b > 8b");
+    // SPEED beats Ara on throughput at matched precisions
+    assert!(t1.speed[0].peak_gops > t1.ara[0].peak_gops, "SPEED wins @16b");
+    assert!(t1.speed[1].peak_gops > t1.ara[1].peak_gops, "SPEED wins @8b");
+    // and on area efficiency
+    assert!(t1.speed[0].area_eff > t1.ara[0].area_eff);
+    assert!(t1.speed[1].area_eff > t1.ara[1].area_eff);
+    // and on energy efficiency
+    assert!(t1.speed[0].energy_eff > t1.ara[0].energy_eff);
+    assert!(t1.speed[1].energy_eff > t1.ara[1].energy_eff);
+    // 4-bit exists only on SPEED (Ara vec has no 4-bit entry) — and is
+    // the overall efficiency champion, the paper's headline.
+    assert!(t1.speed[2].energy_eff > t1.speed[1].energy_eff);
+    println!("[bench] Table I shape assertions passed");
+}

@@ -1,0 +1,233 @@
+//! SPEED and Ara machine configurations.
+
+use crate::arch::Precision;
+use crate::error::{Error, Result};
+
+/// Full parameterization of a SPEED instance.
+///
+/// Defaults reproduce the paper's evaluated configuration (Sec. III-A):
+/// 4 lanes, VLEN = 4096 bit, TILE_R = TILE_C = 4, 500 MHz.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpeedConfig {
+    /// Number of scalable modules (lanes).
+    pub n_lanes: usize,
+    /// Vector register length in bits (whole machine, RVV VLEN).
+    pub vlen_bits: usize,
+    /// Number of architectural vector registers (RVV: 32).
+    pub n_vregs: usize,
+    /// Systolic-array rows per lane (feature-map-height parallelism).
+    pub tile_r: usize,
+    /// Systolic-array columns per lane (output-channel parallelism).
+    pub tile_c: usize,
+    /// Number of SAU accumulator banks (output-tile double buffering).
+    pub n_acc_banks: usize,
+    /// Operand-queue depth in unified elements (per queue).
+    pub queue_depth: usize,
+    /// Core clock in MHz.
+    pub freq_mhz: f64,
+    /// External-memory read/write bandwidth, bytes per core cycle
+    /// (e.g. 16 B/cyc = 128-bit AXI at core clock).
+    pub dram_bw_bytes_per_cycle: f64,
+    /// External-memory transaction latency in cycles (first-word).
+    pub dram_latency_cycles: u64,
+    /// VRF banks per lane.
+    pub vrf_banks_per_lane: usize,
+    /// VRF bank port width in bytes (read or write per cycle per bank).
+    pub vrf_bank_bytes: usize,
+    /// Pipeline issue cost per decoded vector instruction (VIDU), cycles.
+    pub issue_cycles: u64,
+    /// Systolic fill/drain latency per VSAM tile = `tile_r + tile_c`
+    /// multiplied by this (1 = ideal skew registers).
+    pub sa_fill_factor: f64,
+}
+
+impl Default for SpeedConfig {
+    fn default() -> Self {
+        SpeedConfig {
+            n_lanes: 4,
+            vlen_bits: 4096,
+            n_vregs: 32,
+            tile_r: 4,
+            tile_c: 4,
+            n_acc_banks: 4,
+            queue_depth: 16,
+            freq_mhz: 500.0,
+            dram_bw_bytes_per_cycle: 16.0,
+            dram_latency_cycles: 64,
+            vrf_banks_per_lane: 8,
+            vrf_bank_bytes: 8,
+            issue_cycles: 1,
+            sa_fill_factor: 1.0,
+        }
+    }
+}
+
+impl SpeedConfig {
+    /// Validate structural invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.n_lanes == 0 || !self.n_lanes.is_power_of_two() {
+            return Err(Error::config("n_lanes must be a nonzero power of two"));
+        }
+        if self.vlen_bits % (self.n_lanes * 64) != 0 {
+            return Err(Error::config(
+                "vlen_bits must be divisible by 64 × n_lanes (64-bit lane datapath)",
+            ));
+        }
+        if self.tile_r == 0 || self.tile_c == 0 {
+            return Err(Error::config("tile_r/tile_c must be nonzero"));
+        }
+        if self.n_vregs < 8 {
+            return Err(Error::config("need at least 8 vector registers"));
+        }
+        if self.n_acc_banks == 0 {
+            return Err(Error::config("need at least one accumulator bank"));
+        }
+        if self.vrf_banks_per_lane == 0 || self.vrf_bank_bytes == 0 {
+            return Err(Error::config("VRF banking must be nonzero"));
+        }
+        Ok(())
+    }
+
+    /// Bytes of one vector register held by one lane.
+    pub fn vreg_bytes_per_lane(&self) -> usize {
+        self.vlen_bits / 8 / self.n_lanes
+    }
+
+    /// Total VRF capacity per lane in bytes.
+    pub fn vrf_bytes_per_lane(&self) -> usize {
+        self.vreg_bytes_per_lane() * self.n_vregs
+    }
+
+    /// MACs per cycle for the whole machine at precision `p`
+    /// (= lanes × TILE_R × TILE_C × channel group).
+    pub fn macs_per_cycle(&self, p: Precision) -> usize {
+        self.n_lanes * self.tile_r * self.tile_c * p.group()
+    }
+
+    /// Theoretical peak integer throughput in GOPS (2 ops per MAC).
+    pub fn peak_gops(&self, p: Precision) -> f64 {
+        2.0 * self.macs_per_cycle(p) as f64 * self.freq_mhz / 1e3
+    }
+
+    /// Output channels produced in parallel per pass (lanes × TILE_C).
+    pub fn couts_per_pass(&self) -> usize {
+        self.n_lanes * self.tile_c
+    }
+
+    /// Systolic fill+drain latency for one VSAM tile, in cycles.
+    pub fn sa_fill_cycles(&self) -> u64 {
+        ((self.tile_r + self.tile_c) as f64 * self.sa_fill_factor).round() as u64
+    }
+}
+
+/// Ara baseline configuration (matched comparison: same lanes/VLEN/clock).
+///
+/// Ara's per-lane datapath is a 64-bit SIMD MUL/MACC that slices into
+/// 8 × 8-bit, 4 × 16-bit, 2 × 32-bit or 1 × 64-bit — no 4-bit mode
+/// (Table I: Ara integer formats are 8/16/32/64).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AraConfig {
+    /// Number of lanes.
+    pub n_lanes: usize,
+    /// VLEN in bits.
+    pub vlen_bits: usize,
+    /// Core clock in MHz.
+    pub freq_mhz: f64,
+    /// Lane SIMD datapath width in bits.
+    pub lane_datapath_bits: usize,
+    /// External memory bandwidth, bytes/cycle (same memory system as SPEED
+    /// for the matched comparison).
+    pub dram_bw_bytes_per_cycle: f64,
+    /// External memory latency, cycles.
+    pub dram_latency_cycles: u64,
+    /// Issue cost per vector instruction, cycles. Ara's in-order issue +
+    /// sequencer handshake; the paper's "instruction overhead" term.
+    pub issue_cycles: u64,
+}
+
+impl Default for AraConfig {
+    fn default() -> Self {
+        AraConfig {
+            n_lanes: 4,
+            vlen_bits: 4096,
+            freq_mhz: 500.0,
+            lane_datapath_bits: 64,
+            dram_bw_bytes_per_cycle: 16.0,
+            dram_latency_cycles: 64,
+            issue_cycles: 2,
+        }
+    }
+}
+
+impl AraConfig {
+    /// MACs per cycle at element width `sew` bits (no 4-bit support).
+    pub fn macs_per_cycle(&self, p: Precision) -> Result<usize> {
+        match p {
+            Precision::Int4 => Err(Error::config(
+                "Ara does not support 4-bit integer formats (Table I)",
+            )),
+            _ => Ok(self.n_lanes * self.lane_datapath_bits / p.bits() as usize),
+        }
+    }
+
+    /// Theoretical peak GOPS at precision `p`.
+    pub fn peak_gops(&self, p: Precision) -> Result<f64> {
+        Ok(2.0 * self.macs_per_cycle(p)? as f64 * self.freq_mhz / 1e3)
+    }
+
+    /// Maximum vector length in elements for `sew`-bit elements.
+    pub fn vlmax(&self, sew_bits: usize) -> usize {
+        self.vlen_bits / sew_bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_papers() {
+        let c = SpeedConfig::default();
+        c.validate().unwrap();
+        assert_eq!(c.n_lanes, 4);
+        assert_eq!(c.vlen_bits, 4096);
+        assert_eq!(c.tile_r, 4);
+        assert_eq!(c.tile_c, 4);
+        // 4 lanes × 16 PEs × group
+        assert_eq!(c.macs_per_cycle(Precision::Int16), 64);
+        assert_eq!(c.macs_per_cycle(Precision::Int8), 256);
+        assert_eq!(c.macs_per_cycle(Precision::Int4), 1024);
+        // theoretical peaks at 500 MHz
+        assert!((c.peak_gops(Precision::Int16) - 64.0).abs() < 1e-9);
+        assert!((c.peak_gops(Precision::Int4) - 1024.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vrf_geometry() {
+        let c = SpeedConfig::default();
+        // VLEN 4096b / 8 / 4 lanes = 128 B per vreg per lane; 32 regs = 4 KiB.
+        assert_eq!(c.vreg_bytes_per_lane(), 128);
+        assert_eq!(c.vrf_bytes_per_lane(), 4096);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = SpeedConfig::default();
+        c.n_lanes = 3;
+        assert!(c.validate().is_err());
+        let mut c = SpeedConfig::default();
+        c.vlen_bits = 1000;
+        assert!(c.validate().is_err());
+        let mut c = SpeedConfig::default();
+        c.tile_r = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn ara_has_no_int4() {
+        let a = AraConfig::default();
+        assert!(a.macs_per_cycle(Precision::Int4).is_err());
+        assert_eq!(a.macs_per_cycle(Precision::Int16).unwrap(), 16);
+        assert_eq!(a.macs_per_cycle(Precision::Int8).unwrap(), 32);
+    }
+}

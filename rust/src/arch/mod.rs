@@ -1,0 +1,13 @@
+//! Architectural parameters of SPEED and shared precision definitions.
+//!
+//! The paper's evaluated configuration (Sec. III-A): 4 lanes, VLEN = 4096
+//! bits, `TILE_R = TILE_C = 4`, 500 MHz @ 0.9 V in TSMC 28 nm. Everything
+//! here is parameterized so the ablation benches can sweep the design
+//! space the same way the paper's "parameterized multi-precision SAU"
+//! allows.
+
+pub mod config;
+pub mod precision;
+
+pub use config::{AraConfig, SpeedConfig};
+pub use precision::Precision;

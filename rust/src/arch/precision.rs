@@ -1,0 +1,230 @@
+//! Multi-precision data formats and unified-element packing.
+//!
+//! Per the paper (Sec. II-C): *"every adjacent 1, 4, and 16 operands are
+//! combined into a unified element under 16-bit, 8-bit, and 4-bit
+//! precision modes"* — i.e. a unified element always feeds exactly the
+//! sixteen 4-bit multipliers of one PE for one cycle:
+//!
+//! | mode  | operands/element | element size | MACs/PE/cycle |
+//! |-------|------------------|--------------|----------------|
+//! | 16-bit| 1                | 16 b         | 1 (16 nibble products) |
+//! | 8-bit | 4                | 32 b         | 4 (4 × 4 nibble products) |
+//! | 4-bit | 16               | 64 b         | 16 (16 × 1 nibble product) |
+
+use crate::error::{Error, Result};
+
+/// Integer processing precision supported by SPEED's SAU datapath.
+///
+/// SPEED supports 4-, 8- and 16-bit integer MACs in the SAU (plus 32/64-bit
+/// in the standard RVV ALU, which the DNN path does not use). Ara supports
+/// 8/16/32/64 — no 4-bit mode, which is where the paper's largest wins
+/// come from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Precision {
+    /// 4-bit signed operands, 16 MACs per PE per cycle.
+    Int4,
+    /// 8-bit signed operands, 4 MACs per PE per cycle.
+    Int8,
+    /// 16-bit signed operands, 1 MAC per PE per cycle.
+    Int16,
+}
+
+impl Precision {
+    /// All SAU-supported precisions, narrowest first.
+    pub const ALL: [Precision; 3] = [Precision::Int4, Precision::Int8, Precision::Int16];
+
+    /// Operand width in bits.
+    pub fn bits(self) -> u32 {
+        match self {
+            Precision::Int4 => 4,
+            Precision::Int8 => 8,
+            Precision::Int16 => 16,
+        }
+    }
+
+    /// Number of operands packed into one unified element
+    /// (= input-channel parallelism inside one PE).
+    pub fn group(self) -> usize {
+        match self {
+            Precision::Int4 => 16,
+            Precision::Int8 => 4,
+            Precision::Int16 => 1,
+        }
+    }
+
+    /// Size of one unified element in bytes (operands × width / 8).
+    pub fn element_bytes(self) -> usize {
+        (self.group() * self.bits() as usize) / 8
+    }
+
+    /// Inclusive value range of a signed operand at this precision.
+    pub fn range(self) -> (i64, i64) {
+        let b = self.bits();
+        (-(1i64 << (b - 1)), (1i64 << (b - 1)) - 1)
+    }
+
+    /// Clamp `v` into this precision's signed range (saturating requant).
+    pub fn clamp(self, v: i64) -> i64 {
+        let (lo, hi) = self.range();
+        v.clamp(lo, hi)
+    }
+
+    /// Two-bit field used in the `VSACFG` `zimm9` encoding.
+    pub fn encode(self) -> u32 {
+        match self {
+            Precision::Int4 => 0b00,
+            Precision::Int8 => 0b01,
+            Precision::Int16 => 0b10,
+        }
+    }
+
+    /// Decode the two-bit `VSACFG` field.
+    pub fn decode(bits: u32) -> Result<Self> {
+        match bits & 0b11 {
+            0b00 => Ok(Precision::Int4),
+            0b01 => Ok(Precision::Int8),
+            0b10 => Ok(Precision::Int16),
+            other => Err(Error::Decode {
+                word: other,
+                msg: format!("reserved VSACFG precision field {other:#b}"),
+            }),
+        }
+    }
+
+    /// Short human-readable name ("int4" / "int8" / "int16").
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Int4 => "int4",
+            Precision::Int8 => "int8",
+            Precision::Int16 => "int16",
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Pack a slice of signed operands into unified-element bytes
+/// (little-endian within the element, two's complement per operand).
+///
+/// `ops.len()` must be a multiple of `p.group()`; pad with zeros upstream
+/// (the dataflow compiler zero-pads channel tails).
+pub fn pack_operands(p: Precision, ops: &[i64]) -> Result<Vec<u8>> {
+    let g = p.group();
+    if ops.len() % g != 0 {
+        return Err(Error::config(format!(
+            "pack_operands: {} operands not a multiple of group {}",
+            ops.len(),
+            g
+        )));
+    }
+    let bits = p.bits() as usize;
+    let mut out = vec![0u8; ops.len() * bits / 8];
+    for (i, &v) in ops.iter().enumerate() {
+        let (lo, hi) = p.range();
+        if v < lo || v > hi {
+            return Err(Error::config(format!("operand {v} out of {p} range")));
+        }
+        let u = (v as u64) & ((1u64 << bits) - 1);
+        let bit_off = i * bits;
+        let byte = bit_off / 8;
+        let shift = bit_off % 8;
+        out[byte] |= (u << shift) as u8;
+        if bits == 16 {
+            out[byte + 1] |= (u >> (8 - shift)) as u8;
+        } else if shift + bits > 8 {
+            out[byte + 1] |= (u >> (8 - shift)) as u8;
+        }
+    }
+    Ok(out)
+}
+
+/// Unpack unified-element bytes back into signed operands.
+pub fn unpack_operands(p: Precision, bytes: &[u8]) -> Vec<i64> {
+    let bits = p.bits() as usize;
+    let n = bytes.len() * 8 / bits;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let bit_off = i * bits;
+        let byte = bit_off / 8;
+        let shift = bit_off % 8;
+        let mut raw = (bytes[byte] as u64) >> shift;
+        if shift + bits > 8 {
+            raw |= (bytes[byte + 1] as u64) << (8 - shift);
+        }
+        raw &= (1u64 << bits) - 1;
+        // sign extend
+        let sign = 1u64 << (bits - 1);
+        let v = if raw & sign != 0 {
+            (raw as i64) - (1i64 << bits)
+        } else {
+            raw as i64
+        };
+        out.push(v);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{check, PropConfig, Prng};
+
+    #[test]
+    fn element_geometry_matches_paper() {
+        // 16 nibble multipliers per PE in every mode.
+        for p in Precision::ALL {
+            let nibble_products_per_mac = (p.bits() / 4) * (p.bits() / 4);
+            assert_eq!(p.group() as u32 * nibble_products_per_mac, 16);
+        }
+        assert_eq!(Precision::Int16.element_bytes(), 2);
+        assert_eq!(Precision::Int8.element_bytes(), 4);
+        assert_eq!(Precision::Int4.element_bytes(), 8);
+    }
+
+    #[test]
+    fn precision_field_roundtrip() {
+        for p in Precision::ALL {
+            assert_eq!(Precision::decode(p.encode()).unwrap(), p);
+        }
+        assert!(Precision::decode(0b11).is_err());
+    }
+
+    #[test]
+    fn clamp_saturates() {
+        assert_eq!(Precision::Int8.clamp(1000), 127);
+        assert_eq!(Precision::Int8.clamp(-1000), -128);
+        assert_eq!(Precision::Int4.clamp(7), 7);
+        assert_eq!(Precision::Int4.clamp(8), 7);
+        assert_eq!(Precision::Int16.clamp(-32769), -32768);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_property() {
+        check(PropConfig::new(200, 0xAB5E), |rng| {
+            let p = *rng.pick(&Precision::ALL);
+            let n = p.group() * rng.range_usize(1, 8);
+            let ops = rng.signed_vec(p.bits(), n);
+            let bytes = pack_operands(p, &ops).map_err(|e| e.to_string())?;
+            let back = unpack_operands(p, &bytes);
+            if back != ops {
+                return Err(format!("{p}: {ops:?} -> {back:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pack_rejects_partial_group() {
+        assert!(pack_operands(Precision::Int4, &[1, 2, 3]).is_err());
+        assert!(pack_operands(Precision::Int8, &[1]).is_err());
+    }
+
+    #[test]
+    fn pack_rejects_out_of_range() {
+        assert!(pack_operands(Precision::Int4, &vec![8; 16]).is_err());
+    }
+}

@@ -1,0 +1,5 @@
+//! Ara baseline model (under construction).
+
+pub mod ara;
+
+pub use ara::{simulate_layer_ara, AraLayerResult};

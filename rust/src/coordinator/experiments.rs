@@ -1,0 +1,325 @@
+//! Experiment drivers — one per figure/table of the paper's evaluation
+//! (the DESIGN.md experiment index: FIG3, FIG4, FIG5, TAB1).
+//!
+//! Every driver returns a structured result that the report module
+//! renders and the benches print; paper reference numbers from
+//! `cost::calib` ride along so every output is a paper-vs-measured row.
+
+use crate::arch::{AraConfig, Precision, SpeedConfig};
+use crate::baseline::{simulate_layer_ara, AraLayerResult};
+use crate::coordinator::runner::{simulate_layer, LayerResult};
+use crate::cost::area::{ara_area_mm2, speed_area_breakdown, AreaBreakdown};
+use crate::cost::calib;
+use crate::cost::energy::{
+    ara_gops_per_watt, gops_per_watt, power_mw, AraEnergyModel, EnergyModel,
+};
+use crate::dataflow::Strategy;
+use crate::error::Result;
+use crate::models::all_models;
+
+/// One Fig. 3 row: layer-wise area efficiency (GOPS/mm²) of GoogLeNet
+/// under each strategy, plus the Ara baseline.
+#[derive(Debug, Clone)]
+pub struct Fig3Row {
+    /// Layer name.
+    pub layer: String,
+    /// Kernel size.
+    pub k: usize,
+    /// FF-only area efficiency.
+    pub ff: f64,
+    /// CF-only area efficiency.
+    pub cf: f64,
+    /// Mixed (best-of) area efficiency.
+    pub mixed: f64,
+    /// Strategy the mixed policy picked.
+    pub choice: Strategy,
+    /// Ara area efficiency on the same layer.
+    pub ara: f64,
+}
+
+/// Fig. 3 result: layer-wise breakdown + network-level ratios.
+#[derive(Debug, Clone)]
+pub struct Fig3 {
+    /// Per-layer rows.
+    pub rows: Vec<Fig3Row>,
+    /// Network-level area efficiency under FF-only.
+    pub eff_ff: f64,
+    /// Network-level area efficiency under CF-only.
+    pub eff_cf: f64,
+    /// Network-level area efficiency under Mixed.
+    pub eff_mixed: f64,
+    /// Network-level Ara area efficiency.
+    pub eff_ara: f64,
+}
+
+impl Fig3 {
+    /// Mixed improvement over FF-only (paper: 1.88×).
+    pub fn mixed_over_ff(&self) -> f64 {
+        self.eff_mixed / self.eff_ff
+    }
+    /// Mixed improvement over CF-only (paper: 1.38×).
+    pub fn mixed_over_cf(&self) -> f64 {
+        self.eff_mixed / self.eff_cf
+    }
+    /// Mixed improvement over Ara (paper: 3.53×).
+    pub fn mixed_over_ara(&self) -> f64 {
+        self.eff_mixed / self.eff_ara
+    }
+}
+
+fn network_eff(results: &[LayerResult], cfg: &SpeedConfig, area: f64) -> f64 {
+    let ops: u64 = results.iter().map(|r| 2 * r.useful_macs).sum();
+    let cycles: u64 = results.iter().map(|r| r.cycles).sum();
+    let secs = cycles as f64 / (cfg.freq_mhz * 1e6);
+    ops as f64 / secs / 1e9 / area
+}
+
+fn ara_network_eff(results: &[AraLayerResult], ara: &AraConfig) -> f64 {
+    let ops: u64 = results.iter().map(|r| 2 * r.useful_macs).sum();
+    let cycles: u64 = results.iter().map(|r| r.cycles).sum();
+    let secs = cycles as f64 / (ara.freq_mhz * 1e6);
+    ops as f64 / secs / 1e9 / ara_area_mm2()
+}
+
+/// FIG3: layer-wise GoogLeNet @16-bit under FF/CF/Mixed vs Ara.
+pub fn run_fig3(cfg: &SpeedConfig) -> Result<Fig3> {
+    let ara_cfg = AraConfig::default();
+    let area = speed_area_breakdown(cfg).total();
+    let model = all_models().into_iter().find(|m| m.name == "GoogLeNet").unwrap();
+    let p = Precision::Int16;
+    let mut rows = Vec::new();
+    let (mut ffs, mut cfs, mut mixeds, mut aras) = (vec![], vec![], vec![], vec![]);
+    for layer in &model.layers {
+        let ff = simulate_layer(cfg, layer, p, Strategy::FeatureFirst)?;
+        let cf = simulate_layer(cfg, layer, p, Strategy::ChannelFirst)?;
+        let (mixed, choice) = if ff.cycles <= cf.cycles {
+            (ff.clone(), Strategy::FeatureFirst)
+        } else {
+            (cf.clone(), Strategy::ChannelFirst)
+        };
+        let ara = simulate_layer_ara(&ara_cfg, layer, p)?;
+        rows.push(Fig3Row {
+            layer: layer.name.clone(),
+            k: layer.k,
+            ff: ff.gops(cfg) / area,
+            cf: cf.gops(cfg) / area,
+            mixed: mixed.gops(cfg) / area,
+            choice,
+            ara: ara.gops / ara_area_mm2(),
+        });
+        ffs.push(ff);
+        cfs.push(cf);
+        mixeds.push(mixed);
+        aras.push(ara);
+    }
+    Ok(Fig3 {
+        eff_ff: network_eff(&ffs, cfg, area),
+        eff_cf: network_eff(&cfs, cfg, area),
+        eff_mixed: network_eff(&mixeds, cfg, area),
+        eff_ara: ara_network_eff(&aras, &ara_cfg),
+        rows,
+    })
+}
+
+/// One FIG4 cell: a benchmark network at one precision.
+#[derive(Debug, Clone)]
+pub struct Fig4Cell {
+    /// Network name.
+    pub model: String,
+    /// Precision.
+    pub precision: Precision,
+    /// SPEED area efficiency (mixed strategy), GOPS/mm².
+    pub speed_eff: f64,
+    /// Ara area efficiency (None at 4-bit — unsupported).
+    pub ara_eff: Option<f64>,
+}
+
+/// FIG4 result: all models × all precisions.
+#[derive(Debug, Clone)]
+pub struct Fig4 {
+    /// All cells, model-major.
+    pub cells: Vec<Fig4Cell>,
+}
+
+impl Fig4 {
+    /// Average SPEED/Ara ratio at a precision (paper: 2.77× @16b,
+    /// 6.39× @8b).
+    pub fn avg_ratio(&self, p: Precision) -> f64 {
+        let rs: Vec<f64> = self
+            .cells
+            .iter()
+            .filter(|c| c.precision == p)
+            .filter_map(|c| c.ara_eff.map(|a| c.speed_eff / a))
+            .collect();
+        rs.iter().sum::<f64>() / rs.len().max(1) as f64
+    }
+
+    /// Average SPEED area efficiency at a precision (paper: 94.6
+    /// GOPS/mm² @4b).
+    pub fn avg_speed_eff(&self, p: Precision) -> f64 {
+        let es: Vec<f64> =
+            self.cells.iter().filter(|c| c.precision == p).map(|c| c.speed_eff).collect();
+        es.iter().sum::<f64>() / es.len().max(1) as f64
+    }
+}
+
+/// FIG4: average area efficiency across the four benchmarks at
+/// 16/8/4-bit, SPEED (mixed) vs Ara.
+pub fn run_fig4(cfg: &SpeedConfig) -> Result<Fig4> {
+    let ara_cfg = AraConfig::default();
+    let area = speed_area_breakdown(cfg).total();
+    let mut cells = Vec::new();
+    for model in all_models() {
+        for p in [Precision::Int16, Precision::Int8, Precision::Int4] {
+            let mut speeds = Vec::new();
+            let mut aras = Vec::new();
+            for layer in &model.layers {
+                speeds.push(simulate_layer(cfg, layer, p, Strategy::Mixed)?);
+                if p != Precision::Int4 {
+                    aras.push(simulate_layer_ara(&ara_cfg, layer, p)?);
+                }
+            }
+            cells.push(Fig4Cell {
+                model: model.name.to_string(),
+                precision: p,
+                speed_eff: network_eff(&speeds, cfg, area),
+                ara_eff: (!aras.is_empty()).then(|| ara_network_eff(&aras, &ara_cfg)),
+            });
+        }
+    }
+    Ok(Fig4 { cells })
+}
+
+/// FIG5: the area breakdown (the analytical model at the given config).
+pub fn run_fig5(cfg: &SpeedConfig) -> AreaBreakdown {
+    speed_area_breakdown(cfg)
+}
+
+/// One Table I machine column at one precision.
+#[derive(Debug, Clone)]
+pub struct Table1Entry {
+    /// Precision.
+    pub precision: Precision,
+    /// Peak layer throughput, GOPS.
+    pub peak_gops: f64,
+    /// Peak area efficiency, GOPS/mm².
+    pub area_eff: f64,
+    /// Average power at the peak layer, mW.
+    pub power_mw: f64,
+    /// Energy efficiency at the peak layer, GOPS/W.
+    pub energy_eff: f64,
+    /// Name of the layer achieving the peak.
+    pub peak_layer: String,
+}
+
+/// TAB1: full synthesized-results comparison.
+#[derive(Debug, Clone)]
+pub struct Table1 {
+    /// SPEED entries at 16/8/4-bit.
+    pub speed: Vec<Table1Entry>,
+    /// Ara entries at 16/8-bit.
+    pub ara: Vec<Table1Entry>,
+    /// SPEED total area (model), mm².
+    pub speed_area: f64,
+    /// Ara total area, mm².
+    pub ara_area: f64,
+}
+
+/// TAB1: peak throughput / area / energy efficiency over every conv
+/// layer of all four benchmarks (the paper's method: *"peak throughput
+/// results … through evaluating each convolutional layer in all DNN
+/// benchmarks"*).
+pub fn run_table1(cfg: &SpeedConfig) -> Result<Table1> {
+    let ara_cfg = AraConfig::default();
+    let area = speed_area_breakdown(cfg).total();
+    let em = EnergyModel::default();
+    let aem = AraEnergyModel::default();
+    let mut speed = Vec::new();
+    for p in [Precision::Int16, Precision::Int8, Precision::Int4] {
+        let mut best: Option<(f64, LayerResult)> = None;
+        for model in all_models() {
+            for layer in &model.layers {
+                let r = simulate_layer(cfg, layer, p, Strategy::Mixed)?;
+                let g = r.gops(cfg);
+                if best.as_ref().map(|(bg, _)| g > *bg).unwrap_or(true) {
+                    best = Some((g, r));
+                }
+            }
+        }
+        let (g, r) = best.unwrap();
+        speed.push(Table1Entry {
+            precision: p,
+            peak_gops: g,
+            area_eff: g / area,
+            power_mw: power_mw(&em, cfg, &r.stats, p),
+            energy_eff: gops_per_watt(&em, cfg, &r.stats, p),
+            peak_layer: r.name.clone(),
+        });
+    }
+    let mut ara = Vec::new();
+    for p in [Precision::Int16, Precision::Int8] {
+        let mut best: Option<(f64, AraLayerResult, String)> = None;
+        for model in all_models() {
+            for layer in &model.layers {
+                let r = simulate_layer_ara(&ara_cfg, layer, p)?;
+                if best.as_ref().map(|(bg, _, _)| r.gops > *bg).unwrap_or(true) {
+                    best = Some((r.gops, r, layer.name.clone()));
+                }
+            }
+        }
+        let (g, r, name) = best.unwrap();
+        let e = crate::cost::energy::ara_energy_joules(&aem, ara_cfg.freq_mhz, &r, p);
+        let secs = r.cycles as f64 / (ara_cfg.freq_mhz * 1e6);
+        ara.push(Table1Entry {
+            precision: p,
+            peak_gops: g,
+            area_eff: g / ara_area_mm2(),
+            power_mw: e / secs * 1e3,
+            energy_eff: ara_gops_per_watt(&aem, ara_cfg.freq_mhz, &r, p),
+            peak_layer: name,
+        });
+    }
+    Ok(Table1 { speed, ara, speed_area: area, ara_area: ara_area_mm2() })
+}
+
+/// Headline paper-vs-measured pairs `(label, paper, measured)` for quick
+/// validation output (shape reproduction, not absolute matching).
+pub fn headline_checks(f3: &Fig3, f4: &Fig4, t1: &Table1) -> Vec<(String, f64, f64)> {
+    let mut v = vec![
+        ("Fig3 mixed/FF".to_string(), calib::FIG3_MIXED_OVER_FF, f3.mixed_over_ff()),
+        ("Fig3 mixed/CF".to_string(), calib::FIG3_MIXED_OVER_CF, f3.mixed_over_cf()),
+        ("Fig3 mixed/Ara".to_string(), calib::FIG3_MIXED_OVER_ARA, f3.mixed_over_ara()),
+        (
+            "Fig4 SPEED/Ara @16b".to_string(),
+            calib::FIG4_SPEED_OVER_ARA_16B,
+            f4.avg_ratio(Precision::Int16),
+        ),
+        (
+            "Fig4 SPEED/Ara @8b".to_string(),
+            calib::FIG4_SPEED_OVER_ARA_8B,
+            f4.avg_ratio(Precision::Int8),
+        ),
+        (
+            "Fig4 SPEED 4b avg GOPS/mm2".to_string(),
+            calib::FIG4_SPEED_4B_AVG_AREA_EFF,
+            f4.avg_speed_eff(Precision::Int4),
+        ),
+    ];
+    // Table I: SPEED peaks ordered [16b, 8b, 4b] in our vec, paper
+    // constants ordered [16b, 8b, 4b] as well.
+    for (i, e) in t1.speed.iter().enumerate() {
+        v.push((
+            format!("Table1 SPEED peak GOPS @{}", e.precision),
+            calib::SPEED_PEAK_GOPS[i],
+            e.peak_gops,
+        ));
+    }
+    for (i, e) in t1.ara.iter().enumerate() {
+        v.push((
+            format!("Table1 Ara peak GOPS @{}", e.precision),
+            calib::ARA_PEAK_GOPS[i],
+            e.peak_gops,
+        ));
+    }
+    v
+}

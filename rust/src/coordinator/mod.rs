@@ -1,0 +1,11 @@
+//! Experiment coordinator: single-layer simulation entry points, network
+//! sweeps, the Mixed-strategy resolver, and the drivers that regenerate
+//! every figure/table of the paper.
+
+pub mod experiments;
+pub mod report;
+pub mod runner;
+
+pub use runner::{
+    run_functional_conv, simulate_layer, simulate_network, LayerResult, NetworkResult,
+};

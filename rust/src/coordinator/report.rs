@@ -1,0 +1,254 @@
+//! Report rendering: markdown tables + CSV for every experiment result.
+//! (Hand-rolled — the offline crate set has no serde; the formats are
+//! trivial enough that this is fine and dependency-free.)
+
+use super::experiments::{Fig3, Fig4, Table1};
+use crate::arch::Precision;
+use crate::cost::area::AreaBreakdown;
+use crate::cost::calib;
+
+fn fmt2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+/// Render Fig. 3 (layer-wise GoogLeNet @16-bit) as a markdown table.
+pub fn fig3_markdown(f: &Fig3) -> String {
+    let mut s = String::new();
+    s.push_str("## Fig. 3 — GoogLeNet layer-wise area efficiency @16-bit (GOPS/mm²)\n\n");
+    s.push_str("| layer | K | FF | CF | Mixed | choice | Ara |\n");
+    s.push_str("|---|---|---|---|---|---|---|\n");
+    for r in &f.rows {
+        s.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} | {} |\n",
+            r.layer,
+            r.k,
+            fmt2(r.ff),
+            fmt2(r.cf),
+            fmt2(r.mixed),
+            r.choice,
+            fmt2(r.ara)
+        ));
+    }
+    s.push_str(&format!(
+        "\nnetwork-level: FF {} | CF {} | Mixed {} | Ara {} GOPS/mm²\n",
+        fmt2(f.eff_ff),
+        fmt2(f.eff_cf),
+        fmt2(f.eff_mixed),
+        fmt2(f.eff_ara)
+    ));
+    s.push_str(&format!(
+        "ratios (paper → measured): mixed/FF {:.2} → {:.2} | mixed/CF {:.2} → {:.2} | mixed/Ara {:.2} → {:.2}\n",
+        calib::FIG3_MIXED_OVER_FF,
+        f.mixed_over_ff(),
+        calib::FIG3_MIXED_OVER_CF,
+        f.mixed_over_cf(),
+        calib::FIG3_MIXED_OVER_ARA,
+        f.mixed_over_ara()
+    ));
+    s
+}
+
+/// Fig. 3 CSV (one row per layer).
+pub fn fig3_csv(f: &Fig3) -> String {
+    let mut s = String::from("layer,k,ff_gops_mm2,cf_gops_mm2,mixed_gops_mm2,choice,ara_gops_mm2\n");
+    for r in &f.rows {
+        s.push_str(&format!(
+            "{},{},{:.4},{:.4},{:.4},{},{:.4}\n",
+            r.layer, r.k, r.ff, r.cf, r.mixed, r.choice, r.ara
+        ));
+    }
+    s
+}
+
+/// Render Fig. 4 (benchmark-average area efficiency) as markdown.
+pub fn fig4_markdown(f: &Fig4) -> String {
+    let mut s = String::new();
+    s.push_str("## Fig. 4 — average area efficiency (GOPS/mm², mixed dataflow)\n\n");
+    s.push_str("| model | precision | SPEED | Ara | ratio |\n|---|---|---|---|---|\n");
+    for c in &f.cells {
+        let (ara, ratio) = match c.ara_eff {
+            Some(a) => (fmt2(a), fmt2(c.speed_eff / a)),
+            None => ("—".into(), "—".into()),
+        };
+        s.push_str(&format!(
+            "| {} | {} | {} | {} | {} |\n",
+            c.model,
+            c.precision,
+            fmt2(c.speed_eff),
+            ara,
+            ratio
+        ));
+    }
+    s.push_str(&format!(
+        "\naverages (paper → measured): SPEED/Ara @16b {:.2} → {:.2} | @8b {:.2} → {:.2} | SPEED@4b {:.1} → {:.1} GOPS/mm²\n",
+        calib::FIG4_SPEED_OVER_ARA_16B,
+        f.avg_ratio(Precision::Int16),
+        calib::FIG4_SPEED_OVER_ARA_8B,
+        f.avg_ratio(Precision::Int8),
+        calib::FIG4_SPEED_4B_AVG_AREA_EFF,
+        f.avg_speed_eff(Precision::Int4)
+    ));
+    s
+}
+
+/// Fig. 4 CSV.
+pub fn fig4_csv(f: &Fig4) -> String {
+    let mut s = String::from("model,precision,speed_gops_mm2,ara_gops_mm2\n");
+    for c in &f.cells {
+        s.push_str(&format!(
+            "{},{},{:.4},{}\n",
+            c.model,
+            c.precision,
+            c.speed_eff,
+            c.ara_eff.map(|a| format!("{a:.4}")).unwrap_or_default()
+        ));
+    }
+    s
+}
+
+/// Render Fig. 5 (area breakdown) as markdown, with the paper's shares.
+pub fn fig5_markdown(a: &AreaBreakdown) -> String {
+    let lane = a.lanes_total();
+    let mut s = String::new();
+    s.push_str("## Fig. 5 — area breakdown (model)\n\n");
+    s.push_str(&format!(
+        "total {:.3} mm² (paper: {:.2}); lanes {:.1}% (paper: 90%)\n\n",
+        a.total(),
+        calib::SPEED_TOTAL_AREA_MM2,
+        100.0 * lane / a.total()
+    ));
+    s.push_str("| lane component | mm² | share | paper share |\n|---|---|---|---|\n");
+    for (name, v, paper) in [
+        ("OP queues", a.op_queues, calib::LANE_SHARE_OP_QUEUES),
+        ("OP requester", a.op_requester, calib::LANE_SHARE_OP_REQUESTER),
+        ("VRF", a.vrf, calib::LANE_SHARE_VRF),
+        ("SAU", a.sau, calib::LANE_SHARE_SAU),
+        ("other (seq+ALU)", a.lane_other, calib::LANE_SHARE_OTHER),
+    ] {
+        s.push_str(&format!(
+            "| {name} | {:.4} | {:.1}% | {:.0}% |\n",
+            v,
+            100.0 * v / lane,
+            100.0 * paper
+        ));
+    }
+    s
+}
+
+/// Render Table I as markdown with paper-vs-measured columns.
+pub fn table1_markdown(t: &Table1) -> String {
+    let mut s = String::new();
+    s.push_str("## Table I — synthesized results (paper → measured)\n\n");
+    s.push_str(&format!(
+        "chip area: Ara {:.2} mm² | SPEED {:.2} mm² (model {:.2})\n\n",
+        t.ara_area,
+        calib::SPEED_TOTAL_AREA_MM2,
+        t.speed_area
+    ));
+    s.push_str(
+        "| machine | precision | peak GOPS (paper→meas) | GOPS/mm² (paper→meas) | GOPS/W (paper→meas) | power mW | peak layer |\n|---|---|---|---|---|---|---|\n",
+    );
+    for (i, e) in t.speed.iter().enumerate() {
+        s.push_str(&format!(
+            "| SPEED | {} | {:.2} → {:.2} | {:.2} → {:.2} | {:.0} → {:.0} | {:.1} | {} |\n",
+            e.precision,
+            calib::SPEED_PEAK_GOPS[i],
+            e.peak_gops,
+            calib::SPEED_PEAK_AREA_EFF[i],
+            e.area_eff,
+            calib::SPEED_PEAK_ENERGY_EFF[i],
+            e.energy_eff,
+            e.power_mw,
+            e.peak_layer
+        ));
+    }
+    for (i, e) in t.ara.iter().enumerate() {
+        s.push_str(&format!(
+            "| Ara | {} | {:.2} → {:.2} | {:.2} → {:.2} | {:.0} → {:.0} | {:.1} | {} |\n",
+            e.precision,
+            calib::ARA_PEAK_GOPS[i],
+            e.peak_gops,
+            calib::ARA_PEAK_AREA_EFF[i],
+            e.area_eff,
+            calib::ARA_PEAK_ENERGY_EFF[i],
+            e.energy_eff,
+            e.power_mw,
+            e.peak_layer
+        ));
+    }
+    // derived headline ratios
+    if t.speed.len() == 3 && t.ara.len() == 2 {
+        s.push_str(&format!(
+            "\narea-efficiency gains (paper → measured): 16b {:.2} → {:.2} | 8b {:.2} → {:.2}\n",
+            calib::SPEED_PEAK_AREA_EFF[0] / calib::ARA_PEAK_AREA_EFF[0],
+            t.speed[0].area_eff / t.ara[0].area_eff,
+            calib::SPEED_PEAK_AREA_EFF[1] / calib::ARA_PEAK_AREA_EFF[1],
+            t.speed[1].area_eff / t.ara[1].area_eff,
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::experiments::{Fig3Row, Fig4Cell, Table1Entry};
+    use crate::dataflow::Strategy;
+
+    fn tiny_fig3() -> Fig3 {
+        Fig3 {
+            rows: vec![Fig3Row {
+                layer: "l".into(),
+                k: 3,
+                ff: 10.0,
+                cf: 8.0,
+                mixed: 10.0,
+                choice: Strategy::FeatureFirst,
+                ara: 4.0,
+            }],
+            eff_ff: 10.0,
+            eff_cf: 8.0,
+            eff_mixed: 10.0,
+            eff_ara: 4.0,
+        }
+    }
+
+    #[test]
+    fn markdown_and_csv_render() {
+        let f3 = tiny_fig3();
+        assert!(fig3_markdown(&f3).contains("| l | 3 |"));
+        assert!(fig3_csv(&f3).lines().count() == 2);
+        let f4 = Fig4 {
+            cells: vec![Fig4Cell {
+                model: "VGG16".into(),
+                precision: Precision::Int4,
+                speed_eff: 90.0,
+                ara_eff: None,
+            }],
+        };
+        let md = fig4_markdown(&f4);
+        assert!(md.contains("VGG16") && md.contains("—"));
+        let t1 = Table1 {
+            speed: vec![Table1Entry {
+                precision: Precision::Int16,
+                peak_gops: 30.0,
+                area_eff: 27.0,
+                power_mw: 200.0,
+                energy_eff: 150.0,
+                peak_layer: "x".into(),
+            }],
+            ara: vec![],
+            speed_area: 1.1,
+            ara_area: 0.44,
+        };
+        assert!(table1_markdown(&t1).contains("SPEED"));
+    }
+
+    #[test]
+    fn fig3_ratio_math() {
+        let f = tiny_fig3();
+        assert!((f.mixed_over_ff() - 1.0).abs() < 1e-12);
+        assert!((f.mixed_over_cf() - 1.25).abs() < 1e-12);
+        assert!((f.mixed_over_ara() - 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,276 @@
+//! Layer/network simulation runners.
+//!
+//! - [`simulate_layer`] — timing-mode run of one layer at one precision
+//!   under FF / CF / Mixed (Mixed = per-layer best-of, the paper's
+//!   Fig. 3 policy).
+//! - [`run_functional_conv`] — bit-exact functional run returning the
+//!   output tensor (validated against `conv2d_ref` and the XLA golden).
+//! - [`simulate_network`] — sweep all conv layers of a model.
+
+use crate::arch::{Precision, SpeedConfig};
+use crate::core::{ExecMode, Processor, SimStats};
+use crate::dataflow::{
+    compile_conv, extract_ofmap, pack_ifmap_image, pack_weight_image, ConvLayer, Strategy,
+};
+use crate::error::Result;
+use crate::mem::Tensor;
+
+/// Result of one layer's timing simulation.
+#[derive(Debug, Clone)]
+pub struct LayerResult {
+    /// Layer name.
+    pub name: String,
+    /// Precision simulated.
+    pub precision: Precision,
+    /// Strategy requested (may be `Mixed`).
+    pub requested: Strategy,
+    /// Strategy actually used (FF or CF; = requested unless Mixed).
+    pub used: Strategy,
+    /// Total cycles.
+    pub cycles: u64,
+    /// Useful MACs (layer nominal).
+    pub useful_macs: u64,
+    /// Full simulation statistics.
+    pub stats: SimStats,
+}
+
+impl LayerResult {
+    /// Achieved GOPS at the machine's clock.
+    pub fn gops(&self, cfg: &SpeedConfig) -> f64 {
+        self.stats.gops(cfg.freq_mhz)
+    }
+
+    /// SA-core utilization.
+    pub fn utilization(&self, cfg: &SpeedConfig) -> f64 {
+        self.stats.utilization(cfg, self.precision)
+    }
+}
+
+fn run_one(
+    cfg: &SpeedConfig,
+    layer: &ConvLayer,
+    p: Precision,
+    strategy: Strategy,
+) -> Result<LayerResult> {
+    let cc = compile_conv(cfg, layer, p, strategy, 0, false)?;
+    let mut proc = Processor::new(cfg.clone(), cc.dram_bytes, ExecMode::Timing)?;
+    proc.run(&cc.program)?;
+    proc.set_useful_macs(cc.useful_macs);
+    Ok(LayerResult {
+        name: layer.name.clone(),
+        precision: p,
+        requested: strategy,
+        used: strategy,
+        cycles: proc.stats().cycles,
+        useful_macs: cc.useful_macs,
+        stats: proc.stats().clone(),
+    })
+}
+
+/// Simulate one layer (timing mode). `Strategy::Mixed` runs both FF and
+/// CF and returns the better (the paper's mixed dataflow policy).
+pub fn simulate_layer(
+    cfg: &SpeedConfig,
+    layer: &ConvLayer,
+    p: Precision,
+    strategy: Strategy,
+) -> Result<LayerResult> {
+    match strategy {
+        Strategy::Mixed => {
+            let ff = run_one(cfg, layer, p, Strategy::FeatureFirst)?;
+            let cf = run_one(cfg, layer, p, Strategy::ChannelFirst)?;
+            let mut best = if ff.cycles <= cf.cycles { ff } else { cf };
+            best.requested = Strategy::Mixed;
+            Ok(best)
+        }
+        s => run_one(cfg, layer, p, s),
+    }
+}
+
+/// Aggregated result over a network's conv layers.
+#[derive(Debug, Clone)]
+pub struct NetworkResult {
+    /// Network name.
+    pub name: String,
+    /// Per-layer results.
+    pub layers: Vec<LayerResult>,
+}
+
+impl NetworkResult {
+    /// Total cycles across layers.
+    pub fn total_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.cycles).sum()
+    }
+
+    /// Total useful operations (2 × MACs).
+    pub fn total_ops(&self) -> u64 {
+        self.layers.iter().map(|l| 2 * l.useful_macs).sum()
+    }
+
+    /// Network-level achieved GOPS (total ops / total time).
+    pub fn gops(&self, freq_mhz: f64) -> f64 {
+        let secs = self.total_cycles() as f64 / (freq_mhz * 1e6);
+        if secs == 0.0 {
+            0.0
+        } else {
+            self.total_ops() as f64 / secs / 1e9
+        }
+    }
+
+    /// Best single-layer GOPS (the paper's "peak throughput … through
+    /// evaluating each convolutional layer").
+    pub fn peak_gops(&self, cfg: &SpeedConfig) -> f64 {
+        self.layers.iter().map(|l| l.gops(cfg)).fold(0.0, f64::max)
+    }
+}
+
+/// Simulate every conv layer of a network.
+pub fn simulate_network(
+    cfg: &SpeedConfig,
+    name: &str,
+    layers: &[ConvLayer],
+    p: Precision,
+    strategy: Strategy,
+) -> Result<NetworkResult> {
+    let mut results = Vec::with_capacity(layers.len());
+    for layer in layers {
+        results.push(simulate_layer(cfg, layer, p, strategy)?);
+    }
+    Ok(NetworkResult { name: name.to_string(), layers: results })
+}
+
+/// Full functional conv through the simulator: pack images, run the
+/// compiled program bit-exactly, extract the output tensor.
+#[allow(clippy::too_many_arguments)]
+pub fn run_functional_conv(
+    cfg: &SpeedConfig,
+    layer: &ConvLayer,
+    p: Precision,
+    strategy: Strategy,
+    input: &Tensor,
+    weights: &Tensor,
+    shift: u8,
+    relu: bool,
+) -> Result<Tensor> {
+    let strategy = match strategy {
+        Strategy::Mixed => Strategy::ChannelFirst,
+        s => s,
+    };
+    let cc = compile_conv(cfg, layer, p, strategy, shift, relu)?;
+    let mut proc = Processor::new(cfg.clone(), cc.dram_bytes, ExecMode::Functional)?;
+    let ifmap = pack_ifmap_image(input, layer, &cc.plan)?;
+    let wimg = pack_weight_image(weights, layer, &cc.plan, cfg)?;
+    proc.dram.poke(cc.ifmap_base, &ifmap)?;
+    proc.dram.poke(cc.w_base, &wimg)?;
+    proc.run(&cc.program)?;
+    extract_ofmap(&proc.dram, cc.out_base, layer, &cc.plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::tensor::conv2d_ref;
+    use crate::testutil::Prng;
+
+    fn check_functional(
+        layer: &ConvLayer,
+        p: Precision,
+        strategy: Strategy,
+        shift: u8,
+        relu: bool,
+        seed: u64,
+    ) {
+        let cfg = SpeedConfig::default();
+        let mut rng = Prng::new(seed);
+        let input = Tensor::random(&[layer.cin, layer.h, layer.w], p, &mut rng);
+        let weights = Tensor::random(&[layer.cout, layer.cin, layer.k, layer.k], p, &mut rng);
+        let got =
+            run_functional_conv(&cfg, layer, p, strategy, &input, &weights, shift, relu)
+                .unwrap();
+        let want = conv2d_ref(&input, &weights, p, layer.stride, layer.pad, shift, relu);
+        assert_eq!(got.shape, want.shape);
+        assert_eq!(got.data, want.data, "{layer} {p} {strategy} mismatch");
+    }
+
+    #[test]
+    fn functional_cf_matches_reference_3x3() {
+        let layer = ConvLayer::new("t", 8, 16, 10, 10, 3, 1, 1);
+        check_functional(&layer, Precision::Int8, Strategy::ChannelFirst, 6, false, 11);
+    }
+
+    #[test]
+    fn functional_ff_matches_reference_3x3() {
+        let layer = ConvLayer::new("t", 8, 16, 10, 10, 3, 1, 1);
+        check_functional(&layer, Precision::Int8, Strategy::FeatureFirst, 6, false, 12);
+    }
+
+    #[test]
+    fn functional_matches_reference_1x1() {
+        let layer = ConvLayer::new("pw", 16, 8, 6, 6, 1, 1, 0);
+        check_functional(&layer, Precision::Int8, Strategy::ChannelFirst, 5, true, 13);
+        check_functional(&layer, Precision::Int8, Strategy::FeatureFirst, 5, true, 14);
+    }
+
+    #[test]
+    fn functional_matches_reference_int16() {
+        let layer = ConvLayer::new("t", 4, 8, 8, 8, 3, 1, 1);
+        check_functional(&layer, Precision::Int16, Strategy::ChannelFirst, 8, false, 15);
+        check_functional(&layer, Precision::Int16, Strategy::FeatureFirst, 8, false, 16);
+    }
+
+    #[test]
+    fn functional_matches_reference_int4() {
+        let layer = ConvLayer::new("t", 32, 16, 8, 8, 3, 1, 1);
+        check_functional(&layer, Precision::Int4, Strategy::ChannelFirst, 4, true, 17);
+        check_functional(&layer, Precision::Int4, Strategy::FeatureFirst, 4, true, 18);
+    }
+
+    #[test]
+    fn functional_matches_reference_stride2() {
+        let layer = ConvLayer::new("s2", 8, 8, 11, 11, 3, 2, 1);
+        check_functional(&layer, Precision::Int8, Strategy::ChannelFirst, 6, false, 19);
+        check_functional(&layer, Precision::Int8, Strategy::FeatureFirst, 6, false, 20);
+    }
+
+    #[test]
+    fn functional_matches_awkward_tails() {
+        // sizes not divisible by tiles/groups anywhere
+        let layer = ConvLayer::new("odd", 5, 9, 9, 7, 3, 1, 1);
+        check_functional(&layer, Precision::Int8, Strategy::ChannelFirst, 6, false, 21);
+        check_functional(&layer, Precision::Int8, Strategy::FeatureFirst, 6, false, 22);
+    }
+
+    #[test]
+    fn mixed_picks_cf_for_1x1() {
+        let cfg = SpeedConfig::default();
+        let layer = ConvLayer::new("pw", 128, 128, 28, 28, 1, 1, 0);
+        let r = simulate_layer(&cfg, &layer, Precision::Int8, Strategy::Mixed).unwrap();
+        assert_eq!(r.used, Strategy::ChannelFirst, "CF must win 1×1");
+        assert_eq!(r.requested, Strategy::Mixed);
+    }
+
+    #[test]
+    fn mixed_picks_ff_for_3x3_deep() {
+        let cfg = SpeedConfig::default();
+        let layer = ConvLayer::new("r3", 64, 64, 56, 56, 3, 1, 1);
+        let r = simulate_layer(&cfg, &layer, Precision::Int16, Strategy::Mixed).unwrap();
+        assert_eq!(r.used, Strategy::FeatureFirst, "FF must win 3×3");
+    }
+
+    #[test]
+    fn mixed_never_worse_than_either() {
+        let cfg = SpeedConfig::default();
+        for layer in [
+            ConvLayer::new("a", 64, 64, 28, 28, 3, 1, 1),
+            ConvLayer::new("b", 128, 64, 14, 14, 1, 1, 0),
+            ConvLayer::new("c", 32, 48, 28, 28, 5, 1, 2),
+        ] {
+            for p in Precision::ALL {
+                let ff = simulate_layer(&cfg, &layer, p, Strategy::FeatureFirst).unwrap();
+                let cf = simulate_layer(&cfg, &layer, p, Strategy::ChannelFirst).unwrap();
+                let mx = simulate_layer(&cfg, &layer, p, Strategy::Mixed).unwrap();
+                assert!(mx.cycles <= ff.cycles && mx.cycles <= cf.cycles);
+            }
+        }
+    }
+}

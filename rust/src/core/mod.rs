@@ -1,0 +1,11 @@
+//! Processor top: scalar driver, VIDU (decode/issue), VLDU
+//! (broadcast/ordered loads), the cycle engine and statistics.
+
+pub mod processor;
+pub mod scalar;
+pub mod stats;
+pub mod vidu;
+pub mod vldu;
+
+pub use processor::{ExecMode, Processor};
+pub use stats::SimStats;

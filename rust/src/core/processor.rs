@@ -1,0 +1,709 @@
+//! The SPEED processor model: executes encoded programs with a
+//! resource-occupancy timing engine and (optionally) bit-exact functional
+//! semantics.
+//!
+//! ## Timing model
+//!
+//! Three architectural timelines advance monotonically:
+//!
+//! - `t_issue` — the scalar core + VIDU issue front end (one instruction
+//!   per `issue_cycles`);
+//! - `t_dram` — the external-memory engine (VSALD/VSAM.ST transactions,
+//!   pipelined when back-to-back);
+//! - `t_sau` — the lanes' SAU datapath (lanes run in lockstep, so one
+//!   timeline carries all of them).
+//!
+//! Dependencies are tracked with a per-vreg ready scoreboard (loads →
+//! MACs) and per-accumulator-bank ready times (drains → next MACZ on the
+//! same bank). Total cycles = the max of all timelines at program end.
+//! Functional mode additionally moves real data through DRAM → VRF →
+//! SA cores → DRAM; both modes share this exact scheduler, so timing is
+//! identical — that is what makes whole-network sweeps tractable while
+//! keeping the numerics checkable against the XLA golden artifacts.
+
+use crate::arch::SpeedConfig;
+use crate::core::scalar::ScalarCore;
+use crate::core::stats::SimStats;
+use crate::core::vidu::Vidu;
+use crate::core::vldu::Vldu;
+use crate::error::{Error, Result};
+use crate::isa::{Instr, LoadMode, Program, Vsacfg, Vsam};
+use crate::lane::{alu, Lane};
+use crate::mem::Dram;
+use crate::sau::CsrState;
+
+/// Execution mode: full functional semantics or timing-only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Move real data (bit-exact); slower, used by tests/examples.
+    Functional,
+    /// Timing + traffic accounting only; used by the benchmarks.
+    Timing,
+}
+
+/// The SPEED machine.
+#[derive(Debug)]
+pub struct Processor {
+    /// Machine configuration.
+    pub cfg: SpeedConfig,
+    /// External memory.
+    pub dram: Dram,
+    /// Scalable modules.
+    pub lanes: Vec<Lane>,
+    mode: ExecMode,
+    vidu: Vidu,
+    vldu: Vldu,
+    scalar: ScalarCore,
+    csr: CsrState,
+    vl: usize,
+    sew_bits: u32,
+    lmul: u32,
+    // timelines
+    t_issue: u64,
+    t_dram: u64,
+    t_sau: u64,
+    /// end time of the previous MAC stream (wavefront pipelining:
+    /// back-to-back tiles skip the fill skew).
+    t_last_mac_end: u64,
+    vreg_ready: [u64; 32],
+    bank_ready: Vec<u64>,
+    /// Read/write-side partial offset counters (reset by VSACFG.WOffset,
+    /// auto-advanced by bumping LdAcc/Wb).
+    woff_rd: u32,
+    woff_wr: u32,
+    stats: SimStats,
+}
+
+impl Processor {
+    /// Build a machine with `dram_capacity` bytes of external memory.
+    pub fn new(cfg: SpeedConfig, dram_capacity: usize, mode: ExecMode) -> Result<Self> {
+        cfg.validate()?;
+        let dram = Dram::new(dram_capacity, cfg.dram_bw_bytes_per_cycle, cfg.dram_latency_cycles);
+        let lanes = (0..cfg.n_lanes).map(|_| Lane::new(&cfg)).collect();
+        let bank_ready = vec![0; cfg.n_acc_banks];
+        Ok(Processor {
+            cfg,
+            dram,
+            lanes,
+            mode,
+            vidu: Vidu::new(),
+            vldu: Vldu,
+            scalar: ScalarCore::new(),
+            csr: CsrState::default(),
+            vl: 0,
+            sew_bits: 8,
+            lmul: 1,
+            t_issue: 0,
+            t_dram: 0,
+            t_sau: 0,
+            t_last_mac_end: 0,
+            vreg_ready: [0; 32],
+            bank_ready,
+            woff_rd: 0,
+            woff_wr: 0,
+            stats: SimStats::default(),
+        })
+    }
+
+    /// Current execution mode.
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    /// Statistics accumulated so far.
+    pub fn stats(&self) -> &SimStats {
+        &self.stats
+    }
+
+    /// Record the nominal useful work of the program(s) run (set by the
+    /// dataflow compiler from the layer definition).
+    pub fn set_useful_macs(&mut self, macs: u64) {
+        self.stats.useful_macs = macs;
+    }
+
+    /// Reset timelines and statistics, keeping memory contents.
+    pub fn reset_timing(&mut self) {
+        self.t_issue = 0;
+        self.t_dram = 0;
+        self.t_sau = 0;
+        self.t_last_mac_end = 0;
+        self.vreg_ready = [0; 32];
+        for b in &mut self.bank_ready {
+            *b = 0;
+        }
+        self.stats = SimStats::default();
+    }
+
+    /// Maximum vl for the current vtype.
+    fn vlmax(&self) -> usize {
+        self.cfg.vlen_bits * self.lmul as usize / self.sew_bits as usize
+    }
+
+    /// Registers spanned by `bytes` per lane starting at a vreg.
+    fn regs_spanned(&self, bytes_per_lane: usize) -> usize {
+        bytes_per_lane.div_ceil(self.cfg.vreg_bytes_per_lane()).max(1)
+    }
+
+    fn vreg_span_ready(&self, vreg: u8, bytes_per_lane: usize) -> u64 {
+        let span = self.regs_spanned(bytes_per_lane);
+        (0..span)
+            .map(|i| self.vreg_ready[(vreg as usize + i) % 32])
+            .max()
+            .unwrap_or(0)
+    }
+
+    fn set_vreg_span_ready(&mut self, vreg: u8, bytes_per_lane: usize, t: u64) {
+        let span = self.regs_spanned(bytes_per_lane);
+        for i in 0..span {
+            self.vreg_ready[(vreg as usize + i) % 32] = t;
+        }
+    }
+
+    /// Run a whole program to completion.
+    pub fn run(&mut self, prog: &Program) -> Result<()> {
+        for &word in prog.words() {
+            let instr = self.vidu.decode(word)?;
+            self.vidu.classify(&instr);
+            self.step(&instr)?;
+        }
+        self.stats.cycles = self.t_issue.max(self.t_dram).max(self.t_sau);
+        self.stats.instrs = self.vidu.mix;
+        Ok(())
+    }
+
+    /// Execute one decoded instruction (timing + optional functional).
+    fn step(&mut self, i: &Instr) -> Result<()> {
+        // Issue: every instruction passes the front end.
+        self.t_issue += self.cfg.issue_cycles;
+
+        if self.scalar.exec(i) {
+            return Ok(());
+        }
+
+        match *i {
+            Instr::Vsetvli { rd, rs1, vtype } => {
+                self.sew_bits = vtype.sew_bits;
+                self.lmul = vtype.lmul;
+                let avl =
+                    if rs1 == 0 { self.vlmax() } else { self.scalar.read(rs1).max(0) as usize };
+                self.vl = avl.min(self.vlmax());
+                self.scalar.write(rd, self.vl as i64);
+            }
+            Instr::Vsacfg(cfg) => self.exec_vsacfg(cfg),
+            Instr::Vsald { vd, rs1, mode } => self.exec_vsald(vd, rs1, mode)?,
+            Instr::Vsam(v) => self.exec_vsam(v)?,
+            Instr::Vle { width, vd, rs1 } => {
+                let bytes = self.vl * width.bytes();
+                let addr = self.scalar.read(rs1) as u32;
+                let issue = self.t_issue;
+                let pipelined = self.t_dram >= issue;
+                let cost = self.vldu.ordered_cost(&self.cfg, &self.dram, bytes, pipelined);
+                let start = self.t_dram.max(issue);
+                let end = start + cost.dram_cycles + cost.vrf_cycles;
+                self.stats.dram_busy += end - start;
+                self.t_dram = end;
+                self.set_vreg_span_ready(vd, cost.vrf_bytes_per_lane as usize, end);
+                if self.mode == ExecMode::Functional {
+                    self.vldu.exec_ordered(&mut self.lanes, &mut self.dram, addr, vd, 0, bytes)?;
+                } else {
+                    self.dram.count_read(bytes as u64);
+                }
+                self.stats.dram_read += bytes as u64;
+                self.stats.vrf_write +=
+                    cost.vrf_bytes_per_lane * self.cfg.n_lanes as u64;
+            }
+            Instr::Vse { width, vs3, rs1 } => {
+                let bytes = self.vl * width.bytes();
+                let addr = self.scalar.read(rs1) as u32;
+                let ready = self.vreg_span_ready(vs3, bytes / self.cfg.n_lanes);
+                let start = self.t_dram.max(self.t_issue).max(ready);
+                let end = start + self.dram.stream_cycles(bytes) + 2;
+                self.stats.dram_busy += end - start;
+                self.t_dram = end;
+                if self.mode == ExecMode::Functional {
+                    let n = self.cfg.n_lanes;
+                    let per = bytes / n;
+                    let mut buf = vec![0u8; bytes];
+                    for (l, lane) in self.lanes.iter().enumerate() {
+                        buf[l * per..(l + 1) * per]
+                            .copy_from_slice(lane.vrf.peek(vs3, 0, per)?);
+                    }
+                    self.dram.write(addr, &buf)?;
+                } else {
+                    self.dram.count_write(bytes as u64);
+                }
+                self.stats.dram_write += bytes as u64;
+            }
+            Instr::VaddVv { vd, vs2, vs1 }
+            | Instr::VmulVv { vd, vs2, vs1 }
+            | Instr::VmaccVv { vd, vs1, vs2 } => {
+                let n_per_lane = (self.vl / self.cfg.n_lanes).max(1);
+                let lane_cycles =
+                    (n_per_lane as u64 * self.sew_bits as u64 / 64).max(1);
+                let ready = self
+                    .vreg_span_ready(vs1, n_per_lane * self.sew_bits as usize / 8)
+                    .max(self.vreg_span_ready(vs2, n_per_lane * self.sew_bits as usize / 8));
+                let start = self.t_sau.max(self.t_issue).max(ready);
+                self.t_sau = start + lane_cycles;
+                self.stats.sau_busy += lane_cycles;
+                if self.mode == ExecMode::Functional {
+                    for lane in &mut self.lanes {
+                        match *i {
+                            Instr::VaddVv { .. } => {
+                                alu::vadd(&mut lane.vrf, vd, vs2, vs1, self.sew_bits, n_per_lane)?
+                            }
+                            Instr::VmulVv { .. } => {
+                                alu::vmul(&mut lane.vrf, vd, vs2, vs1, self.sew_bits, n_per_lane)?
+                            }
+                            _ => {
+                                alu::vmacc(&mut lane.vrf, vd, vs1, vs2, self.sew_bits, n_per_lane)?
+                            }
+                        }
+                        lane.seq.accept_alu(lane_cycles);
+                    }
+                }
+                self.set_vreg_span_ready(vd, n_per_lane * self.sew_bits as usize / 8, self.t_sau);
+            }
+            Instr::VsraVi { vd, vs2, uimm } => {
+                let n_per_lane = (self.vl / self.cfg.n_lanes).max(1);
+                let lane_cycles = (n_per_lane as u64 * self.sew_bits as u64 / 64).max(1);
+                let start = self.t_sau.max(self.t_issue);
+                self.t_sau = start + lane_cycles;
+                self.stats.sau_busy += lane_cycles;
+                if self.mode == ExecMode::Functional {
+                    for lane in &mut self.lanes {
+                        alu::vsra(&mut lane.vrf, vd, vs2, uimm, self.sew_bits, n_per_lane)?;
+                    }
+                }
+            }
+            _ => return Err(Error::sim(format!("unhandled instruction {i:?}"))),
+        }
+        Ok(())
+    }
+
+    fn exec_vsacfg(&mut self, cfg: Vsacfg) {
+        match cfg {
+            Vsacfg::Main { precision, strategy, tile_h } => {
+                self.csr.precision = precision;
+                self.csr.strategy = strategy;
+                self.csr.tile_h = tile_h;
+            }
+            Vsacfg::RowStride { rs1, aincr } => {
+                self.csr.rowstride_elems = self.scalar.read(rs1) as u32;
+                self.csr.aincr_bytes = aincr as u32;
+            }
+            Vsacfg::OutStride { rs1 } => {
+                self.csr.outstride_bytes = self.scalar.read(rs1) as u32
+            }
+            Vsacfg::Shift { uimm5 } => self.csr.shift = uimm5,
+            Vsacfg::AOffset { rs1 } => self.csr.aoffset_bytes = self.scalar.read(rs1) as u32,
+            Vsacfg::WOffset { rs1 } => {
+                self.csr.woffset_bytes = self.scalar.read(rs1) as u32;
+                self.woff_rd = self.csr.woffset_bytes;
+                self.woff_wr = self.csr.woffset_bytes;
+            }
+            Vsacfg::CStride { rs1 } => self.csr.cstride_bytes = self.scalar.read(rs1) as u32,
+            Vsacfg::RunCfg { rs1, runlen } => {
+                self.csr.runstride_elems = self.scalar.read(rs1) as u32;
+                self.csr.runlen_elems = runlen as u32;
+            }
+        }
+    }
+
+    fn exec_vsald(&mut self, vd: u8, rs1: u8, mode: LoadMode) -> Result<()> {
+        let eb = self.csr.precision.element_bytes();
+        let bytes = self.vl * eb;
+        let addr = self.scalar.read(rs1) as u32;
+        let issue = self.t_issue;
+        // Back-to-back transfers pipeline (the queues keep the bus busy).
+        let pipelined = self.t_dram >= issue;
+        let cost = match mode {
+            LoadMode::Broadcast => {
+                self.vldu.broadcast_cost(&self.cfg, &self.dram, bytes, pipelined)
+            }
+            LoadMode::Ordered => self.vldu.ordered_cost(&self.cfg, &self.dram, bytes, pipelined),
+            LoadMode::BroadcastStrided(_) | LoadMode::OrderedStrided(_) => self
+                .vldu
+                .strided_cost(&self.cfg, &self.dram, self.vl, eb, mode.is_broadcast(), pipelined),
+        };
+        let start = self.t_dram.max(issue);
+        let end = start + cost.dram_cycles + cost.vrf_cycles;
+        self.stats.dram_busy += end - start;
+        self.t_dram = end;
+        // Loads land at (vd, vsa_woffset) — the write-offset CSR lets the
+        // compiler pack patch rows densely inside a region.
+        let woff = self.csr.woffset_bytes as usize;
+        self.set_vreg_span_ready(vd, woff + cost.vrf_bytes_per_lane as usize, end);
+        if self.mode == ExecMode::Functional {
+            match mode {
+                LoadMode::Broadcast => self
+                    .vldu
+                    .exec_broadcast(&mut self.lanes, &mut self.dram, addr, vd, woff, bytes)?,
+                LoadMode::Ordered => self
+                    .vldu
+                    .exec_ordered(&mut self.lanes, &mut self.dram, addr, vd, woff, bytes)?,
+                LoadMode::BroadcastStrided(s) | LoadMode::OrderedStrided(s) => {
+                    self.vldu.exec_strided(
+                        &mut self.lanes,
+                        &mut self.dram,
+                        addr,
+                        vd,
+                        woff,
+                        self.vl,
+                        eb,
+                        s as usize,
+                        mode.is_broadcast(),
+                    )?;
+                }
+            }
+        } else {
+            self.dram.count_read(bytes as u64);
+        }
+        self.stats.dram_read += bytes as u64;
+        self.stats.vrf_write += cost.vrf_bytes_per_lane * self.cfg.n_lanes as u64;
+        for lane in &mut self.lanes {
+            lane.sau.queues.push();
+        }
+        Ok(())
+    }
+
+    fn exec_vsam(&mut self, v: Vsam) -> Result<()> {
+        match v {
+            Vsam::MacZ { acc, vs1, vs2, bump } | Vsam::Mac { acc, vs1, vs2, bump } => {
+                let init = matches!(v, Vsam::MacZ { .. });
+                let steps = self.vl;
+                if steps == 0 {
+                    return Err(Error::sim("VSAM with vl=0"));
+                }
+                let ag = crate::sau::AddrGen::new(&self.csr, steps);
+                let a_bytes = ag.a_offset_bytes + ag.a_span_bytes(self.cfg.tile_r);
+                let b_bytes = ag.b_bytes(self.cfg.tile_c);
+                let ready = self
+                    .vreg_span_ready(vs1, a_bytes)
+                    .max(self.vreg_span_ready(vs2, b_bytes));
+                // Any MAC on a bank must wait for in-flight spills/drains
+                // on that bank (the accumulator port runs concurrently).
+                let bank_rdy = *self
+                    .bank_ready
+                    .get(acc as usize)
+                    .ok_or_else(|| Error::sim(format!("acc bank {acc} out of range")))?;
+                // cost computed once (lanes lockstep); lane 0 is canonical
+                let cost = {
+                    let lane0 = &mut self.lanes[0];
+                    lane0.sau.mac_cost(&self.cfg, &self.csr, &lane0.vrf, steps)
+                };
+                let start = self.t_sau.max(self.t_issue).max(ready).max(bank_rdy);
+                // Output-stationary array: the wavefront skew is paid only
+                // when the operand pipeline had a bubble.
+                let fill = if start > self.t_last_mac_end {
+                    self.stats.sa_fills += 1;
+                    self.cfg.sa_fill_cycles()
+                } else {
+                    0
+                };
+                self.stats.operand_stall += ready.saturating_sub(self.t_sau.max(self.t_issue));
+                self.t_sau = start + fill + cost.sau_cycles;
+                self.t_last_mac_end = self.t_sau;
+                self.stats.sau_busy += fill + cost.sau_cycles;
+                self.stats.macs += cost.macs * self.cfg.n_lanes as u64;
+                self.stats.vrf_read += cost.vrf_read * self.cfg.n_lanes as u64;
+                if self.mode == ExecMode::Functional {
+                    let csr = self.csr;
+                    let cfg = self.cfg.clone();
+                    for lane in &mut self.lanes {
+                        let sau = lane.sau.clone();
+                        sau.exec_mac(
+                            &cfg, &csr, &mut lane.vrf, &mut lane.sa, acc, vs1, vs2, steps, init,
+                        )?;
+                        lane.seq.accept_sau(cost.sau_cycles);
+                        lane.sau.queues.pop();
+                    }
+                }
+                if bump {
+                    self.csr.aoffset_bytes += self.csr.aincr_bytes;
+                }
+            }
+            Vsam::Wb { vd, acc, bump } => {
+                // Accumulator-port op: overlaps MAC streaming; serializes
+                // only against this bank's producing MAC.
+                let cost = self.lanes[0].sau.partial_cost(&self.cfg, &self.lanes[0].vrf, true);
+                let start = self.t_sau.max(self.t_issue);
+                let end = start + cost.sau_cycles;
+                if let Some(b) = self.bank_ready.get_mut(acc as usize) {
+                    *b = (*b).max(end);
+                } else {
+                    return Err(Error::sim(format!("acc bank {acc} out of range")));
+                }
+                self.stats.acc_busy += cost.sau_cycles;
+                self.stats.vrf_write += cost.vrf_write * self.cfg.n_lanes as u64;
+                if self.mode == ExecMode::Functional {
+                    let off = self.woff_wr as usize;
+                    for lane in &mut self.lanes {
+                        let sau = lane.sau.clone();
+                        sau.exec_wb(off, &mut lane.vrf, &lane.sa, vd, acc)?;
+                    }
+                }
+                if bump {
+                    self.woff_wr += (self.cfg.tile_r * self.cfg.tile_c * 4) as u32;
+                }
+            }
+            Vsam::LdAcc { acc, vs1, bump } => {
+                let cost = self.lanes[0].sau.partial_cost(&self.cfg, &self.lanes[0].vrf, false);
+                let bank_rdy = *self
+                    .bank_ready
+                    .get(acc as usize)
+                    .ok_or_else(|| Error::sim(format!("acc bank {acc} out of range")))?;
+                let start = self.t_issue.max(bank_rdy);
+                let end = start + cost.sau_cycles;
+                self.bank_ready[acc as usize] = end;
+                self.stats.acc_busy += cost.sau_cycles;
+                self.stats.vrf_read += cost.vrf_read * self.cfg.n_lanes as u64;
+                if self.mode == ExecMode::Functional {
+                    let off = self.woff_rd as usize;
+                    for lane in &mut self.lanes {
+                        let sau = lane.sau.clone();
+                        sau.exec_ldacc(off, &mut lane.vrf, &mut lane.sa, acc, vs1)?;
+                    }
+                }
+                if bump {
+                    self.woff_rd += (self.cfg.tile_r * self.cfg.tile_c * 4) as u32;
+                }
+            }
+            Vsam::St { acc, rs1, relu } => {
+                // Drain runs on the accumulator/output-queue port and
+                // overlaps subsequent MAC streams on other banks.
+                let drain = self.lanes[0].sau.drain_cost(&self.cfg);
+                let start = self.t_sau.max(self.t_issue);
+                let drain_end = start + drain.sau_cycles;
+                self.stats.acc_busy += drain.sau_cycles;
+                // output bytes: one value per PE, stored at ≥1 byte each
+                let p = self.csr.precision;
+                let vb = (p.bits() as usize / 8).max(1);
+                let per_lane = self.cfg.tile_r * self.cfg.tile_c * vb;
+                let total = per_lane * self.cfg.n_lanes;
+                let wr_start = self.t_dram.max(drain_end);
+                self.t_dram = wr_start + self.dram.stream_cycles(total) + 1;
+                self.stats.dram_busy += self.t_dram - wr_start;
+                self.stats.dram_write += total as u64;
+                if let Some(b) = self.bank_ready.get_mut(acc as usize) {
+                    *b = (*b).max(drain_end);
+                } else {
+                    return Err(Error::sim(format!("acc bank {acc} out of range")));
+                }
+                if self.mode == ExecMode::Functional {
+                    let base = self.scalar.read(rs1) as i64;
+                    let shift = self.csr.shift;
+                    let outstride = self.csr.outstride_bytes as i64;
+                    let cstride = self.csr.cstride_bytes as i64;
+                    let (tile_r, tile_c) = (self.cfg.tile_r, self.cfg.tile_c);
+                    for (l, lane) in self.lanes.iter().enumerate() {
+                        let vals = lane.sa.drain_bank(acc as usize, shift, relu, p)?;
+                        for r in 0..tile_r {
+                            for c in 0..tile_c {
+                                let co = l * tile_c + c;
+                                let addr = base + co as i64 * cstride + r as i64 * outstride;
+                                let v = vals[r * tile_c + c];
+                                let bytes = match vb {
+                                    1 => vec![v as u8],
+                                    _ => (v as i16).to_le_bytes().to_vec(),
+                                };
+                                self.dram.write(addr as u32, &bytes)?;
+                            }
+                        }
+                    }
+                } else {
+                    self.dram.count_write(total as u64);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Precision;
+    use crate::arch::precision::pack_operands;
+    use crate::isa::{Strategy, Vsacfg};
+
+    fn machine(mode: ExecMode) -> Processor {
+        Processor::new(SpeedConfig::default(), 1 << 20, mode).unwrap()
+    }
+
+    /// Tiny end-to-end program: load A (broadcast) and B (ordered),
+    /// one MACZ tile, drain to DRAM. Checks numerics + nonzero timing.
+    #[test]
+    fn single_tile_roundtrip() {
+        let mut m = machine(ExecMode::Functional);
+        let p = Precision::Int8;
+        let g = p.group();
+        let steps = 4usize;
+        let cfg = m.cfg.clone();
+        // A: [tile_r][steps] dense; same for all lanes (broadcast).
+        let a_ops: Vec<i64> = (0..cfg.tile_r * steps * g).map(|i| (i % 11) as i64 - 5).collect();
+        // B: per lane distinct: [n_lanes][tile_c][steps]
+        let b_ops: Vec<i64> =
+            (0..cfg.n_lanes * cfg.tile_c * steps * g).map(|i| (i % 7) as i64 - 3).collect();
+        let a_bytes = pack_operands(p, &a_ops).unwrap();
+        let b_bytes = pack_operands(p, &b_ops).unwrap();
+        let a_addr = m.dram.alloc(a_bytes.len()).unwrap();
+        let b_addr = m.dram.alloc(b_bytes.len()).unwrap();
+        let out_addr = m.dram.alloc(256).unwrap();
+        m.dram.poke(a_addr, &a_bytes).unwrap();
+        m.dram.poke(b_addr, &b_bytes).unwrap();
+
+        let mut b = Program::builder();
+        b.vsacfg(Vsacfg::Main {
+            precision: p,
+            strategy: Strategy::ChannelFirst,
+            tile_h: 4,
+        });
+        b.set_rowstride(0, 0); // dense
+        b.set_outstride(64);
+        b.set_cstride(4);
+        b.emit(Instr::Vsacfg(Vsacfg::Shift { uimm5: 0 }));
+        // A load: tile_r*steps elements broadcast
+        b.set_vl((cfg.tile_r * steps) as u32, 16, 8);
+        b.vsald_bcast(0, a_addr);
+        // B load: n_lanes*tile_c*steps elements ordered
+        b.set_vl((cfg.n_lanes * cfg.tile_c * steps) as u32, 16, 8);
+        b.vsald_ordered(8, b_addr);
+        // MAC of `steps` elements
+        b.set_vl(steps as u32, 16, 8);
+        b.vsam_mac(0, 0, 8, true, false);
+        b.vsam_store(0, out_addr, false);
+        let prog = b.build();
+
+        m.run(&prog).unwrap();
+        let stats = m.stats().clone();
+        assert!(stats.cycles > 0);
+        assert_eq!(stats.instrs.mac, 1);
+        assert!(stats.dram_read > 0 && stats.dram_write > 0);
+
+        // verify numerics for a few PEs
+        for l in 0..cfg.n_lanes {
+            for r in 0..cfg.tile_r {
+                for c in 0..cfg.tile_c {
+                    let mut want = 0i64;
+                    for k in 0..steps {
+                        for gi in 0..g {
+                            let av = a_ops[(r * steps + k) * g + gi];
+                            let bv =
+                                b_ops[((l * cfg.tile_c + c) * steps + k) * g + gi];
+                            want += av * bv;
+                        }
+                    }
+                    let co = l * cfg.tile_c + c;
+                    let addr = out_addr + co as u32 * 4 + r as u32 * 64;
+                    let got = m.dram.peek(addr, 1).unwrap()[0] as i8 as i64;
+                    assert_eq!(got, p.clamp(want), "lane {l} r {r} c {c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn timing_mode_matches_functional_cycles() {
+        // Same program in both modes must produce identical cycle counts.
+        let build = || {
+            let mut b = Program::builder();
+            b.vsacfg(Vsacfg::Main {
+                precision: Precision::Int16,
+                strategy: Strategy::FeatureFirst,
+                tile_h: 6,
+            });
+            b.set_rowstride(0, 0);
+            b.set_vl(64, 16, 8);
+            b.vsald_bcast(0, 0);
+            b.vsald_ordered(8, 4096);
+            b.set_vl(16, 16, 8);
+            b.vsam_mac(0, 0, 8, true, false);
+            b.vsam_mac(0, 0, 8, false, false);
+            b.set_outstride(64);
+            b.set_cstride(4);
+            b.vsam_store(0, 8192, true);
+            b.build()
+        };
+        let mut f = machine(ExecMode::Functional);
+        let mut t = machine(ExecMode::Timing);
+        f.run(&build()).unwrap();
+        t.run(&build()).unwrap();
+        assert_eq!(f.stats().cycles, t.stats().cycles);
+        assert_eq!(f.stats().dram_read, t.stats().dram_read);
+        assert_eq!(f.stats().macs, t.stats().macs);
+    }
+
+    #[test]
+    fn loads_overlap_compute() {
+        // two independent load+mac pairs: second load should overlap the
+        // first MAC (t_dram advances independently).
+        let mut m = machine(ExecMode::Timing);
+        let mut b = Program::builder();
+        b.vsacfg(Vsacfg::Main {
+            precision: Precision::Int16,
+            strategy: Strategy::ChannelFirst,
+            tile_h: 4,
+        });
+        b.set_rowstride(0, 0);
+        b.set_vl(512, 16, 8);
+        b.vsald_bcast(0, 0);
+        b.vsald_ordered(8, 8192);
+        b.set_vl(128, 16, 8);
+        b.vsam_mac(0, 0, 8, true, false);
+        // prefetch next tile while MAC runs
+        b.set_vl(512, 16, 8);
+        b.vsald_bcast(4, 16384);
+        b.vsald_ordered(12, 32768);
+        b.set_vl(128, 16, 8);
+        b.vsam_mac(1, 4, 12, true, false);
+        let prog = b.build();
+        m.run(&prog).unwrap();
+        let s = m.stats();
+        // serial sum would be dram_busy + sau_busy (+issue); overlap means
+        // total < sum.
+        assert!(
+            s.cycles < s.dram_busy + s.sau_busy,
+            "no overlap: cycles={} dram={} sau={}",
+            s.cycles,
+            s.dram_busy,
+            s.sau_busy
+        );
+    }
+
+    #[test]
+    fn vsam_with_vl_zero_rejected() {
+        let mut m = machine(ExecMode::Timing);
+        let mut b = Program::builder();
+        b.vsam_mac(0, 0, 8, true, false);
+        assert!(m.run(&b.build()).is_err());
+    }
+
+    #[test]
+    fn standard_rvv_alu_path() {
+        let mut m = machine(ExecMode::Functional);
+        // place elements via vle, add, store via vse
+        let n = 64usize; // 16 per lane
+        let a: Vec<u8> = (0..n as u8).collect();
+        let bsrc: Vec<u8> = (0..n as u8).map(|x| x * 2).collect();
+        let a_addr = m.dram.alloc(n).unwrap();
+        let b_addr = m.dram.alloc(n).unwrap();
+        let o_addr = m.dram.alloc(n).unwrap();
+        m.dram.poke(a_addr, &a).unwrap();
+        m.dram.poke(b_addr, &bsrc).unwrap();
+        let mut b = Program::builder();
+        b.set_vl(n as u32, 8, 1);
+        b.li(10, a_addr);
+        b.emit(Instr::Vle { width: crate::isa::ElemWidth::E8, vd: 1, rs1: 10 });
+        b.li(11, b_addr);
+        b.emit(Instr::Vle { width: crate::isa::ElemWidth::E8, vd: 2, rs1: 11 });
+        b.emit(Instr::VaddVv { vd: 3, vs2: 1, vs1: 2 });
+        b.li(12, o_addr);
+        b.emit(Instr::Vse { width: crate::isa::ElemWidth::E8, vs3: 3, rs1: 12 });
+        m.run(&b.build()).unwrap();
+        let out = m.dram.peek(o_addr, n).unwrap();
+        for i in 0..n {
+            assert_eq!(out[i], (a[i] as i8).wrapping_add(bsrc[i] as i8) as u8);
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Scalar core stub: executes the RV64I subset that synthesizes
+//! addresses/constants for the vector unit. The real SPEED couples to a
+//! full RISC-V scalar core; the DNN kernels only need `lui/addi/slli/add`.
+
+use crate::isa::Instr;
+
+/// 32 × 64-bit integer register file with x0 hard-wired to zero.
+#[derive(Debug, Clone)]
+pub struct ScalarCore {
+    x: [i64; 32],
+}
+
+impl Default for ScalarCore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ScalarCore {
+    /// Fresh register file (all zeros).
+    pub fn new() -> Self {
+        ScalarCore { x: [0; 32] }
+    }
+
+    /// Read a register.
+    pub fn read(&self, r: u8) -> i64 {
+        self.x[r as usize]
+    }
+
+    /// Write a register (x0 writes are discarded).
+    pub fn write(&mut self, r: u8, v: i64) {
+        if r != 0 {
+            self.x[r as usize] = v;
+        }
+    }
+
+    /// Execute one scalar instruction. Returns `true` if the instruction
+    /// was scalar (handled), `false` otherwise.
+    pub fn exec(&mut self, i: &Instr) -> bool {
+        match *i {
+            Instr::Lui { rd, imm20 } => {
+                self.write(rd, (imm20 as i64) << 12);
+                true
+            }
+            Instr::Addi { rd, rs1, imm12 } => {
+                self.write(rd, self.read(rs1).wrapping_add(imm12 as i64));
+                true
+            }
+            Instr::Slli { rd, rs1, shamt } => {
+                self.write(rd, self.read(rs1) << shamt);
+                true
+            }
+            Instr::Add { rd, rs1, rs2 } => {
+                self.write(rd, self.read(rs1).wrapping_add(self.read(rs2)));
+                true
+            }
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn x0_is_zero() {
+        let mut s = ScalarCore::new();
+        s.exec(&Instr::Addi { rd: 0, rs1: 0, imm12: 42 });
+        assert_eq!(s.read(0), 0);
+    }
+
+    #[test]
+    fn li_sequence() {
+        let mut s = ScalarCore::new();
+        s.exec(&Instr::Lui { rd: 5, imm20: 0x12345 });
+        s.exec(&Instr::Addi { rd: 5, rs1: 5, imm12: 0x678 });
+        assert_eq!(s.read(5), (0x12345 << 12) + 0x678);
+    }
+
+    #[test]
+    fn vector_instr_not_handled() {
+        let mut s = ScalarCore::new();
+        assert!(!s.exec(&Instr::Vsald {
+            vd: 0,
+            rs1: 1,
+            mode: crate::isa::LoadMode::Broadcast
+        }));
+    }
+}

@@ -1,0 +1,148 @@
+//! Simulation statistics: cycles, instruction mix, traffic, activity.
+//!
+//! These are the raw events the cost models consume: MAC counts by
+//! precision feed dynamic compute energy, DRAM/VRF byte counters feed
+//! memory energy, and the cycle total feeds performance metrics.
+
+use crate::arch::{Precision, SpeedConfig};
+
+/// Instruction-class counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct InstrMix {
+    /// Scalar (address/constant synthesis).
+    pub scalar: u64,
+    /// `vsetvli` + `vsacfg` configuration.
+    pub config: u64,
+    /// `vsald` + `vle`.
+    pub load: u64,
+    /// `vsam.mac[z]`.
+    pub mac: u64,
+    /// `vsam.wb` + `vsam.ldacc` partial traffic.
+    pub partial: u64,
+    /// `vsam.st` + `vse`.
+    pub store: u64,
+    /// Standard vector ALU ops.
+    pub alu: u64,
+}
+
+impl InstrMix {
+    /// Total instructions.
+    pub fn total(&self) -> u64 {
+        self.scalar + self.config + self.load + self.mac + self.partial + self.store + self.alu
+    }
+}
+
+/// Full simulation report for one program run.
+#[derive(Debug, Clone, Default)]
+pub struct SimStats {
+    /// Total elapsed cycles (max over resource timelines).
+    pub cycles: u64,
+    /// Instruction mix.
+    pub instrs: InstrMix,
+    /// MAC operations executed by the SA cores (hardware activity,
+    /// includes tail-tile padding work).
+    pub macs: u64,
+    /// Useful MACs (set by the caller from the layer's nominal work;
+    /// `macs` ≥ `useful_macs` because tail tiles pad).
+    pub useful_macs: u64,
+    /// DRAM bytes read / written.
+    pub dram_read: u64,
+    /// DRAM bytes written.
+    pub dram_write: u64,
+    /// VRF bytes read (sum over lanes).
+    pub vrf_read: u64,
+    /// VRF bytes written (sum over lanes).
+    pub vrf_write: u64,
+    /// Cycles the SAU streaming timeline was busy.
+    pub sau_busy: u64,
+    /// Cycles the accumulator/output port was busy (spills + drains;
+    /// overlaps streaming).
+    pub acc_busy: u64,
+    /// Cycles the DRAM timeline was busy.
+    pub dram_busy: u64,
+    /// Systolic fill events.
+    pub sa_fills: u64,
+    /// Cycles a MAC stalled waiting on operands (load latency exposed).
+    pub operand_stall: u64,
+}
+
+impl SimStats {
+    /// Wall-clock seconds at the configured frequency.
+    pub fn seconds(&self, freq_mhz: f64) -> f64 {
+        self.cycles as f64 / (freq_mhz * 1e6)
+    }
+
+    /// Achieved GOPS based on *useful* operations (2 ops per MAC),
+    /// the paper's throughput metric.
+    pub fn gops(&self, freq_mhz: f64) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        let ops = 2.0 * self.useful_macs as f64;
+        ops / self.seconds(freq_mhz) / 1e9
+    }
+
+    /// SA-core utilization: useful MACs / (cycles × peak MACs/cycle).
+    pub fn utilization(&self, cfg: &SpeedConfig, p: Precision) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.useful_macs as f64 / (self.cycles as f64 * cfg.macs_per_cycle(p) as f64)
+    }
+
+    /// Merge another run's stats (sequential composition).
+    pub fn merge(&mut self, o: &SimStats) {
+        self.cycles += o.cycles;
+        self.instrs.scalar += o.instrs.scalar;
+        self.instrs.config += o.instrs.config;
+        self.instrs.load += o.instrs.load;
+        self.instrs.mac += o.instrs.mac;
+        self.instrs.partial += o.instrs.partial;
+        self.instrs.store += o.instrs.store;
+        self.instrs.alu += o.instrs.alu;
+        self.macs += o.macs;
+        self.useful_macs += o.useful_macs;
+        self.dram_read += o.dram_read;
+        self.dram_write += o.dram_write;
+        self.vrf_read += o.vrf_read;
+        self.vrf_write += o.vrf_write;
+        self.sau_busy += o.sau_busy;
+        self.acc_busy += o.acc_busy;
+        self.dram_busy += o.dram_busy;
+        self.sa_fills += o.sa_fills;
+        self.operand_stall += o.operand_stall;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gops_math() {
+        let mut s = SimStats::default();
+        s.cycles = 1000;
+        s.useful_macs = 32_000; // 64 MACs/cyc → 32 avg
+        // at 500 MHz: 2*32e3 ops / 2µs = 32 GOPS
+        assert!((s.gops(500.0) - 32.0).abs() < 1e-9);
+        let cfg = SpeedConfig::default();
+        assert!((s.utilization(&cfg, Precision::Int16) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = SimStats { cycles: 10, macs: 5, ..Default::default() };
+        let b = SimStats { cycles: 7, macs: 3, dram_read: 100, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.cycles, 17);
+        assert_eq!(a.macs, 8);
+        assert_eq!(a.dram_read, 100);
+    }
+
+    #[test]
+    fn zero_cycles_safe() {
+        let s = SimStats::default();
+        assert_eq!(s.gops(500.0), 0.0);
+        assert_eq!(s.utilization(&SpeedConfig::default(), Precision::Int4), 0.0);
+    }
+}

@@ -1,0 +1,86 @@
+//! VIDU — vector instruction decode unit (paper Sec. II-B): decodes the
+//! customized instructions as well as the standard RVV set and issues
+//! them to the lanes.
+//!
+//! Decode itself lives in [`crate::isa::decode::decode`]; this unit models the
+//! issue pipeline (one vector instruction per `issue_cycles`) and keeps
+//! the per-class decode counters the instruction-mix statistics and
+//! energy model consume.
+
+use crate::core::stats::InstrMix;
+use crate::isa::{decode, Instr, Vsam};
+use crate::Result;
+
+/// Decode/issue front end.
+#[derive(Debug, Clone, Default)]
+pub struct Vidu {
+    /// Per-class decode counters.
+    pub mix: InstrMix,
+}
+
+impl Vidu {
+    /// Fresh VIDU.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Decode one word (no classification — the issue loop classifies in
+    /// its dispatch match, which profiling showed is free there).
+    #[inline]
+    pub fn decode(&mut self, word: u32) -> Result<Instr> {
+        decode(word)
+    }
+
+    /// Classify a decoded instruction into the mix counters.
+    #[inline]
+    pub fn classify(&mut self, i: &Instr) {
+        match i {
+            Instr::Lui { .. } | Instr::Addi { .. } | Instr::Slli { .. } | Instr::Add { .. } => {
+                self.mix.scalar += 1
+            }
+            Instr::Vsetvli { .. } | Instr::Vsacfg(_) => self.mix.config += 1,
+            Instr::Vle { .. } | Instr::Vsald { .. } => self.mix.load += 1,
+            Instr::Vse { .. } => self.mix.store += 1,
+            Instr::Vsam(Vsam::MacZ { .. }) | Instr::Vsam(Vsam::Mac { .. }) => self.mix.mac += 1,
+            Instr::Vsam(Vsam::Wb { .. }) | Instr::Vsam(Vsam::LdAcc { .. }) => {
+                self.mix.partial += 1
+            }
+            Instr::Vsam(Vsam::St { .. }) => self.mix.store += 1,
+            Instr::VmaccVv { .. }
+            | Instr::VaddVv { .. }
+            | Instr::VmulVv { .. }
+            | Instr::VsraVi { .. } => self.mix.alu += 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::encode;
+
+    #[test]
+    fn classification() {
+        let mut vidu = Vidu::new();
+        for i in [
+            Instr::Addi { rd: 1, rs1: 0, imm12: 4 },
+            Instr::Vsam(Vsam::MacZ { acc: 0, vs1: 0, vs2: 8, bump: false }),
+            Instr::Vsam(Vsam::St { acc: 0, rs1: 10, relu: false }),
+            Instr::Vsam(Vsam::Wb { vd: 1, acc: 0, bump: false }),
+        ] {
+            let d = vidu.decode(encode(&i)).unwrap();
+            vidu.classify(&d);
+        }
+        assert_eq!(vidu.mix.scalar, 1);
+        assert_eq!(vidu.mix.mac, 1);
+        assert_eq!(vidu.mix.store, 1);
+        assert_eq!(vidu.mix.partial, 1);
+        assert_eq!(vidu.mix.total(), 4);
+    }
+
+    #[test]
+    fn bad_word_errors() {
+        let mut vidu = Vidu::new();
+        assert!(vidu.decode(0xFFFF_FFFF).is_err());
+    }
+}

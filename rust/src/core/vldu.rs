@@ -1,0 +1,242 @@
+//! VLDU — vector load unit (paper Sec. II-B): *"distributes data through
+//! broadcast or ordered allocation"*.
+//!
+//! - **Broadcast** (`vsald.b`): one DRAM stream of `vl` unified elements
+//!   is replicated into every lane's VRF slice — the paper's input-reuse
+//!   mechanism (one off-chip fetch feeds all lanes).
+//! - **Ordered** (`vsald.o` and standard `vle`): the stream is split into
+//!   `n_lanes` equal blocks, lane `l` receiving block `l` (weights: each
+//!   lane owns its TILE_C output channels).
+//!
+//! Timing: the transfer occupies the DRAM timeline for the transaction
+//! cycles and each lane's VRF write port for the landing cycles; the
+//! engine overlaps these with compute through the vreg scoreboard.
+
+use crate::arch::SpeedConfig;
+use crate::error::{Error, Result};
+use crate::lane::Lane;
+use crate::mem::Dram;
+
+/// Load-unit model (stateless; lanes/DRAM are passed per call).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Vldu;
+
+/// Outcome of a load's timing calculation.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadCost {
+    /// Cycles on the DRAM timeline.
+    pub dram_cycles: u64,
+    /// Cycles on each lane's VRF write port after data arrives.
+    pub vrf_cycles: u64,
+    /// DRAM bytes transferred.
+    pub dram_bytes: u64,
+    /// VRF bytes written per lane.
+    pub vrf_bytes_per_lane: u64,
+}
+
+impl Vldu {
+    /// Price a broadcast load of `bytes` (one DRAM stream, replicated).
+    pub fn broadcast_cost(
+        &self,
+        cfg: &SpeedConfig,
+        dram: &Dram,
+        bytes: usize,
+        pipelined: bool,
+    ) -> LoadCost {
+        let dram_cycles =
+            if pipelined { dram.stream_cycles(bytes) + 2 } else { dram.txn_cycles(bytes) };
+        let vrf_bw = cfg.vrf_bank_bytes * cfg.vrf_banks_per_lane;
+        LoadCost {
+            dram_cycles,
+            vrf_cycles: (bytes as f64 / vrf_bw as f64).ceil() as u64,
+            dram_bytes: bytes as u64,
+            vrf_bytes_per_lane: bytes as u64,
+        }
+    }
+
+    /// Price an ordered load of `bytes` total (split across lanes).
+    pub fn ordered_cost(
+        &self,
+        cfg: &SpeedConfig,
+        dram: &Dram,
+        bytes: usize,
+        pipelined: bool,
+    ) -> LoadCost {
+        let per_lane = bytes / cfg.n_lanes;
+        let dram_cycles =
+            if pipelined { dram.stream_cycles(bytes) + 2 } else { dram.txn_cycles(bytes) };
+        let vrf_bw = cfg.vrf_bank_bytes * cfg.vrf_banks_per_lane;
+        LoadCost {
+            dram_cycles,
+            vrf_cycles: (per_lane as f64 / vrf_bw as f64).ceil() as u64,
+            dram_bytes: bytes as u64,
+            vrf_bytes_per_lane: per_lane as u64,
+        }
+    }
+
+    /// Price a strided gather of `vl` elements of `elem_bytes` each:
+    /// the memory engine issues one beat per element, so the transfer is
+    /// beat-limited (`≥ vl` cycles) rather than bandwidth-limited.
+    pub fn strided_cost(
+        &self,
+        cfg: &SpeedConfig,
+        dram: &Dram,
+        vl: usize,
+        elem_bytes: usize,
+        broadcast: bool,
+        pipelined: bool,
+    ) -> LoadCost {
+        let bytes = vl * elem_bytes;
+        let beats = vl as u64;
+        let stream = dram.stream_cycles(bytes).max(beats);
+        let dram_cycles =
+            if pipelined { stream + 2 } else { stream + dram.txn_cycles(0) };
+        let vrf_bw = cfg.vrf_bank_bytes * cfg.vrf_banks_per_lane;
+        let per_lane = if broadcast { bytes } else { bytes / cfg.n_lanes };
+        LoadCost {
+            dram_cycles,
+            vrf_cycles: (per_lane as f64 / vrf_bw as f64).ceil() as u64,
+            dram_bytes: bytes as u64,
+            vrf_bytes_per_lane: per_lane as u64,
+        }
+    }
+
+    /// Functional strided gather: elements `stride_elems` apart in DRAM
+    /// land densely at every lane's `(vd, 0)` (broadcast) or block-split
+    /// across lanes (ordered).
+    #[allow(clippy::too_many_arguments)]
+    pub fn exec_strided(
+        &self,
+        lanes: &mut [Lane],
+        dram: &mut Dram,
+        addr: u32,
+        vd: u8,
+        offset: usize,
+        vl: usize,
+        elem_bytes: usize,
+        stride_elems: usize,
+        broadcast: bool,
+    ) -> Result<()> {
+        let mut dense = Vec::with_capacity(vl * elem_bytes);
+        for i in 0..vl {
+            let a = addr + (i * stride_elems * elem_bytes) as u32;
+            dense.extend_from_slice(dram.read(a, elem_bytes)?);
+        }
+        if broadcast {
+            for lane in lanes {
+                lane.vrf.write(vd, offset, &dense)?;
+            }
+        } else {
+            let n = lanes.len();
+            if dense.len() % n != 0 {
+                return Err(Error::sim(format!(
+                    "strided ordered load of {} B not divisible by {n} lanes",
+                    dense.len()
+                )));
+            }
+            let per = dense.len() / n;
+            for (l, lane) in lanes.iter_mut().enumerate() {
+                lane.vrf.write(vd, offset, &dense[l * per..(l + 1) * per])?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Functional broadcast: DRAM `[addr, addr+bytes)` → every lane's
+    /// `(vd, 0)`.
+    pub fn exec_broadcast(
+        &self,
+        lanes: &mut [Lane],
+        dram: &mut Dram,
+        addr: u32,
+        vd: u8,
+        offset: usize,
+        bytes: usize,
+    ) -> Result<()> {
+        let data = dram.read(addr, bytes)?.to_vec();
+        for lane in lanes {
+            lane.vrf.write(vd, offset, &data)?;
+        }
+        Ok(())
+    }
+
+    /// Functional ordered load: block `l` of the stream → lane `l`'s
+    /// `(vd, 0)`. `bytes` must divide evenly by the lane count (the
+    /// compiler pads streams to lane multiples).
+    pub fn exec_ordered(
+        &self,
+        lanes: &mut [Lane],
+        dram: &mut Dram,
+        addr: u32,
+        vd: u8,
+        offset: usize,
+        bytes: usize,
+    ) -> Result<()> {
+        let n = lanes.len();
+        if bytes % n != 0 {
+            return Err(Error::sim(format!(
+                "ordered load of {bytes} B not divisible by {n} lanes"
+            )));
+        }
+        let per = bytes / n;
+        let data = dram.read(addr, bytes)?.to_vec();
+        for (l, lane) in lanes.iter_mut().enumerate() {
+            lane.vrf.write(vd, offset, &data[l * per..(l + 1) * per])?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (SpeedConfig, Vec<Lane>, Dram) {
+        let cfg = SpeedConfig::default();
+        let lanes: Vec<Lane> = (0..cfg.n_lanes).map(|_| Lane::new(&cfg)).collect();
+        let dram = Dram::new(4096, cfg.dram_bw_bytes_per_cycle, cfg.dram_latency_cycles);
+        (cfg, lanes, dram)
+    }
+
+    #[test]
+    fn broadcast_replicates() {
+        let (_, mut lanes, mut dram) = setup();
+        let payload: Vec<u8> = (0..32).collect();
+        dram.poke(64, &payload).unwrap();
+        Vldu.exec_broadcast(&mut lanes, &mut dram, 64, 2, 0, 32).unwrap();
+        for lane in &lanes {
+            assert_eq!(lane.vrf.peek(2, 0, 32).unwrap(), &payload[..]);
+        }
+        assert_eq!(dram.bytes_read, 32); // read once — the reuse win
+    }
+
+    #[test]
+    fn ordered_distributes_blocks() {
+        let (_, mut lanes, mut dram) = setup();
+        let payload: Vec<u8> = (0..40).collect();
+        dram.poke(0, &payload).unwrap();
+        Vldu.exec_ordered(&mut lanes, &mut dram, 0, 1, 0, 40).unwrap();
+        for (l, lane) in lanes.iter().enumerate() {
+            assert_eq!(lane.vrf.peek(1, 0, 10).unwrap(), &payload[l * 10..(l + 1) * 10]);
+        }
+    }
+
+    #[test]
+    fn ordered_requires_lane_multiple() {
+        let (_, mut lanes, mut dram) = setup();
+        dram.poke(0, &[0; 10]).unwrap();
+        assert!(Vldu.exec_ordered(&mut lanes, &mut dram, 0, 1, 0, 10).is_err());
+    }
+
+    #[test]
+    fn pipelined_load_cheaper() {
+        let (cfg, _, dram) = setup();
+        let a = Vldu.broadcast_cost(&cfg, &dram, 128, false);
+        let b = Vldu.broadcast_cost(&cfg, &dram, 128, true);
+        assert!(b.dram_cycles < a.dram_cycles);
+        assert_eq!(a.dram_bytes, 128);
+        // ordered splits VRF landing across lanes
+        let o = Vldu.ordered_cost(&cfg, &dram, 128, true);
+        assert_eq!(o.vrf_bytes_per_lane, 32);
+    }
+}

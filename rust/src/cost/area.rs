@@ -1,0 +1,133 @@
+//! Analytical area model, anchored to the paper's synthesis (Fig. 5,
+//! Table I) and scaled structurally with the configuration.
+//!
+//! Scaling laws (relative to the default 4-lane / VLEN-4096 / 4×4-SAU
+//! reference whose absolute areas the paper publishes):
+//!
+//! - VRF ∝ bytes per lane;
+//! - SAU ∝ PE count (TILE_R × TILE_C; each PE's sixteen 4-bit multipliers
+//!   are the unit) + accumulator registers;
+//! - operand queues ∝ queue depth × element width ceiling;
+//! - operand requester ∝ TILE_R + TILE_C (one address generator per
+//!   stream) — the paper's requester contains the generator + arbiter;
+//! - sequencer/ALU/other ∝ lane datapath (constant per lane);
+//! - non-lane logic (VIDU, VLDU, interconnect) ∝ machine front end
+//!   (constant + lane count term).
+
+use super::calib;
+use crate::arch::SpeedConfig;
+
+/// Component-wise area of a SPEED instance, mm² (28 nm).
+#[derive(Debug, Clone, Copy)]
+pub struct AreaBreakdown {
+    /// Operand queues, all lanes.
+    pub op_queues: f64,
+    /// Operand requesters, all lanes.
+    pub op_requester: f64,
+    /// VRF, all lanes.
+    pub vrf: f64,
+    /// SAU cores (PEs + accumulators), all lanes.
+    pub sau: f64,
+    /// Sequencer + ALU + lane control, all lanes.
+    pub lane_other: f64,
+    /// VIDU + VLDU + interconnect.
+    pub frontend: f64,
+}
+
+impl AreaBreakdown {
+    /// Total area in mm².
+    pub fn total(&self) -> f64 {
+        self.op_queues + self.op_requester + self.vrf + self.sau + self.lane_other + self.frontend
+    }
+
+    /// Area of one lane (total lane area / lane count is not meaningful
+    /// here because the struct already sums over lanes).
+    pub fn lanes_total(&self) -> f64 {
+        self.op_queues + self.op_requester + self.vrf + self.sau + self.lane_other
+    }
+}
+
+/// Structural area model for an arbitrary SPEED configuration.
+pub fn speed_area_breakdown(cfg: &SpeedConfig) -> AreaBreakdown {
+    let reference = SpeedConfig::default();
+    let ref_lane_area = calib::SPEED_TOTAL_AREA_MM2 * calib::SPEED_LANE_AREA_FRACTION
+        / reference.n_lanes as f64;
+    let lane_scale = cfg.n_lanes as f64;
+
+    // per-component reference areas (one lane)
+    let ref_q = ref_lane_area * calib::LANE_SHARE_OP_QUEUES;
+    let ref_req = ref_lane_area * calib::LANE_SHARE_OP_REQUESTER;
+    let ref_vrf = ref_lane_area * calib::LANE_SHARE_VRF;
+    let ref_sau = ref_lane_area * calib::LANE_SHARE_SAU;
+    let ref_other = ref_lane_area * calib::LANE_SHARE_OTHER;
+
+    // structural ratios vs the reference
+    let vrf_ratio = cfg.vrf_bytes_per_lane() as f64 / reference.vrf_bytes_per_lane() as f64;
+    let pe_ratio = (cfg.tile_r * cfg.tile_c) as f64 / (reference.tile_r * reference.tile_c) as f64;
+    let acc_ratio = cfg.n_acc_banks as f64 / reference.n_acc_banks as f64;
+    let sau_ratio = 0.85 * pe_ratio + 0.15 * pe_ratio * acc_ratio;
+    let q_ratio = cfg.queue_depth as f64 / reference.queue_depth as f64;
+    let req_ratio =
+        (cfg.tile_r + cfg.tile_c) as f64 / (reference.tile_r + reference.tile_c) as f64;
+
+    let frontend_ref = calib::SPEED_TOTAL_AREA_MM2 * (1.0 - calib::SPEED_LANE_AREA_FRACTION);
+    // front end: half fixed, half scales with lane count (interconnect)
+    let frontend = frontend_ref * (0.5 + 0.5 * lane_scale / reference.n_lanes as f64);
+
+    AreaBreakdown {
+        op_queues: ref_q * q_ratio * lane_scale,
+        op_requester: ref_req * req_ratio * lane_scale,
+        vrf: ref_vrf * vrf_ratio * lane_scale,
+        sau: ref_sau * sau_ratio * lane_scale,
+        lane_other: ref_other * lane_scale,
+        frontend,
+    }
+}
+
+/// Ara's area (published constant; Ara's configuration is fixed in the
+/// matched comparison).
+pub fn ara_area_mm2() -> f64 {
+    calib::ARA_TOTAL_AREA_MM2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_reproduces_paper_total() {
+        let a = speed_area_breakdown(&SpeedConfig::default());
+        assert!(
+            (a.total() - calib::SPEED_TOTAL_AREA_MM2).abs() < 1e-9,
+            "total {} != 1.10",
+            a.total()
+        );
+        // Fig. 5a: lanes ≈ 90%
+        assert!((a.lanes_total() / a.total() - 0.90).abs() < 0.01);
+        // Fig. 5b shares
+        let lane = a.lanes_total();
+        assert!((a.sau / lane - 0.26).abs() < 0.01);
+        assert!((a.vrf / lane - 0.18).abs() < 0.01);
+        assert!((a.op_queues / lane - 0.25).abs() < 0.01);
+        assert!((a.op_requester / lane - 0.17).abs() < 0.01);
+    }
+
+    #[test]
+    fn area_scales_with_structure() {
+        let mut big = SpeedConfig::default();
+        big.tile_r = 8;
+        big.tile_c = 8;
+        let a0 = speed_area_breakdown(&SpeedConfig::default());
+        let a1 = speed_area_breakdown(&big);
+        // 4× PEs → ~4× SAU area, other components less affected
+        assert!(a1.sau / a0.sau > 3.5);
+        assert!((a1.vrf - a0.vrf).abs() < 1e-12);
+        assert!(a1.total() > a0.total());
+
+        let mut wide = SpeedConfig::default();
+        wide.n_lanes = 8;
+        wide.vlen_bits = 8192;
+        let a2 = speed_area_breakdown(&wide);
+        assert!(a2.lanes_total() / a0.lanes_total() > 1.9);
+    }
+}

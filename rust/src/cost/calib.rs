@@ -1,0 +1,88 @@
+//! Calibration constants — every number in this file is taken from the
+//! paper (Table I, Fig. 5) or from Ara's published results, and nothing
+//! else. They anchor the analytical area/energy models.
+
+/// SPEED total area at the default config (Table I), mm².
+pub const SPEED_TOTAL_AREA_MM2: f64 = 1.10;
+/// Fraction of SPEED's area occupied by the lanes (Fig. 5a).
+pub const SPEED_LANE_AREA_FRACTION: f64 = 0.90;
+/// Per-lane area shares (Fig. 5b).
+pub const LANE_SHARE_OP_QUEUES: f64 = 0.25;
+/// Operand requester share of a lane (Fig. 5b).
+pub const LANE_SHARE_OP_REQUESTER: f64 = 0.17;
+/// VRF share of a lane (Fig. 5b).
+pub const LANE_SHARE_VRF: f64 = 0.18;
+/// SAU share of a lane (Fig. 5b).
+pub const LANE_SHARE_SAU: f64 = 0.26;
+/// Remainder (sequencer, ALU, control) share of a lane (Fig. 5b).
+pub const LANE_SHARE_OTHER: f64 = 0.14;
+
+/// Ara total area (Table I), mm².
+pub const ARA_TOTAL_AREA_MM2: f64 = 0.44;
+/// Ara power (Table I), mW.
+pub const ARA_POWER_MW: f64 = 61.14;
+/// SPEED power (Table I), mW.
+pub const SPEED_POWER_MW: f64 = 215.16;
+
+/// Paper Table I: SPEED peak throughput, GOPS (16/8/4-bit).
+pub const SPEED_PEAK_GOPS: [f64; 3] = [34.89, 93.65, 287.41];
+/// Paper Table I: Ara peak throughput, GOPS (16/8-bit).
+pub const ARA_PEAK_GOPS: [f64; 2] = [6.82, 22.95];
+/// Paper Table I: SPEED peak area efficiency, GOPS/mm² (16/8/4-bit).
+pub const SPEED_PEAK_AREA_EFF: [f64; 3] = [31.72, 85.13, 261.28];
+/// Paper Table I: Ara peak area efficiency, GOPS/mm² (16/8-bit).
+pub const ARA_PEAK_AREA_EFF: [f64; 2] = [15.51, 52.16];
+/// Paper Table I: SPEED peak energy efficiency, GOPS/W (16/8/4-bit).
+pub const SPEED_PEAK_ENERGY_EFF: [f64; 3] = [162.15, 435.25, 1335.79];
+/// Paper Table I: Ara peak energy efficiency, GOPS/W (16/8-bit).
+pub const ARA_PEAK_ENERGY_EFF: [f64; 2] = [111.61, 373.68];
+
+/// Paper Fig. 3 headline ratios (GoogLeNet @16-bit).
+pub const FIG3_MIXED_OVER_FF: f64 = 1.88;
+/// Mixed over CF-only (Fig. 3).
+pub const FIG3_MIXED_OVER_CF: f64 = 1.38;
+/// Mixed over Ara (Fig. 3).
+pub const FIG3_MIXED_OVER_ARA: f64 = 3.53;
+
+/// Paper Fig. 4 headline ratios (benchmark average).
+pub const FIG4_SPEED_OVER_ARA_16B: f64 = 2.77;
+/// 8-bit average ratio (Fig. 4).
+pub const FIG4_SPEED_OVER_ARA_8B: f64 = 6.39;
+/// 4-bit SPEED average area efficiency, GOPS/mm² (Fig. 4).
+pub const FIG4_SPEED_4B_AVG_AREA_EFF: f64 = 94.6;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_shares_sum_to_one() {
+        let s = LANE_SHARE_OP_QUEUES
+            + LANE_SHARE_OP_REQUESTER
+            + LANE_SHARE_VRF
+            + LANE_SHARE_SAU
+            + LANE_SHARE_OTHER;
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table1_internally_consistent() {
+        // area efficiency = peak GOPS / area
+        for i in 0..3 {
+            let eff = SPEED_PEAK_GOPS[i] / SPEED_TOTAL_AREA_MM2;
+            assert!(
+                (eff - SPEED_PEAK_AREA_EFF[i]).abs() / SPEED_PEAK_AREA_EFF[i] < 0.02,
+                "SPEED area eff [{i}]"
+            );
+        }
+        for i in 0..2 {
+            let eff = ARA_PEAK_GOPS[i] / ARA_TOTAL_AREA_MM2;
+            assert!((eff - ARA_PEAK_AREA_EFF[i]).abs() / ARA_PEAK_AREA_EFF[i] < 0.02);
+        }
+        // energy efficiency = peak GOPS / power
+        for i in 0..3 {
+            let eff = SPEED_PEAK_GOPS[i] / (SPEED_POWER_MW / 1e3);
+            assert!((eff - SPEED_PEAK_ENERGY_EFF[i]).abs() / SPEED_PEAK_ENERGY_EFF[i] < 0.02);
+        }
+    }
+}

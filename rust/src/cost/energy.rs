@@ -1,0 +1,195 @@
+//! Analytical energy/power model (28 nm), event-based.
+//!
+//! `E = Σ e_mac(p)·MACs + e_dram·bytes + e_vrf·bytes + e_issue·instrs
+//!      + P_static·t`, with constants chosen so the default configuration
+//! lands on the paper's Table I energy-efficiency column at the published
+//! peak operating points (±15%); the decomposition (not a single fitted
+//! number) is what lets the ablation benches move energy when the
+//! configuration changes.
+
+use super::area::speed_area_breakdown;
+use super::calib;
+use crate::arch::{Precision, SpeedConfig};
+use crate::baseline::AraLayerResult;
+use crate::core::SimStats;
+use crate::pe::combine::nibble_products_per_mac;
+
+/// Event-energy constants, picojoules (28 nm, 0.9 V).
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyModel {
+    /// Energy of one 4-bit partial product (multiplier + reduction slice).
+    pub e_nibble_pj: f64,
+    /// Accumulator update overhead per MAC.
+    pub e_acc_pj: f64,
+    /// External memory access energy per byte (interface + DRAM core).
+    pub e_dram_pj_per_byte: f64,
+    /// VRF access energy per byte.
+    pub e_vrf_pj_per_byte: f64,
+    /// Front-end energy per issued instruction (fetch + decode + issue).
+    pub e_issue_pj: f64,
+    /// Static/leakage + clock-tree power at the reference area, mW.
+    pub p_static_mw: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        EnergyModel {
+            e_nibble_pj: 0.34,
+            e_acc_pj: 0.30,
+            e_dram_pj_per_byte: 20.0,
+            e_vrf_pj_per_byte: 1.0,
+            e_issue_pj: 8.0,
+            p_static_mw: 40.0,
+        }
+    }
+}
+
+impl EnergyModel {
+    /// Energy of one `p`-bit MAC on the nibble array, pJ.
+    pub fn e_mac_pj(&self, p: Precision) -> f64 {
+        self.e_nibble_pj * nibble_products_per_mac(p) as f64 + self.e_acc_pj
+    }
+}
+
+/// Total energy of a SPEED run, joules.
+pub fn energy_joules(
+    model: &EnergyModel,
+    cfg: &SpeedConfig,
+    stats: &SimStats,
+    p: Precision,
+) -> f64 {
+    let secs = stats.seconds(cfg.freq_mhz);
+    let area_ratio = speed_area_breakdown(cfg).total() / calib::SPEED_TOTAL_AREA_MM2;
+    let dynamic_pj = model.e_mac_pj(p) * stats.macs as f64
+        + model.e_dram_pj_per_byte * (stats.dram_read + stats.dram_write) as f64
+        + model.e_vrf_pj_per_byte * (stats.vrf_read + stats.vrf_write) as f64
+        + model.e_issue_pj * stats.instrs.total() as f64;
+    dynamic_pj * 1e-12 + model.p_static_mw * 1e-3 * area_ratio * secs
+}
+
+/// Average power of a SPEED run, milliwatts.
+pub fn power_mw(model: &EnergyModel, cfg: &SpeedConfig, stats: &SimStats, p: Precision) -> f64 {
+    let secs = stats.seconds(cfg.freq_mhz);
+    if secs == 0.0 {
+        return 0.0;
+    }
+    energy_joules(model, cfg, stats, p) / secs * 1e3
+}
+
+/// Energy efficiency of a SPEED run, GOPS/W.
+pub fn gops_per_watt(
+    model: &EnergyModel,
+    cfg: &SpeedConfig,
+    stats: &SimStats,
+    p: Precision,
+) -> f64 {
+    let e = energy_joules(model, cfg, stats, p);
+    if e == 0.0 {
+        return 0.0;
+    }
+    2.0 * stats.useful_macs as f64 / e / 1e9
+}
+
+/// Ara event-energy constants (64-bit sliced multiplier datapath; less
+/// efficient per MAC than the dedicated nibble array, per Table I).
+#[derive(Debug, Clone, Copy)]
+pub struct AraEnergyModel {
+    /// MAC energy at 16-bit, pJ.
+    pub e_mac16_pj: f64,
+    /// MAC energy at 8-bit, pJ.
+    pub e_mac8_pj: f64,
+    /// DRAM energy per byte, pJ (same memory system as SPEED).
+    pub e_dram_pj_per_byte: f64,
+    /// Front-end energy per vector instruction, pJ.
+    pub e_issue_pj: f64,
+    /// Static power, mW.
+    pub p_static_mw: f64,
+}
+
+impl Default for AraEnergyModel {
+    fn default() -> Self {
+        AraEnergyModel {
+            e_mac16_pj: 10.0,
+            e_mac8_pj: 3.6,
+            e_dram_pj_per_byte: 20.0,
+            e_issue_pj: 10.0,
+            p_static_mw: 18.0,
+        }
+    }
+}
+
+/// Energy of an Ara layer run, joules.
+pub fn ara_energy_joules(
+    model: &AraEnergyModel,
+    freq_mhz: f64,
+    r: &AraLayerResult,
+    p: Precision,
+) -> f64 {
+    let secs = r.cycles as f64 / (freq_mhz * 1e6);
+    let e_mac = match p {
+        Precision::Int16 => model.e_mac16_pj,
+        _ => model.e_mac8_pj,
+    };
+    let dynamic_pj = e_mac * r.useful_macs as f64
+        + model.e_dram_pj_per_byte * (r.dram_read + r.dram_write) as f64
+        + model.e_issue_pj * r.v_instrs as f64;
+    dynamic_pj * 1e-12 + model.p_static_mw * 1e-3 * secs
+}
+
+/// Energy efficiency of an Ara layer run, GOPS/W.
+pub fn ara_gops_per_watt(
+    model: &AraEnergyModel,
+    freq_mhz: f64,
+    r: &AraLayerResult,
+    p: Precision,
+) -> f64 {
+    let e = ara_energy_joules(model, freq_mhz, r, p);
+    if e == 0.0 {
+        return 0.0;
+    }
+    2.0 * r.useful_macs as f64 / e / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_energy_ordering() {
+        let m = EnergyModel::default();
+        // 16-bit MAC uses all 16 multipliers; 4-bit uses one.
+        assert!(m.e_mac_pj(Precision::Int16) > 3.0 * m.e_mac_pj(Precision::Int8));
+        assert!(m.e_mac_pj(Precision::Int8) > 2.0 * m.e_mac_pj(Precision::Int4));
+    }
+
+    #[test]
+    fn efficiency_improves_at_lower_precision() {
+        // synthetic compute-dominated run: same cycles, MACs scale with
+        // precision parallelism
+        let cfg = SpeedConfig::default();
+        let m = EnergyModel::default();
+        let mk = |p: Precision| {
+            let mut s = SimStats::default();
+            s.cycles = 1_000_000;
+            s.macs = (cfg.macs_per_cycle(p) as u64) * s.cycles / 2;
+            s.useful_macs = s.macs;
+            s.dram_read = 4 << 20;
+            s.vrf_read = 64 << 20;
+            s.instrs.mac = 10_000;
+            gops_per_watt(&m, &cfg, &s, p)
+        };
+        let (e16, e8, e4) = (mk(Precision::Int16), mk(Precision::Int8), mk(Precision::Int4));
+        assert!(e8 > 1.5 * e16, "8b {e8:.0} vs 16b {e16:.0}");
+        assert!(e4 > 1.5 * e8, "4b {e4:.0} vs 8b {e8:.0}");
+        // same order of magnitude as Table I
+        assert!((50.0..500.0).contains(&e16), "e16 = {e16:.0}");
+        assert!((400.0..4000.0).contains(&e4), "e4 = {e4:.0}");
+    }
+
+    #[test]
+    fn power_zero_when_no_time() {
+        let cfg = SpeedConfig::default();
+        let m = EnergyModel::default();
+        assert_eq!(power_mw(&m, &cfg, &SimStats::default(), Precision::Int8), 0.0);
+    }
+}

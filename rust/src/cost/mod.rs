@@ -1,0 +1,16 @@
+//! Cost models: 28 nm area and energy, calibrated to the paper's
+//! published synthesis results, plus a roofline cross-check.
+//!
+//! These replace the Design Compiler + TSMC 28 nm flow we cannot run
+//! (see DESIGN.md, hardware substitution table). Absolute anchors come
+//! from Table I and Fig. 5; *relative* movement under configuration
+//! changes comes from structural scaling.
+
+pub mod area;
+pub mod calib;
+pub mod energy;
+pub mod roofline;
+
+pub use area::{ara_area_mm2, speed_area_breakdown, AreaBreakdown};
+pub use energy::{energy_joules, EnergyModel};
+pub use roofline::roofline_gops;

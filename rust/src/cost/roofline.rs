@@ -1,0 +1,40 @@
+//! Roofline cross-check: an upper bound on achievable GOPS for a layer,
+//! used to sanity-check the cycle-accurate results (the simulator must
+//! never beat the roofline) and to report "fraction of roofline" in the
+//! §Perf log.
+
+use crate::arch::{Precision, SpeedConfig};
+use crate::dataflow::ConvLayer;
+
+/// Roofline bound in GOPS: `min(compute peak, BW × arithmetic intensity)`
+/// with the *minimum possible* DRAM traffic (each tensor moved once).
+pub fn roofline_gops(cfg: &SpeedConfig, layer: &ConvLayer, p: Precision) -> f64 {
+    let peak = cfg.peak_gops(p);
+    let bits = p.bits() as f64;
+    let min_bytes = (layer.input_values() as f64 + layer.weight_values() as f64) * bits / 8.0
+        + (layer.cout * layer.ho() * layer.wo()) as f64 * (bits / 8.0).max(1.0);
+    let ai = layer.ops() as f64 / min_bytes; // ops per byte
+    let bw_gbps = cfg.dram_bw_bytes_per_cycle * cfg.freq_mhz * 1e6 / 1e9;
+    peak.min(ai * bw_gbps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_bound_for_deep_layers() {
+        let cfg = SpeedConfig::default();
+        let deep = ConvLayer::new("d", 512, 512, 14, 14, 3, 1, 1);
+        // high arithmetic intensity → compute-bound at 16-bit
+        assert_eq!(roofline_gops(&cfg, &deep, Precision::Int16), cfg.peak_gops(Precision::Int16));
+    }
+
+    #[test]
+    fn memory_bound_for_shallow_1x1_at_4bit(){
+        let cfg = SpeedConfig::default();
+        let shallow = ConvLayer::new("s", 16, 16, 112, 112, 1, 1, 0);
+        let r = roofline_gops(&cfg, &shallow, Precision::Int4);
+        assert!(r < cfg.peak_gops(Precision::Int4), "{r} should be BW-bound");
+    }
+}

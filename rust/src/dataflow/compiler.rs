@@ -1,0 +1,324 @@
+//! Conv → customized-instruction-stream compiler.
+//!
+//! Emits a complete program (scalar address synthesis + `VSACFG`/`VSALD`/
+//! `VSAM`) implementing one convolution layer under the FF or CF strategy
+//! resolved by the [`TilingPlan`]. The generated stream is what the
+//! cycle engine executes — every cost the simulator reports comes from
+//! real instructions, not closed-form layer formulas.
+//!
+//! Loop nest (shared skeleton, strategy-dependent details):
+//!
+//! ```text
+//! for ct in output-channel passes:
+//!   [weights resident? load all chunk blocks once per pass]
+//!   for rt in row tiles:
+//!     for xb in spatial batches:
+//!       for chunk in channel chunks:
+//!         [weights streamed? load the (ct,chunk) block]
+//!         load input patch (CF: deep rows; FF: strided single-group)
+//!         for x in batch:
+//!           [FF, chunk>0: vsam.ldacc partials]
+//!           ONE vsam.mac[z] covering the K×K window
+//!             (steps = K²·c_c, run-decomposed by VSACFG.runcfg)
+//!           [FF, chunk<last: vsam.wb partials]
+//!       for x in batch: vsam.st (requant drain)   [CF]
+//! ```
+
+use super::layer::ConvLayer;
+use super::tiling::TilingPlan;
+use crate::arch::{Precision, SpeedConfig};
+use crate::error::Result;
+use crate::isa::instr::{Instr, LoadMode, Vsacfg, Vsam};
+use crate::isa::program::{Builder, Program};
+use crate::isa::Strategy;
+
+/// A compiled layer: the instruction stream plus its DRAM image map.
+#[derive(Debug, Clone)]
+pub struct CompiledConv {
+    /// Encoded instruction stream.
+    pub program: Program,
+    /// The tiling it implements.
+    pub plan: TilingPlan,
+    /// Base address of the ifmap image.
+    pub ifmap_base: u32,
+    /// Base address of the weight schedule image.
+    pub w_base: u32,
+    /// Base address of the ofmap image.
+    pub out_base: u32,
+    /// Total DRAM bytes the images occupy (allocate at least this).
+    pub dram_bytes: usize,
+    /// Nominal useful MACs of the layer.
+    pub useful_macs: u64,
+}
+
+/// Compile `layer` at `precision` under `strategy` (FF or CF).
+///
+/// `shift`/`relu` configure the fused requant on drain. Images are laid
+/// out at fixed offsets from 64 (ifmap, weights, ofmap in that order).
+pub fn compile_conv(
+    cfg: &SpeedConfig,
+    layer: &ConvLayer,
+    precision: Precision,
+    strategy: Strategy,
+    shift: u8,
+    relu: bool,
+) -> Result<CompiledConv> {
+    let plan = TilingPlan::new(cfg, layer, precision, strategy)?;
+    let k = layer.k;
+    let s = layer.stride;
+    let eb = plan.eb;
+    let align = |a: usize| (a + 63) & !63;
+    let ifmap_base = 64usize;
+    let w_base = align(ifmap_base + plan.ifmap_image_bytes());
+    let out_base = align(w_base + plan.weight_image_bytes());
+    let dram_bytes = align(out_base + plan.ofmap_image_bytes());
+
+    let mut b = Program::builder();
+    // rough codegen size hint: ~6 instructions per (tile, chunk) plus
+    // loads — avoids repeated Vec growth during emission.
+    b.reserve(plan.n_ct * plan.n_rt * plan.n_xb * plan.chunks * (plan.w_b * 6 + 40));
+    // --- layer-wide configuration ---
+    b.vsacfg(Vsacfg::Main {
+        precision,
+        strategy,
+        tile_h: plan.tile_h as u8,
+    });
+    b.emit(Instr::Vsacfg(Vsacfg::Shift { uimm5: shift }));
+    // A-row stride: one output row down = S (padded) patch rows; the
+    // x-sweep auto-increment is one output column = S · c_c elements.
+    let aincr = (s * plan.c_c * eb) as u16;
+    b.set_rowstride((s * plan.patch_row_elems_pad) as u32, aincr);
+    // Run decomposition: one VSAM covers the K×K window — K runs of
+    // (kx × c_c) contiguous elements, one (padded) patch row apart.
+    b.set_runcfg(plan.patch_row_elems_pad as u32, (k * plan.c_c) as u16);
+    b.set_outstride((plan.wo_alloc * plan.out_vb) as u32);
+    b.set_cstride((plan.ho_alloc * plan.wo_alloc * plan.out_vb) as u32);
+
+    let vsam_steps = (k * k * plan.c_c) as u32;
+    let row_bytes = plan.patch_row_bytes();
+    let cpp = cfg.couts_per_pass();
+    let banks = cfg.n_acc_banks;
+
+    // weight block vreg for chunk slot
+    let wreg = |chunk_slot: usize| -> u8 {
+        plan.v_weights + (chunk_slot * plan.block_vregs) as u8
+    };
+
+    // emit the weight load for one (ct, chunk) into slot `slot`
+    let emit_weight_loads =
+        |b: &mut Builder, plan: &TilingPlan, ct: usize, chunk: usize, slot: usize| {
+            let addr = w_base + plan.weight_block_elem(ct, chunk) * eb;
+            b.set_woffset(0);
+            b.set_vl(plan.wimg_block_elems as u32, 8, 8);
+            b.vsald_ordered(wreg(slot), addr as u32);
+        };
+
+    // emit the input patch loads for (rt, xb, chunk)
+    let emit_patch_loads = |b: &mut Builder, plan: &TilingPlan, rt: usize, xb: usize, chunk: usize| {
+        let y0 = rt * cfg.tile_r * s;
+        let x0 = xb * plan.w_b * s;
+        if plan.c_c == plan.cg {
+            b.set_vl(plan.patch_row_elems as u32, 16, 8);
+        } else if plan.c_c == 1 {
+            b.set_vl(plan.patch_cols as u32, 16, 8);
+        } else {
+            b.set_vl(plan.c_c as u32, 16, 8);
+        }
+        for prow in 0..plan.tile_h {
+            let y = y0 + prow;
+            if plan.c_c == plan.cg {
+                // full channel depth: one contiguous burst per row
+                b.set_woffset((prow * row_bytes) as u32);
+                b.vsald_bcast(plan.v_patch, (ifmap_base + plan.ifmap_elem(y, x0, 0) * eb) as u32);
+            } else if plan.c_c == 1 {
+                // FF single group: strided gather across columns
+                b.set_woffset((prow * row_bytes) as u32);
+                let addr = ifmap_base + plan.ifmap_elem(y, x0, chunk) * eb;
+                b.li(29, addr as u32);
+                b.emit(Instr::Vsald {
+                    vd: plan.v_patch,
+                    rs1: 29,
+                    mode: LoadMode::BroadcastStrided(plan.cg as u16),
+                });
+            } else {
+                // partial depth: one short burst per column
+                for pcol in 0..plan.patch_cols {
+                    b.set_woffset((prow * row_bytes + pcol * plan.c_c * eb) as u32);
+                    let addr =
+                        ifmap_base + plan.ifmap_elem(y, x0 + pcol, chunk * plan.c_c) * eb;
+                    b.vsald_bcast(plan.v_patch, addr as u32);
+                }
+            }
+        }
+    };
+
+    let ff = strategy == Strategy::FeatureFirst;
+    for ct in 0..plan.n_ct {
+        if plan.weights_resident {
+            for chunk in 0..plan.chunks {
+                emit_weight_loads(&mut b, &plan, ct, chunk, chunk);
+            }
+        }
+        for rt in 0..plan.n_rt {
+            for xb in 0..plan.n_xb {
+                for chunk in 0..plan.chunks {
+                    if !plan.weights_resident {
+                        emit_weight_loads(&mut b, &plan, ct, chunk, 0);
+                    }
+                    emit_patch_loads(&mut b, &plan, rt, xb, chunk);
+                    let slot = if plan.weights_resident { chunk } else { 0 };
+                    b.set_vl(vsam_steps, 16, 8);
+                    // reset the x-sweep and partial counters for the batch
+                    b.set_aoffset(0);
+                    b.set_woffset(0);
+                    for xl in 0..plan.w_b {
+                        let bank = (xl % banks) as u8;
+                        if ff && chunk > 0 {
+                            b.emit(Instr::Vsam(Vsam::LdAcc {
+                                acc: bank,
+                                vs1: plan.v_partials,
+                                bump: true,
+                            }));
+                        }
+                        // auto-bumping MAC: aoffset advances one column
+                        b.vsam_mac(bank, plan.v_patch, wreg(slot), chunk == 0, true);
+                        if ff && chunk + 1 < plan.chunks {
+                            // spill partials for the next channel stage
+                            b.emit(Instr::Vsam(Vsam::Wb {
+                                vd: plan.v_partials,
+                                acc: bank,
+                                bump: true,
+                            }));
+                        } else if ff && chunk + 1 == plan.chunks {
+                            // FF banks rotate within a batch (w_b > banks):
+                            // drain immediately on the final stage, before
+                            // the bank is reused by xl + banks.
+                            let ox = xb * plan.w_b + xl;
+                            let addr =
+                                out_base + plan.ofmap_byte(ct * cpp, rt * cfg.tile_r, ox);
+                            b.vsam_store(bank, addr as u32, relu);
+                        }
+                    }
+                }
+                if !ff {
+                    // CF: banks held per-x results across the chunk loop
+                    // (w_b ≤ n_acc_banks); drain the whole batch now.
+                    for xl in 0..plan.w_b {
+                        let bank = (xl % banks) as u8;
+                        let ox = xb * plan.w_b + xl;
+                        let addr =
+                            out_base + plan.ofmap_byte(ct * cpp, rt * cfg.tile_r, ox);
+                        b.vsam_store(bank, addr as u32, relu);
+                    }
+                }
+            }
+        }
+    }
+
+    Ok(CompiledConv {
+        program: b.build(),
+        plan,
+        ifmap_base: ifmap_base as u32,
+        w_base: w_base as u32,
+        out_base: out_base as u32,
+        dram_bytes,
+        useful_macs: layer.macs(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::decode;
+
+    fn cfg() -> SpeedConfig {
+        SpeedConfig::default()
+    }
+
+    #[test]
+    fn compiles_and_decodes() {
+        let layer = ConvLayer::new("t", 8, 16, 10, 10, 3, 1, 1);
+        for strat in [Strategy::FeatureFirst, Strategy::ChannelFirst] {
+            let cc = compile_conv(&cfg(), &layer, Precision::Int8, strat, 4, true).unwrap();
+            assert!(!cc.program.is_empty());
+            // every word decodes
+            for &w in cc.program.words() {
+                decode(w).unwrap();
+            }
+            assert_eq!(cc.useful_macs, layer.macs());
+            assert!(cc.dram_bytes > 0);
+        }
+    }
+
+    #[test]
+    fn cf_emits_no_partial_traffic() {
+        let layer = ConvLayer::new("t", 32, 16, 10, 10, 3, 1, 1);
+        let cc =
+            compile_conv(&cfg(), &layer, Precision::Int8, Strategy::ChannelFirst, 0, false)
+                .unwrap();
+        let instrs = cc.program.decode_all().unwrap();
+        assert!(
+            !instrs
+                .iter()
+                .any(|i| matches!(i, Instr::Vsam(Vsam::Wb { .. }) | Instr::Vsam(Vsam::LdAcc { .. }))),
+            "CF must accumulate in the SAU"
+        );
+    }
+
+    #[test]
+    fn ff_emits_partial_spills_for_deep_inputs() {
+        let layer = ConvLayer::new("t", 64, 16, 10, 10, 3, 1, 1);
+        let cc =
+            compile_conv(&cfg(), &layer, Precision::Int16, Strategy::FeatureFirst, 0, false)
+                .unwrap();
+        let instrs = cc.program.decode_all().unwrap();
+        let wb = instrs.iter().filter(|i| matches!(i, Instr::Vsam(Vsam::Wb { .. }))).count();
+        let ld =
+            instrs.iter().filter(|i| matches!(i, Instr::Vsam(Vsam::LdAcc { .. }))).count();
+        assert!(wb > 0 && ld > 0, "FF with many chunks must spill partials");
+    }
+
+    #[test]
+    fn mac_and_store_counts_match_tiling() {
+        let layer = ConvLayer::new("t", 16, 16, 8, 8, 1, 1, 0);
+        let cc =
+            compile_conv(&cfg(), &layer, Precision::Int8, Strategy::ChannelFirst, 0, false)
+                .unwrap();
+        let instrs = cc.program.decode_all().unwrap();
+        let macs = instrs
+            .iter()
+            .filter(|i| matches!(i, Instr::Vsam(Vsam::Mac { .. }) | Instr::Vsam(Vsam::MacZ { .. })))
+            .count();
+        let stores =
+            instrs.iter().filter(|i| matches!(i, Instr::Vsam(Vsam::St { .. }))).count();
+        let p = &cc.plan;
+        assert_eq!(macs, p.n_ct * p.n_rt * p.n_xb * p.chunks * p.w_b);
+        assert_eq!(stores, p.n_ct * p.n_rt * p.n_xb * p.w_b);
+    }
+
+    #[test]
+    fn vl_never_exceeds_vlmax() {
+        // e16/m8 vlmax = 4096*8/16 = 2048
+        for (cin, k, prec) in
+            [(832, 1, Precision::Int16), (512, 3, Precision::Int4), (3, 7, Precision::Int8)]
+        {
+            let layer = ConvLayer::new("t", cin, 32, 14, 14, k, 1, k / 2);
+            for strat in [Strategy::FeatureFirst, Strategy::ChannelFirst] {
+                let cc = compile_conv(&cfg(), &layer, prec, strat, 0, false).unwrap();
+                let mut vl = 0u32;
+                for i in cc.program.decode_all().unwrap() {
+                    if let Instr::Addi { rd: 31, imm12, .. } = i {
+                        vl = imm12 as u32;
+                    }
+                    if let Instr::Lui { rd: 31, imm20 } = i {
+                        vl = (imm20 as u32) << 12;
+                    }
+                    if let Instr::Vsetvli { vtype, .. } = i {
+                        let vlmax = 4096 * vtype.lmul / vtype.sew_bits;
+                        assert!(vl <= vlmax, "vl {vl} exceeds VLMAX {vlmax} ({strat:?} {prec})");
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! Convolutional layer description.
+
+use crate::arch::Precision;
+
+/// One 2-D convolution layer (NCHW, square kernel — all layers in the
+/// paper's benchmark set are square).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConvLayer {
+    /// Layer name (e.g. `"conv3a_1x1"`), used in per-layer reports.
+    pub name: String,
+    /// Input channels.
+    pub cin: usize,
+    /// Output channels.
+    pub cout: usize,
+    /// Input height.
+    pub h: usize,
+    /// Input width.
+    pub w: usize,
+    /// Kernel size (K×K).
+    pub k: usize,
+    /// Spatial stride.
+    pub stride: usize,
+    /// Spatial zero padding (each side).
+    pub pad: usize,
+}
+
+impl ConvLayer {
+    /// Construct a layer.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: &str,
+        cin: usize,
+        cout: usize,
+        h: usize,
+        w: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Self {
+        ConvLayer { name: name.to_string(), cin, cout, h, w, k, stride, pad }
+    }
+
+    /// Output height.
+    pub fn ho(&self) -> usize {
+        (self.h + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    /// Output width.
+    pub fn wo(&self) -> usize {
+        (self.w + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    /// Nominal MAC count (the paper's GOP accounting: 2 ops per MAC).
+    pub fn macs(&self) -> u64 {
+        (self.ho() * self.wo() * self.cout * self.cin * self.k * self.k) as u64
+    }
+
+    /// Nominal operation count (2 × MACs).
+    pub fn ops(&self) -> u64 {
+        2 * self.macs()
+    }
+
+    /// Input feature-map size in values.
+    pub fn input_values(&self) -> usize {
+        self.cin * self.h * self.w
+    }
+
+    /// Weight tensor size in values.
+    pub fn weight_values(&self) -> usize {
+        self.cout * self.cin * self.k * self.k
+    }
+
+    /// Bytes of one input value at precision `p` (fractional for int4 is
+    /// rounded up at the image level, not here).
+    pub fn arithmetic_intensity(&self, p: Precision) -> f64 {
+        let bytes = (self.input_values() + self.weight_values()) as f64 * p.bits() as f64 / 8.0;
+        self.macs() as f64 * 2.0 / bytes
+    }
+}
+
+impl std::fmt::Display for ConvLayer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}: {}x{}x{} -> {} K={} s={} p={}",
+            self.name, self.cin, self.h, self.w, self.cout, self.k, self.stride, self.pad
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry() {
+        let l = ConvLayer::new("t", 64, 128, 56, 56, 3, 1, 1);
+        assert_eq!(l.ho(), 56);
+        assert_eq!(l.wo(), 56);
+        assert_eq!(l.macs(), 56 * 56 * 128 * 64 * 9);
+        let l2 = ConvLayer::new("s2", 3, 64, 224, 224, 7, 2, 3);
+        assert_eq!(l2.ho(), 112);
+        assert_eq!(l2.wo(), 112);
+    }
+
+    #[test]
+    fn intensity_grows_with_kernel() {
+        let small = ConvLayer::new("a", 64, 64, 28, 28, 1, 1, 0);
+        let big = ConvLayer::new("b", 64, 64, 28, 28, 3, 1, 1);
+        assert!(
+            big.arithmetic_intensity(Precision::Int8)
+                > small.arithmetic_intensity(Precision::Int8)
+        );
+    }
+}

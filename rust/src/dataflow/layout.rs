@@ -1,0 +1,189 @@
+//! DRAM image packers for the scheduled layouts the compiler targets.
+//!
+//! - **ifmap image**: `[h_alloc][w_alloc][CG]` unified elements with the
+//!   spatial zero-pad ring and tile-tail padding materialized (hardware
+//!   zero-skipping is out of scope; documented in DESIGN.md).
+//! - **weight image**: reordered *weight schedule*: one contiguous block
+//!   per `(ct, chunk, ky)` holding `[couts-per-pass (lane-major)][kx][c_c]`
+//!   elements, so every weight `VSALD` is a single ordered burst. Weight
+//!   reordering happens at model-load time (standard practice), never on
+//!   the request path.
+//! - **ofmap image**: `[couts_alloc][ho_alloc][wo_alloc]` plain values,
+//!   `out_vb` bytes each.
+
+use super::layer::ConvLayer;
+use super::tiling::TilingPlan;
+use crate::arch::precision::pack_operands;
+use crate::arch::SpeedConfig;
+use crate::error::{Error, Result};
+use crate::mem::{Dram, Tensor};
+
+/// Pack an input tensor `[Cin][H][W]` into the plan's ifmap image.
+pub fn pack_ifmap_image(t: &Tensor, layer: &ConvLayer, plan: &TilingPlan) -> Result<Vec<u8>> {
+    let [cin, h, w]: [usize; 3] = t
+        .shape
+        .as_slice()
+        .try_into()
+        .map_err(|_| Error::config("ifmap must be [Cin][H][W]"))?;
+    if cin != layer.cin || h != layer.h || w != layer.w {
+        return Err(Error::config(format!("ifmap shape mismatch for {layer}")));
+    }
+    let p = plan.precision;
+    let g = p.group();
+    let mut ops = vec![0i64; plan.h_alloc * plan.w_alloc * plan.cg * g];
+    for c in 0..cin {
+        for y in 0..h {
+            for x in 0..w {
+                let el = plan.ifmap_elem(y + layer.pad, x + layer.pad, c / g);
+                ops[el * g + c % g] = t.at(&[c, y, x]);
+            }
+        }
+    }
+    pack_operands(p, &ops)
+}
+
+/// Pack a weight tensor `[Cout][Cin][K][K]` into the weight schedule.
+pub fn pack_weight_image(
+    t: &Tensor,
+    layer: &ConvLayer,
+    plan: &TilingPlan,
+    cfg: &SpeedConfig,
+) -> Result<Vec<u8>> {
+    let [cout, cin, kh, kw]: [usize; 4] = t
+        .shape
+        .as_slice()
+        .try_into()
+        .map_err(|_| Error::config("weights must be [Cout][Cin][Kh][Kw]"))?;
+    if cout != layer.cout || cin != layer.cin || kh != layer.k || kw != layer.k {
+        return Err(Error::config(format!("weight shape mismatch for {layer}")));
+    }
+    let p = plan.precision;
+    let g = p.group();
+    let k = layer.k;
+    let cpp = cfg.couts_per_pass();
+    let n_blocks = plan.n_ct * plan.chunks;
+    let mut ops = vec![0i64; n_blocks * plan.wimg_block_elems * g];
+    for ct in 0..plan.n_ct {
+        for chunk in 0..plan.chunks {
+            let blk = plan.weight_block_elem(ct, chunk);
+            for j in 0..cpp {
+                let co = ct * cpp + j;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        for ci in 0..plan.c_c {
+                            let cgi = chunk * plan.c_c + ci;
+                            for gi in 0..g {
+                                let c = cgi * g + gi;
+                                let el = blk + ((j * k + ky) * k + kx) * plan.c_c + ci;
+                                let v = if co < cout && c < cin && cgi < plan.cg {
+                                    t.at(&[co, c, ky, kx])
+                                } else {
+                                    0
+                                };
+                                ops[el * g + gi] = v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    pack_operands(p, &ops)
+}
+
+/// Extract the logical output tensor `[Cout][Ho][Wo]` from the ofmap
+/// image in DRAM (skipping tile-tail padding).
+pub fn extract_ofmap(
+    dram: &Dram,
+    out_base: u32,
+    layer: &ConvLayer,
+    plan: &TilingPlan,
+) -> Result<Tensor> {
+    let (ho, wo) = (layer.ho(), layer.wo());
+    let mut out = Tensor::zeros(&[layer.cout, ho, wo]);
+    let vb = plan.out_vb;
+    for co in 0..layer.cout {
+        for oy in 0..ho {
+            let row = dram.peek(
+                out_base + plan.ofmap_byte(co, oy, 0) as u32,
+                wo * vb,
+            )?;
+            for ox in 0..wo {
+                let v = match vb {
+                    1 => row[ox] as i8 as i64,
+                    _ => i16::from_le_bytes([row[ox * 2], row[ox * 2 + 1]]) as i64,
+                };
+                *out.at_mut(&[co, oy, ox]) = v;
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Precision;
+    use crate::arch::precision::unpack_operands;
+    use crate::isa::Strategy;
+    use crate::testutil::Prng;
+
+    #[test]
+    fn ifmap_image_places_padding_ring() {
+        let cfg = SpeedConfig::default();
+        let layer = ConvLayer::new("t", 4, 5, 5, 5, 3, 1, 1);
+        let plan =
+            TilingPlan::new(&cfg, &layer, Precision::Int8, Strategy::ChannelFirst).unwrap();
+        let mut rng = Prng::new(1);
+        let t = Tensor::random(&[4, 5, 5], Precision::Int8, &mut rng);
+        let img = pack_ifmap_image(&t, &layer, &plan).unwrap();
+        assert_eq!(img.len(), plan.ifmap_image_bytes());
+        let ops = unpack_operands(Precision::Int8, &img);
+        let g = 4;
+        // (0,0) of the image is the pad ring → zeros
+        assert!(ops[..plan.cg * g].iter().all(|&v| v == 0));
+        // (pad, pad) holds input (0,0)
+        let el = plan.ifmap_elem(1, 1, 0);
+        assert_eq!(ops[el * g], t.at(&[0, 0, 0]));
+        assert_eq!(ops[el * g + 3], t.at(&[3, 0, 0]));
+    }
+
+    #[test]
+    fn weight_image_block_structure() {
+        let cfg = SpeedConfig::default();
+        let layer = ConvLayer::new("t", 8, 32, 8, 8, 3, 1, 1);
+        let plan =
+            TilingPlan::new(&cfg, &layer, Precision::Int16, Strategy::ChannelFirst).unwrap();
+        let mut rng = Prng::new(2);
+        let t = Tensor::random(&[32, 8, 3, 3], Precision::Int16, &mut rng);
+        let img = pack_weight_image(&t, &layer, &plan, &cfg).unwrap();
+        assert_eq!(img.len(), plan.weight_image_bytes());
+        let ops = unpack_operands(Precision::Int16, &img);
+        // block (ct=1, chunk=0), cout j=5, ky=2, kx=1, ci=0:
+        let blk = plan.weight_block_elem(1, 0);
+        let el = blk + ((5 * 3 + 2) * 3 + 1) * plan.c_c;
+        let co = cfg.couts_per_pass() + 5;
+        assert_eq!(ops[el], t.at(&[co, 0, 2, 1]));
+    }
+
+    #[test]
+    fn weight_image_zero_pads_tails() {
+        let cfg = SpeedConfig::default();
+        // cout=20 < 2 passes×16 → second pass rows 4..16 are zeros
+        let layer = ConvLayer::new("t", 4, 20, 8, 8, 1, 1, 0);
+        let plan =
+            TilingPlan::new(&cfg, &layer, Precision::Int8, Strategy::ChannelFirst).unwrap();
+        let mut rng = Prng::new(3);
+        let t = Tensor::random(&[20, 4, 1, 1], Precision::Int8, &mut rng);
+        let img = pack_weight_image(&t, &layer, &plan, &cfg).unwrap();
+        let ops = unpack_operands(Precision::Int8, &img);
+        let g = 4;
+        let blk = plan.weight_block_elem(1, 0);
+        // j=4 in pass 1 → co=20 → padded zero
+        let el = blk + 4 * plan.c_c;
+        assert_eq!(ops[el * g], 0);
+        // j=3 → co=19 → real value
+        let el = blk + 3 * plan.c_c;
+        assert_eq!(ops[el * g], t.at(&[19, 0, 0, 0]));
+    }
+}

@@ -1,0 +1,14 @@
+//! Dataflow engine: conv-layer descriptions, FF/CF/mixed strategies and
+//! the conv → customized-instruction-stream compiler.
+
+pub mod compiler;
+pub mod layer;
+pub mod layout;
+pub mod tiling;
+
+pub use compiler::{compile_conv, CompiledConv};
+pub use layer::ConvLayer;
+pub use layout::{extract_ofmap, pack_ifmap_image, pack_weight_image};
+pub use tiling::TilingPlan;
+
+pub use crate::isa::Strategy;

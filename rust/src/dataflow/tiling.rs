@@ -1,0 +1,367 @@
+//! Tiling solver: maps a conv layer onto the SAU under a VRF budget.
+//!
+//! The FF/CF asymmetry of the paper falls out of this solver:
+//!
+//! - **CF** keeps partial sums in the SAU accumulator banks, so at most
+//!   `n_acc_banks` output columns are in flight (`w_b ≤ banks`), and the
+//!   pre-fetch runs *deep* along the input-channel dimension (`c_c`
+//!   channel groups per chunk, as many as the VRF affords). Small spatial
+//!   tiles ⇒ halo re-fetch ∝ K ⇒ CF pays for large kernels but is minimal
+//!   for 1×1.
+//! - **FF** pre-fetches a *wide* spatial patch of a single channel group
+//!   (`c_c = 1`, the paper's "4×4 elements on a single input channel"),
+//!   sweeping many output columns per pass; partial sums spill to the VRF
+//!   between channel stages (`vsam.wb`/`vsam.ldacc`). Wide tiles ⇒ small
+//!   halo and fewer weight reload sweeps ⇒ FF wins for K ≥ 3, but the
+//!   partial traffic + strided single-channel fetches lose for 1×1.
+
+use super::layer::ConvLayer;
+use crate::arch::{Precision, SpeedConfig};
+use crate::error::{Error, Result};
+use crate::isa::Strategy;
+use crate::mem::tensor::channel_groups;
+
+/// Fully-resolved tiling of one layer at one precision/strategy.
+#[derive(Debug, Clone)]
+pub struct TilingPlan {
+    /// Target precision.
+    pub precision: Precision,
+    /// FF or CF (never Mixed — that is resolved per layer upstream).
+    pub strategy: Strategy,
+    /// Unified-element bytes.
+    pub eb: usize,
+    /// Channel groups (`ceil(Cin / group)`).
+    pub cg: usize,
+    /// Channel groups per chunk (CF: deep; FF: 1).
+    pub c_c: usize,
+    /// Number of channel chunks (`ceil(cg / c_c)`).
+    pub chunks: usize,
+    /// Output columns per spatial batch.
+    pub w_b: usize,
+    /// Input rows per row tile (`(TILE_R−1)·S + K`).
+    pub tile_h: usize,
+    /// Input columns per patch (`(w_b−1)·S + K`).
+    pub patch_cols: usize,
+    /// Elements per patch row (`patch_cols · c_c`).
+    pub patch_row_elems: usize,
+    /// VRF-resident patch row pitch in elements: `patch_row_elems`
+    /// padded so the row-to-row byte stride maps to an odd number of VRF
+    /// banks — the bank-conflict-avoiding interleave (power-of-two
+    /// strides would serialize the operand requester's row fetches).
+    pub patch_row_elems_pad: usize,
+    /// Row-tile count (`ceil(Ho / TILE_R)`).
+    pub n_rt: usize,
+    /// Spatial batch count (`ceil(Wo / w_b)`).
+    pub n_xb: usize,
+    /// Output-channel pass count (`ceil(Cout / (lanes·TILE_C))`).
+    pub n_ct: usize,
+    /// Whether the weight slab for a whole pass fits resident in the VRF
+    /// (hoisted to the `ct` loop) or must be re-fetched per spatial tile.
+    pub weights_resident: bool,
+    // ---- per-lane VRF map (byte offsets are within regions) ----
+    /// Patch region base vreg.
+    pub v_patch: u8,
+    /// Patch region size in vregs.
+    pub patch_vregs: usize,
+    /// Weight region base vreg.
+    pub v_weights: u8,
+    /// Vregs per chunk weight block (blocks are vreg-aligned so `vs2`
+    /// selects them without an offset CSR).
+    pub block_vregs: usize,
+    /// Total weight region vregs.
+    pub weight_vregs: usize,
+    /// Partials region base vreg (FF spills; unused by CF).
+    pub v_partials: u8,
+    /// Partials region vregs.
+    pub partial_vregs: usize,
+    // ---- DRAM image geometry ----
+    /// Allocated ifmap rows (≥ H + 2·pad, covers tile tails).
+    pub h_alloc: usize,
+    /// Allocated ifmap cols.
+    pub w_alloc: usize,
+    /// Allocated output channels (`n_ct · lanes · TILE_C`).
+    pub couts_alloc: usize,
+    /// Allocated output rows (`n_rt · TILE_R`).
+    pub ho_alloc: usize,
+    /// Allocated output cols (`n_xb · w_b`).
+    pub wo_alloc: usize,
+    /// Bytes per stored output value (int4 values occupy one byte; the
+    /// inter-layer DMA repacks them — documented in DESIGN.md).
+    pub out_vb: usize,
+    /// Elements per weight-image block (one `(ct, chunk)` unit:
+    /// `lanes·TILE_C · K² · c_c`).
+    pub wimg_block_elems: usize,
+}
+
+impl TilingPlan {
+    /// Solve the tiling for `layer` at `precision` under `strategy`.
+    pub fn new(
+        cfg: &SpeedConfig,
+        layer: &ConvLayer,
+        precision: Precision,
+        strategy: Strategy,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        if layer.k == 0 || layer.stride == 0 || layer.cin == 0 || layer.cout == 0 {
+            return Err(Error::mapping(format!("degenerate layer {layer}")));
+        }
+        if layer.k > layer.w + 2 * layer.pad || layer.k > layer.h + 2 * layer.pad {
+            return Err(Error::mapping(format!("kernel larger than padded input: {layer}")));
+        }
+        let eb = precision.element_bytes();
+        let g = precision.group();
+        let cg = channel_groups(layer.cin, precision);
+        let vreg = cfg.vreg_bytes_per_lane();
+        let total = cfg.vrf_bytes_per_lane();
+        let scratch = 2 * vreg; // v30/v31-equivalent reserve
+        let (s, k) = (layer.stride, layer.k);
+        let tile_h = (cfg.tile_r - 1) * s + k;
+        if tile_h > 63 {
+            return Err(Error::mapping(format!("TILE_H {tile_h} exceeds the VSACFG field")));
+        }
+        let _ = g;
+
+        // Pad a patch row's byte pitch to an odd multiple of the bank
+        // width so simultaneous row fetches spread across banks.
+        let bank = cfg.vrf_bank_bytes;
+        let pad_row = |elems: usize| -> usize {
+            let raw = elems * eb;
+            let mut banks_n = raw.div_ceil(bank);
+            if banks_n % 2 == 0 {
+                banks_n += 1;
+            }
+            (banks_n * bank) / eb
+        };
+
+        // candidate evaluation: returns per-lane region sizes if feasible
+        let try_fit = |w_b: usize, c_c: usize, partials: bool| -> Option<(usize, usize, usize)> {
+            let patch_cols = (w_b - 1) * s + k;
+            let patch_bytes = tile_h * pad_row(patch_cols * c_c) * eb;
+            let patch_vregs = patch_bytes.div_ceil(vreg);
+            // one chunk's weight block = the whole K×K window, TILE_C couts
+            let block_bytes = cfg.tile_c * k * k * c_c * eb;
+            let block_vregs = block_bytes.div_ceil(vreg);
+            let weight_vregs = block_vregs;
+            let partial_bytes = if partials { w_b * cfg.tile_r * cfg.tile_c * 4 } else { 0 };
+            let partial_vregs = partial_bytes.div_ceil(vreg);
+            let used = (patch_vregs + weight_vregs + partial_vregs) * vreg + scratch;
+            (used <= total && patch_vregs + weight_vregs + partial_vregs + 2 <= cfg.n_vregs)
+                .then_some((patch_vregs, block_vregs, partial_vregs))
+        };
+
+        let (w_b, c_c, patch_vregs, block_vregs, partial_vregs) = match strategy {
+            Strategy::ChannelFirst => {
+                // deep chunks, narrow spatial window bounded by acc banks
+                let w_b = cfg.n_acc_banks.min(layer.wo());
+                let mut found = None;
+                for c_c in (1..=cg).rev() {
+                    if let Some((pv, kv, _)) = try_fit(w_b, c_c, false) {
+                        found = Some((w_b, c_c, pv, kv, 0));
+                        break;
+                    }
+                }
+                found.ok_or_else(|| {
+                    Error::mapping(format!("CF cannot fit {layer} at {precision} in the VRF"))
+                })?
+            }
+            Strategy::FeatureFirst => {
+                // single channel group, widest spatial batch that fits
+                let c_c = 1usize;
+                let mut found = None;
+                for w_b in (1..=layer.wo().min(16)).rev() {
+                    if let Some((pv, kv, prv)) = try_fit(w_b, c_c, true) {
+                        found = Some((w_b, c_c, pv, kv, prv));
+                        break;
+                    }
+                }
+                found.ok_or_else(|| {
+                    Error::mapping(format!("FF cannot fit {layer} at {precision} in the VRF"))
+                })?
+            }
+            Strategy::Mixed => {
+                return Err(Error::mapping(
+                    "Mixed is resolved per layer by the coordinator; compile FF or CF",
+                ))
+            }
+        };
+
+        let chunks = cg.div_ceil(c_c);
+        let patch_cols = (w_b - 1) * s + k;
+        let patch_row_elems = patch_cols * c_c;
+        let patch_row_elems_pad = pad_row(patch_row_elems);
+        let n_rt = layer.ho().div_ceil(cfg.tile_r);
+        let n_xb = layer.wo().div_ceil(w_b);
+        let n_ct = layer.cout.div_ceil(cfg.couts_per_pass());
+
+        // Weight residency: if *all* chunks' blocks fit in the VRF at
+        // once, hoist weight loads out of the spatial loop (loaded once
+        // per output-channel pass). Otherwise weights are re-fetched per
+        // spatial tile — the capacity pressure that penalizes CF at K ≥ 3.
+        let resident_vregs = chunks * block_vregs;
+        let weights_resident =
+            patch_vregs + resident_vregs + partial_vregs + 2 <= cfg.n_vregs;
+        let weight_vregs = if weights_resident { resident_vregs } else { block_vregs };
+
+        let h_alloc = ((n_rt * cfg.tile_r - 1) * s + k).max(layer.h + 2 * layer.pad);
+        let w_alloc = ((n_xb * w_b - 1) * s + k).max(layer.w + 2 * layer.pad);
+        let out_vb = (precision.bits() as usize / 8).max(1);
+
+        Ok(TilingPlan {
+            precision,
+            strategy,
+            eb,
+            cg,
+            c_c,
+            chunks,
+            w_b,
+            tile_h,
+            patch_cols,
+            patch_row_elems,
+            patch_row_elems_pad,
+            n_rt,
+            n_xb,
+            n_ct,
+            weights_resident,
+            v_patch: 0,
+            patch_vregs,
+            v_weights: patch_vregs as u8,
+            block_vregs,
+            weight_vregs,
+            v_partials: (patch_vregs + weight_vregs) as u8,
+            partial_vregs,
+            h_alloc,
+            w_alloc,
+            couts_alloc: n_ct * cfg.couts_per_pass(),
+            ho_alloc: n_rt * cfg.tile_r,
+            wo_alloc: n_xb * w_b,
+            out_vb,
+            wimg_block_elems: cfg.couts_per_pass() * k * k * c_c,
+        })
+    }
+
+    /// VRF patch row pitch in bytes (bank-conflict-padded).
+    pub fn patch_row_bytes(&self) -> usize {
+        self.patch_row_elems_pad * self.eb
+    }
+
+    /// Bytes of the packed ifmap DRAM image.
+    pub fn ifmap_image_bytes(&self) -> usize {
+        self.h_alloc * self.w_alloc * self.cg * self.eb
+    }
+
+    /// Bytes of the scheduled weight DRAM image.
+    pub fn weight_image_bytes(&self) -> usize {
+        self.n_ct * self.chunks * self.wimg_block_elems * self.eb
+    }
+
+    /// Bytes of the output DRAM image.
+    pub fn ofmap_image_bytes(&self) -> usize {
+        self.couts_alloc * self.ho_alloc * self.wo_alloc * self.out_vb
+    }
+
+    /// Element offset of ifmap position `(y, x, cgi)` in the image.
+    pub fn ifmap_elem(&self, y: usize, x: usize, cgi: usize) -> usize {
+        (y * self.w_alloc + x) * self.cg + cgi
+    }
+
+    /// Element offset of weight block `(ct, chunk)` in the image.
+    pub fn weight_block_elem(&self, ct: usize, chunk: usize) -> usize {
+        (ct * self.chunks + chunk) * self.wimg_block_elems
+    }
+
+    /// Byte offset of output value `(co, oy, ox)` in the image.
+    pub fn ofmap_byte(&self, co: usize, oy: usize, ox: usize) -> usize {
+        ((co * self.ho_alloc + oy) * self.wo_alloc + ox) * self.out_vb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SpeedConfig {
+        SpeedConfig::default()
+    }
+
+    #[test]
+    fn cf_uses_deep_chunks_small_window() {
+        let layer = ConvLayer::new("r3", 64, 64, 56, 56, 3, 1, 1);
+        let p = TilingPlan::new(&cfg(), &layer, Precision::Int8, Strategy::ChannelFirst).unwrap();
+        assert_eq!(p.w_b, cfg().n_acc_banks);
+        assert!(p.c_c > 1, "CF should prefetch deep: c_c={}", p.c_c);
+        assert_eq!(p.partial_vregs, 0);
+        assert_eq!(p.tile_h, 6);
+    }
+
+    #[test]
+    fn ff_uses_single_group_wide_window() {
+        let layer = ConvLayer::new("r3", 64, 64, 56, 56, 3, 1, 1);
+        let p = TilingPlan::new(&cfg(), &layer, Precision::Int8, Strategy::FeatureFirst).unwrap();
+        assert_eq!(p.c_c, 1);
+        assert!(p.w_b > cfg().n_acc_banks, "FF should sweep wide: w_b={}", p.w_b);
+        assert!(p.partial_vregs > 0);
+        assert_eq!(p.chunks, p.cg);
+    }
+
+    #[test]
+    fn conv1x1_cf_has_no_halo() {
+        let layer = ConvLayer::new("pw", 128, 128, 28, 28, 1, 1, 0);
+        let p = TilingPlan::new(&cfg(), &layer, Precision::Int16, Strategy::ChannelFirst).unwrap();
+        assert_eq!(p.patch_cols, p.w_b); // no overlap columns
+        assert_eq!(p.tile_h, 4);
+    }
+
+    #[test]
+    fn vrf_budget_respected() {
+        for k in [1usize, 3, 5, 7] {
+            for prec in Precision::ALL {
+                for strat in [Strategy::FeatureFirst, Strategy::ChannelFirst] {
+                    let layer = ConvLayer::new("t", 64, 64, 28, 28, k, 1, k / 2);
+                    let p = TilingPlan::new(&cfg(), &layer, prec, strat).unwrap();
+                    let used = p.patch_vregs + p.weight_vregs + p.partial_vregs + 2;
+                    assert!(
+                        used <= cfg().n_vregs,
+                        "K={k} {prec} {strat}: {used} vregs"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn alloc_dims_cover_padded_input_and_tails() {
+        let layer = ConvLayer::new("t", 32, 48, 30, 30, 3, 1, 1); // awkward sizes
+        let p = TilingPlan::new(&cfg(), &layer, Precision::Int8, Strategy::ChannelFirst).unwrap();
+        assert!(p.h_alloc >= layer.h + 2 * layer.pad);
+        assert!(p.w_alloc >= layer.w + 2 * layer.pad);
+        assert!(p.ho_alloc >= layer.ho());
+        assert!(p.wo_alloc >= layer.wo());
+        assert!(p.couts_alloc >= layer.cout);
+        assert_eq!(p.couts_alloc % cfg().couts_per_pass(), 0);
+    }
+
+    #[test]
+    fn strided_conv_geometry() {
+        let layer = ConvLayer::new("s2", 64, 128, 56, 56, 3, 2, 1);
+        let p = TilingPlan::new(&cfg(), &layer, Precision::Int8, Strategy::ChannelFirst).unwrap();
+        assert_eq!(p.tile_h, (4 - 1) * 2 + 3);
+        assert_eq!(p.patch_cols, (p.w_b - 1) * 2 + 3);
+    }
+
+    #[test]
+    fn mixed_rejected_at_plan_level() {
+        let layer = ConvLayer::new("t", 8, 8, 8, 8, 3, 1, 1);
+        assert!(TilingPlan::new(&cfg(), &layer, Precision::Int8, Strategy::Mixed).is_err());
+    }
+
+    #[test]
+    fn image_geometry_consistent() {
+        let layer = ConvLayer::new("t", 16, 32, 14, 14, 3, 1, 1);
+        let p = TilingPlan::new(&cfg(), &layer, Precision::Int4, Strategy::FeatureFirst).unwrap();
+        assert_eq!(p.ifmap_elem(0, 0, 0), 0);
+        assert_eq!(p.ifmap_elem(0, 1, 0), p.cg);
+        assert_eq!(p.ifmap_elem(1, 0, 0), p.w_alloc * p.cg);
+        assert!(p.weight_image_bytes() > 0);
+        assert_eq!(p.ofmap_byte(0, 0, 1) - p.ofmap_byte(0, 0, 0), p.out_vb);
+    }
+}

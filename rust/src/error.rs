@@ -1,0 +1,57 @@
+//! Error type shared across the crate.
+
+use thiserror::Error;
+
+/// Crate-wide error enumeration.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Malformed or unsupported instruction encoding.
+    #[error("decode error at word {word:#010x}: {msg}")]
+    Decode { word: u32, msg: String },
+
+    /// Assembler parse failure.
+    #[error("assembler error on line {line}: {msg}")]
+    Asm { line: usize, msg: String },
+
+    /// Architectural misconfiguration (e.g. VLEN not divisible by lanes).
+    #[error("configuration error: {0}")]
+    Config(String),
+
+    /// Simulator invariant violation (a bug or an illegal program).
+    #[error("simulation error: {0}")]
+    Sim(String),
+
+    /// Dataflow compiler could not map the layer.
+    #[error("dataflow mapping error: {0}")]
+    Mapping(String),
+
+    /// PJRT / XLA runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Underlying I/O failure.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Shorthand constructor for simulation invariant violations.
+    pub fn sim(msg: impl Into<String>) -> Self {
+        Error::Sim(msg.into())
+    }
+    /// Shorthand constructor for mapping errors.
+    pub fn mapping(msg: impl Into<String>) -> Self {
+        Error::Mapping(msg.into())
+    }
+    /// Shorthand constructor for configuration errors.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    /// Shorthand constructor for runtime errors.
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        Error::Runtime(msg.into())
+    }
+}

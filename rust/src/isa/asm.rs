@@ -1,0 +1,329 @@
+//! Text assembler for the SPEED ISA subset.
+//!
+//! Syntax mirrors standard RISC-V assembly plus mnemonics for the
+//! customized instructions (see the module-level table in [`crate::isa`]):
+//!
+//! ```text
+//! # scalar
+//! lui   a0, 0x12345
+//! addi  a0, a0, -5
+//! slli  a0, a0, 3
+//! add   a0, a1, a2
+//! # standard RVV
+//! vsetvli t0, a0, e16, m2
+//! vle8.v  v4, (a0)
+//! vse16.v v4, (a0)
+//! vmacc.vv v8, v4, v5
+//! vsra.vi  v1, v2, 7
+//! # customized
+//! vsacfg  e8, cf, th6
+//! vsacfg.rowstride a0
+//! vsacfg.outstride a1
+//! vsacfg.shift 9
+//! vsald.b v0, (a0)         # broadcast
+//! vsald.o v8, (a1)         # ordered
+//! vsam.macz  acc0, v0, v8
+//! vsam.mac   acc1, v0, v8
+//! vsam.wb    v16, acc0
+//! vsam.ldacc acc0, v16
+//! vsam.st      acc0, (a2)
+//! vsam.st.relu acc0, (a2)
+//! ```
+//!
+//! `#` and `;` start comments; blank lines are skipped.
+
+use super::instr::{ElemWidth, Instr, LoadMode, Strategy, VType, Vsacfg, Vsam};
+use super::regs::{parse_vreg, parse_xreg};
+use crate::arch::Precision;
+use crate::error::{Error, Result};
+
+fn parse_imm(s: &str) -> Option<i64> {
+    let s = s.trim();
+    let (neg, body) = match s.strip_prefix('-') {
+        Some(b) => (true, b),
+        None => (false, s),
+    };
+    let v = if let Some(hex) = body.strip_prefix("0x") {
+        i64::from_str_radix(hex, 16).ok()?
+    } else {
+        body.parse::<i64>().ok()?
+    };
+    Some(if neg { -v } else { v })
+}
+
+fn parse_mem(s: &str) -> Option<u8> {
+    let inner = s.trim().strip_prefix('(')?.strip_suffix(')')?;
+    parse_xreg(inner.trim())
+}
+
+fn parse_acc(s: &str) -> Option<u8> {
+    let n = s.trim().strip_prefix("acc")?;
+    n.parse::<u8>().ok()
+}
+
+fn parse_sew(s: &str) -> Option<u32> {
+    match s.trim() {
+        "e8" => Some(8),
+        "e16" => Some(16),
+        "e32" => Some(32),
+        "e64" => Some(64),
+        _ => None,
+    }
+}
+
+fn parse_precision(s: &str) -> Option<Precision> {
+    match s.trim() {
+        "e4" => Some(Precision::Int4),
+        "e8" => Some(Precision::Int8),
+        "e16" => Some(Precision::Int16),
+        _ => None,
+    }
+}
+
+/// Assemble one line; `None` for blank/comment lines.
+fn assemble_line(line: &str, lineno: usize) -> Result<Option<Instr>> {
+    let code = line.split(['#', ';']).next().unwrap_or("").trim();
+    if code.is_empty() {
+        return Ok(None);
+    }
+    let mut parts = code.splitn(2, char::is_whitespace);
+    let mnemonic = parts.next().unwrap();
+    let rest = parts.next().unwrap_or("");
+    let ops: Vec<&str> = rest.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+    let err = |msg: String| Error::Asm { line: lineno, msg };
+    let need = |n: usize| -> Result<()> {
+        if ops.len() != n {
+            Err(err(format!("{mnemonic}: expected {n} operands, got {}", ops.len())))
+        } else {
+            Ok(())
+        }
+    };
+    let xreg = |s: &str| parse_xreg(s).ok_or_else(|| err(format!("bad x-register `{s}`")));
+    let vreg = |s: &str| parse_vreg(s).ok_or_else(|| err(format!("bad v-register `{s}`")));
+    let mem = |s: &str| parse_mem(s).ok_or_else(|| err(format!("bad memory operand `{s}`")));
+    let acc = |s: &str| parse_acc(s).ok_or_else(|| err(format!("bad accumulator `{s}`")));
+    let imm = |s: &str| parse_imm(s).ok_or_else(|| err(format!("bad immediate `{s}`")));
+
+    let instr = match mnemonic {
+        "lui" => {
+            need(2)?;
+            Instr::Lui { rd: xreg(ops[0])?, imm20: imm(ops[1])? as i32 }
+        }
+        "addi" => {
+            need(3)?;
+            Instr::Addi { rd: xreg(ops[0])?, rs1: xreg(ops[1])?, imm12: imm(ops[2])? as i32 }
+        }
+        "slli" => {
+            need(3)?;
+            Instr::Slli { rd: xreg(ops[0])?, rs1: xreg(ops[1])?, shamt: imm(ops[2])? as u8 }
+        }
+        "add" => {
+            need(3)?;
+            Instr::Add { rd: xreg(ops[0])?, rs1: xreg(ops[1])?, rs2: xreg(ops[2])? }
+        }
+        "vsetvli" => {
+            need(4)?;
+            let sew = parse_sew(ops[2]).ok_or_else(|| err(format!("bad SEW `{}`", ops[2])))?;
+            let lmul = ops[3]
+                .strip_prefix('m')
+                .and_then(|m| m.parse::<u32>().ok())
+                .ok_or_else(|| err(format!("bad LMUL `{}`", ops[3])))?;
+            let vtype =
+                VType::new(sew, lmul).ok_or_else(|| err("reserved vtype".to_string()))?;
+            Instr::Vsetvli { rd: xreg(ops[0])?, rs1: xreg(ops[1])?, vtype }
+        }
+        "vle8.v" | "vle16.v" | "vle32.v" => {
+            need(2)?;
+            let width = match mnemonic {
+                "vle8.v" => ElemWidth::E8,
+                "vle16.v" => ElemWidth::E16,
+                _ => ElemWidth::E32,
+            };
+            Instr::Vle { width, vd: vreg(ops[0])?, rs1: mem(ops[1])? }
+        }
+        "vse8.v" | "vse16.v" | "vse32.v" => {
+            need(2)?;
+            let width = match mnemonic {
+                "vse8.v" => ElemWidth::E8,
+                "vse16.v" => ElemWidth::E16,
+                _ => ElemWidth::E32,
+            };
+            Instr::Vse { width, vs3: vreg(ops[0])?, rs1: mem(ops[1])? }
+        }
+        "vmacc.vv" => {
+            need(3)?;
+            Instr::VmaccVv { vd: vreg(ops[0])?, vs1: vreg(ops[1])?, vs2: vreg(ops[2])? }
+        }
+        "vadd.vv" => {
+            need(3)?;
+            Instr::VaddVv { vd: vreg(ops[0])?, vs2: vreg(ops[1])?, vs1: vreg(ops[2])? }
+        }
+        "vmul.vv" => {
+            need(3)?;
+            Instr::VmulVv { vd: vreg(ops[0])?, vs2: vreg(ops[1])?, vs1: vreg(ops[2])? }
+        }
+        "vsra.vi" => {
+            need(3)?;
+            Instr::VsraVi { vd: vreg(ops[0])?, vs2: vreg(ops[1])?, uimm: imm(ops[2])? as u8 }
+        }
+        "vsacfg" => {
+            need(3)?;
+            let precision = parse_precision(ops[0])
+                .ok_or_else(|| err(format!("bad precision `{}` (e4/e8/e16)", ops[0])))?;
+            let strategy = match ops[1] {
+                "ff" => Strategy::FeatureFirst,
+                "cf" => Strategy::ChannelFirst,
+                s => return Err(err(format!("bad strategy `{s}` (ff/cf)"))),
+            };
+            let tile_h = ops[2]
+                .strip_prefix("th")
+                .and_then(|t| t.parse::<u8>().ok())
+                .filter(|&t| t < 64)
+                .ok_or_else(|| err(format!("bad tile_h `{}` (th0..th63)", ops[2])))?;
+            Instr::Vsacfg(Vsacfg::Main { precision, strategy, tile_h })
+        }
+        "vsacfg.rowstride" => {
+            need(2)?;
+            Instr::Vsacfg(Vsacfg::RowStride {
+                rs1: xreg(ops[0])?,
+                aincr: imm(ops[1])? as u16,
+            })
+        }
+        "vsacfg.outstride" => {
+            need(1)?;
+            Instr::Vsacfg(Vsacfg::OutStride { rs1: xreg(ops[0])? })
+        }
+        "vsacfg.shift" => {
+            need(1)?;
+            Instr::Vsacfg(Vsacfg::Shift { uimm5: imm(ops[0])? as u8 })
+        }
+        "vsacfg.aoffset" => {
+            need(1)?;
+            Instr::Vsacfg(Vsacfg::AOffset { rs1: xreg(ops[0])? })
+        }
+        "vsacfg.woffset" => {
+            need(1)?;
+            Instr::Vsacfg(Vsacfg::WOffset { rs1: xreg(ops[0])? })
+        }
+        "vsacfg.cstride" => {
+            need(1)?;
+            Instr::Vsacfg(Vsacfg::CStride { rs1: xreg(ops[0])? })
+        }
+        "vsacfg.runcfg" => {
+            need(2)?;
+            Instr::Vsacfg(Vsacfg::RunCfg { rs1: xreg(ops[0])?, runlen: imm(ops[1])? as u16 })
+        }
+        "vsald.b" | "vsald.o" => {
+            need(2)?;
+            let mode =
+                if mnemonic == "vsald.b" { LoadMode::Broadcast } else { LoadMode::Ordered };
+            Instr::Vsald { vd: vreg(ops[0])?, rs1: mem(ops[1])?, mode }
+        }
+        "vsald.bs" | "vsald.os" => {
+            need(3)?;
+            let stride = imm(ops[2])? as u16;
+            let mode = if mnemonic == "vsald.bs" {
+                LoadMode::BroadcastStrided(stride)
+            } else {
+                LoadMode::OrderedStrided(stride)
+            };
+            Instr::Vsald { vd: vreg(ops[0])?, rs1: mem(ops[1])?, mode }
+        }
+        "vsam.macz" | "vsam.mac" | "vsam.macz.b" | "vsam.mac.b" => {
+            need(3)?;
+            let a = acc(ops[0])?;
+            let v1 = vreg(ops[1])?;
+            let v2 = vreg(ops[2])?;
+            let bump = mnemonic.ends_with(".b");
+            if mnemonic.starts_with("vsam.macz") {
+                Instr::Vsam(Vsam::MacZ { acc: a, vs1: v1, vs2: v2, bump })
+            } else {
+                Instr::Vsam(Vsam::Mac { acc: a, vs1: v1, vs2: v2, bump })
+            }
+        }
+        "vsam.wb" | "vsam.wb.b" => {
+            need(2)?;
+            Instr::Vsam(Vsam::Wb {
+                vd: vreg(ops[0])?,
+                acc: acc(ops[1])?,
+                bump: mnemonic.ends_with(".b"),
+            })
+        }
+        "vsam.ldacc" | "vsam.ldacc.b" => {
+            need(2)?;
+            Instr::Vsam(Vsam::LdAcc {
+                acc: acc(ops[0])?,
+                vs1: vreg(ops[1])?,
+                bump: mnemonic.ends_with(".b"),
+            })
+        }
+        "vsam.st" | "vsam.st.relu" => {
+            need(2)?;
+            Instr::Vsam(Vsam::St {
+                acc: acc(ops[0])?,
+                rs1: mem(ops[1])?,
+                relu: mnemonic.ends_with(".relu"),
+            })
+        }
+        _ => return Err(err(format!("unknown mnemonic `{mnemonic}`"))),
+    };
+    Ok(Some(instr))
+}
+
+/// Assemble a multi-line source string into decoded instructions.
+pub fn assemble(src: &str) -> Result<Vec<Instr>> {
+    let mut out = Vec::new();
+    for (i, line) in src.lines().enumerate() {
+        if let Some(instr) = assemble_line(line, i + 1)? {
+            out.push(instr);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assembles_representative_program() {
+        let src = r#"
+            # conv tile preamble
+            vsacfg e8, cf, th6
+            vsacfg.shift 7
+            lui   a0, 0x10
+            addi  a0, a0, 256
+            vsetvli t0, a0, e16, m2
+            vsald.b v0, (a0)
+            vsald.o v8, (a1)
+            vsam.macz acc0, v0, v8
+            vsam.mac  acc0, v0, v8
+            vsam.st.relu acc0, (a2)   ; drain
+        "#;
+        let prog = assemble(src).unwrap();
+        assert_eq!(prog.len(), 10);
+        assert!(matches!(prog[0], Instr::Vsacfg(Vsacfg::Main { .. })));
+        assert!(matches!(prog.last(), Some(Instr::Vsam(Vsam::St { relu: true, .. }))));
+    }
+
+    #[test]
+    fn rejects_bad_operand_counts_and_names() {
+        assert!(assemble("addi a0, a1").is_err());
+        assert!(assemble("vsald.b q0, (a0)").is_err());
+        assert!(assemble("vsam.macz acc0, v0").is_err());
+        assert!(assemble("vsacfg e5, ff, th4").is_err());
+        assert!(assemble("frobnicate a0").is_err());
+    }
+
+    #[test]
+    fn error_reports_line_number() {
+        let e = assemble("addi a0, a1, 1\nbogus x").unwrap_err();
+        assert!(e.to_string().contains("line 2"), "{e}");
+    }
+
+    #[test]
+    fn negative_and_hex_immediates() {
+        let p = assemble("addi a0, a0, -2048\nlui a1, 0xFFFFF").unwrap();
+        assert!(matches!(p[0], Instr::Addi { imm12: -2048, .. }));
+    }
+}

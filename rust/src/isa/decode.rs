@@ -1,0 +1,218 @@
+//! Instruction decoder: 32-bit word → `Instr`.
+//!
+//! This is the model of the paper's **VIDU** (vector instruction decode
+//! unit), which "decodes customized instructions as well as the standard
+//! RVV instruction set". The simulator feeds every fetched word through
+//! this function.
+
+use super::encode::{opcodes, opv_f6, vsacfg_f3, vsam_f6};
+use super::instr::{ElemWidth, Instr, LoadMode, Strategy, VType, Vsacfg, Vsam};
+use crate::arch::Precision;
+use crate::error::{Error, Result};
+
+#[inline(always)]
+fn field(w: u32, lo: u32, bits: u32) -> u32 {
+    (w >> lo) & ((1 << bits) - 1)
+}
+
+#[inline(always)]
+fn sext(v: u32, bits: u32) -> i32 {
+    let shift = 32 - bits;
+    ((v << shift) as i32) >> shift
+}
+
+/// Decode one 32-bit instruction word.
+#[inline]
+pub fn decode(w: u32) -> Result<Instr> {
+    let opcode = w & 0x7F;
+    let rd = field(w, 7, 5) as u8;
+    let funct3 = field(w, 12, 3);
+    let rs1 = field(w, 15, 5) as u8;
+    let rs2 = field(w, 20, 5) as u8;
+    let err = |msg: &str| Error::Decode { word: w, msg: msg.to_string() };
+
+    match opcode {
+        opcodes::LUI => Ok(Instr::Lui { rd, imm20: sext(field(w, 12, 20), 20) }),
+        opcodes::OP_IMM => match funct3 {
+            0b000 => Ok(Instr::Addi { rd, rs1, imm12: sext(field(w, 20, 12), 12) }),
+            0b001 => Ok(Instr::Slli { rd, rs1, shamt: field(w, 20, 6) as u8 }),
+            _ => Err(err("unsupported OP-IMM funct3")),
+        },
+        opcodes::OP => match funct3 {
+            0b000 if field(w, 25, 7) == 0 => Ok(Instr::Add { rd, rs1, rs2 }),
+            _ => Err(err("unsupported OP funct3/funct7")),
+        },
+        opcodes::OP_V => {
+            if funct3 == 0b111 {
+                if w >> 31 != 0 {
+                    return Err(err("only vsetvli (bit31=0) is supported"));
+                }
+                let vtype = VType::decode(field(w, 20, 11))
+                    .ok_or_else(|| err("reserved vtype encoding"))?;
+                return Ok(Instr::Vsetvli { rd, rs1, vtype });
+            }
+            let funct6 = field(w, 26, 6);
+            match (funct6, funct3) {
+                (opv_f6::VADD, 0b000) => Ok(Instr::VaddVv { vd: rd, vs2: rs2, vs1: rs1 }),
+                (opv_f6::VMUL, 0b010) => Ok(Instr::VmulVv { vd: rd, vs2: rs2, vs1: rs1 }),
+                (opv_f6::VMACC, 0b010) => Ok(Instr::VmaccVv { vd: rd, vs1: rs1, vs2: rs2 }),
+                (opv_f6::VSRA, 0b011) => Ok(Instr::VsraVi { vd: rd, vs2: rs2, uimm: rs1 }),
+                _ => Err(err("unsupported OP-V funct6/funct3")),
+            }
+        }
+        opcodes::LOAD_FP => {
+            let width = ElemWidth::from_funct3(funct3)
+                .ok_or_else(|| err("unsupported vector load width"))?;
+            Ok(Instr::Vle { width, vd: rd, rs1 })
+        }
+        opcodes::STORE_FP => {
+            let width = ElemWidth::from_funct3(funct3)
+                .ok_or_else(|| err("unsupported vector store width"))?;
+            Ok(Instr::Vse { width, vs3: rd, rs1 })
+        }
+        opcodes::CUSTOM0 => match funct3 {
+            vsacfg_f3::MAIN => {
+                let zimm9 = field(w, 20, 9);
+                let precision = Precision::decode(zimm9 & 0b11)?;
+                let strategy = Strategy::decode((zimm9 >> 2) & 1);
+                let tile_h = ((zimm9 >> 3) & 0x3F) as u8;
+                Ok(Instr::Vsacfg(Vsacfg::Main { precision, strategy, tile_h }))
+            }
+            vsacfg_f3::ROWSTRIDE => Ok(Instr::Vsacfg(Vsacfg::RowStride {
+                rs1,
+                aincr: field(w, 20, 12) as u16,
+            })),
+            vsacfg_f3::OUTSTRIDE => Ok(Instr::Vsacfg(Vsacfg::OutStride { rs1 })),
+            vsacfg_f3::SHIFT => Ok(Instr::Vsacfg(Vsacfg::Shift { uimm5: rd & 0x1F })),
+            vsacfg_f3::AOFFSET => Ok(Instr::Vsacfg(Vsacfg::AOffset { rs1 })),
+            vsacfg_f3::WOFFSET => Ok(Instr::Vsacfg(Vsacfg::WOffset { rs1 })),
+            vsacfg_f3::CSTRIDE => Ok(Instr::Vsacfg(Vsacfg::CStride { rs1 })),
+            vsacfg_f3::RUNCFG => Ok(Instr::Vsacfg(Vsacfg::RunCfg {
+                rs1,
+                runlen: field(w, 20, 12) as u16,
+            })),
+            _ => unreachable!("3-bit funct3 fully decoded"),
+        },
+        opcodes::CUSTOM1 => {
+            let stride = field(w, 20, 12) as u16;
+            let mode = match funct3 {
+                0b000 => LoadMode::Ordered,
+                0b001 => LoadMode::Broadcast,
+                0b010 => LoadMode::OrderedStrided(stride),
+                0b011 => LoadMode::BroadcastStrided(stride),
+                _ => return Err(err("unsupported VSALD funct3")),
+            };
+            Ok(Instr::Vsald { vd: rd, rs1, mode })
+        }
+        opcodes::CUSTOM2 => {
+            let funct6 = field(w, 26, 6);
+            let vm = field(w, 25, 1);
+            let bump = vm == 0;
+            match funct6 {
+                vsam_f6::MACZ => {
+                    Ok(Instr::Vsam(Vsam::MacZ { acc: rd, vs1: rs1, vs2: rs2, bump }))
+                }
+                vsam_f6::MAC => Ok(Instr::Vsam(Vsam::Mac { acc: rd, vs1: rs1, vs2: rs2, bump })),
+                vsam_f6::WB => Ok(Instr::Vsam(Vsam::Wb { vd: rd, acc: rs2, bump })),
+                vsam_f6::LDACC => Ok(Instr::Vsam(Vsam::LdAcc { acc: rd, vs1: rs1, bump })),
+                vsam_f6::ST => Ok(Instr::Vsam(Vsam::St { acc: rs2, rs1, relu: vm == 1 })),
+                _ => Err(err("unsupported VSAM funct6")),
+            }
+        }
+        _ => Err(err("unknown opcode")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::encode::encode;
+    use crate::testutil::{check, PropConfig};
+
+    fn arbitrary_instr(rng: &mut crate::testutil::Prng) -> Instr {
+        let v = |r: &mut crate::testutil::Prng| r.range_usize(0, 31) as u8;
+        match rng.below(17) {
+            0 => Instr::Lui { rd: v(rng), imm20: rng.range_i64(-(1 << 19), (1 << 19) - 1) as i32 },
+            1 => Instr::Addi { rd: v(rng), rs1: v(rng), imm12: rng.range_i64(-2048, 2047) as i32 },
+            2 => Instr::Slli { rd: v(rng), rs1: v(rng), shamt: rng.range_usize(0, 63) as u8 },
+            3 => Instr::Add { rd: v(rng), rs1: v(rng), rs2: v(rng) },
+            4 => Instr::Vsetvli {
+                rd: v(rng),
+                rs1: v(rng),
+                vtype: VType::new(
+                    *rng.pick(&[8, 16, 32, 64]),
+                    *rng.pick(&[1, 2, 4, 8]),
+                )
+                .unwrap(),
+            },
+            5 => Instr::Vle {
+                width: *rng.pick(&[ElemWidth::E8, ElemWidth::E16, ElemWidth::E32]),
+                vd: v(rng),
+                rs1: v(rng),
+            },
+            6 => Instr::Vse {
+                width: *rng.pick(&[ElemWidth::E8, ElemWidth::E16, ElemWidth::E32]),
+                vs3: v(rng),
+                rs1: v(rng),
+            },
+            7 => Instr::VmaccVv { vd: v(rng), vs1: v(rng), vs2: v(rng) },
+            8 => Instr::VaddVv { vd: v(rng), vs2: v(rng), vs1: v(rng) },
+            9 => Instr::VmulVv { vd: v(rng), vs2: v(rng), vs1: v(rng) },
+            10 => Instr::VsraVi { vd: v(rng), vs2: v(rng), uimm: rng.range_usize(0, 31) as u8 },
+            11 => Instr::Vsacfg(Vsacfg::Main {
+                precision: *rng.pick(&Precision::ALL),
+                strategy: Strategy::decode(rng.below(2) as u32),
+                tile_h: rng.range_usize(0, 63) as u8,
+            }),
+            12 => Instr::Vsacfg(Vsacfg::RowStride {
+                rs1: v(rng),
+                aincr: rng.range_usize(0, 4095) as u16,
+            }),
+            13 => Instr::Vsacfg(Vsacfg::Shift { uimm5: rng.range_usize(0, 31) as u8 }),
+            14 => Instr::Vsald {
+                vd: v(rng),
+                rs1: v(rng),
+                mode: if rng.below(2) == 0 { LoadMode::Ordered } else { LoadMode::Broadcast },
+            },
+            15 => Instr::Vsam(Vsam::MacZ {
+                acc: v(rng),
+                vs1: v(rng),
+                vs2: v(rng),
+                bump: rng.below(2) == 1,
+            }),
+            _ => Instr::Vsam(Vsam::St { acc: v(rng), rs1: v(rng), relu: rng.below(2) == 1 }),
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_property() {
+        check(PropConfig::new(2000, 0x15A0), |rng| {
+            let i = arbitrary_instr(rng);
+            let w = encode(&i);
+            let back = decode(w).map_err(|e| e.to_string())?;
+            if back != i {
+                return Err(format!("{i:?} -> {w:#010x} -> {back:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn unknown_opcode_rejected() {
+        assert!(decode(0x0000007F).is_err());
+        assert!(decode(0xFFFFFFFF).is_err());
+    }
+
+    #[test]
+    fn reserved_vsald_funct3_rejected() {
+        // CUSTOM1 with funct3 = 0b100 is reserved.
+        let w = (0b100 << 12) | opcodes::CUSTOM1;
+        assert!(decode(w).is_err());
+    }
+
+    #[test]
+    fn vsetvl_bit31_rejected() {
+        let w = (1 << 31) | (0b111 << 12) | opcodes::OP_V;
+        assert!(decode(w).is_err());
+    }
+}

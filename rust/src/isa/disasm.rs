@@ -1,0 +1,172 @@
+//! Disassembler: `Instr` → assembler text (inverse of [`crate::isa::asm`]).
+
+use super::instr::{Instr, LoadMode, Strategy, Vsacfg, Vsam};
+use super::regs::{vreg_name, xreg_name};
+use crate::arch::Precision;
+
+fn prec_name(p: Precision) -> &'static str {
+    match p {
+        Precision::Int4 => "e4",
+        Precision::Int8 => "e8",
+        Precision::Int16 => "e16",
+    }
+}
+
+/// Render one instruction in assembler syntax.
+pub fn disassemble(i: &Instr) -> String {
+    match *i {
+        Instr::Lui { rd, imm20 } => format!("lui {}, {:#x}", xreg_name(rd), imm20 as u32 & 0xFFFFF),
+        Instr::Addi { rd, rs1, imm12 } => {
+            format!("addi {}, {}, {}", xreg_name(rd), xreg_name(rs1), imm12)
+        }
+        Instr::Slli { rd, rs1, shamt } => {
+            format!("slli {}, {}, {}", xreg_name(rd), xreg_name(rs1), shamt)
+        }
+        Instr::Add { rd, rs1, rs2 } => {
+            format!("add {}, {}, {}", xreg_name(rd), xreg_name(rs1), xreg_name(rs2))
+        }
+        Instr::Vsetvli { rd, rs1, vtype } => format!(
+            "vsetvli {}, {}, e{}, m{}",
+            xreg_name(rd),
+            xreg_name(rs1),
+            vtype.sew_bits,
+            vtype.lmul
+        ),
+        Instr::Vle { width, vd, rs1 } => {
+            format!("vle{}.v {}, ({})", width.bits(), vreg_name(vd), xreg_name(rs1))
+        }
+        Instr::Vse { width, vs3, rs1 } => {
+            format!("vse{}.v {}, ({})", width.bits(), vreg_name(vs3), xreg_name(rs1))
+        }
+        Instr::VmaccVv { vd, vs1, vs2 } => {
+            format!("vmacc.vv {}, {}, {}", vreg_name(vd), vreg_name(vs1), vreg_name(vs2))
+        }
+        Instr::VaddVv { vd, vs2, vs1 } => {
+            format!("vadd.vv {}, {}, {}", vreg_name(vd), vreg_name(vs2), vreg_name(vs1))
+        }
+        Instr::VmulVv { vd, vs2, vs1 } => {
+            format!("vmul.vv {}, {}, {}", vreg_name(vd), vreg_name(vs2), vreg_name(vs1))
+        }
+        Instr::VsraVi { vd, vs2, uimm } => {
+            format!("vsra.vi {}, {}, {}", vreg_name(vd), vreg_name(vs2), uimm)
+        }
+        Instr::Vsacfg(Vsacfg::Main { precision, strategy, tile_h }) => {
+            let s = match strategy {
+                Strategy::FeatureFirst => "ff",
+                Strategy::ChannelFirst => "cf",
+                Strategy::Mixed => unreachable!("Mixed is not encodable"),
+            };
+            format!("vsacfg {}, {}, th{}", prec_name(precision), s, tile_h)
+        }
+        Instr::Vsacfg(Vsacfg::RowStride { rs1, aincr }) => {
+            format!("vsacfg.rowstride {}, {aincr}", xreg_name(rs1))
+        }
+        Instr::Vsacfg(Vsacfg::OutStride { rs1 }) => {
+            format!("vsacfg.outstride {}", xreg_name(rs1))
+        }
+        Instr::Vsacfg(Vsacfg::Shift { uimm5 }) => format!("vsacfg.shift {uimm5}"),
+        Instr::Vsacfg(Vsacfg::AOffset { rs1 }) => {
+            format!("vsacfg.aoffset {}", xreg_name(rs1))
+        }
+        Instr::Vsacfg(Vsacfg::WOffset { rs1 }) => {
+            format!("vsacfg.woffset {}", xreg_name(rs1))
+        }
+        Instr::Vsacfg(Vsacfg::CStride { rs1 }) => {
+            format!("vsacfg.cstride {}", xreg_name(rs1))
+        }
+        Instr::Vsacfg(Vsacfg::RunCfg { rs1, runlen }) => {
+            format!("vsacfg.runcfg {}, {runlen}", xreg_name(rs1))
+        }
+        Instr::Vsald { vd, rs1, mode } => match mode {
+            LoadMode::Broadcast => {
+                format!("vsald.b {}, ({})", vreg_name(vd), xreg_name(rs1))
+            }
+            LoadMode::Ordered => {
+                format!("vsald.o {}, ({})", vreg_name(vd), xreg_name(rs1))
+            }
+            LoadMode::BroadcastStrided(s) => {
+                format!("vsald.bs {}, ({}), {s}", vreg_name(vd), xreg_name(rs1))
+            }
+            LoadMode::OrderedStrided(s) => {
+                format!("vsald.os {}, ({}), {s}", vreg_name(vd), xreg_name(rs1))
+            }
+        },
+        Instr::Vsam(Vsam::MacZ { acc, vs1, vs2, bump }) => {
+            let b = if bump { ".b" } else { "" };
+            format!("vsam.macz{b} acc{acc}, {}, {}", vreg_name(vs1), vreg_name(vs2))
+        }
+        Instr::Vsam(Vsam::Mac { acc, vs1, vs2, bump }) => {
+            let b = if bump { ".b" } else { "" };
+            format!("vsam.mac{b} acc{acc}, {}, {}", vreg_name(vs1), vreg_name(vs2))
+        }
+        Instr::Vsam(Vsam::Wb { vd, acc, bump }) => {
+            let b = if bump { ".b" } else { "" };
+            format!("vsam.wb{b} {}, acc{acc}", vreg_name(vd))
+        }
+        Instr::Vsam(Vsam::LdAcc { acc, vs1, bump }) => {
+            let b = if bump { ".b" } else { "" };
+            format!("vsam.ldacc{b} acc{acc}, {}", vreg_name(vs1))
+        }
+        Instr::Vsam(Vsam::St { acc, rs1, relu }) => {
+            let suffix = if relu { ".relu" } else { "" };
+            format!("vsam.st{suffix} acc{acc}, ({})", xreg_name(rs1))
+        }
+    }
+}
+
+/// Disassemble a whole program, one instruction per line.
+pub fn disassemble_all(prog: &[Instr]) -> String {
+    prog.iter().map(disassemble).collect::<Vec<_>>().join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::asm::assemble;
+    use crate::isa::instr::VType;
+
+    #[test]
+    fn asm_disasm_roundtrip() {
+        let src = r#"
+            vsacfg e4, ff, th6
+            vsacfg.rowstride t1, 64
+            vsacfg.outstride t2
+            vsacfg.shift 11
+            vsacfg.aoffset a0
+            vsacfg.woffset a1
+            lui a0, 0x12345
+            addi sp, sp, -16
+            slli a1, a0, 4
+            add a2, a0, a1
+            vsetvli t0, a0, e32, m4
+            vle16.v v2, (a0)
+            vse32.v v2, (a1)
+            vmacc.vv v4, v5, v6
+            vadd.vv v1, v2, v3
+            vmul.vv v1, v2, v3
+            vsra.vi v1, v2, 15
+            vsald.b v0, (a3)
+            vsald.o v8, (a4)
+            vsam.macz acc0, v0, v8
+            vsam.mac acc3, v0, v8
+            vsam.macz.b acc0, v0, v8
+            vsam.mac.b acc3, v0, v8
+            vsam.wb v16, acc2
+            vsam.wb.b v16, acc2
+            vsam.ldacc acc2, v16
+            vsam.ldacc.b acc2, v16
+            vsam.st acc1, (a5)
+            vsam.st.relu acc0, (a6)
+        "#;
+        let prog = assemble(src).unwrap();
+        let text = disassemble_all(&prog);
+        let prog2 = assemble(&text).unwrap();
+        assert_eq!(prog, prog2, "asm→disasm→asm mismatch:\n{text}");
+    }
+
+    #[test]
+    fn vsetvli_renders_sew_lmul() {
+        let i = Instr::Vsetvli { rd: 5, rs1: 10, vtype: VType::new(16, 2).unwrap() };
+        assert_eq!(disassemble(&i), "vsetvli t0, a0, e16, m2");
+    }
+}

@@ -1,0 +1,221 @@
+//! Instruction encoder: `Instr` → 32-bit RISC-V word.
+//!
+//! Opcode map:
+//! - scalar: standard RV64I opcodes (`LUI` 0x37, `OP-IMM` 0x13, `OP` 0x33)
+//! - vector: standard RVV (`OP-V` 0x57, `LOAD-FP` 0x07, `STORE-FP` 0x27)
+//! - customized: `VSACFG` in custom-0 (0x0B), `VSALD` in custom-1 (0x2B),
+//!   `VSAM` in custom-2 (0x5B)
+
+use super::instr::{Instr, LoadMode, Vsacfg, Vsam};
+
+/// RISC-V base opcodes used by this ISA subset.
+pub mod opcodes {
+    /// LUI.
+    pub const LUI: u32 = 0b0110111;
+    /// OP-IMM (ADDI/SLLI).
+    pub const OP_IMM: u32 = 0b0010011;
+    /// OP (ADD).
+    pub const OP: u32 = 0b0110011;
+    /// OP-V (vector arithmetic + vsetvli).
+    pub const OP_V: u32 = 0b1010111;
+    /// LOAD-FP (vector loads).
+    pub const LOAD_FP: u32 = 0b0000111;
+    /// STORE-FP (vector stores).
+    pub const STORE_FP: u32 = 0b0100111;
+    /// custom-0: VSACFG.
+    pub const CUSTOM0: u32 = 0b0001011;
+    /// custom-1: VSALD.
+    pub const CUSTOM1: u32 = 0b0101011;
+    /// custom-2: VSAM.
+    pub const CUSTOM2: u32 = 0b1011011;
+}
+
+/// `VSACFG` funct3 minor opcodes.
+pub mod vsacfg_f3 {
+    /// Main precision/strategy/TILE_H configuration.
+    pub const MAIN: u32 = 0b111;
+    /// Set input row stride CSR from rs1.
+    pub const ROWSTRIDE: u32 = 0b001;
+    /// Set output store stride CSR from rs1.
+    pub const OUTSTRIDE: u32 = 0b010;
+    /// Set requant shift CSR from uimm5.
+    pub const SHIFT: u32 = 0b011;
+    /// Set input-operand byte offset CSR from rs1.
+    pub const AOFFSET: u32 = 0b101;
+    /// Set write-back byte offset CSR from rs1.
+    pub const WOFFSET: u32 = 0b110;
+    /// Set output-channel store stride CSR from rs1.
+    pub const CSTRIDE: u32 = 0b000;
+    /// Set run decomposition (runstride from rs1, runlen in imm12).
+    pub const RUNCFG: u32 = 0b100;
+}
+
+/// `VSAM` funct6 minor opcodes.
+pub mod vsam_f6 {
+    /// Zero-init accumulate.
+    pub const MACZ: u32 = 0b000000;
+    /// Continue accumulate.
+    pub const MAC: u32 = 0b000001;
+    /// Partial write-back to VRF.
+    pub const WB: u32 = 0b000010;
+    /// Partial reload from VRF.
+    pub const LDACC: u32 = 0b000011;
+    /// Requant + direct store drain.
+    pub const ST: u32 = 0b000100;
+}
+
+/// RVV OP-V funct6 values for the standard subset.
+pub mod opv_f6 {
+    /// vadd (OPIVV).
+    pub const VADD: u32 = 0b000000;
+    /// vsra (OPIVI).
+    pub const VSRA: u32 = 0b101011;
+    /// vmul (OPMVV).
+    pub const VMUL: u32 = 0b100101;
+    /// vmacc (OPMVV).
+    pub const VMACC: u32 = 0b101101;
+}
+
+#[inline(always)]
+fn r_type(opcode: u32, rd: u32, funct3: u32, rs1: u32, rs2: u32, funct7: u32) -> u32 {
+    (funct7 << 25) | (rs2 << 20) | (rs1 << 15) | (funct3 << 12) | (rd << 7) | opcode
+}
+
+#[inline(always)]
+fn i_type(opcode: u32, rd: u32, funct3: u32, rs1: u32, imm12: u32) -> u32 {
+    ((imm12 & 0xFFF) << 20) | (rs1 << 15) | (funct3 << 12) | (rd << 7) | opcode
+}
+
+#[inline(always)]
+fn opv(funct6: u32, vm: u32, vs2: u32, vs1: u32, funct3: u32, vd: u32) -> u32 {
+    (funct6 << 26) | (vm << 25) | (vs2 << 20) | (vs1 << 15) | (funct3 << 12) | (vd << 7)
+        | opcodes::OP_V
+}
+
+/// Encode a decoded instruction into its 32-bit word.
+#[inline]
+pub fn encode(i: &Instr) -> u32 {
+    use opcodes::*;
+    match *i {
+        Instr::Lui { rd, imm20 } => ((imm20 as u32 & 0xFFFFF) << 12) | ((rd as u32) << 7) | LUI,
+        Instr::Addi { rd, rs1, imm12 } => {
+            i_type(OP_IMM, rd as u32, 0b000, rs1 as u32, imm12 as u32)
+        }
+        Instr::Slli { rd, rs1, shamt } => {
+            i_type(OP_IMM, rd as u32, 0b001, rs1 as u32, shamt as u32 & 0x3F)
+        }
+        Instr::Add { rd, rs1, rs2 } => r_type(OP, rd as u32, 0b000, rs1 as u32, rs2 as u32, 0),
+        Instr::Vsetvli { rd, rs1, vtype } => {
+            // bit31 = 0 selects vsetvli; zimm[10:0] at 30:20.
+            i_type(OP_V, rd as u32, 0b111, rs1 as u32, vtype.encode() & 0x7FF)
+        }
+        Instr::Vle { width, vd, rs1 } => {
+            // mew=0, mop=00 (unit stride), lumop=00000, nf=0, vm=1
+            i_type(LOAD_FP, vd as u32, width.funct3(), rs1 as u32, 1 << 5)
+        }
+        Instr::Vse { width, vs3, rs1 } => {
+            i_type(STORE_FP, vs3 as u32, width.funct3(), rs1 as u32, 1 << 5)
+        }
+        Instr::VmaccVv { vd, vs1, vs2 } => {
+            opv(opv_f6::VMACC, 1, vs2 as u32, vs1 as u32, 0b010, vd as u32)
+        }
+        Instr::VaddVv { vd, vs2, vs1 } => {
+            opv(opv_f6::VADD, 1, vs2 as u32, vs1 as u32, 0b000, vd as u32)
+        }
+        Instr::VmulVv { vd, vs2, vs1 } => {
+            opv(opv_f6::VMUL, 1, vs2 as u32, vs1 as u32, 0b010, vd as u32)
+        }
+        Instr::VsraVi { vd, vs2, uimm } => {
+            opv(opv_f6::VSRA, 1, vs2 as u32, (uimm & 0x1F) as u32, 0b011, vd as u32)
+        }
+        Instr::Vsacfg(cfg) => match cfg {
+            Vsacfg::Main { precision, strategy, tile_h } => {
+                let zimm9 = precision.encode() | (strategy.encode() << 2)
+                    | (((tile_h as u32) & 0x3F) << 3);
+                i_type(CUSTOM0, 0, vsacfg_f3::MAIN, 0, zimm9)
+            }
+            Vsacfg::RowStride { rs1, aincr } => {
+                i_type(CUSTOM0, 0, vsacfg_f3::ROWSTRIDE, rs1 as u32, aincr as u32 & 0xFFF)
+            }
+            Vsacfg::OutStride { rs1 } => i_type(CUSTOM0, 0, vsacfg_f3::OUTSTRIDE, rs1 as u32, 0),
+            Vsacfg::Shift { uimm5 } => {
+                i_type(CUSTOM0, (uimm5 & 0x1F) as u32, vsacfg_f3::SHIFT, 0, 0)
+            }
+            Vsacfg::AOffset { rs1 } => i_type(CUSTOM0, 0, vsacfg_f3::AOFFSET, rs1 as u32, 0),
+            Vsacfg::WOffset { rs1 } => i_type(CUSTOM0, 0, vsacfg_f3::WOFFSET, rs1 as u32, 0),
+            Vsacfg::CStride { rs1 } => i_type(CUSTOM0, 0, vsacfg_f3::CSTRIDE, rs1 as u32, 0),
+            Vsacfg::RunCfg { rs1, runlen } => {
+                i_type(CUSTOM0, 0, vsacfg_f3::RUNCFG, rs1 as u32, runlen as u32 & 0xFFF)
+            }
+        },
+        Instr::Vsald { vd, rs1, mode } => {
+            let imm = match mode {
+                LoadMode::OrderedStrided(s) | LoadMode::BroadcastStrided(s) => s as u32 & 0xFFF,
+                _ => 0,
+            };
+            i_type(CUSTOM1, vd as u32, mode.funct3(), rs1 as u32, imm)
+        }
+        Instr::Vsam(v) => {
+            // vm bit: 1 = plain, 0 = auto-bump (St reuses it for ReLU).
+            let (f6, vm, vd, vs1, vs2) = match v {
+                Vsam::MacZ { acc, vs1, vs2, bump } => (vsam_f6::MACZ, !bump as u32, acc, vs1, vs2),
+                Vsam::Mac { acc, vs1, vs2, bump } => (vsam_f6::MAC, !bump as u32, acc, vs1, vs2),
+                Vsam::Wb { vd, acc, bump } => (vsam_f6::WB, !bump as u32, vd, 0, acc),
+                Vsam::LdAcc { acc, vs1, bump } => (vsam_f6::LDACC, !bump as u32, acc, vs1, 0),
+                Vsam::St { acc, rs1, relu } => (vsam_f6::ST, relu as u32, 0, rs1, acc),
+            };
+            (f6 << 26) | (vm << 25) | ((vs2 as u32) << 20) | ((vs1 as u32) << 15)
+                | ((vd as u32) << 7) | CUSTOM2
+        }
+    }
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Precision;
+    use crate::isa::instr::{Strategy, VType};
+
+    #[test]
+    fn opcode_fields_land_where_expected() {
+        let w = encode(&Instr::Addi { rd: 5, rs1: 6, imm12: -1 });
+        assert_eq!(w & 0x7F, opcodes::OP_IMM);
+        assert_eq!((w >> 7) & 0x1F, 5);
+        assert_eq!((w >> 15) & 0x1F, 6);
+        assert_eq!(w >> 20, 0xFFF); // -1 sign bits
+    }
+
+    #[test]
+    fn vsacfg_main_packs_zimm9() {
+        let w = encode(&Instr::Vsacfg(Vsacfg::Main {
+            precision: Precision::Int8,
+            strategy: Strategy::ChannelFirst,
+            tile_h: 6,
+        }));
+        assert_eq!(w & 0x7F, opcodes::CUSTOM0);
+        let zimm9 = (w >> 20) & 0x1FF;
+        assert_eq!(zimm9 & 0b11, 0b01); // int8
+        assert_eq!((zimm9 >> 2) & 1, 1); // CF
+        assert_eq!((zimm9 >> 3) & 0b111, 6); // tile_h
+    }
+
+    #[test]
+    fn vsetvli_encodes_vtype() {
+        let vt = VType::new(16, 2).unwrap();
+        let w = encode(&Instr::Vsetvli { rd: 1, rs1: 10, vtype: vt });
+        assert_eq!(w & 0x7F, opcodes::OP_V);
+        assert_eq!(w >> 31, 0); // vsetvli, not vsetvl
+        assert_eq!((w >> 20) & 0x7FF, vt.encode());
+    }
+
+    #[test]
+    fn vsam_st_relu_in_vm_bit() {
+        let w = encode(&Instr::Vsam(Vsam::St { acc: 2, rs1: 11, relu: true }));
+        assert_eq!(w & 0x7F, opcodes::CUSTOM2);
+        assert_eq!((w >> 25) & 1, 1);
+        assert_eq!((w >> 26), vsam_f6::ST);
+        let w2 = encode(&Instr::Vsam(Vsam::St { acc: 2, rs1: 11, relu: false }));
+        assert_eq!((w2 >> 25) & 1, 0);
+    }
+}

@@ -1,0 +1,472 @@
+//! Decoded instruction forms.
+//!
+//! `Instr` is the semantic form consumed by the simulator after the VIDU
+//! decodes a raw 32-bit word; the encoder ([`crate::isa::encode::encode`]) and
+//! decoder ([`crate::isa::decode::decode`]) round-trip every variant bit-exactly.
+
+use crate::arch::Precision;
+
+/// Dataflow strategy selected by `VSACFG` (paper Sec. II-C).
+///
+/// `Mixed` is a *compiler-level* policy (pick the better of FF/CF per
+/// layer, Fig. 3); only FF and CF exist at the ISA level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// Feature-map-first: spatial input reuse, partial sums spilled to VRF
+    /// between input-channel stages. Best for large kernels.
+    FeatureFirst,
+    /// Channel-first: accumulate across input channels inside the SAU.
+    /// Best for small (1×1) kernels.
+    ChannelFirst,
+    /// Per-layer best-of (FF vs CF); not encodable, compiler-level only.
+    Mixed,
+}
+
+impl Strategy {
+    /// One-bit ISA encoding (FF=0, CF=1). `Mixed` is not encodable.
+    pub fn encode(self) -> u32 {
+        match self {
+            Strategy::FeatureFirst => 0,
+            Strategy::ChannelFirst => 1,
+            Strategy::Mixed => panic!("Mixed is a compiler policy, not an ISA encoding"),
+        }
+    }
+
+    /// Decode the one-bit field.
+    pub fn decode(bit: u32) -> Strategy {
+        if bit & 1 == 0 {
+            Strategy::FeatureFirst
+        } else {
+            Strategy::ChannelFirst
+        }
+    }
+
+    /// Short name used in reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::FeatureFirst => "FF",
+            Strategy::ChannelFirst => "CF",
+            Strategy::Mixed => "Mixed",
+        }
+    }
+}
+
+impl std::fmt::Display for Strategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Element width for standard RVV loads/stores (`vle*`/`vse*`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ElemWidth {
+    /// 8-bit elements.
+    E8,
+    /// 16-bit elements.
+    E16,
+    /// 32-bit elements.
+    E32,
+}
+
+impl ElemWidth {
+    /// RVV width encoding in the load/store `funct3` field
+    /// (8→000, 16→101, 32→110 per the V spec).
+    pub fn funct3(self) -> u32 {
+        match self {
+            ElemWidth::E8 => 0b000,
+            ElemWidth::E16 => 0b101,
+            ElemWidth::E32 => 0b110,
+        }
+    }
+
+    /// Decode the `funct3` width field.
+    pub fn from_funct3(f: u32) -> Option<Self> {
+        match f {
+            0b000 => Some(ElemWidth::E8),
+            0b101 => Some(ElemWidth::E16),
+            0b110 => Some(ElemWidth::E32),
+            _ => None,
+        }
+    }
+
+    /// Width in bits.
+    pub fn bits(self) -> usize {
+        match self {
+            ElemWidth::E8 => 8,
+            ElemWidth::E16 => 16,
+            ElemWidth::E32 => 32,
+        }
+    }
+
+    /// Width in bytes.
+    pub fn bytes(self) -> usize {
+        self.bits() / 8
+    }
+}
+
+/// `vtype` CSR contents set by `vsetvli` (subset: SEW + LMUL, `vma`/`vta`
+/// ignored by the DNN path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct VType {
+    /// Selected element width in bits (8/16/32/64).
+    pub sew_bits: u32,
+    /// Register-group multiplier (1, 2, 4, 8).
+    pub lmul: u32,
+}
+
+impl VType {
+    /// Construct, validating SEW/LMUL.
+    pub fn new(sew_bits: u32, lmul: u32) -> Option<Self> {
+        if ![8, 16, 32, 64].contains(&sew_bits) || ![1, 2, 4, 8].contains(&lmul) {
+            return None;
+        }
+        Some(VType { sew_bits, lmul })
+    }
+
+    /// Encode into the `vsetvli` zimm\[10:0\] field (vlmul\[2:0\], vsew\[5:3\]).
+    pub fn encode(self) -> u32 {
+        let vsew = match self.sew_bits {
+            8 => 0b000,
+            16 => 0b001,
+            32 => 0b010,
+            64 => 0b011,
+            _ => unreachable!(),
+        };
+        let vlmul = match self.lmul {
+            1 => 0b000,
+            2 => 0b001,
+            4 => 0b010,
+            8 => 0b011,
+            _ => unreachable!(),
+        };
+        (vsew << 3) | vlmul
+    }
+
+    /// Decode from the zimm field.
+    pub fn decode(zimm: u32) -> Option<Self> {
+        let sew_bits = match (zimm >> 3) & 0b111 {
+            0b000 => 8,
+            0b001 => 16,
+            0b010 => 32,
+            0b011 => 64,
+            _ => return None,
+        };
+        let lmul = match zimm & 0b111 {
+            0b000 => 1,
+            0b001 => 2,
+            0b010 => 4,
+            0b011 => 8,
+            _ => return None,
+        };
+        Some(VType { sew_bits, lmul })
+    }
+}
+
+/// `VSALD` distribution mode (paper Sec. II-A: broadcast vs the ordered
+/// allocation of standard `VLE`), plus strided variants used by the FF
+/// strategy's single-channel patch fetches (elements `stride` apart in
+/// external memory gather into a dense VRF run).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LoadMode {
+    /// Block element distribution across lanes (VLE-like).
+    Ordered,
+    /// Same data replicated into every lane's VRF slice — the paper's
+    /// input-reuse mechanism.
+    Broadcast,
+    /// Ordered with an element stride (in unified elements).
+    OrderedStrided(u16),
+    /// Broadcast with an element stride (in unified elements).
+    BroadcastStrided(u16),
+}
+
+impl LoadMode {
+    /// `funct3` minor opcode for VSALD.
+    pub fn funct3(self) -> u32 {
+        match self {
+            LoadMode::Ordered => 0b000,
+            LoadMode::Broadcast => 0b001,
+            LoadMode::OrderedStrided(_) => 0b010,
+            LoadMode::BroadcastStrided(_) => 0b011,
+        }
+    }
+
+    /// Element stride in external memory (1 = unit stride).
+    pub fn stride_elems(self) -> usize {
+        match self {
+            LoadMode::Ordered | LoadMode::Broadcast => 1,
+            LoadMode::OrderedStrided(s) | LoadMode::BroadcastStrided(s) => s as usize,
+        }
+    }
+
+    /// True for the broadcast (replicating) variants.
+    pub fn is_broadcast(self) -> bool {
+        matches!(self, LoadMode::Broadcast | LoadMode::BroadcastStrided(_))
+    }
+}
+
+/// `VSACFG` minor operations (funct3-selected).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Vsacfg {
+    /// Main configuration: precision + strategy + TILE_H in `zimm9`,
+    /// accumulator-bank hint in `uimm5` (paper Fig. 1 encoding spaces).
+    Main {
+        /// Processing precision (4/8/16-bit).
+        precision: Precision,
+        /// FF or CF dataflow.
+        strategy: Strategy,
+        /// TILE_H: input rows fetched per spatial pass
+        /// (= TILE_R + K − 1; 6-bit field).
+        tile_h: u8,
+    },
+    /// Program the SAU address generator's input row stride
+    /// (unified elements) from `rs1` (0 selects dense), and the
+    /// auto-increment applied to `vsa_aoffset` after each auto-bumping
+    /// `VSAM` (`aincr`, bytes, 12-bit immediate) — the x-sweep step.
+    RowStride {
+        /// Source integer register.
+        rs1: u8,
+        /// Auto-increment of the input offset per bumping VSAM, bytes.
+        aincr: u16,
+    },
+    /// Program the output store stride in bytes from `rs1`
+    /// (distance between output rows in external memory).
+    OutStride {
+        /// Source integer register.
+        rs1: u8,
+    },
+    /// Program the requantization right-shift applied on drain (`uimm5`).
+    Shift {
+        /// Shift amount, 0–31.
+        uimm5: u8,
+    },
+    /// Program the input-operand byte offset added to `vs1`'s base by the
+    /// address generator (windowed x-sweep) from `rs1`.
+    AOffset {
+        /// Source integer register.
+        rs1: u8,
+    },
+    /// Program the write-back byte offset added to `vd`'s base on
+    /// `vsam.wb`/`vsam.ldacc` from `rs1`.
+    WOffset {
+        /// Source integer register.
+        rs1: u8,
+    },
+    /// Program the output-channel store stride in bytes (distance between
+    /// consecutive output channels in external memory) from `rs1`.
+    CStride {
+        /// Source integer register.
+        rs1: u8,
+    },
+    /// Program the address generator's two-level run decomposition: a
+    /// `VSAM` stream of `vl` elements is generated as runs of
+    /// `runlen` contiguous elements whose starts are `rs1` (runstride)
+    /// elements apart — this is how one `VSAM` covers a full K×K kernel
+    /// window (run per kernel row). `runlen = 0` means a single dense run.
+    RunCfg {
+        /// Integer register holding the run stride in elements.
+        rs1: u8,
+        /// Run length in elements (12-bit immediate).
+        runlen: u16,
+    },
+}
+
+/// `VSAM` minor operations (funct6-selected).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Vsam {
+    /// Zero accumulator bank `acc`, then stream `vl` unified elements from
+    /// input matrix at vreg `vs1` and weight matrix at vreg `vs2`.
+    /// `bump` (the inverted `vm` bit) auto-increments `vsa_aoffset` by
+    /// `aincr` afterwards — one instruction per output column.
+    MacZ {
+        /// Accumulator bank (0..n_acc_banks).
+        acc: u8,
+        /// Input matrix base vreg (`[TILE_R][vl]` unified elements,
+        /// row stride = `vsa_rowstride` CSR or dense).
+        vs1: u8,
+        /// Weight matrix base vreg (`[TILE_C][vl]`, always dense).
+        vs2: u8,
+        /// Auto-bump the input offset after execution.
+        bump: bool,
+    },
+    /// As `MacZ` but accumulate on top of the existing bank contents
+    /// (CF input-channel staging).
+    Mac {
+        /// Accumulator bank.
+        acc: u8,
+        /// Input matrix base vreg.
+        vs1: u8,
+        /// Weight matrix base vreg.
+        vs2: u8,
+        /// Auto-bump the input offset after execution.
+        bump: bool,
+    },
+    /// Write accumulator bank `acc` (raw 32-bit partials) back to the VRF
+    /// at vreg `vd` — FF inter-stage partial-sum spill. Uses (and with
+    /// `bump` auto-advances) the write-side partial offset counter.
+    Wb {
+        /// Destination vreg.
+        vd: u8,
+        /// Source accumulator bank.
+        acc: u8,
+        /// Auto-advance the write offset counter by one partial tile.
+        bump: bool,
+    },
+    /// Reload raw partials from vreg `vs1` into accumulator bank `acc` —
+    /// FF inter-stage partial-sum restore. Uses (and with `bump`
+    /// auto-advances) the read-side partial offset counter.
+    LdAcc {
+        /// Destination accumulator bank.
+        acc: u8,
+        /// Source vreg.
+        vs1: u8,
+        /// Auto-advance the read offset counter by one partial tile.
+        bump: bool,
+    },
+    /// Drain bank `acc`: requantize (shift by `vsa_shift`, saturate to the
+    /// configured precision, optional ReLU via `relu`) and store directly
+    /// to external memory at address `x[rs1]` with row stride
+    /// `vsa_outstride` — the SAU output queue's write-through path.
+    St {
+        /// Source accumulator bank.
+        acc: u8,
+        /// Integer register holding the destination base address.
+        rs1: u8,
+        /// Fuse ReLU into the drain.
+        relu: bool,
+    },
+}
+
+/// A decoded instruction (scalar RV64I subset + RVV subset + customized).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Instr {
+    // ---- scalar RV64I subset (address/constant synthesis) ----
+    /// Load upper immediate.
+    Lui {
+        /// Destination register.
+        rd: u8,
+        /// 20-bit immediate (placed at bits 31:12).
+        imm20: i32,
+    },
+    /// Add immediate (also `li`/`mv` idioms).
+    Addi {
+        /// Destination register.
+        rd: u8,
+        /// Source register.
+        rs1: u8,
+        /// 12-bit signed immediate.
+        imm12: i32,
+    },
+    /// Shift left logical immediate (RV64: 6-bit shamt).
+    Slli {
+        /// Destination register.
+        rd: u8,
+        /// Source register.
+        rs1: u8,
+        /// Shift amount 0–63.
+        shamt: u8,
+    },
+    /// Register-register add.
+    Add {
+        /// Destination register.
+        rd: u8,
+        /// First source.
+        rs1: u8,
+        /// Second source.
+        rs2: u8,
+    },
+
+    // ---- standard RVV v1.0 subset ----
+    /// `vsetvli rd, rs1, vtypei`.
+    Vsetvli {
+        /// Destination (receives new `vl`).
+        rd: u8,
+        /// AVL source register (x0 ⇒ keep/max semantics).
+        rs1: u8,
+        /// Requested type.
+        vtype: VType,
+    },
+    /// Unit-stride vector load `vle<w>.v vd, (rs1)`.
+    Vle {
+        /// Element width.
+        width: ElemWidth,
+        /// Destination vreg.
+        vd: u8,
+        /// Base address register.
+        rs1: u8,
+    },
+    /// Unit-stride vector store `vse<w>.v vs3, (rs1)`.
+    Vse {
+        /// Element width.
+        width: ElemWidth,
+        /// Source vreg.
+        vs3: u8,
+        /// Base address register.
+        rs1: u8,
+    },
+    /// `vmacc.vv vd, vs1, vs2` (vd += vs1 × vs2) — Ara's conv workhorse.
+    VmaccVv {
+        /// Accumulator vreg.
+        vd: u8,
+        /// Multiplier vreg.
+        vs1: u8,
+        /// Multiplicand vreg.
+        vs2: u8,
+    },
+    /// `vadd.vv vd, vs2, vs1`.
+    VaddVv {
+        /// Destination vreg.
+        vd: u8,
+        /// First source.
+        vs2: u8,
+        /// Second source.
+        vs1: u8,
+    },
+    /// `vmul.vv vd, vs2, vs1`.
+    VmulVv {
+        /// Destination vreg.
+        vd: u8,
+        /// First source.
+        vs2: u8,
+        /// Second source.
+        vs1: u8,
+    },
+    /// `vsra.vi vd, vs2, uimm` — arithmetic right shift (requant).
+    VsraVi {
+        /// Destination vreg.
+        vd: u8,
+        /// Source vreg.
+        vs2: u8,
+        /// Shift amount 0–31.
+        uimm: u8,
+    },
+
+    // ---- customized (paper Sec. II-A) ----
+    /// Configuration-setting instruction.
+    Vsacfg(Vsacfg),
+    /// Customized load (broadcast/ordered).
+    Vsald {
+        /// Destination vreg.
+        vd: u8,
+        /// Base address register.
+        rs1: u8,
+        /// Distribution mode.
+        mode: LoadMode,
+    },
+    /// Customized systolic-array arithmetic.
+    Vsam(Vsam),
+}
+
+impl Instr {
+    /// True if this instruction occupies the vector pipeline (VIDU-issued).
+    pub fn is_vector(&self) -> bool {
+        !matches!(
+            self,
+            Instr::Lui { .. } | Instr::Addi { .. } | Instr::Slli { .. } | Instr::Add { .. }
+        )
+    }
+
+    /// True for the customized (non-standard-RVV) instructions.
+    pub fn is_custom(&self) -> bool {
+        matches!(self, Instr::Vsacfg(_) | Instr::Vsald { .. } | Instr::Vsam(_))
+    }
+}

@@ -1,0 +1,39 @@
+//! ISA layer: RVV v1.0 subset + SPEED's customized instructions.
+//!
+//! The paper (Sec. II-A, Fig. 1) adds three customized instructions on top
+//! of the standard RVV v1.0 extension:
+//!
+//! - **`VSACFG`** — vector configuration-setting: data precision
+//!   (4/8/16-bit) and dataflow strategy (FF/CF) in the `zimm9` space plus
+//!   a `uimm5` field; we additionally expose the SAU's address-generator
+//!   CSRs (row stride, output stride, requant shift) through `funct3`
+//!   minor opcodes, which is how a real implementation would program the
+//!   operand requester.
+//! - **`VSALD`** — customized load: moves data from external memory into
+//!   the VRFs, either *broadcast* to every lane (input reuse) or *ordered*
+//!   (standard VLE-like distribution, used for per-lane weights).
+//! - **`VSAM`** — customized arithmetic: streams `vl` unified elements
+//!   from VRF base addresses `vs1`/`vs2` through the systolic array core
+//!   and accumulates into an accumulator bank (`Acc Addr`); minor opcodes
+//!   cover zero-init, continue-accumulate, partial-sum write-back/reload
+//!   (FF inter-stage traffic) and fused requant-store drain.
+//!
+//! Encodings use the RISC-V custom-0/1/2 opcode spaces (0x0B/0x2B/0x5B),
+//! structured exactly like the standard I/R formats so the
+//! encoder/decoder round-trips through real 32-bit words — the simulator's
+//! VIDU consumes encoded words, not an IR.
+
+pub mod asm;
+pub mod decode;
+pub mod disasm;
+pub mod encode;
+pub mod instr;
+pub mod program;
+pub mod regs;
+
+pub use asm::assemble;
+pub use decode::decode;
+pub use disasm::disassemble;
+pub use encode::encode;
+pub use instr::{ElemWidth, Instr, LoadMode, Strategy, Vsacfg, Vsam, VType};
+pub use program::Program;

@@ -1,0 +1,73 @@
+//! Register-name tables: integer (x0–x31 + ABI aliases) and vector
+//! (v0–v31) registers, used by the assembler and disassembler.
+
+/// ABI names for the 32 integer registers, indexed by number.
+pub const X_ABI: [&str; 32] = [
+    "zero", "ra", "sp", "gp", "tp", "t0", "t1", "t2", "s0", "s1", "a0", "a1", "a2", "a3", "a4",
+    "a5", "a6", "a7", "s2", "s3", "s4", "s5", "s6", "s7", "s8", "s9", "s10", "s11", "t3", "t4",
+    "t5", "t6",
+];
+
+/// Parse an integer-register name (`x7`, `t0`, `zero`, …) to its index.
+pub fn parse_xreg(s: &str) -> Option<u8> {
+    if let Some(n) = s.strip_prefix('x') {
+        if let Ok(i) = n.parse::<u8>() {
+            if i < 32 {
+                return Some(i);
+            }
+        }
+    }
+    X_ABI.iter().position(|&a| a == s).map(|i| i as u8)
+}
+
+/// Parse a vector-register name (`v0`–`v31`) to its index.
+pub fn parse_vreg(s: &str) -> Option<u8> {
+    let n = s.strip_prefix('v')?;
+    let i = n.parse::<u8>().ok()?;
+    (i < 32).then_some(i)
+}
+
+/// Format an integer register using its ABI name.
+pub fn xreg_name(i: u8) -> String {
+    X_ABI
+        .get(i as usize)
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| format!("x{i}"))
+}
+
+/// Format a vector register.
+pub fn vreg_name(i: u8) -> String {
+    format!("v{i}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xreg_aliases() {
+        assert_eq!(parse_xreg("zero"), Some(0));
+        assert_eq!(parse_xreg("x0"), Some(0));
+        assert_eq!(parse_xreg("a0"), Some(10));
+        assert_eq!(parse_xreg("t6"), Some(31));
+        assert_eq!(parse_xreg("x31"), Some(31));
+        assert_eq!(parse_xreg("x32"), None);
+        assert_eq!(parse_xreg("q3"), None);
+    }
+
+    #[test]
+    fn vreg_parse() {
+        assert_eq!(parse_vreg("v0"), Some(0));
+        assert_eq!(parse_vreg("v31"), Some(31));
+        assert_eq!(parse_vreg("v32"), None);
+        assert_eq!(parse_vreg("x1"), None);
+    }
+
+    #[test]
+    fn roundtrip_names() {
+        for i in 0..32u8 {
+            assert_eq!(parse_xreg(&xreg_name(i)), Some(i));
+            assert_eq!(parse_vreg(&vreg_name(i)), Some(i));
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Per-lane vector ALU: the standard-RVV arithmetic subset
+//! (`vadd.vv`, `vmul.vv`, `vmacc.vv`, `vsra.vi`) operating on the lane's
+//! local VRF bytes as packed SEW-bit elements.
+//!
+//! The SPEED DNN hot path runs through the SAU, but the ALU keeps the
+//! processor a *complete* RVV machine: Ara-style code (and our tests)
+//! exercise it, and requant fallbacks use `vsra`.
+
+use crate::error::Result;
+use crate::mem::Vrf;
+
+fn load_elems(vrf: &Vrf, vreg: u8, sew_bits: u32, n: usize) -> Result<Vec<i64>> {
+    let bytes = vrf.peek(vreg, 0, n * sew_bits as usize / 8)?;
+    Ok(match sew_bits {
+        8 => bytes.iter().map(|&b| b as i8 as i64).collect(),
+        16 => bytes.chunks_exact(2).map(|c| i16::from_le_bytes([c[0], c[1]]) as i64).collect(),
+        32 => bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as i64)
+            .collect(),
+        64 => bytes
+            .chunks_exact(8)
+            .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+            .collect(),
+        _ => unreachable!("validated SEW"),
+    })
+}
+
+fn store_elems(vrf: &mut Vrf, vreg: u8, sew_bits: u32, vals: &[i64]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(vals.len() * sew_bits as usize / 8);
+    for &v in vals {
+        match sew_bits {
+            8 => bytes.push(v as u8),
+            16 => bytes.extend_from_slice(&(v as i16).to_le_bytes()),
+            32 => bytes.extend_from_slice(&(v as i32).to_le_bytes()),
+            64 => bytes.extend_from_slice(&v.to_le_bytes()),
+            _ => unreachable!("validated SEW"),
+        }
+    }
+    vrf.write(vreg, 0, &bytes)
+}
+
+/// Element-wise `vd = vs2 + vs1` over `n` lane-local elements.
+pub fn vadd(vrf: &mut Vrf, vd: u8, vs2: u8, vs1: u8, sew_bits: u32, n: usize) -> Result<()> {
+    let a = load_elems(vrf, vs2, sew_bits, n)?;
+    let b = load_elems(vrf, vs1, sew_bits, n)?;
+    let out: Vec<i64> = a.iter().zip(&b).map(|(&x, &y)| x.wrapping_add(y)).collect();
+    store_elems(vrf, vd, sew_bits, &out)
+}
+
+/// Element-wise `vd = vs2 * vs1` (low SEW bits, wrapping).
+pub fn vmul(vrf: &mut Vrf, vd: u8, vs2: u8, vs1: u8, sew_bits: u32, n: usize) -> Result<()> {
+    let a = load_elems(vrf, vs2, sew_bits, n)?;
+    let b = load_elems(vrf, vs1, sew_bits, n)?;
+    let out: Vec<i64> = a.iter().zip(&b).map(|(&x, &y)| x.wrapping_mul(y)).collect();
+    store_elems(vrf, vd, sew_bits, &out)
+}
+
+/// Element-wise `vd += vs1 * vs2` (vmacc).
+pub fn vmacc(vrf: &mut Vrf, vd: u8, vs1: u8, vs2: u8, sew_bits: u32, n: usize) -> Result<()> {
+    let a = load_elems(vrf, vs1, sew_bits, n)?;
+    let b = load_elems(vrf, vs2, sew_bits, n)?;
+    let d = load_elems(vrf, vd, sew_bits, n)?;
+    let out: Vec<i64> = (0..n).map(|i| d[i].wrapping_add(a[i].wrapping_mul(b[i]))).collect();
+    store_elems(vrf, vd, sew_bits, &out)
+}
+
+/// Element-wise arithmetic right shift `vd = vs2 >> uimm`.
+pub fn vsra(vrf: &mut Vrf, vd: u8, vs2: u8, uimm: u8, sew_bits: u32, n: usize) -> Result<()> {
+    let a = load_elems(vrf, vs2, sew_bits, n)?;
+    let out: Vec<i64> = a.iter().map(|&x| x >> uimm).collect();
+    store_elems(vrf, vd, sew_bits, &out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vrf_with(vreg: u8, vals: &[i64], sew: u32) -> Vrf {
+        let mut v = Vrf::new(32, 128, 8, 8);
+        store_elems(&mut v, vreg, sew, vals).unwrap();
+        v
+    }
+
+    #[test]
+    fn vadd_wraps_at_sew() {
+        let mut v = vrf_with(1, &[120, -5], 8);
+        store_elems(&mut v, 2, 8, &[10, -4]).unwrap();
+        vadd(&mut v, 3, 1, 2, 8, 2).unwrap();
+        let out = load_elems(&v, 3, 8, 2).unwrap();
+        assert_eq!(out, vec![-126, -9]); // 130 wraps to -126 at 8 bits
+    }
+
+    #[test]
+    fn vmacc_accumulates() {
+        let mut v = vrf_with(1, &[2, 3], 16);
+        store_elems(&mut v, 2, 16, &[10, 20]).unwrap();
+        store_elems(&mut v, 3, 16, &[1, 1]).unwrap();
+        vmacc(&mut v, 3, 1, 2, 16, 2).unwrap();
+        assert_eq!(load_elems(&v, 3, 16, 2).unwrap(), vec![21, 61]);
+    }
+
+    #[test]
+    fn vsra_shifts_arithmetically() {
+        let mut v = vrf_with(1, &[-256, 255], 32);
+        vsra(&mut v, 2, 1, 4, 32, 2).unwrap();
+        assert_eq!(load_elems(&v, 2, 32, 2).unwrap(), vec![-16, 15]);
+    }
+
+    #[test]
+    fn vmul_low_bits() {
+        let mut v = vrf_with(1, &[100, -3], 8);
+        store_elems(&mut v, 2, 8, &[3, 50]).unwrap();
+        vmul(&mut v, 4, 1, 2, 8, 2).unwrap();
+        assert_eq!(load_elems(&v, 4, 8, 2).unwrap(), vec![44, 106]); // 300, -150 wrapped
+    }
+}

@@ -1,0 +1,56 @@
+//! Lane — the scalable module (paper Sec. II-B): lane sequencer, VRF
+//! slice, SAU and vector ALU.
+
+pub mod alu;
+pub mod sequencer;
+
+use crate::arch::SpeedConfig;
+use crate::mem::Vrf;
+use crate::pe::SaCore;
+use crate::sau::Sau;
+use sequencer::Sequencer;
+
+/// One scalable module of SPEED.
+#[derive(Debug, Clone)]
+pub struct Lane {
+    /// This lane's VRF slice.
+    pub vrf: Vrf,
+    /// This lane's SA core (with accumulator banks).
+    pub sa: SaCore,
+    /// This lane's SAU control (operand requester + queues).
+    pub sau: Sau,
+    /// The lane sequencer (issue bookkeeping + stats).
+    pub seq: Sequencer,
+}
+
+impl Lane {
+    /// Build a lane from the machine configuration.
+    pub fn new(cfg: &SpeedConfig) -> Self {
+        Lane {
+            vrf: Vrf::new(
+                cfg.n_vregs,
+                cfg.vreg_bytes_per_lane(),
+                cfg.vrf_banks_per_lane,
+                cfg.vrf_bank_bytes,
+            ),
+            sa: SaCore::new(cfg.tile_r, cfg.tile_c, cfg.n_acc_banks),
+            sau: Sau::new(cfg),
+            seq: Sequencer::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_construction_matches_config() {
+        let cfg = SpeedConfig::default();
+        let lane = Lane::new(&cfg);
+        assert_eq!(lane.vrf.capacity(), cfg.vrf_bytes_per_lane());
+        assert_eq!(lane.sa.tile_r(), cfg.tile_r);
+        assert_eq!(lane.sa.tile_c(), cfg.tile_c);
+        assert_eq!(lane.sa.n_banks(), cfg.n_acc_banks);
+    }
+}

@@ -1,0 +1,62 @@
+//! Lane sequencer: accepts operations from the VIDU and tracks when the
+//! lane's SAU/ALU datapaths become free. Lanes run in lockstep (the VIDU
+//! broadcasts every vector instruction to all lanes), so the processor
+//! keeps one authoritative timeline and the sequencer records per-lane
+//! statistics.
+
+/// Issue bookkeeping for one lane.
+#[derive(Debug, Clone, Default)]
+pub struct Sequencer {
+    /// Vector operations accepted.
+    pub ops_accepted: u64,
+    /// Cycles the SAU datapath was busy.
+    pub sau_busy_cycles: u64,
+    /// Cycles the ALU datapath was busy.
+    pub alu_busy_cycles: u64,
+}
+
+impl Sequencer {
+    /// Fresh sequencer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record an accepted SAU operation of `cycles` duration.
+    pub fn accept_sau(&mut self, cycles: u64) {
+        self.ops_accepted += 1;
+        self.sau_busy_cycles += cycles;
+    }
+
+    /// Record an accepted ALU operation of `cycles` duration.
+    pub fn accept_alu(&mut self, cycles: u64) {
+        self.ops_accepted += 1;
+        self.alu_busy_cycles += cycles;
+    }
+
+    /// Datapath occupancy given a total elapsed cycle count.
+    pub fn utilization(&self, total_cycles: u64) -> f64 {
+        if total_cycles == 0 {
+            0.0
+        } else {
+            (self.sau_busy_cycles + self.alu_busy_cycles) as f64 / total_cycles as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting() {
+        let mut s = Sequencer::new();
+        s.accept_sau(10);
+        s.accept_sau(5);
+        s.accept_alu(3);
+        assert_eq!(s.ops_accepted, 3);
+        assert_eq!(s.sau_busy_cycles, 15);
+        assert_eq!(s.alu_busy_cycles, 3);
+        assert!((s.utilization(36) - 0.5).abs() < 1e-12);
+        assert_eq!(s.utilization(0), 0.0);
+    }
+}

@@ -1,0 +1,60 @@
+//! # SPEED — scalable RISC-V vector processor for multi-precision DNN inference
+//!
+//! Reproduction of *"A Scalable RISC-V Vector Processor Enabling Efficient
+//! Multi-Precision DNN Inference"* (ISCAS 2024): a cycle-accurate,
+//! functionally bit-exact simulator of the SPEED microarchitecture
+//! (customized RVV instructions `VSACFG`/`VSALD`/`VSAM`, per-lane
+//! multi-precision systolic array units, FF/CF/mixed dataflow), an Ara
+//! baseline model, analytical 28 nm area/energy models, and an XLA/PJRT
+//! golden runtime fed by JAX+Pallas AOT artifacts.
+//!
+//! ## Layering
+//!
+//! - [`isa`] — RVV v1.0 subset + the paper's customized instructions:
+//!   formats, encoder, decoder, assembler, disassembler.
+//! - [`pe`] — bit-exact multi-precision MAC arithmetic (sixteen 4-bit
+//!   multipliers dynamically combined per PE).
+//! - [`mem`] — external memory + banked vector register file models.
+//! - [`sau`] — systolic array unit: operand requester (address generator +
+//!   request arbiter), operand queues, SA core.
+//! - [`lane`] — scalable module: sequencer, VRF slice, SAU, vector ALU.
+//! - [`core`] — processor top: VIDU, VLDU, cycle engine, statistics.
+//! - [`dataflow`] — FF/CF/mixed strategies and the conv→instruction
+//!   compiler.
+//! - [`models`] — conv-layer zoo: VGG16, ResNet18, GoogLeNet, SqueezeNet.
+//! - [`baseline`] — Ara cycle/area/energy model.
+//! - [`cost`] — area/power models calibrated to the paper's synthesis data.
+//! - [`runtime`] — PJRT client wrapper: load `artifacts/*.hlo.txt` goldens.
+//! - [`coordinator`] — experiment drivers regenerating every figure/table.
+//!
+//! ## Example
+//!
+//! ```no_run
+//! use speed::arch::{Precision, SpeedConfig};
+//! use speed::coordinator::simulate_layer;
+//! use speed::dataflow::{ConvLayer, Strategy};
+//!
+//! let cfg = SpeedConfig::default(); // the paper's 4-lane / 4x4-SAU config
+//! let layer = ConvLayer::new("demo", 16, 16, 14, 14, 3, 1, 1);
+//! let r = simulate_layer(&cfg, &layer, Precision::Int8, Strategy::Mixed).unwrap();
+//! assert!(r.cycles > 0 && r.gops(&cfg) > 0.0);
+//! assert!(r.utilization(&cfg) <= 1.0);
+//! ```
+
+pub mod arch;
+pub mod baseline;
+pub mod coordinator;
+pub mod core;
+pub mod cost;
+pub mod dataflow;
+pub mod error;
+pub mod isa;
+pub mod lane;
+pub mod mem;
+pub mod models;
+pub mod pe;
+pub mod runtime;
+pub mod sau;
+pub mod testutil;
+
+pub use error::{Error, Result};

@@ -1,0 +1,262 @@
+//! SPEED CLI — the leader entrypoint: run experiments, simulate models,
+//! assemble/disassemble programs, verify against the XLA goldens.
+//!
+//! ```text
+//! speed fig3|fig4|fig5|table1|all [--out DIR] [config flags]
+//! speed sim --model NAME [--prec 4|8|16] [--strategy ff|cf|mixed]
+//! speed asm FILE.s            # assemble + hexdump
+//! speed disasm FILE.bin       # disassemble 32-bit words
+//! speed golden-check [--artifacts DIR]
+//!
+//! config flags: --lanes N --vlen BITS --tile-r N --tile-c N
+//!               --dram-bw BYTES/CYC --freq MHZ
+//! ```
+
+use speed::arch::{Precision, SpeedConfig};
+use speed::coordinator::experiments::{
+    headline_checks, run_fig3, run_fig4, run_fig5, run_table1,
+};
+use speed::coordinator::report;
+use speed::coordinator::simulate_layer;
+use speed::cost::speed_area_breakdown;
+use speed::dataflow::Strategy;
+use speed::models::model_by_name;
+
+fn usage() -> ! {
+    eprintln!("{}", "usage: speed <fig3|fig4|fig5|table1|all|sim|asm|disasm|golden-check> [flags]\n  see `speed --help` in README.md for flag reference");
+    std::process::exit(2);
+}
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Flags(Vec<(String, String)>);
+
+impl Flags {
+    fn parse(args: &[String]) -> (Vec<String>, Flags) {
+        let mut pos = Vec::new();
+        let mut kv = Vec::new();
+        let mut it = args.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = it.next().cloned().unwrap_or_default();
+                kv.push((key.to_string(), val));
+            } else {
+                pos.push(a.clone());
+            }
+        }
+        (pos, Flags(kv))
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.0.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    fn num<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+}
+
+fn config_from(flags: &Flags) -> SpeedConfig {
+    let mut cfg = SpeedConfig::default();
+    if let Some(v) = flags.num("lanes") {
+        cfg.n_lanes = v;
+    }
+    if let Some(v) = flags.num("vlen") {
+        cfg.vlen_bits = v;
+    }
+    if let Some(v) = flags.num("tile-r") {
+        cfg.tile_r = v;
+    }
+    if let Some(v) = flags.num("tile-c") {
+        cfg.tile_c = v;
+    }
+    if let Some(v) = flags.num("dram-bw") {
+        cfg.dram_bw_bytes_per_cycle = v;
+    }
+    if let Some(v) = flags.num("freq") {
+        cfg.freq_mhz = v;
+    }
+    cfg
+}
+
+fn parse_precision(s: &str) -> Precision {
+    match s {
+        "4" | "int4" => Precision::Int4,
+        "8" | "int8" => Precision::Int8,
+        "16" | "int16" => Precision::Int16,
+        _ => {
+            eprintln!("bad precision `{s}` (4/8/16)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn parse_strategy(s: &str) -> Strategy {
+    match s {
+        "ff" => Strategy::FeatureFirst,
+        "cf" => Strategy::ChannelFirst,
+        "mixed" => Strategy::Mixed,
+        _ => {
+            eprintln!("bad strategy `{s}` (ff/cf/mixed)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn write_out(dir: Option<&str>, name: &str, content: &str) {
+    if let Some(d) = dir {
+        std::fs::create_dir_all(d).expect("create out dir");
+        let path = std::path::Path::new(d).join(name);
+        std::fs::write(&path, content).expect("write report");
+        eprintln!("wrote {path:?}");
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+    }
+    let cmd = args[0].as_str();
+    let (pos, flags) = Flags::parse(&args[1..]);
+    let cfg = config_from(&flags);
+    let out = flags.get("out");
+
+    match cmd {
+        "fig3" => {
+            let f = run_fig3(&cfg)?;
+            let md = report::fig3_markdown(&f);
+            println!("{md}");
+            write_out(out, "fig3.md", &md);
+            write_out(out, "fig3.csv", &report::fig3_csv(&f));
+        }
+        "fig4" => {
+            let f = run_fig4(&cfg)?;
+            let md = report::fig4_markdown(&f);
+            println!("{md}");
+            write_out(out, "fig4.md", &md);
+            write_out(out, "fig4.csv", &report::fig4_csv(&f));
+        }
+        "fig5" => {
+            let a = run_fig5(&cfg);
+            println!("{}", report::fig5_markdown(&a));
+            write_out(out, "fig5.md", &report::fig5_markdown(&a));
+        }
+        "table1" => {
+            let t = run_table1(&cfg)?;
+            let md = report::table1_markdown(&t);
+            println!("{md}");
+            write_out(out, "table1.md", &md);
+        }
+        "all" => {
+            let f3 = run_fig3(&cfg)?;
+            let f4 = run_fig4(&cfg)?;
+            let f5 = run_fig5(&cfg);
+            let t1 = run_table1(&cfg)?;
+            println!("{}", report::fig3_markdown(&f3));
+            println!("{}", report::fig4_markdown(&f4));
+            println!("{}", report::fig5_markdown(&f5));
+            println!("{}", report::table1_markdown(&t1));
+            println!("## Headline checks (paper → measured)\n");
+            for (label, paper, meas) in headline_checks(&f3, &f4, &t1) {
+                println!("  {label:<34} {paper:>8.2} → {meas:>8.2}");
+            }
+            write_out(out, "fig3.md", &report::fig3_markdown(&f3));
+            write_out(out, "fig3.csv", &report::fig3_csv(&f3));
+            write_out(out, "fig4.md", &report::fig4_markdown(&f4));
+            write_out(out, "fig4.csv", &report::fig4_csv(&f4));
+            write_out(out, "fig5.md", &report::fig5_markdown(&f5));
+            write_out(out, "table1.md", &report::table1_markdown(&t1));
+        }
+        "sim" => {
+            let name = flags.get("model").unwrap_or("ResNet18");
+            let p = parse_precision(flags.get("prec").unwrap_or("8"));
+            let strat = parse_strategy(flags.get("strategy").unwrap_or("mixed"));
+            let model = model_by_name(name).unwrap_or_else(|| {
+                eprintln!("unknown model `{name}`");
+                std::process::exit(2);
+            });
+            let area = speed_area_breakdown(&cfg).total();
+            println!(
+                "{:<14} {:>4} {:>11} {:>8} {:>7} {:>9}  strat",
+                "layer", "K", "cycles", "GOPS", "util", "GOPS/mm2"
+            );
+            let mut cyc = 0u64;
+            let mut ops = 0u64;
+            for layer in &model.layers {
+                let r = simulate_layer(&cfg, layer, p, strat)?;
+                println!(
+                    "{:<14} {:>4} {:>11} {:>8.2} {:>7.3} {:>9.2}  {}",
+                    r.name,
+                    layer.k,
+                    r.cycles,
+                    r.gops(&cfg),
+                    r.utilization(&cfg),
+                    r.gops(&cfg) / area,
+                    r.used
+                );
+                cyc += r.cycles;
+                ops += 2 * r.useful_macs;
+            }
+            let secs = cyc as f64 / (cfg.freq_mhz * 1e6);
+            println!(
+                "\n{name} @{p} [{strat}]: {cyc} cycles, {:.2} GOPS, {:.2} GOPS/mm2",
+                ops as f64 / secs / 1e9,
+                ops as f64 / secs / 1e9 / area
+            );
+        }
+        "asm" => {
+            let path = pos.first().cloned().unwrap_or_else(|| usage());
+            let src = std::fs::read_to_string(&path)?;
+            let prog = speed::isa::assemble(&src)?;
+            for i in &prog {
+                println!("{:08x}  {}", speed::isa::encode(i), speed::isa::disassemble(i));
+            }
+        }
+        "disasm" => {
+            let path = pos.first().cloned().unwrap_or_else(|| usage());
+            let bytes = std::fs::read(&path)?;
+            for w in bytes.chunks_exact(4) {
+                let word = u32::from_le_bytes([w[0], w[1], w[2], w[3]]);
+                match speed::isa::decode(word) {
+                    Ok(i) => println!("{word:08x}  {}", speed::isa::disassemble(&i)),
+                    Err(e) => println!("{word:08x}  <{e}>"),
+                }
+            }
+        }
+        "golden-check" => {
+            let dir = flags.get("artifacts").unwrap_or("artifacts");
+            let mut rt = speed::runtime::PjrtRuntime::new(dir)?;
+            println!("PJRT platform: {}", rt.platform());
+            // run the int8 GEMM golden against the PE model
+            use speed::pe::combine::dot_unified;
+            use speed::runtime::{GemmGolden, GEMM_K, GEMM_M, GEMM_N};
+            let p = Precision::Int8;
+            let mut rng = speed::testutil::Prng::new(1);
+            let a = rng.signed_vec(p.bits(), GEMM_M * GEMM_K);
+            let b = rng.signed_vec(p.bits(), GEMM_N * GEMM_K);
+            let a32: Vec<i32> = a.iter().map(|&v| v as i32).collect();
+            let b32: Vec<i32> = b.iter().map(|&v| v as i32).collect();
+            let got = GemmGolden::new(&mut rt, p).run(&a32, &b32)?;
+            let mut ok = true;
+            for m in 0..GEMM_M {
+                for n in 0..GEMM_N {
+                    let mut acc = 0i32;
+                    for kc in (0..GEMM_K).step_by(p.group()) {
+                        acc = acc.wrapping_add(dot_unified(
+                            p,
+                            &a[m * GEMM_K + kc..m * GEMM_K + kc + p.group()],
+                            &b[n * GEMM_K + kc..n * GEMM_K + kc + p.group()],
+                        ));
+                    }
+                    ok &= got[m * GEMM_N + n] == acc;
+                }
+            }
+            println!("gemm_i8 golden vs PE model: {}", if ok { "OK" } else { "MISMATCH" });
+            if !ok {
+                std::process::exit(1);
+            }
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

@@ -1,0 +1,185 @@
+//! External memory model.
+//!
+//! Functional: a flat byte-addressed store with a bump allocator for
+//! tensor placement. Timing: fixed first-word latency plus a bandwidth
+//! term; the processor model overlaps transactions with compute through
+//! the operand queues, so the timing function here only prices a single
+//! transaction. Traffic counters feed the energy model and the
+//! dataflow-strategy comparisons (off-chip movement is the quantity the
+//! paper's FF/CF discussion is about).
+
+use crate::error::{Error, Result};
+
+/// External DRAM: functional store + transaction pricing + counters.
+#[derive(Debug, Clone)]
+pub struct Dram {
+    data: Vec<u8>,
+    alloc_top: usize,
+    bw_bytes_per_cycle: f64,
+    latency_cycles: u64,
+    /// Total bytes read (traffic counter).
+    pub bytes_read: u64,
+    /// Total bytes written (traffic counter).
+    pub bytes_written: u64,
+    /// Number of read transactions issued.
+    pub read_txns: u64,
+    /// Number of write transactions issued.
+    pub write_txns: u64,
+}
+
+impl Dram {
+    /// Create a DRAM of `capacity` bytes.
+    pub fn new(capacity: usize, bw_bytes_per_cycle: f64, latency_cycles: u64) -> Self {
+        Dram {
+            data: vec![0; capacity],
+            alloc_top: 0,
+            bw_bytes_per_cycle,
+            latency_cycles,
+            bytes_read: 0,
+            bytes_written: 0,
+            read_txns: 0,
+            write_txns: 0,
+        }
+    }
+
+    /// Capacity in bytes.
+    pub fn capacity(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Bump-allocate `bytes`, 64-byte aligned. Returns the base address.
+    pub fn alloc(&mut self, bytes: usize) -> Result<u32> {
+        let base = (self.alloc_top + 63) & !63;
+        let end = base + bytes;
+        if end > self.data.len() {
+            return Err(Error::sim(format!(
+                "DRAM allocator exhausted: need {bytes} B at {base}, capacity {}",
+                self.data.len()
+            )));
+        }
+        self.alloc_top = end;
+        Ok(base as u32)
+    }
+
+    /// Reset the allocator (keeps capacity, clears counters and contents).
+    pub fn reset(&mut self) {
+        self.data.fill(0);
+        self.alloc_top = 0;
+        self.bytes_read = 0;
+        self.bytes_written = 0;
+        self.read_txns = 0;
+        self.write_txns = 0;
+    }
+
+    fn check(&self, addr: u32, len: usize) -> Result<()> {
+        let end = addr as usize + len;
+        if end > self.data.len() {
+            return Err(Error::sim(format!(
+                "DRAM access out of bounds: {addr:#x}+{len} > {:#x}",
+                self.data.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Functional read (counts traffic).
+    pub fn read(&mut self, addr: u32, len: usize) -> Result<&[u8]> {
+        self.check(addr, len)?;
+        self.bytes_read += len as u64;
+        self.read_txns += 1;
+        Ok(&self.data[addr as usize..addr as usize + len])
+    }
+
+    /// Functional read without traffic accounting (host/debug access).
+    pub fn peek(&self, addr: u32, len: usize) -> Result<&[u8]> {
+        self.check(addr, len)?;
+        Ok(&self.data[addr as usize..addr as usize + len])
+    }
+
+    /// Functional write (counts traffic).
+    pub fn write(&mut self, addr: u32, bytes: &[u8]) -> Result<()> {
+        self.check(addr, bytes.len())?;
+        self.bytes_written += bytes.len() as u64;
+        self.write_txns += 1;
+        self.data[addr as usize..addr as usize + bytes.len()].copy_from_slice(bytes);
+        Ok(())
+    }
+
+    /// Host write without traffic accounting (test/workload setup).
+    pub fn poke(&mut self, addr: u32, bytes: &[u8]) -> Result<()> {
+        self.check(addr, bytes.len())?;
+        self.data[addr as usize..addr as usize + bytes.len()].copy_from_slice(bytes);
+        Ok(())
+    }
+
+    /// Cycles to move `bytes` in one transaction (latency + bandwidth).
+    pub fn txn_cycles(&self, bytes: usize) -> u64 {
+        self.latency_cycles + (bytes as f64 / self.bw_bytes_per_cycle).ceil() as u64
+    }
+
+    /// Cycles for the streaming (bandwidth-only) portion — used when the
+    /// engine pipelines many back-to-back transactions and the first-word
+    /// latency is already hidden.
+    pub fn stream_cycles(&self, bytes: usize) -> u64 {
+        (bytes as f64 / self.bw_bytes_per_cycle).ceil() as u64
+    }
+
+    /// Record timing-only traffic (timing mode skips functional moves but
+    /// must still count bytes for the energy model).
+    pub fn count_read(&mut self, bytes: u64) {
+        self.bytes_read += bytes;
+        self.read_txns += 1;
+    }
+
+    /// Record timing-only write traffic.
+    pub fn count_write(&mut self, bytes: u64) {
+        self.bytes_written += bytes;
+        self.write_txns += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_is_aligned_and_bounded() {
+        let mut d = Dram::new(256, 16.0, 10);
+        let a = d.alloc(10).unwrap();
+        let b = d.alloc(10).unwrap();
+        assert_eq!(a % 64, 0);
+        assert_eq!(b % 64, 0);
+        assert!(b >= a + 10);
+        assert!(d.alloc(1 << 20).is_err());
+    }
+
+    #[test]
+    fn rw_roundtrip_and_counters() {
+        let mut d = Dram::new(1024, 16.0, 10);
+        d.write(100, &[1, 2, 3]).unwrap();
+        assert_eq!(d.read(100, 3).unwrap(), &[1, 2, 3]);
+        assert_eq!(d.bytes_written, 3);
+        assert_eq!(d.bytes_read, 3);
+        assert_eq!(d.read_txns, 1);
+        // peek/poke don't count
+        d.poke(0, &[9]).unwrap();
+        assert_eq!(d.peek(0, 1).unwrap(), &[9]);
+        assert_eq!(d.bytes_written, 3);
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        let mut d = Dram::new(64, 16.0, 10);
+        assert!(d.read(60, 8).is_err());
+        assert!(d.write(64, &[0]).is_err());
+    }
+
+    #[test]
+    fn txn_timing() {
+        let d = Dram::new(64, 16.0, 10);
+        assert_eq!(d.txn_cycles(0), 10);
+        assert_eq!(d.txn_cycles(16), 11);
+        assert_eq!(d.txn_cycles(17), 12);
+        assert_eq!(d.stream_cycles(160), 10);
+    }
+}

@@ -1,0 +1,10 @@
+//! Memory system models: external DRAM, per-lane banked VRF, and
+//! host-side tensor layout/packing.
+
+pub mod dram;
+pub mod tensor;
+pub mod vrf;
+
+pub use dram::Dram;
+pub use tensor::Tensor;
+pub use vrf::Vrf;

@@ -1,0 +1,283 @@
+//! Host-side tensors and the DRAM layouts the dataflow compiler targets.
+//!
+//! All on-device data is stored channel-group-innermost so that a unified
+//! element (the PE's per-cycle operand, see
+//! [`crate::arch::precision`]) is one contiguous little-endian field:
+//!
+//! - input feature map: `[H][W][CG]` unified elements
+//!   (`CG = ceil(Cin / group)`) — a row segment is one contiguous DRAM
+//!   run, which is what `VSALD` streams;
+//! - weights: `[Cout][Kh][Kw][CG]` unified elements — for a fixed
+//!   `(cout, ky)` the `(kx, cg)` sweep is contiguous, which is exactly the
+//!   inner dimension a `VSAM` streams;
+//! - outputs: `[Cout][Ho][Wo]` plain `p`-bit values (repacked to the input
+//!   layout between layers by the host-side DMA model).
+
+use crate::arch::precision::{pack_operands, unpack_operands};
+use crate::arch::Precision;
+use crate::error::{Error, Result};
+use crate::testutil::Prng;
+
+
+/// A dense integer tensor (values held as `i64`, validated against the
+/// target precision when packing).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    /// Dimension sizes, outermost first.
+    pub shape: Vec<usize>,
+    /// Row-major values.
+    pub data: Vec<i64>,
+}
+
+impl Tensor {
+    /// Zero tensor of a given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0; n] }
+    }
+
+    /// Deterministic random tensor with values valid at precision `p`.
+    pub fn random(shape: &[usize], p: Precision, rng: &mut Prng) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: rng.signed_vec(p.bits(), n) }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the tensor has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Value at an N-d index.
+    pub fn at(&self, idx: &[usize]) -> i64 {
+        self.data[self.flat(idx)]
+    }
+
+    /// Mutable value at an N-d index.
+    pub fn at_mut(&mut self, idx: &[usize]) -> &mut i64 {
+        let f = self.flat(idx);
+        &mut self.data[f]
+    }
+
+    fn flat(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut f = 0;
+        for (i, (&x, &s)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(x < s, "index {x} out of bound {s} at dim {i}");
+            f = f * s + x;
+        }
+        f
+    }
+}
+
+/// Number of channel groups for `cin` channels at precision `p`.
+pub fn channel_groups(cin: usize, p: Precision) -> usize {
+    cin.div_ceil(p.group())
+}
+
+/// Pack an input feature map `[Cin][H][W]` (optionally spatially padded by
+/// `pad` zeros on each side) into the `[H+2p][W+2p][CG]` unified-element
+/// DRAM image. Channel tails are zero-padded to a full group.
+pub fn pack_ifmap(t: &Tensor, p: Precision, pad: usize) -> Result<Vec<u8>> {
+    let [cin, h, w]: [usize; 3] = t
+        .shape
+        .as_slice()
+        .try_into()
+        .map_err(|_| Error::config("ifmap must be [Cin][H][W]"))?;
+    let g = p.group();
+    let cg = channel_groups(cin, p);
+    let (hp, wp) = (h + 2 * pad, w + 2 * pad);
+    let mut ops = vec![0i64; hp * wp * cg * g];
+    for y in 0..h {
+        for x in 0..w {
+            for c in 0..cin {
+                // element (y+pad, x+pad, c/g), operand slot c%g
+                let el = ((y + pad) * wp + (x + pad)) * cg + c / g;
+                ops[el * g + c % g] = t.at(&[c, y, x]);
+            }
+        }
+    }
+    pack_operands(p, &ops)
+}
+
+/// Pack weights `[Cout][Cin][Kh][Kw]` into the `[Cout][Kh][Kw][CG]`
+/// unified-element DRAM image.
+pub fn pack_weights(t: &Tensor, p: Precision) -> Result<Vec<u8>> {
+    let [cout, cin, kh, kw]: [usize; 4] = t
+        .shape
+        .as_slice()
+        .try_into()
+        .map_err(|_| Error::config("weights must be [Cout][Cin][Kh][Kw]"))?;
+    let g = p.group();
+    let cg = channel_groups(cin, p);
+    let mut ops = vec![0i64; cout * kh * kw * cg * g];
+    for co in 0..cout {
+        for c in 0..cin {
+            for ky in 0..kh {
+                for kx in 0..kw {
+                    let el = ((co * kh + ky) * kw + kx) * cg + c / g;
+                    ops[el * g + c % g] = t.at(&[co, c, ky, kx]);
+                }
+            }
+        }
+    }
+    pack_operands(p, &ops)
+}
+
+/// Unpack an output image `[Cout][Ho][Wo]` of plain `p`-bit values from
+/// DRAM bytes back into a tensor.
+pub fn unpack_ofmap(bytes: &[u8], p: Precision, cout: usize, ho: usize, wo: usize) -> Tensor {
+    // outputs are stored as individual operands; 4-bit pairs share a byte
+    let vals = unpack_operands(p, bytes);
+    Tensor { shape: vec![cout, ho, wo], data: vals[..cout * ho * wo].to_vec() }
+}
+
+/// Byte size of the packed ifmap image.
+pub fn ifmap_bytes(cin: usize, h: usize, w: usize, p: Precision, pad: usize) -> usize {
+    (h + 2 * pad) * (w + 2 * pad) * channel_groups(cin, p) * p.element_bytes()
+}
+
+/// Byte size of the packed weight image.
+pub fn weight_bytes(cout: usize, cin: usize, kh: usize, kw: usize, p: Precision) -> usize {
+    cout * kh * kw * channel_groups(cin, p) * p.element_bytes()
+}
+
+/// Byte size of the output image. Output operands are `p`-bit; 4-bit
+/// outputs pack two per byte (rounded up per row for addressability).
+pub fn ofmap_bytes(cout: usize, ho: usize, wo: usize, p: Precision) -> usize {
+    let row = (wo * p.bits() as usize).div_ceil(8);
+    cout * ho * row
+}
+
+/// Reference convolution on host tensors (NCHW, stride `s`, pad `pad`),
+/// 32-bit wrapping accumulation + requant — the oracle the functional
+/// simulator is tested against (and itself cross-checked against the
+/// XLA golden artifacts).
+pub fn conv2d_ref(
+    input: &Tensor,
+    weights: &Tensor,
+    p: Precision,
+    stride: usize,
+    pad: usize,
+    shift: u8,
+    relu: bool,
+) -> Tensor {
+    let [cin, h, w]: [usize; 3] = input.shape.as_slice().try_into().unwrap();
+    let [cout, cin2, kh, kw]: [usize; 4] = weights.shape.as_slice().try_into().unwrap();
+    assert_eq!(cin, cin2, "channel mismatch");
+    let ho = (h + 2 * pad - kh) / stride + 1;
+    let wo = (w + 2 * pad - kw) / stride + 1;
+    let mut out = Tensor::zeros(&[cout, ho, wo]);
+    for co in 0..cout {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut acc: i32 = 0;
+                for c in 0..cin {
+                    for ky in 0..kh {
+                        for kx in 0..kw {
+                            let iy = oy * stride + ky;
+                            let ix = ox * stride + kx;
+                            if iy < pad || ix < pad || iy - pad >= h || ix - pad >= w {
+                                continue;
+                            }
+                            let iv = input.at(&[c, iy - pad, ix - pad]);
+                            let wv = weights.at(&[co, c, ky, kx]);
+                            acc = acc.wrapping_add((iv * wv) as i32);
+                        }
+                    }
+                }
+                let mut v = (acc >> shift) as i64;
+                if relu && v < 0 {
+                    v = 0;
+                }
+                *out.at_mut(&[co, oy, ox]) = p.clamp(v);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_ifmap_layout() {
+        // 2 channels, 2x2, int16 (group=1): CG=2
+        let mut t = Tensor::zeros(&[2, 2, 2]);
+        *t.at_mut(&[0, 0, 0]) = 7;
+        *t.at_mut(&[1, 0, 0]) = -3;
+        *t.at_mut(&[0, 1, 1]) = 100;
+        let bytes = pack_ifmap(&t, Precision::Int16, 0).unwrap();
+        assert_eq!(bytes.len(), ifmap_bytes(2, 2, 2, Precision::Int16, 0));
+        let ops = unpack_operands(Precision::Int16, &bytes);
+        // element (y,x,cg) at y*W*CG + x*CG + cg
+        assert_eq!(ops[0], 7); // (0,0,c0)
+        assert_eq!(ops[1], -3); // (0,0,c1)
+        assert_eq!(ops[(1 * 2 + 1) * 2], 100); // (1,1,c0)
+    }
+
+    #[test]
+    fn pack_ifmap_pads_spatially_and_channels() {
+        // 3 channels at int8 (group 4): tail zero-padded; pad=1 ring of 0s
+        let mut t = Tensor::zeros(&[3, 1, 1]);
+        *t.at_mut(&[0, 0, 0]) = 1;
+        *t.at_mut(&[1, 0, 0]) = 2;
+        *t.at_mut(&[2, 0, 0]) = 3;
+        let bytes = pack_ifmap(&t, Precision::Int8, 1).unwrap();
+        let ops = unpack_operands(Precision::Int8, &bytes);
+        // 3x3 padded, CG=1, group=4
+        assert_eq!(ops.len(), 9 * 4);
+        let center = (1 * 3 + 1) * 4;
+        assert_eq!(&ops[center..center + 4], &[1, 2, 3, 0]);
+        assert!(ops[..center].iter().all(|&v| v == 0));
+        assert!(ops[center + 4..].iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn pack_weights_layout() {
+        // Cout=1, Cin=1, 2x2 kernel at int16
+        let mut t = Tensor::zeros(&[1, 1, 2, 2]);
+        *t.at_mut(&[0, 0, 0, 0]) = 1;
+        *t.at_mut(&[0, 0, 0, 1]) = 2;
+        *t.at_mut(&[0, 0, 1, 0]) = 3;
+        *t.at_mut(&[0, 0, 1, 1]) = 4;
+        let bytes = pack_weights(&t, Precision::Int16).unwrap();
+        let ops = unpack_operands(Precision::Int16, &bytes);
+        assert_eq!(ops, vec![1, 2, 3, 4]); // (ky,kx) row-major, CG inner
+    }
+
+    #[test]
+    fn conv_ref_identity_kernel() {
+        let mut rng = Prng::new(3);
+        let input = Tensor::random(&[1, 4, 4], Precision::Int8, &mut rng);
+        // 1x1 kernel with weight 1 = identity (shift 0)
+        let mut w = Tensor::zeros(&[1, 1, 1, 1]);
+        *w.at_mut(&[0, 0, 0, 0]) = 1;
+        let out = conv2d_ref(&input, &w, Precision::Int8, 1, 0, 0, false);
+        assert_eq!(out.data, input.data);
+    }
+
+    #[test]
+    fn conv_ref_padding_and_stride_geometry() {
+        let input = Tensor::zeros(&[1, 5, 5]);
+        let w = Tensor::zeros(&[2, 1, 3, 3]);
+        let out = conv2d_ref(&input, &w, Precision::Int8, 2, 1, 0, false);
+        assert_eq!(out.shape, vec![2, 3, 3]); // (5+2-3)/2+1
+    }
+
+    #[test]
+    fn conv_ref_relu_and_saturation() {
+        let mut input = Tensor::zeros(&[1, 1, 2]);
+        *input.at_mut(&[0, 0, 0]) = -5;
+        *input.at_mut(&[0, 0, 1]) = 120;
+        let mut w = Tensor::zeros(&[1, 1, 1, 1]);
+        *w.at_mut(&[0, 0, 0, 0]) = 3;
+        let out = conv2d_ref(&input, &w, Precision::Int8, 1, 0, 0, true);
+        assert_eq!(out.data, vec![0, 127]); // relu(-15)=0, sat(360)=127
+    }
+}

@@ -1,0 +1,187 @@
+//! Per-lane vector register file (VRF) model.
+//!
+//! Functionally a flat byte store of `n_vregs × vreg_bytes` per lane
+//! (adjacent vregs form LMUL-style register groups, so a matrix operand
+//! may span several consecutive vregs). Timing-wise the VRF is banked;
+//! the operand requester's arbiter serializes same-bank requests, which
+//! the SAU timing model prices via [`Vrf::conflict_factor`] — the classic
+//! `banks / distinct-banks-visited` stride penalty.
+
+use crate::error::{Error, Result};
+
+/// One lane's VRF.
+#[derive(Debug, Clone)]
+pub struct Vrf {
+    data: Vec<u8>,
+    vreg_bytes: usize,
+    n_banks: usize,
+    bank_bytes: usize,
+    /// Bytes read (per-lane counter, feeds the energy model).
+    pub bytes_read: u64,
+    /// Bytes written.
+    pub bytes_written: u64,
+}
+
+impl Vrf {
+    /// Build a VRF of `n_vregs` registers × `vreg_bytes` each.
+    pub fn new(n_vregs: usize, vreg_bytes: usize, n_banks: usize, bank_bytes: usize) -> Self {
+        Vrf {
+            data: vec![0; n_vregs * vreg_bytes],
+            vreg_bytes,
+            n_banks,
+            bank_bytes,
+            bytes_read: 0,
+            bytes_written: 0,
+        }
+    }
+
+    /// Total capacity in bytes.
+    pub fn capacity(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Bytes per vector register (this lane's slice).
+    pub fn vreg_bytes(&self) -> usize {
+        self.vreg_bytes
+    }
+
+    /// Flat byte address of `(vreg, offset)`.
+    pub fn addr(&self, vreg: u8, offset: usize) -> usize {
+        vreg as usize * self.vreg_bytes + offset
+    }
+
+    fn check(&self, base: usize, len: usize) -> Result<()> {
+        if base + len > self.data.len() {
+            return Err(Error::sim(format!(
+                "VRF access out of bounds: {base}+{len} > {}",
+                self.data.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Functional read starting at `(vreg, offset)`, may span vregs.
+    pub fn read(&mut self, vreg: u8, offset: usize, len: usize) -> Result<&[u8]> {
+        let base = self.addr(vreg, offset);
+        self.check(base, len)?;
+        self.bytes_read += len as u64;
+        Ok(&self.data[base..base + len])
+    }
+
+    /// Read without counting (debug/verification).
+    pub fn peek(&self, vreg: u8, offset: usize, len: usize) -> Result<&[u8]> {
+        let base = self.addr(vreg, offset);
+        self.check(base, len)?;
+        Ok(&self.data[base..base + len])
+    }
+
+    /// Functional write starting at `(vreg, offset)`.
+    pub fn write(&mut self, vreg: u8, offset: usize, bytes: &[u8]) -> Result<()> {
+        let base = self.addr(vreg, offset);
+        self.check(base, bytes.len())?;
+        self.bytes_written += bytes.len() as u64;
+        self.data[base..base + bytes.len()].copy_from_slice(bytes);
+        Ok(())
+    }
+
+    /// Peak read bandwidth: all banks firing, bytes per cycle.
+    pub fn read_bw_bytes_per_cycle(&self) -> usize {
+        self.n_banks * self.bank_bytes
+    }
+
+    /// Bank index of a byte address.
+    pub fn bank_of(&self, byte_addr: usize) -> usize {
+        (byte_addr / self.bank_bytes) % self.n_banks
+    }
+
+    /// Serialization penalty for a strided access pattern: accesses with
+    /// byte stride `stride` visit `n_banks / gcd(stride_banks, n_banks)`
+    /// distinct banks; the arbiter needs `n_banks / distinct` passes.
+    /// Factor 1.0 = conflict-free, `n_banks` = fully serialized.
+    pub fn conflict_factor(&self, stride_bytes: usize) -> f64 {
+        if stride_bytes == 0 {
+            return self.n_banks as f64; // all requests hit one bank
+        }
+        let stride_banks = (stride_bytes / self.bank_bytes).max(1);
+        let distinct = self.n_banks / gcd(stride_banks % self.n_banks, self.n_banks);
+        self.n_banks as f64 / distinct as f64
+    }
+
+    /// Cycles to move `bytes` through the banked ports, given the access
+    /// pattern's conflict factor.
+    pub fn access_cycles(&self, bytes: usize, conflict_factor: f64) -> u64 {
+        ((bytes as f64 * conflict_factor) / self.read_bw_bytes_per_cycle() as f64).ceil() as u64
+    }
+
+    /// Timing-mode traffic accounting.
+    pub fn count_read(&mut self, bytes: u64) {
+        self.bytes_read += bytes;
+    }
+
+    /// Timing-mode traffic accounting.
+    pub fn count_write(&mut self, bytes: u64) {
+        self.bytes_written += bytes;
+    }
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if a == 0 {
+        b
+    } else {
+        gcd(b % a, a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk() -> Vrf {
+        Vrf::new(32, 128, 8, 8)
+    }
+
+    #[test]
+    fn geometry() {
+        let v = mk();
+        assert_eq!(v.capacity(), 4096);
+        assert_eq!(v.read_bw_bytes_per_cycle(), 64);
+        assert_eq!(v.addr(1, 4), 132);
+    }
+
+    #[test]
+    fn rw_roundtrip_spanning_vregs() {
+        let mut v = mk();
+        let payload: Vec<u8> = (0..200).map(|i| i as u8).collect();
+        v.write(3, 100, &payload).unwrap(); // spans v3 into v4
+        assert_eq!(v.peek(3, 100, 200).unwrap(), &payload[..]);
+        assert_eq!(v.bytes_written, 200);
+    }
+
+    #[test]
+    fn oob_rejected() {
+        let mut v = mk();
+        assert!(v.write(31, 120, &[0; 16]).is_err());
+        assert!(v.peek(31, 0, 129).is_err());
+    }
+
+    #[test]
+    fn conflict_factors() {
+        let v = mk();
+        // unit stride over 8-byte banks: visits all banks → no conflict
+        assert_eq!(v.conflict_factor(8), 1.0);
+        assert_eq!(v.conflict_factor(1), 1.0);
+        // stride = banks*bank_bytes → same bank every time → worst case
+        assert_eq!(v.conflict_factor(64), 8.0);
+        // stride 2 banks → 4 distinct banks → factor 2
+        assert_eq!(v.conflict_factor(16), 2.0);
+        assert_eq!(v.conflict_factor(0), 8.0);
+    }
+
+    #[test]
+    fn access_cycles_scale_with_conflicts() {
+        let v = mk();
+        assert_eq!(v.access_cycles(64, 1.0), 1);
+        assert_eq!(v.access_cycles(64, 8.0), 8);
+        assert_eq!(v.access_cycles(65, 1.0), 2);
+    }
+}

@@ -1,0 +1,82 @@
+//! GoogLeNet convolutional layers (Szegedy et al., CVPR'15) — the
+//! paper's Fig. 3 workload. Its inception modules mix 1×1, 3×3, 5×5 and
+//! 7×7 kernels, which is exactly why the mixed FF/CF strategy pays off.
+
+use crate::dataflow::ConvLayer;
+
+/// One inception module's six convolutions.
+#[allow(clippy::too_many_arguments)]
+fn inception(
+    name: &str,
+    hw: usize,
+    cin: usize,
+    n1x1: usize,
+    n3x3r: usize,
+    n3x3: usize,
+    n5x5r: usize,
+    n5x5: usize,
+    pool: usize,
+) -> Vec<ConvLayer> {
+    let c = ConvLayer::new;
+    vec![
+        c(&format!("{name}_1x1"), cin, n1x1, hw, hw, 1, 1, 0),
+        c(&format!("{name}_3x3r"), cin, n3x3r, hw, hw, 1, 1, 0),
+        c(&format!("{name}_3x3"), n3x3r, n3x3, hw, hw, 3, 1, 1),
+        c(&format!("{name}_5x5r"), cin, n5x5r, hw, hw, 1, 1, 0),
+        c(&format!("{name}_5x5"), n5x5r, n5x5, hw, hw, 5, 1, 2),
+        c(&format!("{name}_pool"), cin, pool, hw, hw, 1, 1, 0),
+    ]
+}
+
+/// The 57 conv layers of GoogLeNet at 224×224 input.
+pub fn layers() -> Vec<ConvLayer> {
+    let c = ConvLayer::new;
+    let mut ls = vec![
+        c("conv1_7x7", 3, 64, 224, 224, 7, 2, 3),
+        c("conv2_3x3r", 64, 64, 56, 56, 1, 1, 0),
+        c("conv2_3x3", 64, 192, 56, 56, 3, 1, 1),
+    ];
+    ls.extend(inception("inc3a", 28, 192, 64, 96, 128, 16, 32, 32));
+    ls.extend(inception("inc3b", 28, 256, 128, 128, 192, 32, 96, 64));
+    ls.extend(inception("inc4a", 14, 480, 192, 96, 208, 16, 48, 64));
+    ls.extend(inception("inc4b", 14, 512, 160, 112, 224, 24, 64, 64));
+    ls.extend(inception("inc4c", 14, 512, 128, 128, 256, 24, 64, 64));
+    ls.extend(inception("inc4d", 14, 512, 112, 144, 288, 32, 64, 64));
+    ls.extend(inception("inc4e", 14, 528, 256, 160, 320, 32, 128, 128));
+    ls.extend(inception("inc5a", 7, 832, 256, 160, 320, 32, 128, 128));
+    ls.extend(inception("inc5b", 7, 832, 384, 192, 384, 48, 128, 128));
+    ls
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_count_and_flops() {
+        let ls = layers();
+        assert_eq!(ls.len(), 57);
+        // GoogLeNet conv GFLOPs ≈ 3.0 at 224².
+        let gops: f64 = ls.iter().map(|l| l.ops() as f64).sum::<f64>() / 1e9;
+        assert!((2.4..3.6).contains(&gops), "GoogLeNet conv ops = {gops:.2} G");
+    }
+
+    #[test]
+    fn inception_channel_arithmetic() {
+        // module output channels = 1x1 + 3x3 + 5x5 + pool must equal the
+        // next module's input channels.
+        let ls = layers();
+        let cin_of = |n: &str| ls.iter().find(|l| l.name == n).unwrap().cin;
+        assert_eq!(cin_of("inc3b_1x1"), 64 + 128 + 32 + 32);
+        assert_eq!(cin_of("inc4a_1x1"), 128 + 192 + 96 + 64);
+        assert_eq!(cin_of("inc5a_1x1"), 256 + 320 + 128 + 128);
+    }
+
+    #[test]
+    fn kernel_size_diversity() {
+        let ls = layers();
+        for k in [1usize, 3, 5, 7] {
+            assert!(ls.iter().any(|l| l.k == k), "missing K={k}");
+        }
+    }
+}

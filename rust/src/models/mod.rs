@@ -1,0 +1,12 @@
+//! DNN model zoo: the paper's benchmark set (Sec. III-A) — VGG16,
+//! ResNet18, GoogLeNet and SqueezeNet — as lists of convolutional layers
+//! (the evaluated metric is measured *"across the convolutional layers in
+//! the DNN model"*).
+
+pub mod googlenet;
+pub mod resnet18;
+pub mod squeezenet;
+pub mod vgg16;
+pub mod zoo;
+
+pub use zoo::{all_models, model_by_name, Model};

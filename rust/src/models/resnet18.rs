@@ -1,0 +1,57 @@
+//! ResNet18 convolutional layers (He et al., CVPR'16), including the
+//! 1×1 downsample projections — a mix of 7×7 stem, 3×3 bodies and 1×1
+//! shortcuts that exercises both dataflow strategies.
+
+use crate::dataflow::ConvLayer;
+
+/// The 20 conv layers of ResNet18 at 224×224 input.
+pub fn layers() -> Vec<ConvLayer> {
+    let c = ConvLayer::new;
+    vec![
+        c("conv1", 3, 64, 224, 224, 7, 2, 3),
+        // layer1: 2 basic blocks @ 56×56, 64ch
+        c("l1_b1_c1", 64, 64, 56, 56, 3, 1, 1),
+        c("l1_b1_c2", 64, 64, 56, 56, 3, 1, 1),
+        c("l1_b2_c1", 64, 64, 56, 56, 3, 1, 1),
+        c("l1_b2_c2", 64, 64, 56, 56, 3, 1, 1),
+        // layer2: downsample to 28×28, 128ch
+        c("l2_b1_c1", 64, 128, 56, 56, 3, 2, 1),
+        c("l2_b1_c2", 128, 128, 28, 28, 3, 1, 1),
+        c("l2_b1_ds", 64, 128, 56, 56, 1, 2, 0),
+        c("l2_b2_c1", 128, 128, 28, 28, 3, 1, 1),
+        c("l2_b2_c2", 128, 128, 28, 28, 3, 1, 1),
+        // layer3: 14×14, 256ch
+        c("l3_b1_c1", 128, 256, 28, 28, 3, 2, 1),
+        c("l3_b1_c2", 256, 256, 14, 14, 3, 1, 1),
+        c("l3_b1_ds", 128, 256, 28, 28, 1, 2, 0),
+        c("l3_b2_c1", 256, 256, 14, 14, 3, 1, 1),
+        c("l3_b2_c2", 256, 256, 14, 14, 3, 1, 1),
+        // layer4: 7×7, 512ch
+        c("l4_b1_c1", 256, 512, 14, 14, 3, 2, 1),
+        c("l4_b1_c2", 512, 512, 7, 7, 3, 1, 1),
+        c("l4_b1_ds", 256, 512, 14, 14, 1, 2, 0),
+        c("l4_b2_c1", 512, 512, 7, 7, 3, 1, 1),
+        c("l4_b2_c2", 512, 512, 7, 7, 3, 1, 1),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_count_and_flops() {
+        let ls = layers();
+        assert_eq!(ls.len(), 20);
+        // ResNet18 conv GFLOPs ≈ 3.6 at 224².
+        let gops: f64 = ls.iter().map(|l| l.ops() as f64).sum::<f64>() / 1e9;
+        assert!((3.0..4.2).contains(&gops), "ResNet18 conv ops = {gops:.2} G");
+    }
+
+    #[test]
+    fn downsample_shortcuts_are_1x1_stride2() {
+        let ds: Vec<_> = layers().into_iter().filter(|l| l.name.ends_with("_ds")).collect();
+        assert_eq!(ds.len(), 3);
+        assert!(ds.iter().all(|l| l.k == 1 && l.stride == 2));
+    }
+}

@@ -1,0 +1,60 @@
+//! SqueezeNet v1.0 convolutional layers (Iandola et al., 2016) — the
+//! paper's lightweight benchmark; dominated by 1×1 squeeze/expand convs.
+
+use crate::dataflow::ConvLayer;
+
+/// One fire module: squeeze 1×1, expand 1×1, expand 3×3.
+fn fire(name: &str, hw: usize, cin: usize, s1: usize, e1: usize, e3: usize) -> Vec<ConvLayer> {
+    let c = ConvLayer::new;
+    vec![
+        c(&format!("{name}_s1x1"), cin, s1, hw, hw, 1, 1, 0),
+        c(&format!("{name}_e1x1"), s1, e1, hw, hw, 1, 1, 0),
+        c(&format!("{name}_e3x3"), s1, e3, hw, hw, 3, 1, 1),
+    ]
+}
+
+/// The 26 conv layers of SqueezeNet v1.0 at 224×224 input.
+pub fn layers() -> Vec<ConvLayer> {
+    let c = ConvLayer::new;
+    let mut ls = vec![c("conv1", 3, 96, 224, 224, 7, 2, 0)];
+    ls.extend(fire("fire2", 55, 96, 16, 64, 64));
+    ls.extend(fire("fire3", 55, 128, 16, 64, 64));
+    ls.extend(fire("fire4", 55, 128, 32, 128, 128));
+    ls.extend(fire("fire5", 27, 256, 32, 128, 128));
+    ls.extend(fire("fire6", 27, 256, 48, 192, 192));
+    ls.extend(fire("fire7", 27, 384, 48, 192, 192));
+    ls.extend(fire("fire8", 27, 384, 64, 256, 256));
+    ls.extend(fire("fire9", 13, 512, 64, 256, 256));
+    ls.push(c("conv10", 512, 1000, 13, 13, 1, 1, 0));
+    ls
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_count_and_flops() {
+        let ls = layers();
+        assert_eq!(ls.len(), 26);
+        // SqueezeNet v1.0 conv GFLOPs ≈ 1.7 at 224².
+        let gops: f64 = ls.iter().map(|l| l.ops() as f64).sum::<f64>() / 1e9;
+        assert!((1.2..2.2).contains(&gops), "SqueezeNet conv ops = {gops:.2} G");
+    }
+
+    #[test]
+    fn dominated_by_1x1() {
+        let ls = layers();
+        let n1 = ls.iter().filter(|l| l.k == 1).count();
+        assert!(n1 * 2 > ls.len(), "{n1}/{} should be 1×1", ls.len());
+    }
+
+    #[test]
+    fn fire_expand_inputs_match_squeeze() {
+        let ls = layers();
+        let find = |n: &str| ls.iter().find(|l| l.name == n).unwrap();
+        assert_eq!(find("fire4_e3x3").cin, find("fire4_s1x1").cout);
+        // fire5 input = fire4 expand outputs concatenated
+        assert_eq!(find("fire5_s1x1").cin, 128 + 128);
+    }
+}

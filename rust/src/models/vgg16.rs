@@ -1,0 +1,43 @@
+//! VGG16 convolutional layers (Simonyan & Zisserman; all 3×3, stride 1,
+//! pad 1 — the regular structure the paper's FF strategy favours).
+
+use crate::dataflow::ConvLayer;
+
+/// The 13 conv layers of VGG16 at 224×224 input.
+pub fn layers() -> Vec<ConvLayer> {
+    let c = ConvLayer::new;
+    vec![
+        c("conv1_1", 3, 64, 224, 224, 3, 1, 1),
+        c("conv1_2", 64, 64, 224, 224, 3, 1, 1),
+        c("conv2_1", 64, 128, 112, 112, 3, 1, 1),
+        c("conv2_2", 128, 128, 112, 112, 3, 1, 1),
+        c("conv3_1", 128, 256, 56, 56, 3, 1, 1),
+        c("conv3_2", 256, 256, 56, 56, 3, 1, 1),
+        c("conv3_3", 256, 256, 56, 56, 3, 1, 1),
+        c("conv4_1", 256, 512, 28, 28, 3, 1, 1),
+        c("conv4_2", 512, 512, 28, 28, 3, 1, 1),
+        c("conv4_3", 512, 512, 28, 28, 3, 1, 1),
+        c("conv5_1", 512, 512, 14, 14, 3, 1, 1),
+        c("conv5_2", 512, 512, 14, 14, 3, 1, 1),
+        c("conv5_3", 512, 512, 14, 14, 3, 1, 1),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_count_and_flops() {
+        let ls = layers();
+        assert_eq!(ls.len(), 13);
+        // VGG16 conv GFLOPs ≈ 30.7 (2 ops/MAC) at 224².
+        let gops: f64 = ls.iter().map(|l| l.ops() as f64).sum::<f64>() / 1e9;
+        assert!((gops - 30.7).abs() < 0.5, "VGG16 conv ops = {gops:.2} G");
+    }
+
+    #[test]
+    fn all_kernels_are_3x3() {
+        assert!(layers().iter().all(|l| l.k == 3 && l.stride == 1 && l.pad == 1));
+    }
+}

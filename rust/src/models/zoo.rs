@@ -1,0 +1,59 @@
+//! Model registry.
+
+use super::{googlenet, resnet18, squeezenet, vgg16};
+use crate::dataflow::ConvLayer;
+
+/// A named benchmark network.
+#[derive(Debug, Clone)]
+pub struct Model {
+    /// Network name as used in reports ("VGG16", …).
+    pub name: &'static str,
+    /// Its convolutional layers.
+    pub layers: Vec<ConvLayer>,
+}
+
+impl Model {
+    /// Total nominal operations (2 × MACs) over all conv layers.
+    pub fn total_ops(&self) -> u64 {
+        self.layers.iter().map(|l| l.ops()).sum()
+    }
+}
+
+/// The paper's four benchmarks (Sec. III-A).
+pub fn all_models() -> Vec<Model> {
+    vec![
+        Model { name: "VGG16", layers: vgg16::layers() },
+        Model { name: "ResNet18", layers: resnet18::layers() },
+        Model { name: "GoogLeNet", layers: googlenet::layers() },
+        Model { name: "SqueezeNet", layers: squeezenet::layers() },
+    ]
+}
+
+/// Look a model up by (case-insensitive) name.
+pub fn model_by_name(name: &str) -> Option<Model> {
+    all_models().into_iter().find(|m| m.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_complete() {
+        let ms = all_models();
+        assert_eq!(ms.len(), 4);
+        assert!(model_by_name("googlenet").is_some());
+        assert!(model_by_name("GoogLeNet").is_some());
+        assert!(model_by_name("AlexNet").is_none());
+    }
+
+    #[test]
+    fn every_layer_has_a_unique_name() {
+        for m in all_models() {
+            let mut names: Vec<_> = m.layers.iter().map(|l| &l.name).collect();
+            names.sort();
+            names.dedup();
+            assert_eq!(names.len(), m.layers.len(), "{}: duplicate layer names", m.name);
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Dynamic combination of 4-bit partial products into full-width products.
+//!
+//! A `p`-bit × `p`-bit two's-complement multiply decomposes into
+//! `(p/4)²` nibble products:
+//!
+//! ```text
+//! a = Σ_i  n_i(a) · 16^i      (top nibble signed, rest unsigned)
+//! b = Σ_j  n_j(b) · 16^j
+//! a·b = Σ_{i,j} n_i(a)·n_j(b) · 16^(i+j)
+//! ```
+//!
+//! - 16-bit mode: 4×4 = 16 nibble products → one MAC uses all sixteen
+//!   multipliers of a PE.
+//! - 8-bit mode: 2×2 = 4 products per MAC → four independent MACs.
+//! - 4-bit mode: 1 product per MAC → sixteen independent MACs.
+//!
+//! This module is the *bit-exact software model* of that array; the
+//! Pallas kernel (`python/compile/kernels/mp_gemm.py`) implements the
+//! identical decomposition so the golden artifacts exercise the same
+//! arithmetic structure.
+
+use super::mult4::{extract_nibble, mult4};
+use crate::arch::Precision;
+
+/// Exact `p`-bit signed multiply via the bit-split nibble array.
+///
+/// Returns the full-precision product (fits in `2p` bits). Debug-asserts
+/// operand ranges.
+pub fn mul_bitsplit(p: Precision, a: i64, b: i64) -> i64 {
+    let (lo, hi) = p.range();
+    debug_assert!(a >= lo && a <= hi, "operand {a} out of {p} range");
+    debug_assert!(b >= lo && b <= hi, "operand {b} out of {p} range");
+    let w = p.bits();
+    let n = (w / 4) as usize;
+    let mut acc = 0i64;
+    for i in 0..n {
+        let (na, ma) = extract_nibble(a, i, w);
+        for j in 0..n {
+            let (nb, mb) = extract_nibble(b, j, w);
+            acc += mult4(na, ma, nb, mb) << (4 * (i + j));
+        }
+    }
+    acc
+}
+
+/// Number of nibble products consumed by one `p`-bit MAC.
+pub fn nibble_products_per_mac(p: Precision) -> usize {
+    let n = (p.bits() / 4) as usize;
+    n * n
+}
+
+/// Dot product of two unified elements (each `p.group()` operands),
+/// accumulated with 32-bit wrapping semantics — matching both the RTL's
+/// 32-bit accumulators and XLA's int32 arithmetic, so functional
+/// simulation and the PJRT golden agree bit-exactly.
+pub fn dot_unified(p: Precision, a_ops: &[i64], b_ops: &[i64]) -> i32 {
+    debug_assert_eq!(a_ops.len(), p.group());
+    debug_assert_eq!(b_ops.len(), p.group());
+    let mut acc = 0i32;
+    for (&a, &b) in a_ops.iter().zip(b_ops) {
+        acc = acc.wrapping_add(mul_bitsplit(p, a, b) as i32);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{check, PropConfig};
+
+    #[test]
+    fn int4_exhaustive_vs_reference() {
+        for a in -8..=7i64 {
+            for b in -8..=7i64 {
+                assert_eq!(mul_bitsplit(Precision::Int4, a, b), a * b);
+            }
+        }
+    }
+
+    #[test]
+    fn int8_exhaustive_vs_reference() {
+        for a in -128..=127i64 {
+            for b in -128..=127i64 {
+                assert_eq!(mul_bitsplit(Precision::Int8, a, b), a * b, "{a}*{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn int16_property_vs_reference() {
+        check(PropConfig::new(20000, 0xBEEF), |rng| {
+            let a = rng.signed_bits(16);
+            let b = rng.signed_bits(16);
+            let got = mul_bitsplit(Precision::Int16, a, b);
+            if got != a * b {
+                return Err(format!("{a}*{b}: got {got}, want {}", a * b));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int16_corners() {
+        for (a, b) in [
+            (-32768i64, -32768i64),
+            (-32768, 32767),
+            (32767, 32767),
+            (-1, -1),
+            (-32768, -1),
+            (0, -32768),
+        ] {
+            assert_eq!(mul_bitsplit(Precision::Int16, a, b), a * b, "{a}*{b}");
+        }
+    }
+
+    #[test]
+    fn multiplier_budget_is_sixteen() {
+        for p in Precision::ALL {
+            assert_eq!(nibble_products_per_mac(p) * p.group(), 16);
+        }
+    }
+
+    #[test]
+    fn dot_unified_matches_naive_mod_2_32() {
+        check(PropConfig::new(500, 0xD07), |rng| {
+            let p = *rng.pick(&Precision::ALL);
+            let a = rng.signed_vec(p.bits(), p.group());
+            let b = rng.signed_vec(p.bits(), p.group());
+            let got = dot_unified(p, &a, &b);
+            let want: i64 = a.iter().zip(&b).map(|(&x, &y)| x * y).sum();
+            if got != want as i32 {
+                return Err(format!("{p}: got {got}, want {}", want as i32));
+            }
+            Ok(())
+        });
+    }
+}

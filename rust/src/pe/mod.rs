@@ -1,0 +1,21 @@
+//! Processing-element arithmetic: the paper's multi-precision MAC.
+//!
+//! Per Sec. II-B: *"each PE consists of sixteen 4-bit multipliers that can
+//! be dynamically combined to perform multiply-accumulate operation (MAC)
+//! with 16-bit precision, four sets of MACs at 8-bit precision, or sixteen
+//! sets of MACs at 4-bit precision."*
+//!
+//! [`mult4`] is the 4-bit multiplier primitive; [`combine`] recombines
+//! nibble partial products into full-width products exactly the way the
+//! bit-split hardware does; [`pe`] is one PE (unified-element dot +
+//! 32-bit accumulator); [`sa_core`] is the functional `TILE_R × TILE_C`
+//! array.
+
+pub mod combine;
+pub mod mult4;
+pub mod pe;
+pub mod sa_core;
+
+pub use combine::mul_bitsplit;
+pub use pe::Pe;
+pub use sa_core::SaCore;

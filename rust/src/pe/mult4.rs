@@ -1,0 +1,86 @@
+//! The 4-bit multiplier primitive.
+//!
+//! Hardware reality: a radix-4 array multiplier whose operands are either
+//! unsigned nibbles (interior slices of a wider word) or signed nibbles
+//! (the top slice carries the two's-complement sign). One primitive with
+//! two sign-mode flags covers all four cases, mirroring the sign-extension
+//! muxes in a bit-split multiplier array.
+
+/// Sign interpretation of a 4-bit slice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NibbleMode {
+    /// Interior slice: unsigned magnitude bits, value in `[0, 15]`.
+    Unsigned,
+    /// Top slice: two's-complement signed, value in `[-8, 7]`.
+    Signed,
+}
+
+/// Extract nibble `idx` of a `width_bits`-wide two's-complement value,
+/// applying [`NibbleMode::Signed`] to the top slice.
+pub fn extract_nibble(value: i64, idx: usize, width_bits: u32) -> (i64, NibbleMode) {
+    debug_assert!(width_bits % 4 == 0);
+    let n_nibbles = (width_bits / 4) as usize;
+    debug_assert!(idx < n_nibbles);
+    let raw = (value >> (4 * idx)) & 0xF;
+    if idx == n_nibbles - 1 {
+        // top nibble: sign-extend 4-bit
+        let v = if raw & 0x8 != 0 { raw - 16 } else { raw };
+        (v, NibbleMode::Signed)
+    } else {
+        (raw, NibbleMode::Unsigned)
+    }
+}
+
+/// Multiply two 4-bit slices. Inputs must already be in the range implied
+/// by their modes; the result fits in 8 bits plus sign.
+pub fn mult4(a: i64, am: NibbleMode, b: i64, bm: NibbleMode) -> i64 {
+    debug_assert!(match am {
+        NibbleMode::Unsigned => (0..=15).contains(&a),
+        NibbleMode::Signed => (-8..=7).contains(&a),
+    });
+    debug_assert!(match bm {
+        NibbleMode::Unsigned => (0..=15).contains(&b),
+        NibbleMode::Signed => (-8..=7).contains(&b),
+    });
+    a * b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extract_reassembles_value() {
+        for width in [4u32, 8, 16] {
+            let lo = -(1i64 << (width - 1));
+            let hi = (1i64 << (width - 1)) - 1;
+            for v in [lo, -1, 0, 1, hi, lo / 2, hi / 2] {
+                let mut sum = 0i64;
+                for i in 0..(width / 4) as usize {
+                    let (n, _) = extract_nibble(v, i, width);
+                    sum += n << (4 * i);
+                }
+                assert_eq!(sum, v, "width {width}, value {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn top_nibble_is_signed() {
+        let (n, m) = extract_nibble(-1, 1, 8); // 0xFF -> top nibble 0xF -> -1
+        assert_eq!(n, -1);
+        assert_eq!(m, NibbleMode::Signed);
+        let (n, m) = extract_nibble(-1, 0, 8); // low nibble 0xF unsigned
+        assert_eq!(n, 15);
+        assert_eq!(m, NibbleMode::Unsigned);
+    }
+
+    #[test]
+    fn mult4_exhaustive_signed() {
+        for a in -8..=7i64 {
+            for b in -8..=7i64 {
+                assert_eq!(mult4(a, NibbleMode::Signed, b, NibbleMode::Signed), a * b);
+            }
+        }
+    }
+}

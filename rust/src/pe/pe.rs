@@ -1,0 +1,105 @@
+//! A single processing element: unified-element dot + 32-bit accumulator
+//! + requantization on drain.
+
+use super::combine::dot_unified;
+use crate::arch::Precision;
+
+/// One PE of the SA core.
+///
+/// State is the 32-bit accumulator (matching the RTL's accumulator width;
+/// arithmetic wraps, exactly like XLA int32 — see
+/// [`crate::pe::combine::dot_unified`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Pe {
+    acc: i32,
+}
+
+impl Pe {
+    /// New PE with a cleared accumulator.
+    pub fn new() -> Self {
+        Pe { acc: 0 }
+    }
+
+    /// Zero the accumulator (`vsam.macz` entry).
+    pub fn clear(&mut self) {
+        self.acc = 0;
+    }
+
+    /// Load a raw partial sum (`vsam.ldacc`).
+    pub fn load(&mut self, v: i32) {
+        self.acc = v;
+    }
+
+    /// Raw accumulator value (`vsam.wb`).
+    pub fn value(&self) -> i32 {
+        self.acc
+    }
+
+    /// One cycle of work: dot of two unified elements, accumulated.
+    pub fn mac_unified(&mut self, p: Precision, a_ops: &[i64], b_ops: &[i64]) {
+        self.acc = self.acc.wrapping_add(dot_unified(p, a_ops, b_ops));
+    }
+
+    /// Drain with requantization: arithmetic right shift, optional ReLU,
+    /// saturate to precision `p` (the `vsam.st` path).
+    pub fn requant(&self, shift: u8, relu: bool, p: Precision) -> i64 {
+        let mut v = (self.acc >> shift) as i64;
+        if relu && v < 0 {
+            v = 0;
+        }
+        p.clamp(v)
+    }
+}
+
+/// Standalone requant helper (same semantics as [`Pe::requant`]) used by
+/// the golden-model comparisons.
+pub fn requant_i32(acc: i32, shift: u8, relu: bool, p: Precision) -> i64 {
+    let mut v = (acc >> shift) as i64;
+    if relu && v < 0 {
+        v = 0;
+    }
+    p.clamp(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_accumulates() {
+        let mut pe = Pe::new();
+        pe.mac_unified(Precision::Int8, &[1, 2, 3, 4], &[5, 6, 7, 8]);
+        assert_eq!(pe.value(), 5 + 12 + 21 + 32);
+        pe.mac_unified(Precision::Int8, &[1, 0, 0, 0], &[1, 0, 0, 0]);
+        assert_eq!(pe.value(), 71);
+        pe.clear();
+        assert_eq!(pe.value(), 0);
+    }
+
+    #[test]
+    fn requant_shift_relu_saturate() {
+        let mut pe = Pe::new();
+        pe.load(1000);
+        assert_eq!(pe.requant(3, false, Precision::Int8), 125);
+        pe.load(2000);
+        assert_eq!(pe.requant(3, false, Precision::Int8), 127); // saturates
+        pe.load(-1000);
+        assert_eq!(pe.requant(3, true, Precision::Int8), 0); // relu
+        assert_eq!(pe.requant(3, false, Precision::Int8), -125);
+    }
+
+    #[test]
+    fn wrapping_accumulation_matches_i32() {
+        let mut pe = Pe::new();
+        pe.load(i32::MAX);
+        pe.mac_unified(Precision::Int16, &[1], &[1]);
+        assert_eq!(pe.value(), i32::MIN); // wraps like hardware/XLA
+    }
+
+    #[test]
+    fn ldacc_roundtrip() {
+        let mut pe = Pe::new();
+        pe.load(-123456);
+        assert_eq!(pe.value(), -123456);
+    }
+}

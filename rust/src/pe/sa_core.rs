@@ -1,0 +1,263 @@
+//! SA core: the reconfigurable `TILE_R × TILE_C` two-dimensional array of
+//! PEs inside each lane's SAU (paper Sec. II-B).
+//!
+//! Functional semantics of one `vsam.mac[z]`: stream `steps` unified
+//! elements; at step `k`, row `r` receives input element `A[r][k]` and
+//! column `c` receives weight element `B[c][k]`; PE `(r,c)` accumulates
+//! `dot(A[r][k], B[c][k])`. I.e. the tile computes `ACC += A · Bᵀ` with a
+//! unified-element inner dimension — three levels of parallelism:
+//! input channels inside each PE, output channels across columns,
+//! feature-map height across rows.
+
+use super::pe::Pe;
+use crate::arch::Precision;
+use crate::error::{Error, Result};
+
+/// Functional model of one lane's SA core (plus its accumulator banks).
+#[derive(Debug, Clone)]
+pub struct SaCore {
+    tile_r: usize,
+    tile_c: usize,
+    /// `banks[b][r][c]` — accumulator banks of PEs.
+    banks: Vec<Vec<Pe>>,
+}
+
+impl SaCore {
+    /// Build a core with `n_banks` accumulator banks.
+    pub fn new(tile_r: usize, tile_c: usize, n_banks: usize) -> Self {
+        SaCore {
+            tile_r,
+            tile_c,
+            banks: vec![vec![Pe::new(); tile_r * tile_c]; n_banks],
+        }
+    }
+
+    /// Rows of the PE array.
+    pub fn tile_r(&self) -> usize {
+        self.tile_r
+    }
+
+    /// Columns of the PE array.
+    pub fn tile_c(&self) -> usize {
+        self.tile_c
+    }
+
+    /// Number of accumulator banks.
+    pub fn n_banks(&self) -> usize {
+        self.banks.len()
+    }
+
+    fn bank_mut(&mut self, bank: usize) -> Result<&mut Vec<Pe>> {
+        let n = self.banks.len();
+        self.banks
+            .get_mut(bank)
+            .ok_or_else(|| Error::sim(format!("acc bank {bank} out of range (n={n})")))
+    }
+
+    /// Zero a bank (`vsam.macz` prologue).
+    pub fn clear_bank(&mut self, bank: usize) -> Result<()> {
+        for pe in self.bank_mut(bank)? {
+            pe.clear();
+        }
+        Ok(())
+    }
+
+    /// Stream a tile: `a` is `[tile_r][steps]` unified elements
+    /// (given as flat operand arrays, `group` operands per element),
+    /// `b` is `[tile_c][steps]`. `a_row_stride_elems` expresses the
+    /// windowed (FF) addressing: consecutive rows start `stride` elements
+    /// apart inside `a`, enabling overlapping-window reuse without
+    /// duplication. Dense layout = stride of `steps`.
+    ///
+    /// `a` must contain at least `(tile_r-1)*stride + steps` elements'
+    /// worth of operands; `b` exactly `tile_c * steps` elements.
+    pub fn mac_tile(
+        &mut self,
+        bank: usize,
+        p: Precision,
+        a_ops: &[i64],
+        a_row_stride_elems: usize,
+        b_ops: &[i64],
+        steps: usize,
+        init: bool,
+    ) -> Result<()> {
+        let g = p.group();
+        let (tile_r, tile_c) = (self.tile_r, self.tile_c);
+        let need_a = ((tile_r - 1) * a_row_stride_elems + steps) * g;
+        if a_ops.len() < need_a {
+            return Err(Error::sim(format!(
+                "mac_tile: input matrix too small ({} < {need_a} operands)",
+                a_ops.len()
+            )));
+        }
+        if b_ops.len() < tile_c * steps * g {
+            return Err(Error::sim(format!(
+                "mac_tile: weight matrix too small ({} < {} operands)",
+                b_ops.len(),
+                tile_c * steps * g
+            )));
+        }
+        if init {
+            self.clear_bank(bank)?;
+        }
+        let pes = self.bank_mut(bank)?;
+        for r in 0..tile_r {
+            let a_base = r * a_row_stride_elems * g;
+            for c in 0..tile_c {
+                let pe = &mut pes[r * tile_c + c];
+                let b_base = c * steps * g;
+                for k in 0..steps {
+                    let a_el = &a_ops[a_base + k * g..a_base + (k + 1) * g];
+                    let b_el = &b_ops[b_base + k * g..b_base + (k + 1) * g];
+                    pe.mac_unified(p, a_el, b_el);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Raw partials of a bank, row-major `[tile_r][tile_c]` (`vsam.wb`).
+    pub fn read_bank(&self, bank: usize) -> Result<Vec<i32>> {
+        let pes = self
+            .banks
+            .get(bank)
+            .ok_or_else(|| Error::sim(format!("acc bank {bank} out of range")))?;
+        Ok(pes.iter().map(|pe| pe.value()).collect())
+    }
+
+    /// Load raw partials into a bank (`vsam.ldacc`).
+    pub fn write_bank(&mut self, bank: usize, vals: &[i32]) -> Result<()> {
+        let (tile_r, tile_c) = (self.tile_r, self.tile_c);
+        if vals.len() != tile_r * tile_c {
+            return Err(Error::sim(format!(
+                "write_bank: expected {} partials, got {}",
+                tile_r * tile_c,
+                vals.len()
+            )));
+        }
+        for (pe, &v) in self.bank_mut(bank)?.iter_mut().zip(vals) {
+            pe.load(v);
+        }
+        Ok(())
+    }
+
+    /// Drain a bank with requant (`vsam.st`): returns `[tile_r][tile_c]`
+    /// requantized outputs.
+    pub fn drain_bank(
+        &self,
+        bank: usize,
+        shift: u8,
+        relu: bool,
+        p: Precision,
+    ) -> Result<Vec<i64>> {
+        let pes = self
+            .banks
+            .get(bank)
+            .ok_or_else(|| Error::sim(format!("acc bank {bank} out of range")))?;
+        Ok(pes.iter().map(|pe| pe.requant(shift, relu, p)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{check, PropConfig};
+
+    /// Naive reference: ACC[r][c] = Σ_k Σ_g A[r][k][g]·B[c][k][g] (mod 2³²).
+    fn reference(
+        p: Precision,
+        a: &[i64],
+        stride: usize,
+        b: &[i64],
+        r_n: usize,
+        c_n: usize,
+        steps: usize,
+    ) -> Vec<i32> {
+        let g = p.group();
+        let mut out = vec![0i32; r_n * c_n];
+        for r in 0..r_n {
+            for c in 0..c_n {
+                let mut acc = 0i32;
+                for k in 0..steps {
+                    for gi in 0..g {
+                        let av = a[(r * stride + k) * g + gi];
+                        let bv = b[(c * steps + k) * g + gi];
+                        acc = acc.wrapping_add((av * bv) as i32);
+                    }
+                }
+                out[r * c_n + c] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn dense_tile_matches_reference_property() {
+        check(PropConfig::new(100, 0x5AC0), |rng| {
+            let p = *rng.pick(&Precision::ALL);
+            let (r_n, c_n) = (4usize, 4usize);
+            let steps = rng.range_usize(1, 12);
+            let g = p.group();
+            let a = rng.signed_vec(p.bits(), r_n * steps * g);
+            let b = rng.signed_vec(p.bits(), c_n * steps * g);
+            let mut core = SaCore::new(r_n, c_n, 2);
+            core.mac_tile(1, p, &a, steps, &b, steps, true).map_err(|e| e.to_string())?;
+            let got = core.read_bank(1).map_err(|e| e.to_string())?;
+            let want = reference(p, &a, steps, &b, r_n, c_n, steps);
+            if got != want {
+                return Err(format!("{p} steps={steps}: {got:?} != {want:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn windowed_stride_shares_rows() {
+        // stride 1 with steps 3 means row r reads elements r..r+3 — the
+        // FF overlapping-window pattern over a 1-D input line.
+        let p = Precision::Int16;
+        let a: Vec<i64> = (1..=6).collect(); // line of 6 elements
+        let b = vec![1i64; 4 * 3]; // 4 cols, weights all 1
+        let mut core = SaCore::new(4, 4, 1);
+        core.mac_tile(0, p, &a, 1, &b, 3, true).unwrap();
+        let got = core.read_bank(0).unwrap();
+        // row r computes sum(a[r..r+3]) for every column
+        for r in 0..4 {
+            let want: i64 = (1 + r as i64) + (2 + r as i64) + (3 + r as i64);
+            for c in 0..4 {
+                assert_eq!(got[r * 4 + c], want as i32, "r={r} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn accumulate_continues_without_init() {
+        let p = Precision::Int4;
+        let g = p.group();
+        let a = vec![1i64; 4 * 2 * g];
+        let b = vec![1i64; 4 * 2 * g];
+        let mut core = SaCore::new(4, 4, 1);
+        core.mac_tile(0, p, &a, 2, &b, 2, true).unwrap();
+        core.mac_tile(0, p, &a, 2, &b, 2, false).unwrap();
+        let got = core.read_bank(0).unwrap();
+        assert!(got.iter().all(|&v| v == (2 * 2 * g) as i32));
+    }
+
+    #[test]
+    fn wb_ldacc_roundtrip() {
+        let mut core = SaCore::new(2, 3, 2);
+        let vals: Vec<i32> = (0..6).map(|i| i * 1000 - 2500).collect();
+        core.write_bank(0, &vals).unwrap();
+        assert_eq!(core.read_bank(0).unwrap(), vals);
+        assert!(core.write_bank(0, &vals[..5]).is_err());
+    }
+
+    #[test]
+    fn undersized_operands_rejected() {
+        let mut core = SaCore::new(4, 4, 1);
+        let p = Precision::Int16;
+        assert!(core.mac_tile(0, p, &[1, 2], 4, &[1; 16], 4, true).is_err());
+        assert!(core.mac_tile(0, p, &[1; 16], 4, &[1, 2], 4, true).is_err());
+        assert!(core.mac_tile(9, p, &[1; 16], 4, &[1; 16], 4, true).is_err());
+    }
+}

@@ -1,0 +1,194 @@
+//! Typed golden-model wrappers over the AOT artifacts. The shapes here
+//! mirror `python/compile/aot.py` exactly (its `test_aot.py` pins them on
+//! the Python side; `rust/tests/golden_vs_simulator.rs` pins them here).
+
+use super::pjrt::PjrtRuntime;
+use crate::arch::Precision;
+use crate::error::{Error, Result};
+use crate::mem::Tensor;
+
+/// GEMM artifact M dimension.
+pub const GEMM_M: usize = 16;
+/// GEMM artifact K (contraction) dimension.
+pub const GEMM_K: usize = 32;
+/// GEMM artifact N dimension.
+pub const GEMM_N: usize = 16;
+
+/// Golden multi-precision GEMM (`gemm_i{4,8,16}.hlo.txt`).
+#[derive(Debug)]
+pub struct GemmGolden<'rt> {
+    rt: &'rt mut PjrtRuntime,
+    precision: Precision,
+}
+
+impl<'rt> GemmGolden<'rt> {
+    /// Bind to the artifact for `precision`.
+    pub fn new(rt: &'rt mut PjrtRuntime, precision: Precision) -> Self {
+        GemmGolden { rt, precision }
+    }
+
+    fn artifact(&self) -> String {
+        format!("gemm_i{}.hlo.txt", self.precision.bits())
+    }
+
+    /// `C[m][n] = Σ_k A[m][k]·B[n][k]` through the XLA executable.
+    pub fn run(&mut self, a: &[i32], b: &[i32]) -> Result<Vec<i32>> {
+        if a.len() != GEMM_M * GEMM_K || b.len() != GEMM_N * GEMM_K {
+            return Err(Error::runtime("gemm golden: wrong operand sizes".to_string()));
+        }
+        self.rt.run_i32(&self.artifact(), &[(a, &[GEMM_M, GEMM_K]), (b, &[GEMM_N, GEMM_K])])
+    }
+}
+
+/// One conv golden artifact's static description.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvGoldenSpec {
+    /// Artifact file name.
+    pub artifact: &'static str,
+    /// Input channels.
+    pub cin: usize,
+    /// Output channels.
+    pub cout: usize,
+    /// Spatial size (square).
+    pub hw: usize,
+    /// Kernel size.
+    pub k: usize,
+    /// Stride.
+    pub stride: usize,
+    /// Padding.
+    pub pad: usize,
+    /// Requant shift.
+    pub shift: u8,
+    /// Fused ReLU.
+    pub relu: bool,
+    /// Operand precision.
+    pub precision: Precision,
+}
+
+/// `conv3x3_i8.hlo.txt` — matches `aot.CONV3X3`.
+pub const CONV3X3_I8: ConvGoldenSpec = ConvGoldenSpec {
+    artifact: "conv3x3_i8.hlo.txt",
+    cin: 8,
+    cout: 16,
+    hw: 10,
+    k: 3,
+    stride: 1,
+    pad: 1,
+    shift: 6,
+    relu: false,
+    precision: Precision::Int8,
+};
+
+/// `conv1x1_i8.hlo.txt` — matches `aot.CONV1X1`.
+pub const CONV1X1_I8: ConvGoldenSpec = ConvGoldenSpec {
+    artifact: "conv1x1_i8.hlo.txt",
+    cin: 16,
+    cout: 8,
+    hw: 6,
+    k: 1,
+    stride: 1,
+    pad: 0,
+    shift: 5,
+    relu: true,
+    precision: Precision::Int8,
+};
+
+/// `conv3x3_i4.hlo.txt` — matches `aot.CONV3X3_I4` (4-bit operands).
+pub const CONV3X3_I4: ConvGoldenSpec = ConvGoldenSpec {
+    artifact: "conv3x3_i4.hlo.txt",
+    cin: 32,
+    cout: 16,
+    hw: 8,
+    k: 3,
+    stride: 1,
+    pad: 1,
+    shift: 4,
+    relu: true,
+    precision: Precision::Int4,
+};
+
+/// `conv3x3_i16.hlo.txt` — matches `aot.CONV3X3_I16` (16-bit, stride 2).
+pub const CONV3X3_I16: ConvGoldenSpec = ConvGoldenSpec {
+    artifact: "conv3x3_i16.hlo.txt",
+    cin: 4,
+    cout: 8,
+    hw: 8,
+    k: 3,
+    stride: 2,
+    pad: 1,
+    shift: 8,
+    relu: false,
+    precision: Precision::Int16,
+};
+
+/// Golden quantized conv built from an artifact spec.
+#[derive(Debug)]
+pub struct ConvGolden<'rt> {
+    rt: &'rt mut PjrtRuntime,
+    /// The artifact's static description.
+    pub spec: ConvGoldenSpec,
+}
+
+impl<'rt> ConvGolden<'rt> {
+    /// Bind to an artifact spec.
+    pub fn new(rt: &'rt mut PjrtRuntime, spec: ConvGoldenSpec) -> Self {
+        ConvGolden { rt, spec }
+    }
+
+    /// Run the golden conv on host tensors, returning `[Cout][Ho][Wo]`.
+    pub fn run(&mut self, input: &Tensor, weights: &Tensor) -> Result<Tensor> {
+        let s = self.spec;
+        let x: Vec<i32> = input.data.iter().map(|&v| v as i32).collect();
+        let w: Vec<i32> = weights.data.iter().map(|&v| v as i32).collect();
+        let out = self.rt.run_i32(
+            s.artifact,
+            &[
+                (&x, &[s.cin, s.hw, s.hw]),
+                (&w, &[s.cout, s.cin, s.k, s.k]),
+            ],
+        )?;
+        let ho = (s.hw + 2 * s.pad - s.k) / s.stride + 1;
+        Ok(Tensor {
+            shape: vec![s.cout, ho, ho],
+            data: out.into_iter().map(|v| v as i64).collect(),
+        })
+    }
+}
+
+/// Golden TinyCNN end-to-end network (`tinycnn.hlo.txt`): input
+/// `[3][16][16]` (4-bit range), output `[10][8][8]` logits map.
+#[derive(Debug)]
+pub struct TinycnnGolden<'rt> {
+    rt: &'rt mut PjrtRuntime,
+}
+
+/// TinyCNN golden input shape.
+pub const TINYCNN_INPUT: [usize; 3] = [3, 16, 16];
+/// TinyCNN golden output shape.
+pub const TINYCNN_OUTPUT: [usize; 3] = [10, 8, 8];
+
+impl<'rt> TinycnnGolden<'rt> {
+    /// Bind to the tinycnn artifact.
+    pub fn new(rt: &'rt mut PjrtRuntime) -> Self {
+        TinycnnGolden { rt }
+    }
+
+    /// Run the full golden network: input + 4 weight tensors.
+    pub fn run(&mut self, input: &Tensor, weights: &[Tensor]) -> Result<Tensor> {
+        if weights.len() != 4 {
+            return Err(Error::runtime("tinycnn golden expects 4 weight tensors"));
+        }
+        let x: Vec<i32> = input.data.iter().map(|&v| v as i32).collect();
+        let ws: Vec<Vec<i32>> =
+            weights.iter().map(|t| t.data.iter().map(|&v| v as i32).collect()).collect();
+        let mut args: Vec<(&[i32], &[usize])> = vec![(&x, &TINYCNN_INPUT)];
+        for (t, w) in weights.iter().zip(&ws) {
+            args.push((w, &t.shape));
+        }
+        let out = self.rt.run_i32("tinycnn.hlo.txt", &args)?;
+        Ok(Tensor {
+            shape: TINYCNN_OUTPUT.to_vec(),
+            data: out.into_iter().map(|v| v as i64).collect(),
+        })
+    }
+}

@@ -1,0 +1,10 @@
+//! XLA/PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`,
+//! produced once by `make artifacts`) and executes them on the PJRT CPU
+//! client. This is the request-path golden oracle — Python is never
+//! imported at runtime.
+
+pub mod golden;
+pub mod pjrt;
+
+pub use golden::{ConvGolden, GemmGolden, TinycnnGolden, GEMM_K, GEMM_M, GEMM_N};
+pub use pjrt::PjrtRuntime;

@@ -1,0 +1,223 @@
+//! Address generator of the operand requester.
+//!
+//! The SAU's CSR state (programmed by `VSACFG` minor ops) plus a `VSAM`'s
+//! register operands fully determine every VRF address touched during the
+//! tile. Generation is two-level:
+//!
+//! - across SA rows: row `r`'s stream starts `vsa_rowstride` elements
+//!   after row `r−1`'s (windowed feature-map rows);
+//! - within a stream: `vl` elements are produced as runs of
+//!   `vsa_runlen` contiguous elements whose starts are `vsa_runstride`
+//!   elements apart — one run per kernel row, so a single `VSAM` covers a
+//!   whole K×K window of one channel chunk.
+
+use crate::arch::{Precision, SpeedConfig};
+use crate::isa::Strategy;
+
+/// SAU configuration/state registers (one copy, broadcast to all lanes —
+/// lanes run in lockstep).
+#[derive(Debug, Clone, Copy)]
+pub struct CsrState {
+    /// Processing precision (VSACFG main).
+    pub precision: Precision,
+    /// Dataflow strategy bit (VSACFG main) — informational for stats.
+    pub strategy: Strategy,
+    /// TILE_H (VSACFG main) — informational, = TILE_R + K − 1.
+    pub tile_h: u8,
+    /// Input row stride in unified elements; 0 ⇒ dense (stride = vl).
+    pub rowstride_elems: u32,
+    /// Run length in elements (0 ⇒ single dense run of vl).
+    pub runlen_elems: u32,
+    /// Stride between run starts, in elements.
+    pub runstride_elems: u32,
+    /// Byte offset added to the input base (x-sweep windowing).
+    pub aoffset_bytes: u32,
+    /// Auto-increment applied to `aoffset_bytes` after a bumping VSAM.
+    pub aincr_bytes: u32,
+    /// Byte offset added to the wb/ldacc vreg base.
+    pub woffset_bytes: u32,
+    /// Output row stride in bytes (distance between output rows).
+    pub outstride_bytes: u32,
+    /// Output channel stride in bytes.
+    pub cstride_bytes: u32,
+    /// Requantization right-shift on drain.
+    pub shift: u8,
+}
+
+impl Default for CsrState {
+    fn default() -> Self {
+        CsrState {
+            precision: Precision::Int8,
+            strategy: Strategy::ChannelFirst,
+            tile_h: 0,
+            rowstride_elems: 0,
+            runlen_elems: 0,
+            runstride_elems: 0,
+            aoffset_bytes: 0,
+            aincr_bytes: 0,
+            woffset_bytes: 0,
+            outstride_bytes: 0,
+            cstride_bytes: 0,
+            shift: 0,
+        }
+    }
+}
+
+/// Concrete operand addressing for one `VSAM` tile.
+#[derive(Debug, Clone, Copy)]
+pub struct AddrGen {
+    /// Element size in bytes.
+    pub elem_bytes: usize,
+    /// Streaming steps (unified elements per row stream).
+    pub steps: usize,
+    /// Input row stride in elements (dense = `steps`).
+    pub a_row_stride_elems: usize,
+    /// Run length (≤ steps).
+    pub runlen: usize,
+    /// Stride between run starts, elements.
+    pub runstride: usize,
+    /// Input base byte offset within the `vs1` vreg base.
+    pub a_offset_bytes: usize,
+}
+
+impl AddrGen {
+    /// Derive addressing for a tile of `steps` elements from CSR state.
+    pub fn new(csr: &CsrState, steps: usize) -> Self {
+        let stride = if csr.rowstride_elems == 0 {
+            steps
+        } else {
+            csr.rowstride_elems as usize
+        };
+        let runlen = if csr.runlen_elems == 0 || csr.runlen_elems as usize >= steps {
+            steps
+        } else {
+            csr.runlen_elems as usize
+        };
+        let runstride =
+            if csr.runstride_elems == 0 { runlen } else { csr.runstride_elems as usize };
+        AddrGen {
+            elem_bytes: csr.precision.element_bytes(),
+            steps,
+            a_row_stride_elems: stride,
+            runlen,
+            runstride,
+            a_offset_bytes: csr.aoffset_bytes as usize,
+        }
+    }
+
+    /// Number of runs in one stream.
+    pub fn n_runs(&self) -> usize {
+        self.steps.div_ceil(self.runlen)
+    }
+
+    /// Element offset (relative to the stream start) of stream element
+    /// `k` — the two-level generation.
+    pub fn elem_offset(&self, k: usize) -> usize {
+        (k / self.runlen) * self.runstride + (k % self.runlen)
+    }
+
+    /// Byte offset (within the lane VRF, relative to the `vs1` base) of
+    /// input row `r`, stream element `k`.
+    pub fn a_elem_offset_bytes(&self, r: usize, k: usize) -> usize {
+        self.a_offset_bytes
+            + (r * self.a_row_stride_elems + self.elem_offset(k)) * self.elem_bytes
+    }
+
+    /// Byte offset of weight row `c`, element `k` relative to `vs2`
+    /// (weights are always dense).
+    pub fn b_elem_offset_bytes(&self, c: usize, k: usize) -> usize {
+        (c * self.steps + k) * self.elem_bytes
+    }
+
+    /// Total input span in bytes a lane touches for `tile_r` rows
+    /// (union of the windowed, run-decomposed streams).
+    pub fn a_span_bytes(&self, tile_r: usize) -> usize {
+        let last_elem = (tile_r - 1) * self.a_row_stride_elems
+            + (self.n_runs() - 1) * self.runstride
+            + (self.runlen - 1);
+        self.a_offset_bytes + (last_elem + 1) * self.elem_bytes
+    }
+
+    /// Total weight bytes per lane for `tile_c` columns.
+    pub fn b_bytes(&self, tile_c: usize) -> usize {
+        tile_c * self.steps * self.elem_bytes
+    }
+
+    /// Per-cycle request pattern: byte distance between the `tile_r`
+    /// simultaneous input requests (row stride), used by the arbiter.
+    pub fn a_request_stride_bytes(&self) -> usize {
+        self.a_row_stride_elems * self.elem_bytes
+    }
+}
+
+/// TILE_H helper: input rows required per spatial pass for a `k`-tall
+/// kernel with output-row parallelism `tile_r` and vertical stride `s`.
+pub fn tile_h(cfg: &SpeedConfig, k: usize, stride: usize) -> usize {
+    (cfg.tile_r - 1) * stride + k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_addressing() {
+        let csr = CsrState { precision: Precision::Int16, ..Default::default() };
+        let ag = AddrGen::new(&csr, 10);
+        assert_eq!(ag.a_row_stride_elems, 10);
+        assert_eq!(ag.runlen, 10);
+        assert_eq!(ag.n_runs(), 1);
+        assert_eq!(ag.a_elem_offset_bytes(0, 0), 0);
+        assert_eq!(ag.a_elem_offset_bytes(2, 3), (20 + 3) * 2);
+        assert_eq!(ag.b_elem_offset_bytes(3, 0), 60);
+        assert_eq!(ag.a_span_bytes(4), 80);
+        assert_eq!(ag.b_bytes(4), 80);
+    }
+
+    #[test]
+    fn run_decomposed_kernel_window() {
+        // K=3, c_c=2: steps=18, runlen=6 (kx×c_c), runstride=row of 10
+        let csr = CsrState {
+            precision: Precision::Int8,
+            rowstride_elems: 20,
+            runlen_elems: 6,
+            runstride_elems: 10,
+            aoffset_bytes: 8,
+            ..Default::default()
+        };
+        let ag = AddrGen::new(&csr, 18);
+        assert_eq!(ag.n_runs(), 3);
+        // element 0 of run 1 sits one patch row (10 elems) in
+        assert_eq!(ag.elem_offset(6), 10);
+        assert_eq!(ag.elem_offset(7), 11);
+        assert_eq!(ag.elem_offset(17), 25);
+        // row 1 starts rowstride (20) elements later
+        assert_eq!(
+            ag.a_elem_offset_bytes(1, 0) - ag.a_elem_offset_bytes(0, 0),
+            20 * 4
+        );
+        // span covers the whole window union
+        assert_eq!(ag.a_span_bytes(2), 8 + (20 + 25 + 1) * 4);
+    }
+
+    #[test]
+    fn runlen_zero_or_oversized_degenerates_to_dense() {
+        let csr = CsrState {
+            precision: Precision::Int16,
+            runlen_elems: 100,
+            runstride_elems: 7,
+            ..Default::default()
+        };
+        let ag = AddrGen::new(&csr, 10);
+        assert_eq!(ag.runlen, 10);
+        assert_eq!(ag.n_runs(), 1);
+    }
+
+    #[test]
+    fn tile_h_matches_paper_shape() {
+        let cfg = SpeedConfig::default();
+        assert_eq!(tile_h(&cfg, 3, 1), 6);
+        assert_eq!(tile_h(&cfg, 1, 1), 4);
+        assert_eq!(tile_h(&cfg, 3, 2), 9);
+    }
+}

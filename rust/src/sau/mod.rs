@@ -1,0 +1,22 @@
+//! Systolic array unit (SAU) — the paper's key component (Sec. II-B):
+//! *"a highly flexible and parameterized multi-precision SAU … composed of
+//! three components: operand requester, queues, and systolic array core."*
+//!
+//! - [`addr_gen`] — the operand requester's address generator: turns the
+//!   `VSACFG` CSR state + a `VSAM` into concrete VRF operand addresses.
+//! - [`arbiter`] — the operand requester's request arbiter: prices VRF
+//!   bank contention for the generated access pattern.
+//! - [`queues`] — operand queues (inputs, weights, partials, outputs):
+//!   decoupling model giving DRAM/compute overlap.
+//! - [`sau`] — glue: per-`VSAM` timing ([`TileCost`]) and the functional
+//!   execution path against a lane's VRF + SA core.
+
+pub mod addr_gen;
+pub mod arbiter;
+pub mod queues;
+pub mod sau;
+
+pub use addr_gen::{AddrGen, CsrState};
+pub use arbiter::Arbiter;
+pub use queues::OperandQueues;
+pub use sau::{Sau, TileCost};

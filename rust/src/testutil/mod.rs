@@ -1,0 +1,13 @@
+//! Test utilities: deterministic PRNG and a minimal property-test harness.
+//!
+//! The build environment is offline and the vendored crate set does not
+//! include `proptest`/`rand`, so we ship a small, self-contained
+//! SplitMix64-based generator plus a property-check runner with
+//! counterexample reporting. The API intentionally mirrors the shape of
+//! `proptest` closures so migrating online is mechanical.
+
+pub mod prng;
+pub mod propcheck;
+
+pub use prng::Prng;
+pub use propcheck::{check, Config as PropConfig};

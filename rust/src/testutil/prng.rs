@@ -1,0 +1,133 @@
+//! SplitMix64 deterministic PRNG.
+//!
+//! Used for synthetic tensor generation (functional-simulation inputs) and
+//! by the property-test harness. Deterministic across platforms — every
+//! experiment and test is reproducible from its seed.
+
+/// SplitMix64 generator (public-domain algorithm by Sebastiano Vigna).
+#[derive(Debug, Clone)]
+pub struct Prng {
+    state: u64,
+}
+
+impl Prng {
+    /// Create a generator from a seed.
+    pub fn new(seed: u64) -> Self {
+        Prng { state: seed }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Next 32-bit value.
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)`. `n` must be > 0.
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Rejection-free multiply-shift; bias is negligible for test sizes.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform usize in `[lo, hi]` inclusive.
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Uniform i64 in `[lo, hi]` inclusive.
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as i64 as u64) as i64
+    }
+
+    /// A signed integer that fits in `bits` bits (two's complement),
+    /// i.e. `[-2^(bits-1), 2^(bits-1)-1]`.
+    pub fn signed_bits(&mut self, bits: u32) -> i64 {
+        debug_assert!((1..=32).contains(&bits));
+        let lo = -(1i64 << (bits - 1));
+        let hi = (1i64 << (bits - 1)) - 1;
+        self.range_i64(lo, hi)
+    }
+
+    /// Uniform f64 in [0,1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+
+    /// Fill a vector with signed integers fitting in `bits` bits.
+    pub fn signed_vec(&mut self, bits: u32, n: usize) -> Vec<i64> {
+        (0..n).map(|_| self.signed_bits(bits)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Prng::new(42);
+        let mut b = Prng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Prng::new(1);
+        let mut b = Prng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn signed_bits_in_range() {
+        let mut p = Prng::new(7);
+        for bits in [4u32, 8, 16] {
+            let lo = -(1i64 << (bits - 1));
+            let hi = (1i64 << (bits - 1)) - 1;
+            for _ in 0..1000 {
+                let v = p.signed_bits(bits);
+                assert!(v >= lo && v <= hi, "{v} out of s{bits} range");
+            }
+        }
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut p = Prng::new(9);
+        for _ in 0..1000 {
+            assert!(p.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn range_usize_inclusive_endpoints_hit() {
+        let mut p = Prng::new(11);
+        let mut saw_lo = false;
+        let mut saw_hi = false;
+        for _ in 0..2000 {
+            match p.range_usize(3, 5) {
+                3 => saw_lo = true,
+                5 => saw_hi = true,
+                4 => {}
+                other => panic!("out of range: {other}"),
+            }
+        }
+        assert!(saw_lo && saw_hi);
+    }
+}

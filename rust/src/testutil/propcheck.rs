@@ -1,0 +1,76 @@
+//! Minimal property-test runner with counterexample reporting.
+//!
+//! `check(cfg, |rng| -> Result<(), String>)` runs the closure `cfg.cases`
+//! times with independent deterministic sub-seeds. On failure it reports
+//! the failing case index and sub-seed so the exact case can be replayed
+//! with `Prng::new(sub_seed)`.
+
+use super::prng::Prng;
+
+/// Property-run configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of random cases to execute.
+    pub cases: usize,
+    /// Master seed; sub-seeds are derived deterministically.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0xC0FFEE }
+    }
+}
+
+impl Config {
+    /// Convenience constructor.
+    pub fn new(cases: usize, seed: u64) -> Self {
+        Config { cases, seed }
+    }
+}
+
+/// Run `prop` under `cfg.cases` deterministic seeds; panic with a replayable
+/// counterexample report on the first failure.
+pub fn check<F>(cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Prng) -> Result<(), String>,
+{
+    let mut master = Prng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let sub_seed = master.next_u64();
+        let mut rng = Prng::new(sub_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property failed at case {case}/{} (replay with Prng::new({sub_seed:#x})): {msg}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(Config::new(50, 1), |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_report() {
+        check(Config::new(10, 2), |rng| {
+            if rng.below(2) == 0 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

@@ -1,0 +1,52 @@
+//! End-to-end integration test: the multi-precision TinyCNN through the
+//! functional simulator (layer by layer, host DMA between layers) must be
+//! bit-exact with the single AOT-compiled XLA golden network.
+//! (The runnable version with reporting lives in examples/e2e_squeezenet.)
+
+use speed::arch::{Precision, SpeedConfig};
+use speed::coordinator::run_functional_conv;
+use speed::dataflow::{ConvLayer, Strategy};
+use speed::mem::Tensor;
+use speed::runtime::{PjrtRuntime, TinycnnGolden};
+use speed::testutil::Prng;
+
+struct Spec(&'static str, usize, usize, usize, usize, usize, Precision, u8, bool);
+
+// Mirrors python/compile/model.py::TINYCNN_SPECS.
+const TINYCNN: [Spec; 4] = [
+    Spec("conv1", 3, 8, 3, 1, 1, Precision::Int4, 4, true),
+    Spec("conv2", 8, 16, 3, 2, 1, Precision::Int8, 6, true),
+    Spec("conv3", 16, 16, 3, 1, 1, Precision::Int16, 9, true),
+    Spec("head", 16, 10, 1, 1, 0, Precision::Int16, 12, false),
+];
+
+#[test]
+fn tinycnn_simulator_matches_xla_golden_bit_exactly() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("tinycnn.hlo.txt").exists() {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        return;
+    }
+    let cfg = SpeedConfig::default();
+    for seed in [1u64, 42, 0xDEAD] {
+        let mut rng = Prng::new(seed);
+        let input = Tensor::random(&[3, 16, 16], Precision::Int4, &mut rng);
+        let weights: Vec<Tensor> = TINYCNN
+            .iter()
+            .map(|s| Tensor::random(&[s.2, s.1, s.3, s.3], s.6, &mut rng))
+            .collect();
+        let mut rt = PjrtRuntime::new(&dir).unwrap();
+        let golden = TinycnnGolden::new(&mut rt).run(&input, &weights).unwrap();
+
+        // alternate strategies across layers to exercise both paths
+        let mut act = input;
+        for (i, (s, w)) in TINYCNN.iter().zip(&weights).enumerate() {
+            let layer =
+                ConvLayer::new(s.0, s.1, s.2, act.shape[1], act.shape[2], s.3, s.4, s.5);
+            let strat = if i % 2 == 0 { Strategy::ChannelFirst } else { Strategy::FeatureFirst };
+            act = run_functional_conv(&cfg, &layer, s.6, strat, &act, w, s.7, s.8).unwrap();
+        }
+        assert_eq!(act.shape, golden.shape, "seed {seed}");
+        assert_eq!(act.data, golden.data, "seed {seed}: simulator != XLA golden");
+    }
+}

@@ -1,0 +1,98 @@
+//! Failure-injection tests: malformed programs, impossible layers and
+//! resource violations must produce errors, never wrong numbers or
+//! panics.
+
+use speed::arch::{Precision, SpeedConfig};
+use speed::core::{ExecMode, Processor};
+use speed::dataflow::{compile_conv, ConvLayer, Strategy, TilingPlan};
+use speed::isa::{assemble, decode, Program};
+use speed::mem::Dram;
+
+#[test]
+fn corrupted_words_are_rejected_not_misdecoded() {
+    // flip bits in a valid program; every word either decodes to a valid
+    // instruction or errors — never panics.
+    let layer = ConvLayer::new("t", 8, 8, 8, 8, 3, 1, 1);
+    let cc = compile_conv(
+        &SpeedConfig::default(),
+        &layer,
+        Precision::Int8,
+        Strategy::ChannelFirst,
+        0,
+        false,
+    )
+    .unwrap();
+    let mut rng = speed::testutil::Prng::new(99);
+    for &w in cc.program.words().iter().take(500) {
+        let corrupted = w ^ (1 << rng.range_usize(0, 31));
+        let _ = decode(corrupted); // Ok or Err are both fine; no panic
+    }
+}
+
+#[test]
+fn impossible_layers_are_mapping_errors() {
+    let cfg = SpeedConfig::default();
+    // kernel larger than padded input
+    let too_big = ConvLayer::new("k9", 4, 4, 4, 4, 9, 1, 0);
+    assert!(TilingPlan::new(&cfg, &too_big, Precision::Int8, Strategy::ChannelFirst).is_err());
+    // degenerate channel counts
+    let zero_c = ConvLayer::new("c0", 0, 4, 8, 8, 3, 1, 1);
+    assert!(TilingPlan::new(&cfg, &zero_c, Precision::Int8, Strategy::FeatureFirst).is_err());
+    // TILE_H field overflow (stride 16 × K 9 ⇒ tile_h 57 is fine; 32× K
+    // pushes past 63)
+    let huge_stride = ConvLayer::new("s", 4, 4, 700, 700, 9, 32, 0);
+    assert!(
+        TilingPlan::new(&cfg, &huge_stride, Precision::Int8, Strategy::ChannelFirst).is_err()
+    );
+}
+
+#[test]
+fn runaway_programs_hit_memory_bounds() {
+    // a program that loads from far beyond the DRAM allocation must
+    // fail with a simulation error in functional mode
+    let cfg = SpeedConfig::default();
+    let mut m = Processor::new(cfg, 4096, ExecMode::Functional).unwrap();
+    let src = r#"
+        vsacfg e8, cf, th4
+        addi t6, zero, 64
+        vsetvli zero, t6, e16, m8
+        lui a0, 0x10
+        vsald.b v0, (a0)
+    "#;
+    let mut prog = Program::new();
+    for i in assemble(src).unwrap() {
+        prog.push(i);
+    }
+    assert!(m.run(&prog).is_err(), "OOB load must be reported");
+}
+
+#[test]
+fn acc_bank_out_of_range_is_reported() {
+    let cfg = SpeedConfig::default();
+    let mut m = Processor::new(cfg, 1 << 16, ExecMode::Timing).unwrap();
+    let src = r#"
+        vsacfg e8, cf, th4
+        addi t6, zero, 4
+        vsetvli zero, t6, e16, m8
+        vsam.macz acc31, v0, v8
+    "#;
+    let mut prog = Program::new();
+    for i in assemble(src).unwrap() {
+        prog.push(i);
+    }
+    assert!(m.run(&prog).is_err(), "acc bank 31 must be out of range");
+}
+
+#[test]
+fn dram_allocator_exhaustion_is_an_error() {
+    let mut d = Dram::new(1024, 16.0, 10);
+    assert!(d.alloc(512).is_ok());
+    assert!(d.alloc(1024).is_err());
+}
+
+#[test]
+fn invalid_configs_never_build_processors() {
+    let mut cfg = SpeedConfig::default();
+    cfg.n_lanes = 3; // not a power of two
+    assert!(Processor::new(cfg, 1024, ExecMode::Timing).is_err());
+}

@@ -1,0 +1,44 @@
+//! Integration check of the paper's core dataflow claim (Sec. II-C /
+//! Fig. 3): FF wins large kernels, CF wins 1×1, and Mixed dominates both.
+
+use speed::arch::{Precision, SpeedConfig};
+use speed::coordinator::simulate_layer;
+use speed::dataflow::{ConvLayer, Strategy};
+
+#[test]
+fn ff_wins_3x3_cf_wins_1x1_across_precisions() {
+    let cfg = SpeedConfig::default();
+    let conv3 = ConvLayer::new("r3", 64, 64, 56, 56, 3, 1, 1);
+    let pw = ConvLayer::new("pw", 128, 128, 28, 28, 1, 1, 0);
+    for p in [Precision::Int16, Precision::Int8, Precision::Int4] {
+        let ff3 = simulate_layer(&cfg, &conv3, p, Strategy::FeatureFirst).unwrap();
+        let cf3 = simulate_layer(&cfg, &conv3, p, Strategy::ChannelFirst).unwrap();
+        assert!(
+            ff3.cycles < cf3.cycles,
+            "{p}: FF should win 3x3 ({} vs {})",
+            ff3.cycles,
+            cf3.cycles
+        );
+        let ff1 = simulate_layer(&cfg, &pw, p, Strategy::FeatureFirst).unwrap();
+        let cf1 = simulate_layer(&cfg, &pw, p, Strategy::ChannelFirst).unwrap();
+        assert!(
+            cf1.cycles < ff1.cycles,
+            "{p}: CF should win 1x1 ({} vs {})",
+            cf1.cycles,
+            ff1.cycles
+        );
+    }
+}
+
+#[test]
+fn larger_kernels_reach_higher_efficiency() {
+    // Fig. 3 observation: "with larger convolution kernel sizes, the
+    // area efficiency improves" (more reuse per fetched byte).
+    let cfg = SpeedConfig::default();
+    let mk = |k: usize| ConvLayer::new("k", 64, 64, 28, 28, k, 1, k / 2);
+    let g3 = simulate_layer(&cfg, &mk(3), Precision::Int16, Strategy::Mixed)
+        .unwrap();
+    let g1 = simulate_layer(&cfg, &mk(1), Precision::Int16, Strategy::Mixed)
+        .unwrap();
+    assert!(g3.gops(&cfg) > g1.gops(&cfg));
+}
