@@ -36,7 +36,7 @@ const DEMO: &str = r#"
     vsam.st.relu acc0, (a2)
 "#;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> speed::Result<()> {
     println!("== hand-written kernel ==");
     let prog_instrs = assemble(DEMO)?;
     for i in &prog_instrs {

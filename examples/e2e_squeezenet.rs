@@ -44,7 +44,7 @@ const TINYCNN: [Spec; 4] = [
     Spec { name: "head", cin: 16, cout: 10, k: 1, stride: 1, pad: 0, p: Precision::Int16, shift: 12, relu: false },
 ];
 
-fn tinycnn_e2e() -> anyhow::Result<()> {
+fn tinycnn_e2e() -> speed::Result<()> {
     println!("== Part 1: TinyCNN end-to-end, simulator vs XLA golden ==\n");
     let cfg = SpeedConfig::default();
     let mut rng = Prng::new(0xE2E);
@@ -94,7 +94,7 @@ fn tinycnn_e2e() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn squeezenet_inference() -> anyhow::Result<()> {
+fn squeezenet_inference() -> speed::Result<()> {
     println!("== Part 2: full SqueezeNet inference (timing, mixed dataflow) ==\n");
     let cfg = SpeedConfig::default();
     let ara_cfg = AraConfig::default();
@@ -140,7 +140,7 @@ fn squeezenet_inference() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> speed::Result<()> {
     tinycnn_e2e()?;
     squeezenet_inference()
 }

@@ -8,7 +8,7 @@ use speed::arch::SpeedConfig;
 use speed::coordinator::experiments::run_fig3;
 use speed::coordinator::report::fig3_markdown;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> speed::Result<()> {
     let cfg = SpeedConfig::default();
     let fig3 = run_fig3(&cfg)?;
     println!("{}", fig3_markdown(&fig3));

@@ -11,7 +11,7 @@ use speed::coordinator::simulate_layer;
 use speed::cost::speed_area_breakdown;
 use speed::dataflow::{ConvLayer, Strategy};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> speed::Result<()> {
     let cfg = SpeedConfig::default();
     let fig4 = run_fig4(&cfg)?;
     println!("{}", fig4_markdown(&fig4));

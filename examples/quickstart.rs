@@ -8,7 +8,7 @@ use speed::coordinator::simulate_layer;
 use speed::cost::{roofline_gops, speed_area_breakdown};
 use speed::dataflow::{ConvLayer, Strategy};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> speed::Result<()> {
     let cfg = SpeedConfig::default();
     let layer = ConvLayer::new("resnet_conv3x3", 64, 64, 56, 56, 3, 1, 1);
     let area = speed_area_breakdown(&cfg).total();

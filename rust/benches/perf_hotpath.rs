@@ -12,10 +12,12 @@
 //! Run: `cargo bench --bench perf_hotpath`
 
 use speed::arch::{Precision, SpeedConfig};
+use speed::coordinator::sweep::{SweepEngine, SweepSpec};
 use speed::coordinator::{run_functional_conv, simulate_layer};
 use speed::dataflow::{compile_conv, ConvLayer, Strategy};
 use speed::isa::{decode, encode, Instr};
 use speed::mem::Tensor;
+use speed::models::all_models;
 use speed::testutil::Prng;
 use std::time::Instant;
 
@@ -97,4 +99,76 @@ fn main() {
         std::hint::black_box(acc);
     });
     let _ = Instr::is_vector;
+
+    sweep_throughput(&cfg);
+}
+
+/// §Perf: batch-sweep engine throughput on the paper's four-network grid
+/// — serial single-layer API vs the pooled/parallel/memoizing engine,
+/// with a bit-identical cross-check between the two paths.
+fn sweep_throughput(cfg: &SpeedConfig) {
+    println!("\n== sweep engine: network-scale grid (4 nets x 16/8/4-bit, Mixed) ==");
+    let models = all_models();
+    let precs = [Precision::Int16, Precision::Int8, Precision::Int4];
+    let n_jobs: usize = models.iter().map(|m| m.layers.len()).sum::<usize>() * precs.len();
+    // every Mixed job is an FF + a CF timing simulation
+    let n_layer_sims = (2 * n_jobs) as f64;
+
+    // 1) serial baseline: the single-layer API, fresh processor per sim
+    let t0 = Instant::now();
+    let mut serial = Vec::with_capacity(n_jobs);
+    for m in &models {
+        for &p in &precs {
+            for l in &m.layers {
+                serial.push(simulate_layer(cfg, l, p, Strategy::Mixed).expect("serial"));
+            }
+        }
+    }
+    let dt_serial = t0.elapsed().as_secs_f64();
+    println!(
+        "serial (fresh processor per sim)      {dt_serial:>8.2}s  {:>8.0} layer-sims/s",
+        n_layer_sims / dt_serial
+    );
+
+    // 2) engine, no memoization: pooled processors + worker threads only
+    let spec_nocache = SweepSpec::benchmark_suite(cfg).memoize(false);
+    let mut engine = SweepEngine::new();
+    let t1 = Instant::now();
+    let out_nocache = engine.run(&spec_nocache).expect("sweep");
+    let dt_nocache = t1.elapsed().as_secs_f64();
+    println!(
+        "parallel pooled ({} threads)           {dt_nocache:>8.2}s  {:>8.0} layer-sims/s  ({:.2}x)",
+        out_nocache.threads_used,
+        out_nocache.executed_sims as f64 / dt_nocache,
+        dt_serial / dt_nocache
+    );
+
+    // 3) engine, cold cache: + shape/strategy dedup
+    let spec = SweepSpec::benchmark_suite(cfg);
+    let mut engine = SweepEngine::new();
+    let t2 = Instant::now();
+    let out_cold = engine.run(&spec).expect("sweep");
+    let dt_cold = t2.elapsed().as_secs_f64();
+    println!(
+        "parallel + dedup (cold cache)          {dt_cold:>8.2}s  {:>8} unique sims  ({:.2}x)",
+        out_cold.executed_sims,
+        dt_serial / dt_cold
+    );
+
+    // 4) warm rerun: the memoized path the repeated-experiment flow hits
+    let t3 = Instant::now();
+    let out_warm = engine.run(&spec).expect("sweep");
+    let dt_warm = t3.elapsed().as_secs_f64();
+    println!(
+        "parallel + cache (warm rerun)          {dt_warm:>8.2}s  {:>8} cache hits  ({:.0}x)",
+        out_warm.cache_hits,
+        dt_serial / dt_warm.max(1e-9)
+    );
+
+    // bit-identical acceptance check: every engine mode == serial path
+    assert_eq!(out_nocache.results, serial, "no-cache engine diverged from serial");
+    assert_eq!(out_cold.results, serial, "cold-cache engine diverged from serial");
+    assert_eq!(out_warm.results, serial, "warm-cache engine diverged from serial");
+    assert_eq!(out_warm.executed_sims, 0, "warm rerun must be pure cache");
+    println!("[bench] sweep engine bit-identical to the serial path across all modes");
 }

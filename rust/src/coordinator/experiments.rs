@@ -7,7 +7,8 @@
 
 use crate::arch::{AraConfig, Precision, SpeedConfig};
 use crate::baseline::{simulate_layer_ara, AraLayerResult};
-use crate::coordinator::runner::{simulate_layer, LayerResult};
+use crate::coordinator::runner::LayerResult;
+use crate::coordinator::sweep::{SweepEngine, SweepSpec};
 use crate::cost::area::{ara_area_mm2, speed_area_breakdown, AreaBreakdown};
 use crate::cost::calib;
 use crate::cost::energy::{
@@ -82,16 +83,25 @@ fn ara_network_eff(results: &[AraLayerResult], ara: &AraConfig) -> f64 {
 }
 
 /// FIG3: layer-wise GoogLeNet @16-bit under FF/CF/Mixed vs Ara.
-pub fn run_fig3(cfg: &SpeedConfig) -> Result<Fig3> {
+///
+/// SPEED layer sims run on `engine`'s worker pool; reusing one engine
+/// across experiment drivers shares the memoized (shape, precision,
+/// strategy) results between them.
+pub fn run_fig3_with(engine: &mut SweepEngine, cfg: &SpeedConfig) -> Result<Fig3> {
     let ara_cfg = AraConfig::default();
     let area = speed_area_breakdown(cfg).total();
     let model = all_models().into_iter().find(|m| m.name == "GoogLeNet").unwrap();
     let p = Precision::Int16;
+    let spec = SweepSpec::new(cfg.clone())
+        .network(model.name, model.layers.clone())
+        .precisions(vec![p])
+        .strategies(vec![Strategy::FeatureFirst, Strategy::ChannelFirst]);
+    let out = engine.run(&spec)?;
+    let ffs = out.block(0, 0, 0, 0).to_vec();
+    let cfs = out.block(0, 0, 0, 1).to_vec();
     let mut rows = Vec::new();
-    let (mut ffs, mut cfs, mut mixeds, mut aras) = (vec![], vec![], vec![], vec![]);
-    for layer in &model.layers {
-        let ff = simulate_layer(cfg, layer, p, Strategy::FeatureFirst)?;
-        let cf = simulate_layer(cfg, layer, p, Strategy::ChannelFirst)?;
+    let (mut mixeds, mut aras) = (vec![], vec![]);
+    for ((layer, ff), cf) in model.layers.iter().zip(&ffs).zip(&cfs) {
         let (mixed, choice) = if ff.cycles <= cf.cycles {
             (ff.clone(), Strategy::FeatureFirst)
         } else {
@@ -107,8 +117,6 @@ pub fn run_fig3(cfg: &SpeedConfig) -> Result<Fig3> {
             choice,
             ara: ara.gops / ara_area_mm2(),
         });
-        ffs.push(ff);
-        cfs.push(cf);
         mixeds.push(mixed);
         aras.push(ara);
     }
@@ -119,6 +127,11 @@ pub fn run_fig3(cfg: &SpeedConfig) -> Result<Fig3> {
         eff_ara: ara_network_eff(&aras, &ara_cfg),
         rows,
     })
+}
+
+/// FIG3 with a throwaway engine.
+pub fn run_fig3(cfg: &SpeedConfig) -> Result<Fig3> {
+    run_fig3_with(&mut SweepEngine::new(), cfg)
 }
 
 /// One FIG4 cell: a benchmark network at one precision.
@@ -164,30 +177,41 @@ impl Fig4 {
 }
 
 /// FIG4: average area efficiency across the four benchmarks at
-/// 16/8/4-bit, SPEED (mixed) vs Ara.
-pub fn run_fig4(cfg: &SpeedConfig) -> Result<Fig4> {
+/// 16/8/4-bit, SPEED (mixed) vs Ara, on `engine`'s worker pool.
+/// FIG4 and TAB1 run the identical `benchmark_suite` grid, so sharing
+/// one engine makes the second driver pure cache.
+pub fn run_fig4_with(engine: &mut SweepEngine, cfg: &SpeedConfig) -> Result<Fig4> {
     let ara_cfg = AraConfig::default();
     let area = speed_area_breakdown(cfg).total();
+    let spec = SweepSpec::benchmark_suite(cfg);
+    let out = engine.run(&spec)?;
     let mut cells = Vec::new();
-    for model in all_models() {
-        for p in [Precision::Int16, Precision::Int8, Precision::Int4] {
-            let mut speeds = Vec::new();
+    for (mi, model) in all_models().iter().enumerate() {
+        for (pi, p) in [Precision::Int16, Precision::Int8, Precision::Int4]
+            .into_iter()
+            .enumerate()
+        {
+            let speeds = out.block(0, mi, pi, 0);
             let mut aras = Vec::new();
-            for layer in &model.layers {
-                speeds.push(simulate_layer(cfg, layer, p, Strategy::Mixed)?);
-                if p != Precision::Int4 {
+            if p != Precision::Int4 {
+                for layer in &model.layers {
                     aras.push(simulate_layer_ara(&ara_cfg, layer, p)?);
                 }
             }
             cells.push(Fig4Cell {
                 model: model.name.to_string(),
                 precision: p,
-                speed_eff: network_eff(&speeds, cfg, area),
+                speed_eff: network_eff(speeds, cfg, area),
                 ara_eff: (!aras.is_empty()).then(|| ara_network_eff(&aras, &ara_cfg)),
             });
         }
     }
     Ok(Fig4 { cells })
+}
+
+/// FIG4 with a throwaway engine.
+pub fn run_fig4(cfg: &SpeedConfig) -> Result<Fig4> {
+    run_fig4_with(&mut SweepEngine::new(), cfg)
 }
 
 /// FIG5: the area breakdown (the analytical model at the given config).
@@ -229,20 +253,23 @@ pub struct Table1 {
 /// layer of all four benchmarks (the paper's method: *"peak throughput
 /// results … through evaluating each convolutional layer in all DNN
 /// benchmarks"*).
-pub fn run_table1(cfg: &SpeedConfig) -> Result<Table1> {
+pub fn run_table1_with(engine: &mut SweepEngine, cfg: &SpeedConfig) -> Result<Table1> {
     let ara_cfg = AraConfig::default();
     let area = speed_area_breakdown(cfg).total();
     let em = EnergyModel::default();
     let aem = AraEnergyModel::default();
+    let spec = SweepSpec::benchmark_suite(cfg);
+    let out = engine.run(&spec)?;
+    let n_models = all_models().len();
     let mut speed = Vec::new();
-    for p in [Precision::Int16, Precision::Int8, Precision::Int4] {
+    for (pi, p) in [Precision::Int16, Precision::Int8, Precision::Int4].into_iter().enumerate()
+    {
         let mut best: Option<(f64, LayerResult)> = None;
-        for model in all_models() {
-            for layer in &model.layers {
-                let r = simulate_layer(cfg, layer, p, Strategy::Mixed)?;
+        for mi in 0..n_models {
+            for r in out.block(0, mi, pi, 0) {
                 let g = r.gops(cfg);
                 if best.as_ref().map(|(bg, _)| g > *bg).unwrap_or(true) {
-                    best = Some((g, r));
+                    best = Some((g, r.clone()));
                 }
             }
         }
@@ -280,6 +307,11 @@ pub fn run_table1(cfg: &SpeedConfig) -> Result<Table1> {
         });
     }
     Ok(Table1 { speed, ara, speed_area: area, ara_area: ara_area_mm2() })
+}
+
+/// TAB1 with a throwaway engine.
+pub fn run_table1(cfg: &SpeedConfig) -> Result<Table1> {
+    run_table1_with(&mut SweepEngine::new(), cfg)
 }
 
 /// Headline paper-vs-measured pairs `(label, paper, measured)` for quick

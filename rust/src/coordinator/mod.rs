@@ -1,11 +1,16 @@
-//! Experiment coordinator: single-layer simulation entry points, network
-//! sweeps, the Mixed-strategy resolver, and the drivers that regenerate
-//! every figure/table of the paper.
+//! Experiment coordinator: single-layer simulation entry points, the
+//! parallel batch-sweep engine, the Mixed-strategy resolver, and the
+//! drivers that regenerate every figure/table of the paper.
 
 pub mod experiments;
 pub mod report;
 pub mod runner;
+pub mod sweep;
 
 pub use runner::{
     run_functional_conv, simulate_layer, simulate_network, LayerResult, NetworkResult,
+};
+pub use sweep::{
+    CsvSink, JobId, NetworkSweepResult, ReportSink, SweepEngine, SweepNetwork, SweepOutcome,
+    SweepSpec,
 };

@@ -3,6 +3,7 @@
 //! trivial enough that this is fine and dependency-free.)
 
 use super::experiments::{Fig3, Fig4, Table1};
+use super::sweep::{SweepOutcome, SweepSpec};
 use crate::arch::Precision;
 use crate::cost::area::AreaBreakdown;
 use crate::cost::calib;
@@ -135,6 +136,39 @@ pub fn fig5_markdown(a: &AreaBreakdown) -> String {
     s
 }
 
+/// Render a sweep outcome as markdown: engine summary (jobs, unique
+/// sims, cache reuse, throughput) plus one network-level row per
+/// (config, network, precision, strategy) block.
+pub fn sweep_markdown(spec: &SweepSpec, out: &SweepOutcome) -> String {
+    let mut s = String::new();
+    s.push_str("## Sweep — parallel batch engine\n\n");
+    s.push_str(&format!(
+        "{} jobs | {} sims executed | {} cache hits | {} dedup hits | {} threads | {:.2}s ({:.0} layer-sims/s)\n\n",
+        out.results.len(),
+        out.executed_sims,
+        out.cache_hits,
+        out.dedup_hits,
+        out.threads_used,
+        out.elapsed_secs,
+        out.sims_per_sec()
+    ));
+    s.push_str("| config | network | precision | strategy | cycles | GOPS |\n");
+    s.push_str("|---|---|---|---|---|---|\n");
+    for nr in out.network_results(spec) {
+        let freq = spec.configs[nr.config].freq_mhz;
+        s.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} |\n",
+            nr.config,
+            nr.result.name,
+            nr.precision,
+            nr.strategy,
+            nr.result.total_cycles(),
+            fmt2(nr.result.gops(freq))
+        ));
+    }
+    s
+}
+
 /// Render Table I as markdown with paper-vs-measured columns.
 pub fn table1_markdown(t: &Table1) -> String {
     let mut s = String::new();
@@ -242,6 +276,22 @@ mod tests {
             ara_area: 0.44,
         };
         assert!(table1_markdown(&t1).contains("SPEED"));
+    }
+
+    #[test]
+    fn sweep_markdown_renders() {
+        use crate::arch::SpeedConfig;
+        use crate::coordinator::sweep::{SweepEngine, SweepSpec};
+        use crate::dataflow::ConvLayer;
+        let spec = SweepSpec::new(SpeedConfig::default())
+            .network("tiny", vec![ConvLayer::new("l", 4, 4, 6, 6, 3, 1, 1)])
+            .precisions(vec![Precision::Int8])
+            .strategies(vec![Strategy::Mixed])
+            .threads(1);
+        let out = SweepEngine::new().run(&spec).unwrap();
+        let md = sweep_markdown(&spec, &out);
+        assert!(md.contains("| 0 | tiny | int8 | Mixed |"), "{md}");
+        assert!(md.contains("sims executed"));
     }
 
     #[test]

@@ -16,7 +16,7 @@ use crate::error::Result;
 use crate::mem::Tensor;
 
 /// Result of one layer's timing simulation.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LayerResult {
     /// Layer name.
     pub name: String,
@@ -88,7 +88,7 @@ pub fn simulate_layer(
 }
 
 /// Aggregated result over a network's conv layers.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct NetworkResult {
     /// Network name.
     pub name: String,
@@ -125,6 +125,11 @@ impl NetworkResult {
 }
 
 /// Simulate every conv layer of a network.
+///
+/// Runs on the parallel batch-sweep engine (one worker per core,
+/// memoizing duplicate layer shapes); results are bit-identical to
+/// calling [`simulate_layer`] per layer — see
+/// `tests/sweep_determinism.rs`.
 pub fn simulate_network(
     cfg: &SpeedConfig,
     name: &str,
@@ -132,11 +137,12 @@ pub fn simulate_network(
     p: Precision,
     strategy: Strategy,
 ) -> Result<NetworkResult> {
-    let mut results = Vec::with_capacity(layers.len());
-    for layer in layers {
-        results.push(simulate_layer(cfg, layer, p, strategy)?);
-    }
-    Ok(NetworkResult { name: name.to_string(), layers: results })
+    let spec = super::sweep::SweepSpec::new(cfg.clone())
+        .network(name, layers.to_vec())
+        .precisions(vec![p])
+        .strategies(vec![strategy]);
+    let out = super::sweep::SweepEngine::new().run(&spec)?;
+    Ok(NetworkResult { name: name.to_string(), layers: out.results })
 }
 
 /// Full functional conv through the simulator: pack images, run the

@@ -1,0 +1,805 @@
+//! Parallel batch-sweep engine for network-scale simulation.
+//!
+//! The paper's evaluation is a grid — models × layers × precisions ×
+//! dataflow strategies (× machine configurations for the ablations) —
+//! and every cell is an independent timing simulation. This module turns
+//! that grid into a first-class object:
+//!
+//! - [`SweepSpec`] describes the grid declaratively;
+//! - [`SweepEngine`] executes it on a pool of `std::thread` scoped
+//!   workers, each holding **pooled processors** (one per machine
+//!   configuration) that are [`crate::core::Processor::reset`] between
+//!   jobs instead of reallocating DRAM/VRF images;
+//! - a **memoizing result cache** keyed by (config fingerprint,
+//!   layer shape, precision, concrete strategy) means every distinct
+//!   simulation runs at most once — `Mixed` best-of jobs share their
+//!   FF/CF runs with pure-strategy jobs, duplicated layer shapes (e.g.
+//!   GoogLeNet's repeated inception branches, VGG's stacked conv pairs)
+//!   are simulated once, and the cache persists across
+//!   [`SweepEngine::run`] calls so repeated sweeps are nearly free;
+//! - a [`ReportSink`] receives every per-layer [`LayerResult`] in
+//!   deterministic job order once the run completes
+//!   ([`SweepEngine::run_with_sink`]).
+//!
+//! **Determinism:** results are keyed by job identity, not completion
+//! order — a sweep returns bit-identical [`LayerResult`]s for any thread
+//! count, including the serial path (`threads = 1`), which is
+//! integration-tested against the single-layer API in
+//! `tests/sweep_determinism.rs`.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::thread;
+use std::time::Instant;
+
+use super::runner::{LayerResult, NetworkResult};
+use crate::arch::{Precision, SpeedConfig};
+use crate::core::{ExecMode, Processor, SimStats};
+use crate::dataflow::{compile_conv, ConvLayer, Strategy};
+use crate::error::{Error, Result};
+use crate::models::all_models;
+
+/// One network entry of a sweep: a name plus its conv layers.
+#[derive(Debug, Clone)]
+pub struct SweepNetwork {
+    /// Name used in reports ("VGG16", …).
+    pub name: String,
+    /// The network's convolutional layers, in inference order.
+    pub layers: Vec<ConvLayer>,
+}
+
+/// Declarative description of a simulation grid.
+///
+/// Jobs are enumerated configuration-major:
+/// `for cfg { for network { for precision { for strategy { for layer }}}}`
+/// — that enumeration order *is* the result order of
+/// [`SweepOutcome::results`].
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// Machine configurations to sweep (ablation axis).
+    pub configs: Vec<SpeedConfig>,
+    /// Networks to sweep.
+    pub networks: Vec<SweepNetwork>,
+    /// Precisions to sweep.
+    pub precisions: Vec<Precision>,
+    /// Strategies to sweep (`Mixed` expands to best-of FF/CF).
+    pub strategies: Vec<Strategy>,
+    /// Worker threads; 0 = one per available core.
+    pub threads: usize,
+    /// Consult/update the engine's persistent memoization cache and
+    /// deduplicate identical simulations inside the run. Disabling this
+    /// simulates every grid cell independently (benchmark baseline).
+    pub memoize: bool,
+}
+
+impl SweepSpec {
+    /// Empty grid over one machine configuration, with the paper's
+    /// precision order (16/8/4-bit) and the mixed dataflow preselected.
+    pub fn new(cfg: SpeedConfig) -> Self {
+        SweepSpec {
+            configs: vec![cfg],
+            networks: Vec::new(),
+            precisions: vec![Precision::Int16, Precision::Int8, Precision::Int4],
+            strategies: vec![Strategy::Mixed],
+            threads: 0,
+            memoize: true,
+        }
+    }
+
+    /// The paper's full evaluation grid: VGG16 + ResNet18 + GoogLeNet +
+    /// SqueezeNet at 16/8/4-bit under the mixed dataflow.
+    pub fn benchmark_suite(cfg: &SpeedConfig) -> Self {
+        let mut spec = SweepSpec::new(cfg.clone());
+        for m in all_models() {
+            spec = spec.network(m.name, m.layers);
+        }
+        spec
+    }
+
+    /// Add a network (builder style).
+    pub fn network(mut self, name: impl Into<String>, layers: Vec<ConvLayer>) -> Self {
+        self.networks.push(SweepNetwork { name: name.into(), layers });
+        self
+    }
+
+    /// Replace the precision axis (builder style).
+    pub fn precisions(mut self, ps: Vec<Precision>) -> Self {
+        self.precisions = ps;
+        self
+    }
+
+    /// Replace the strategy axis (builder style).
+    pub fn strategies(mut self, ss: Vec<Strategy>) -> Self {
+        self.strategies = ss;
+        self
+    }
+
+    /// Set the worker-thread count (builder style); 0 = per core.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n;
+        self
+    }
+
+    /// Enable/disable memoization (builder style).
+    pub fn memoize(mut self, on: bool) -> Self {
+        self.memoize = on;
+        self
+    }
+
+    /// Add a further machine configuration (builder style).
+    pub fn config(mut self, cfg: SpeedConfig) -> Self {
+        self.configs.push(cfg);
+        self
+    }
+
+    /// Total number of grid cells (jobs).
+    pub fn n_jobs(&self) -> usize {
+        let layers: usize = self.networks.iter().map(|n| n.layers.len()).sum();
+        self.configs.len() * self.precisions.len() * self.strategies.len() * layers
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.configs.is_empty() {
+            return Err(Error::config("sweep: no machine configuration"));
+        }
+        if self.networks.is_empty() {
+            return Err(Error::config("sweep: no networks"));
+        }
+        if self.precisions.is_empty() || self.strategies.is_empty() {
+            return Err(Error::config("sweep: empty precision/strategy axis"));
+        }
+        for n in &self.networks {
+            if n.layers.is_empty() {
+                return Err(Error::config(format!("sweep: network {} has no layers", n.name)));
+            }
+        }
+        for cfg in &self.configs {
+            cfg.validate()?;
+        }
+        Ok(())
+    }
+}
+
+/// Grid coordinates of one job (indices into the [`SweepSpec`] axes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobId {
+    /// Index into `spec.configs`.
+    pub cfg: usize,
+    /// Index into `spec.networks`.
+    pub net: usize,
+    /// Index into `spec.precisions`.
+    pub prec: usize,
+    /// Index into `spec.strategies`.
+    pub strat: usize,
+    /// Index into that network's `layers`.
+    pub layer: usize,
+}
+
+/// Consumer of sweep results, fed one layer at a time in deterministic
+/// job order. Delivery happens after the run completes (results are
+/// keyed by job identity, not completion order), so a sink sees the
+/// same sequence regardless of thread count.
+pub trait ReportSink {
+    /// Called once per job, in job-enumeration order.
+    fn on_layer(&mut self, network: &str, job: JobId, result: &LayerResult);
+    /// Called once after every job has been delivered.
+    fn on_finish(&mut self, _outcome: &SweepOutcome) {}
+}
+
+/// A [`ReportSink`] rendering one CSV row per layer result.
+#[derive(Debug)]
+pub struct CsvSink {
+    /// Accumulated CSV text (header + one row per job).
+    pub csv: String,
+}
+
+impl CsvSink {
+    /// Empty sink with the header row in place.
+    pub fn new() -> Self {
+        CsvSink { csv: "network,layer,precision,requested,used,cycles,macs\n".to_string() }
+    }
+}
+
+impl Default for CsvSink {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ReportSink for CsvSink {
+    fn on_layer(&mut self, network: &str, _job: JobId, r: &LayerResult) {
+        self.csv.push_str(&format!(
+            "{},{},{},{},{},{},{}\n",
+            network, r.name, r.precision, r.requested, r.used, r.cycles, r.useful_macs
+        ));
+    }
+}
+
+/// Everything a finished sweep produced.
+#[derive(Debug, Clone)]
+pub struct SweepOutcome {
+    /// Grid coordinates, in enumeration order.
+    pub jobs: Vec<JobId>,
+    /// Per-job results, same indexing as [`SweepOutcome::jobs`].
+    pub results: Vec<LayerResult>,
+    /// Timing simulations actually executed this run.
+    pub executed_sims: usize,
+    /// Simulations served from the engine's persistent cache.
+    pub cache_hits: usize,
+    /// Duplicate simulations avoided inside this run (shape/strategy
+    /// sharing).
+    pub dedup_hits: usize,
+    /// Worker threads used.
+    pub threads_used: usize,
+    /// Wall-clock seconds of the whole run.
+    pub elapsed_secs: f64,
+    /// Start offset of each (cfg, net, prec, strat) block in `results`.
+    block_starts: Vec<usize>,
+    /// (n_configs, n_networks, n_precisions, n_strategies).
+    dims: (usize, usize, usize, usize),
+}
+
+impl SweepOutcome {
+    /// The per-layer results of one (config, network, precision,
+    /// strategy) block, in layer order.
+    pub fn block(&self, cfg: usize, net: usize, prec: usize, strat: usize) -> &[LayerResult] {
+        let (_, n_net, n_prec, n_strat) = self.dims;
+        let bid = ((cfg * n_net + net) * n_prec + prec) * n_strat + strat;
+        let start = self.block_starts[bid];
+        let end =
+            self.block_starts.get(bid + 1).copied().unwrap_or(self.results.len());
+        &self.results[start..end]
+    }
+
+    /// Executed layer simulations per wall-clock second.
+    pub fn sims_per_sec(&self) -> f64 {
+        if self.elapsed_secs <= 0.0 {
+            0.0
+        } else {
+            self.executed_sims as f64 / self.elapsed_secs
+        }
+    }
+
+    /// Aggregate every block into a [`NetworkResult`], tagged with its
+    /// grid coordinates.
+    pub fn network_results(&self, spec: &SweepSpec) -> Vec<NetworkSweepResult> {
+        let mut out = Vec::new();
+        for cfg in 0..spec.configs.len() {
+            for (net, network) in spec.networks.iter().enumerate() {
+                for (prec, &p) in spec.precisions.iter().enumerate() {
+                    for (strat, &s) in spec.strategies.iter().enumerate() {
+                        out.push(NetworkSweepResult {
+                            config: cfg,
+                            precision: p,
+                            strategy: s,
+                            result: NetworkResult {
+                                name: network.name.clone(),
+                                layers: self.block(cfg, net, prec, strat).to_vec(),
+                            },
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One network-level aggregate of a sweep, tagged with its coordinates.
+#[derive(Debug, Clone)]
+pub struct NetworkSweepResult {
+    /// Index into `spec.configs`.
+    pub config: usize,
+    /// Precision of this block.
+    pub precision: Precision,
+    /// Requested strategy of this block.
+    pub strategy: Strategy,
+    /// The aggregated per-layer results.
+    pub result: NetworkResult,
+}
+
+/// Memoization key of one concrete timing simulation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct SimKey {
+    cfg_fp: u64,
+    /// (cin, cout, h, w, k, stride, pad) — the layer *shape*; the name
+    /// is reporting-only and deliberately excluded.
+    shape: [usize; 7],
+    prec: Precision,
+    /// Concrete strategy: `true` = channel-first, `false` = feature-first.
+    cf: bool,
+}
+
+fn shape_of(l: &ConvLayer) -> [usize; 7] {
+    [l.cin, l.cout, l.h, l.w, l.k, l.stride, l.pad]
+}
+
+/// Stable in-process fingerprint of a machine configuration (f64 fields
+/// hashed by bit pattern).
+///
+/// Destructures `SpeedConfig` without `..` on purpose: adding a field
+/// to the config then breaks this function at compile time, so a new
+/// timing-relevant knob can never silently fall out of the memo-cache
+/// key (which would alias distinct configs in ablation sweeps).
+fn config_fingerprint(cfg: &SpeedConfig) -> u64 {
+    let SpeedConfig {
+        n_lanes,
+        vlen_bits,
+        n_vregs,
+        tile_r,
+        tile_c,
+        n_acc_banks,
+        queue_depth,
+        freq_mhz,
+        dram_bw_bytes_per_cycle,
+        dram_latency_cycles,
+        vrf_banks_per_lane,
+        vrf_bank_bytes,
+        issue_cycles,
+        sa_fill_factor,
+    } = cfg;
+    let mut h = DefaultHasher::new();
+    n_lanes.hash(&mut h);
+    vlen_bits.hash(&mut h);
+    n_vregs.hash(&mut h);
+    tile_r.hash(&mut h);
+    tile_c.hash(&mut h);
+    n_acc_banks.hash(&mut h);
+    queue_depth.hash(&mut h);
+    freq_mhz.to_bits().hash(&mut h);
+    dram_bw_bytes_per_cycle.to_bits().hash(&mut h);
+    dram_latency_cycles.hash(&mut h);
+    vrf_banks_per_lane.hash(&mut h);
+    vrf_bank_bytes.hash(&mut h);
+    issue_cycles.hash(&mut h);
+    sa_fill_factor.to_bits().hash(&mut h);
+    h.finish()
+}
+
+/// A memoized concrete simulation: the full statistics (which embed
+/// `cycles` and `useful_macs`).
+#[derive(Debug, Clone)]
+struct CachedSim {
+    stats: SimStats,
+}
+
+/// One concrete simulation to run: grid coordinates of *a* job that
+/// needs it plus the concrete (non-Mixed) strategy.
+#[derive(Debug, Clone, Copy)]
+struct SimTask {
+    cfg: usize,
+    net: usize,
+    layer: usize,
+    prec: usize,
+    cf: bool,
+}
+
+/// How a job's result is assembled from simulation slots.
+#[derive(Debug, Clone, Copy)]
+enum Plan {
+    /// FF-only or CF-only: one slot.
+    Single(usize),
+    /// Mixed: best of (ff_slot, cf_slot) by cycle count, ties to FF —
+    /// exactly the serial `simulate_layer` policy.
+    Best(usize, usize),
+}
+
+/// The sweep executor. Owns the persistent memoization cache — reuse one
+/// engine across sweeps (e.g. Fig. 3 + Fig. 4 + Table I) and identical
+/// (config, shape, precision, strategy) cells are simulated once ever.
+#[derive(Debug, Default)]
+pub struct SweepEngine {
+    cache: HashMap<SimKey, CachedSim>,
+}
+
+impl SweepEngine {
+    /// Engine with an empty cache.
+    pub fn new() -> Self {
+        SweepEngine { cache: HashMap::new() }
+    }
+
+    /// Number of memoized simulations held.
+    pub fn cached_sims(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Drop every memoized result.
+    pub fn clear_cache(&mut self) {
+        self.cache.clear();
+    }
+
+    /// Execute the grid. Results are bit-identical for any thread count.
+    pub fn run(&mut self, spec: &SweepSpec) -> Result<SweepOutcome> {
+        spec.validate()?;
+        let t0 = Instant::now();
+        let cfg_fps: Vec<u64> = spec.configs.iter().map(config_fingerprint).collect();
+
+        // 1) Enumerate jobs and plan slots. `slot_of` dedupes concrete
+        //    sims within the run (and against the persistent cache).
+        let mut jobs: Vec<JobId> = Vec::with_capacity(spec.n_jobs());
+        let mut plans: Vec<Plan> = Vec::with_capacity(spec.n_jobs());
+        let mut block_starts: Vec<usize> = Vec::new();
+        let mut slots: Vec<SimTask> = Vec::new();
+        let mut prefilled: Vec<Option<CachedSim>> = Vec::new();
+        let mut slot_keys: Vec<Option<SimKey>> = Vec::new();
+        let mut seen: HashMap<SimKey, usize> = HashMap::new();
+        let mut cache_hits = 0usize;
+        let mut dedup_hits = 0usize;
+
+        let mut slot_of = |task: SimTask,
+                           slots: &mut Vec<SimTask>,
+                           prefilled: &mut Vec<Option<CachedSim>>,
+                           slot_keys: &mut Vec<Option<SimKey>>| {
+            if !spec.memoize {
+                slots.push(task);
+                prefilled.push(None);
+                slot_keys.push(None);
+                return slots.len() - 1;
+            }
+            let layer = &spec.networks[task.net].layers[task.layer];
+            let key = SimKey {
+                cfg_fp: cfg_fps[task.cfg],
+                shape: shape_of(layer),
+                prec: spec.precisions[task.prec],
+                cf: task.cf,
+            };
+            if let Some(&s) = seen.get(&key) {
+                dedup_hits += 1;
+                return s;
+            }
+            let hit = self.cache.get(&key).cloned();
+            if hit.is_some() {
+                cache_hits += 1;
+            }
+            slots.push(task);
+            prefilled.push(hit);
+            slot_keys.push(Some(key));
+            seen.insert(key, slots.len() - 1);
+            slots.len() - 1
+        };
+
+        for cfg in 0..spec.configs.len() {
+            for net in 0..spec.networks.len() {
+                for prec in 0..spec.precisions.len() {
+                    for strat in 0..spec.strategies.len() {
+                        block_starts.push(jobs.len());
+                        for layer in 0..spec.networks[net].layers.len() {
+                            jobs.push(JobId { cfg, net, prec, strat, layer });
+                            let task = |cf: bool| SimTask { cfg, net, layer, prec, cf };
+                            let plan = match spec.strategies[strat] {
+                                Strategy::FeatureFirst => Plan::Single(slot_of(
+                                    task(false),
+                                    &mut slots,
+                                    &mut prefilled,
+                                    &mut slot_keys,
+                                )),
+                                Strategy::ChannelFirst => Plan::Single(slot_of(
+                                    task(true),
+                                    &mut slots,
+                                    &mut prefilled,
+                                    &mut slot_keys,
+                                )),
+                                Strategy::Mixed => {
+                                    let f = slot_of(
+                                        task(false),
+                                        &mut slots,
+                                        &mut prefilled,
+                                        &mut slot_keys,
+                                    );
+                                    let c = slot_of(
+                                        task(true),
+                                        &mut slots,
+                                        &mut prefilled,
+                                        &mut slot_keys,
+                                    );
+                                    Plan::Best(f, c)
+                                }
+                            };
+                            plans.push(plan);
+                        }
+                    }
+                }
+            }
+        }
+        drop(slot_of);
+
+        // 2) Execute the missing slots on the worker pool. Workers claim
+        //    jobs from a shared atomic index (self-scheduling queue) and
+        //    write into slot-keyed outputs, so completion order is
+        //    irrelevant to the result.
+        let todo: Vec<usize> =
+            (0..slots.len()).filter(|&s| prefilled[s].is_none()).collect();
+        let executed_sims = todo.len();
+        let requested_threads = if spec.threads == 0 {
+            thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            spec.threads
+        };
+        let threads = requested_threads.min(todo.len().max(1));
+
+        let mut sims: Vec<Option<CachedSim>> = prefilled;
+        if !todo.is_empty() {
+            let n_cfgs = spec.configs.len();
+            let worker = |claim: &AtomicUsize| -> Vec<(usize, Result<CachedSim>)> {
+                let mut pool: Vec<Option<Processor>> = (0..n_cfgs).map(|_| None).collect();
+                let mut local = Vec::new();
+                loop {
+                    let i = claim.fetch_add(1, Ordering::Relaxed);
+                    if i >= todo.len() {
+                        break;
+                    }
+                    let slot = todo[i];
+                    let t = slots[slot];
+                    let cfg = &spec.configs[t.cfg];
+                    let layer = &spec.networks[t.net].layers[t.layer];
+                    let p = spec.precisions[t.prec];
+                    let s = if t.cf { Strategy::ChannelFirst } else { Strategy::FeatureFirst };
+                    local.push((slot, simulate_pooled(&mut pool[t.cfg], cfg, layer, p, s)));
+                }
+                local
+            };
+
+            let outs: Vec<Vec<(usize, Result<CachedSim>)>> = if threads <= 1 {
+                vec![worker(&AtomicUsize::new(0))]
+            } else {
+                let claim = AtomicUsize::new(0);
+                thread::scope(|scope| {
+                    let handles: Vec<_> =
+                        (0..threads).map(|_| scope.spawn(|| worker(&claim))).collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("sweep worker panicked"))
+                        .collect()
+                })
+            };
+
+            let mut pending: Vec<Option<Result<CachedSim>>> = Vec::new();
+            pending.resize_with(slots.len(), || None);
+            for out in outs {
+                for (slot, res) in out {
+                    pending[slot] = Some(res);
+                }
+            }
+            // Deterministic error reporting: first failing slot wins.
+            for (slot, res) in pending.into_iter().enumerate() {
+                if let Some(res) = res {
+                    sims[slot] = Some(res?);
+                }
+            }
+        }
+
+        // 3) Feed the persistent cache.
+        if spec.memoize {
+            for &slot in &todo {
+                if let (Some(key), Some(sim)) = (slot_keys[slot], sims[slot].as_ref()) {
+                    self.cache.insert(key, sim.clone());
+                }
+            }
+        }
+
+        // 4) Resolve jobs from slots (Mixed = best-of, ties to FF).
+        let mut results: Vec<LayerResult> = Vec::with_capacity(jobs.len());
+        for (jid, plan) in jobs.iter().zip(&plans) {
+            let layer = &spec.networks[jid.net].layers[jid.layer];
+            let p = spec.precisions[jid.prec];
+            let requested = spec.strategies[jid.strat];
+            let take = |slot: usize| sims[slot].as_ref().expect("slot resolved");
+            let (used, sim) = match *plan {
+                Plan::Single(s) => (requested, take(s)),
+                Plan::Best(f, c) => {
+                    let (ff, cf) = (take(f), take(c));
+                    if ff.stats.cycles <= cf.stats.cycles {
+                        (Strategy::FeatureFirst, ff)
+                    } else {
+                        (Strategy::ChannelFirst, cf)
+                    }
+                }
+            };
+            results.push(LayerResult {
+                name: layer.name.clone(),
+                precision: p,
+                requested,
+                used,
+                cycles: sim.stats.cycles,
+                useful_macs: sim.stats.useful_macs,
+                stats: sim.stats.clone(),
+            });
+        }
+
+        Ok(SweepOutcome {
+            jobs,
+            results,
+            executed_sims,
+            cache_hits,
+            dedup_hits,
+            threads_used: threads,
+            elapsed_secs: t0.elapsed().as_secs_f64(),
+            block_starts,
+            dims: (
+                spec.configs.len(),
+                spec.networks.len(),
+                spec.precisions.len(),
+                spec.strategies.len(),
+            ),
+        })
+    }
+
+    /// Execute the grid, then replay every result (in deterministic job
+    /// order) into `sink` and hand it the finished outcome.
+    pub fn run_with_sink(
+        &mut self,
+        spec: &SweepSpec,
+        sink: &mut dyn ReportSink,
+    ) -> Result<SweepOutcome> {
+        let outcome = self.run(spec)?;
+        for (jid, r) in outcome.jobs.iter().zip(&outcome.results) {
+            sink.on_layer(&spec.networks[jid.net].name, *jid, r);
+        }
+        sink.on_finish(&outcome);
+        Ok(outcome)
+    }
+}
+
+/// One concrete timing simulation on a pooled processor: identical math
+/// to the serial `run_one` (compile → run → record), but the worker's
+/// processor is `reset` instead of rebuilt.
+fn simulate_pooled(
+    slot: &mut Option<Processor>,
+    cfg: &SpeedConfig,
+    layer: &ConvLayer,
+    p: Precision,
+    strategy: Strategy,
+) -> Result<CachedSim> {
+    let cc = compile_conv(cfg, layer, p, strategy, 0, false)?;
+    match slot.as_mut() {
+        Some(proc) => proc.reset(cc.dram_bytes),
+        None => *slot = Some(Processor::new(cfg.clone(), cc.dram_bytes, ExecMode::Timing)?),
+    }
+    let proc = slot.as_mut().expect("pooled processor present");
+    proc.run(&cc.program)?;
+    proc.set_useful_macs(cc.useful_macs);
+    Ok(CachedSim { stats: proc.stats().clone() })
+}
+
+/// The sweep engine moves jobs and results across worker threads; every
+/// type on that boundary must be `Send + Sync`.
+#[allow(dead_code)]
+fn assert_job_types_are_send_sync() {
+    fn ok<T: Send + Sync>() {}
+    ok::<SweepSpec>();
+    ok::<SweepNetwork>();
+    ok::<SpeedConfig>();
+    ok::<ConvLayer>();
+    ok::<LayerResult>();
+    ok::<Processor>();
+    ok::<Error>();
+    ok::<SweepOutcome>();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::simulate_layer;
+
+    fn tiny_layers() -> Vec<ConvLayer> {
+        vec![
+            ConvLayer::new("c3", 8, 8, 8, 8, 3, 1, 1),
+            ConvLayer::new("pw", 8, 12, 6, 6, 1, 1, 0),
+            // same shape as c3 under a different name → one simulation
+            ConvLayer::new("c3_dup", 8, 8, 8, 8, 3, 1, 1),
+        ]
+    }
+
+    #[test]
+    fn grid_enumeration_and_blocks() {
+        let cfg = SpeedConfig::default();
+        let spec = SweepSpec::new(cfg)
+            .network("t", tiny_layers())
+            .precisions(vec![Precision::Int8])
+            .strategies(vec![Strategy::FeatureFirst, Strategy::Mixed])
+            .threads(1);
+        assert_eq!(spec.n_jobs(), 6);
+        let out = SweepEngine::new().run(&spec).unwrap();
+        assert_eq!(out.results.len(), 6);
+        assert_eq!(out.block(0, 0, 0, 0).len(), 3);
+        assert_eq!(out.block(0, 0, 0, 1).len(), 3);
+        assert_eq!(out.block(0, 0, 0, 0)[1].name, "pw");
+        // FF block: requested == used == FF
+        for r in out.block(0, 0, 0, 0) {
+            assert_eq!(r.requested, Strategy::FeatureFirst);
+            assert_eq!(r.used, Strategy::FeatureFirst);
+        }
+        // Mixed block: requested is Mixed, used is concrete
+        for r in out.block(0, 0, 0, 1) {
+            assert_eq!(r.requested, Strategy::Mixed);
+            assert_ne!(r.used, Strategy::Mixed);
+        }
+    }
+
+    #[test]
+    fn matches_serial_single_layer_api() {
+        let cfg = SpeedConfig::default();
+        let layers = tiny_layers();
+        let spec = SweepSpec::new(cfg.clone())
+            .network("t", layers.clone())
+            .precisions(vec![Precision::Int8, Precision::Int16])
+            .strategies(vec![Strategy::ChannelFirst, Strategy::Mixed])
+            .threads(2);
+        let out = SweepEngine::new().run(&spec).unwrap();
+        let mut i = 0;
+        for &p in &[Precision::Int8, Precision::Int16] {
+            for &s in &[Strategy::ChannelFirst, Strategy::Mixed] {
+                for l in &layers {
+                    let want = simulate_layer(&cfg, l, p, s).unwrap();
+                    assert_eq!(out.results[i], want, "job {i}: {l} {p} {s}");
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dedup_and_cache_accounting() {
+        let cfg = SpeedConfig::default();
+        let spec = SweepSpec::new(cfg)
+            .network("t", tiny_layers())
+            .precisions(vec![Precision::Int8])
+            .strategies(vec![Strategy::FeatureFirst])
+            .threads(1);
+        let mut engine = SweepEngine::new();
+        let cold = engine.run(&spec).unwrap();
+        // 3 layers, one duplicated shape → 2 executed, 1 dedup hit
+        assert_eq!(cold.executed_sims, 2);
+        assert_eq!(cold.dedup_hits, 1);
+        assert_eq!(cold.cache_hits, 0);
+        assert_eq!(engine.cached_sims(), 2);
+        let warm = engine.run(&spec).unwrap();
+        assert_eq!(warm.executed_sims, 0);
+        assert_eq!(warm.cache_hits, 2);
+        assert_eq!(warm.results, cold.results, "cache hits must not change results");
+        // duplicated shape: identical numbers under a different name
+        let (a, b) = (&cold.results[0], &cold.results[2]);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.stats, b.stats);
+        assert_eq!(b.name, "c3_dup");
+    }
+
+    #[test]
+    fn no_memoize_still_deterministic() {
+        let cfg = SpeedConfig::default();
+        let spec = SweepSpec::new(cfg)
+            .network("t", tiny_layers())
+            .precisions(vec![Precision::Int8])
+            .strategies(vec![Strategy::Mixed])
+            .threads(2)
+            .memoize(false);
+        let a = SweepEngine::new().run(&spec).unwrap();
+        assert_eq!(a.executed_sims, 6, "3 layers × (FF+CF), no dedup");
+        let b = SweepEngine::new().run(&spec).unwrap();
+        assert_eq!(a.results, b.results);
+    }
+
+    #[test]
+    fn csv_sink_streams_every_job() {
+        let cfg = SpeedConfig::default();
+        let spec = SweepSpec::new(cfg)
+            .network("t", tiny_layers())
+            .precisions(vec![Precision::Int8])
+            .strategies(vec![Strategy::FeatureFirst])
+            .threads(1);
+        let mut sink = CsvSink::new();
+        let out = SweepEngine::new().run_with_sink(&spec, &mut sink).unwrap();
+        assert_eq!(sink.csv.lines().count(), 1 + out.results.len());
+        assert!(sink.csv.contains("t,c3,int8,FF,FF,"));
+    }
+
+    #[test]
+    fn empty_specs_are_rejected() {
+        let cfg = SpeedConfig::default();
+        assert!(SweepEngine::new().run(&SweepSpec::new(cfg.clone())).is_err());
+        let spec = SweepSpec::new(cfg).network("t", tiny_layers()).precisions(vec![]);
+        assert!(SweepEngine::new().run(&spec).is_err());
+    }
+}

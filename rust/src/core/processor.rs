@@ -121,7 +121,15 @@ impl Processor {
         self.stats.useful_macs = macs;
     }
 
-    /// Reset timelines and statistics, keeping memory contents.
+    /// Reset timelines, statistics and architectural control state,
+    /// keeping memory contents (DRAM, VRF, accumulators).
+    ///
+    /// After `reset_timing` a subsequent [`Processor::run`] reports
+    /// exactly what a fresh machine would for the same program: the
+    /// VIDU's instruction-mix counters, the scalar register file, the
+    /// SAU CSRs and the partial-offset counters all restart (they used
+    /// to leak across runs, which broke the pooled sweep engine's
+    /// per-job statistics).
     pub fn reset_timing(&mut self) {
         self.t_issue = 0;
         self.t_dram = 0;
@@ -132,6 +140,31 @@ impl Processor {
             *b = 0;
         }
         self.stats = SimStats::default();
+        self.vidu = Vidu::new();
+        self.scalar = ScalarCore::new();
+        self.csr = CsrState::default();
+        self.vl = 0;
+        self.sew_bits = 8;
+        self.lmul = 1;
+        self.woff_rd = 0;
+        self.woff_wr = 0;
+    }
+
+    /// Full per-job reset for pooled reuse: architecturally equivalent to
+    /// a fresh `Processor::new(cfg, dram_capacity, mode)` without
+    /// reallocating the DRAM image or the lanes' VRF slices. The DRAM's
+    /// visible capacity becomes exactly `dram_capacity` (bounds checks
+    /// match a fresh machine; the allocation itself is retained), and
+    /// timing-mode reuse skips every memset because timing runs never
+    /// observe memory contents (regression-tested against fresh machines
+    /// in `tests::pooled_reset_matches_fresh_processor`).
+    pub fn reset(&mut self, dram_capacity: usize) {
+        self.reset_timing();
+        let clear = self.mode == ExecMode::Functional;
+        self.dram.reset_reuse(dram_capacity, clear);
+        for lane in &mut self.lanes {
+            lane.reset(clear);
+        }
     }
 
     /// Maximum vl for the current vtype.
@@ -166,7 +199,13 @@ impl Processor {
             self.vidu.classify(&instr);
             self.step(&instr)?;
         }
-        self.stats.cycles = self.t_issue.max(self.t_dram).max(self.t_sau);
+        // Final-cycle accounting: fold in the accumulator-port completion
+        // times. The acc port (wb/ldacc/drain) runs concurrently with the
+        // streaming timelines, so a program ending on a partial op used to
+        // under-report — and `cycles` must stay monotone over every unit's
+        // retirement for the pooled sweep engine's reuse invariants.
+        let acc_end = self.bank_ready.iter().copied().max().unwrap_or(0);
+        self.stats.cycles = self.t_issue.max(self.t_dram).max(self.t_sau).max(acc_end);
         self.stats.instrs = self.vidu.mix;
         Ok(())
     }
@@ -669,6 +708,111 @@ mod tests {
             s.dram_busy,
             s.sau_busy
         );
+    }
+
+    /// Regression (pooled sweep engine): a program whose last completing
+    /// unit is the accumulator port (here a trailing `vsam.wb`) must have
+    /// that work in `stats.cycles` — the old accounting only maxed the
+    /// issue/DRAM/SAU timelines and reported the same cycle count with or
+    /// without the trailing partial op.
+    #[test]
+    fn final_cycle_accounting_includes_acc_port() {
+        let build = |with_wb: bool| {
+            let mut b = Program::builder();
+            b.vsacfg(Vsacfg::Main {
+                precision: Precision::Int8,
+                strategy: Strategy::ChannelFirst,
+                tile_h: 4,
+            });
+            b.set_rowstride(0, 0);
+            b.set_vl(16, 16, 8);
+            b.vsald_bcast(0, 0);
+            b.vsald_ordered(8, 1024);
+            b.set_vl(4, 16, 8);
+            b.vsam_mac(0, 0, 8, true, false);
+            if with_wb {
+                b.emit(Instr::Vsam(crate::isa::Vsam::Wb { vd: 16, acc: 0, bump: false }));
+            }
+            b.build()
+        };
+        let mut without = machine(ExecMode::Timing);
+        without.run(&build(false)).unwrap();
+        let mut with = machine(ExecMode::Timing);
+        with.run(&build(true)).unwrap();
+        assert!(
+            with.stats().cycles > without.stats().cycles,
+            "trailing wb not accounted: {} !> {}",
+            with.stats().cycles,
+            without.stats().cycles
+        );
+    }
+
+    /// Regression (pooled sweep engine): `reset_timing` must make reuse
+    /// stateless — the same program re-run after a reset reports exactly
+    /// the statistics of the first run (the VIDU mix counters used to
+    /// accumulate across runs).
+    #[test]
+    fn reset_timing_reuse_is_stateless() {
+        let build = || {
+            let mut b = Program::builder();
+            b.vsacfg(Vsacfg::Main {
+                precision: Precision::Int16,
+                strategy: Strategy::FeatureFirst,
+                tile_h: 6,
+            });
+            b.set_rowstride(0, 0);
+            b.set_vl(64, 16, 8);
+            b.vsald_bcast(0, 0);
+            b.vsald_ordered(8, 4096);
+            b.set_vl(16, 16, 8);
+            b.vsam_mac(0, 0, 8, true, false);
+            b.set_outstride(64);
+            b.set_cstride(4);
+            b.vsam_store(0, 8192, true);
+            b.build()
+        };
+        let mut m = machine(ExecMode::Timing);
+        m.run(&build()).unwrap();
+        let first = m.stats().clone();
+        m.reset_timing();
+        m.run(&build()).unwrap();
+        assert_eq!(*m.stats(), first, "reused run must match the first bit-for-bit");
+        assert_eq!(m.stats().instrs.total(), first.instrs.total());
+    }
+
+    /// Regression (pooled sweep engine): `reset(dram_capacity)` on a
+    /// warm processor must be observationally identical to building a
+    /// fresh `Processor::new` for the next job.
+    #[test]
+    fn pooled_reset_matches_fresh_processor() {
+        use crate::dataflow::{compile_conv, ConvLayer, Strategy as DfStrategy};
+        let cfg = SpeedConfig::default();
+        let layer_a = ConvLayer::new("a", 8, 8, 8, 8, 3, 1, 1);
+        let layer_b = ConvLayer::new("b", 6, 10, 9, 9, 1, 1, 0);
+        let cc_a = compile_conv(&cfg, &layer_a, Precision::Int8, DfStrategy::FeatureFirst, 0, false)
+            .unwrap();
+        let cc_b = compile_conv(&cfg, &layer_b, Precision::Int16, DfStrategy::ChannelFirst, 0, false)
+            .unwrap();
+        // fresh machine for job B
+        let mut fresh = Processor::new(cfg.clone(), cc_b.dram_bytes, ExecMode::Timing).unwrap();
+        fresh.run(&cc_b.program).unwrap();
+        // pooled machine: job A, reset, job B
+        let mut pooled = Processor::new(cfg.clone(), cc_a.dram_bytes, ExecMode::Timing).unwrap();
+        pooled.run(&cc_a.program).unwrap();
+        pooled.reset(cc_b.dram_bytes);
+        pooled.run(&cc_b.program).unwrap();
+        assert_eq!(*pooled.stats(), *fresh.stats(), "pooled reuse must be bit-identical");
+    }
+
+    /// Functional-mode `reset` clears observable memory (DRAM + VRF).
+    #[test]
+    fn functional_reset_clears_memory() {
+        let mut m = machine(ExecMode::Functional);
+        m.dram.poke(0, &[0xAB; 16]).unwrap();
+        m.lanes[0].vrf.write(0, 0, &[0xCD; 8]).unwrap();
+        m.reset(1 << 20);
+        assert_eq!(m.dram.peek(0, 16).unwrap(), &[0; 16]);
+        assert_eq!(m.lanes[0].vrf.peek(0, 0, 8).unwrap(), &[0; 8]);
     }
 
     #[test]

@@ -33,7 +33,7 @@ impl InstrMix {
 }
 
 /// Full simulation report for one program run.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct SimStats {
     /// Total elapsed cycles (max over resource timelines).
     pub cycles: u64,

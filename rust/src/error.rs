@@ -1,37 +1,74 @@
 //! Error type shared across the crate.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror`): the build
+//! environment is offline and the crate is dependency-free by design.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Crate-wide error enumeration.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Malformed or unsupported instruction encoding.
-    #[error("decode error at word {word:#010x}: {msg}")]
-    Decode { word: u32, msg: String },
+    Decode {
+        /// The offending 32-bit word.
+        word: u32,
+        /// What was wrong with it.
+        msg: String,
+    },
 
     /// Assembler parse failure.
-    #[error("assembler error on line {line}: {msg}")]
-    Asm { line: usize, msg: String },
+    Asm {
+        /// 1-based source line.
+        line: usize,
+        /// What was wrong with it.
+        msg: String,
+    },
 
     /// Architectural misconfiguration (e.g. VLEN not divisible by lanes).
-    #[error("configuration error: {0}")]
     Config(String),
 
     /// Simulator invariant violation (a bug or an illegal program).
-    #[error("simulation error: {0}")]
     Sim(String),
 
     /// Dataflow compiler could not map the layer.
-    #[error("dataflow mapping error: {0}")]
     Mapping(String),
 
     /// PJRT / XLA runtime failure.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Underlying I/O failure.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Decode { word, msg } => {
+                write!(f, "decode error at word {word:#010x}: {msg}")
+            }
+            Error::Asm { line, msg } => write!(f, "assembler error on line {line}: {msg}"),
+            Error::Config(msg) => write!(f, "configuration error: {msg}"),
+            Error::Sim(msg) => write!(f, "simulation error: {msg}"),
+            Error::Mapping(msg) => write!(f, "dataflow mapping error: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
@@ -53,5 +90,29 @@ impl Error {
     /// Shorthand constructor for runtime errors.
     pub fn runtime(msg: impl Into<String>) -> Self {
         Error::Runtime(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_match_variants() {
+        assert_eq!(
+            Error::Decode { word: 0x1234, msg: "bad".into() }.to_string(),
+            "decode error at word 0x00001234: bad"
+        );
+        assert_eq!(Error::config("x").to_string(), "configuration error: x");
+        assert_eq!(Error::sim("y").to_string(), "simulation error: y");
+        assert_eq!(Error::mapping("z").to_string(), "dataflow mapping error: z");
+        assert_eq!(Error::runtime("w").to_string(), "runtime error: w");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

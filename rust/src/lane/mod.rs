@@ -38,6 +38,19 @@ impl Lane {
             seq: Sequencer::new(),
         }
     }
+
+    /// Reset per-job state for pooled-processor reuse. Queue occupancy
+    /// and sequencer statistics always restart; `clear_memory` (needed
+    /// only for functional-mode reuse) additionally zeroes the VRF slice
+    /// and the accumulator banks — timing mode never observes either.
+    pub fn reset(&mut self, clear_memory: bool) {
+        self.sau.queues.reset();
+        self.seq = Sequencer::new();
+        if clear_memory {
+            self.vrf.reset();
+            self.sa.reset();
+        }
+    }
 }
 
 #[cfg(test)]

@@ -24,10 +24,16 @@
 //! - [`models`] — conv-layer zoo: VGG16, ResNet18, GoogLeNet, SqueezeNet.
 //! - [`baseline`] — Ara cycle/area/energy model.
 //! - [`cost`] — area/power models calibrated to the paper's synthesis data.
-//! - [`runtime`] — PJRT client wrapper: load `artifacts/*.hlo.txt` goldens.
-//! - [`coordinator`] — experiment drivers regenerating every figure/table.
+//! - [`runtime`] — PJRT client wrapper: load `artifacts/*.hlo.txt` goldens
+//!   (gated behind the `xla` cargo feature; a stub ships by default).
+//! - [`coordinator`] — experiment drivers regenerating every figure/table,
+//!   plus [`coordinator::sweep`]: the **parallel batch-sweep engine** that
+//!   runs whole (models × layers × precisions × strategies × configs)
+//!   grids on a pool of worker threads with pooled, `reset`-reused
+//!   processors and a memoizing result cache — deterministically
+//!   bit-identical to the serial path at any thread count.
 //!
-//! ## Example
+//! ## Example: one layer
 //!
 //! ```no_run
 //! use speed::arch::{Precision, SpeedConfig};
@@ -39,6 +45,28 @@
 //! let r = simulate_layer(&cfg, &layer, Precision::Int8, Strategy::Mixed).unwrap();
 //! assert!(r.cycles > 0 && r.gops(&cfg) > 0.0);
 //! assert!(r.utilization(&cfg) <= 1.0);
+//! ```
+//!
+//! ## Example: the paper's full evaluation grid, in parallel
+//!
+//! ```no_run
+//! use speed::arch::SpeedConfig;
+//! use speed::coordinator::sweep::{SweepEngine, SweepSpec};
+//!
+//! let cfg = SpeedConfig::default();
+//! // VGG16 + ResNet18 + GoogLeNet + SqueezeNet × 16/8/4-bit × Mixed
+//! let spec = SweepSpec::benchmark_suite(&cfg); // threads = one per core
+//! let mut engine = SweepEngine::new();
+//! let out = engine.run(&spec).unwrap();
+//! println!(
+//!     "{} layer results from {} unique sims ({:.0} layer-sims/s)",
+//!     out.results.len(),
+//!     out.executed_sims,
+//!     out.sims_per_sec()
+//! );
+//! // re-running any overlapping grid is now (almost) free:
+//! let warm = engine.run(&spec).unwrap();
+//! assert_eq!(warm.executed_sims, 0);
 //! ```
 
 pub mod arch;

@@ -3,6 +3,7 @@
 //!
 //! ```text
 //! speed fig3|fig4|fig5|table1|all [--out DIR] [config flags]
+//! speed sweep [--threads N] [--no-cache] [--out DIR] [config flags]
 //! speed sim --model NAME [--prec 4|8|16] [--strategy ff|cf|mixed]
 //! speed asm FILE.s            # assemble + hexdump
 //! speed disasm FILE.bin       # disassemble 32-bit words
@@ -14,16 +15,18 @@
 
 use speed::arch::{Precision, SpeedConfig};
 use speed::coordinator::experiments::{
-    headline_checks, run_fig3, run_fig4, run_fig5, run_table1,
+    headline_checks, run_fig3, run_fig3_with, run_fig4, run_fig4_with, run_fig5, run_table1,
+    run_table1_with,
 };
 use speed::coordinator::report;
 use speed::coordinator::simulate_layer;
+use speed::coordinator::sweep::{SweepEngine, SweepSpec};
 use speed::cost::speed_area_breakdown;
 use speed::dataflow::Strategy;
 use speed::models::model_by_name;
 
 fn usage() -> ! {
-    eprintln!("{}", "usage: speed <fig3|fig4|fig5|table1|all|sim|asm|disasm|golden-check> [flags]\n  see `speed --help` in README.md for flag reference");
+    eprintln!("{}", "usage: speed <fig3|fig4|fig5|table1|all|sweep|sim|asm|disasm|golden-check> [flags]\n  see `speed --help` in README.md for flag reference");
     std::process::exit(2);
 }
 
@@ -37,7 +40,13 @@ impl Flags {
         let mut it = args.iter().peekable();
         while let Some(a) = it.next() {
             if let Some(key) = a.strip_prefix("--") {
-                let val = it.next().cloned().unwrap_or_default();
+                // Only consume a value if the next token isn't another
+                // flag — lets valueless flags (`--no-cache`) precede
+                // valued ones without swallowing them.
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().cloned().unwrap_or_default(),
+                    _ => String::new(),
+                };
                 kv.push((key.to_string(), val));
             } else {
                 pos.push(a.clone());
@@ -111,7 +120,7 @@ fn write_out(dir: Option<&str>, name: &str, content: &str) {
     }
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> speed::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if args.is_empty() {
         usage();
@@ -148,10 +157,13 @@ fn main() -> anyhow::Result<()> {
             write_out(out, "table1.md", &md);
         }
         "all" => {
-            let f3 = run_fig3(&cfg)?;
-            let f4 = run_fig4(&cfg)?;
+            // One engine across all drivers: Fig. 4 and Table I share the
+            // same benchmark grid, so the second driver is pure cache.
+            let mut engine = SweepEngine::new();
+            let f3 = run_fig3_with(&mut engine, &cfg)?;
+            let f4 = run_fig4_with(&mut engine, &cfg)?;
             let f5 = run_fig5(&cfg);
-            let t1 = run_table1(&cfg)?;
+            let t1 = run_table1_with(&mut engine, &cfg)?;
             println!("{}", report::fig3_markdown(&f3));
             println!("{}", report::fig4_markdown(&f4));
             println!("{}", report::fig5_markdown(&f5));
@@ -166,6 +178,22 @@ fn main() -> anyhow::Result<()> {
             write_out(out, "fig4.csv", &report::fig4_csv(&f4));
             write_out(out, "fig5.md", &report::fig5_markdown(&f5));
             write_out(out, "table1.md", &report::table1_markdown(&t1));
+        }
+        "sweep" => {
+            // Parallel batch sweep of the paper's full benchmark grid.
+            // flags: --threads N (0 = per core), --no-cache
+            let mut spec = SweepSpec::benchmark_suite(&cfg);
+            if let Some(n) = flags.num("threads") {
+                spec.threads = n;
+            }
+            if flags.get("no-cache").is_some() {
+                spec.memoize = false;
+            }
+            let mut engine = SweepEngine::new();
+            let out_come = engine.run(&spec)?;
+            let md = report::sweep_markdown(&spec, &out_come);
+            println!("{md}");
+            write_out(out, "sweep.md", &md);
         }
         "sim" => {
             let name = flags.get("model").unwrap_or("ResNet18");

@@ -71,6 +71,32 @@ impl Dram {
         self.write_txns = 0;
     }
 
+    /// Reset for pooled-processor reuse: set the visible capacity to
+    /// exactly `capacity` (so bounds checks behave identically to a
+    /// fresh `Dram::new(capacity, ..)` — a pooled machine must not
+    /// accept an out-of-bounds program a fresh one would reject), reset
+    /// the allocator and counters. The underlying allocation is
+    /// retained across shrink/grow cycles, which is the reuse win.
+    /// `clear` additionally zeroes the surviving contents; timing-mode
+    /// reuse skips that memset because timing runs never observe memory.
+    pub fn reset_reuse(&mut self, capacity: usize, clear: bool) {
+        // truncate keeps the allocation; resize within a retained
+        // allocation only zeroes the newly exposed tail.
+        if self.data.len() > capacity {
+            self.data.truncate(capacity);
+        } else if self.data.len() < capacity {
+            self.data.resize(capacity, 0);
+        }
+        if clear {
+            self.data.fill(0);
+        }
+        self.alloc_top = 0;
+        self.bytes_read = 0;
+        self.bytes_written = 0;
+        self.read_txns = 0;
+        self.write_txns = 0;
+    }
+
     fn check(&self, addr: u32, len: usize) -> Result<()> {
         let end = addr as usize + len;
         if end > self.data.len() {
@@ -172,6 +198,24 @@ mod tests {
         let mut d = Dram::new(64, 16.0, 10);
         assert!(d.read(60, 8).is_err());
         assert!(d.write(64, &[0]).is_err());
+    }
+
+    #[test]
+    fn reset_reuse_tracks_requested_capacity() {
+        let mut d = Dram::new(64, 16.0, 10);
+        d.write(0, &[7; 8]).unwrap();
+        d.alloc(32).unwrap();
+        d.reset_reuse(256, false);
+        assert_eq!(d.capacity(), 256);
+        assert_eq!(d.bytes_written, 0);
+        // allocator rewound: the full (grown) capacity is available again
+        assert_eq!(d.alloc(256).unwrap(), 0);
+        // shrinking back: bounds checks must match a fresh 64-byte DRAM,
+        // so a pooled machine rejects exactly what a fresh one would
+        d.reset_reuse(64, true);
+        assert_eq!(d.capacity(), 64);
+        assert!(d.peek(64, 1).is_err());
+        assert_eq!(d.peek(0, 8).unwrap(), &[0; 8]);
     }
 
     #[test]

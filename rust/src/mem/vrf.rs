@@ -113,6 +113,13 @@ impl Vrf {
         ((bytes as f64 * conflict_factor) / self.read_bw_bytes_per_cycle() as f64).ceil() as u64
     }
 
+    /// Zero contents and counters (pooled-processor reuse).
+    pub fn reset(&mut self) {
+        self.data.fill(0);
+        self.bytes_read = 0;
+        self.bytes_written = 0;
+    }
+
     /// Timing-mode traffic accounting.
     pub fn count_read(&mut self, bytes: u64) {
         self.bytes_read += bytes;

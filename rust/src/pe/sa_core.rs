@@ -62,6 +62,15 @@ impl SaCore {
         Ok(())
     }
 
+    /// Zero every accumulator bank (pooled-processor reuse).
+    pub fn reset(&mut self) {
+        for bank in &mut self.banks {
+            for pe in bank.iter_mut() {
+                pe.clear();
+            }
+        }
+    }
+
     /// Stream a tile: `a` is `[tile_r][steps]` unified elements
     /// (given as flat operand arrays, `group` operands per element),
     /// `b` is `[tile_c][steps]`. `a_row_stride_elems` expresses the

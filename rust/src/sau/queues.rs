@@ -51,6 +51,12 @@ impl OperandQueues {
     pub fn occupancy(&self) -> usize {
         self.occupancy
     }
+
+    /// Drain all bookkeeping (pooled-processor reuse between jobs).
+    pub fn reset(&mut self) {
+        self.occupancy = 0;
+        self.max_occupancy = 0;
+    }
 }
 
 #[cfg(test)]

@@ -22,6 +22,10 @@ const TINYCNN: [Spec; 4] = [
 
 #[test]
 fn tinycnn_simulator_matches_xla_golden_bit_exactly() {
+    if !cfg!(feature = "xla") {
+        eprintln!("SKIP: built without the `xla` feature — PJRT runtime is a stub");
+        return;
+    }
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("tinycnn.hlo.txt").exists() {
         eprintln!("SKIP: artifacts missing — run `make artifacts`");

@@ -1,0 +1,153 @@
+//! The parallel sweep engine's contract: for any thread count, for any
+//! cache state, results are **bit-identical** to the serial single-layer
+//! API. Checked over randomized layer grids (2 seeds × 3 thread counts)
+//! plus propcheck properties for the memoization cache.
+
+use speed::arch::{Precision, SpeedConfig};
+use speed::coordinator::simulate_layer;
+use speed::coordinator::sweep::{SweepEngine, SweepSpec};
+use speed::dataflow::{ConvLayer, Strategy};
+use speed::testutil::{check, PropConfig, Prng};
+
+/// A small random network; always contains one duplicated shape so the
+/// dedup path is exercised on every run.
+fn random_layers(rng: &mut Prng) -> Vec<ConvLayer> {
+    let mut layers = Vec::new();
+    for i in 0..4 {
+        let k = *rng.pick(&[1usize, 3]);
+        let hw = rng.range_usize(k.max(4), 12);
+        layers.push(ConvLayer::new(
+            &format!("l{i}"),
+            rng.range_usize(1, 16),
+            rng.range_usize(1, 16),
+            hw,
+            hw,
+            k,
+            *rng.pick(&[1usize, 2]),
+            k / 2,
+        ));
+    }
+    // duplicate the first layer's shape under a new name
+    let mut dup = layers[0].clone();
+    dup.name = "dup0".to_string();
+    layers.push(dup);
+    layers
+}
+
+#[test]
+fn parallel_results_are_bit_identical_to_serial() {
+    let cfg = SpeedConfig::default();
+    let precs = [Precision::Int8, Precision::Int16];
+    let strats = [Strategy::FeatureFirst, Strategy::Mixed];
+    for seed in [0xA1u64, 0xB2] {
+        let layers = random_layers(&mut Prng::new(seed));
+        // serial reference: the existing per-layer entry point, in the
+        // engine's job-enumeration order (prec → strat → layer)
+        let mut want = Vec::new();
+        for &p in &precs {
+            for &s in &strats {
+                for l in &layers {
+                    want.push(simulate_layer(&cfg, l, p, s).unwrap());
+                }
+            }
+        }
+        for threads in [1usize, 2, 4] {
+            let spec = SweepSpec::new(cfg.clone())
+                .network("rand", layers.clone())
+                .precisions(precs.to_vec())
+                .strategies(strats.to_vec())
+                .threads(threads);
+            let out = SweepEngine::new().run(&spec).unwrap();
+            assert_eq!(
+                out.results, want,
+                "seed {seed:#x}, {threads} threads: engine diverged from serial"
+            );
+        }
+    }
+}
+
+#[test]
+fn thread_count_never_changes_the_outcome() {
+    // engine-vs-engine across thread counts, including the block view
+    let cfg = SpeedConfig::default();
+    let layers = random_layers(&mut Prng::new(0xC3));
+    let spec_for = |threads: usize| {
+        SweepSpec::new(cfg.clone())
+            .network("rand", layers.clone())
+            .precisions(vec![Precision::Int4])
+            .strategies(vec![Strategy::Mixed])
+            .threads(threads)
+    };
+    let base = SweepEngine::new().run(&spec_for(1)).unwrap();
+    for threads in [2usize, 4] {
+        let out = SweepEngine::new().run(&spec_for(threads)).unwrap();
+        assert_eq!(out.results, base.results, "{threads} threads");
+        assert_eq!(out.block(0, 0, 0, 0), base.block(0, 0, 0, 0));
+    }
+}
+
+#[test]
+fn cache_hits_never_change_cycles_or_gops() {
+    // Property: (a) a duplicated shape served by the intra-run dedup and
+    // (b) a warm persistent cache both report exactly the cycles/gops of
+    // a fresh simulation.
+    let cfg = SpeedConfig::default();
+    check(PropConfig::new(8, 0xCAFE), |rng| {
+        let k = *rng.pick(&[1usize, 3]);
+        let hw = rng.range_usize(k.max(4), 10);
+        let layer = ConvLayer::new(
+            "a",
+            rng.range_usize(1, 12),
+            rng.range_usize(1, 12),
+            hw,
+            hw,
+            k,
+            1,
+            k / 2,
+        );
+        let mut twin = layer.clone();
+        twin.name = "b".to_string();
+        let p = *rng.pick(&Precision::ALL);
+        let s = *rng.pick(&[Strategy::FeatureFirst, Strategy::ChannelFirst, Strategy::Mixed]);
+        let spec = SweepSpec::new(cfg.clone())
+            .network("prop", vec![layer.clone(), twin])
+            .precisions(vec![p])
+            .strategies(vec![s])
+            .threads(1);
+        let mut engine = SweepEngine::new();
+        let cold = engine.run(&spec).map_err(|e| e.to_string())?;
+        let fresh = simulate_layer(&cfg, &layer, p, s).map_err(|e| e.to_string())?;
+        let (a, b) = (&cold.results[0], &cold.results[1]);
+        if a.cycles != fresh.cycles || a.stats.gops(cfg.freq_mhz) != fresh.stats.gops(cfg.freq_mhz)
+        {
+            return Err(format!("{layer} {p} {s}: engine != serial"));
+        }
+        if b.cycles != a.cycles || b.stats.gops(cfg.freq_mhz) != a.stats.gops(cfg.freq_mhz) {
+            return Err(format!("{layer} {p} {s}: dedup hit changed the numbers"));
+        }
+        // warm rerun: pure cache must reproduce everything
+        let warm = engine.run(&spec).map_err(|e| e.to_string())?;
+        if warm.executed_sims != 0 {
+            return Err("warm rerun executed simulations".to_string());
+        }
+        if warm.results != cold.results {
+            return Err(format!("{layer} {p} {s}: cache hit changed the results"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simulate_network_matches_per_layer_calls() {
+    let cfg = SpeedConfig::default();
+    let layers = random_layers(&mut Prng::new(0xD4));
+    let net =
+        speed::coordinator::simulate_network(&cfg, "n", &layers, Precision::Int8, Strategy::Mixed)
+            .unwrap();
+    assert_eq!(net.layers.len(), layers.len());
+    for (l, got) in layers.iter().zip(&net.layers) {
+        let want = simulate_layer(&cfg, l, Precision::Int8, Strategy::Mixed).unwrap();
+        assert_eq!(*got, want, "{l}");
+    }
+    assert!(net.total_cycles() > 0 && net.gops(cfg.freq_mhz) > 0.0);
+}
