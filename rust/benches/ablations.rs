@@ -8,7 +8,7 @@
 
 use speed::arch::{Precision, SpeedConfig};
 use speed::coordinator::simulate_layer;
-use speed::cost::{roofline_gops, speed_area_breakdown};
+use speed::cost::{perf, roofline_gops, speed_area_breakdown};
 use speed::dataflow::{ConvLayer, Strategy};
 
 fn bench_layers() -> Vec<ConvLayer> {
@@ -28,8 +28,7 @@ fn sweep(label: &str, cfg: &SpeedConfig, p: Precision) {
         tot_cycles += r.cycles;
         tot_ops += 2 * r.useful_macs;
     }
-    let secs = tot_cycles as f64 / (cfg.freq_mhz * 1e6);
-    let gops = tot_ops as f64 / secs / 1e9;
+    let gops = perf::gops(tot_ops, tot_cycles, cfg.freq_mhz);
     println!(
         "{label:<26} {:>9.2} GOPS {:>8.3} mm2 {:>9.2} GOPS/mm2",
         gops,

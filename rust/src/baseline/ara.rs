@@ -21,6 +21,8 @@
 //! `cost::calib`).
 
 use crate::arch::{AraConfig, Precision};
+use crate::core::{InstrMix, SimStats};
+use crate::cost::perf;
 use crate::dataflow::ConvLayer;
 use crate::error::{Error, Result};
 
@@ -35,10 +37,62 @@ pub struct AraLayerResult {
     pub dram_read: u64,
     /// DRAM bytes written.
     pub dram_write: u64,
-    /// Vector instructions issued.
+    /// Vector instructions issued (= `vle + vmacc + vse + vsetvli`).
     pub v_instrs: u64,
+    /// `vle` input-row loads issued.
+    pub vle: u64,
+    /// `vmacc.vv` MAC instructions issued.
+    pub vmacc: u64,
+    /// `vse` output-row stores issued.
+    pub vse: u64,
+    /// `vsetvli` strip configurations issued.
+    pub vsetvli: u64,
     /// Achieved GOPS.
     pub gops: f64,
+}
+
+impl AraLayerResult {
+    /// Project this result into the sweep engine's unified [`SimStats`]
+    /// shape. The mapping is lossless for everything the cost models
+    /// consume: `vle`→load, `vmacc`→mac, `vse`→store, `vsetvli`→config,
+    /// so `instrs.total()` equals [`AraLayerResult::v_instrs`] and
+    /// [`AraLayerResult::from_stats`] round-trips bit-exactly.
+    pub fn to_stats(&self) -> SimStats {
+        SimStats {
+            cycles: self.cycles,
+            macs: self.useful_macs,
+            useful_macs: self.useful_macs,
+            dram_read: self.dram_read,
+            dram_write: self.dram_write,
+            instrs: InstrMix {
+                load: self.vle,
+                mac: self.vmacc,
+                store: self.vse,
+                config: self.vsetvli,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    /// Rebuild an Ara result from the unified [`SimStats`] shape (the
+    /// inverse of [`AraLayerResult::to_stats`]). `freq_mhz` must be the
+    /// Ara clock the cycles were produced under; the derived `gops` is
+    /// bit-identical to what [`simulate_layer_ara`] reported.
+    pub fn from_stats(stats: &SimStats, freq_mhz: f64) -> Self {
+        AraLayerResult {
+            cycles: stats.cycles,
+            useful_macs: stats.useful_macs,
+            dram_read: stats.dram_read,
+            dram_write: stats.dram_write,
+            v_instrs: stats.instrs.total(),
+            vle: stats.instrs.load,
+            vmacc: stats.instrs.mac,
+            vse: stats.instrs.store,
+            vsetvli: stats.instrs.config,
+            gops: perf::gops(2 * stats.useful_macs, stats.cycles, freq_mhz),
+        }
+    }
 }
 
 /// Cycle model for one conv layer on Ara at `p` (8/16-bit only).
@@ -108,8 +162,7 @@ pub fn simulate_layer_ara(cfg: &AraConfig, layer: &ConvLayer, p: Precision) -> R
     let cycles = vmacc_cycles.max(mem_cycles).max(issue_cycles) + latency_exposed;
 
     let useful_macs = layer.macs();
-    let seconds = cycles as f64 / (cfg.freq_mhz * 1e6);
-    let gops = 2.0 * useful_macs as f64 / seconds / 1e9;
+    let gops = perf::gops(2 * useful_macs, cycles, cfg.freq_mhz);
 
     Ok(AraLayerResult {
         cycles,
@@ -117,6 +170,10 @@ pub fn simulate_layer_ara(cfg: &AraConfig, layer: &ConvLayer, p: Precision) -> R
         dram_read,
         dram_write,
         v_instrs,
+        vle: vle_count,
+        vmacc: vmacc_count,
+        vse: vse_count,
+        vsetvli: vsetvli_count,
         gops,
     })
 }
@@ -156,6 +213,22 @@ mod tests {
         let r8 = simulate_layer_ara(&cfg, &layer3x3(), Precision::Int8).unwrap();
         let r16 = simulate_layer_ara(&cfg, &layer3x3(), Precision::Int16).unwrap();
         assert!(r8.gops > r16.gops);
+    }
+
+    #[test]
+    fn stats_projection_round_trips() {
+        let cfg = AraConfig::default();
+        let r = simulate_layer_ara(&cfg, &layer3x3(), Precision::Int8).unwrap();
+        assert_eq!(r.v_instrs, r.vle + r.vmacc + r.vse + r.vsetvli);
+        let s = r.to_stats();
+        assert_eq!(s.instrs.total(), r.v_instrs);
+        let back = AraLayerResult::from_stats(&s, cfg.freq_mhz);
+        assert_eq!(back.cycles, r.cycles);
+        assert_eq!(back.useful_macs, r.useful_macs);
+        assert_eq!(back.dram_read, r.dram_read);
+        assert_eq!(back.dram_write, r.dram_write);
+        assert_eq!(back.v_instrs, r.v_instrs);
+        assert_eq!(back.gops.to_bits(), r.gops.to_bits(), "gops must round-trip bit-exactly");
     }
 
     #[test]

@@ -1,0 +1,470 @@
+//! Pluggable per-job simulation backends for the sweep engine.
+//!
+//! The paper's headline numbers are *comparative*: SPEED's cycle
+//! simulation vs the Ara baseline model (Fig. 3/Fig. 4/Table I) and vs
+//! its own golden functional model (the bit-exactness claims). Before
+//! this module those comparison columns were serial tails bolted onto
+//! the experiment drivers; now every one of them is a [`SimBackend`]
+//! that [`super::sweep::SweepEngine`] schedules like any other grid
+//! axis — `(backend × config × network × precision × strategy × layer)`
+//! — with the same worker pool, memoization and cache persistence.
+//!
+//! Three implementations ship:
+//!
+//! - [`SpeedCycle`] — the SPEED timing simulator on pooled
+//!   [`Processor`]s (the engine's original job body);
+//! - [`AraAnalytic`] — the Ara baseline cycle model
+//!   ([`crate::baseline::simulate_layer_ara`]), projected into the
+//!   unified [`SimStats`] shape losslessly (see
+//!   [`AraLayerResult::to_stats`](crate::baseline::AraLayerResult::to_stats));
+//! - [`GoldenFunctional`] — a *verifying* backend: runs the layer
+//!   bit-exactly on a pooled functional [`Processor`] with
+//!   deterministically generated operands and cross-checks the output
+//!   tensor against the host golden model
+//!   [`conv2d_ref`](crate::mem::tensor::conv2d_ref); a mismatch fails
+//!   the job (and with it the sweep).
+
+use std::fmt;
+
+use crate::arch::{AraConfig, Precision, SpeedConfig};
+use crate::baseline::simulate_layer_ara;
+use crate::core::{ExecMode, Processor, SimStats};
+use crate::dataflow::{
+    compile_conv, extract_ofmap, pack_ifmap_image, pack_weight_image, ConvLayer, Strategy,
+};
+use crate::error::{Error, Result};
+use crate::mem::tensor::conv2d_ref;
+use crate::mem::Tensor;
+use crate::testutil::Prng;
+
+/// FNV-1a offset basis (the seed for [`fp_bytes`] chains).
+pub const FP_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+const FP_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold `bytes` into an FNV-1a fingerprint chain. Unlike
+/// `std::collections::hash_map::DefaultHasher`, this is stable across
+/// processes *and* toolchain versions, which the on-disk result cache
+/// depends on (a fingerprint change silently invalidates cache entries
+/// instead of aliasing them — safe, but worth keeping stable).
+pub fn fp_bytes(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FP_PRIME);
+    }
+    h
+}
+
+/// Fold a `u64` into a fingerprint chain.
+pub fn fp_u64(h: u64, v: u64) -> u64 {
+    fp_bytes(h, &v.to_le_bytes())
+}
+
+/// Fold an `f64` into a fingerprint chain (by bit pattern).
+pub fn fp_f64(h: u64, v: f64) -> u64 {
+    fp_u64(h, v.to_bits())
+}
+
+/// Fold a string into a fingerprint chain.
+pub fn fp_str(h: u64, s: &str) -> u64 {
+    fp_bytes(h, s.as_bytes())
+}
+
+/// Per-worker mutable state a backend may reuse across jobs. The engine
+/// keeps one slot per (backend, machine configuration) pair per worker
+/// thread, so a backend can hold a pooled [`Processor`] (reset between
+/// jobs instead of reallocating DRAM/VRF images) without ever seeing
+/// another backend's machine or execution mode.
+#[derive(Debug, Default)]
+pub struct WorkerSlot {
+    /// Pooled processor (timing or functional — the owning backend's
+    /// choice; the engine never touches it).
+    pub processor: Option<Processor>,
+}
+
+impl WorkerSlot {
+    /// Fetch the pooled processor, resetting it for `dram_bytes`, or
+    /// build one in `mode` on first use.
+    pub fn processor_for(
+        &mut self,
+        cfg: &SpeedConfig,
+        dram_bytes: usize,
+        mode: ExecMode,
+    ) -> Result<&mut Processor> {
+        match self.processor.as_mut() {
+            Some(proc) => proc.reset(dram_bytes),
+            None => self.processor = Some(Processor::new(cfg.clone(), dram_bytes, mode)?),
+        }
+        Ok(self.processor.as_mut().expect("pooled processor present"))
+    }
+}
+
+/// One way of executing a sweep job. Implementations must be pure
+/// functions of `(cfg, layer, precision, strategy)` — the engine
+/// memoizes and persists results under exactly that key (plus
+/// [`SimBackend::fingerprint`]), and determinism across thread counts
+/// depends on it.
+pub trait SimBackend: fmt::Debug + Send + Sync {
+    /// Short stable name used in reports and the CLI (`"speed"`,
+    /// `"ara"`, `"golden"`).
+    fn name(&self) -> &'static str;
+
+    /// Stable fingerprint of the backend *and its parameters*, mixed
+    /// into memo/cache keys so two backends (or two parameterizations
+    /// of one backend) never alias. Build it with the `fp_*` helpers
+    /// seeded from [`FP_SEED`].
+    fn fingerprint(&self) -> u64;
+
+    /// Whether this backend can simulate precision `p`. Unsupported
+    /// cells are skipped at enumeration (their result blocks are
+    /// empty), not errors — e.g. Ara has no 4-bit formats.
+    fn supports_precision(&self, p: Precision) -> bool {
+        let _ = p;
+        true
+    }
+
+    /// Whether FF and CF produce different results. When `false` the
+    /// engine normalizes every concrete strategy to feature-first, so
+    /// the whole strategy axis shares one simulation per cell.
+    fn strategy_sensitive(&self) -> bool {
+        true
+    }
+
+    /// The clock (MHz) this backend's cycle counts are relative to —
+    /// what rate metrics must be derived with. Defaults to the SPEED
+    /// machine clock; baseline backends with their own clock override.
+    fn freq_mhz(&self, cfg: &SpeedConfig) -> f64 {
+        cfg.freq_mhz
+    }
+
+    /// Execute one concrete (non-`Mixed`) simulation. `Mixed` is
+    /// resolved by the engine as best-of FF/CF before dispatch.
+    fn simulate(
+        &self,
+        slot: &mut WorkerSlot,
+        cfg: &SpeedConfig,
+        layer: &ConvLayer,
+        p: Precision,
+        strategy: Strategy,
+    ) -> Result<SimStats>;
+}
+
+/// The SPEED cycle engine: timing-mode simulation on a pooled
+/// processor — identical math to the serial
+/// [`simulate_layer`](crate::coordinator::simulate_layer) path
+/// (compile → run → record), with the worker's processor `reset`
+/// instead of rebuilt.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SpeedCycle;
+
+impl SimBackend for SpeedCycle {
+    fn name(&self) -> &'static str {
+        "speed"
+    }
+
+    fn fingerprint(&self) -> u64 {
+        fp_str(FP_SEED, "speed-cycle-v1")
+    }
+
+    fn simulate(
+        &self,
+        slot: &mut WorkerSlot,
+        cfg: &SpeedConfig,
+        layer: &ConvLayer,
+        p: Precision,
+        strategy: Strategy,
+    ) -> Result<SimStats> {
+        let cc = compile_conv(cfg, layer, p, strategy, 0, false)?;
+        let proc = slot.processor_for(cfg, cc.dram_bytes, ExecMode::Timing)?;
+        proc.run(&cc.program)?;
+        proc.set_useful_macs(cc.useful_macs);
+        Ok(proc.stats().clone())
+    }
+}
+
+/// The Ara baseline: the analytic cycle model of
+/// [`crate::baseline::ara`], scheduled through the engine so the
+/// comparison columns of Fig. 3/Fig. 4/Table I are ordinary grid cells
+/// (and profit from memoization + cache persistence) instead of serial
+/// tails. Strategy-insensitive (Ara has no FF/CF notion) and 8/16-bit
+/// only (Table I: no 4-bit formats). Cycle counts are relative to the
+/// *Ara* clock — reconstruct rates with
+/// [`AraLayerResult::from_stats`](crate::baseline::AraLayerResult::from_stats)
+/// at [`AraConfig::freq_mhz`].
+#[derive(Debug, Clone)]
+pub struct AraAnalytic {
+    /// The baseline machine being modeled.
+    pub ara: AraConfig,
+}
+
+impl AraAnalytic {
+    /// Backend over an explicit Ara configuration.
+    pub fn new(ara: AraConfig) -> Self {
+        AraAnalytic { ara }
+    }
+}
+
+impl Default for AraAnalytic {
+    fn default() -> Self {
+        AraAnalytic::new(AraConfig::default())
+    }
+}
+
+impl SimBackend for AraAnalytic {
+    fn name(&self) -> &'static str {
+        "ara"
+    }
+
+    /// Destructures `AraConfig` without `..` on purpose: adding a field
+    /// to the config then breaks this function at compile time, so a
+    /// new model knob can never silently fall out of the cache key.
+    fn fingerprint(&self) -> u64 {
+        let AraConfig {
+            n_lanes,
+            vlen_bits,
+            freq_mhz,
+            lane_datapath_bits,
+            dram_bw_bytes_per_cycle,
+            dram_latency_cycles,
+            issue_cycles,
+        } = &self.ara;
+        let mut h = fp_str(FP_SEED, "ara-analytic-v1");
+        h = fp_u64(h, *n_lanes as u64);
+        h = fp_u64(h, *vlen_bits as u64);
+        h = fp_f64(h, *freq_mhz);
+        h = fp_u64(h, *lane_datapath_bits as u64);
+        h = fp_f64(h, *dram_bw_bytes_per_cycle);
+        h = fp_u64(h, *dram_latency_cycles);
+        h = fp_u64(h, *issue_cycles);
+        h
+    }
+
+    fn supports_precision(&self, p: Precision) -> bool {
+        p != Precision::Int4
+    }
+
+    fn strategy_sensitive(&self) -> bool {
+        false
+    }
+
+    fn freq_mhz(&self, _cfg: &SpeedConfig) -> f64 {
+        self.ara.freq_mhz
+    }
+
+    fn simulate(
+        &self,
+        _slot: &mut WorkerSlot,
+        _cfg: &SpeedConfig,
+        layer: &ConvLayer,
+        p: Precision,
+        _strategy: Strategy,
+    ) -> Result<SimStats> {
+        Ok(simulate_layer_ara(&self.ara, layer, p)?.to_stats())
+    }
+}
+
+/// The golden functional verifier: runs the layer on a pooled
+/// *functional* (bit-exact) [`Processor`] with operands generated
+/// deterministically from the cell identity, then cross-checks the
+/// extracted output tensor against the host golden model
+/// [`conv2d_ref`]. Agreement is the job's result (the functional run's
+/// statistics); disagreement is a job error that fails the sweep. This
+/// is the ROADMAP's "functional-mode batch verification": the golden
+/// cross-checks that used to be serial one-off
+/// [`run_functional_conv`](crate::coordinator::run_functional_conv)
+/// calls now batch across the worker pool.
+///
+/// (The XLA/PJRT golden artifacts remain a separate, feature-gated
+/// oracle — `tests/golden_vs_simulator.rs` pins `conv2d_ref` against
+/// them, so transitivity covers this backend too.)
+#[derive(Debug, Clone, Copy)]
+pub struct GoldenFunctional {
+    /// Salt mixed into the per-cell operand generator.
+    pub seed: u64,
+    /// Requant shift applied on drain.
+    pub shift: u8,
+    /// Fused ReLU on drain.
+    pub relu: bool,
+}
+
+impl Default for GoldenFunctional {
+    fn default() -> Self {
+        GoldenFunctional { seed: 0x5EED, shift: 6, relu: false }
+    }
+}
+
+impl GoldenFunctional {
+    /// Deterministic operand pair for a `(layer shape, precision)` cell:
+    /// the same cell always verifies the same tensors, independent of
+    /// worker scheduling — required for engine determinism and for the
+    /// parity tests to reproduce a cell outside the engine.
+    pub fn operands(&self, layer: &ConvLayer, p: Precision) -> (Tensor, Tensor) {
+        let mut h = fp_u64(FP_SEED, self.seed);
+        for d in [layer.cin, layer.cout, layer.h, layer.w, layer.k, layer.stride, layer.pad] {
+            h = fp_u64(h, d as u64);
+        }
+        h = fp_u64(h, p.bits() as u64);
+        let mut rng = Prng::new(h);
+        let input = Tensor::random(&[layer.cin, layer.h, layer.w], p, &mut rng);
+        let weights = Tensor::random(&[layer.cout, layer.cin, layer.k, layer.k], p, &mut rng);
+        (input, weights)
+    }
+
+    /// Run one cell's functional simulation on the pooled processor and
+    /// cross-check it against [`conv2d_ref`]. Returns the verified
+    /// output tensor plus the run's statistics. Public so tests can
+    /// compare a single cell against
+    /// [`run_functional_conv`](crate::coordinator::run_functional_conv)
+    /// directly.
+    pub fn verify_layer(
+        &self,
+        slot: &mut WorkerSlot,
+        cfg: &SpeedConfig,
+        layer: &ConvLayer,
+        p: Precision,
+        strategy: Strategy,
+    ) -> Result<(Tensor, SimStats)> {
+        let strategy = match strategy {
+            Strategy::Mixed => Strategy::ChannelFirst,
+            s => s,
+        };
+        let cc = compile_conv(cfg, layer, p, strategy, self.shift, self.relu)?;
+        let proc = slot.processor_for(cfg, cc.dram_bytes, ExecMode::Functional)?;
+        let (input, weights) = self.operands(layer, p);
+        let ifmap = pack_ifmap_image(&input, layer, &cc.plan)?;
+        let wimg = pack_weight_image(&weights, layer, &cc.plan, cfg)?;
+        proc.dram.poke(cc.ifmap_base, &ifmap)?;
+        proc.dram.poke(cc.w_base, &wimg)?;
+        proc.run(&cc.program)?;
+        proc.set_useful_macs(cc.useful_macs);
+        let stats = proc.stats().clone();
+        let got = extract_ofmap(&proc.dram, cc.out_base, layer, &cc.plan)?;
+        let want =
+            conv2d_ref(&input, &weights, p, layer.stride, layer.pad, self.shift, self.relu);
+        if got.shape != want.shape || got.data != want.data {
+            return Err(Error::sim(format!(
+                "golden verification failed: {layer} @{p} [{strategy}] diverges from conv2d_ref"
+            )));
+        }
+        Ok((got, stats))
+    }
+}
+
+impl SimBackend for GoldenFunctional {
+    fn name(&self) -> &'static str {
+        "golden"
+    }
+
+    fn fingerprint(&self) -> u64 {
+        let mut h = fp_str(FP_SEED, "golden-functional-v1");
+        h = fp_u64(h, self.seed);
+        h = fp_u64(h, self.shift as u64);
+        h = fp_u64(h, self.relu as u64);
+        h
+    }
+
+    fn simulate(
+        &self,
+        slot: &mut WorkerSlot,
+        cfg: &SpeedConfig,
+        layer: &ConvLayer,
+        p: Precision,
+        strategy: Strategy,
+    ) -> Result<SimStats> {
+        self.verify_layer(slot, cfg, layer, p, strategy).map(|(_, stats)| stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprints_are_stable_and_distinct() {
+        // Stability across calls (and, by construction, processes).
+        assert_eq!(SpeedCycle.fingerprint(), SpeedCycle.fingerprint());
+        let (a, b, c) = (
+            SpeedCycle.fingerprint(),
+            AraAnalytic::default().fingerprint(),
+            GoldenFunctional::default().fingerprint(),
+        );
+        assert!(a != b && b != c && a != c);
+        // Parameter changes move the fingerprint.
+        let ara = AraConfig { freq_mhz: 600.0, ..Default::default() };
+        assert_ne!(AraAnalytic::new(ara).fingerprint(), b);
+        let g = GoldenFunctional { seed: 1, ..Default::default() };
+        assert_ne!(g.fingerprint(), c);
+    }
+
+    #[test]
+    fn backend_capabilities() {
+        assert!(SpeedCycle.supports_precision(Precision::Int4));
+        assert!(SpeedCycle.strategy_sensitive());
+        let ara = AraAnalytic::default();
+        assert!(!ara.supports_precision(Precision::Int4));
+        assert!(ara.supports_precision(Precision::Int8));
+        assert!(!ara.strategy_sensitive());
+        assert_eq!(ara.freq_mhz(&SpeedConfig::default()), AraConfig::default().freq_mhz);
+    }
+
+    #[test]
+    fn speed_backend_matches_fresh_processor() {
+        let cfg = SpeedConfig::default();
+        let layer = ConvLayer::new("t", 8, 8, 8, 8, 3, 1, 1);
+        let mut slot = WorkerSlot::default();
+        let a = SpeedCycle
+            .simulate(&mut slot, &cfg, &layer, Precision::Int8, Strategy::FeatureFirst)
+            .unwrap();
+        // Pooled rerun must not drift.
+        let b = SpeedCycle
+            .simulate(&mut slot, &cfg, &layer, Precision::Int8, Strategy::FeatureFirst)
+            .unwrap();
+        assert_eq!(a, b);
+        assert!(a.cycles > 0);
+    }
+
+    #[test]
+    fn ara_backend_projects_model_result() {
+        let cfg = SpeedConfig::default();
+        let layer = ConvLayer::new("t", 16, 16, 14, 14, 3, 1, 1);
+        let backend = AraAnalytic::default();
+        let mut slot = WorkerSlot::default();
+        let s = backend
+            .simulate(&mut slot, &cfg, &layer, Precision::Int8, Strategy::FeatureFirst)
+            .unwrap();
+        let direct = simulate_layer_ara(&backend.ara, &layer, Precision::Int8).unwrap();
+        assert_eq!(s, direct.to_stats());
+        assert!(slot.processor.is_none(), "analytic backend needs no processor");
+    }
+
+    #[test]
+    fn golden_backend_verifies_and_pools() {
+        let cfg = SpeedConfig::default();
+        let backend = GoldenFunctional::default();
+        let mut slot = WorkerSlot::default();
+        for layer in [
+            ConvLayer::new("c3", 4, 4, 6, 6, 3, 1, 1),
+            ConvLayer::new("pw", 8, 4, 5, 5, 1, 1, 0),
+        ] {
+            for s in [Strategy::FeatureFirst, Strategy::ChannelFirst] {
+                let stats = backend
+                    .simulate(&mut slot, &cfg, &layer, Precision::Int8, s)
+                    .unwrap();
+                assert!(stats.cycles > 0);
+            }
+        }
+        assert!(slot.processor.is_some(), "functional processor is pooled");
+    }
+
+    #[test]
+    fn golden_operands_are_deterministic() {
+        let backend = GoldenFunctional::default();
+        let layer = ConvLayer::new("c3", 4, 4, 6, 6, 3, 1, 1);
+        let (i1, w1) = backend.operands(&layer, Precision::Int8);
+        let (i2, w2) = backend.operands(&layer, Precision::Int8);
+        assert_eq!(i1.data, i2.data);
+        assert_eq!(w1.data, w2.data);
+        // distinct cells draw distinct operands
+        let (i3, _) = backend.operands(&layer, Precision::Int16);
+        assert_ne!(i1.data, i3.data);
+    }
+}

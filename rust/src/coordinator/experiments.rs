@@ -4,19 +4,35 @@
 //! Every driver returns a structured result that the report module
 //! renders and the benches print; paper reference numbers from
 //! `cost::calib` ride along so every output is a paper-vs-measured row.
+//!
+//! All simulation — SPEED cycle runs *and* the Ara baseline columns —
+//! dispatches through the sweep engine's backend axis: the drivers
+//! build one `(backend × precision × strategy × layer)` grid per
+//! figure and read the comparison columns out of the outcome's blocks.
+//! There are no serial simulation tails left here, so Ara cells are
+//! memoized (and cache-persisted) exactly like SPEED cells;
+//! `tests/backend_parity.rs` pins the reported numbers bit-identically
+//! to the old serial composition.
 
 use crate::arch::{AraConfig, Precision, SpeedConfig};
-use crate::baseline::{simulate_layer_ara, AraLayerResult};
+use crate::baseline::AraLayerResult;
+use crate::coordinator::backend::AraAnalytic;
 use crate::coordinator::runner::LayerResult;
-use crate::coordinator::sweep::{SweepEngine, SweepSpec};
+use crate::coordinator::sweep::{SweepEngine, SweepOutcome, SweepSpec};
 use crate::cost::area::{ara_area_mm2, speed_area_breakdown, AreaBreakdown};
 use crate::cost::calib;
 use crate::cost::energy::{
     ara_gops_per_watt, gops_per_watt, power_mw, AraEnergyModel, EnergyModel,
 };
+use crate::cost::perf;
 use crate::dataflow::Strategy;
 use crate::error::Result;
 use crate::models::all_models;
+
+/// Index of the SPEED cycle backend in the drivers' sweep specs.
+const SPEED_B: usize = 0;
+/// Index of the Ara baseline backend in the drivers' sweep specs.
+const ARA_B: usize = 1;
 
 /// One Fig. 3 row: layer-wise area efficiency (GOPS/mm²) of GoogLeNet
 /// under each strategy, plus the Ara baseline.
@@ -71,22 +87,37 @@ impl Fig3 {
 fn network_eff(results: &[LayerResult], cfg: &SpeedConfig, area: f64) -> f64 {
     let ops: u64 = results.iter().map(|r| 2 * r.useful_macs).sum();
     let cycles: u64 = results.iter().map(|r| r.cycles).sum();
-    let secs = cycles as f64 / (cfg.freq_mhz * 1e6);
-    ops as f64 / secs / 1e9 / area
+    perf::gops_per_mm2(ops, cycles, cfg.freq_mhz, area)
 }
 
 fn ara_network_eff(results: &[AraLayerResult], ara: &AraConfig) -> f64 {
     let ops: u64 = results.iter().map(|r| 2 * r.useful_macs).sum();
     let cycles: u64 = results.iter().map(|r| r.cycles).sum();
-    let secs = cycles as f64 / (ara.freq_mhz * 1e6);
-    ops as f64 / secs / 1e9 / ara_area_mm2()
+    perf::gops_per_mm2(ops, cycles, ara.freq_mhz, ara_area_mm2())
+}
+
+/// Pull one Ara block out of a sweep outcome as [`AraLayerResult`]s
+/// (the engine's unified stats carry the Ara counters losslessly; the
+/// rebuilt `gops` is bit-identical to the serial model's — see
+/// [`AraLayerResult::from_stats`]).
+fn ara_block(
+    out: &SweepOutcome,
+    ara: &AraConfig,
+    net: usize,
+    prec: usize,
+) -> Vec<AraLayerResult> {
+    out.block(ARA_B, 0, net, prec, 0)
+        .iter()
+        .map(|r| AraLayerResult::from_stats(&r.stats, ara.freq_mhz))
+        .collect()
 }
 
 /// FIG3: layer-wise GoogLeNet @16-bit under FF/CF/Mixed vs Ara.
 ///
-/// SPEED layer sims run on `engine`'s worker pool; reusing one engine
-/// across experiment drivers shares the memoized (shape, precision,
-/// strategy) results between them.
+/// Both the SPEED and the Ara layer sims run on `engine`'s worker pool
+/// (the Ara baseline is the [`AraAnalytic`] backend — no serial tail);
+/// reusing one engine across experiment drivers shares the memoized
+/// (backend, shape, precision, strategy) results between them.
 pub fn run_fig3_with(engine: &mut SweepEngine, cfg: &SpeedConfig) -> Result<Fig3> {
     let ara_cfg = AraConfig::default();
     let area = speed_area_breakdown(cfg).total();
@@ -95,19 +126,20 @@ pub fn run_fig3_with(engine: &mut SweepEngine, cfg: &SpeedConfig) -> Result<Fig3
     let spec = SweepSpec::new(cfg.clone())
         .network(model.name, model.layers.clone())
         .precisions(vec![p])
-        .strategies(vec![Strategy::FeatureFirst, Strategy::ChannelFirst]);
+        .strategies(vec![Strategy::FeatureFirst, Strategy::ChannelFirst])
+        .backend(AraAnalytic::new(ara_cfg.clone()));
     let out = engine.run(&spec)?;
-    let ffs = out.block(0, 0, 0, 0).to_vec();
-    let cfs = out.block(0, 0, 0, 1).to_vec();
+    let ffs = out.block(SPEED_B, 0, 0, 0, 0).to_vec();
+    let cfs = out.block(SPEED_B, 0, 0, 0, 1).to_vec();
+    let aras = ara_block(&out, &ara_cfg, 0, 0);
     let mut rows = Vec::new();
-    let (mut mixeds, mut aras) = (vec![], vec![]);
-    for ((layer, ff), cf) in model.layers.iter().zip(&ffs).zip(&cfs) {
+    let mut mixeds = vec![];
+    for (((layer, ff), cf), ara) in model.layers.iter().zip(&ffs).zip(&cfs).zip(&aras) {
         let (mixed, choice) = if ff.cycles <= cf.cycles {
             (ff.clone(), Strategy::FeatureFirst)
         } else {
             (cf.clone(), Strategy::ChannelFirst)
         };
-        let ara = simulate_layer_ara(&ara_cfg, layer, p)?;
         rows.push(Fig3Row {
             layer: layer.name.clone(),
             k: layer.k,
@@ -118,7 +150,6 @@ pub fn run_fig3_with(engine: &mut SweepEngine, cfg: &SpeedConfig) -> Result<Fig3
             ara: ara.gops / ara_area_mm2(),
         });
         mixeds.push(mixed);
-        aras.push(ara);
     }
     Ok(Fig3 {
         eff_ff: network_eff(&ffs, cfg, area),
@@ -176,14 +207,21 @@ impl Fig4 {
     }
 }
 
+/// The benchmark grid every comparative driver shares: the paper's four
+/// networks × 16/8/4-bit, SPEED (mixed dataflow) + the Ara baseline
+/// backend (whose unsupported 4-bit cells are skipped by the engine).
+fn comparison_suite(cfg: &SpeedConfig, ara_cfg: &AraConfig) -> SweepSpec {
+    SweepSpec::benchmark_suite(cfg).backend(AraAnalytic::new(ara_cfg.clone()))
+}
+
 /// FIG4: average area efficiency across the four benchmarks at
 /// 16/8/4-bit, SPEED (mixed) vs Ara, on `engine`'s worker pool.
-/// FIG4 and TAB1 run the identical `benchmark_suite` grid, so sharing
-/// one engine makes the second driver pure cache.
+/// FIG4 and TAB1 run the identical comparison grid, so sharing one
+/// engine makes the second driver pure cache.
 pub fn run_fig4_with(engine: &mut SweepEngine, cfg: &SpeedConfig) -> Result<Fig4> {
     let ara_cfg = AraConfig::default();
     let area = speed_area_breakdown(cfg).total();
-    let spec = SweepSpec::benchmark_suite(cfg);
+    let spec = comparison_suite(cfg, &ara_cfg);
     let out = engine.run(&spec)?;
     let mut cells = Vec::new();
     for (mi, model) in all_models().iter().enumerate() {
@@ -191,13 +229,9 @@ pub fn run_fig4_with(engine: &mut SweepEngine, cfg: &SpeedConfig) -> Result<Fig4
             .into_iter()
             .enumerate()
         {
-            let speeds = out.block(0, mi, pi, 0);
-            let mut aras = Vec::new();
-            if p != Precision::Int4 {
-                for layer in &model.layers {
-                    aras.push(simulate_layer_ara(&ara_cfg, layer, p)?);
-                }
-            }
+            let speeds = out.block(SPEED_B, 0, mi, pi, 0);
+            // Empty at 4-bit: the engine skips unsupported Ara cells.
+            let aras = ara_block(&out, &ara_cfg, mi, pi);
             cells.push(Fig4Cell {
                 model: model.name.to_string(),
                 precision: p,
@@ -252,13 +286,13 @@ pub struct Table1 {
 /// TAB1: peak throughput / area / energy efficiency over every conv
 /// layer of all four benchmarks (the paper's method: *"peak throughput
 /// results … through evaluating each convolutional layer in all DNN
-/// benchmarks"*).
+/// benchmarks"*). SPEED and Ara peaks both come out of one engine run.
 pub fn run_table1_with(engine: &mut SweepEngine, cfg: &SpeedConfig) -> Result<Table1> {
     let ara_cfg = AraConfig::default();
     let area = speed_area_breakdown(cfg).total();
     let em = EnergyModel::default();
     let aem = AraEnergyModel::default();
-    let spec = SweepSpec::benchmark_suite(cfg);
+    let spec = comparison_suite(cfg, &ara_cfg);
     let out = engine.run(&spec)?;
     let n_models = all_models().len();
     let mut speed = Vec::new();
@@ -266,7 +300,7 @@ pub fn run_table1_with(engine: &mut SweepEngine, cfg: &SpeedConfig) -> Result<Ta
     {
         let mut best: Option<(f64, LayerResult)> = None;
         for mi in 0..n_models {
-            for r in out.block(0, mi, pi, 0) {
+            for r in out.block(SPEED_B, 0, mi, pi, 0) {
                 let g = r.gops(cfg);
                 if best.as_ref().map(|(bg, _)| g > *bg).unwrap_or(true) {
                     best = Some((g, r.clone()));
@@ -284,11 +318,11 @@ pub fn run_table1_with(engine: &mut SweepEngine, cfg: &SpeedConfig) -> Result<Ta
         });
     }
     let mut ara = Vec::new();
-    for p in [Precision::Int16, Precision::Int8] {
+    for (pi, p) in [Precision::Int16, Precision::Int8].into_iter().enumerate() {
         let mut best: Option<(f64, AraLayerResult, String)> = None;
-        for model in all_models() {
-            for layer in &model.layers {
-                let r = simulate_layer_ara(&ara_cfg, layer, p)?;
+        for mi in 0..n_models {
+            let names = out.block(ARA_B, 0, mi, pi, 0);
+            for (r, layer) in ara_block(&out, &ara_cfg, mi, pi).into_iter().zip(names) {
                 if best.as_ref().map(|(bg, _, _)| r.gops > *bg).unwrap_or(true) {
                     best = Some((r.gops, r, layer.name.clone()));
                 }
@@ -296,7 +330,7 @@ pub fn run_table1_with(engine: &mut SweepEngine, cfg: &SpeedConfig) -> Result<Ta
         }
         let (g, r, name) = best.unwrap();
         let e = crate::cost::energy::ara_energy_joules(&aem, ara_cfg.freq_mhz, &r, p);
-        let secs = r.cycles as f64 / (ara_cfg.freq_mhz * 1e6);
+        let secs = perf::seconds(r.cycles, ara_cfg.freq_mhz);
         ara.push(Table1Entry {
             precision: p,
             peak_gops: g,

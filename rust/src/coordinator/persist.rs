@@ -1,0 +1,314 @@
+//! On-disk persistence of the sweep engine's memo table.
+//!
+//! A dependency-free, versioned binary format (the offline crate set has
+//! no serde): fixed-width little-endian fields, a magic tag, a format
+//! version and a trailing FNV-1a checksum over everything before it.
+//! Decoding is strict — wrong magic, unknown version, truncated input,
+//! trailing garbage or a checksum mismatch all reject the whole file
+//! with an error (never a panic), so callers fall back to a cold cache.
+//!
+//! Layout:
+//!
+//! ```text
+//! magic    8 B   b"SPEEDSWC"
+//! version  4 B   u32 LE (currently 1)
+//! count    8 B   u64 LE, number of entries
+//! entries  count × 226 B, sorted by encoded key bytes (deterministic)
+//!   key:   backend_fp u64 | cfg_fp u64 | shape 7×u64 | prec-bits u8 | cf u8
+//!   stats: cycles, macs, useful_macs, dram_read, dram_write, vrf_read,
+//!          vrf_write, sau_busy, acc_busy, dram_busy, sa_fills,
+//!          operand_stall, instr {scalar, config, load, mac, partial,
+//!          store, alu} — 19×u64
+//! footer   8 B   u64 LE FNV-1a checksum of all preceding bytes
+//! ```
+//!
+//! Keys embed the backend/config *fingerprints*, not the structures
+//! themselves: a cache written under one machine configuration simply
+//! never hits under another, and a fingerprint-scheme change (bumping a
+//! backend's `-vN` tag) invalidates old entries instead of aliasing
+//! them.
+
+use std::collections::HashMap;
+
+use super::backend::{fp_bytes, FP_SEED};
+use super::sweep::{CachedSim, SimKey};
+use crate::arch::Precision;
+use crate::core::{InstrMix, SimStats};
+use crate::error::{Error, Result};
+
+const MAGIC: &[u8; 8] = b"SPEEDSWC";
+const VERSION: u32 = 1;
+const KEY_BYTES: usize = 8 + 8 + 7 * 8 + 1 + 1;
+const STATS_BYTES: usize = 19 * 8;
+const ENTRY_BYTES: usize = KEY_BYTES + STATS_BYTES;
+const HEADER_BYTES: usize = 8 + 4 + 8;
+const FOOTER_BYTES: usize = 8;
+
+fn err(msg: impl Into<String>) -> Error {
+    Error::runtime(format!("sweep cache: {}", msg.into()))
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn encode_key(out: &mut Vec<u8>, k: &SimKey) {
+    put_u64(out, k.backend_fp);
+    put_u64(out, k.cfg_fp);
+    for d in k.shape {
+        put_u64(out, d as u64);
+    }
+    out.push(k.prec.bits() as u8);
+    out.push(k.cf as u8);
+}
+
+fn encode_stats(out: &mut Vec<u8>, s: &SimStats) {
+    for v in [
+        s.cycles,
+        s.macs,
+        s.useful_macs,
+        s.dram_read,
+        s.dram_write,
+        s.vrf_read,
+        s.vrf_write,
+        s.sau_busy,
+        s.acc_busy,
+        s.dram_busy,
+        s.sa_fills,
+        s.operand_stall,
+        s.instrs.scalar,
+        s.instrs.config,
+        s.instrs.load,
+        s.instrs.mac,
+        s.instrs.partial,
+        s.instrs.store,
+        s.instrs.alu,
+    ] {
+        put_u64(out, v);
+    }
+}
+
+/// Serialize a memo table. Deterministic: entries are sorted by their
+/// encoded key bytes, so identical caches produce identical files.
+pub(crate) fn encode(cache: &HashMap<SimKey, CachedSim>) -> Vec<u8> {
+    let mut entries: Vec<Vec<u8>> = cache
+        .iter()
+        .map(|(k, v)| {
+            let mut e = Vec::with_capacity(ENTRY_BYTES);
+            encode_key(&mut e, k);
+            encode_stats(&mut e, &v.stats);
+            e
+        })
+        .collect();
+    entries.sort_unstable();
+    let mut out = Vec::with_capacity(
+        HEADER_BYTES + entries.len() * ENTRY_BYTES + FOOTER_BYTES,
+    );
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    put_u64(&mut out, entries.len() as u64);
+    for e in entries {
+        out.extend_from_slice(&e);
+    }
+    let checksum = fp_bytes(FP_SEED, &out);
+    put_u64(&mut out, checksum);
+    out
+}
+
+/// Cursor-style reader over a byte slice.
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.bytes.len() {
+            return Err(err("truncated"));
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes(s.try_into().expect("8 bytes")))
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+}
+
+fn decode_precision(bits: u8) -> Result<Precision> {
+    match bits {
+        4 => Ok(Precision::Int4),
+        8 => Ok(Precision::Int8),
+        16 => Ok(Precision::Int16),
+        b => Err(err(format!("bad precision tag {b}"))),
+    }
+}
+
+/// Parse a serialized memo table. Strict: any structural defect rejects
+/// the whole input with `Err` (callers keep their current cache).
+pub(crate) fn decode(bytes: &[u8]) -> Result<HashMap<SimKey, CachedSim>> {
+    if bytes.len() < HEADER_BYTES + FOOTER_BYTES {
+        return Err(err("too short"));
+    }
+    let (body, footer) = bytes.split_at(bytes.len() - FOOTER_BYTES);
+    let want = u64::from_le_bytes(footer.try_into().expect("8-byte footer"));
+    if fp_bytes(FP_SEED, body) != want {
+        return Err(err("checksum mismatch (corrupted file)"));
+    }
+    let mut r = Reader { bytes: body, pos: 0 };
+    if r.take(8)? != MAGIC {
+        return Err(err("bad magic (not a sweep cache file)"));
+    }
+    let version = u32::from_le_bytes(r.take(4)?.try_into().expect("4 bytes"));
+    if version != VERSION {
+        return Err(err(format!("unsupported version {version} (want {VERSION})")));
+    }
+    let count = r.u64()? as usize;
+    // checked: a crafted/refootered count must not overflow the multiply
+    // (debug panic / release wrap) or feed a bogus HashMap capacity —
+    // decode promises an Err, never a panic.
+    let expect = count
+        .checked_mul(ENTRY_BYTES)
+        .ok_or_else(|| err("entry count overflows"))?;
+    if body.len() - r.pos != expect {
+        return Err(err("length does not match entry count"));
+    }
+    let mut map = HashMap::with_capacity(count);
+    for _ in 0..count {
+        let backend_fp = r.u64()?;
+        let cfg_fp = r.u64()?;
+        let mut shape = [0usize; 7];
+        for d in &mut shape {
+            *d = r.u64()? as usize;
+        }
+        let prec = decode_precision(r.u8()?)?;
+        let cf = match r.u8()? {
+            0 => false,
+            1 => true,
+            b => return Err(err(format!("bad strategy tag {b}"))),
+        };
+        let stats = SimStats {
+            cycles: r.u64()?,
+            macs: r.u64()?,
+            useful_macs: r.u64()?,
+            dram_read: r.u64()?,
+            dram_write: r.u64()?,
+            vrf_read: r.u64()?,
+            vrf_write: r.u64()?,
+            sau_busy: r.u64()?,
+            acc_busy: r.u64()?,
+            dram_busy: r.u64()?,
+            sa_fills: r.u64()?,
+            operand_stall: r.u64()?,
+            instrs: InstrMix {
+                scalar: r.u64()?,
+                config: r.u64()?,
+                load: r.u64()?,
+                mac: r.u64()?,
+                partial: r.u64()?,
+                store: r.u64()?,
+                alu: r.u64()?,
+            },
+        };
+        map.insert(
+            SimKey { backend_fp, cfg_fp, shape, prec, cf },
+            CachedSim { stats },
+        );
+    }
+    Ok(map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> HashMap<SimKey, CachedSim> {
+        let mut m = HashMap::new();
+        for i in 0..5u64 {
+            let stats = SimStats {
+                cycles: 1000 + i,
+                macs: 10 * i,
+                useful_macs: 9 * i,
+                dram_read: i,
+                instrs: InstrMix { mac: i, load: 2 * i, ..Default::default() },
+                ..Default::default()
+            };
+            m.insert(
+                SimKey {
+                    backend_fp: 0xB0 + i,
+                    cfg_fp: 0xC0,
+                    shape: [1, 2, 3, 4, 5, 6, i as usize],
+                    prec: [Precision::Int4, Precision::Int8, Precision::Int16]
+                        [(i % 3) as usize],
+                    cf: i % 2 == 0,
+                },
+                CachedSim { stats },
+            );
+        }
+        m
+    }
+
+    #[test]
+    fn round_trips_bit_exactly() {
+        let m = sample();
+        let bytes = encode(&m);
+        let back = decode(&bytes).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn encoding_is_deterministic() {
+        let m = sample();
+        assert_eq!(encode(&m), encode(&m));
+    }
+
+    #[test]
+    fn empty_cache_round_trips() {
+        let m = HashMap::new();
+        let bytes = encode(&m);
+        assert_eq!(decode(&bytes).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let bytes = encode(&sample());
+        // truncation
+        assert!(decode(&bytes[..bytes.len() - 1]).is_err());
+        assert!(decode(&bytes[..HEADER_BYTES]).is_err());
+        assert!(decode(&[]).is_err());
+        // flipped byte in the body (checksum catches it)
+        let mut bad = bytes.clone();
+        bad[HEADER_BYTES + 3] ^= 0xFF;
+        assert!(decode(&bad).is_err());
+        // bad magic
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(decode(&bad).is_err());
+        // version bump (re-checksum so only the version is wrong)
+        let mut bad = bytes.clone();
+        bad[8] = 0xEE;
+        let n = bad.len() - FOOTER_BYTES;
+        let sum = fp_bytes(FP_SEED, &bad[..n]);
+        bad[n..].copy_from_slice(&sum.to_le_bytes());
+        let e = decode(&bad).unwrap_err().to_string();
+        assert!(e.contains("version"), "{e}");
+        // trailing garbage after a valid file
+        let mut bad = bytes.clone();
+        bad.extend_from_slice(&[0u8; 16]);
+        assert!(decode(&bad).is_err());
+        // absurd entry count with a re-computed checksum: must reject
+        // (checked multiply), not overflow or blow up on with_capacity
+        let mut bad = bytes.clone();
+        bad[12..20].copy_from_slice(&u64::MAX.to_le_bytes());
+        let n = bad.len() - FOOTER_BYTES;
+        let sum = fp_bytes(FP_SEED, &bad[..n]);
+        bad[n..].copy_from_slice(&sum.to_le_bytes());
+        assert!(decode(&bad).is_err());
+    }
+}

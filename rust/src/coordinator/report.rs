@@ -152,12 +152,16 @@ pub fn sweep_markdown(spec: &SweepSpec, out: &SweepOutcome) -> String {
         out.elapsed_secs,
         out.sims_per_sec()
     ));
-    s.push_str("| config | network | precision | strategy | cycles | GOPS |\n");
-    s.push_str("|---|---|---|---|---|---|\n");
+    s.push_str("| backend | config | network | precision | strategy | cycles | GOPS |\n");
+    s.push_str("|---|---|---|---|---|---|---|\n");
     for nr in out.network_results(spec) {
-        let freq = spec.configs[nr.config].freq_mhz;
+        // Rates follow the executing backend's clock (e.g. the Ara
+        // baseline's own frequency), not necessarily the SPEED config's.
+        let backend = &spec.backends[nr.backend];
+        let freq = backend.freq_mhz(&spec.configs[nr.config]);
         s.push_str(&format!(
-            "| {} | {} | {} | {} | {} | {} |\n",
+            "| {} | {} | {} | {} | {} | {} | {} |\n",
+            backend.name(),
             nr.config,
             nr.result.name,
             nr.precision,
@@ -290,8 +294,26 @@ mod tests {
             .threads(1);
         let out = SweepEngine::new().run(&spec).unwrap();
         let md = sweep_markdown(&spec, &out);
-        assert!(md.contains("| 0 | tiny | int8 | Mixed |"), "{md}");
+        assert!(md.contains("| speed | 0 | tiny | int8 | Mixed |"), "{md}");
         assert!(md.contains("sims executed"));
+    }
+
+    #[test]
+    fn sweep_markdown_tags_backends_and_skips_empty_blocks() {
+        use crate::arch::SpeedConfig;
+        use crate::coordinator::backend::AraAnalytic;
+        use crate::coordinator::sweep::{SweepEngine, SweepSpec};
+        use crate::dataflow::ConvLayer;
+        let spec = SweepSpec::new(SpeedConfig::default())
+            .network("tiny", vec![ConvLayer::new("l", 4, 4, 6, 6, 3, 1, 1)])
+            .precisions(vec![Precision::Int8, Precision::Int4])
+            .strategies(vec![Strategy::Mixed])
+            .backend(AraAnalytic::default())
+            .threads(1);
+        let out = SweepEngine::new().run(&spec).unwrap();
+        let md = sweep_markdown(&spec, &out);
+        assert!(md.contains("| ara | 0 | tiny | int8 |"), "{md}");
+        assert!(!md.contains("| ara | 0 | tiny | int4 |"), "skipped cells render no row: {md}");
     }
 
     #[test]

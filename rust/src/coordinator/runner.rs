@@ -107,14 +107,10 @@ impl NetworkResult {
         self.layers.iter().map(|l| 2 * l.useful_macs).sum()
     }
 
-    /// Network-level achieved GOPS (total ops / total time).
+    /// Network-level achieved GOPS (total ops / total time), via the
+    /// shared [`crate::cost::perf`] arithmetic.
     pub fn gops(&self, freq_mhz: f64) -> f64 {
-        let secs = self.total_cycles() as f64 / (freq_mhz * 1e6);
-        if secs == 0.0 {
-            0.0
-        } else {
-            self.total_ops() as f64 / secs / 1e9
-        }
+        crate::cost::perf::gops(self.total_ops(), self.total_cycles(), freq_mhz)
     }
 
     /// Best single-layer GOPS (the paper's "peak throughput … through

@@ -1,22 +1,32 @@
 //! Parallel batch-sweep engine for network-scale simulation.
 //!
-//! The paper's evaluation is a grid — models × layers × precisions ×
-//! dataflow strategies (× machine configurations for the ablations) —
-//! and every cell is an independent timing simulation. This module turns
-//! that grid into a first-class object:
+//! The paper's evaluation is a grid — simulation backends × machine
+//! configurations × models × layers × precisions × dataflow strategies —
+//! and every cell is an independent job. This module turns that grid
+//! into a first-class object:
 //!
-//! - [`SweepSpec`] describes the grid declaratively;
+//! - [`SweepSpec`] describes the grid declaratively, including which
+//!   [`SimBackend`]s execute it ([`SpeedCycle`] by default; add
+//!   [`AraAnalytic`](super::backend::AraAnalytic) for the paper's
+//!   baseline columns or
+//!   [`GoldenFunctional`](super::backend::GoldenFunctional) for batch
+//!   bit-exactness verification);
 //! - [`SweepEngine`] executes it on a pool of `std::thread` scoped
-//!   workers, each holding **pooled processors** (one per machine
-//!   configuration) that are [`crate::core::Processor::reset`] between
-//!   jobs instead of reallocating DRAM/VRF images;
-//! - a **memoizing result cache** keyed by (config fingerprint,
-//!   layer shape, precision, concrete strategy) means every distinct
-//!   simulation runs at most once — `Mixed` best-of jobs share their
-//!   FF/CF runs with pure-strategy jobs, duplicated layer shapes (e.g.
-//!   GoogLeNet's repeated inception branches, VGG's stacked conv pairs)
-//!   are simulated once, and the cache persists across
-//!   [`SweepEngine::run`] calls so repeated sweeps are nearly free;
+//!   workers, each holding **pooled per-(backend, config) state**
+//!   ([`WorkerSlot`]) so processors are
+//!   [`crate::core::Processor::reset`] between jobs instead of
+//!   reallocated;
+//! - a **memoizing result cache** keyed by (backend fingerprint, config
+//!   fingerprint, layer shape, precision, concrete strategy) means every
+//!   distinct simulation runs at most once — `Mixed` best-of jobs share
+//!   their FF/CF runs with pure-strategy jobs, duplicated layer shapes
+//!   (e.g. GoogLeNet's repeated inception branches) are simulated once,
+//!   and the cache persists across [`SweepEngine::run`] calls;
+//! - the cache also persists **across processes**:
+//!   [`SweepEngine::save_cache`] / [`SweepEngine::load_cache`] serialize
+//!   the memo table to a versioned, checksummed, dependency-free binary
+//!   file, so a restarted process skips every previously simulated cell
+//!   (the CLI's `--cache-file`);
 //! - a [`ReportSink`] receives every per-layer [`LayerResult`] in
 //!   deterministic job order once the run completes
 //!   ([`SweepEngine::run_with_sink`]).
@@ -25,19 +35,24 @@
 //! order — a sweep returns bit-identical [`LayerResult`]s for any thread
 //! count, including the serial path (`threads = 1`), which is
 //! integration-tested against the single-layer API in
-//! `tests/sweep_determinism.rs`.
+//! `tests/sweep_determinism.rs` (and against the old serial Ara /
+//! functional paths in `tests/backend_parity.rs`).
 
-use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
-use std::hash::{Hash, Hasher};
+use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::thread;
 use std::time::Instant;
 
+use super::backend::{
+    fp_f64, fp_u64, GoldenFunctional, SimBackend, SpeedCycle, WorkerSlot, FP_SEED,
+};
+use super::persist;
 use super::runner::{LayerResult, NetworkResult};
 use crate::arch::{Precision, SpeedConfig};
-use crate::core::{ExecMode, Processor, SimStats};
-use crate::dataflow::{compile_conv, ConvLayer, Strategy};
+use crate::core::SimStats;
+use crate::dataflow::{ConvLayer, Strategy};
 use crate::error::{Error, Result};
 use crate::models::all_models;
 
@@ -52,12 +67,16 @@ pub struct SweepNetwork {
 
 /// Declarative description of a simulation grid.
 ///
-/// Jobs are enumerated configuration-major:
-/// `for cfg { for network { for precision { for strategy { for layer }}}}`
-/// — that enumeration order *is* the result order of
-/// [`SweepOutcome::results`].
+/// Jobs are enumerated backend-major:
+/// `for backend { for cfg { for network { for precision { for strategy
+/// { for layer }}}}}` — that enumeration order *is* the result order of
+/// [`SweepOutcome::results`]. Cells whose precision a backend does not
+/// support (e.g. Ara at 4-bit) are skipped: their result blocks are
+/// empty rather than errors.
 #[derive(Debug, Clone)]
 pub struct SweepSpec {
+    /// Simulation backends to sweep (comparison axis).
+    pub backends: Vec<Arc<dyn SimBackend>>,
     /// Machine configurations to sweep (ablation axis).
     pub configs: Vec<SpeedConfig>,
     /// Networks to sweep.
@@ -76,9 +95,11 @@ pub struct SweepSpec {
 
 impl SweepSpec {
     /// Empty grid over one machine configuration, with the paper's
-    /// precision order (16/8/4-bit) and the mixed dataflow preselected.
+    /// precision order (16/8/4-bit), the mixed dataflow preselected and
+    /// the SPEED cycle engine as the sole backend.
     pub fn new(cfg: SpeedConfig) -> Self {
         SweepSpec {
+            backends: vec![Arc::new(SpeedCycle)],
             configs: vec![cfg],
             networks: Vec::new(),
             precisions: vec![Precision::Int16, Precision::Int8, Precision::Int4],
@@ -95,6 +116,26 @@ impl SweepSpec {
         for m in all_models() {
             spec = spec.network(m.name, m.layers);
         }
+        spec
+    }
+
+    /// A compact functional-verification grid for the
+    /// [`GoldenFunctional`] backend: small layers covering the shapes
+    /// the bit-exactness tests exercise (3×3, pointwise, stride 2,
+    /// awkward tails) at every precision under both concrete
+    /// strategies. Small on purpose — functional simulation moves real
+    /// data, so full benchmark networks would take hours.
+    pub fn verification_suite(cfg: &SpeedConfig) -> Self {
+        let layers = vec![
+            ConvLayer::new("c3", 8, 16, 10, 10, 3, 1, 1),
+            ConvLayer::new("pw", 16, 8, 6, 6, 1, 1, 0),
+            ConvLayer::new("s2", 8, 8, 11, 11, 3, 2, 1),
+            ConvLayer::new("odd", 5, 9, 9, 9, 3, 1, 1),
+        ];
+        let mut spec = SweepSpec::new(cfg.clone())
+            .network("verify", layers)
+            .strategies(vec![Strategy::FeatureFirst, Strategy::ChannelFirst]);
+        spec.backends = vec![Arc::new(GoldenFunctional::default())];
         spec
     }
 
@@ -134,13 +175,34 @@ impl SweepSpec {
         self
     }
 
-    /// Total number of grid cells (jobs).
+    /// Add a further simulation backend (builder style).
+    pub fn backend(mut self, b: impl SimBackend + 'static) -> Self {
+        self.backends.push(Arc::new(b));
+        self
+    }
+
+    /// Replace the backend axis (builder style).
+    pub fn backends(mut self, bs: Vec<Arc<dyn SimBackend>>) -> Self {
+        self.backends = bs;
+        self
+    }
+
+    /// Total number of grid cells (jobs), excluding cells whose
+    /// precision the backend does not support.
     pub fn n_jobs(&self) -> usize {
         let layers: usize = self.networks.iter().map(|n| n.layers.len()).sum();
-        self.configs.len() * self.precisions.len() * self.strategies.len() * layers
+        let backend_precs: usize = self
+            .backends
+            .iter()
+            .map(|b| self.precisions.iter().filter(|&&p| b.supports_precision(p)).count())
+            .sum();
+        backend_precs * self.configs.len() * self.strategies.len() * layers
     }
 
     fn validate(&self) -> Result<()> {
+        if self.backends.is_empty() {
+            return Err(Error::config("sweep: no simulation backend"));
+        }
         if self.configs.is_empty() {
             return Err(Error::config("sweep: no machine configuration"));
         }
@@ -165,6 +227,8 @@ impl SweepSpec {
 /// Grid coordinates of one job (indices into the [`SweepSpec`] axes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct JobId {
+    /// Index into `spec.backends`.
+    pub backend: usize,
     /// Index into `spec.configs`.
     pub cfg: usize,
     /// Index into `spec.networks`.
@@ -188,7 +252,8 @@ pub trait ReportSink {
     fn on_finish(&mut self, _outcome: &SweepOutcome) {}
 }
 
-/// A [`ReportSink`] rendering one CSV row per layer result.
+/// A [`ReportSink`] rendering one CSV row per layer result (the leading
+/// column is the job's backend index in the spec's backend axis).
 #[derive(Debug)]
 pub struct CsvSink {
     /// Accumulated CSV text (header + one row per job).
@@ -198,7 +263,9 @@ pub struct CsvSink {
 impl CsvSink {
     /// Empty sink with the header row in place.
     pub fn new() -> Self {
-        CsvSink { csv: "network,layer,precision,requested,used,cycles,macs\n".to_string() }
+        CsvSink {
+            csv: "backend,network,layer,precision,requested,used,cycles,macs\n".to_string(),
+        }
     }
 }
 
@@ -209,10 +276,11 @@ impl Default for CsvSink {
 }
 
 impl ReportSink for CsvSink {
-    fn on_layer(&mut self, network: &str, _job: JobId, r: &LayerResult) {
+    fn on_layer(&mut self, network: &str, job: JobId, r: &LayerResult) {
         self.csv.push_str(&format!(
-            "{},{},{},{},{},{},{}\n",
-            network, r.name, r.precision, r.requested, r.used, r.cycles, r.useful_macs
+            "{},{},{},{},{},{},{},{}\n",
+            job.backend, network, r.name, r.precision, r.requested, r.used, r.cycles,
+            r.useful_macs
         ));
     }
 }
@@ -224,7 +292,7 @@ pub struct SweepOutcome {
     pub jobs: Vec<JobId>,
     /// Per-job results, same indexing as [`SweepOutcome::jobs`].
     pub results: Vec<LayerResult>,
-    /// Timing simulations actually executed this run.
+    /// Simulations actually executed this run.
     pub executed_sims: usize,
     /// Simulations served from the engine's persistent cache.
     pub cache_hits: usize,
@@ -235,18 +303,27 @@ pub struct SweepOutcome {
     pub threads_used: usize,
     /// Wall-clock seconds of the whole run.
     pub elapsed_secs: f64,
-    /// Start offset of each (cfg, net, prec, strat) block in `results`.
+    /// Start offset of each (backend, cfg, net, prec, strat) block in
+    /// `results`.
     block_starts: Vec<usize>,
-    /// (n_configs, n_networks, n_precisions, n_strategies).
-    dims: (usize, usize, usize, usize),
+    /// (n_backends, n_configs, n_networks, n_precisions, n_strategies).
+    dims: (usize, usize, usize, usize, usize),
 }
 
 impl SweepOutcome {
-    /// The per-layer results of one (config, network, precision,
-    /// strategy) block, in layer order.
-    pub fn block(&self, cfg: usize, net: usize, prec: usize, strat: usize) -> &[LayerResult] {
-        let (_, n_net, n_prec, n_strat) = self.dims;
-        let bid = ((cfg * n_net + net) * n_prec + prec) * n_strat + strat;
+    /// The per-layer results of one (backend, config, network,
+    /// precision, strategy) block, in layer order. Empty when the
+    /// backend does not support that precision.
+    pub fn block(
+        &self,
+        backend: usize,
+        cfg: usize,
+        net: usize,
+        prec: usize,
+        strat: usize,
+    ) -> &[LayerResult] {
+        let (_, n_cfg, n_net, n_prec, n_strat) = self.dims;
+        let bid = (((backend * n_cfg + cfg) * n_net + net) * n_prec + prec) * n_strat + strat;
         let start = self.block_starts[bid];
         let end =
             self.block_starts.get(bid + 1).copied().unwrap_or(self.results.len());
@@ -262,23 +339,31 @@ impl SweepOutcome {
         }
     }
 
-    /// Aggregate every block into a [`NetworkResult`], tagged with its
-    /// grid coordinates.
+    /// Aggregate every non-empty block into a [`NetworkResult`], tagged
+    /// with its grid coordinates. Blocks skipped for unsupported
+    /// precisions are omitted.
     pub fn network_results(&self, spec: &SweepSpec) -> Vec<NetworkSweepResult> {
         let mut out = Vec::new();
-        for cfg in 0..spec.configs.len() {
-            for (net, network) in spec.networks.iter().enumerate() {
-                for (prec, &p) in spec.precisions.iter().enumerate() {
-                    for (strat, &s) in spec.strategies.iter().enumerate() {
-                        out.push(NetworkSweepResult {
-                            config: cfg,
-                            precision: p,
-                            strategy: s,
-                            result: NetworkResult {
-                                name: network.name.clone(),
-                                layers: self.block(cfg, net, prec, strat).to_vec(),
-                            },
-                        });
+        for backend in 0..spec.backends.len() {
+            for cfg in 0..spec.configs.len() {
+                for (net, network) in spec.networks.iter().enumerate() {
+                    for (prec, &p) in spec.precisions.iter().enumerate() {
+                        for (strat, &s) in spec.strategies.iter().enumerate() {
+                            let layers = self.block(backend, cfg, net, prec, strat);
+                            if layers.is_empty() {
+                                continue;
+                            }
+                            out.push(NetworkSweepResult {
+                                backend,
+                                config: cfg,
+                                precision: p,
+                                strategy: s,
+                                result: NetworkResult {
+                                    name: network.name.clone(),
+                                    layers: layers.to_vec(),
+                                },
+                            });
+                        }
                     }
                 }
             }
@@ -290,6 +375,8 @@ impl SweepOutcome {
 /// One network-level aggregate of a sweep, tagged with its coordinates.
 #[derive(Debug, Clone)]
 pub struct NetworkSweepResult {
+    /// Index into `spec.backends`.
+    pub backend: usize,
     /// Index into `spec.configs`.
     pub config: usize,
     /// Precision of this block.
@@ -300,24 +387,30 @@ pub struct NetworkSweepResult {
     pub result: NetworkResult,
 }
 
-/// Memoization key of one concrete timing simulation.
+/// Memoization key of one concrete simulation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-struct SimKey {
-    cfg_fp: u64,
+pub(crate) struct SimKey {
+    /// [`SimBackend::fingerprint`] of the executing backend.
+    pub(crate) backend_fp: u64,
+    /// [`config_fingerprint`] of the machine configuration.
+    pub(crate) cfg_fp: u64,
     /// (cin, cout, h, w, k, stride, pad) — the layer *shape*; the name
     /// is reporting-only and deliberately excluded.
-    shape: [usize; 7],
-    prec: Precision,
-    /// Concrete strategy: `true` = channel-first, `false` = feature-first.
-    cf: bool,
+    pub(crate) shape: [usize; 7],
+    /// Precision of the cell.
+    pub(crate) prec: Precision,
+    /// Concrete strategy: `true` = channel-first, `false` =
+    /// feature-first (always `false` for strategy-insensitive backends).
+    pub(crate) cf: bool,
 }
 
 fn shape_of(l: &ConvLayer) -> [usize; 7] {
     [l.cin, l.cout, l.h, l.w, l.k, l.stride, l.pad]
 }
 
-/// Stable in-process fingerprint of a machine configuration (f64 fields
-/// hashed by bit pattern).
+/// Stable fingerprint of a machine configuration (f64 fields hashed by
+/// bit pattern, FNV-1a — stable across processes and toolchains, which
+/// the on-disk cache requires).
 ///
 /// Destructures `SpeedConfig` without `..` on purpose: adding a field
 /// to the config then breaks this function at compile time, so a new
@@ -340,35 +433,36 @@ fn config_fingerprint(cfg: &SpeedConfig) -> u64 {
         issue_cycles,
         sa_fill_factor,
     } = cfg;
-    let mut h = DefaultHasher::new();
-    n_lanes.hash(&mut h);
-    vlen_bits.hash(&mut h);
-    n_vregs.hash(&mut h);
-    tile_r.hash(&mut h);
-    tile_c.hash(&mut h);
-    n_acc_banks.hash(&mut h);
-    queue_depth.hash(&mut h);
-    freq_mhz.to_bits().hash(&mut h);
-    dram_bw_bytes_per_cycle.to_bits().hash(&mut h);
-    dram_latency_cycles.hash(&mut h);
-    vrf_banks_per_lane.hash(&mut h);
-    vrf_bank_bytes.hash(&mut h);
-    issue_cycles.hash(&mut h);
-    sa_fill_factor.to_bits().hash(&mut h);
-    h.finish()
+    let mut h = fp_u64(FP_SEED, *n_lanes as u64);
+    h = fp_u64(h, *vlen_bits as u64);
+    h = fp_u64(h, *n_vregs as u64);
+    h = fp_u64(h, *tile_r as u64);
+    h = fp_u64(h, *tile_c as u64);
+    h = fp_u64(h, *n_acc_banks as u64);
+    h = fp_u64(h, *queue_depth as u64);
+    h = fp_f64(h, *freq_mhz);
+    h = fp_f64(h, *dram_bw_bytes_per_cycle);
+    h = fp_u64(h, *dram_latency_cycles);
+    h = fp_u64(h, *vrf_banks_per_lane as u64);
+    h = fp_u64(h, *vrf_bank_bytes as u64);
+    h = fp_u64(h, *issue_cycles);
+    h = fp_f64(h, *sa_fill_factor);
+    h
 }
 
 /// A memoized concrete simulation: the full statistics (which embed
 /// `cycles` and `useful_macs`).
-#[derive(Debug, Clone)]
-struct CachedSim {
-    stats: SimStats,
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) struct CachedSim {
+    /// Statistics of the run.
+    pub(crate) stats: SimStats,
 }
 
 /// One concrete simulation to run: grid coordinates of *a* job that
 /// needs it plus the concrete (non-Mixed) strategy.
 #[derive(Debug, Clone, Copy)]
 struct SimTask {
+    backend: usize,
     cfg: usize,
     net: usize,
     layer: usize,
@@ -388,16 +482,20 @@ enum Plan {
 
 /// The sweep executor. Owns the persistent memoization cache — reuse one
 /// engine across sweeps (e.g. Fig. 3 + Fig. 4 + Table I) and identical
-/// (config, shape, precision, strategy) cells are simulated once ever.
+/// (backend, config, shape, precision, strategy) cells are simulated
+/// once ever; [`SweepEngine::save_cache`] / [`SweepEngine::load_cache`]
+/// extend that guarantee across process restarts.
 #[derive(Debug, Default)]
 pub struct SweepEngine {
     cache: HashMap<SimKey, CachedSim>,
+    threads_override: Option<usize>,
+    memoize_override: Option<bool>,
 }
 
 impl SweepEngine {
     /// Engine with an empty cache.
     pub fn new() -> Self {
-        SweepEngine { cache: HashMap::new() }
+        SweepEngine::default()
     }
 
     /// Number of memoized simulations held.
@@ -410,11 +508,58 @@ impl SweepEngine {
         self.cache.clear();
     }
 
+    /// Override the worker-thread count of every spec this engine runs
+    /// (`None` = respect each spec). Lets a CLI `--threads` flag reach
+    /// the experiment drivers, which build their specs internally.
+    pub fn set_threads_override(&mut self, threads: Option<usize>) {
+        self.threads_override = threads;
+    }
+
+    /// Override memoization for every spec this engine runs (`None` =
+    /// respect each spec).
+    pub fn set_memoize_override(&mut self, memoize: Option<bool>) {
+        self.memoize_override = memoize;
+    }
+
+    /// Serialize the memo table to the versioned binary cache format
+    /// (deterministic: entries are sorted, the footer is a checksum).
+    pub fn serialize_cache(&self) -> Vec<u8> {
+        persist::encode(&self.cache)
+    }
+
+    /// Merge a serialized cache into this engine's memo table.
+    /// Malformed, truncated, corrupted or version-mismatched input is
+    /// rejected with an error and leaves the cache untouched (callers
+    /// fall back to a cold cache). Returns the number of entries loaded.
+    pub fn load_cache_bytes(&mut self, bytes: &[u8]) -> Result<usize> {
+        let loaded = persist::decode(bytes)?;
+        let n = loaded.len();
+        self.cache.extend(loaded);
+        Ok(n)
+    }
+
+    /// Write the memo table to `path` (see
+    /// [`SweepEngine::serialize_cache`]).
+    pub fn save_cache(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, self.serialize_cache())?;
+        Ok(())
+    }
+
+    /// Load and merge a cache file previously written by
+    /// [`SweepEngine::save_cache`]. Same rejection semantics as
+    /// [`SweepEngine::load_cache_bytes`].
+    pub fn load_cache(&mut self, path: impl AsRef<Path>) -> Result<usize> {
+        let bytes = std::fs::read(path)?;
+        self.load_cache_bytes(&bytes)
+    }
+
     /// Execute the grid. Results are bit-identical for any thread count.
     pub fn run(&mut self, spec: &SweepSpec) -> Result<SweepOutcome> {
         spec.validate()?;
         let t0 = Instant::now();
+        let memoize = self.memoize_override.unwrap_or(spec.memoize);
         let cfg_fps: Vec<u64> = spec.configs.iter().map(config_fingerprint).collect();
+        let backend_fps: Vec<u64> = spec.backends.iter().map(|b| b.fingerprint()).collect();
 
         // 1) Enumerate jobs and plan slots. `slot_of` dedupes concrete
         //    sims within the run (and against the persistent cache).
@@ -432,7 +577,7 @@ impl SweepEngine {
                            slots: &mut Vec<SimTask>,
                            prefilled: &mut Vec<Option<CachedSim>>,
                            slot_keys: &mut Vec<Option<SimKey>>| {
-            if !spec.memoize {
+            if !memoize {
                 slots.push(task);
                 prefilled.push(None);
                 slot_keys.push(None);
@@ -440,6 +585,7 @@ impl SweepEngine {
             }
             let layer = &spec.networks[task.net].layers[task.layer];
             let key = SimKey {
+                backend_fp: backend_fps[task.backend],
                 cfg_fp: cfg_fps[task.cfg],
                 shape: shape_of(layer),
                 prec: spec.precisions[task.prec],
@@ -460,44 +606,61 @@ impl SweepEngine {
             slots.len() - 1
         };
 
-        for cfg in 0..spec.configs.len() {
-            for net in 0..spec.networks.len() {
-                for prec in 0..spec.precisions.len() {
-                    for strat in 0..spec.strategies.len() {
-                        block_starts.push(jobs.len());
-                        for layer in 0..spec.networks[net].layers.len() {
-                            jobs.push(JobId { cfg, net, prec, strat, layer });
-                            let task = |cf: bool| SimTask { cfg, net, layer, prec, cf };
-                            let plan = match spec.strategies[strat] {
-                                Strategy::FeatureFirst => Plan::Single(slot_of(
-                                    task(false),
-                                    &mut slots,
-                                    &mut prefilled,
-                                    &mut slot_keys,
-                                )),
-                                Strategy::ChannelFirst => Plan::Single(slot_of(
-                                    task(true),
-                                    &mut slots,
-                                    &mut prefilled,
-                                    &mut slot_keys,
-                                )),
-                                Strategy::Mixed => {
-                                    let f = slot_of(
+        for b in 0..spec.backends.len() {
+            let sensitive = spec.backends[b].strategy_sensitive();
+            for cfg in 0..spec.configs.len() {
+                for net in 0..spec.networks.len() {
+                    for prec in 0..spec.precisions.len() {
+                        let supported =
+                            spec.backends[b].supports_precision(spec.precisions[prec]);
+                        for strat in 0..spec.strategies.len() {
+                            block_starts.push(jobs.len());
+                            if !supported {
+                                continue;
+                            }
+                            for layer in 0..spec.networks[net].layers.len() {
+                                jobs.push(JobId { backend: b, cfg, net, prec, strat, layer });
+                                // Strategy-insensitive backends collapse
+                                // the whole axis onto feature-first.
+                                let task = |cf: bool| SimTask {
+                                    backend: b,
+                                    cfg,
+                                    net,
+                                    layer,
+                                    prec,
+                                    cf: cf && sensitive,
+                                };
+                                let plan = match spec.strategies[strat] {
+                                    Strategy::FeatureFirst => Plan::Single(slot_of(
                                         task(false),
                                         &mut slots,
                                         &mut prefilled,
                                         &mut slot_keys,
-                                    );
-                                    let c = slot_of(
+                                    )),
+                                    Strategy::ChannelFirst => Plan::Single(slot_of(
                                         task(true),
                                         &mut slots,
                                         &mut prefilled,
                                         &mut slot_keys,
-                                    );
-                                    Plan::Best(f, c)
-                                }
-                            };
-                            plans.push(plan);
+                                    )),
+                                    Strategy::Mixed => {
+                                        let f = slot_of(
+                                            task(false),
+                                            &mut slots,
+                                            &mut prefilled,
+                                            &mut slot_keys,
+                                        );
+                                        let c = slot_of(
+                                            task(true),
+                                            &mut slots,
+                                            &mut prefilled,
+                                            &mut slot_keys,
+                                        );
+                                        Plan::Best(f, c)
+                                    }
+                                };
+                                plans.push(plan);
+                            }
                         }
                     }
                 }
@@ -512,18 +675,21 @@ impl SweepEngine {
         let todo: Vec<usize> =
             (0..slots.len()).filter(|&s| prefilled[s].is_none()).collect();
         let executed_sims = todo.len();
-        let requested_threads = if spec.threads == 0 {
+        let spec_threads = self.threads_override.unwrap_or(spec.threads);
+        let requested_threads = if spec_threads == 0 {
             thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
-            spec.threads
+            spec_threads
         };
         let threads = requested_threads.min(todo.len().max(1));
 
         let mut sims: Vec<Option<CachedSim>> = prefilled;
         if !todo.is_empty() {
             let n_cfgs = spec.configs.len();
+            let n_worker_slots = spec.backends.len() * n_cfgs;
             let worker = |claim: &AtomicUsize| -> Vec<(usize, Result<CachedSim>)> {
-                let mut pool: Vec<Option<Processor>> = (0..n_cfgs).map(|_| None).collect();
+                let mut pool: Vec<WorkerSlot> =
+                    (0..n_worker_slots).map(|_| WorkerSlot::default()).collect();
                 let mut local = Vec::new();
                 loop {
                     let i = claim.fetch_add(1, Ordering::Relaxed);
@@ -532,11 +698,15 @@ impl SweepEngine {
                     }
                     let slot = todo[i];
                     let t = slots[slot];
+                    let backend = &spec.backends[t.backend];
                     let cfg = &spec.configs[t.cfg];
                     let layer = &spec.networks[t.net].layers[t.layer];
                     let p = spec.precisions[t.prec];
                     let s = if t.cf { Strategy::ChannelFirst } else { Strategy::FeatureFirst };
-                    local.push((slot, simulate_pooled(&mut pool[t.cfg], cfg, layer, p, s)));
+                    let res = backend
+                        .simulate(&mut pool[t.backend * n_cfgs + t.cfg], cfg, layer, p, s)
+                        .map(|stats| CachedSim { stats });
+                    local.push((slot, res));
                 }
                 local
             };
@@ -571,7 +741,7 @@ impl SweepEngine {
         }
 
         // 3) Feed the persistent cache.
-        if spec.memoize {
+        if memoize {
             for &slot in &todo {
                 if let (Some(key), Some(sim)) = (slot_keys[slot], sims[slot].as_ref()) {
                     self.cache.insert(key, sim.clone());
@@ -618,6 +788,7 @@ impl SweepEngine {
             elapsed_secs: t0.elapsed().as_secs_f64(),
             block_starts,
             dims: (
+                spec.backends.len(),
                 spec.configs.len(),
                 spec.networks.len(),
                 spec.precisions.len(),
@@ -642,27 +813,6 @@ impl SweepEngine {
     }
 }
 
-/// One concrete timing simulation on a pooled processor: identical math
-/// to the serial `run_one` (compile → run → record), but the worker's
-/// processor is `reset` instead of rebuilt.
-fn simulate_pooled(
-    slot: &mut Option<Processor>,
-    cfg: &SpeedConfig,
-    layer: &ConvLayer,
-    p: Precision,
-    strategy: Strategy,
-) -> Result<CachedSim> {
-    let cc = compile_conv(cfg, layer, p, strategy, 0, false)?;
-    match slot.as_mut() {
-        Some(proc) => proc.reset(cc.dram_bytes),
-        None => *slot = Some(Processor::new(cfg.clone(), cc.dram_bytes, ExecMode::Timing)?),
-    }
-    let proc = slot.as_mut().expect("pooled processor present");
-    proc.run(&cc.program)?;
-    proc.set_useful_macs(cc.useful_macs);
-    Ok(CachedSim { stats: proc.stats().clone() })
-}
-
 /// The sweep engine moves jobs and results across worker threads; every
 /// type on that boundary must be `Send + Sync`.
 #[allow(dead_code)]
@@ -670,10 +820,11 @@ fn assert_job_types_are_send_sync() {
     fn ok<T: Send + Sync>() {}
     ok::<SweepSpec>();
     ok::<SweepNetwork>();
+    ok::<Arc<dyn SimBackend>>();
     ok::<SpeedConfig>();
     ok::<ConvLayer>();
     ok::<LayerResult>();
-    ok::<Processor>();
+    ok::<crate::core::Processor>();
     ok::<Error>();
     ok::<SweepOutcome>();
 }
@@ -681,6 +832,7 @@ fn assert_job_types_are_send_sync() {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::backend::AraAnalytic;
     use crate::coordinator::simulate_layer;
 
     fn tiny_layers() -> Vec<ConvLayer> {
@@ -703,16 +855,16 @@ mod tests {
         assert_eq!(spec.n_jobs(), 6);
         let out = SweepEngine::new().run(&spec).unwrap();
         assert_eq!(out.results.len(), 6);
-        assert_eq!(out.block(0, 0, 0, 0).len(), 3);
-        assert_eq!(out.block(0, 0, 0, 1).len(), 3);
-        assert_eq!(out.block(0, 0, 0, 0)[1].name, "pw");
+        assert_eq!(out.block(0, 0, 0, 0, 0).len(), 3);
+        assert_eq!(out.block(0, 0, 0, 0, 1).len(), 3);
+        assert_eq!(out.block(0, 0, 0, 0, 0)[1].name, "pw");
         // FF block: requested == used == FF
-        for r in out.block(0, 0, 0, 0) {
+        for r in out.block(0, 0, 0, 0, 0) {
             assert_eq!(r.requested, Strategy::FeatureFirst);
             assert_eq!(r.used, Strategy::FeatureFirst);
         }
         // Mixed block: requested is Mixed, used is concrete
-        for r in out.block(0, 0, 0, 1) {
+        for r in out.block(0, 0, 0, 0, 1) {
             assert_eq!(r.requested, Strategy::Mixed);
             assert_ne!(r.used, Strategy::Mixed);
         }
@@ -792,14 +944,89 @@ mod tests {
         let mut sink = CsvSink::new();
         let out = SweepEngine::new().run_with_sink(&spec, &mut sink).unwrap();
         assert_eq!(sink.csv.lines().count(), 1 + out.results.len());
-        assert!(sink.csv.contains("t,c3,int8,FF,FF,"));
+        assert!(sink.csv.contains("0,t,c3,int8,FF,FF,"));
     }
 
     #[test]
     fn empty_specs_are_rejected() {
         let cfg = SpeedConfig::default();
         assert!(SweepEngine::new().run(&SweepSpec::new(cfg.clone())).is_err());
-        let spec = SweepSpec::new(cfg).network("t", tiny_layers()).precisions(vec![]);
+        let spec = SweepSpec::new(cfg.clone()).network("t", tiny_layers()).precisions(vec![]);
         assert!(SweepEngine::new().run(&spec).is_err());
+        let spec = SweepSpec::new(cfg).network("t", tiny_layers()).backends(vec![]);
+        assert!(SweepEngine::new().run(&spec).is_err());
+    }
+
+    #[test]
+    fn backend_axis_schedules_unsupported_cells_as_empty_blocks() {
+        let cfg = SpeedConfig::default();
+        let spec = SweepSpec::new(cfg)
+            .network("t", tiny_layers())
+            .precisions(vec![Precision::Int8, Precision::Int4])
+            .strategies(vec![Strategy::FeatureFirst])
+            .backend(AraAnalytic::default())
+            .threads(2);
+        // speed: 2 precisions × 3 layers; ara: int8 only × 3 layers
+        assert_eq!(spec.n_jobs(), 9);
+        let out = SweepEngine::new().run(&spec).unwrap();
+        assert_eq!(out.results.len(), 9);
+        assert_eq!(out.block(0, 0, 0, 0, 0).len(), 3, "speed @8b");
+        assert_eq!(out.block(0, 0, 0, 1, 0).len(), 3, "speed @4b");
+        assert_eq!(out.block(1, 0, 0, 0, 0).len(), 3, "ara @8b");
+        assert!(out.block(1, 0, 0, 1, 0).is_empty(), "ara @4b is skipped");
+        // speed results identical to a speed-only run
+        let solo_spec = SweepSpec::new(SpeedConfig::default())
+            .network("t", tiny_layers())
+            .precisions(vec![Precision::Int8, Precision::Int4])
+            .strategies(vec![Strategy::FeatureFirst])
+            .threads(1);
+        let speed_only = SweepEngine::new().run(&solo_spec).unwrap();
+        assert_eq!(&out.results[..6], &speed_only.results[..]);
+    }
+
+    #[test]
+    fn strategy_insensitive_backend_shares_one_sim_across_axis() {
+        let cfg = SpeedConfig::default();
+        let spec = SweepSpec::new(cfg)
+            .network("t", vec![ConvLayer::new("l", 8, 8, 8, 8, 3, 1, 1)])
+            .precisions(vec![Precision::Int8])
+            .strategies(vec![
+                Strategy::FeatureFirst,
+                Strategy::ChannelFirst,
+                Strategy::Mixed,
+            ])
+            .backends(vec![Arc::new(AraAnalytic::default())])
+            .threads(1);
+        let out = SweepEngine::new().run(&spec).unwrap();
+        // FF, CF and Mixed all resolve to the same single Ara simulation.
+        assert_eq!(out.executed_sims, 1);
+        assert_eq!(out.results.len(), 3);
+        let c = out.results[0].cycles;
+        assert!(out.results.iter().all(|r| r.cycles == c));
+        // Mixed ties resolve to FF by the engine's tie rule.
+        assert_eq!(out.results[2].requested, Strategy::Mixed);
+        assert_eq!(out.results[2].used, Strategy::FeatureFirst);
+    }
+
+    #[test]
+    fn engine_overrides_thread_count_and_memoization() {
+        let cfg = SpeedConfig::default();
+        let spec = SweepSpec::new(cfg)
+            .network("t", tiny_layers())
+            .precisions(vec![Precision::Int8])
+            .strategies(vec![Strategy::FeatureFirst])
+            .threads(4);
+        let mut engine = SweepEngine::new();
+        engine.set_threads_override(Some(1));
+        engine.set_memoize_override(Some(false));
+        let out = engine.run(&spec).unwrap();
+        assert_eq!(out.threads_used, 1);
+        assert_eq!(out.executed_sims, 3, "memoize off: the duplicate shape re-runs");
+        assert_eq!(engine.cached_sims(), 0);
+        engine.set_threads_override(None);
+        engine.set_memoize_override(None);
+        let again = engine.run(&spec).unwrap();
+        assert_eq!(again.executed_sims, 2);
+        assert_eq!(out.results, again.results);
     }
 }

@@ -8,4 +8,4 @@ pub mod vidu;
 pub mod vldu;
 
 pub use processor::{ExecMode, Processor};
-pub use stats::SimStats;
+pub use stats::{InstrMix, SimStats};

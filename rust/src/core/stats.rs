@@ -69,17 +69,13 @@ pub struct SimStats {
 impl SimStats {
     /// Wall-clock seconds at the configured frequency.
     pub fn seconds(&self, freq_mhz: f64) -> f64 {
-        self.cycles as f64 / (freq_mhz * 1e6)
+        crate::cost::perf::seconds(self.cycles, freq_mhz)
     }
 
     /// Achieved GOPS based on *useful* operations (2 ops per MAC),
     /// the paper's throughput metric.
     pub fn gops(&self, freq_mhz: f64) -> f64 {
-        if self.cycles == 0 {
-            return 0.0;
-        }
-        let ops = 2.0 * self.useful_macs as f64;
-        ops / self.seconds(freq_mhz) / 1e9
+        crate::cost::perf::gops(2 * self.useful_macs, self.cycles, freq_mhz)
     }
 
     /// SA-core utilization: useful MACs / (cycles × peak MACs/cycle).

@@ -9,6 +9,7 @@
 pub mod area;
 pub mod calib;
 pub mod energy;
+pub mod perf;
 pub mod roofline;
 
 pub use area::{ara_area_mm2, speed_area_breakdown, AreaBreakdown};

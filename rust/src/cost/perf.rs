@@ -1,0 +1,53 @@
+//! Shared cycles→time→throughput arithmetic.
+//!
+//! Every layer of the stack used to re-derive `cycles → seconds → GOPS`
+//! locally (`SimStats::gops`, `NetworkResult::gops`, the experiment
+//! drivers' network-efficiency helpers, the Ara baseline, the ablation
+//! bench, the CLI `sim` summary). The formulas were identical but
+//! duplicated — a drift hazard for the paper-vs-measured comparisons,
+//! which rely on every consumer agreeing bit-for-bit. This module is the
+//! single source of that arithmetic; everything else delegates here.
+
+/// Wall-clock seconds of `cycles` at `freq_mhz`.
+pub fn seconds(cycles: u64, freq_mhz: f64) -> f64 {
+    cycles as f64 / (freq_mhz * 1e6)
+}
+
+/// Achieved GOPS: `ops` total operations (the paper counts 2 per MAC)
+/// retired over `cycles` at `freq_mhz`. Zero cycles → 0.0 (no work, no
+/// rate — avoids an `inf` leaking into reports).
+pub fn gops(ops: u64, cycles: u64, freq_mhz: f64) -> f64 {
+    if cycles == 0 {
+        return 0.0;
+    }
+    ops as f64 / seconds(cycles, freq_mhz) / 1e9
+}
+
+/// Area efficiency in GOPS/mm² — the paper's Fig. 3/Fig. 4 metric.
+pub fn gops_per_mm2(ops: u64, cycles: u64, freq_mhz: f64, area_mm2: f64) -> f64 {
+    gops(ops, cycles, freq_mhz) / area_mm2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gops_math() {
+        // 2µs at 500 MHz, 64e3 ops → 32 GOPS
+        assert!((gops(64_000, 1000, 500.0) - 32.0).abs() < 1e-9);
+        assert!((seconds(1000, 500.0) - 2e-6).abs() < 1e-18);
+    }
+
+    #[test]
+    fn zero_cycles_is_zero_not_inf() {
+        assert_eq!(gops(1_000_000, 0, 500.0), 0.0);
+        assert_eq!(gops_per_mm2(1_000_000, 0, 500.0, 1.1), 0.0);
+    }
+
+    #[test]
+    fn area_efficiency_divides_area() {
+        let g = gops(64_000, 1000, 500.0);
+        assert!((gops_per_mm2(64_000, 1000, 500.0, 2.0) - g / 2.0).abs() < 1e-12);
+    }
+}

@@ -28,10 +28,14 @@
 //!   (gated behind the `xla` cargo feature; a stub ships by default).
 //! - [`coordinator`] — experiment drivers regenerating every figure/table,
 //!   plus [`coordinator::sweep`]: the **parallel batch-sweep engine** that
-//!   runs whole (models × layers × precisions × strategies × configs)
-//!   grids on a pool of worker threads with pooled, `reset`-reused
-//!   processors and a memoizing result cache — deterministically
-//!   bit-identical to the serial path at any thread count.
+//!   runs whole (backends × configs × models × layers × precisions ×
+//!   strategies) grids on a pool of worker threads with pooled,
+//!   `reset`-reused processors and a memoizing result cache —
+//!   deterministically bit-identical to the serial path at any thread
+//!   count. [`coordinator::backend`] is the pluggable job-execution
+//!   layer (SPEED cycle engine, Ara baseline, golden functional
+//!   verifier), and the memo cache persists across processes via
+//!   `SweepEngine::save_cache`/`load_cache`.
 //!
 //! ## Example: one layer
 //!

@@ -2,8 +2,10 @@
 //! assemble/disassemble programs, verify against the XLA goldens.
 //!
 //! ```text
-//! speed fig3|fig4|fig5|table1|all [--out DIR] [config flags]
-//! speed sweep [--threads N] [--no-cache] [--out DIR] [config flags]
+//! speed fig3|fig4|fig5|table1 [--out DIR] [config flags]
+//! speed all   [--out DIR] [--threads N] [--no-memoize] [--cache-file PATH] [config flags]
+//! speed sweep [--backend speed|ara|golden|all] [--threads N] [--no-memoize]
+//!             [--cache-file PATH] [--out DIR] [config flags]   (see `speed sweep --help`)
 //! speed sim --model NAME [--prec 4|8|16] [--strategy ff|cf|mixed]
 //! speed asm FILE.s            # assemble + hexdump
 //! speed disasm FILE.bin       # disassemble 32-bit words
@@ -14,6 +16,7 @@
 //! ```
 
 use speed::arch::{Precision, SpeedConfig};
+use speed::coordinator::backend::AraAnalytic;
 use speed::coordinator::experiments::{
     headline_checks, run_fig3, run_fig3_with, run_fig4, run_fig4_with, run_fig5, run_table1,
     run_table1_with,
@@ -26,8 +29,76 @@ use speed::dataflow::Strategy;
 use speed::models::model_by_name;
 
 fn usage() -> ! {
-    eprintln!("{}", "usage: speed <fig3|fig4|fig5|table1|all|sweep|sim|asm|disasm|golden-check> [flags]\n  see `speed --help` in README.md for flag reference");
+    eprintln!("{}", "usage: speed <fig3|fig4|fig5|table1|all|sweep|sim|asm|disasm|golden-check> [flags]\n  `speed sweep --help` lists the sweep flags; see README.md for the rest");
     std::process::exit(2);
+}
+
+const SWEEP_HELP: &str = "\
+speed sweep — run a simulation grid on the parallel batch-sweep engine
+
+flags:
+  --backend speed|ara|golden|all
+               which simulation backend(s) to sweep (default: speed)
+                 speed   SPEED cycle engine over the paper's benchmark grid
+                 ara     Ara baseline model over the same grid (8/16-bit;
+                         unsupported 4-bit cells are skipped)
+                 golden  functional bit-exactness verification on a compact
+                         layer grid (every cell is cross-checked against the
+                         host golden model; a mismatch fails the sweep)
+                 all     speed + ara on the benchmark grid, then golden on
+                         the verification grid
+  --threads N   worker threads (0 = one per core, the default)
+  --no-memoize  simulate every grid cell independently: disable the
+                in-run dedup and the persistent result cache
+  --no-cache    deprecated alias of --no-memoize
+  --cache-file PATH
+               load the persistent result cache from PATH before the run
+               (cold start if missing/corrupt) and save it back after, so
+               a rerun skips every previously simulated cell
+  --out DIR     also write the markdown report(s) into DIR
+  --help        this text
+
+config flags: --lanes N --vlen BITS --tile-r N --tile-c N
+              --dram-bw BYTES/CYC --freq MHZ
+
+`speed all` honors --threads, --no-memoize and --cache-file too (the
+experiment drivers run on the same engine).";
+
+/// Load `--cache-file` into the engine if present; a missing file is a
+/// cold start, a malformed one is reported and ignored (cold cache).
+fn load_cache_flag(engine: &mut SweepEngine, path: Option<&str>) {
+    let Some(path) = path else { return };
+    if !std::path::Path::new(path).exists() {
+        eprintln!("cache-file {path}: not found, starting cold");
+        return;
+    }
+    match engine.load_cache(path) {
+        Ok(n) => eprintln!("cache-file {path}: loaded {n} cached simulations"),
+        Err(e) => eprintln!("cache-file {path}: {e}; starting cold"),
+    }
+}
+
+/// Save the engine's cache back to `--cache-file` (best-effort).
+fn save_cache_flag(engine: &SweepEngine, path: Option<&str>) {
+    let Some(path) = path else { return };
+    match engine.save_cache(path) {
+        Ok(()) => eprintln!(
+            "cache-file {path}: saved {} cached simulations",
+            engine.cached_sims()
+        ),
+        Err(e) => eprintln!("cache-file {path}: save failed: {e}"),
+    }
+}
+
+/// Apply the shared engine flags (--threads / --no-memoize) as engine
+/// overrides so they reach specs built inside the drivers too.
+fn apply_engine_flags(engine: &mut SweepEngine, flags: &Flags) {
+    if let Some(n) = flags.num("threads") {
+        engine.set_threads_override(Some(n));
+    }
+    if flags.get("no-memoize").is_some() || flags.get("no-cache").is_some() {
+        engine.set_memoize_override(Some(false));
+    }
 }
 
 /// Minimal flag parser: `--key value` pairs after the subcommand.
@@ -158,8 +229,11 @@ fn main() -> speed::Result<()> {
         }
         "all" => {
             // One engine across all drivers: Fig. 4 and Table I share the
-            // same benchmark grid, so the second driver is pure cache.
+            // same benchmark grid, so the second driver is pure cache —
+            // and with --cache-file, a rerun of the whole process is too.
             let mut engine = SweepEngine::new();
+            apply_engine_flags(&mut engine, &flags);
+            load_cache_flag(&mut engine, flags.get("cache-file"));
             let f3 = run_fig3_with(&mut engine, &cfg)?;
             let f4 = run_fig4_with(&mut engine, &cfg)?;
             let f5 = run_fig5(&cfg);
@@ -178,22 +252,48 @@ fn main() -> speed::Result<()> {
             write_out(out, "fig4.csv", &report::fig4_csv(&f4));
             write_out(out, "fig5.md", &report::fig5_markdown(&f5));
             write_out(out, "table1.md", &report::table1_markdown(&t1));
+            save_cache_flag(&engine, flags.get("cache-file"));
         }
         "sweep" => {
-            // Parallel batch sweep of the paper's full benchmark grid.
-            // flags: --threads N (0 = per core), --no-cache
-            let mut spec = SweepSpec::benchmark_suite(&cfg);
-            if let Some(n) = flags.num("threads") {
-                spec.threads = n;
+            // Parallel batch sweep over the selected backend axis; see
+            // `speed sweep --help` for the flag reference.
+            if flags.get("help").is_some() {
+                println!("{SWEEP_HELP}");
+                return Ok(());
             }
-            if flags.get("no-cache").is_some() {
-                spec.memoize = false;
-            }
+            let backend_sel = flags.get("backend").unwrap_or("speed");
+            let specs: Vec<(&str, SweepSpec)> = match backend_sel {
+                "speed" => vec![("sweep", SweepSpec::benchmark_suite(&cfg))],
+                "ara" => vec![(
+                    "sweep",
+                    SweepSpec::benchmark_suite(&cfg)
+                        .backends(vec![std::sync::Arc::new(AraAnalytic::default())]),
+                )],
+                "golden" => vec![("verify", SweepSpec::verification_suite(&cfg))],
+                "all" => vec![
+                    (
+                        "sweep",
+                        SweepSpec::benchmark_suite(&cfg).backend(AraAnalytic::default()),
+                    ),
+                    ("verify", SweepSpec::verification_suite(&cfg)),
+                ],
+                other => {
+                    eprintln!("bad backend `{other}` (speed/ara/golden/all)");
+                    std::process::exit(2);
+                }
+            };
             let mut engine = SweepEngine::new();
-            let out_come = engine.run(&spec)?;
-            let md = report::sweep_markdown(&spec, &out_come);
-            println!("{md}");
-            write_out(out, "sweep.md", &md);
+            // Engine overrides take precedence over spec fields, so the
+            // same path serves `sweep` and `all`.
+            apply_engine_flags(&mut engine, &flags);
+            load_cache_flag(&mut engine, flags.get("cache-file"));
+            for (name, spec) in &specs {
+                let out_come = engine.run(spec)?;
+                let md = report::sweep_markdown(spec, &out_come);
+                println!("{md}");
+                write_out(out, &format!("{name}.md"), &md);
+            }
+            save_cache_flag(&engine, flags.get("cache-file"));
         }
         "sim" => {
             let name = flags.get("model").unwrap_or("ResNet18");
@@ -225,11 +325,10 @@ fn main() -> speed::Result<()> {
                 cyc += r.cycles;
                 ops += 2 * r.useful_macs;
             }
-            let secs = cyc as f64 / (cfg.freq_mhz * 1e6);
+            let gops = speed::cost::perf::gops(ops, cyc, cfg.freq_mhz);
             println!(
-                "\n{name} @{p} [{strat}]: {cyc} cycles, {:.2} GOPS, {:.2} GOPS/mm2",
-                ops as f64 / secs / 1e9,
-                ops as f64 / secs / 1e9 / area
+                "\n{name} @{p} [{strat}]: {cyc} cycles, {gops:.2} GOPS, {:.2} GOPS/mm2",
+                gops / area
             );
         }
         "asm" => {

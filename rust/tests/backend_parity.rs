@@ -1,0 +1,202 @@
+//! Backend-parity contract: routing the Ara baseline and the golden
+//! functional checks through the sweep engine's backend axis must
+//! reproduce the old serial compositions **bit-identically**.
+//!
+//! - `AraAnalytic` engine cells == `simulate_layer_ara` (the serial
+//!   model), layer by layer, over the paper's full benchmark grid;
+//! - the Fig. 3 driver's Ara column == the pre-refactor serial-tail
+//!   arithmetic, recomposed here from first principles;
+//! - `GoldenFunctional` batch verification == one-off
+//!   `run_functional_conv` calls on the same operands.
+
+use std::sync::Arc;
+
+use speed::arch::{AraConfig, Precision, SpeedConfig};
+use speed::baseline::{simulate_layer_ara, AraLayerResult};
+use speed::coordinator::backend::{AraAnalytic, GoldenFunctional, WorkerSlot};
+use speed::coordinator::experiments::{run_fig3, run_fig4_with, run_table1_with};
+use speed::coordinator::run_functional_conv;
+use speed::coordinator::sweep::{SweepEngine, SweepSpec};
+use speed::cost::ara_area_mm2;
+use speed::dataflow::{ConvLayer, Strategy};
+use speed::models::all_models;
+
+/// The pre-refactor serial network-efficiency arithmetic, verbatim.
+fn serial_ara_network_eff(results: &[AraLayerResult], ara: &AraConfig) -> f64 {
+    let ops: u64 = results.iter().map(|r| 2 * r.useful_macs).sum();
+    let cycles: u64 = results.iter().map(|r| r.cycles).sum();
+    let secs = cycles as f64 / (ara.freq_mhz * 1e6);
+    ops as f64 / secs / 1e9 / ara_area_mm2()
+}
+
+#[test]
+fn ara_engine_cells_match_serial_model_over_benchmark_grid() {
+    // The Ara model is analytic, so the whole four-network grid is
+    // cheap; run it through the engine (Ara backend only) and compare
+    // every cell against the direct serial call.
+    let cfg = SpeedConfig::default();
+    let ara_cfg = AraConfig::default();
+    let spec = SweepSpec::benchmark_suite(&cfg)
+        .backends(vec![Arc::new(AraAnalytic::new(ara_cfg.clone()))]);
+    let out = SweepEngine::new().run(&spec).unwrap();
+    for (mi, model) in all_models().iter().enumerate() {
+        for (pi, p) in [Precision::Int16, Precision::Int8, Precision::Int4]
+            .into_iter()
+            .enumerate()
+        {
+            let block = out.block(0, 0, mi, pi, 0);
+            if p == Precision::Int4 {
+                assert!(block.is_empty(), "{}: Ara has no 4-bit cells", model.name);
+                continue;
+            }
+            assert_eq!(block.len(), model.layers.len(), "{} @{p}", model.name);
+            for (r, layer) in block.iter().zip(&model.layers) {
+                let want = simulate_layer_ara(&ara_cfg, layer, p).unwrap();
+                assert_eq!(r.cycles, want.cycles, "{layer} @{p}");
+                assert_eq!(r.useful_macs, want.useful_macs, "{layer} @{p}");
+                assert_eq!(r.stats, want.to_stats(), "{layer} @{p}");
+                let back = AraLayerResult::from_stats(&r.stats, ara_cfg.freq_mhz);
+                assert_eq!(
+                    back.gops.to_bits(),
+                    want.gops.to_bits(),
+                    "{layer} @{p}: GOPS must be bit-identical"
+                );
+                assert_eq!(back.v_instrs, want.v_instrs, "{layer} @{p}");
+                assert_eq!(back.dram_read, want.dram_read, "{layer} @{p}");
+                assert_eq!(back.dram_write, want.dram_write, "{layer} @{p}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fig3_ara_column_matches_pre_refactor_serial_tail() {
+    // run_fig3 now schedules Ara through the engine; its Ara column and
+    // network-level efficiency must equal the old serial-tail
+    // arithmetic exactly, bit for bit.
+    let cfg = SpeedConfig::default();
+    let f3 = run_fig3(&cfg).unwrap();
+    let ara_cfg = AraConfig::default();
+    let model = all_models().into_iter().find(|m| m.name == "GoogLeNet").unwrap();
+    assert_eq!(f3.rows.len(), model.layers.len());
+    let serial: Vec<AraLayerResult> = model
+        .layers
+        .iter()
+        .map(|l| simulate_layer_ara(&ara_cfg, l, Precision::Int16).unwrap())
+        .collect();
+    for (row, want) in f3.rows.iter().zip(&serial) {
+        let old = want.gops / ara_area_mm2();
+        assert_eq!(row.ara.to_bits(), old.to_bits(), "layer {}", row.layer);
+    }
+    let old_eff = serial_ara_network_eff(&serial, &ara_cfg);
+    assert_eq!(f3.eff_ara.to_bits(), old_eff.to_bits(), "network-level Ara efficiency");
+    // The mixed-over-ara headline derives from it unchanged.
+    assert_eq!(
+        f3.mixed_over_ara().to_bits(),
+        (f3.eff_mixed / old_eff).to_bits()
+    );
+}
+
+#[test]
+#[ignore = "full benchmark grid (speed + ara backends) — minutes in a debug build; run with --ignored"]
+fn fig4_and_table1_ara_columns_match_pre_refactor_serial_tails() {
+    let cfg = SpeedConfig::default();
+    let ara_cfg = AraConfig::default();
+    let mut engine = SweepEngine::new();
+    let f4 = run_fig4_with(&mut engine, &cfg).unwrap();
+    let t1 = run_table1_with(&mut engine, &cfg).unwrap();
+    // Fig. 4: per (model, precision) Ara network efficiency.
+    for model in all_models() {
+        for p in [Precision::Int16, Precision::Int8, Precision::Int4] {
+            let cell = f4
+                .cells
+                .iter()
+                .find(|c| c.model == model.name && c.precision == p)
+                .unwrap();
+            if p == Precision::Int4 {
+                assert!(cell.ara_eff.is_none());
+                continue;
+            }
+            let serial: Vec<AraLayerResult> = model
+                .layers
+                .iter()
+                .map(|l| simulate_layer_ara(&ara_cfg, l, p).unwrap())
+                .collect();
+            let old = serial_ara_network_eff(&serial, &ara_cfg);
+            assert_eq!(cell.ara_eff.unwrap().to_bits(), old.to_bits(), "{} @{p}", model.name);
+        }
+    }
+    // Table I: the serial peak search, verbatim.
+    for (i, p) in [Precision::Int16, Precision::Int8].into_iter().enumerate() {
+        let mut best: Option<(f64, String)> = None;
+        for model in all_models() {
+            for layer in &model.layers {
+                let r = simulate_layer_ara(&ara_cfg, layer, p).unwrap();
+                if best.as_ref().map(|(bg, _)| r.gops > *bg).unwrap_or(true) {
+                    best = Some((r.gops, layer.name.clone()));
+                }
+            }
+        }
+        let (g, name) = best.unwrap();
+        assert_eq!(t1.ara[i].peak_gops.to_bits(), g.to_bits(), "@{p}");
+        assert_eq!(t1.ara[i].peak_layer, name, "@{p}");
+    }
+}
+
+fn verification_layers() -> Vec<ConvLayer> {
+    vec![
+        ConvLayer::new("c3", 8, 16, 10, 10, 3, 1, 1),
+        ConvLayer::new("pw", 16, 8, 6, 6, 1, 1, 0),
+        ConvLayer::new("s2", 8, 8, 11, 11, 3, 2, 1),
+        ConvLayer::new("odd", 5, 9, 9, 9, 3, 1, 1),
+    ]
+}
+
+#[test]
+fn golden_backend_agrees_with_run_functional_conv() {
+    // Cell by cell: the batch verifier's output tensor equals a direct
+    // run_functional_conv call on the same deterministic operands.
+    let cfg = SpeedConfig::default();
+    let backend = GoldenFunctional::default();
+    let mut slot = WorkerSlot::default();
+    for layer in verification_layers() {
+        for p in [Precision::Int8, Precision::Int16] {
+            for s in [Strategy::FeatureFirst, Strategy::ChannelFirst] {
+                let (input, weights) = backend.operands(&layer, p);
+                let want = run_functional_conv(
+                    &cfg,
+                    &layer,
+                    p,
+                    s,
+                    &input,
+                    &weights,
+                    backend.shift,
+                    backend.relu,
+                )
+                .unwrap();
+                let (got, stats) =
+                    backend.verify_layer(&mut slot, &cfg, &layer, p, s).unwrap();
+                assert_eq!(got.shape, want.shape, "{layer} @{p} [{s}]");
+                assert_eq!(got.data, want.data, "{layer} @{p} [{s}]");
+                assert!(stats.cycles > 0);
+            }
+        }
+    }
+}
+
+#[test]
+fn verification_suite_batches_golden_checks_through_engine() {
+    let cfg = SpeedConfig::default();
+    let spec = SweepSpec::verification_suite(&cfg).threads(2);
+    let mut engine = SweepEngine::new();
+    let out = engine.run(&spec).unwrap();
+    // 4 distinct shapes × 3 precisions × 2 concrete strategies.
+    assert_eq!(out.results.len(), spec.n_jobs());
+    assert_eq!(out.executed_sims, 24);
+    assert!(out.results.iter().all(|r| r.cycles > 0));
+    // A verified cell is an ordinary memoized result: the warm rerun is
+    // pure cache and bit-identical.
+    let warm = engine.run(&spec).unwrap();
+    assert_eq!(warm.executed_sims, 0);
+    assert_eq!(warm.results, out.results);
+}

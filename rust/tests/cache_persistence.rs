@@ -1,0 +1,132 @@
+//! Cross-process cache persistence contract: save → reload → rerun
+//! performs **zero** new simulations and reproduces the `SweepOutcome`
+//! bit-identically; malformed cache files are rejected gracefully (an
+//! error, never a panic) and leave the engine on a cold cache.
+
+use speed::arch::{Precision, SpeedConfig};
+use speed::coordinator::backend::AraAnalytic;
+use speed::coordinator::sweep::{SweepEngine, SweepSpec};
+use speed::dataflow::{ConvLayer, Strategy};
+
+fn small_spec(cfg: &SpeedConfig) -> SweepSpec {
+    SweepSpec::new(cfg.clone())
+        .network(
+            "t",
+            vec![
+                ConvLayer::new("c3", 8, 8, 8, 8, 3, 1, 1),
+                ConvLayer::new("pw", 8, 12, 6, 6, 1, 1, 0),
+                ConvLayer::new("c3_dup", 8, 8, 8, 8, 3, 1, 1),
+            ],
+        )
+        .precisions(vec![Precision::Int8, Precision::Int4])
+        .strategies(vec![Strategy::Mixed])
+        .backend(AraAnalytic::default())
+        .threads(2)
+}
+
+/// Unique scratch path per test (the test binary may run tests in
+/// parallel threads).
+fn scratch(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("speed_cache_{}_{}.swc", tag, std::process::id()))
+}
+
+#[test]
+fn save_reload_rerun_is_pure_cache_and_bit_identical() {
+    let cfg = SpeedConfig::default();
+    let spec = small_spec(&cfg);
+    let mut warm_engine = SweepEngine::new();
+    let cold = warm_engine.run(&spec).unwrap();
+    assert!(cold.executed_sims > 0);
+    assert_eq!(cold.cache_hits, 0);
+
+    let path = scratch("roundtrip");
+    warm_engine.save_cache(&path).unwrap();
+
+    // A brand-new engine (≈ a restarted process) loads the file…
+    let mut fresh = SweepEngine::new();
+    assert_eq!(fresh.cached_sims(), 0);
+    let loaded = fresh.load_cache(&path).unwrap();
+    assert_eq!(loaded, warm_engine.cached_sims());
+    assert_eq!(fresh.cached_sims(), warm_engine.cached_sims());
+
+    // …and reruns the grid without a single new simulation.
+    let replay = fresh.run(&spec).unwrap();
+    assert_eq!(replay.executed_sims, 0, "every cell must come from the loaded cache");
+    assert_eq!(replay.cache_hits, cold.executed_sims);
+    assert_eq!(replay.results, cold.results, "replay must be bit-identical");
+    assert_eq!(replay.jobs, cold.jobs);
+
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn serialized_bytes_round_trip_and_are_deterministic() {
+    let cfg = SpeedConfig::default();
+    let mut engine = SweepEngine::new();
+    engine.run(&small_spec(&cfg)).unwrap();
+    let a = engine.serialize_cache();
+    let b = engine.serialize_cache();
+    assert_eq!(a, b, "serialization must be deterministic");
+    let mut other = SweepEngine::new();
+    assert_eq!(other.load_cache_bytes(&a).unwrap(), engine.cached_sims());
+    assert_eq!(other.serialize_cache(), a, "decode→encode must be the identity");
+}
+
+#[test]
+fn corrupted_and_mismatched_caches_are_rejected_without_panic() {
+    let cfg = SpeedConfig::default();
+    let spec = small_spec(&cfg);
+    let mut engine = SweepEngine::new();
+    engine.run(&spec).unwrap();
+    let good = engine.serialize_cache();
+
+    let mut victim = SweepEngine::new();
+    // Garbage, empty, truncated, bit-flipped and version-bumped inputs
+    // must all error out and leave the cache untouched (cold).
+    assert!(victim.load_cache_bytes(b"definitely not a cache file").is_err());
+    assert!(victim.load_cache_bytes(&[]).is_err());
+    assert!(victim.load_cache_bytes(&good[..good.len() / 2]).is_err());
+    let mut flipped = good.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0xA5;
+    assert!(victim.load_cache_bytes(&flipped).is_err());
+    let mut versioned = good.clone();
+    versioned[8] = 0x7F; // version field, straight after the 8-byte magic
+    assert!(victim.load_cache_bytes(&versioned).is_err());
+    assert_eq!(victim.cached_sims(), 0, "failed loads must not pollute the cache");
+
+    // A missing file is an error too (callers fall back to cold).
+    assert!(victim.load_cache(scratch("missing")).is_err());
+
+    // The cold engine still runs the grid fine afterwards.
+    let out = victim.run(&spec).unwrap();
+    assert!(out.executed_sims > 0);
+}
+
+#[test]
+fn cache_files_merge_and_ignore_foreign_configurations() {
+    // Entries are keyed by (backend, config) fingerprints: a cache
+    // saved under one machine configuration never hits under another.
+    let base = SpeedConfig::default();
+    let spec_base = small_spec(&base);
+    let mut engine = SweepEngine::new();
+    let cold = engine.run(&spec_base).unwrap();
+    let bytes = engine.serialize_cache();
+
+    let other_cfg = SpeedConfig { tile_r: 8, tile_c: 8, ..Default::default() };
+    let mut other = SweepEngine::new();
+    other.load_cache_bytes(&bytes).unwrap();
+    let foreign_spec = SweepSpec::new(other_cfg)
+        .network("t", vec![ConvLayer::new("c3", 8, 8, 8, 8, 3, 1, 1)])
+        .precisions(vec![Precision::Int8])
+        .strategies(vec![Strategy::FeatureFirst])
+        .threads(1);
+    let foreign = other.run(&foreign_spec).unwrap();
+    assert_eq!(foreign.cache_hits, 0, "foreign config must not hit the loaded cache");
+    assert!(foreign.executed_sims > 0);
+    // …while the original grid still replays purely from cache, plus
+    // the foreign entries now coexist in the merged table.
+    let replay = other.run(&spec_base).unwrap();
+    assert_eq!(replay.executed_sims, 0);
+    assert_eq!(replay.results, cold.results);
+}

@@ -22,8 +22,8 @@ const TINYCNN: [Spec; 4] = [
 
 #[test]
 fn tinycnn_simulator_matches_xla_golden_bit_exactly() {
-    if !cfg!(feature = "xla") {
-        eprintln!("SKIP: built without the `xla` feature — PJRT runtime is a stub");
+    if !cfg!(all(feature = "xla", xla_vendored)) {
+        eprintln!("SKIP: no XLA client in this build — PJRT runtime is a stub");
         return;
     }
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");

@@ -16,8 +16,8 @@ use speed::runtime::{PjrtRuntime, GEMM_K, GEMM_M, GEMM_N};
 use speed::testutil::Prng;
 
 fn artifact_dir() -> Option<std::path::PathBuf> {
-    if !cfg!(feature = "xla") {
-        eprintln!("SKIP: built without the `xla` feature — PJRT runtime is a stub");
+    if !cfg!(all(feature = "xla", xla_vendored)) {
+        eprintln!("SKIP: no XLA client in this build — PJRT runtime is a stub");
         return None;
     }
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");

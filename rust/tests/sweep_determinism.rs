@@ -82,7 +82,7 @@ fn thread_count_never_changes_the_outcome() {
     for threads in [2usize, 4] {
         let out = SweepEngine::new().run(&spec_for(threads)).unwrap();
         assert_eq!(out.results, base.results, "{threads} threads");
-        assert_eq!(out.block(0, 0, 0, 0), base.block(0, 0, 0, 0));
+        assert_eq!(out.block(0, 0, 0, 0, 0), base.block(0, 0, 0, 0, 0));
     }
 }
 
