@@ -10,6 +10,12 @@
 //! - encoder/decoder: word round-trips/second.
 //!
 //! Run: `cargo bench --bench perf_hotpath`
+//!
+//! Smoke mode (`SPEED_BENCH_SMOKE=1`): reduced iterations, a small
+//! layer and a tiny sweep grid — numbers are meaningless, but every
+//! hot path still compiles, runs and passes its bit-identical
+//! cross-checks. CI runs this on every PR so a hot-path regression is
+//! at least compile-and-run checked without paying benchmark time.
 
 use speed::arch::{Precision, SpeedConfig};
 use speed::coordinator::sweep::{SweepEngine, SweepSpec};
@@ -34,16 +40,30 @@ fn time<F: FnMut()>(label: &str, iters: u32, unit_count: f64, unit: &str, mut f:
     rate
 }
 
+/// `SPEED_BENCH_SMOKE=1` switches to the reduced-iteration smoke mode.
+fn smoke_mode() -> bool {
+    std::env::var("SPEED_BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
 fn main() {
+    let smoke = smoke_mode();
     let cfg = SpeedConfig::default();
-    let layer = ConvLayer::new("r3", 64, 64, 56, 56, 3, 1, 1);
+    let layer = if smoke {
+        ConvLayer::new("r3", 16, 16, 14, 14, 3, 1, 1)
+    } else {
+        ConvLayer::new("r3", 64, 64, 56, 56, 3, 1, 1)
+    };
+    let reps = if smoke { 1 } else { 3 };
+    if smoke {
+        println!("[smoke mode: reduced iterations, tiny grid — timings are not benchmarks]");
+    }
     println!("{:<44} {:>12} {:>18}", "hot path", "time", "rate");
 
     // codegen
     let cc = compile_conv(&cfg, &layer, Precision::Int8, Strategy::FeatureFirst, 6, false)
         .expect("compile");
     let n_instr = cc.program.len() as f64;
-    time("compile conv3x3@8b (FF)", 3, n_instr, "instr", || {
+    time("compile conv3x3@8b (FF)", reps, n_instr, "instr", || {
         let _ =
             compile_conv(&cfg, &layer, Precision::Int8, Strategy::FeatureFirst, 6, false)
                 .unwrap();
@@ -53,7 +73,7 @@ fn main() {
     let r = simulate_layer(&cfg, &layer, Precision::Int8, Strategy::FeatureFirst).unwrap();
     time(
         "simulate conv3x3@8b FF (timing mode)",
-        3,
+        reps,
         r.stats.instrs.total() as f64,
         "sim-instr",
         || {
@@ -69,7 +89,7 @@ fn main() {
     let weights = Tensor::random(&[16, 16, 3, 3], Precision::Int8, &mut rng);
     time(
         "functional conv (bit-exact nibble MACs)",
-        3,
+        reps,
         small.macs() as f64,
         "MAC",
         || {
@@ -88,8 +108,9 @@ fn main() {
     );
 
     // ISA encode/decode round-trip
-    let words: Vec<u32> = cc.program.words().iter().copied().take(100_000).collect();
-    time("decode 100k words", 10, words.len() as f64, "word", || {
+    let n_words = if smoke { 10_000 } else { 100_000 };
+    let words: Vec<u32> = cc.program.words().iter().copied().take(n_words).collect();
+    time("decode words", if smoke { 1 } else { 10 }, words.len() as f64, "word", || {
         let mut acc = 0u32;
         for &w in &words {
             if let Ok(i) = decode(w) {
@@ -100,26 +121,43 @@ fn main() {
     });
     let _ = Instr::is_vector;
 
-    sweep_throughput(&cfg);
+    sweep_throughput(&cfg, smoke);
 }
 
 /// §Perf: batch-sweep engine throughput on the paper's four-network grid
 /// — serial single-layer API vs the pooled/parallel/memoizing engine,
-/// with a bit-identical cross-check between the two paths.
-fn sweep_throughput(cfg: &SpeedConfig) {
-    println!("\n== sweep engine: network-scale grid (4 nets x 16/8/4-bit, Mixed) ==");
-    let models = all_models();
-    let precs = [Precision::Int16, Precision::Int8, Precision::Int4];
-    let n_jobs: usize = models.iter().map(|m| m.layers.len()).sum::<usize>() * precs.len();
+/// with a bit-identical cross-check between the two paths. Smoke mode
+/// swaps in one tiny network at int8 so the whole comparison (and its
+/// cross-checks) runs in seconds.
+fn sweep_throughput(cfg: &SpeedConfig, smoke: bool) {
+    let (nets, precs): (Vec<(String, Vec<ConvLayer>)>, Vec<Precision>) = if smoke {
+        let layers = vec![
+            ConvLayer::new("s1", 32, 16, 14, 14, 1, 1, 0),
+            ConvLayer::new("c3", 16, 16, 14, 14, 3, 1, 1),
+            ConvLayer::new("c3_dup", 16, 16, 14, 14, 3, 1, 1),
+        ];
+        (vec![("smoke".to_string(), layers)], vec![Precision::Int8])
+    } else {
+        (
+            all_models().into_iter().map(|m| (m.name.to_string(), m.layers)).collect(),
+            vec![Precision::Int16, Precision::Int8, Precision::Int4],
+        )
+    };
+    println!(
+        "\n== sweep engine: network-scale grid ({} net(s) x {} precision(s), Mixed) ==",
+        nets.len(),
+        precs.len()
+    );
+    let n_jobs: usize = nets.iter().map(|(_, ls)| ls.len()).sum::<usize>() * precs.len();
     // every Mixed job is an FF + a CF timing simulation
     let n_layer_sims = (2 * n_jobs) as f64;
 
     // 1) serial baseline: the single-layer API, fresh processor per sim
     let t0 = Instant::now();
     let mut serial = Vec::with_capacity(n_jobs);
-    for m in &models {
+    for (_, layers) in &nets {
         for &p in &precs {
-            for l in &m.layers {
+            for l in layers {
                 serial.push(simulate_layer(cfg, l, p, Strategy::Mixed).expect("serial"));
             }
         }
@@ -131,7 +169,11 @@ fn sweep_throughput(cfg: &SpeedConfig) {
     );
 
     // 2) engine, no memoization: pooled processors + worker threads only
-    let spec_nocache = SweepSpec::benchmark_suite(cfg).memoize(false);
+    let mut base = SweepSpec::new(cfg.clone()).precisions(precs.clone());
+    for (name, layers) in &nets {
+        base = base.network(name.clone(), layers.clone());
+    }
+    let spec_nocache = base.clone().memoize(false);
     let mut engine = SweepEngine::new();
     let t1 = Instant::now();
     let out_nocache = engine.run(&spec_nocache).expect("sweep");
@@ -144,7 +186,7 @@ fn sweep_throughput(cfg: &SpeedConfig) {
     );
 
     // 3) engine, cold cache: + shape/strategy dedup
-    let spec = SweepSpec::benchmark_suite(cfg);
+    let spec = base;
     let mut engine = SweepEngine::new();
     let t2 = Instant::now();
     let out_cold = engine.run(&spec).expect("sweep");

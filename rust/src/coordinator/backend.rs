@@ -148,6 +148,23 @@ pub trait SimBackend: fmt::Debug + Send + Sync {
     ) -> Result<SimStats>;
 }
 
+/// The stable backend names [`by_name`] resolves — the CLI's
+/// `--backend` vocabulary and the serve protocol's `backends` field.
+pub const BACKEND_NAMES: [&str; 3] = ["speed", "ara", "golden"];
+
+/// Look a backend up by its stable [`SimBackend::name`], in its default
+/// parameterization. Used by the serve protocol and the CLI; returns
+/// `None` for unknown names (callers reply with a structured error
+/// listing [`BACKEND_NAMES`]).
+pub fn by_name(name: &str) -> Option<std::sync::Arc<dyn SimBackend>> {
+    match name {
+        "speed" => Some(std::sync::Arc::new(SpeedCycle)),
+        "ara" => Some(std::sync::Arc::new(AraAnalytic::default())),
+        "golden" => Some(std::sync::Arc::new(GoldenFunctional::default())),
+        _ => None,
+    }
+}
+
 /// The SPEED cycle engine: timing-mode simulation on a pooled
 /// processor — identical math to the serial
 /// [`simulate_layer`](crate::coordinator::simulate_layer) path
@@ -393,6 +410,17 @@ mod tests {
         assert_ne!(AraAnalytic::new(ara).fingerprint(), b);
         let g = GoldenFunctional { seed: 1, ..Default::default() };
         assert_ne!(g.fingerprint(), c);
+    }
+
+    #[test]
+    fn by_name_resolves_every_registered_backend() {
+        for name in BACKEND_NAMES {
+            let b = by_name(name).unwrap_or_else(|| panic!("{name} must resolve"));
+            assert_eq!(b.name(), name);
+        }
+        assert!(by_name("xla").is_none());
+        assert!(by_name("").is_none());
+        assert!(by_name("SPEED").is_none(), "names are case-sensitive wire tokens");
     }
 
     #[test]

@@ -1,17 +1,20 @@
 //! Experiment coordinator: single-layer simulation entry points, the
 //! parallel batch-sweep engine with its pluggable simulation backends
 //! (SPEED cycle engine / Ara baseline / golden functional verifier),
-//! persistent cross-process result caching, and the drivers that
-//! regenerate every figure/table of the paper.
+//! persistent cross-process result caching with LRU bounding, the
+//! long-running sweep server (`speed serve`) with its line protocol,
+//! and the drivers that regenerate every figure/table of the paper.
 
 pub mod backend;
 pub mod experiments;
 mod persist;
 pub mod report;
 pub mod runner;
+pub mod serve;
 pub mod sweep;
 
 pub use backend::{AraAnalytic, GoldenFunctional, SimBackend, SpeedCycle, WorkerSlot};
+pub use serve::{Request, ServeStats, StreamSink};
 pub use runner::{
     run_functional_conv, simulate_layer, simulate_network, LayerResult, NetworkResult,
 };

@@ -28,8 +28,6 @@
 //! backend's `-vN` tag) invalidates old entries instead of aliasing
 //! them.
 
-use std::collections::HashMap;
-
 use super::backend::{fp_bytes, FP_SEED};
 use super::sweep::{CachedSim, SimKey};
 use crate::arch::Precision;
@@ -90,9 +88,11 @@ fn encode_stats(out: &mut Vec<u8>, s: &SimStats) {
 
 /// Serialize a memo table. Deterministic: entries are sorted by their
 /// encoded key bytes, so identical caches produce identical files.
-pub(crate) fn encode(cache: &HashMap<SimKey, CachedSim>) -> Vec<u8> {
+pub(crate) fn encode<'a, I>(cache: I) -> Vec<u8>
+where
+    I: Iterator<Item = (&'a SimKey, &'a CachedSim)>,
+{
     let mut entries: Vec<Vec<u8>> = cache
-        .iter()
         .map(|(k, v)| {
             let mut e = Vec::with_capacity(ENTRY_BYTES);
             encode_key(&mut e, k);
@@ -150,9 +150,12 @@ fn decode_precision(bits: u8) -> Result<Precision> {
     }
 }
 
-/// Parse a serialized memo table. Strict: any structural defect rejects
-/// the whole input with `Err` (callers keep their current cache).
-pub(crate) fn decode(bytes: &[u8]) -> Result<HashMap<SimKey, CachedSim>> {
+/// Parse a serialized memo table, in file (= sorted-key) order — the
+/// order matters to callers merging through a bounded LRU cache, where
+/// it decides deterministically which entries survive. Strict: any
+/// structural defect rejects the whole input with `Err` (callers keep
+/// their current cache).
+pub(crate) fn decode(bytes: &[u8]) -> Result<Vec<(SimKey, CachedSim)>> {
     if bytes.len() < HEADER_BYTES + FOOTER_BYTES {
         return Err(err("too short"));
     }
@@ -179,7 +182,7 @@ pub(crate) fn decode(bytes: &[u8]) -> Result<HashMap<SimKey, CachedSim>> {
     if body.len() - r.pos != expect {
         return Err(err("length does not match entry count"));
     }
-    let mut map = HashMap::with_capacity(count);
+    let mut out = Vec::with_capacity(count);
     for _ in 0..count {
         let backend_fp = r.u64()?;
         let cfg_fp = r.u64()?;
@@ -216,17 +219,15 @@ pub(crate) fn decode(bytes: &[u8]) -> Result<HashMap<SimKey, CachedSim>> {
                 alu: r.u64()?,
             },
         };
-        map.insert(
-            SimKey { backend_fp, cfg_fp, shape, prec, cf },
-            CachedSim { stats },
-        );
+        out.push((SimKey { backend_fp, cfg_fp, shape, prec, cf }, CachedSim { stats }));
     }
-    Ok(map)
+    Ok(out)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashMap;
 
     fn sample() -> HashMap<SimKey, CachedSim> {
         let mut m = HashMap::new();
@@ -257,27 +258,45 @@ mod tests {
     #[test]
     fn round_trips_bit_exactly() {
         let m = sample();
-        let bytes = encode(&m);
-        let back = decode(&bytes).unwrap();
+        let bytes = encode(m.iter());
+        let back: HashMap<SimKey, CachedSim> = decode(&bytes).unwrap().into_iter().collect();
         assert_eq!(back, m);
     }
 
     #[test]
     fn encoding_is_deterministic() {
         let m = sample();
-        assert_eq!(encode(&m), encode(&m));
+        assert_eq!(encode(m.iter()), encode(m.iter()));
+    }
+
+    #[test]
+    fn decode_preserves_sorted_file_order() {
+        // Bounded-merge determinism depends on decode yielding entries
+        // in file order, which encode sorts by encoded key bytes.
+        let entries = decode(&encode(sample().iter())).unwrap();
+        let keys: Vec<Vec<u8>> = entries
+            .iter()
+            .map(|(k, _)| {
+                let mut e = Vec::new();
+                encode_key(&mut e, k);
+                e
+            })
+            .collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted, "decode must preserve the sorted entry order");
     }
 
     #[test]
     fn empty_cache_round_trips() {
         let m = HashMap::new();
-        let bytes = encode(&m);
+        let bytes = encode(m.iter());
         assert_eq!(decode(&bytes).unwrap().len(), 0);
     }
 
     #[test]
     fn rejects_corruption() {
-        let bytes = encode(&sample());
+        let bytes = encode(sample().iter());
         // truncation
         assert!(decode(&bytes[..bytes.len() - 1]).is_err());
         assert!(decode(&bytes[..HEADER_BYTES]).is_err());

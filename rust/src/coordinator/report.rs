@@ -143,11 +143,12 @@ pub fn sweep_markdown(spec: &SweepSpec, out: &SweepOutcome) -> String {
     let mut s = String::new();
     s.push_str("## Sweep — parallel batch engine\n\n");
     s.push_str(&format!(
-        "{} jobs | {} sims executed | {} cache hits | {} dedup hits | {} threads | {:.2}s ({:.0} layer-sims/s)\n\n",
+        "{} jobs | {} sims executed | {} cache hits | {} dedup hits | {} evicted | {} threads | {:.2}s ({:.0} layer-sims/s)\n\n",
         out.results.len(),
         out.executed_sims,
         out.cache_hits,
         out.dedup_hits,
+        out.cache_evictions,
         out.threads_used,
         out.elapsed_secs,
         out.sims_per_sec()

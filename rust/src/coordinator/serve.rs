@@ -1,0 +1,1320 @@
+//! Long-running sweep server: a request/response layer over one shared
+//! [`SweepEngine`].
+//!
+//! The paper positions SPEED as a deployment target; the repo's
+//! north-star is a resident process that serves sweep requests without
+//! paying cold-start per invocation. This module is that process:
+//! `speed serve` parks a single engine — memo table, LRU bound, cache
+//! file — behind a line-delimited protocol on stdin or a TCP listener,
+//! and every request is compiled into a [`SweepSpec`] and executed on
+//! the shared engine, so repeated cells across requests (and across
+//! clients) are served from cache without re-simulation.
+//!
+//! # Protocol
+//!
+//! One request per line; a dependency-free JSON subset (hand-rolled,
+//! like the `persist` cache format — the offline crate set has no
+//! serde):
+//!
+//! ```text
+//! line    := object
+//! object  := '{' [ pair (',' pair)* ] '}'
+//! pair    := string ':' value
+//! value   := string | number | 'true' | 'false' | array
+//! array   := '[' [ scalar (',' scalar)* ] ']'
+//! scalar  := string | number
+//! string  := '"' (char | '\"' | '\\' | '\/' | '\n' | '\t' | '\r')* '"'
+//! number  := unsigned integer, or float ('-', '.', exponent)
+//! ```
+//!
+//! Parsing is strict: unknown fields, duplicate fields, wrong types,
+//! truncated lines and trailing garbage are all rejected — with a
+//! structured `{"type":"error",...}` reply, never a process exit.
+//!
+//! Request fields (all optional except `id`; `network` is required for
+//! sweeps): `id`, `op` (`"sweep"` default | `"ping"` | `"shutdown"`),
+//! `network` (zoo model name), `layers` (index subset), `backends`
+//! (see [`BACKEND_NAMES`]), `precisions` (`[16,8,4]`), `strategies`
+//! (`["ff","cf","mixed"]`), `threads`, `memoize`, and the config
+//! overrides `lanes`, `vlen`, `tile_r`, `tile_c`, `dram_bw`, `freq`.
+//!
+//! Replies are line-delimited records tagged by `"type"`: one
+//! `"block"` line per layer result, streamed in deterministic job
+//! order through a per-request [`ReportSink`] ([`StreamSink`]) once
+//! the run completes (results are keyed by job identity — the engine's
+//! determinism contract — so nothing is written mid-run; clients of
+//! long cold sweeps should size `--timeout-secs` to the run, not to
+//! the line rate), then one `"summary"` line carrying the run's cache
+//! accounting (`sims`, `cache_hits`, `dedup_hits`, `evictions`,
+//! `cache_entries`) — a warm repeat of an identical request reports
+//! `"sims":0`. `"ping"` answers `"pong"`; `"shutdown"` answers
+//! `"bye"`, flushes the cache file and stops the server (EOF on stdin
+//! does the same).
+//!
+//! `speed request` is the matching client: it builds a request from
+//! CLI flags (`--emit` prints the line for piping into a stdin-mode
+//! server), sends it over TCP, streams the reply lines to stdout, and
+//! can assert expectations (`--expect-sims N`, `--expect-error`) for
+//! tests and CI.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread;
+use std::time::Duration;
+
+use super::backend::{by_name, BACKEND_NAMES};
+use super::runner::LayerResult;
+use super::sweep::{JobId, ReportSink, SweepEngine, SweepOutcome, SweepSpec};
+use crate::arch::{Precision, SpeedConfig};
+use crate::dataflow::Strategy;
+use crate::error::{Error, Result};
+use crate::models::model_by_name;
+
+// ---------------------------------------------------------------------------
+// JSON-lite values
+// ---------------------------------------------------------------------------
+
+/// One value of the wire format's JSON subset.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// String scalar.
+    Str(String),
+    /// Unsigned integer scalar (no sign, no decimal point).
+    Int(u64),
+    /// Float scalar (sign, decimal point or exponent present).
+    Float(f64),
+    /// Boolean scalar.
+    Bool(bool),
+    /// Array of scalars.
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    fn type_name(&self) -> &'static str {
+        match self {
+            Value::Str(_) => "string",
+            Value::Int(_) => "integer",
+            Value::Float(_) => "float",
+            Value::Bool(_) => "bool",
+            Value::Arr(_) => "array",
+        }
+    }
+
+    fn as_u64(&self, field: &str) -> Result<u64> {
+        match self {
+            Value::Int(v) => Ok(*v),
+            other => Err(Error::protocol(format!(
+                "field `{field}`: expected an unsigned integer, got {}",
+                other.type_name()
+            ))),
+        }
+    }
+
+    fn as_f64(&self, field: &str) -> Result<f64> {
+        match self {
+            Value::Int(v) => Ok(*v as f64),
+            Value::Float(v) => Ok(*v),
+            other => Err(Error::protocol(format!(
+                "field `{field}`: expected a number, got {}",
+                other.type_name()
+            ))),
+        }
+    }
+
+    fn as_bool(&self, field: &str) -> Result<bool> {
+        match self {
+            Value::Bool(v) => Ok(*v),
+            other => Err(Error::protocol(format!(
+                "field `{field}`: expected true/false, got {}",
+                other.type_name()
+            ))),
+        }
+    }
+
+    fn as_str(&self, field: &str) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => Err(Error::protocol(format!(
+                "field `{field}`: expected a string, got {}",
+                other.type_name()
+            ))),
+        }
+    }
+
+    fn as_str_array(&self, field: &str) -> Result<Vec<String>> {
+        match self {
+            Value::Arr(vs) => {
+                vs.iter().map(|v| v.as_str(field).map(String::from)).collect()
+            }
+            other => Err(Error::protocol(format!(
+                "field `{field}`: expected an array of strings, got {}",
+                other.type_name()
+            ))),
+        }
+    }
+
+    fn as_u64_array(&self, field: &str) -> Result<Vec<u64>> {
+        match self {
+            Value::Arr(vs) => vs.iter().map(|v| v.as_u64(field)).collect(),
+            other => Err(Error::protocol(format!(
+                "field `{field}`: expected an array of integers, got {}",
+                other.type_name()
+            ))),
+        }
+    }
+}
+
+/// JSON-escape a string into `out` (quotes included).
+fn quote_into(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    quote_into(&mut out, s);
+    out
+}
+
+/// Strict parser over one record line.
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: impl Into<String>) -> Error {
+        Error::protocol(format!("{} (at byte {})", msg.into(), self.pos))
+    }
+
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn eat(&mut self, want: u8) -> Result<()> {
+        match self.peek() {
+            Some(b) if b == want => {
+                self.pos += 1;
+                Ok(())
+            }
+            Some(b) => Err(self.err(format!("expected `{}`, found `{}`", want as char, b as char))),
+            None => Err(self.err(format!("expected `{}`, found end of line", want as char))),
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(b) = self.peek() else {
+                return Err(self.err("unterminated string"));
+            };
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(e) = self.peek() else {
+                        return Err(self.err("unterminated escape"));
+                    };
+                    self.pos += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        other => {
+                            return Err(
+                                self.err(format!("unsupported escape `\\{}`", other as char))
+                            )
+                        }
+                    }
+                }
+                b if b < 0x20 => return Err(self.err("raw control byte in string")),
+                b if b.is_ascii() => out.push(b as char),
+                _ => {
+                    // Re-decode the UTF-8 sequence starting one byte back.
+                    let start = self.pos - 1;
+                    let rest = &self.bytes[start..];
+                    let s = std::str::from_utf8(rest)
+                        .map_err(|_| self.err("invalid UTF-8 in string"))?;
+                    let c = s.chars().next().expect("non-empty by construction");
+                    out.push(c);
+                    self.pos = start + c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.pos;
+        while let Some(b) = self.peek() {
+            if b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let tok = std::str::from_utf8(&self.bytes[start..self.pos]).expect("ascii by scan");
+        if tok.is_empty() {
+            return Err(self.err("expected a number"));
+        }
+        if tok.bytes().all(|b| b.is_ascii_digit()) {
+            tok.parse::<u64>()
+                .map(Value::Int)
+                .map_err(|_| self.err(format!("integer `{tok}` out of range")))
+        } else {
+            let v: f64 = tok
+                .parse()
+                .map_err(|_| self.err(format!("malformed number `{tok}`")))?;
+            if !v.is_finite() {
+                return Err(self.err(format!("non-finite number `{tok}`")));
+            }
+            Ok(Value::Float(v))
+        }
+    }
+
+    fn scalar(&mut self) -> Result<Value> {
+        match self.peek() {
+            Some(b'"') => Ok(Value::Str(self.string()?)),
+            Some(b't') | Some(b'f') => {
+                if self.bytes[self.pos..].starts_with(b"true") {
+                    self.pos += 4;
+                    Ok(Value::Bool(true))
+                } else if self.bytes[self.pos..].starts_with(b"false") {
+                    self.pos += 5;
+                    Ok(Value::Bool(false))
+                } else {
+                    Err(self.err("expected true/false"))
+                }
+            }
+            Some(_) => self.number(),
+            None => Err(self.err("expected a value, found end of line")),
+        }
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        self.skip_ws();
+        if self.peek() == Some(b'[') {
+            self.pos += 1;
+            let mut items = Vec::new();
+            self.skip_ws();
+            if self.peek() == Some(b']') {
+                self.pos += 1;
+                return Ok(Value::Arr(items));
+            }
+            loop {
+                self.skip_ws();
+                items.push(self.scalar()?);
+                self.skip_ws();
+                match self.peek() {
+                    Some(b',') => self.pos += 1,
+                    Some(b']') => {
+                        self.pos += 1;
+                        return Ok(Value::Arr(items));
+                    }
+                    _ => return Err(self.err("expected `,` or `]` in array")),
+                }
+            }
+        }
+        self.scalar()
+    }
+}
+
+/// Parse one protocol line into its (key, value) fields. Strict:
+/// rejects duplicate keys, unknown syntax, truncation and trailing
+/// garbage. Field-set validation is the caller's (e.g.
+/// [`Request::parse`]).
+pub fn parse_record(line: &str) -> Result<Vec<(String, Value)>> {
+    let mut p = Parser { bytes: line.as_bytes(), pos: 0 };
+    p.skip_ws();
+    p.eat(b'{')?;
+    let mut fields: Vec<(String, Value)> = Vec::new();
+    p.skip_ws();
+    if p.peek() == Some(b'}') {
+        p.pos += 1;
+    } else {
+        loop {
+            p.skip_ws();
+            let key = p.string()?;
+            if fields.iter().any(|(k, _)| *k == key) {
+                return Err(Error::protocol(format!("duplicate field `{key}`")));
+            }
+            p.skip_ws();
+            p.eat(b':')?;
+            let val = p.value()?;
+            fields.push((key, val));
+            p.skip_ws();
+            match p.peek() {
+                Some(b',') => p.pos += 1,
+                Some(b'}') => {
+                    p.pos += 1;
+                    break;
+                }
+                _ => return Err(p.err("expected `,` or `}`")),
+            }
+        }
+    }
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(p.err("trailing garbage after record"));
+    }
+    Ok(fields)
+}
+
+fn field<'a>(fields: &'a [(String, Value)], name: &str) -> Option<&'a Value> {
+    fields.iter().find(|(k, _)| k == name).map(|(_, v)| v)
+}
+
+// ---------------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------------
+
+/// What a request asks the server to do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// Run a sweep grid (the default).
+    Sweep,
+    /// Liveness probe; answered with a `pong` record.
+    Ping,
+    /// Flush the cache file and stop the server.
+    Shutdown,
+}
+
+fn strategy_token(s: Strategy) -> &'static str {
+    match s {
+        Strategy::FeatureFirst => "ff",
+        Strategy::ChannelFirst => "cf",
+        Strategy::Mixed => "mixed",
+    }
+}
+
+/// Machine-configuration overrides a request may carry; every `Some`
+/// field replaces the server's base [`SpeedConfig`] value for that
+/// request only.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct CfgOverrides {
+    /// `n_lanes`.
+    pub lanes: Option<usize>,
+    /// `vlen_bits`.
+    pub vlen: Option<usize>,
+    /// `tile_r`.
+    pub tile_r: Option<usize>,
+    /// `tile_c`.
+    pub tile_c: Option<usize>,
+    /// `dram_bw_bytes_per_cycle`.
+    pub dram_bw: Option<f64>,
+    /// `freq_mhz`.
+    pub freq: Option<f64>,
+}
+
+impl CfgOverrides {
+    /// Apply the overrides onto `cfg`.
+    pub fn apply(&self, cfg: &mut SpeedConfig) {
+        if let Some(v) = self.lanes {
+            cfg.n_lanes = v;
+        }
+        if let Some(v) = self.vlen {
+            cfg.vlen_bits = v;
+        }
+        if let Some(v) = self.tile_r {
+            cfg.tile_r = v;
+        }
+        if let Some(v) = self.tile_c {
+            cfg.tile_c = v;
+        }
+        if let Some(v) = self.dram_bw {
+            cfg.dram_bw_bytes_per_cycle = v;
+        }
+        if let Some(v) = self.freq {
+            cfg.freq_mhz = v;
+        }
+    }
+}
+
+/// One parsed protocol request. [`Request::parse`] /
+/// [`Request::to_line`] are exact inverses over every field (pinned by
+/// `tests/serve_protocol.rs`); [`Request::to_spec`] compiles a sweep
+/// request into a [`SweepSpec`] against the server's base config.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    /// Client-chosen correlation id, echoed on every reply record.
+    pub id: u64,
+    /// Requested operation.
+    pub op: Op,
+    /// Zoo model name ("VGG16", "SqueezeNet", …); required for sweeps.
+    pub network: String,
+    /// Layer-index subset of the network (`None` = every layer).
+    pub layers: Option<Vec<usize>>,
+    /// Backend names (see [`BACKEND_NAMES`]); default `["speed"]`.
+    pub backends: Vec<String>,
+    /// Precisions; default 16/8/4-bit (the paper's order).
+    pub precisions: Vec<Precision>,
+    /// Strategies; default `[mixed]`.
+    pub strategies: Vec<Strategy>,
+    /// Worker threads for this request (`None` = spec default).
+    pub threads: Option<usize>,
+    /// Memoization on (default) or off.
+    pub memoize: bool,
+    /// Machine-configuration overrides.
+    pub overrides: CfgOverrides,
+}
+
+impl Default for Request {
+    fn default() -> Self {
+        Request {
+            id: 0,
+            op: Op::Sweep,
+            network: String::new(),
+            layers: None,
+            backends: vec!["speed".to_string()],
+            precisions: vec![Precision::Int16, Precision::Int8, Precision::Int4],
+            strategies: vec![Strategy::Mixed],
+            threads: None,
+            memoize: true,
+            overrides: CfgOverrides::default(),
+        }
+    }
+}
+
+fn precision_from_bits(bits: u64) -> Result<Precision> {
+    match bits {
+        4 => Ok(Precision::Int4),
+        8 => Ok(Precision::Int8),
+        16 => Ok(Precision::Int16),
+        other => Err(Error::protocol(format!(
+            "field `precisions`: bad precision {other} (4/8/16)"
+        ))),
+    }
+}
+
+fn strategy_from_token(tok: &str) -> Result<Strategy> {
+    match tok {
+        "ff" => Ok(Strategy::FeatureFirst),
+        "cf" => Ok(Strategy::ChannelFirst),
+        "mixed" => Ok(Strategy::Mixed),
+        other => Err(Error::protocol(format!(
+            "field `strategies`: bad strategy `{other}` (ff/cf/mixed)"
+        ))),
+    }
+}
+
+impl Request {
+    /// Parse one request line. Strict: unknown fields, duplicates,
+    /// wrong types, empty axes, unknown backend/strategy/precision
+    /// tokens, truncation and trailing garbage all reject the line.
+    pub fn parse(line: &str) -> Result<Request> {
+        let fields = parse_record(line)?;
+        let mut req = Request::default();
+        for (key, val) in &fields {
+            match key.as_str() {
+                "id" => req.id = val.as_u64("id")?,
+                "op" => {
+                    req.op = match val.as_str("op")? {
+                        "sweep" => Op::Sweep,
+                        "ping" => Op::Ping,
+                        "shutdown" => Op::Shutdown,
+                        other => {
+                            return Err(Error::protocol(format!(
+                                "field `op`: unknown op `{other}` (sweep/ping/shutdown)"
+                            )))
+                        }
+                    }
+                }
+                "network" => req.network = val.as_str("network")?.to_string(),
+                "layers" => {
+                    let idx = val.as_u64_array("layers")?;
+                    if idx.is_empty() {
+                        return Err(Error::protocol("field `layers`: empty subset"));
+                    }
+                    req.layers = Some(idx.into_iter().map(|i| i as usize).collect());
+                }
+                "backends" => {
+                    let names = val.as_str_array("backends")?;
+                    if names.is_empty() {
+                        return Err(Error::protocol("field `backends`: empty axis"));
+                    }
+                    for name in &names {
+                        if by_name(name).is_none() {
+                            return Err(Error::protocol(format!(
+                                "field `backends`: unknown backend `{name}` (known: {})",
+                                BACKEND_NAMES.join("/")
+                            )));
+                        }
+                    }
+                    req.backends = names;
+                }
+                "precisions" => {
+                    let bits = val.as_u64_array("precisions")?;
+                    if bits.is_empty() {
+                        return Err(Error::protocol("field `precisions`: empty axis"));
+                    }
+                    req.precisions =
+                        bits.into_iter().map(precision_from_bits).collect::<Result<_>>()?;
+                }
+                "strategies" => {
+                    let toks = val.as_str_array("strategies")?;
+                    if toks.is_empty() {
+                        return Err(Error::protocol("field `strategies`: empty axis"));
+                    }
+                    req.strategies = toks
+                        .iter()
+                        .map(|t| strategy_from_token(t))
+                        .collect::<Result<_>>()?;
+                }
+                "threads" => req.threads = Some(val.as_u64("threads")? as usize),
+                "memoize" => req.memoize = val.as_bool("memoize")?,
+                "lanes" => req.overrides.lanes = Some(val.as_u64("lanes")? as usize),
+                "vlen" => req.overrides.vlen = Some(val.as_u64("vlen")? as usize),
+                "tile_r" => req.overrides.tile_r = Some(val.as_u64("tile_r")? as usize),
+                "tile_c" => req.overrides.tile_c = Some(val.as_u64("tile_c")? as usize),
+                "dram_bw" => req.overrides.dram_bw = Some(val.as_f64("dram_bw")?),
+                "freq" => req.overrides.freq = Some(val.as_f64("freq")?),
+                other => {
+                    return Err(Error::protocol(format!("unknown field `{other}`")));
+                }
+            }
+        }
+        Ok(req)
+    }
+
+    /// Serialize to one protocol line. Fields at their default value
+    /// are omitted, so `parse(to_line(r)) == r` for every request.
+    pub fn to_line(&self) -> String {
+        let d = Request::default();
+        let mut parts: Vec<String> = vec![format!("\"id\":{}", self.id)];
+        match self.op {
+            Op::Sweep => {}
+            Op::Ping => parts.push("\"op\":\"ping\"".to_string()),
+            Op::Shutdown => parts.push("\"op\":\"shutdown\"".to_string()),
+        }
+        if !self.network.is_empty() {
+            parts.push(format!("\"network\":{}", quote(&self.network)));
+        }
+        if let Some(layers) = &self.layers {
+            let items: Vec<String> = layers.iter().map(|i| i.to_string()).collect();
+            parts.push(format!("\"layers\":[{}]", items.join(",")));
+        }
+        if self.backends != d.backends {
+            let items: Vec<String> = self.backends.iter().map(|b| quote(b)).collect();
+            parts.push(format!("\"backends\":[{}]", items.join(",")));
+        }
+        if self.precisions != d.precisions {
+            let items: Vec<String> =
+                self.precisions.iter().map(|p| p.bits().to_string()).collect();
+            parts.push(format!("\"precisions\":[{}]", items.join(",")));
+        }
+        if self.strategies != d.strategies {
+            let items: Vec<String> =
+                self.strategies.iter().map(|s| quote(strategy_token(*s))).collect();
+            parts.push(format!("\"strategies\":[{}]", items.join(",")));
+        }
+        if let Some(t) = self.threads {
+            parts.push(format!("\"threads\":{t}"));
+        }
+        if !self.memoize {
+            parts.push("\"memoize\":false".to_string());
+        }
+        if let Some(v) = self.overrides.lanes {
+            parts.push(format!("\"lanes\":{v}"));
+        }
+        if let Some(v) = self.overrides.vlen {
+            parts.push(format!("\"vlen\":{v}"));
+        }
+        if let Some(v) = self.overrides.tile_r {
+            parts.push(format!("\"tile_r\":{v}"));
+        }
+        if let Some(v) = self.overrides.tile_c {
+            parts.push(format!("\"tile_c\":{v}"));
+        }
+        if let Some(v) = self.overrides.dram_bw {
+            parts.push(format!("\"dram_bw\":{v}"));
+        }
+        if let Some(v) = self.overrides.freq {
+            parts.push(format!("\"freq\":{v}"));
+        }
+        format!("{{{}}}", parts.join(","))
+    }
+
+    /// Compile a sweep request into a runnable [`SweepSpec`] against
+    /// the server's base machine configuration. Validates the network
+    /// name, the layer subset and the (possibly overridden) config;
+    /// every failure is a protocol error the server answers with a
+    /// structured reply.
+    pub fn to_spec(&self, base: &SpeedConfig) -> Result<SweepSpec> {
+        if self.op != Op::Sweep {
+            return Err(Error::protocol("not a sweep request"));
+        }
+        if self.network.is_empty() {
+            return Err(Error::protocol("sweep request: missing `network`"));
+        }
+        let model = model_by_name(&self.network).ok_or_else(|| {
+            Error::protocol(format!("unknown network `{}`", self.network))
+        })?;
+        let layers = match &self.layers {
+            None => model.layers.clone(),
+            Some(idx) => {
+                let mut picked = Vec::with_capacity(idx.len());
+                for &i in idx {
+                    let layer = model.layers.get(i).ok_or_else(|| {
+                        Error::protocol(format!(
+                            "layer index {i} out of range for {} ({} layers)",
+                            model.name,
+                            model.layers.len()
+                        ))
+                    })?;
+                    picked.push(layer.clone());
+                }
+                picked
+            }
+        };
+        let mut cfg = base.clone();
+        self.overrides.apply(&mut cfg);
+        cfg.validate()
+            .map_err(|e| Error::protocol(format!("config overrides: {e}")))?;
+        let backends = self
+            .backends
+            .iter()
+            .map(|name| {
+                by_name(name).ok_or_else(|| {
+                    Error::protocol(format!("unknown backend `{name}`"))
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut spec = SweepSpec::new(cfg)
+            .network(self.network.clone(), layers)
+            .precisions(self.precisions.clone())
+            .strategies(self.strategies.clone())
+            .memoize(self.memoize)
+            .backends(backends);
+        if let Some(t) = self.threads {
+            spec = spec.threads(t);
+        }
+        Ok(spec)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reply records
+// ---------------------------------------------------------------------------
+
+/// The `listening` record a TCP server prints once it is bound (the
+/// way a client learns the ephemeral port of `--tcp 127.0.0.1:0`).
+pub fn listening_line(addr: &SocketAddr) -> String {
+    format!("{{\"type\":\"listening\",\"addr\":{}}}", quote(&addr.to_string()))
+}
+
+/// One per-layer `block` record.
+pub fn block_line(id: u64, backend: &str, network: &str, r: &LayerResult) -> String {
+    format!(
+        "{{\"type\":\"block\",\"id\":{id},\"backend\":{},\"network\":{},\"layer\":{},\"precision\":{},\"strategy\":{},\"used\":{},\"cycles\":{},\"macs\":{}}}",
+        quote(backend),
+        quote(network),
+        quote(&r.name),
+        r.precision.bits(),
+        quote(strategy_token(r.requested)),
+        quote(strategy_token(r.used)),
+        r.cycles,
+        r.useful_macs,
+    )
+}
+
+/// The per-request `summary` record terminating a sweep reply.
+pub fn summary_line(id: u64, out: &SweepOutcome, cache_entries: usize) -> String {
+    format!(
+        "{{\"type\":\"summary\",\"id\":{id},\"jobs\":{},\"sims\":{},\"cache_hits\":{},\"dedup_hits\":{},\"evictions\":{},\"cache_entries\":{cache_entries},\"threads\":{},\"elapsed_ms\":{}}}",
+        out.results.len(),
+        out.executed_sims,
+        out.cache_hits,
+        out.dedup_hits,
+        out.cache_evictions,
+        out.threads_used,
+        (out.elapsed_secs * 1000.0).round() as u64,
+    )
+}
+
+/// A structured `error` reply (`id` 0 when the line never parsed).
+pub fn error_line(id: u64, msg: &str) -> String {
+    format!("{{\"type\":\"error\",\"id\":{id},\"message\":{}}}", quote(msg))
+}
+
+fn pong_line(id: u64, cache_entries: usize) -> String {
+    format!("{{\"type\":\"pong\",\"id\":{id},\"cache_entries\":{cache_entries}}}")
+}
+
+fn bye_line(id: u64, cache_entries: usize) -> String {
+    format!("{{\"type\":\"bye\",\"id\":{id},\"cache_entries\":{cache_entries}}}")
+}
+
+fn write_line<W: Write>(w: &mut W, line: &str) -> std::io::Result<()> {
+    writeln!(w, "{line}")?;
+    w.flush()
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// A per-request [`ReportSink`] that streams one `block` record per
+/// layer result to the client, in deterministic job order. The engine
+/// delivers results keyed by job identity once a run completes (the
+/// determinism contract), so the serve loop replays them through this
+/// sink *after* releasing the engine lock — a stalled client blocks
+/// only its own connection. Write failures latch `io_failed` instead
+/// of panicking — the request is abandoned, the server lives on.
+pub struct StreamSink<'w, W: Write> {
+    id: u64,
+    backend_names: Vec<&'static str>,
+    writer: &'w mut W,
+    io_failed: bool,
+}
+
+impl<'w, W: Write> StreamSink<'w, W> {
+    /// Sink for one request; `backend_names` must index-match the
+    /// spec's backend axis.
+    pub fn new(id: u64, backend_names: Vec<&'static str>, writer: &'w mut W) -> Self {
+        StreamSink { id, backend_names, writer, io_failed: false }
+    }
+
+    /// Whether any write failed (client gone).
+    pub fn io_failed(&self) -> bool {
+        self.io_failed
+    }
+}
+
+impl<W: Write> ReportSink for StreamSink<'_, W> {
+    fn on_layer(&mut self, network: &str, job: JobId, result: &LayerResult) {
+        if self.io_failed {
+            return;
+        }
+        let backend = self.backend_names.get(job.backend).copied().unwrap_or("?");
+        if write_line(self.writer, &block_line(self.id, backend, network, result)).is_err() {
+            self.io_failed = true;
+        }
+    }
+}
+
+/// What one [`serve_lines`] session processed.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Request lines handled (including failed ones).
+    pub requests: u64,
+    /// Requests answered with an `error` record.
+    pub errors: u64,
+    /// Whether a `shutdown` request ended the session.
+    pub shutdown: bool,
+}
+
+fn lock_engine(engine: &Mutex<SweepEngine>) -> MutexGuard<'_, SweepEngine> {
+    // A panicked request must not wedge the server: take the poisoned
+    // guard (the cache is plain data, valid at every step).
+    engine.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Serve one line-delimited session: read requests from `reader`,
+/// stream reply records to `writer`, run sweeps on the shared
+/// `engine`. Used verbatim by stdin mode, per-connection TCP threads
+/// and the in-process protocol tests. Read/write failures end the
+/// session (the transport is gone); they are never fatal to the
+/// caller.
+pub fn serve_lines<R: BufRead, W: Write>(
+    engine: &Mutex<SweepEngine>,
+    base_cfg: &SpeedConfig,
+    reader: R,
+    mut writer: W,
+) -> ServeStats {
+    let mut stats = ServeStats::default();
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        stats.requests += 1;
+        let req = match Request::parse(line) {
+            Ok(req) => req,
+            Err(e) => {
+                stats.errors += 1;
+                if write_line(&mut writer, &error_line(0, &e.to_string())).is_err() {
+                    break;
+                }
+                continue;
+            }
+        };
+        match req.op {
+            Op::Ping => {
+                let entries = lock_engine(engine).cached_sims();
+                if write_line(&mut writer, &pong_line(req.id, entries)).is_err() {
+                    break;
+                }
+            }
+            Op::Shutdown => {
+                let entries = lock_engine(engine).cached_sims();
+                let _ = write_line(&mut writer, &bye_line(req.id, entries));
+                stats.shutdown = true;
+                break;
+            }
+            Op::Sweep => {
+                let spec = match req.to_spec(base_cfg) {
+                    Ok(spec) => spec,
+                    Err(e) => {
+                        stats.errors += 1;
+                        if write_line(&mut writer, &error_line(req.id, &e.to_string())).is_err()
+                        {
+                            break;
+                        }
+                        continue;
+                    }
+                };
+                // Requests share the engine — and therefore the memo
+                // table — so a repeated cell is a cache hit regardless
+                // of which client simulated it first. The lock covers
+                // only the run itself: replies stream *outside* it, so
+                // a slow or stalled client can never wedge the other
+                // connections behind a blocked socket write.
+                let (run, entries) = {
+                    let mut eng = lock_engine(engine);
+                    let run = eng.run(&spec);
+                    let entries = eng.cached_sims();
+                    (run, entries)
+                };
+                match run {
+                    Ok(out) => {
+                        let backend_names: Vec<&'static str> =
+                            spec.backends.iter().map(|b| b.name()).collect();
+                        let mut sink = StreamSink::new(req.id, backend_names, &mut writer);
+                        for (jid, r) in out.jobs.iter().zip(&out.results) {
+                            sink.on_layer(&spec.networks[jid.net].name, *jid, r);
+                        }
+                        sink.on_finish(&out);
+                        let client_gone = sink.io_failed();
+                        drop(sink);
+                        if client_gone
+                            || write_line(&mut writer, &summary_line(req.id, &out, entries))
+                                .is_err()
+                        {
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        stats.errors += 1;
+                        if write_line(&mut writer, &error_line(req.id, &e.to_string()))
+                            .is_err()
+                        {
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    stats
+}
+
+/// `speed serve` configuration (CLI flags).
+#[derive(Debug, Clone, Default)]
+pub struct ServerOptions {
+    /// Base machine configuration (request overrides apply on top).
+    pub cfg: SpeedConfig,
+    /// TCP listen address (`"127.0.0.1:0"` for an ephemeral port);
+    /// `None` = stdin/stdout mode.
+    pub tcp: Option<String>,
+    /// Write the bound TCP address to this file once listening (how
+    /// scripts find the ephemeral port).
+    pub port_file: Option<String>,
+    /// Load the cache from this file at startup (cold start if
+    /// missing/corrupt) and flush it back on shutdown.
+    pub cache_file: Option<String>,
+    /// LRU bound on the engine's memo table (applies to the load-time
+    /// merge too).
+    pub max_cache_entries: Option<usize>,
+    /// Worker-thread override for every request.
+    pub threads: Option<usize>,
+}
+
+fn flush_cache(engine: &Mutex<SweepEngine>, path: Option<&str>) {
+    let Some(path) = path else { return };
+    let eng = lock_engine(engine);
+    match eng.save_cache(path) {
+        Ok(()) => eprintln!(
+            "serve: cache-file {path}: saved {} cached simulations",
+            eng.cached_sims()
+        ),
+        Err(e) => eprintln!("serve: cache-file {path}: save failed: {e}"),
+    }
+}
+
+/// Run `speed serve`: park a single [`SweepEngine`] behind the
+/// protocol, on stdin/stdout (default) or a TCP listener. Returns when
+/// the session ends (stdin EOF or a `shutdown` request), after
+/// flushing the cache file.
+pub fn run_server(opts: ServerOptions) -> Result<()> {
+    let mut engine = SweepEngine::new();
+    engine.set_max_cache_entries(opts.max_cache_entries);
+    if let Some(n) = opts.threads {
+        engine.set_threads_override(Some(n));
+    }
+    if let Some(path) = &opts.cache_file {
+        if std::path::Path::new(path).exists() {
+            match engine.load_cache(path) {
+                Ok(n) => eprintln!(
+                    "serve: cache-file {path}: loaded {n} entries ({} retained)",
+                    engine.cached_sims()
+                ),
+                Err(e) => eprintln!("serve: cache-file {path}: {e}; starting cold"),
+            }
+        } else {
+            eprintln!("serve: cache-file {path}: not found, starting cold");
+        }
+    }
+    let engine = Arc::new(Mutex::new(engine));
+    match &opts.tcp {
+        None => {
+            let stdin = std::io::stdin();
+            let stdout = std::io::stdout();
+            let stats = serve_lines(&engine, &opts.cfg, stdin.lock(), stdout.lock());
+            flush_cache(&engine, opts.cache_file.as_deref());
+            eprintln!(
+                "serve: handled {} request(s), {} error repl(y/ies){}",
+                stats.requests,
+                stats.errors,
+                if stats.shutdown { ", shut down by request" } else { ", stdin closed" }
+            );
+            Ok(())
+        }
+        Some(addr) => tcp_server(engine, opts.clone(), addr),
+    }
+}
+
+fn tcp_server(
+    engine: Arc<Mutex<SweepEngine>>,
+    opts: ServerOptions,
+    addr: &str,
+) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    {
+        // The listening record goes to stdout so a parent process can
+        // discover the bound (possibly ephemeral) port.
+        let mut out = std::io::stdout().lock();
+        let _ = write_line(&mut out, &listening_line(&local));
+    }
+    if let Some(pf) = &opts.port_file {
+        std::fs::write(pf, local.to_string())?;
+    }
+    eprintln!("serve: listening on {local}");
+    let cfg = Arc::new(opts.cfg.clone());
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let mut handles = Vec::new();
+    for conn in listener.incoming() {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("serve: accept failed: {e}");
+                continue;
+            }
+        };
+        // Reap finished connection threads so a resident server does
+        // not accumulate one JoinHandle per connection forever.
+        handles.retain(|h: &thread::JoinHandle<()>| !h.is_finished());
+        let engine = Arc::clone(&engine);
+        let cfg = Arc::clone(&cfg);
+        let shutdown = Arc::clone(&shutdown);
+        let cache_file = opts.cache_file.clone();
+        handles.push(thread::spawn(move || {
+            let Ok(read_half) = stream.try_clone() else { return };
+            let stats =
+                serve_lines(&engine, &cfg, BufReader::new(read_half), &stream);
+            if stats.shutdown {
+                // Flush before unblocking the accept loop, so the
+                // cache file is durable by the time the process exits.
+                flush_cache(&engine, cache_file.as_deref());
+                shutdown.store(true, Ordering::SeqCst);
+                let _ = TcpStream::connect(local);
+            }
+        }));
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    flush_cache(&engine, opts.cache_file.as_deref());
+    eprintln!("serve: shut down");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// `speed request` configuration (CLI flags).
+#[derive(Debug, Clone)]
+pub struct ClientOptions {
+    /// Server address; `None` is only valid with `emit`.
+    pub tcp: Option<String>,
+    /// Print the request line to stdout instead of sending it (for
+    /// piping into a stdin-mode server).
+    pub emit: bool,
+    /// Send this raw line verbatim instead of the built request
+    /// (protocol-robustness testing).
+    pub raw: Option<String>,
+    /// The request to send.
+    pub request: Request,
+    /// Exit non-zero unless the summary reports exactly this many
+    /// executed simulations (`--expect-sims 0` = assert pure cache).
+    pub expect_sims: Option<u64>,
+    /// Exit zero only if the server answers with an `error` record.
+    pub expect_error: bool,
+    /// Socket read timeout in seconds (hang protection).
+    pub timeout_secs: u64,
+}
+
+/// Run `speed request`; returns the process exit code (0 = every
+/// expectation held). Reply lines are echoed to stdout as they
+/// stream in; expectation failures are reported on stderr.
+pub fn run_client(opts: &ClientOptions) -> Result<i32> {
+    let line = match &opts.raw {
+        Some(raw) => raw.clone(),
+        None => opts.request.to_line(),
+    };
+    if opts.emit {
+        println!("{line}");
+        return Ok(0);
+    }
+    let Some(addr) = &opts.tcp else {
+        return Err(Error::protocol("request: need --tcp ADDR (or --emit)"));
+    };
+    let stream = TcpStream::connect(addr.as_str())?;
+    stream.set_read_timeout(Some(Duration::from_secs(opts.timeout_secs.max(1))))?;
+    let mut write_half = stream.try_clone()?;
+    writeln!(write_half, "{line}")?;
+    write_half.flush()?;
+
+    let reader = BufReader::new(stream);
+    let mut terminal: Option<(String, Vec<(String, Value)>)> = None;
+    for reply in reader.lines() {
+        let reply = reply?;
+        let reply = reply.trim();
+        if reply.is_empty() {
+            continue;
+        }
+        println!("{reply}");
+        let fields = parse_record(reply)
+            .map_err(|e| Error::protocol(format!("unparseable reply: {e}")))?;
+        let ty = match field(&fields, "type") {
+            Some(v) => v.as_str("type")?.to_string(),
+            None => return Err(Error::protocol("reply record without a `type`")),
+        };
+        if matches!(ty.as_str(), "summary" | "error" | "pong" | "bye") {
+            terminal = Some((ty, fields));
+            break;
+        }
+    }
+    let Some((ty, fields)) = terminal else {
+        return Err(Error::protocol("connection closed before a terminal reply"));
+    };
+    if opts.expect_error {
+        if ty == "error" {
+            return Ok(0);
+        }
+        eprintln!("request: expected an error reply, got `{ty}`");
+        return Ok(1);
+    }
+    if ty == "error" {
+        eprintln!("request: server replied with an error");
+        return Ok(1);
+    }
+    if let Some(want) = opts.expect_sims {
+        if ty != "summary" {
+            eprintln!("request: --expect-sims needs a summary reply, got `{ty}`");
+            return Ok(1);
+        }
+        let sims = match field(&fields, "sims") {
+            Some(v) => v.as_u64("sims")?,
+            None => return Err(Error::protocol("summary without a `sims` field")),
+        };
+        if sims != want {
+            eprintln!("request: expected {want} executed sims, server reports {sims}");
+            return Ok(1);
+        }
+    }
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_parse_scalars_arrays_and_escapes() {
+        let fields =
+            parse_record(r#"{"a":1,"b":-2.5,"c":"x\"y\\z","d":true,"e":[1,2],"f":["u","v"],"g":{}}"#);
+        // nested objects are not part of the grammar
+        assert!(fields.is_err());
+        let fields = parse_record(
+            "{\"a\":1, \"b\":-2.5,\t\"c\":\"x\\\"y\\\\z\\n\",\"d\":true,\"e\":[1,2],\"f\":[\"u\",\"v\"],\"empty\":[]}",
+        )
+        .unwrap();
+        assert_eq!(field(&fields, "a"), Some(&Value::Int(1)));
+        assert_eq!(field(&fields, "b"), Some(&Value::Float(-2.5)));
+        assert_eq!(field(&fields, "c"), Some(&Value::Str("x\"y\\z\n".to_string())));
+        assert_eq!(field(&fields, "d"), Some(&Value::Bool(true)));
+        assert_eq!(field(&fields, "e"), Some(&Value::Arr(vec![Value::Int(1), Value::Int(2)])));
+        assert_eq!(field(&fields, "empty"), Some(&Value::Arr(vec![])));
+        assert_eq!(parse_record("{}").unwrap(), vec![]);
+        assert_eq!(parse_record("  { }  ").unwrap(), vec![]);
+    }
+
+    #[test]
+    fn records_reject_malformed_lines() {
+        for bad in [
+            "",
+            "{",
+            "}",
+            "{\"a\":}",
+            "{\"a\":1",
+            "{\"a\":1}x",
+            "{\"a\":1,}",
+            "{\"a\":1,\"a\":2}",
+            "{\"a\":18446744073709551616}", // u64::MAX + 1
+            "{\"a\":tru}",
+            "{\"a\":\"unterminated}",
+            "{\"a\":\"bad\\qescape\"}",
+            "{\"a\":[1,]}",
+            "{\"a\":[1,2}",
+            "{a:1}",
+            "not a record at all",
+            "{\"a\":1e999}", // overflows to inf
+        ] {
+            assert!(parse_record(bad).is_err(), "must reject: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn utf8_strings_survive() {
+        let fields = parse_record("{\"name\":\"héllo → wörld\"}").unwrap();
+        assert_eq!(field(&fields, "name"), Some(&Value::Str("héllo → wörld".to_string())));
+        let q = quote("héllo → wörld\n\"x\"");
+        let back = parse_record(&format!("{{\"k\":{q}}}")).unwrap();
+        assert_eq!(back[0].1, Value::Str("héllo → wörld\n\"x\"".to_string()));
+    }
+
+    #[test]
+    fn minimal_request_gets_defaults() {
+        let req = Request::parse("{\"id\":7,\"network\":\"VGG16\"}").unwrap();
+        assert_eq!(req.id, 7);
+        assert_eq!(req.op, Op::Sweep);
+        assert_eq!(req.network, "VGG16");
+        assert_eq!(req.backends, vec!["speed".to_string()]);
+        assert_eq!(
+            req.precisions,
+            vec![Precision::Int16, Precision::Int8, Precision::Int4]
+        );
+        assert_eq!(req.strategies, vec![Strategy::Mixed]);
+        assert!(req.memoize);
+        assert_eq!(req, Request { id: 7, network: "VGG16".into(), ..Default::default() });
+    }
+
+    #[test]
+    fn request_rejects_unknown_vocabulary() {
+        assert!(Request::parse("{\"id\":1,\"bogus\":3}").is_err());
+        assert!(Request::parse("{\"id\":1,\"op\":\"dance\"}").is_err());
+        assert!(Request::parse("{\"id\":1,\"backends\":[\"xla\"]}").is_err());
+        assert!(Request::parse("{\"id\":1,\"precisions\":[12]}").is_err());
+        assert!(Request::parse("{\"id\":1,\"strategies\":[\"zigzag\"]}").is_err());
+        assert!(Request::parse("{\"id\":1,\"precisions\":[]}").is_err());
+        assert!(Request::parse("{\"id\":1,\"threads\":\"two\"}").is_err());
+        assert!(Request::parse("{\"id\":1,\"memoize\":1}").is_err());
+    }
+
+    #[test]
+    fn reply_records_parse_back() {
+        let line = error_line(3, "unknown network `AlexNet`");
+        let fields = parse_record(&line).unwrap();
+        assert_eq!(field(&fields, "type"), Some(&Value::Str("error".into())));
+        assert_eq!(field(&fields, "id"), Some(&Value::Int(3)));
+        let line = pong_line(4, 17);
+        let fields = parse_record(&line).unwrap();
+        assert_eq!(field(&fields, "type"), Some(&Value::Str("pong".into())));
+        assert_eq!(field(&fields, "cache_entries"), Some(&Value::Int(17)));
+        let addr: SocketAddr = "127.0.0.1:4321".parse().unwrap();
+        let fields = parse_record(&listening_line(&addr)).unwrap();
+        assert_eq!(field(&fields, "addr"), Some(&Value::Str("127.0.0.1:4321".into())));
+    }
+
+    #[test]
+    fn to_spec_validates_and_builds() {
+        let base = SpeedConfig::default();
+        let req = Request {
+            id: 1,
+            network: "SqueezeNet".into(),
+            layers: Some(vec![1, 2]),
+            precisions: vec![Precision::Int8],
+            strategies: vec![Strategy::FeatureFirst],
+            threads: Some(2),
+            ..Default::default()
+        };
+        let spec = req.to_spec(&base).unwrap();
+        assert_eq!(spec.networks.len(), 1);
+        assert_eq!(spec.networks[0].layers.len(), 2);
+        assert_eq!(spec.networks[0].layers[0].name, "fire2_s1x1");
+        assert_eq!(spec.threads, 2);
+        assert_eq!(spec.n_jobs(), 2);
+
+        let bad = Request { network: "AlexNet".into(), ..req.clone() };
+        assert!(bad.to_spec(&base).is_err());
+        let bad = Request { layers: Some(vec![999]), ..req.clone() };
+        assert!(bad.to_spec(&base).is_err());
+        let bad = Request { network: String::new(), ..req.clone() };
+        assert!(bad.to_spec(&base).is_err());
+        let bad = Request {
+            overrides: CfgOverrides { lanes: Some(3), ..Default::default() },
+            ..req.clone()
+        };
+        assert!(bad.to_spec(&base).is_err(), "invalid config override must be rejected");
+        let shut = Request { op: Op::Shutdown, ..req };
+        assert!(shut.to_spec(&base).is_err());
+    }
+
+    #[test]
+    fn overrides_reach_the_spec_config() {
+        let base = SpeedConfig::default();
+        let req = Request {
+            id: 1,
+            network: "SqueezeNet".into(),
+            layers: Some(vec![1]),
+            overrides: CfgOverrides {
+                lanes: Some(base.n_lanes * 2),
+                freq: Some(123.0),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let spec = req.to_spec(&base).unwrap();
+        assert_eq!(spec.configs[0].n_lanes, base.n_lanes * 2);
+        assert_eq!(spec.configs[0].freq_mhz, 123.0);
+        // base untouched
+        assert_ne!(base.freq_mhz, 123.0);
+    }
+}

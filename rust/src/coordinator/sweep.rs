@@ -27,6 +27,14 @@
 //!   the memo table to a versioned, checksummed, dependency-free binary
 //!   file, so a restarted process skips every previously simulated cell
 //!   (the CLI's `--cache-file`);
+//! - the cache can be **bounded**
+//!   ([`SweepEngine::set_max_cache_entries`], the server's
+//!   `--max-cache-entries`): inserts beyond the bound evict the
+//!   least-recently-used entry, hits refresh recency, and load-time
+//!   merges stream through the same policy — a resident
+//!   [`serve`](super::serve) process can run forever against a bounded
+//!   memory budget ([`SweepOutcome::cache_evictions`] reports the
+//!   per-run eviction count);
 //! - a [`ReportSink`] receives every per-layer [`LayerResult`] in
 //!   deterministic job order once the run completes
 //!   ([`SweepEngine::run_with_sink`]).
@@ -38,7 +46,7 @@
 //! `tests/sweep_determinism.rs` (and against the old serial Ara /
 //! functional paths in `tests/backend_parity.rs`).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -299,6 +307,9 @@ pub struct SweepOutcome {
     /// Duplicate simulations avoided inside this run (shape/strategy
     /// sharing).
     pub dedup_hits: usize,
+    /// Cache entries evicted during this run by the LRU bound
+    /// ([`SweepEngine::set_max_cache_entries`]); 0 when unbounded.
+    pub cache_evictions: u64,
     /// Worker threads used.
     pub threads_used: usize,
     /// Wall-clock seconds of the whole run.
@@ -458,6 +469,97 @@ pub(crate) struct CachedSim {
     pub(crate) stats: SimStats,
 }
 
+/// Bounded, LRU-evicting memo table — the engine's persistent cache.
+///
+/// Recency is a monotonic per-entry tick plus a `BTreeMap<tick, key>`
+/// index, so lookups, inserts and evictions are all O(log n) (ticks are
+/// unique, which makes the tree an exact recency queue). With no bound
+/// set (the default) it behaves as an unbounded memo table; with
+/// `max_entries = Some(n)` every insert beyond capacity evicts the
+/// least-recently-used entry — cache *hits* refresh recency, so a
+/// resident server's working set stays hot while one-off cells age out.
+/// `max_entries = Some(0)` retains nothing (every run re-simulates).
+#[derive(Debug, Default)]
+pub(crate) struct MemoCache {
+    map: HashMap<SimKey, (CachedSim, u64)>,
+    lru: BTreeMap<u64, SimKey>,
+    tick: u64,
+    max_entries: Option<usize>,
+    evictions: u64,
+}
+
+impl MemoCache {
+    /// Cached result for `key`, refreshing its recency on a hit.
+    pub(crate) fn get(&mut self, key: &SimKey) -> Option<CachedSim> {
+        let next = self.tick + 1;
+        let entry = self.map.get_mut(key)?;
+        let old = entry.1;
+        entry.1 = next;
+        let sim = entry.0.clone();
+        self.tick = next;
+        self.lru.remove(&old);
+        self.lru.insert(next, *key);
+        Some(sim)
+    }
+
+    /// Insert (or refresh) an entry, evicting down to the bound.
+    pub(crate) fn insert(&mut self, key: SimKey, sim: CachedSim) {
+        self.tick += 1;
+        let next = self.tick;
+        if let Some((_, old_tick)) = self.map.insert(key, (sim, next)) {
+            self.lru.remove(&old_tick);
+        }
+        self.lru.insert(next, key);
+        self.evict_over_cap();
+    }
+
+    /// Set (or clear) the entry bound, evicting immediately if already
+    /// over it — load-time merges respect the bound too.
+    pub(crate) fn set_max_entries(&mut self, max: Option<usize>) {
+        self.max_entries = max;
+        self.evict_over_cap();
+    }
+
+    /// The configured entry bound, if any.
+    pub(crate) fn max_entries(&self) -> Option<usize> {
+        self.max_entries
+    }
+
+    /// Total entries evicted over this cache's lifetime.
+    pub(crate) fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Entries currently held.
+    pub(crate) fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Drop every entry (does not count as eviction).
+    pub(crate) fn clear(&mut self) {
+        self.map.clear();
+        self.lru.clear();
+    }
+
+    /// Iterate entries (arbitrary order; persistence sorts).
+    pub(crate) fn iter(&self) -> impl Iterator<Item = (&SimKey, &CachedSim)> {
+        self.map.iter().map(|(k, v)| (k, &v.0))
+    }
+
+    fn evict_over_cap(&mut self) {
+        let Some(max) = self.max_entries else { return };
+        while self.map.len() > max {
+            match self.lru.pop_first() {
+                Some((_, victim)) => {
+                    self.map.remove(&victim);
+                    self.evictions += 1;
+                }
+                None => break,
+            }
+        }
+    }
+}
+
 /// One concrete simulation to run: grid coordinates of *a* job that
 /// needs it plus the concrete (non-Mixed) strategy.
 #[derive(Debug, Clone, Copy)]
@@ -487,7 +589,7 @@ enum Plan {
 /// extend that guarantee across process restarts.
 #[derive(Debug, Default)]
 pub struct SweepEngine {
-    cache: HashMap<SimKey, CachedSim>,
+    cache: MemoCache,
     threads_override: Option<usize>,
     memoize_override: Option<bool>,
 }
@@ -508,6 +610,29 @@ impl SweepEngine {
         self.cache.clear();
     }
 
+    /// Bound the memo table to `max` entries with LRU eviction (`None`
+    /// = unbounded, the default). Applies immediately (an over-full
+    /// table shrinks now), to every future insert, *and* to cache-file
+    /// merges via [`SweepEngine::load_cache`] — a resident server with
+    /// `--max-cache-entries` can load an arbitrarily large on-disk
+    /// cache without exceeding its memory budget. `Some(0)` retains
+    /// nothing.
+    pub fn set_max_cache_entries(&mut self, max: Option<usize>) {
+        self.cache.set_max_entries(max);
+    }
+
+    /// The configured cache bound, if any.
+    pub fn max_cache_entries(&self) -> Option<usize> {
+        self.cache.max_entries()
+    }
+
+    /// Cumulative count of cache entries evicted by the LRU bound over
+    /// this engine's lifetime (see [`SweepOutcome::cache_evictions`]
+    /// for a per-run delta).
+    pub fn cache_evictions(&self) -> u64 {
+        self.cache.evictions()
+    }
+
     /// Override the worker-thread count of every spec this engine runs
     /// (`None` = respect each spec). Lets a CLI `--threads` flag reach
     /// the experiment drivers, which build their specs internally.
@@ -524,17 +649,24 @@ impl SweepEngine {
     /// Serialize the memo table to the versioned binary cache format
     /// (deterministic: entries are sorted, the footer is a checksum).
     pub fn serialize_cache(&self) -> Vec<u8> {
-        persist::encode(&self.cache)
+        persist::encode(self.cache.iter())
     }
 
     /// Merge a serialized cache into this engine's memo table.
     /// Malformed, truncated, corrupted or version-mismatched input is
     /// rejected with an error and leaves the cache untouched (callers
-    /// fall back to a cold cache). Returns the number of entries loaded.
+    /// fall back to a cold cache). Returns the number of entries in the
+    /// file; with a cache bound set (see
+    /// [`SweepEngine::set_max_cache_entries`]) the merge itself is
+    /// bounded — entries stream in deterministic file order through the
+    /// LRU policy, so [`SweepEngine::cached_sims`] may end up smaller
+    /// than the returned count.
     pub fn load_cache_bytes(&mut self, bytes: &[u8]) -> Result<usize> {
         let loaded = persist::decode(bytes)?;
         let n = loaded.len();
-        self.cache.extend(loaded);
+        for (key, sim) in loaded {
+            self.cache.insert(key, sim);
+        }
         Ok(n)
     }
 
@@ -557,6 +689,7 @@ impl SweepEngine {
     pub fn run(&mut self, spec: &SweepSpec) -> Result<SweepOutcome> {
         spec.validate()?;
         let t0 = Instant::now();
+        let evictions_before = self.cache.evictions();
         let memoize = self.memoize_override.unwrap_or(spec.memoize);
         let cfg_fps: Vec<u64> = spec.configs.iter().map(config_fingerprint).collect();
         let backend_fps: Vec<u64> = spec.backends.iter().map(|b| b.fingerprint()).collect();
@@ -595,7 +728,7 @@ impl SweepEngine {
                 dedup_hits += 1;
                 return s;
             }
-            let hit = self.cache.get(&key).cloned();
+            let hit = self.cache.get(&key);
             if hit.is_some() {
                 cache_hits += 1;
             }
@@ -784,6 +917,7 @@ impl SweepEngine {
             executed_sims,
             cache_hits,
             dedup_hits,
+            cache_evictions: self.cache.evictions() - evictions_before,
             threads_used: threads,
             elapsed_secs: t0.elapsed().as_secs_f64(),
             block_starts,
@@ -1006,6 +1140,107 @@ mod tests {
         // Mixed ties resolve to FF by the engine's tie rule.
         assert_eq!(out.results[2].requested, Strategy::Mixed);
         assert_eq!(out.results[2].used, Strategy::FeatureFirst);
+    }
+
+    fn key(n: u64) -> SimKey {
+        SimKey {
+            backend_fp: 1,
+            cfg_fp: 2,
+            shape: [n as usize, 0, 0, 0, 0, 0, 0],
+            prec: Precision::Int8,
+            cf: false,
+        }
+    }
+
+    fn sim(cycles: u64) -> CachedSim {
+        CachedSim { stats: SimStats { cycles, ..Default::default() } }
+    }
+
+    #[test]
+    fn memo_cache_evicts_least_recently_used() {
+        let mut c = MemoCache::default();
+        c.set_max_entries(Some(2));
+        c.insert(key(1), sim(1));
+        c.insert(key(2), sim(2));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.evictions(), 0);
+        // Third insert evicts the oldest (key 1).
+        c.insert(key(3), sim(3));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.evictions(), 1);
+        assert!(c.get(&key(1)).is_none());
+        assert!(c.get(&key(2)).is_some());
+        // A hit refreshes recency: key 2 was just touched, so inserting
+        // key 4 evicts key 3, not key 2.
+        c.insert(key(4), sim(4));
+        assert_eq!(c.evictions(), 2);
+        assert!(c.get(&key(3)).is_none());
+        assert!(c.get(&key(2)).is_some());
+        assert_eq!(c.get(&key(4)).unwrap(), sim(4));
+    }
+
+    #[test]
+    fn memo_cache_bound_applies_retroactively_and_reinsert_refreshes() {
+        let mut c = MemoCache::default();
+        for n in 0..10 {
+            c.insert(key(n), sim(n));
+        }
+        assert_eq!(c.len(), 10);
+        // Shrinking the bound evicts the 7 oldest immediately.
+        c.set_max_entries(Some(3));
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.evictions(), 7);
+        for n in 0..7 {
+            assert!(c.get(&key(n)).is_none(), "key {n} must be evicted");
+        }
+        // Re-inserting an existing key replaces in place (no eviction).
+        c.insert(key(9), sim(99));
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.evictions(), 7);
+        assert_eq!(c.get(&key(9)).unwrap(), sim(99));
+        // Clearing the bound stops eviction.
+        c.set_max_entries(None);
+        for n in 20..30 {
+            c.insert(key(n), sim(n));
+        }
+        assert_eq!(c.len(), 13);
+        assert_eq!(c.evictions(), 7);
+    }
+
+    #[test]
+    fn engine_eviction_bound_resimulates_evicted_cells() {
+        let cfg = SpeedConfig::default();
+        // Four unique shapes, one sim each.
+        let layers = vec![
+            ConvLayer::new("a", 4, 4, 6, 6, 3, 1, 1),
+            ConvLayer::new("b", 4, 8, 6, 6, 3, 1, 1),
+            ConvLayer::new("c", 8, 4, 6, 6, 3, 1, 1),
+            ConvLayer::new("d", 4, 4, 8, 8, 3, 1, 1),
+        ];
+        let spec = SweepSpec::new(cfg)
+            .network("t", layers)
+            .precisions(vec![Precision::Int8])
+            .strategies(vec![Strategy::FeatureFirst])
+            .threads(1);
+        let mut engine = SweepEngine::new();
+        engine.set_max_cache_entries(Some(2));
+        assert_eq!(engine.max_cache_entries(), Some(2));
+        let cold = engine.run(&spec).unwrap();
+        assert_eq!(cold.executed_sims, 4);
+        assert_eq!(cold.cache_evictions, 2, "4 inserts through a 2-entry bound");
+        assert_eq!(engine.cached_sims(), 2);
+        assert_eq!(engine.cache_evictions(), 2);
+        // The two evicted cells must re-simulate; the two retained ones
+        // hit. Results stay bit-identical either way.
+        let warm = engine.run(&spec).unwrap();
+        assert_eq!(warm.executed_sims, 2, "evicted cells re-simulate");
+        assert_eq!(warm.cache_hits, 2);
+        assert_eq!(warm.results, cold.results);
+        // Unbounded engines never evict.
+        let mut free = SweepEngine::new();
+        let out = free.run(&spec).unwrap();
+        assert_eq!(out.cache_evictions, 0);
+        assert_eq!(free.cached_sims(), 4);
     }
 
     #[test]

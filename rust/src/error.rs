@@ -36,6 +36,11 @@ pub enum Error {
     /// PJRT / XLA runtime failure.
     Runtime(String),
 
+    /// Malformed or invalid sweep-server protocol line (see
+    /// `coordinator::serve`). Servers answer these with a structured
+    /// error record instead of exiting.
+    Protocol(String),
+
     /// Underlying I/O failure.
     Io(std::io::Error),
 }
@@ -51,6 +56,7 @@ impl fmt::Display for Error {
             Error::Sim(msg) => write!(f, "simulation error: {msg}"),
             Error::Mapping(msg) => write!(f, "dataflow mapping error: {msg}"),
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Protocol(msg) => write!(f, "protocol error: {msg}"),
             Error::Io(e) => write!(f, "{e}"),
         }
     }
@@ -91,6 +97,10 @@ impl Error {
     pub fn runtime(msg: impl Into<String>) -> Self {
         Error::Runtime(msg.into())
     }
+    /// Shorthand constructor for serve-protocol errors.
+    pub fn protocol(msg: impl Into<String>) -> Self {
+        Error::Protocol(msg.into())
+    }
 }
 
 #[cfg(test)]
@@ -107,6 +117,7 @@ mod tests {
         assert_eq!(Error::sim("y").to_string(), "simulation error: y");
         assert_eq!(Error::mapping("z").to_string(), "dataflow mapping error: z");
         assert_eq!(Error::runtime("w").to_string(), "runtime error: w");
+        assert_eq!(Error::protocol("v").to_string(), "protocol error: v");
     }
 
     #[test]

@@ -34,8 +34,11 @@
 //!   deterministically bit-identical to the serial path at any thread
 //!   count. [`coordinator::backend`] is the pluggable job-execution
 //!   layer (SPEED cycle engine, Ara baseline, golden functional
-//!   verifier), and the memo cache persists across processes via
-//!   `SweepEngine::save_cache`/`load_cache`.
+//!   verifier), the memo cache persists across processes via
+//!   `SweepEngine::save_cache`/`load_cache` (with an optional LRU
+//!   bound), and [`coordinator::serve`] parks the engine behind a
+//!   line-delimited request protocol (`speed serve` / `speed request`)
+//!   so a resident process serves sweeps from a hot cache.
 //!
 //! ## Example: one layer
 //!

@@ -6,6 +6,11 @@
 //! speed all   [--out DIR] [--threads N] [--no-memoize] [--cache-file PATH] [config flags]
 //! speed sweep [--backend speed|ara|golden|all] [--threads N] [--no-memoize]
 //!             [--cache-file PATH] [--out DIR] [config flags]   (see `speed sweep --help`)
+//! speed serve [--tcp ADDR] [--port-file PATH] [--cache-file PATH]
+//!             [--max-cache-entries N] [--threads N] [config flags]
+//!                                         (long-running sweep server; `--help`)
+//! speed request (--emit | --tcp ADDR) [request flags]
+//!                                         (client for `speed serve`; `--help`)
 //! speed sim --model NAME [--prec 4|8|16] [--strategy ff|cf|mixed]
 //! speed asm FILE.s            # assemble + hexdump
 //! speed disasm FILE.bin       # disassemble 32-bit words
@@ -17,6 +22,7 @@
 
 use speed::arch::{Precision, SpeedConfig};
 use speed::coordinator::backend::AraAnalytic;
+use speed::coordinator::serve;
 use speed::coordinator::experiments::{
     headline_checks, run_fig3, run_fig3_with, run_fig4, run_fig4_with, run_fig5, run_table1,
     run_table1_with,
@@ -29,7 +35,7 @@ use speed::dataflow::Strategy;
 use speed::models::model_by_name;
 
 fn usage() -> ! {
-    eprintln!("{}", "usage: speed <fig3|fig4|fig5|table1|all|sweep|sim|asm|disasm|golden-check> [flags]\n  `speed sweep --help` lists the sweep flags; see README.md for the rest");
+    eprintln!("{}", "usage: speed <fig3|fig4|fig5|table1|all|sweep|serve|request|sim|asm|disasm|golden-check> [flags]\n  `speed sweep --help`, `speed serve --help` and `speed request --help` list the\n  per-command flags; see README.md for the rest");
     std::process::exit(2);
 }
 
@@ -63,6 +69,73 @@ config flags: --lanes N --vlen BITS --tile-r N --tile-c N
 
 `speed all` honors --threads, --no-memoize and --cache-file too (the
 experiment drivers run on the same engine).";
+
+const SERVE_HELP: &str = "\
+speed serve — long-running sweep server over one shared engine
+
+Accepts line-delimited requests (the README's \"server mode\" grammar)
+on stdin (default) or a TCP listener, runs each on the shared sweep
+engine, and streams per-layer `block` records plus a terminating
+`summary` back per request. Requests share the memo table: a repeated
+cell is a cache hit, whoever simulated it first. Stops on stdin EOF or
+a `shutdown` request, flushing the cache file first.
+
+flags:
+  --tcp ADDR    listen on ADDR (e.g. 127.0.0.1:7878; port 0 picks an
+                ephemeral port) instead of stdin/stdout; the bound
+                address is printed as a `listening` record on stdout
+  --port-file PATH
+                also write the bound TCP address to PATH (how scripts
+                discover an ephemeral port)
+  --cache-file PATH
+                load the persistent result cache from PATH at startup
+                (cold start if missing/corrupt) and flush it back on
+                shutdown
+  --max-cache-entries N
+                bound the memo table to N entries with LRU eviction
+                (bounds the load-time merge too); default unbounded
+  --threads N   worker threads per request (0 = one per core)
+  --help        this text
+
+config flags (the base config; requests may override per request):
+  --lanes N --vlen BITS --tile-r N --tile-c N --dram-bw BYTES/CYC
+  --freq MHZ";
+
+const REQUEST_HELP: &str = "\
+speed request — client for `speed serve`
+
+Builds one protocol request, sends it to a TCP server, echoes the
+streamed reply lines to stdout and checks expectations (for tests/CI).
+With --emit the request line is printed instead of sent, for piping
+into a stdin-mode server.
+
+flags:
+  --tcp ADDR        server address (required unless --emit)
+  --emit            print the request line and exit
+  --id N            correlation id echoed on every reply (default 0)
+  --network NAME    zoo model to sweep (VGG16/ResNet18/GoogLeNet/
+                    SqueezeNet); required for sweep requests
+  --layers I,J,..   layer-index subset of the network
+  --backends A,B    backend axis (speed/ara/golden; default speed)
+  --prec 4,8,16     precision axis (default 16,8,4)
+  --strategy ff,cf,mixed
+                    strategy axis (default mixed)
+  --threads N       worker threads for this request
+  --no-memoize      disable memoization for this request
+  --op sweep|ping|shutdown
+                    operation (default sweep)
+  --raw LINE        send LINE verbatim instead of the built request
+  --expect-sims N   exit non-zero unless the summary reports exactly N
+                    executed simulations (0 = assert pure cache)
+  --expect-error    exit zero only if the server answers with an
+                    `error` record
+  --timeout-secs N  socket read timeout (default 120); replies stream
+                    only after the run completes, so size this to the
+                    whole run for a big cold sweep
+
+config override flags (applied server-side, this request only):
+  --lanes N --vlen BITS --tile-r N --tile-c N --dram-bw BYTES/CYC
+  --freq MHZ";
 
 /// Load `--cache-file` into the engine if present; a missing file is a
 /// cold start, a malformed one is reported and ignored (cold cache).
@@ -130,8 +203,16 @@ impl Flags {
         self.0.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
     }
 
+    /// Parsed value of a numeric flag. A flag that is present but
+    /// malformed exits loudly — a typo'd `--expect-sims` or
+    /// `--max-cache-entries` must never silently become "unset".
     fn num<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
-        self.get(key).and_then(|v| v.parse().ok())
+        self.get(key).map(|v| {
+            v.parse().unwrap_or_else(|_| {
+                eprintln!("bad value `{v}` for --{key}");
+                std::process::exit(2);
+            })
+        })
     }
 }
 
@@ -294,6 +375,96 @@ fn main() -> speed::Result<()> {
                 write_out(out, &format!("{name}.md"), &md);
             }
             save_cache_flag(&engine, flags.get("cache-file"));
+        }
+        "serve" => {
+            // Long-running sweep server (see `speed serve --help` and
+            // the README's "server mode" section).
+            if flags.get("help").is_some() {
+                println!("{SERVE_HELP}");
+                return Ok(());
+            }
+            let opts = serve::ServerOptions {
+                cfg,
+                tcp: flags.get("tcp").map(String::from),
+                port_file: flags.get("port-file").map(String::from),
+                cache_file: flags.get("cache-file").map(String::from),
+                max_cache_entries: flags.num("max-cache-entries"),
+                threads: flags.num("threads"),
+            };
+            serve::run_server(opts)?;
+        }
+        "request" => {
+            // Client for `speed serve` (see `speed request --help`).
+            if flags.get("help").is_some() {
+                println!("{REQUEST_HELP}");
+                return Ok(());
+            }
+            let mut req = serve::Request::default();
+            if let Some(id) = flags.num("id") {
+                req.id = id;
+            }
+            if let Some(op) = flags.get("op") {
+                req.op = match op {
+                    "sweep" => serve::Op::Sweep,
+                    "ping" => serve::Op::Ping,
+                    "shutdown" => serve::Op::Shutdown,
+                    other => {
+                        eprintln!("bad op `{other}` (sweep/ping/shutdown)");
+                        std::process::exit(2);
+                    }
+                };
+            }
+            if let Some(n) = flags.get("network") {
+                req.network = n.to_string();
+            }
+            if let Some(ls) = flags.get("layers") {
+                let parsed: Vec<usize> = ls
+                    .split(',')
+                    .map(|t| {
+                        t.trim().parse().unwrap_or_else(|_| {
+                            eprintln!("bad layer index `{t}`");
+                            std::process::exit(2);
+                        })
+                    })
+                    .collect();
+                req.layers = Some(parsed);
+            }
+            if let Some(bs) = flags.get("backends") {
+                req.backends = bs.split(',').map(|t| t.trim().to_string()).collect();
+            }
+            if let Some(ps) = flags.get("prec") {
+                req.precisions = ps.split(',').map(|t| parse_precision(t.trim())).collect();
+            }
+            if let Some(ss) = flags.get("strategy") {
+                req.strategies = ss.split(',').map(|t| parse_strategy(t.trim())).collect();
+            }
+            if let Some(t) = flags.num("threads") {
+                req.threads = Some(t);
+            }
+            if flags.get("no-memoize").is_some() {
+                req.memoize = false;
+            }
+            req.overrides = serve::CfgOverrides {
+                lanes: flags.num("lanes"),
+                vlen: flags.num("vlen"),
+                tile_r: flags.num("tile-r"),
+                tile_c: flags.num("tile-c"),
+                dram_bw: flags.num("dram-bw"),
+                freq: flags.num("freq"),
+            };
+            let copts = serve::ClientOptions {
+                tcp: flags.get("tcp").map(String::from),
+                emit: flags.get("emit").is_some(),
+                raw: flags.get("raw").map(String::from),
+                request: req,
+                expect_sims: flags.num("expect-sims"),
+                expect_error: flags.get("expect-error").is_some(),
+                timeout_secs: flags.num("timeout-secs").unwrap_or(120),
+            };
+            let code = serve::run_client(&copts)?;
+            if code != 0 {
+                std::process::exit(code);
+            }
         }
         "sim" => {
             let name = flags.get("model").unwrap_or("ResNet18");

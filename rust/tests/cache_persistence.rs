@@ -104,6 +104,35 @@ fn corrupted_and_mismatched_caches_are_rejected_without_panic() {
 }
 
 #[test]
+fn bounded_engine_loads_huge_cache_file_without_exceeding_cap() {
+    // Regression: `load_cache` merge semantics used to be unbounded, so
+    // a huge on-disk cache could blow a resident server's memory. The
+    // LRU bound now applies to the load-time merge too.
+    let cfg = SpeedConfig::default();
+    let spec = small_spec(&cfg);
+    let mut donor = SweepEngine::new();
+    donor.run(&spec).unwrap();
+    assert!(donor.cached_sims() > 2, "need more entries than the bound");
+    let path = scratch("bounded_load");
+    donor.save_cache(&path).unwrap();
+
+    let mut bounded = SweepEngine::new();
+    bounded.set_max_cache_entries(Some(2));
+    let loaded = bounded.load_cache(&path).unwrap();
+    assert_eq!(loaded, donor.cached_sims(), "reports the file's entry count");
+    assert_eq!(bounded.cached_sims(), 2, "merge respects the cap");
+    assert_eq!(bounded.cache_evictions() as usize, loaded - 2);
+    // The bounded engine still replays the grid bit-identically (the
+    // evicted cells re-simulate, the retained ones hit).
+    let replay = bounded.run(&spec).unwrap();
+    assert!(replay.executed_sims > 0, "evicted cells must re-simulate");
+    assert!(replay.cache_hits > 0, "retained cells must hit");
+    let full = donor.run(&spec).unwrap();
+    assert_eq!(replay.results, full.results);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn cache_files_merge_and_ignore_foreign_configurations() {
     // Entries are keyed by (backend, config) fingerprints: a cache
     // saved under one machine configuration never hits under another.

@@ -1,0 +1,209 @@
+//! True end-to-end serve contract against the built `speed` binary:
+//! stdin mode (pipe requests in, read replies out) and TCP mode
+//! (`--tcp 127.0.0.1:0` + `--port-file` + `speed request`), with the
+//! warm-repeat-is-pure-cache acceptance check, a malformed-request
+//! error reply, graceful shutdown and a flushed cache file. Every wait
+//! is bounded — a hung server fails the test instead of wedging it.
+
+use std::io::Write;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use speed::coordinator::serve::{Op, Request};
+
+const BIN: &str = env!("CARGO_BIN_EXE_speed");
+const WAIT: Duration = Duration::from_secs(120);
+
+/// Kill the child on scope exit so a failing test never leaks a
+/// resident server.
+struct Reap(Child);
+
+impl Drop for Reap {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+fn scratch(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("speed_serve_e2e_{}_{}", tag, std::process::id()))
+}
+
+/// A tiny cold request: one small SqueezeNet layer, int8, FF.
+fn tiny_request(id: u64) -> Request {
+    Request {
+        id,
+        network: "SqueezeNet".into(),
+        layers: Some(vec![1]),
+        precisions: vec![speed::arch::Precision::Int8],
+        strategies: vec![speed::dataflow::Strategy::FeatureFirst],
+        threads: Some(1),
+        ..Default::default()
+    }
+}
+
+fn wait_for_exit(child: &mut Child, what: &str) -> std::process::ExitStatus {
+    let deadline = Instant::now() + WAIT;
+    loop {
+        if let Some(status) = child.try_wait().expect("try_wait") {
+            return status;
+        }
+        assert!(Instant::now() < deadline, "{what} hung past {WAIT:?}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+#[test]
+fn stdin_mode_cold_warm_malformed_and_shutdown() {
+    let cache = scratch("stdin.swc");
+    let _ = std::fs::remove_file(&cache);
+    let child = Command::new(BIN)
+        .args(["serve", "--cache-file"])
+        .arg(&cache)
+        .args(["--max-cache-entries", "1000"])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn speed serve");
+    let mut child = Reap(child);
+
+    {
+        let stdin = child.0.stdin.as_mut().expect("piped stdin");
+        let script = format!(
+            "{}\nmalformed line\n{}\n{}\n",
+            tiny_request(1).to_line(),
+            tiny_request(2).to_line(),
+            Request { id: 9, op: Op::Shutdown, ..Default::default() }.to_line()
+        );
+        stdin.write_all(script.as_bytes()).expect("write requests");
+        stdin.flush().expect("flush requests");
+    }
+    drop(child.0.stdin.take()); // EOF, in case shutdown is missed
+
+    let status = wait_for_exit(&mut child.0, "stdin-mode server");
+    assert!(status.success(), "serve exited with {status}");
+
+    let mut out = String::new();
+    use std::io::Read;
+    child.0.stdout.take().expect("piped stdout").read_to_string(&mut out).expect("read replies");
+    let lines: Vec<&str> = out.lines().collect();
+    // block, summary(cold), error, block, summary(warm), bye
+    assert_eq!(lines.len(), 6, "reply stream:\n{out}");
+    assert!(lines[0].contains("\"type\":\"block\""), "{}", lines[0]);
+    assert!(lines[1].contains("\"type\":\"summary\"") && lines[1].contains("\"sims\":1"),
+        "cold summary must execute one sim: {}", lines[1]);
+    assert!(lines[2].contains("\"type\":\"error\""), "{}", lines[2]);
+    assert!(lines[4].contains("\"type\":\"summary\"") && lines[4].contains("\"sims\":0"),
+        "warm repeat must be pure cache: {}", lines[4]);
+    assert!(lines[5].contains("\"type\":\"bye\""), "{}", lines[5]);
+
+    // Graceful shutdown flushed a loadable cache file.
+    let mut engine = speed::coordinator::sweep::SweepEngine::new();
+    let loaded = engine.load_cache(&cache).expect("flushed cache file must decode");
+    assert_eq!(loaded, 1, "exactly the one simulated cell is persisted");
+    let _ = std::fs::remove_file(&cache);
+}
+
+fn request_cmd(addr: &str, extra: &[&str]) -> Command {
+    let mut cmd = Command::new(BIN);
+    cmd.args([
+        "request",
+        "--tcp",
+        addr,
+        "--network",
+        "SqueezeNet",
+        "--layers",
+        "1",
+        "--prec",
+        "8",
+        "--strategy",
+        "ff",
+        "--threads",
+        "1",
+        "--timeout-secs",
+        "120",
+    ]);
+    cmd.args(extra);
+    cmd.stdout(Stdio::piped()).stderr(Stdio::piped());
+    cmd
+}
+
+#[test]
+fn tcp_mode_end_to_end_with_client_expectations() {
+    let cache = scratch("tcp.swc");
+    let port_file = scratch("tcp.port");
+    let _ = std::fs::remove_file(&cache);
+    let _ = std::fs::remove_file(&port_file);
+
+    let child = Command::new(BIN)
+        .args(["serve", "--tcp", "127.0.0.1:0", "--port-file"])
+        .arg(&port_file)
+        .arg("--cache-file")
+        .arg(&cache)
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn speed serve --tcp");
+    let mut child = Reap(child);
+
+    // Discover the ephemeral port.
+    let deadline = Instant::now() + WAIT;
+    let addr = loop {
+        if let Ok(s) = std::fs::read_to_string(&port_file) {
+            if !s.trim().is_empty() {
+                break s.trim().to_string();
+            }
+        }
+        assert!(Instant::now() < deadline, "server never wrote {port_file:?}");
+        assert!(
+            child.0.try_wait().expect("try_wait").is_none(),
+            "server exited before listening"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    };
+
+    // Cold request: succeeds, summary present.
+    let cold = request_cmd(&addr, &["--id", "1"]).output().expect("cold request");
+    assert!(cold.status.success(), "cold: {cold:?}");
+    let cold_out = String::from_utf8_lossy(&cold.stdout).to_string();
+    assert!(cold_out.contains("\"type\":\"summary\"") && cold_out.contains("\"sims\":1"),
+        "cold reply:\n{cold_out}");
+
+    // Warm repeat over a *new connection*: the shared engine makes it
+    // pure cache; the client asserts sims == 0 itself.
+    let warm = request_cmd(&addr, &["--id", "2", "--expect-sims", "0"])
+        .output()
+        .expect("warm request");
+    assert!(
+        warm.status.success(),
+        "warm --expect-sims 0 failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&warm.stdout),
+        String::from_utf8_lossy(&warm.stderr)
+    );
+
+    // Malformed request: a structured error reply, not a hang/exit.
+    let bad = request_cmd(&addr, &["--raw", "{\"definitely\":\"not a request\"", "--expect-error"])
+        .output()
+        .expect("malformed request");
+    assert!(bad.status.success(), "--expect-error must accept the error reply: {bad:?}");
+
+    // The server survived the malformed line: ping still answers.
+    let ping = request_cmd(&addr, &["--id", "7", "--op", "ping"]).output().expect("ping");
+    assert!(ping.status.success(), "ping: {ping:?}");
+    assert!(String::from_utf8_lossy(&ping.stdout).contains("\"type\":\"pong\""));
+
+    // Shutdown: bye reply, server exit, cache file flushed.
+    let shut = request_cmd(&addr, &["--id", "9", "--op", "shutdown"]).output().expect("shutdown");
+    assert!(shut.status.success(), "shutdown: {shut:?}");
+    assert!(String::from_utf8_lossy(&shut.stdout).contains("\"type\":\"bye\""));
+    let status = wait_for_exit(&mut child.0, "tcp-mode server");
+    assert!(status.success(), "serve exited with {status}");
+
+    let mut engine = speed::coordinator::sweep::SweepEngine::new();
+    assert_eq!(engine.load_cache(&cache).expect("flushed cache"), 1);
+
+    let _ = std::fs::remove_file(&cache);
+    let _ = std::fs::remove_file(&port_file);
+}

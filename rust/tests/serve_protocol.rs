@@ -1,0 +1,316 @@
+//! Serve-protocol contract: request parse ∘ serialize is the identity
+//! over every field (property-tested), malformed lines are rejected
+//! with errors (never panics), a full in-process serve session streams
+//! blocks + summary per request — with a warm repeat of an identical
+//! request performing **zero** new simulations — and the engine's LRU
+//! cache bound evicts deterministically, with evicted cells
+//! re-simulating on the next request.
+
+use std::io::BufReader;
+use std::sync::Mutex;
+
+use speed::arch::{Precision, SpeedConfig};
+use speed::coordinator::serve::{
+    self, parse_record, CfgOverrides, Op, Request, Value,
+};
+use speed::coordinator::sweep::{SweepEngine, SweepSpec};
+use speed::dataflow::{ConvLayer, Strategy};
+use speed::testutil::Prng;
+
+/// Non-empty subset of `0..n`, in index order, no duplicates.
+fn pick_subset(rng: &mut Prng, n: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    for i in 0..n {
+        if rng.below(2) == 1 {
+            out.push(i);
+        }
+    }
+    if out.is_empty() {
+        out.push(rng.below(n as u64) as usize);
+    }
+    out
+}
+
+fn random_request(rng: &mut Prng) -> Request {
+    let nets = ["VGG16", "ResNet18", "GoogLeNet", "SqueezeNet"];
+    let backends = ["speed", "ara", "golden"];
+    let precisions = [Precision::Int4, Precision::Int8, Precision::Int16];
+    let strategies = [Strategy::FeatureFirst, Strategy::ChannelFirst, Strategy::Mixed];
+    let mut req = Request {
+        id: rng.next_u64() >> 12, // keep within exact-integer range
+        op: match rng.below(4) {
+            0 => Op::Ping,
+            1 => Op::Shutdown,
+            _ => Op::Sweep,
+        },
+        network: nets[rng.below(nets.len() as u64) as usize].to_string(),
+        ..Default::default()
+    };
+    if rng.below(2) == 1 {
+        req.layers = Some(pick_subset(rng, 12));
+    }
+    if rng.below(2) == 1 {
+        req.backends = pick_subset(rng, backends.len())
+            .into_iter()
+            .map(|i| backends[i].to_string())
+            .collect();
+    }
+    if rng.below(2) == 1 {
+        req.precisions = pick_subset(rng, 3).into_iter().map(|i| precisions[i]).collect();
+    }
+    if rng.below(2) == 1 {
+        req.strategies = pick_subset(rng, 3).into_iter().map(|i| strategies[i]).collect();
+    }
+    if rng.below(2) == 1 {
+        req.threads = Some(rng.below(16) as usize);
+    }
+    req.memoize = rng.below(4) != 0;
+    req.overrides = CfgOverrides {
+        lanes: (rng.below(2) == 1).then(|| 1 << rng.range_usize(2, 4)),
+        vlen: (rng.below(2) == 1).then(|| 512 << rng.range_usize(0, 2)),
+        tile_r: (rng.below(2) == 1).then(|| rng.range_usize(2, 8)),
+        tile_c: (rng.below(2) == 1).then(|| rng.range_usize(2, 8)),
+        dram_bw: (rng.below(2) == 1).then(|| rng.range_usize(8, 64) as f64 / 2.0),
+        freq: (rng.below(2) == 1).then(|| rng.range_usize(100, 1500) as f64),
+    };
+    req
+}
+
+#[test]
+fn request_round_trips_over_all_fields() {
+    let mut rng = Prng::new(0x5E12_17E5);
+    for i in 0..300 {
+        let req = random_request(&mut rng);
+        let line = req.to_line();
+        let back = Request::parse(&line)
+            .unwrap_or_else(|e| panic!("iteration {i}: {e}\nline: {line}"));
+        assert_eq!(back, req, "iteration {i}: round-trip diverged\nline: {line}");
+        // Serialization is deterministic and idempotent.
+        assert_eq!(back.to_line(), line, "iteration {i}");
+    }
+}
+
+#[test]
+fn malformed_requests_are_rejected_not_panics() {
+    for bad in [
+        "",
+        "{",
+        "]",
+        "{\"id\":1,\"network\":\"VGG",          // truncated string
+        "{\"id\":1,\"network\":\"VGG16\"",      // truncated object
+        "{\"id\":1,\"network\":\"VGG16\"} junk", // trailing garbage
+        "{\"id\":1,\"id\":2}",                  // duplicate field
+        "{\"id\":1,\"flavor\":\"blue\"}",       // unknown field
+        "{\"id\":-1}",                          // negative id
+        "{\"id\":1,\"layers\":[]}",             // empty subset
+        "{\"id\":1,\"backends\":[\"riscv\"]}",  // unknown backend
+        "{\"id\":1,\"precisions\":[7]}",        // unknown precision
+        "{\"id\":1,\"strategies\":[\"zz\"]}",   // unknown strategy
+        "{\"id\":1,\"network\":42}",            // wrong type
+        "{\"id\":[1]}",                         // wrong shape
+    ] {
+        assert!(Request::parse(bad).is_err(), "must reject {bad:?}");
+    }
+}
+
+/// Drive one in-process serve session and return its reply lines.
+fn serve_session(engine: &Mutex<SweepEngine>, input: &str) -> (Vec<String>, serve::ServeStats) {
+    let cfg = SpeedConfig::default();
+    let mut out: Vec<u8> = Vec::new();
+    let stats =
+        serve::serve_lines(engine, &cfg, BufReader::new(input.as_bytes()), &mut out);
+    let text = String::from_utf8(out).expect("utf-8 reply stream");
+    (text.lines().map(String::from).collect(), stats)
+}
+
+fn record_type(line: &str) -> String {
+    let fields = parse_record(line).unwrap_or_else(|e| panic!("unparseable reply {line:?}: {e}"));
+    match fields.iter().find(|(k, _)| k == "type") {
+        Some((_, Value::Str(s))) => s.clone(),
+        other => panic!("reply without string `type`: {line:?} ({other:?})"),
+    }
+}
+
+fn summary_field(line: &str, name: &str) -> u64 {
+    let fields = parse_record(line).unwrap();
+    match fields.iter().find(|(k, _)| k == name) {
+        Some((_, Value::Int(v))) => *v,
+        other => panic!("summary field `{name}` missing/non-integer: {line:?} ({other:?})"),
+    }
+}
+
+#[test]
+fn serve_session_streams_blocks_and_summaries_with_warm_repeat_zero_sims() {
+    // Two identical sweep requests (one tiny SqueezeNet layer), one
+    // malformed line in between, then shutdown. The warm repeat must
+    // execute zero simulations — the acceptance criterion.
+    let sweep = Request {
+        id: 1,
+        network: "SqueezeNet".into(),
+        layers: Some(vec![1]),
+        precisions: vec![Precision::Int8],
+        strategies: vec![Strategy::FeatureFirst],
+        threads: Some(1),
+        ..Default::default()
+    };
+    let warm = Request { id: 2, ..sweep.clone() };
+    let input = format!(
+        "{}\nthis is not a record\n{}\n{}\n",
+        sweep.to_line(),
+        warm.to_line(),
+        Request { id: 9, op: Op::Shutdown, ..Default::default() }.to_line()
+    );
+    let engine = Mutex::new(SweepEngine::new());
+    let (lines, stats) = serve_session(&engine, &input);
+
+    assert_eq!(stats.requests, 4);
+    assert_eq!(stats.errors, 1);
+    assert!(stats.shutdown);
+
+    let types: Vec<String> = lines.iter().map(|l| record_type(l)).collect();
+    assert_eq!(
+        types,
+        vec!["block", "summary", "error", "block", "summary", "bye"],
+        "reply stream shape: {lines:#?}"
+    );
+    // Cold request: exactly one simulation (1 layer × int8 × ff).
+    assert_eq!(summary_field(&lines[1], "id"), 1);
+    assert_eq!(summary_field(&lines[1], "sims"), 1);
+    assert_eq!(summary_field(&lines[1], "jobs"), 1);
+    assert_eq!(summary_field(&lines[1], "cache_entries"), 1);
+    // Warm repeat: zero new simulations, served from the shared memo.
+    assert_eq!(summary_field(&lines[4], "id"), 2);
+    assert_eq!(summary_field(&lines[4], "sims"), 0);
+    assert_eq!(summary_field(&lines[4], "cache_hits"), 1);
+    // Identical block payloads (bit-identical replay, different id).
+    assert_eq!(
+        lines[0].replace("\"id\":1", "\"id\":2"),
+        lines[3],
+        "warm block must be bit-identical"
+    );
+    // The error reply is structured and carries a message.
+    assert!(lines[2].contains("\"message\":"), "{}", lines[2]);
+}
+
+#[test]
+fn serve_session_replies_errors_for_valid_lines_with_bad_semantics() {
+    let engine = Mutex::new(SweepEngine::new());
+    let input = concat!(
+        "{\"id\":3}\n",                         // sweep without network
+        "{\"id\":4,\"network\":\"AlexNet\"}\n", // unknown network
+        "{\"id\":5,\"network\":\"SqueezeNet\",\"layers\":[999]}\n", // bad subset
+        "{\"id\":6,\"network\":\"SqueezeNet\",\"layers\":[1],\"lanes\":3}\n", // bad config
+        "{\"id\":7,\"op\":\"ping\"}\n",
+    );
+    let (lines, stats) = serve_session(&engine, input);
+    assert_eq!(stats.requests, 5);
+    assert_eq!(stats.errors, 4);
+    assert!(!stats.shutdown, "EOF, not shutdown");
+    let types: Vec<String> = lines.iter().map(|l| record_type(l)).collect();
+    assert_eq!(types, vec!["error", "error", "error", "error", "pong"]);
+    // Error replies echo the failing request's id.
+    for (line, want) in lines.iter().zip([3u64, 4, 5, 6]) {
+        assert_eq!(summary_field(line, "id"), want, "{line}");
+    }
+    assert_eq!(engine.lock().unwrap().cached_sims(), 0, "no sweep ever ran");
+}
+
+#[test]
+fn eviction_bound_is_observable_through_a_serve_session() {
+    // Server with a 1-entry cache: two distinct cells (two layer
+    // shapes) evict each other, and the repeat re-simulates — the
+    // `--max-cache-entries` acceptance criterion, engine-level.
+    let a = Request {
+        id: 1,
+        network: "SqueezeNet".into(),
+        layers: Some(vec![1]), // fire2_s1x1
+        precisions: vec![Precision::Int8],
+        strategies: vec![Strategy::FeatureFirst],
+        threads: Some(1),
+        ..Default::default()
+    };
+    let b = Request { id: 2, layers: Some(vec![2]), ..a.clone() }; // fire2_e1x1
+    let a_again = Request { id: 3, ..a.clone() };
+    let input =
+        format!("{}\n{}\n{}\n", a.to_line(), b.to_line(), a_again.to_line());
+    let mut engine = SweepEngine::new();
+    engine.set_max_cache_entries(Some(1));
+    let engine = Mutex::new(engine);
+    let (lines, _) = serve_session(&engine, &input);
+    let summaries: Vec<&String> =
+        lines.iter().filter(|l| record_type(l) == "summary").collect();
+    assert_eq!(summaries.len(), 3);
+    assert_eq!(summary_field(summaries[0], "sims"), 1, "cold A simulates");
+    assert_eq!(summary_field(summaries[1], "sims"), 1, "cold B simulates");
+    assert_eq!(summary_field(summaries[1], "evictions"), 1, "B evicts A");
+    assert_eq!(
+        summary_field(summaries[2], "sims"),
+        1,
+        "A was evicted, so it must re-simulate"
+    );
+    assert_eq!(summary_field(summaries[2], "cache_entries"), 1);
+    let eng = engine.lock().unwrap();
+    assert_eq!(eng.cached_sims(), 1);
+    assert_eq!(eng.cache_evictions(), 2);
+}
+
+#[test]
+fn engine_eviction_insert_beyond_bound_and_resimulate() {
+    // Pure engine-level variant: insert > N cells, observe the
+    // eviction count, then observe evicted cells re-simulating.
+    let cfg = SpeedConfig::default();
+    let layers: Vec<ConvLayer> = (0..5)
+        .map(|i| ConvLayer::new(&format!("l{i}"), 4 + i, 4, 6, 6, 3, 1, 1))
+        .collect();
+    let spec = SweepSpec::new(cfg)
+        .network("t", layers)
+        .precisions(vec![Precision::Int8])
+        .strategies(vec![Strategy::FeatureFirst])
+        .threads(1);
+    let mut engine = SweepEngine::new();
+    engine.set_max_cache_entries(Some(3));
+    let cold = engine.run(&spec).unwrap();
+    assert_eq!(cold.executed_sims, 5);
+    assert_eq!(cold.cache_evictions, 2, "5 inserts through a 3-entry bound");
+    assert_eq!(engine.cached_sims(), 3);
+    let warm = engine.run(&spec).unwrap();
+    assert_eq!(warm.executed_sims, 2, "the two evicted cells re-simulate");
+    assert_eq!(warm.cache_hits, 3);
+    assert_eq!(warm.results, cold.results, "eviction must never change results");
+}
+
+#[test]
+fn bounded_load_time_merge_respects_the_cap() {
+    // Regression for the load-time merge path: a big on-disk cache
+    // streamed into a bounded engine must not exceed the bound.
+    let cfg = SpeedConfig::default();
+    let layers: Vec<ConvLayer> = (0..6)
+        .map(|i| ConvLayer::new(&format!("l{i}"), 4, 4 + i, 6, 6, 3, 1, 1))
+        .collect();
+    let spec = SweepSpec::new(cfg)
+        .network("t", layers)
+        .precisions(vec![Precision::Int8])
+        .strategies(vec![Strategy::FeatureFirst])
+        .threads(1);
+    let mut donor = SweepEngine::new();
+    donor.run(&spec).unwrap();
+    assert_eq!(donor.cached_sims(), 6);
+    let bytes = donor.serialize_cache();
+
+    let mut bounded = SweepEngine::new();
+    bounded.set_max_cache_entries(Some(2));
+    let loaded = bounded.load_cache_bytes(&bytes).unwrap();
+    assert_eq!(loaded, 6, "load reports the file's entry count");
+    assert_eq!(bounded.cached_sims(), 2, "merge is bounded");
+    assert_eq!(bounded.cache_evictions(), 4);
+    // Loading the same bytes twice is deterministic (same survivors).
+    let mut again = SweepEngine::new();
+    again.set_max_cache_entries(Some(2));
+    again.load_cache_bytes(&bytes).unwrap();
+    assert_eq!(again.serialize_cache(), bounded.serialize_cache());
+    // The bounded engine still runs the grid correctly (4 re-sims).
+    let out = bounded.run(&spec).unwrap();
+    assert_eq!(out.cache_hits, 2);
+    assert_eq!(out.executed_sims, 4);
+    assert_eq!(out.results, donor.run(&spec).unwrap().results);
+}
