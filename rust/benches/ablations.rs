@@ -4,12 +4,22 @@
 //! figure, but the evidence that the models respond structurally (and
 //! the basis of the §Perf roofline discussion).
 //!
+//! The grids run on the sweep engine's `configs` axis (one spec per
+//! study, one shared engine), so ablations get the worker pool, the
+//! memo cache and intra-layer shard fan-out for free instead of the
+//! old serial per-config loops — and the roofline section schedules
+//! the `roofline` backend next to `speed`, so every cycle result is
+//! sanity-bounded by its analytic envelope in the same sweep.
+//!
 //! Run: `cargo bench --bench ablations`
 
+use std::sync::Arc;
+
 use speed::arch::{Precision, SpeedConfig};
-use speed::coordinator::simulate_layer;
-use speed::cost::{perf, roofline_gops, speed_area_breakdown};
-use speed::dataflow::{ConvLayer, Strategy};
+use speed::coordinator::backend::{RooflineBound, SpeedCycle};
+use speed::coordinator::sweep::{SweepEngine, SweepOutcome, SweepSpec};
+use speed::cost::{perf, speed_area_breakdown};
+use speed::dataflow::ConvLayer;
 
 fn bench_layers() -> Vec<ConvLayer> {
     vec![
@@ -19,16 +29,33 @@ fn bench_layers() -> Vec<ConvLayer> {
     ]
 }
 
-fn sweep(label: &str, cfg: &SpeedConfig, p: Precision) {
-    let area = speed_area_breakdown(cfg).total();
-    let mut tot_cycles = 0u64;
-    let mut tot_ops = 0u64;
-    for l in bench_layers() {
-        let r = simulate_layer(cfg, &l, p, Strategy::Mixed).expect("sim");
-        tot_cycles += r.cycles;
-        tot_ops += 2 * r.useful_macs;
+/// One engine sweep over a config axis at one precision (Mixed
+/// strategy — the paper's dataflow).
+fn run_configs(
+    engine: &mut SweepEngine,
+    configs: &[SpeedConfig],
+    p: Precision,
+) -> SweepOutcome {
+    let mut spec = SweepSpec::new(configs[0].clone())
+        .network("abl", bench_layers())
+        .precisions(vec![p]);
+    for c in &configs[1..] {
+        spec = spec.config(c.clone());
     }
-    let gops = perf::gops(tot_ops, tot_cycles, cfg.freq_mhz);
+    engine.run(&spec).expect("ablation sweep")
+}
+
+/// Total (cycles, ops) of one config's block.
+fn block_totals(out: &SweepOutcome, cfg_idx: usize) -> (u64, u64) {
+    let block = out.block(0, cfg_idx, 0, 0, 0);
+    let cycles = block.iter().map(|r| r.cycles).sum();
+    let ops = block.iter().map(|r| 2 * r.useful_macs).sum();
+    (cycles, ops)
+}
+
+fn print_row(label: &str, cfg: &SpeedConfig, cycles: u64, ops: u64) {
+    let area = speed_area_breakdown(cfg).total();
+    let gops = perf::gops(ops, cycles, cfg.freq_mhz);
     println!(
         "{label:<26} {:>9.2} GOPS {:>8.3} mm2 {:>9.2} GOPS/mm2",
         gops,
@@ -39,55 +66,96 @@ fn sweep(label: &str, cfg: &SpeedConfig, p: Precision) {
 
 fn main() {
     let base = SpeedConfig::default();
-    let p = Precision::Int8;
+    let mut engine = SweepEngine::new();
 
     println!("== SAU size (TILE_R x TILE_C), int8 ==");
-    let mut prev_eff = 0.0;
-    for (tr, tc) in [(2usize, 2usize), (4, 4), (8, 8)] {
-        let mut c = base.clone();
-        c.tile_r = tr;
-        c.tile_c = tc;
-        sweep(&format!("SAU {tr}x{tc}"), &c, p);
-        let _ = prev_eff;
-        prev_eff = 0.0;
+    let sau_cfgs: Vec<(String, SpeedConfig)> = [(2usize, 2usize), (4, 4), (8, 8)]
+        .into_iter()
+        .map(|(tr, tc)| {
+            let mut c = base.clone();
+            c.tile_r = tr;
+            c.tile_c = tc;
+            (format!("SAU {tr}x{tc}"), c)
+        })
+        .collect();
+    let cfgs: Vec<SpeedConfig> = sau_cfgs.iter().map(|(_, c)| c.clone()).collect();
+    let out = run_configs(&mut engine, &cfgs, Precision::Int8);
+    for (i, (label, c)) in sau_cfgs.iter().enumerate() {
+        let (cycles, ops) = block_totals(&out, i);
+        print_row(label, c, cycles, ops);
     }
 
     println!("\n== lane count (VLEN scaled with lanes), int8 ==");
-    for lanes in [2usize, 4, 8] {
-        let mut c = base.clone();
-        c.n_lanes = lanes;
-        c.vlen_bits = 1024 * lanes;
-        sweep(&format!("{lanes} lanes"), &c, p);
+    let lane_cfgs: Vec<(String, SpeedConfig)> = [2usize, 4, 8]
+        .into_iter()
+        .map(|lanes| {
+            let mut c = base.clone();
+            c.n_lanes = lanes;
+            c.vlen_bits = 1024 * lanes;
+            (format!("{lanes} lanes"), c)
+        })
+        .collect();
+    let cfgs: Vec<SpeedConfig> = lane_cfgs.iter().map(|(_, c)| c.clone()).collect();
+    let out = run_configs(&mut engine, &cfgs, Precision::Int8);
+    for (i, (label, c)) in lane_cfgs.iter().enumerate() {
+        let (cycles, ops) = block_totals(&out, i);
+        print_row(label, c, cycles, ops);
     }
 
     println!("\n== DRAM bandwidth (bytes/cycle), int4 (most memory-bound) ==");
+    let bws = [4.0f64, 8.0, 16.0, 32.0];
+    let cfgs: Vec<SpeedConfig> = bws
+        .iter()
+        .map(|&bw| {
+            let mut c = base.clone();
+            c.dram_bw_bytes_per_cycle = bw;
+            c
+        })
+        .collect();
+    let out = run_configs(&mut engine, &cfgs, Precision::Int4);
     let mut last = f64::MAX;
-    for bw in [4.0, 8.0, 16.0, 32.0] {
-        let mut c = base.clone();
-        c.dram_bw_bytes_per_cycle = bw;
-        let mut cyc = 0u64;
-        for l in bench_layers() {
-            cyc += simulate_layer(&c, &l, Precision::Int4, Strategy::Mixed).unwrap().cycles;
-        }
-        println!("bw {bw:>5.0} B/cyc {cyc:>12} cycles");
-        assert!(cyc as f64 <= last * 1.001, "more bandwidth must not slow down");
-        last = cyc as f64;
+    for (i, bw) in bws.iter().enumerate() {
+        let (cycles, _) = block_totals(&out, i);
+        println!("bw {bw:>5.0} B/cyc {cycles:>12} cycles");
+        assert!(cycles as f64 <= last * 1.001, "more bandwidth must not slow down");
+        last = cycles as f64;
     }
 
     println!("\n== roofline fractions at the default config ==");
-    for pp in [Precision::Int16, Precision::Int8, Precision::Int4] {
-        for l in bench_layers() {
-            let r = simulate_layer(&base, &l, pp, Strategy::Mixed).unwrap();
-            let roof = roofline_gops(&base, &l, pp);
+    // speed + roofline on one grid: the envelope backend bounds every
+    // cycle-accurate cell in the same sweep (same ops ⇒ fraction of
+    // roofline = roofline cycles / measured cycles).
+    let mut spec = SweepSpec::new(base.clone())
+        .network("abl", bench_layers())
+        .backends(vec![Arc::new(SpeedCycle), Arc::new(RooflineBound)]);
+    spec.precisions = vec![Precision::Int16, Precision::Int8, Precision::Int4];
+    let out = engine.run(&spec).expect("roofline sweep");
+    for (pi, p) in spec.precisions.clone().into_iter().enumerate() {
+        let speed_block = out.block(0, 0, 0, pi, 0);
+        let roof_block = out.block(1, 0, 0, pi, 0);
+        for (r, bound) in speed_block.iter().zip(roof_block) {
+            assert!(
+                bound.cycles as f64 <= r.cycles as f64 * 1.05 + 1.0,
+                "{}@{p}: cycle engine beats its roofline ({} < {})",
+                r.name,
+                r.cycles,
+                bound.cycles
+            );
             println!(
                 "{:<8} {:<8} {:>7.2}/{:>7.2} GOPS = {:>5.2} of roofline",
-                pp.to_string(),
-                l.name,
+                p.to_string(),
+                r.name,
                 r.gops(&base),
-                roof,
-                r.gops(&base) / roof
+                bound.gops(&base),
+                bound.cycles as f64 / r.cycles as f64
             );
         }
     }
-    println!("\n[bench] ablations complete");
+
+    let shard_note = if out.shards_spawned > 0 { "with" } else { "without" };
+    println!(
+        "\n[bench] ablations complete on the sweep engine ({} cached sims, last sweep {} shard fan-out)",
+        engine.cached_sims(),
+        shard_note
+    );
 }

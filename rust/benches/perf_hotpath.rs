@@ -122,6 +122,7 @@ fn main() {
     let _ = Instr::is_vector;
 
     sweep_throughput(&cfg, smoke);
+    shard_critical_path(&cfg, smoke);
 }
 
 /// §Perf: batch-sweep engine throughput on the paper's four-network grid
@@ -213,4 +214,93 @@ fn sweep_throughput(cfg: &SpeedConfig, smoke: bool) {
     assert_eq!(out_warm.results, serial, "warm-cache engine diverged from serial");
     assert_eq!(out_warm.executed_sims, 0, "warm rerun must be pure cache");
     println!("[bench] sweep engine bit-identical to the serial path across all modes");
+}
+
+/// §Perf: intra-layer sharding vs the cold-sweep critical path — the
+/// same cold grid with shard fan-out off (one worker per layer
+/// simulation; same composed v2 semantics, computed inline — a
+/// *scheduling* baseline, not the pre-sharding engine's numbers) and
+/// on (giant layers split across the pool), bit-identical results
+/// asserted, wall-clocks recorded to `BENCH_shard.json` (override the
+/// path with `SPEED_BENCH_SHARD_JSON`) so the perf trajectory is
+/// machine-readable across PRs. Full mode sweeps cold VGG16 at int8/Mixed —
+/// the resident server's worst cold request; smoke mode swaps in the
+/// single dominant conv3x3 layer so CI still exercises both paths.
+fn shard_critical_path(cfg: &SpeedConfig, smoke: bool) {
+    use speed::coordinator::sweep::{SHARD_AUTO_MACS, SHARD_OFF};
+
+    let (grid_name, layers): (&str, Vec<ConvLayer>) = if smoke {
+        ("conv3x3_56", vec![ConvLayer::new("r3", 64, 64, 56, 56, 3, 1, 1)])
+    } else {
+        let vgg = all_models().into_iter().find(|m| m.name == "VGG16").expect("VGG16 in zoo");
+        ("VGG16", vgg.layers)
+    };
+    println!("\n== intra-layer sharding: cold critical path ({grid_name} @int8 Mixed) ==");
+    let spec_for = |threshold: u64| {
+        SweepSpec::new(cfg.clone())
+            .network(grid_name, layers.clone())
+            .precisions(vec![Precision::Int8])
+            .shard_threshold(threshold)
+    };
+
+    let t0 = Instant::now();
+    let unsharded = SweepEngine::new().run(&spec_for(SHARD_OFF)).expect("unsharded sweep");
+    let dt_unsharded = t0.elapsed().as_secs_f64();
+    println!(
+        "fan-out off  ({} threads)              {dt_unsharded:>8.2}s  slowest job {:>6.2}s",
+        unsharded.threads_used, unsharded.slowest_job_secs
+    );
+
+    let t1 = Instant::now();
+    let sharded = SweepEngine::new().run(&spec_for(SHARD_AUTO_MACS)).expect("sharded sweep");
+    let dt_sharded = t1.elapsed().as_secs_f64();
+    println!(
+        "fan-out auto ({} threads)              {dt_sharded:>8.2}s  slowest job {:>6.2}s  ({} shards / {} jobs, {:.2}x)",
+        sharded.threads_used,
+        sharded.slowest_job_secs,
+        sharded.shards_spawned,
+        sharded.sharded_jobs,
+        dt_unsharded / dt_sharded.max(1e-9)
+    );
+
+    // Acceptance: sharding is scheduling-only — bit-identical results.
+    assert_eq!(sharded.results, unsharded.results, "sharded sweep diverged from unsharded");
+    assert!(sharded.shards_spawned > 0, "grid must contain a decomposable layer");
+    println!("[bench] sharded sweep bit-identical to the unsharded engine");
+
+    // Full mode defaults to the repo root (cargo runs benches with the
+    // *package* directory as cwd), where the committed trajectory
+    // baseline lives; smoke mode defaults to the temp dir so reduced-
+    // iteration junk can never clobber the committed baseline.
+    let path = std::env::var("SPEED_BENCH_SHARD_JSON").unwrap_or_else(|_| {
+        if smoke {
+            std::env::temp_dir().join("BENCH_shard.json").to_string_lossy().into_owned()
+        } else {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_shard.json").to_string()
+        }
+    });
+    let json = format!(
+        concat!(
+            "{{\"bench\":\"shard\",\"mode\":\"{}\",\"network\":\"{}\",\"precision\":8,",
+            "\"strategy\":\"mixed\",\"threads\":{},\"unsharded_secs\":{:.3},",
+            "\"sharded_secs\":{:.3},\"speedup\":{:.3},\"sharded_jobs\":{},",
+            "\"shards_spawned\":{},\"slowest_job_unsharded_secs\":{:.3},",
+            "\"slowest_job_sharded_secs\":{:.3},\"bit_identical\":true}}\n"
+        ),
+        if smoke { "smoke" } else { "full" },
+        grid_name,
+        sharded.threads_used,
+        dt_unsharded,
+        dt_sharded,
+        dt_unsharded / dt_sharded.max(1e-9),
+        sharded.sharded_jobs,
+        sharded.shards_spawned,
+        unsharded.slowest_job_secs,
+        sharded.slowest_job_secs,
+    );
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("[bench] wrote {path}"),
+        Err(e) => println!("[bench] could not write {path}: {e}"),
+    }
+    print!("{json}");
 }

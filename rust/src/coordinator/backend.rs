@@ -29,8 +29,10 @@ use std::fmt;
 use crate::arch::{AraConfig, Precision, SpeedConfig};
 use crate::baseline::simulate_layer_ara;
 use crate::core::{ExecMode, Processor, SimStats};
+use crate::cost::roofline_gops;
 use crate::dataflow::{
-    compile_conv, extract_ofmap, pack_ifmap_image, pack_weight_image, ConvLayer, Strategy,
+    compile_conv, compile_conv_shard, extract_ofmap, pack_ifmap_image, pack_weight_image,
+    shard_layout, ConvLayer, ConvShard, Strategy,
 };
 use crate::error::{Error, Result};
 use crate::mem::tensor::conv2d_ref;
@@ -146,11 +148,43 @@ pub trait SimBackend: fmt::Debug + Send + Sync {
         p: Precision,
         strategy: Strategy,
     ) -> Result<SimStats>;
+
+    /// The intra-layer shard decomposition of `layer` under this
+    /// backend, or `None` when the backend simulates it in one piece
+    /// (the default — analytic and functional backends don't shard).
+    ///
+    /// Contract: when this returns `Some(shards)`, the backend's
+    /// [`SimBackend::simulate`] must equal the in-order
+    /// [`SimStats::merge`] of [`SimBackend::simulate_shard`] over
+    /// `shards` — the engine relies on it to fan shards out across
+    /// workers and still emit results bit-identical to the unsharded
+    /// path (and to cache the merged result under the layer-level key).
+    fn shard_layout(&self, cfg: &SpeedConfig, layer: &ConvLayer) -> Option<Vec<ConvShard>> {
+        let _ = (cfg, layer);
+        None
+    }
+
+    /// Execute one shard of a decomposed layer (see
+    /// [`SimBackend::shard_layout`]). Backends that never shard keep
+    /// the default, which reports a scheduling bug rather than a
+    /// simulation result.
+    fn simulate_shard(
+        &self,
+        slot: &mut WorkerSlot,
+        cfg: &SpeedConfig,
+        layer: &ConvLayer,
+        p: Precision,
+        strategy: Strategy,
+        shard: &ConvShard,
+    ) -> Result<SimStats> {
+        let _ = (slot, cfg, p, strategy, shard);
+        Err(Error::sim(format!("backend {} does not shard {layer}", self.name())))
+    }
 }
 
 /// The stable backend names [`by_name`] resolves — the CLI's
 /// `--backend` vocabulary and the serve protocol's `backends` field.
-pub const BACKEND_NAMES: [&str; 3] = ["speed", "ara", "golden"];
+pub const BACKEND_NAMES: [&str; 4] = ["speed", "ara", "golden", "roofline"];
 
 /// Look a backend up by its stable [`SimBackend::name`], in its default
 /// parameterization. Used by the serve protocol and the CLI; returns
@@ -161,6 +195,7 @@ pub fn by_name(name: &str) -> Option<std::sync::Arc<dyn SimBackend>> {
         "speed" => Some(std::sync::Arc::new(SpeedCycle)),
         "ara" => Some(std::sync::Arc::new(AraAnalytic::default())),
         "golden" => Some(std::sync::Arc::new(GoldenFunctional::default())),
+        "roofline" => Some(std::sync::Arc::new(RooflineBound)),
         _ => None,
     }
 }
@@ -168,8 +203,29 @@ pub fn by_name(name: &str) -> Option<std::sync::Arc<dyn SimBackend>> {
 /// The SPEED cycle engine: timing-mode simulation on a pooled
 /// processor — identical math to the serial
 /// [`simulate_layer`](crate::coordinator::simulate_layer) path
-/// (compile → run → record), with the worker's processor `reset`
+/// (which delegates here), with the worker's processor `reset`
 /// instead of rebuilt.
+///
+/// # Intra-layer sharding and the cycle-composition model
+///
+/// Layers whose nominal MACs reach
+/// [`SHARD_MIN_MACS`](crate::dataflow::SHARD_MIN_MACS) decompose into
+/// the fixed shard grid of [`crate::dataflow::shard_layout`] (one
+/// sub-program per contiguous `ct` pass × `rt` band), and the layer's
+/// statistics are **defined** as the in-order [`SimStats::merge`] of
+/// the shard runs — sequential tile composition: cycle counts add, so
+/// every shard pays its own pipeline fill and (for `rt`-banded shards)
+/// its own weight-slab fetch, exactly as a tiled execution with no
+/// inter-tile pipelining would. Because the decomposition is a pure
+/// function of `(cfg, layer)` and merging is a per-field sum, the
+/// result is bit-identical whether the shards run inline on one worker
+/// (this method), fanned out across the sweep engine's pool, or
+/// grouped into any number of sub-jobs — which is what lets the memo
+/// cache key stay layer-level.
+///
+/// The fingerprint is versioned `v2`: `v1` cached entries (monolithic
+/// big-layer programs) silently miss instead of aliasing the composed
+/// semantics.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SpeedCycle;
 
@@ -179,7 +235,7 @@ impl SimBackend for SpeedCycle {
     }
 
     fn fingerprint(&self) -> u64 {
-        fp_str(FP_SEED, "speed-cycle-v1")
+        fp_str(FP_SEED, "speed-cycle-v2")
     }
 
     fn simulate(
@@ -190,11 +246,108 @@ impl SimBackend for SpeedCycle {
         p: Precision,
         strategy: Strategy,
     ) -> Result<SimStats> {
-        let cc = compile_conv(cfg, layer, p, strategy, 0, false)?;
+        match self.shard_layout(cfg, layer) {
+            None => {
+                let cc = compile_conv(cfg, layer, p, strategy, 0, false)?;
+                let proc = slot.processor_for(cfg, cc.dram_bytes, ExecMode::Timing)?;
+                proc.run(&cc.program)?;
+                proc.set_useful_macs(cc.useful_macs);
+                Ok(proc.stats().clone())
+            }
+            Some(shards) => {
+                let mut total = SimStats::default();
+                for shard in &shards {
+                    total.merge(&self.simulate_shard(slot, cfg, layer, p, strategy, shard)?);
+                }
+                Ok(total)
+            }
+        }
+    }
+
+    fn shard_layout(&self, cfg: &SpeedConfig, layer: &ConvLayer) -> Option<Vec<ConvShard>> {
+        shard_layout(cfg, layer)
+    }
+
+    fn simulate_shard(
+        &self,
+        slot: &mut WorkerSlot,
+        cfg: &SpeedConfig,
+        layer: &ConvLayer,
+        p: Precision,
+        strategy: Strategy,
+        shard: &ConvShard,
+    ) -> Result<SimStats> {
+        let cc = compile_conv_shard(cfg, layer, p, strategy, 0, false, shard)?;
         let proc = slot.processor_for(cfg, cc.dram_bytes, ExecMode::Timing)?;
         proc.run(&cc.program)?;
         proc.set_useful_macs(cc.useful_macs);
         Ok(proc.stats().clone())
+    }
+}
+
+/// The analytic roofline envelope as a backend: instant closed-form
+/// cycle *lower bounds* from [`crate::cost::roofline_gops`] —
+/// `min(compute peak, BW × arithmetic intensity)` at minimum DRAM
+/// traffic. Scheduling it next to `speed` gives every sweep a free
+/// sanity bound: a cycle-accurate cell that beats its roofline cell is
+/// a simulator bug (`tests/sim_invariants.rs` pins the per-layer form
+/// of this). Strategy-insensitive and precision-complete; no processor
+/// state, so simulation is microseconds per cell.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RooflineBound;
+
+impl SimBackend for RooflineBound {
+    fn name(&self) -> &'static str {
+        "roofline"
+    }
+
+    fn fingerprint(&self) -> u64 {
+        fp_str(FP_SEED, "roofline-bound-v1")
+    }
+
+    fn strategy_sensitive(&self) -> bool {
+        false
+    }
+
+    fn simulate(
+        &self,
+        _slot: &mut WorkerSlot,
+        cfg: &SpeedConfig,
+        layer: &ConvLayer,
+        p: Precision,
+        _strategy: Strategy,
+    ) -> Result<SimStats> {
+        // Same geometry rejection as the tiling solver: the closed-form
+        // model divides by output geometry, so impossible layers must
+        // be mapping errors here too (ho()/wo() underflow otherwise).
+        if layer.degenerate() {
+            return Err(Error::mapping(format!("degenerate layer {layer}")));
+        }
+        let gops = roofline_gops(cfg, layer, p);
+        let macs = layer.macs();
+        if gops <= 0.0 {
+            return Err(Error::sim(format!("degenerate roofline for {layer} @{p}")));
+        }
+        // ops / (gops·1e9) seconds at freq_mhz·1e6 cycles/second;
+        // round up — the bound must stay a lower bound on cycles.
+        let cycles = ((2 * macs) as f64 / (gops * 1e9) * cfg.freq_mhz * 1e6).ceil() as u64;
+        // Reported traffic = the integer form of the minimum-traffic
+        // model inside `cost::roofline::roofline_gops` (each tensor
+        // moved once; int4 outputs stored one per byte). Keep the two
+        // in lockstep if the traffic model ever changes.
+        let bits = p.bits() as u64;
+        let in_bytes =
+            ((layer.input_values() + layer.weight_values()) as u64 * bits).div_ceil(8);
+        let out_bytes =
+            (layer.cout * layer.ho() * layer.wo()) as u64 * ((bits / 8).max(1));
+        Ok(SimStats {
+            cycles: cycles.max(1),
+            macs,
+            useful_macs: macs,
+            dram_read: in_bytes,
+            dram_write: out_bytes,
+            ..Default::default()
+        })
     }
 }
 
@@ -481,6 +634,84 @@ mod tests {
             }
         }
         assert!(slot.processor.is_some(), "functional processor is pooled");
+    }
+
+    #[test]
+    fn roofline_backend_bounds_the_cycle_engine() {
+        let cfg = SpeedConfig::default();
+        let roof = RooflineBound;
+        assert!(!roof.strategy_sensitive());
+        assert!(Precision::ALL.iter().all(|&p| roof.supports_precision(p)));
+        let mut slot = WorkerSlot::default();
+        for layer in [
+            ConvLayer::new("c3", 16, 16, 12, 12, 3, 1, 1),
+            ConvLayer::new("pw", 32, 16, 10, 10, 1, 1, 0),
+        ] {
+            for p in Precision::ALL {
+                let bound = roof
+                    .simulate(&mut slot, &cfg, &layer, p, Strategy::FeatureFirst)
+                    .unwrap();
+                assert!(bound.cycles >= 1);
+                assert_eq!(bound.useful_macs, layer.macs());
+                let real = SpeedCycle
+                    .simulate(&mut slot, &cfg, &layer, p, Strategy::FeatureFirst)
+                    .unwrap();
+                // Same contract `tests/sim_invariants.rs` pins for the
+                // analytic form: the cycle engine never beats the
+                // envelope beyond its small compute-vs-traffic slack.
+                assert!(
+                    bound.cycles as f64 <= real.cycles as f64 * 1.05 + 1.0,
+                    "{layer} @{p}: roofline {} must lower-bound speed {}",
+                    bound.cycles,
+                    real.cycles
+                );
+            }
+        }
+        assert!(slot.processor.is_some(), "speed pooled; roofline needs none");
+        // Impossible geometry is a mapping error, like every backend.
+        let bad = ConvLayer::new("bad", 8, 8, 3, 3, 7, 1, 0);
+        assert!(roof
+            .simulate(&mut slot, &cfg, &bad, Precision::Int8, Strategy::FeatureFirst)
+            .is_err());
+    }
+
+    #[test]
+    fn speed_simulate_equals_inorder_shard_merge() {
+        // Just above the decomposition bound so the test stays cheap.
+        let cfg = SpeedConfig::default();
+        let layer = ConvLayer::new("big", 64, 64, 30, 30, 3, 1, 1);
+        let shards = SpeedCycle.shard_layout(&cfg, &layer).expect("decomposes");
+        assert!(shards.len() > 1);
+        let mut slot = WorkerSlot::default();
+        for s in [Strategy::FeatureFirst, Strategy::ChannelFirst] {
+            let whole =
+                SpeedCycle.simulate(&mut slot, &cfg, &layer, Precision::Int8, s).unwrap();
+            let mut merged = SimStats::default();
+            for sh in &shards {
+                merged.merge(
+                    &SpeedCycle
+                        .simulate_shard(&mut slot, &cfg, &layer, Precision::Int8, s, sh)
+                        .unwrap(),
+                );
+            }
+            assert_eq!(whole, merged, "{s}: composed result must be the shard sum");
+            assert_eq!(whole.useful_macs, layer.macs());
+            assert!(whole.macs >= whole.useful_macs);
+        }
+    }
+
+    #[test]
+    fn unshardable_backends_report_not_a_result() {
+        let cfg = SpeedConfig::default();
+        let layer = ConvLayer::new("big", 64, 64, 30, 30, 3, 1, 1);
+        let ara = AraAnalytic::default();
+        assert!(ara.shard_layout(&cfg, &layer).is_none());
+        assert!(RooflineBound.shard_layout(&cfg, &layer).is_none());
+        let sh = crate::dataflow::ConvShard::whole(&cfg, &layer);
+        let mut slot = WorkerSlot::default();
+        assert!(ara
+            .simulate_shard(&mut slot, &cfg, &layer, Precision::Int8, Strategy::FeatureFirst, &sh)
+            .is_err());
     }
 
     #[test]

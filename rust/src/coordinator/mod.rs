@@ -1,6 +1,7 @@
 //! Experiment coordinator: single-layer simulation entry points, the
 //! parallel batch-sweep engine with its pluggable simulation backends
-//! (SPEED cycle engine / Ara baseline / golden functional verifier),
+//! (SPEED cycle engine / Ara baseline / golden functional verifier /
+//! roofline envelope), intra-layer shard fan-out for giant layers,
 //! persistent cross-process result caching with LRU bounding, the
 //! long-running sweep server (`speed serve`) with its line protocol,
 //! and the drivers that regenerate every figure/table of the paper.
@@ -13,7 +14,9 @@ pub mod runner;
 pub mod serve;
 pub mod sweep;
 
-pub use backend::{AraAnalytic, GoldenFunctional, SimBackend, SpeedCycle, WorkerSlot};
+pub use backend::{
+    AraAnalytic, GoldenFunctional, RooflineBound, SimBackend, SpeedCycle, WorkerSlot,
+};
 pub use serve::{Request, ServeStats, StreamSink};
 pub use runner::{
     run_functional_conv, simulate_layer, simulate_network, LayerResult, NetworkResult,

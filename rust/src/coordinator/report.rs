@@ -153,6 +153,15 @@ pub fn sweep_markdown(spec: &SweepSpec, out: &SweepOutcome) -> String {
         out.elapsed_secs,
         out.sims_per_sec()
     ));
+    // Shard/wall-clock telemetry: where the run's critical path went,
+    // and whether intra-layer fan-out was engaged to shorten it.
+    s.push_str(&format!(
+        "{} sharded jobs | {} shard sub-jobs | slowest unit {:.2}s | {:.2}s total sim work\n\n",
+        out.sharded_jobs,
+        out.shards_spawned,
+        out.slowest_job_secs,
+        out.job_elapsed_total_secs
+    ));
     s.push_str("| backend | config | network | precision | strategy | cycles | GOPS |\n");
     s.push_str("|---|---|---|---|---|---|---|\n");
     for nr in out.network_results(spec) {

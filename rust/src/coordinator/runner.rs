@@ -52,18 +52,20 @@ fn run_one(
     p: Precision,
     strategy: Strategy,
 ) -> Result<LayerResult> {
-    let cc = compile_conv(cfg, layer, p, strategy, 0, false)?;
-    let mut proc = Processor::new(cfg.clone(), cc.dram_bytes, ExecMode::Timing)?;
-    proc.run(&cc.program)?;
-    proc.set_useful_macs(cc.useful_macs);
+    // One implementation for every path: the serial API runs the same
+    // SpeedCycle backend the sweep engine schedules (on a throwaway
+    // slot), so big-layer shard composition and monolithic small-layer
+    // runs agree bit-for-bit between simulate_layer and engine sweeps.
+    use super::backend::{SimBackend, SpeedCycle, WorkerSlot};
+    let stats = SpeedCycle.simulate(&mut WorkerSlot::default(), cfg, layer, p, strategy)?;
     Ok(LayerResult {
         name: layer.name.clone(),
         precision: p,
         requested: strategy,
         used: strategy,
-        cycles: proc.stats().cycles,
-        useful_macs: cc.useful_macs,
-        stats: proc.stats().clone(),
+        cycles: stats.cycles,
+        useful_macs: stats.useful_macs,
+        stats,
     })
 }
 

@@ -35,8 +35,10 @@
 //! sweeps): `id`, `op` (`"sweep"` default | `"ping"` | `"shutdown"`),
 //! `network` (zoo model name), `layers` (index subset), `backends`
 //! (see [`BACKEND_NAMES`]), `precisions` (`[16,8,4]`), `strategies`
-//! (`["ff","cf","mixed"]`), `threads`, `memoize`, and the config
-//! overrides `lanes`, `vlen`, `tile_r`, `tile_c`, `dram_bw`, `freq`.
+//! (`["ff","cf","mixed"]`), `threads`, `memoize`, `shard` (intra-layer
+//! shard fan-out on/off, scheduling-only), `shard_threshold` (fan-out
+//! bound in layer MACs), and the config overrides `lanes`, `vlen`,
+//! `tile_r`, `tile_c`, `dram_bw`, `freq`.
 //!
 //! Replies are line-delimited records tagged by `"type"`: one
 //! `"block"` line per layer result, streamed in deterministic job
@@ -46,7 +48,8 @@
 //! long cold sweeps should size `--timeout-secs` to the run, not to
 //! the line rate), then one `"summary"` line carrying the run's cache
 //! accounting (`sims`, `cache_hits`, `dedup_hits`, `evictions`,
-//! `cache_entries`) — a warm repeat of an identical request reports
+//! `cache_entries`) and its shard/wall-clock telemetry (`sharded_jobs`,
+//! `shards`, `slowest_job_ms`) — a warm repeat of an identical request reports
 //! `"sims":0`. `"ping"` answers `"pong"`; `"shutdown"` answers
 //! `"bye"`, flushes the cache file and stops the server (EOF on stdin
 //! does the same).
@@ -66,7 +69,7 @@ use std::time::Duration;
 
 use super::backend::{by_name, BACKEND_NAMES};
 use super::runner::LayerResult;
-use super::sweep::{JobId, ReportSink, SweepEngine, SweepOutcome, SweepSpec};
+use super::sweep::{JobId, ReportSink, SweepEngine, SweepOutcome, SweepSpec, SHARD_OFF};
 use crate::arch::{Precision, SpeedConfig};
 use crate::dataflow::Strategy;
 use crate::error::{Error, Result};
@@ -475,6 +478,12 @@ pub struct Request {
     pub threads: Option<usize>,
     /// Memoization on (default) or off.
     pub memoize: bool,
+    /// Intra-layer shard fan-out on (default) or off for this request.
+    /// Scheduling-only: results are bit-identical either way.
+    pub shard: bool,
+    /// Shard fan-out threshold in estimated layer MACs (`None` = the
+    /// engine's auto threshold). Ignored when `shard` is off.
+    pub shard_threshold: Option<u64>,
     /// Machine-configuration overrides.
     pub overrides: CfgOverrides,
 }
@@ -491,6 +500,8 @@ impl Default for Request {
             strategies: vec![Strategy::Mixed],
             threads: None,
             memoize: true,
+            shard: true,
+            shard_threshold: None,
             overrides: CfgOverrides::default(),
         }
     }
@@ -583,6 +594,10 @@ impl Request {
                 }
                 "threads" => req.threads = Some(val.as_u64("threads")? as usize),
                 "memoize" => req.memoize = val.as_bool("memoize")?,
+                "shard" => req.shard = val.as_bool("shard")?,
+                "shard_threshold" => {
+                    req.shard_threshold = Some(val.as_u64("shard_threshold")?)
+                }
                 "lanes" => req.overrides.lanes = Some(val.as_u64("lanes")? as usize),
                 "vlen" => req.overrides.vlen = Some(val.as_u64("vlen")? as usize),
                 "tile_r" => req.overrides.tile_r = Some(val.as_u64("tile_r")? as usize),
@@ -633,6 +648,12 @@ impl Request {
         }
         if !self.memoize {
             parts.push("\"memoize\":false".to_string());
+        }
+        if !self.shard {
+            parts.push("\"shard\":false".to_string());
+        }
+        if let Some(t) = self.shard_threshold {
+            parts.push(format!("\"shard_threshold\":{t}"));
         }
         if let Some(v) = self.overrides.lanes {
             parts.push(format!("\"lanes\":{v}"));
@@ -709,6 +730,11 @@ impl Request {
         if let Some(t) = self.threads {
             spec = spec.threads(t);
         }
+        if !self.shard {
+            spec = spec.shard_threshold(SHARD_OFF);
+        } else if let Some(t) = self.shard_threshold {
+            spec = spec.shard_threshold(t);
+        }
         Ok(spec)
     }
 }
@@ -739,9 +765,12 @@ pub fn block_line(id: u64, backend: &str, network: &str, r: &LayerResult) -> Str
 }
 
 /// The per-request `summary` record terminating a sweep reply.
+/// `shards` counts shard sub-jobs spawned by intra-layer fan-out;
+/// `slowest_job_ms` is the longest single scheduled unit — the
+/// request's critical-path floor, the number sharding shrinks.
 pub fn summary_line(id: u64, out: &SweepOutcome, cache_entries: usize) -> String {
     format!(
-        "{{\"type\":\"summary\",\"id\":{id},\"jobs\":{},\"sims\":{},\"cache_hits\":{},\"dedup_hits\":{},\"evictions\":{},\"cache_entries\":{cache_entries},\"threads\":{},\"elapsed_ms\":{}}}",
+        "{{\"type\":\"summary\",\"id\":{id},\"jobs\":{},\"sims\":{},\"cache_hits\":{},\"dedup_hits\":{},\"evictions\":{},\"cache_entries\":{cache_entries},\"threads\":{},\"elapsed_ms\":{},\"sharded_jobs\":{},\"shards\":{},\"slowest_job_ms\":{}}}",
         out.results.len(),
         out.executed_sims,
         out.cache_hits,
@@ -749,6 +778,9 @@ pub fn summary_line(id: u64, out: &SweepOutcome, cache_entries: usize) -> String
         out.cache_evictions,
         out.threads_used,
         (out.elapsed_secs * 1000.0).round() as u64,
+        out.sharded_jobs,
+        out.shards_spawned,
+        (out.slowest_job_secs * 1000.0).round() as u64,
     )
 }
 
@@ -949,6 +981,10 @@ pub struct ServerOptions {
     pub max_cache_entries: Option<usize>,
     /// Worker-thread override for every request.
     pub threads: Option<usize>,
+    /// Shard fan-out threshold override for every request (`None` =
+    /// per-request/auto; [`super::sweep::SHARD_OFF`] disables fan-out
+    /// server-wide). Scheduling-only — results never change.
+    pub shard_threshold: Option<u64>,
 }
 
 fn flush_cache(engine: &Mutex<SweepEngine>, path: Option<&str>) {
@@ -972,6 +1008,9 @@ pub fn run_server(opts: ServerOptions) -> Result<()> {
     engine.set_max_cache_entries(opts.max_cache_entries);
     if let Some(n) = opts.threads {
         engine.set_threads_override(Some(n));
+    }
+    if let Some(t) = opts.shard_threshold {
+        engine.set_shard_threshold_override(Some(t));
     }
     if let Some(path) = &opts.cache_file {
         if std::path::Path::new(path).exists() {
@@ -1295,6 +1334,30 @@ mod tests {
         assert!(bad.to_spec(&base).is_err(), "invalid config override must be rejected");
         let shut = Request { op: Op::Shutdown, ..req };
         assert!(shut.to_spec(&base).is_err());
+    }
+
+    #[test]
+    fn shard_fields_reach_the_spec() {
+        use crate::coordinator::sweep::{SHARD_AUTO_MACS, SHARD_OFF};
+        let base = SpeedConfig::default();
+        let req = Request {
+            id: 1,
+            network: "SqueezeNet".into(),
+            layers: Some(vec![1]),
+            ..Default::default()
+        };
+        // Default: auto fan-out.
+        assert_eq!(req.to_spec(&base).unwrap().shard_threshold, SHARD_AUTO_MACS);
+        // Explicit threshold.
+        let with_thr = Request { shard_threshold: Some(123), ..req.clone() };
+        assert_eq!(with_thr.to_spec(&base).unwrap().shard_threshold, 123);
+        // shard:false wins over any threshold.
+        let off = Request { shard: false, shard_threshold: Some(123), ..req };
+        assert_eq!(off.to_spec(&base).unwrap().shard_threshold, SHARD_OFF);
+        // And the fields round-trip the wire format.
+        let line = off.to_line();
+        assert!(line.contains("\"shard\":false") && line.contains("\"shard_threshold\":123"));
+        assert_eq!(Request::parse(&line).unwrap(), off);
     }
 
     #[test]

@@ -35,6 +35,21 @@
 //!   [`serve`](super::serve) process can run forever against a bounded
 //!   memory budget ([`SweepOutcome::cache_evictions`] reports the
 //!   per-run eviction count);
+//! - **intra-layer sharding** cuts the cold-sweep critical path: a job
+//!   whose layer the backend decomposes (see
+//!   [`SimBackend::shard_layout`]) and whose estimated MACs reach the
+//!   fan-out threshold ([`SweepSpec::shard_threshold`], engine
+//!   override [`SweepEngine::set_shard_threshold_override`]) is split
+//!   into one sub-job per shard, executed on the same pooled workers
+//!   and merged in shard order. The merge is the same per-field-sum
+//!   composition the backend computes inline, so fan-out is
+//!   *scheduling-only*: results are bit-identical for any threshold,
+//!   shard grouping and thread count, the memo key stays layer-level
+//!   (sharded and unsharded runs of a cell dedupe), and `Mixed`
+//!   best-of still shares FF/CF slots
+//!   ([`SweepOutcome::shards_spawned`] /
+//!   [`SweepOutcome::slowest_job_secs`] report what fan-out did to the
+//!   critical path);
 //! - a [`ReportSink`] receives every per-layer [`LayerResult`] in
 //!   deterministic job order once the run completes
 //!   ([`SweepEngine::run_with_sink`]).
@@ -60,9 +75,18 @@ use super::persist;
 use super::runner::{LayerResult, NetworkResult};
 use crate::arch::{Precision, SpeedConfig};
 use crate::core::SimStats;
-use crate::dataflow::{ConvLayer, Strategy};
+use crate::dataflow::{ConvLayer, ConvShard, Strategy, SHARD_MIN_MACS};
 use crate::error::{Error, Result};
 use crate::models::all_models;
+
+/// Default job fan-out threshold: any job whose layer's estimated MACs
+/// reach this is split into its shard sub-jobs (matches the dataflow
+/// layer's decomposition bound, so every decomposable job fans out).
+pub const SHARD_AUTO_MACS: u64 = SHARD_MIN_MACS;
+
+/// Sentinel threshold that disables shard fan-out entirely (decomposable
+/// layers still compute the same composed result, inline on one worker).
+pub const SHARD_OFF: u64 = u64::MAX;
 
 /// One network entry of a sweep: a name plus its conv layers.
 #[derive(Debug, Clone)]
@@ -99,6 +123,18 @@ pub struct SweepSpec {
     /// deduplicate identical simulations inside the run. Disabling this
     /// simulates every grid cell independently (benchmark baseline).
     pub memoize: bool,
+    /// Intra-layer shard fan-out threshold in estimated layer MACs:
+    /// jobs at or above it (whose backend decomposes the layer — see
+    /// [`SimBackend::shard_layout`]) run as parallel shard sub-jobs on
+    /// the worker pool instead of one monolithic job. Scheduling-only:
+    /// results are bit-identical at any threshold, shard count and
+    /// thread count, because shard merging is the same deterministic
+    /// composition the unsharded path computes inline. Defaults to
+    /// [`SHARD_AUTO_MACS`]; [`SHARD_OFF`] disables fan-out. Values
+    /// below the decomposition floor
+    /// ([`SHARD_MIN_MACS`](crate::dataflow::SHARD_MIN_MACS)) behave
+    /// like the floor — layers under it have no shards to fan out.
+    pub shard_threshold: u64,
 }
 
 impl SweepSpec {
@@ -114,6 +150,7 @@ impl SweepSpec {
             strategies: vec![Strategy::Mixed],
             threads: 0,
             memoize: true,
+            shard_threshold: SHARD_AUTO_MACS,
         }
     }
 
@@ -174,6 +211,13 @@ impl SweepSpec {
     /// Enable/disable memoization (builder style).
     pub fn memoize(mut self, on: bool) -> Self {
         self.memoize = on;
+        self
+    }
+
+    /// Set the shard fan-out threshold in layer MACs (builder style);
+    /// [`SHARD_OFF`] disables fan-out.
+    pub fn shard_threshold(mut self, macs: u64) -> Self {
+        self.shard_threshold = macs;
         self
     }
 
@@ -314,6 +358,19 @@ pub struct SweepOutcome {
     pub threads_used: usize,
     /// Wall-clock seconds of the whole run.
     pub elapsed_secs: f64,
+    /// Jobs (unique simulations) that were fanned out into shard
+    /// sub-jobs this run.
+    pub sharded_jobs: usize,
+    /// Shard sub-jobs spawned across all sharded jobs.
+    pub shards_spawned: usize,
+    /// Wall-clock seconds of the slowest single scheduled unit (a
+    /// monolithic job or one shard sub-job) — the run's critical-path
+    /// floor. Sharding exists to shrink this.
+    pub slowest_job_secs: f64,
+    /// Sum of per-unit wall-clock seconds (total simulation work;
+    /// `slowest_job_secs / elapsed_secs` ≈ tail imbalance,
+    /// `job_elapsed_total_secs / elapsed_secs` ≈ effective parallelism).
+    pub job_elapsed_total_secs: f64,
     /// Start offset of each (backend, cfg, net, prec, strat) block in
     /// `results`.
     block_starts: Vec<usize>,
@@ -592,6 +649,7 @@ pub struct SweepEngine {
     cache: MemoCache,
     threads_override: Option<usize>,
     memoize_override: Option<bool>,
+    shard_threshold_override: Option<u64>,
 }
 
 impl SweepEngine {
@@ -644,6 +702,13 @@ impl SweepEngine {
     /// respect each spec).
     pub fn set_memoize_override(&mut self, memoize: Option<bool>) {
         self.memoize_override = memoize;
+    }
+
+    /// Override the shard fan-out threshold of every spec this engine
+    /// runs (`None` = respect each spec; [`SHARD_OFF`] disables
+    /// fan-out). Scheduling-only — results never change.
+    pub fn set_shard_threshold_override(&mut self, macs: Option<u64>) {
+        self.shard_threshold_override = macs;
     }
 
     /// Serialize the memo table to the versioned binary cache format
@@ -801,50 +866,104 @@ impl SweepEngine {
         }
         drop(slot_of);
 
-        // 2) Execute the missing slots on the worker pool. Workers claim
-        //    jobs from a shared atomic index (self-scheduling queue) and
-        //    write into slot-keyed outputs, so completion order is
-        //    irrelevant to the result.
+        // 2) Expand the missing slots into scheduling units. A slot
+        //    whose layer the backend decomposes — and whose estimated
+        //    MACs reach the fan-out threshold — becomes one work item
+        //    per shard; everything else is a single monolithic item.
+        //    Fan-out is scheduling-only: the merged shard stats are the
+        //    same composition the backend computes inline, so results
+        //    are bit-identical at any threshold/shard/thread count.
         let todo: Vec<usize> =
             (0..slots.len()).filter(|&s| prefilled[s].is_none()).collect();
         let executed_sims = todo.len();
+        let shard_threshold =
+            self.shard_threshold_override.unwrap_or(spec.shard_threshold);
+
+        struct WorkItem {
+            slot: usize,
+            shard: Option<ConvShard>,
+        }
+        // Per-todo-slot contiguous item ranges, for in-order merging.
+        let mut items: Vec<WorkItem> = Vec::new();
+        let mut slot_items: Vec<(usize, usize, usize)> = Vec::new(); // (slot, start, len)
+        let mut sharded_jobs = 0usize;
+        let mut shards_spawned = 0usize;
+        for &slot in &todo {
+            let t = slots[slot];
+            let layer = &spec.networks[t.net].layers[t.layer];
+            let cfg = &spec.configs[t.cfg];
+            // Layout before the MACs estimate: shard_layout validates
+            // the geometry, so `layer.macs()` (whose `ho()` underflows
+            // on kernel-larger-than-input layers) only runs on
+            // well-formed layers — degenerate ones stay monolithic and
+            // error cleanly in the backend. SHARD_OFF short-circuits
+            // the layout computation entirely.
+            let shards = if shard_threshold == SHARD_OFF {
+                None
+            } else {
+                spec.backends[t.backend]
+                    .shard_layout(cfg, layer)
+                    .filter(|_| layer.macs() >= shard_threshold)
+            };
+            let start = items.len();
+            match shards {
+                Some(shards) if shards.len() > 1 => {
+                    sharded_jobs += 1;
+                    shards_spawned += shards.len();
+                    items.extend(shards.into_iter().map(|sh| WorkItem { slot, shard: Some(sh) }));
+                }
+                _ => items.push(WorkItem { slot, shard: None }),
+            }
+            slot_items.push((slot, start, items.len() - start));
+        }
+
         let spec_threads = self.threads_override.unwrap_or(spec.threads);
         let requested_threads = if spec_threads == 0 {
             thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
             spec_threads
         };
-        let threads = requested_threads.min(todo.len().max(1));
+        let threads = requested_threads.min(items.len().max(1));
 
+        // 3) Execute the work items on the worker pool. Workers claim
+        //    items from a shared atomic index (self-scheduling queue)
+        //    and write into item-keyed outputs, so completion order is
+        //    irrelevant to the result.
         let mut sims: Vec<Option<CachedSim>> = prefilled;
-        if !todo.is_empty() {
+        let mut slowest_job_secs = 0f64;
+        let mut job_elapsed_total_secs = 0f64;
+        if !items.is_empty() {
             let n_cfgs = spec.configs.len();
             let n_worker_slots = spec.backends.len() * n_cfgs;
-            let worker = |claim: &AtomicUsize| -> Vec<(usize, Result<CachedSim>)> {
+            type ItemOut = (usize, Result<SimStats>, f64);
+            let worker = |claim: &AtomicUsize| -> Vec<ItemOut> {
                 let mut pool: Vec<WorkerSlot> =
                     (0..n_worker_slots).map(|_| WorkerSlot::default()).collect();
                 let mut local = Vec::new();
                 loop {
                     let i = claim.fetch_add(1, Ordering::Relaxed);
-                    if i >= todo.len() {
+                    if i >= items.len() {
                         break;
                     }
-                    let slot = todo[i];
-                    let t = slots[slot];
+                    let item = &items[i];
+                    let t = slots[item.slot];
                     let backend = &spec.backends[t.backend];
                     let cfg = &spec.configs[t.cfg];
                     let layer = &spec.networks[t.net].layers[t.layer];
                     let p = spec.precisions[t.prec];
                     let s = if t.cf { Strategy::ChannelFirst } else { Strategy::FeatureFirst };
-                    let res = backend
-                        .simulate(&mut pool[t.backend * n_cfgs + t.cfg], cfg, layer, p, s)
-                        .map(|stats| CachedSim { stats });
-                    local.push((slot, res));
+                    let ws = &mut pool[t.backend * n_cfgs + t.cfg];
+                    let t0 = Instant::now();
+                    let res = match &item.shard {
+                        None => backend.simulate(ws, cfg, layer, p, s),
+                        Some(shard) => backend.simulate_shard(ws, cfg, layer, p, s, shard),
+                    };
+                    local.push((i, res, t0.elapsed().as_secs_f64()));
                 }
                 local
             };
 
-            let outs: Vec<Vec<(usize, Result<CachedSim>)>> = if threads <= 1 {
+            let outs: Vec<Vec<ItemOut>> = if threads <= 1 {
                 vec![worker(&AtomicUsize::new(0))]
             } else {
                 let claim = AtomicUsize::new(0);
@@ -858,22 +977,34 @@ impl SweepEngine {
                 })
             };
 
-            let mut pending: Vec<Option<Result<CachedSim>>> = Vec::new();
-            pending.resize_with(slots.len(), || None);
+            let mut pending: Vec<Option<Result<SimStats>>> = Vec::new();
+            pending.resize_with(items.len(), || None);
             for out in outs {
-                for (slot, res) in out {
-                    pending[slot] = Some(res);
+                for (item, res, elapsed) in out {
+                    pending[item] = Some(res);
+                    slowest_job_secs = slowest_job_secs.max(elapsed);
+                    job_elapsed_total_secs += elapsed;
                 }
             }
-            // Deterministic error reporting: first failing slot wins.
-            for (slot, res) in pending.into_iter().enumerate() {
-                if let Some(res) = res {
-                    sims[slot] = Some(res?);
+            // Resolve slots from their items in item order (shard merge
+            // is a per-field sum, so it is independent of completion
+            // order — only error reporting needs the deterministic
+            // walk: the first failing item of the first failing slot
+            // wins at any thread count).
+            for &(slot, start, len) in &slot_items {
+                // Folding from the all-zero default is exact: merge is a
+                // per-field sum, so sum(default, s1, .., sn) == the
+                // inline composition the backend computes itself.
+                let mut merged = SimStats::default();
+                for res in pending[start..start + len].iter_mut() {
+                    merged.merge(&res.take().expect("work item resolved")?);
                 }
+                sims[slot] = Some(CachedSim { stats: merged });
             }
         }
 
-        // 3) Feed the persistent cache.
+        // 4) Feed the persistent cache (merged, layer-level results —
+        //    sharded and unsharded runs of a cell share one entry).
         if memoize {
             for &slot in &todo {
                 if let (Some(key), Some(sim)) = (slot_keys[slot], sims[slot].as_ref()) {
@@ -882,7 +1013,7 @@ impl SweepEngine {
             }
         }
 
-        // 4) Resolve jobs from slots (Mixed = best-of, ties to FF).
+        // 5) Resolve jobs from slots (Mixed = best-of, ties to FF).
         let mut results: Vec<LayerResult> = Vec::with_capacity(jobs.len());
         for (jid, plan) in jobs.iter().zip(&plans) {
             let layer = &spec.networks[jid.net].layers[jid.layer];
@@ -920,6 +1051,10 @@ impl SweepEngine {
             cache_evictions: self.cache.evictions() - evictions_before,
             threads_used: threads,
             elapsed_secs: t0.elapsed().as_secs_f64(),
+            sharded_jobs,
+            shards_spawned,
+            slowest_job_secs,
+            job_elapsed_total_secs,
             block_starts,
             dims: (
                 spec.backends.len(),
@@ -1241,6 +1376,56 @@ mod tests {
         let out = free.run(&spec).unwrap();
         assert_eq!(out.cache_evictions, 0);
         assert_eq!(free.cached_sims(), 4);
+    }
+
+    #[test]
+    fn shard_fanout_is_scheduling_only() {
+        // A layer just over the decomposition bound: fanned out, inline
+        // (SHARD_OFF) and serial runs must agree bit-for-bit, and the
+        // sharded/unsharded cells must land on the same cache entry.
+        let cfg = SpeedConfig::default();
+        let layer = ConvLayer::new("big", 64, 64, 30, 30, 3, 1, 1);
+        let spec_for = |threshold: u64, threads: usize| {
+            SweepSpec::new(SpeedConfig::default())
+                .network("t", vec![layer.clone()])
+                .precisions(vec![Precision::Int8])
+                .strategies(vec![Strategy::FeatureFirst])
+                .shard_threshold(threshold)
+                .threads(threads)
+        };
+        let mut engine = SweepEngine::new();
+        let fanned = engine.run(&spec_for(SHARD_AUTO_MACS, 2)).unwrap();
+        assert_eq!(fanned.sharded_jobs, 1);
+        assert!(fanned.shards_spawned > 1, "{} shards", fanned.shards_spawned);
+        assert!(fanned.slowest_job_secs > 0.0);
+        assert!(fanned.job_elapsed_total_secs >= fanned.slowest_job_secs);
+        // Warm rerun: the merged result was cached at layer level, so
+        // the unsharded spec is pure cache.
+        let warm = engine.run(&spec_for(SHARD_OFF, 1)).unwrap();
+        assert_eq!(warm.executed_sims, 0, "sharded and unsharded cells must dedupe");
+        assert_eq!(warm.results, fanned.results);
+        assert_eq!(warm.shards_spawned, 0);
+        // Cold inline run on a fresh engine: identical results.
+        let inline = SweepEngine::new().run(&spec_for(SHARD_OFF, 2)).unwrap();
+        assert_eq!(inline.sharded_jobs, 0);
+        assert_eq!(inline.results, fanned.results);
+        // And the serial single-layer API agrees.
+        let serial =
+            simulate_layer(&cfg, &layer, Precision::Int8, Strategy::FeatureFirst).unwrap();
+        assert_eq!(fanned.results[0], serial);
+    }
+
+    #[test]
+    fn small_layers_never_fan_out() {
+        let spec = SweepSpec::new(SpeedConfig::default())
+            .network("t", tiny_layers())
+            .precisions(vec![Precision::Int8])
+            .strategies(vec![Strategy::Mixed])
+            .threads(2);
+        let out = SweepEngine::new().run(&spec).unwrap();
+        assert_eq!(out.sharded_jobs, 0);
+        assert_eq!(out.shards_spawned, 0);
+        assert!(out.slowest_job_secs <= out.job_elapsed_total_secs);
     }
 
     #[test]

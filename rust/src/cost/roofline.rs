@@ -8,6 +8,11 @@ use crate::dataflow::ConvLayer;
 
 /// Roofline bound in GOPS: `min(compute peak, BW × arithmetic intensity)`
 /// with the *minimum possible* DRAM traffic (each tensor moved once).
+///
+/// The `roofline` sweep backend
+/// ([`crate::coordinator::RooflineBound`]) reports the integer form of
+/// this traffic model as its DRAM statistics — change the byte
+/// accounting here and there together.
 pub fn roofline_gops(cfg: &SpeedConfig, layer: &ConvLayer, p: Precision) -> f64 {
     let peak = cfg.peak_gops(p);
     let bits = p.bits() as f64;

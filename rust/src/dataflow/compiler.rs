@@ -25,9 +25,9 @@
 //! ```
 
 use super::layer::ConvLayer;
-use super::tiling::TilingPlan;
+use super::tiling::{ConvShard, TilingPlan};
 use crate::arch::{Precision, SpeedConfig};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::isa::instr::{Instr, LoadMode, Vsacfg, Vsam};
 use crate::isa::program::{Builder, Program};
 use crate::isa::Strategy;
@@ -63,7 +63,61 @@ pub fn compile_conv(
     shift: u8,
     relu: bool,
 ) -> Result<CompiledConv> {
+    compile_conv_impl(cfg, layer, precision, strategy, shift, relu, None)
+}
+
+/// Compile one intra-layer shard of `layer`: the sub-program covering a
+/// contiguous `(ct, rt)` range of the layer's tile grid (see
+/// [`ConvShard`]), against the *full layer's* tiling plan and DRAM
+/// image layout — shard addresses are the global addresses the
+/// monolithic program would use, so shards write disjoint slices of
+/// the same ofmap image and load disjoint weight blocks / row bands of
+/// the same input image. `useful_macs` is the shard's share of the
+/// layer's nominal work; the shards of one
+/// [`shard_layout`](super::tiling::shard_layout) sum to exactly
+/// [`ConvLayer::macs`].
+#[allow(clippy::too_many_arguments)]
+pub fn compile_conv_shard(
+    cfg: &SpeedConfig,
+    layer: &ConvLayer,
+    precision: Precision,
+    strategy: Strategy,
+    shift: u8,
+    relu: bool,
+    shard: &ConvShard,
+) -> Result<CompiledConv> {
+    compile_conv_impl(cfg, layer, precision, strategy, shift, relu, Some(shard))
+}
+
+/// Shared emission path: `shard = None` compiles the whole layer.
+/// The tiling plan is solved (and the layer validated) *before* any
+/// shard-grid arithmetic, so impossible layers stay mapping errors —
+/// never panics — on both entry points.
+#[allow(clippy::too_many_arguments)]
+fn compile_conv_impl(
+    cfg: &SpeedConfig,
+    layer: &ConvLayer,
+    precision: Precision,
+    strategy: Strategy,
+    shift: u8,
+    relu: bool,
+    shard: Option<&ConvShard>,
+) -> Result<CompiledConv> {
     let plan = TilingPlan::new(cfg, layer, precision, strategy)?;
+    let ((ct0, ct1), (rt0, rt1)) = match shard {
+        None => ((0, plan.n_ct), (0, plan.n_rt)),
+        Some(sh) => (sh.ct, sh.rt),
+    };
+    if ct0 >= ct1 || ct1 > plan.n_ct || rt0 >= rt1 || rt1 > plan.n_rt {
+        return Err(Error::mapping(format!(
+            "shard ct {ct0}..{ct1} rt {rt0}..{rt1} out of the {}x{} tile grid of {layer}",
+            plan.n_ct, plan.n_rt
+        )));
+    }
+    let useful_macs = match shard {
+        None => layer.macs(),
+        Some(sh) => sh.macs(cfg, layer),
+    };
     let k = layer.k;
     let s = layer.stride;
     let eb = plan.eb;
@@ -76,7 +130,7 @@ pub fn compile_conv(
     let mut b = Program::builder();
     // rough codegen size hint: ~6 instructions per (tile, chunk) plus
     // loads — avoids repeated Vec growth during emission.
-    b.reserve(plan.n_ct * plan.n_rt * plan.n_xb * plan.chunks * (plan.w_b * 6 + 40));
+    b.reserve((ct1 - ct0) * (rt1 - rt0) * plan.n_xb * plan.chunks * (plan.w_b * 6 + 40));
     // --- layer-wide configuration ---
     b.vsacfg(Vsacfg::Main {
         precision,
@@ -153,13 +207,13 @@ pub fn compile_conv(
     };
 
     let ff = strategy == Strategy::FeatureFirst;
-    for ct in 0..plan.n_ct {
+    for ct in ct0..ct1 {
         if plan.weights_resident {
             for chunk in 0..plan.chunks {
                 emit_weight_loads(&mut b, &plan, ct, chunk, chunk);
             }
         }
-        for rt in 0..plan.n_rt {
+        for rt in rt0..rt1 {
             for xb in 0..plan.n_xb {
                 for chunk in 0..plan.chunks {
                     if !plan.weights_resident {
@@ -222,7 +276,7 @@ pub fn compile_conv(
         w_base: w_base as u32,
         out_base: out_base as u32,
         dram_bytes,
-        useful_macs: layer.macs(),
+        useful_macs,
     })
 }
 
@@ -294,6 +348,77 @@ mod tests {
         let p = &cc.plan;
         assert_eq!(macs, p.n_ct * p.n_rt * p.n_xb * p.chunks * p.w_b);
         assert_eq!(stores, p.n_ct * p.n_rt * p.n_xb * p.w_b);
+    }
+
+    #[test]
+    fn shard_programs_partition_the_monolithic_work() {
+        use crate::dataflow::tiling::ConvShard;
+        // n_ct = 2, n_rt = 4 at the default config.
+        let layer = ConvLayer::new("t", 16, 32, 14, 14, 3, 1, 1);
+        let count = |cc: &CompiledConv, pred: fn(&Instr) -> bool| {
+            cc.program.decode_all().unwrap().iter().filter(|&i| pred(i)).count()
+        };
+        let is_mac = |i: &Instr| {
+            matches!(i, Instr::Vsam(Vsam::Mac { .. }) | Instr::Vsam(Vsam::MacZ { .. }))
+        };
+        let is_store = |i: &Instr| matches!(i, Instr::Vsam(Vsam::St { .. }));
+        for strat in [Strategy::FeatureFirst, Strategy::ChannelFirst] {
+            let whole = compile_conv(&cfg(), &layer, Precision::Int8, strat, 0, false).unwrap();
+            let shards = [
+                ConvShard { ct: (0, 1), rt: (0, 4) },
+                ConvShard { ct: (1, 2), rt: (0, 2) },
+                ConvShard { ct: (1, 2), rt: (2, 4) },
+            ];
+            let parts: Vec<CompiledConv> = shards
+                .iter()
+                .map(|sh| {
+                    compile_conv_shard(&cfg(), &layer, Precision::Int8, strat, 0, false, sh)
+                        .unwrap()
+                })
+                .collect();
+            // Shard sub-programs partition the MAC/store work exactly
+            // and split the nominal useful MACs without loss.
+            let macs: usize = parts.iter().map(|cc| count(cc, is_mac)).sum();
+            assert_eq!(macs, count(&whole, is_mac), "{strat}");
+            let stores: usize = parts.iter().map(|cc| count(cc, is_store)).sum();
+            assert_eq!(stores, count(&whole, is_store), "{strat}");
+            let useful: u64 = parts.iter().map(|cc| cc.useful_macs).sum();
+            assert_eq!(useful, layer.macs(), "{strat}");
+            // Same image layout: shards address the monolithic images.
+            for cc in &parts {
+                assert_eq!(cc.dram_bytes, whole.dram_bytes);
+                assert_eq!(cc.out_base, whole.out_base);
+                for &w in cc.program.words() {
+                    decode(w).unwrap();
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_grid_shards_are_rejected() {
+        use crate::dataflow::tiling::ConvShard;
+        let layer = ConvLayer::new("t", 16, 32, 14, 14, 3, 1, 1);
+        for bad in [
+            ConvShard { ct: (0, 3), rt: (0, 4) },  // ct out of range
+            ConvShard { ct: (1, 1), rt: (0, 4) },  // empty ct
+            ConvShard { ct: (0, 2), rt: (4, 5) },  // rt out of range
+            ConvShard { ct: (0, 2), rt: (2, 2) },  // empty rt
+        ] {
+            assert!(
+                compile_conv_shard(
+                    &cfg(),
+                    &layer,
+                    Precision::Int8,
+                    Strategy::ChannelFirst,
+                    0,
+                    false,
+                    &bad
+                )
+                .is_err(),
+                "{bad:?}"
+            );
+        }
     }
 
     #[test]

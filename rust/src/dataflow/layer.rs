@@ -40,6 +40,23 @@ impl ConvLayer {
         ConvLayer { name: name.to_string(), cin, cout, h, w, k, stride, pad }
     }
 
+    /// Whether the layer's geometry is unusable: zero kernel/stride/
+    /// channel counts, or a kernel larger than the padded input. The
+    /// one shared predicate behind every "degenerate layer" rejection
+    /// ([`crate::dataflow::shard_layout`], the roofline backend;
+    /// `TilingPlan::new` reports the same conditions as split mapping
+    /// errors). When this is true, [`ConvLayer::ho`]/[`ConvLayer::wo`]
+    /// (and everything built on them, e.g. [`ConvLayer::macs`]) must
+    /// not be called — their subtraction underflows.
+    pub fn degenerate(&self) -> bool {
+        self.k == 0
+            || self.stride == 0
+            || self.cin == 0
+            || self.cout == 0
+            || self.k > self.h + 2 * self.pad
+            || self.k > self.w + 2 * self.pad
+    }
+
     /// Output height.
     pub fn ho(&self) -> usize {
         (self.h + 2 * self.pad - self.k) / self.stride + 1
@@ -101,6 +118,17 @@ mod tests {
         let l2 = ConvLayer::new("s2", 3, 64, 224, 224, 7, 2, 3);
         assert_eq!(l2.ho(), 112);
         assert_eq!(l2.wo(), 112);
+    }
+
+    #[test]
+    fn degenerate_geometry_is_detected() {
+        assert!(!ConvLayer::new("ok", 8, 8, 8, 8, 3, 1, 1).degenerate());
+        assert!(ConvLayer::new("k0", 8, 8, 8, 8, 0, 1, 1).degenerate());
+        assert!(ConvLayer::new("s0", 8, 8, 8, 8, 3, 0, 1).degenerate());
+        assert!(ConvLayer::new("c0", 0, 8, 8, 8, 3, 1, 1).degenerate());
+        assert!(ConvLayer::new("kbig", 8, 8, 3, 3, 7, 1, 0).degenerate());
+        // padding can make a big kernel legal again
+        assert!(!ConvLayer::new("kpad", 8, 8, 3, 3, 7, 1, 2).degenerate());
     }
 
     #[test]

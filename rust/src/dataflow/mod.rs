@@ -6,9 +6,9 @@ pub mod layer;
 pub mod layout;
 pub mod tiling;
 
-pub use compiler::{compile_conv, CompiledConv};
+pub use compiler::{compile_conv, compile_conv_shard, CompiledConv};
 pub use layer::ConvLayer;
 pub use layout::{extract_ofmap, pack_ifmap_image, pack_weight_image};
-pub use tiling::TilingPlan;
+pub use tiling::{shard_layout, ConvShard, TilingPlan, SHARD_MIN_ATOMS, SHARD_MIN_MACS};
 
 pub use crate::isa::Strategy;

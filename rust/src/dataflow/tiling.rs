@@ -21,6 +21,114 @@ use crate::error::{Error, Result};
 use crate::isa::Strategy;
 use crate::mem::tensor::channel_groups;
 
+/// Layers whose nominal MAC count reaches this bound are *decomposed*:
+/// their timing simulation is defined as the deterministic composition
+/// of independent tile shards (see [`shard_layout`]) rather than one
+/// monolithic program run. This is a timing-model constant, not a
+/// tuning knob — changing it changes what the simulator reports for
+/// large layers, which is why the `speed` backend fingerprint embeds
+/// the decomposition version.
+pub const SHARD_MIN_MACS: u64 = 32_000_000;
+
+/// Minimum shard count [`shard_layout`] aims for on a decomposable
+/// layer: output-channel passes first, row-tile bands when `n_ct` is
+/// too small to reach it alone.
+pub const SHARD_MIN_ATOMS: usize = 16;
+
+/// One intra-layer shard: a contiguous range of output-channel passes
+/// (`ct`) crossed with a contiguous band of row tiles (`rt`). Shards
+/// partition a layer's `(ct, rt)` tile grid; each compiles to a
+/// standalone sub-program ([`super::compiler::compile_conv_shard`])
+/// with no dataflow into any other shard — the per-tile independence
+/// of the paper's mixed dataflow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvShard {
+    /// Output-channel pass range `[start, end)` (units of
+    /// [`SpeedConfig::couts_per_pass`]).
+    pub ct: (usize, usize),
+    /// Row-tile band `[start, end)` (units of `tile_r` output rows).
+    pub rt: (usize, usize),
+}
+
+impl ConvShard {
+    /// The shard covering the whole `(ct, rt)` grid of `layer`.
+    ///
+    /// Precondition: `layer` has usable geometry
+    /// (`!layer.degenerate()`) — the grid arithmetic calls
+    /// [`ConvLayer::ho`], which underflows otherwise.
+    pub fn whole(cfg: &SpeedConfig, layer: &ConvLayer) -> Self {
+        ConvShard {
+            ct: (0, layer.cout.div_ceil(cfg.couts_per_pass())),
+            rt: (0, layer.ho().div_ceil(cfg.tile_r)),
+        }
+    }
+
+    /// Real output channels this shard produces (excludes the tail
+    /// padding of the last pass).
+    pub fn couts(&self, cfg: &SpeedConfig, layer: &ConvLayer) -> usize {
+        let cpp = cfg.couts_per_pass();
+        (self.ct.1 * cpp).min(layer.cout) - (self.ct.0 * cpp).min(layer.cout)
+    }
+
+    /// Real output rows this shard produces (excludes the tail padding
+    /// of the last row tile).
+    pub fn rows(&self, cfg: &SpeedConfig, layer: &ConvLayer) -> usize {
+        (self.rt.1 * cfg.tile_r).min(layer.ho()) - (self.rt.0 * cfg.tile_r).min(layer.ho())
+    }
+
+    /// Nominal useful MACs of this shard. Shards partition the layer's
+    /// output exactly, so these sum to [`ConvLayer::macs`] over any
+    /// [`shard_layout`].
+    pub fn macs(&self, cfg: &SpeedConfig, layer: &ConvLayer) -> u64 {
+        (self.rows(cfg, layer) * layer.wo() * self.couts(cfg, layer)
+            * layer.cin
+            * layer.k
+            * layer.k) as u64
+    }
+}
+
+/// The deterministic shard decomposition of `layer` under `cfg`, or
+/// `None` when the layer is simulated monolithically (below
+/// [`SHARD_MIN_MACS`], or its tile grid has nothing to split).
+///
+/// The decomposition is a pure function of `(cfg, layer)` — never of
+/// the precision, strategy, thread count or shard-fan-out threshold —
+/// so every path that simulates a decomposable layer (serial API,
+/// pooled engine, sharded engine at any worker count) composes exactly
+/// the same shards and reports bit-identical results.
+///
+/// Shape: one shard per output-channel pass; when the layer has fewer
+/// than [`SHARD_MIN_ATOMS`] passes, each pass is further split into
+/// equal contiguous row-tile bands until the grid reaches the target
+/// (bounded by the row-tile count).
+pub fn shard_layout(cfg: &SpeedConfig, layer: &ConvLayer) -> Option<Vec<ConvShard>> {
+    // Impossible layers stay on the monolithic path, which reports them
+    // as mapping errors (never a panic in the grid arithmetic here).
+    if layer.degenerate() || layer.macs() < SHARD_MIN_MACS {
+        return None;
+    }
+    let n_ct = layer.cout.div_ceil(cfg.couts_per_pass());
+    let n_rt = layer.ho().div_ceil(cfg.tile_r);
+    let n_bands = SHARD_MIN_ATOMS.div_ceil(n_ct).min(n_rt).max(1);
+    if n_ct * n_bands <= 1 {
+        return None;
+    }
+    // Equal contiguous rt bands: the first `rem` bands carry one extra
+    // row tile, so bands partition [0, n_rt) exactly.
+    let (base, rem) = (n_rt / n_bands, n_rt % n_bands);
+    let mut shards = Vec::with_capacity(n_ct * n_bands);
+    for ct in 0..n_ct {
+        let mut rt0 = 0usize;
+        for b in 0..n_bands {
+            let len = base + usize::from(b < rem);
+            shards.push(ConvShard { ct: (ct, ct + 1), rt: (rt0, rt0 + len) });
+            rt0 += len;
+        }
+        debug_assert_eq!(rt0, n_rt);
+    }
+    Some(shards)
+}
+
 /// Fully-resolved tiling of one layer at one precision/strategy.
 #[derive(Debug, Clone)]
 pub struct TilingPlan {
@@ -352,6 +460,63 @@ mod tests {
     fn mixed_rejected_at_plan_level() {
         let layer = ConvLayer::new("t", 8, 8, 8, 8, 3, 1, 1);
         assert!(TilingPlan::new(&cfg(), &layer, Precision::Int8, Strategy::Mixed).is_err());
+    }
+
+    #[test]
+    fn small_layers_do_not_decompose() {
+        let layer = ConvLayer::new("t", 16, 32, 14, 14, 3, 1, 1);
+        assert!(layer.macs() < SHARD_MIN_MACS);
+        assert!(shard_layout(&cfg(), &layer).is_none());
+    }
+
+    #[test]
+    fn big_layers_decompose_into_a_partition() {
+        // VGG16 conv1_2-shaped: 64×64×224×224 k3 ≈ 1.85 G MACs.
+        let layer = ConvLayer::new("c12", 64, 64, 224, 224, 3, 1, 1);
+        assert!(layer.macs() >= SHARD_MIN_MACS);
+        let shards = shard_layout(&cfg(), &layer).expect("decomposes");
+        assert!(shards.len() >= SHARD_MIN_ATOMS, "{} shards", shards.len());
+        // Exact partition of the (ct, rt) grid and of the useful MACs.
+        let n_ct = layer.cout.div_ceil(cfg().couts_per_pass());
+        let n_rt = layer.ho().div_ceil(cfg().tile_r);
+        let mut covered = vec![vec![false; n_rt]; n_ct];
+        let mut macs = 0u64;
+        for s in &shards {
+            assert!(s.ct.0 < s.ct.1 && s.ct.1 <= n_ct, "{s:?}");
+            assert!(s.rt.0 < s.rt.1 && s.rt.1 <= n_rt, "{s:?}");
+            for ct in s.ct.0..s.ct.1 {
+                for rt in s.rt.0..s.rt.1 {
+                    assert!(!covered[ct][rt], "tile ({ct},{rt}) covered twice");
+                    covered[ct][rt] = true;
+                }
+            }
+            macs += s.macs(&cfg(), &layer);
+        }
+        assert!(covered.iter().flatten().all(|&c| c), "grid not fully covered");
+        assert_eq!(macs, layer.macs(), "shards must partition the useful work");
+        assert_eq!(ConvShard::whole(&cfg(), &layer).macs(&cfg(), &layer), layer.macs());
+    }
+
+    #[test]
+    fn few_ct_passes_fall_back_to_rt_bands() {
+        // cout = 64 → 4 ct passes at the default config; rt bands make
+        // up the target shard count.
+        let layer = ConvLayer::new("c11", 3, 64, 224, 224, 3, 1, 1);
+        let shards = shard_layout(&cfg(), &layer).expect("decomposes");
+        assert!(shards.iter().any(|s| s.rt != (0, layer.ho().div_ceil(cfg().tile_r))));
+        assert!(shards.len() >= SHARD_MIN_ATOMS);
+        // Deep layers with many ct passes shard on ct alone.
+        let deep = ConvLayer::new("c53", 512, 512, 14, 14, 3, 1, 1);
+        let deep_shards = shard_layout(&cfg(), &deep).expect("decomposes");
+        let n_rt = deep.ho().div_ceil(cfg().tile_r);
+        assert!(deep_shards.iter().all(|s| s.rt == (0, n_rt)));
+        assert_eq!(deep_shards.len(), deep.cout.div_ceil(cfg().couts_per_pass()));
+    }
+
+    #[test]
+    fn layout_is_deterministic() {
+        let layer = ConvLayer::new("c12", 64, 64, 224, 224, 3, 1, 1);
+        assert_eq!(shard_layout(&cfg(), &layer), shard_layout(&cfg(), &layer));
     }
 
     #[test]

@@ -34,7 +34,11 @@
 //!   deterministically bit-identical to the serial path at any thread
 //!   count. [`coordinator::backend`] is the pluggable job-execution
 //!   layer (SPEED cycle engine, Ara baseline, golden functional
-//!   verifier), the memo cache persists across processes via
+//!   verifier, roofline envelope); giant layers decompose into
+//!   intra-layer shards ([`dataflow::shard_layout`]) that fan out
+//!   across the worker pool and merge deterministically, cutting the
+//!   cold-sweep critical path below the biggest single layer; the memo
+//!   cache persists across processes via
 //!   `SweepEngine::save_cache`/`load_cache` (with an optional LRU
 //!   bound), and [`coordinator::serve`] parks the engine behind a
 //!   line-delimited request protocol (`speed serve` / `speed request`)

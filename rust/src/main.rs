@@ -3,11 +3,14 @@
 //!
 //! ```text
 //! speed fig3|fig4|fig5|table1 [--out DIR] [config flags]
-//! speed all   [--out DIR] [--threads N] [--no-memoize] [--cache-file PATH] [config flags]
-//! speed sweep [--backend speed|ara|golden|all] [--threads N] [--no-memoize]
-//!             [--cache-file PATH] [--out DIR] [config flags]   (see `speed sweep --help`)
+//! speed all   [--out DIR] [--threads N] [--no-memoize] [--cache-file PATH]
+//!             [--shard-threshold N | --no-shard] [config flags]
+//! speed sweep [--backend speed|ara|golden|roofline|all] [--threads N] [--no-memoize]
+//!             [--cache-file PATH] [--shard-threshold N | --no-shard]
+//!             [--out DIR] [config flags]                       (see `speed sweep --help`)
 //! speed serve [--tcp ADDR] [--port-file PATH] [--cache-file PATH]
-//!             [--max-cache-entries N] [--threads N] [config flags]
+//!             [--max-cache-entries N] [--threads N]
+//!             [--shard-threshold N | --no-shard] [config flags]
 //!                                         (long-running sweep server; `--help`)
 //! speed request (--emit | --tcp ADDR) [request flags]
 //!                                         (client for `speed serve`; `--help`)
@@ -21,8 +24,9 @@
 //! ```
 
 use speed::arch::{Precision, SpeedConfig};
-use speed::coordinator::backend::AraAnalytic;
+use speed::coordinator::backend::{AraAnalytic, RooflineBound};
 use speed::coordinator::serve;
+use speed::coordinator::sweep::SHARD_OFF;
 use speed::coordinator::experiments::{
     headline_checks, run_fig3, run_fig3_with, run_fig4, run_fig4_with, run_fig5, run_table1,
     run_table1_with,
@@ -43,20 +47,31 @@ const SWEEP_HELP: &str = "\
 speed sweep — run a simulation grid on the parallel batch-sweep engine
 
 flags:
-  --backend speed|ara|golden|all
+  --backend speed|ara|golden|roofline|all
                which simulation backend(s) to sweep (default: speed)
-                 speed   SPEED cycle engine over the paper's benchmark grid
-                 ara     Ara baseline model over the same grid (8/16-bit;
-                         unsupported 4-bit cells are skipped)
-                 golden  functional bit-exactness verification on a compact
-                         layer grid (every cell is cross-checked against the
-                         host golden model; a mismatch fails the sweep)
-                 all     speed + ara on the benchmark grid, then golden on
-                         the verification grid
+                 speed    SPEED cycle engine over the paper's benchmark grid
+                 ara      Ara baseline model over the same grid (8/16-bit;
+                          unsupported 4-bit cells are skipped)
+                 golden   functional bit-exactness verification on a compact
+                          layer grid (every cell is cross-checked against the
+                          host golden model; a mismatch fails the sweep)
+                 roofline instant analytic envelope over the benchmark grid
+                          (closed-form cycle lower bounds; free sanity bound
+                          for the cycle-accurate columns)
+                 all      speed + ara + roofline on the benchmark grid, then
+                          golden on the verification grid
   --threads N   worker threads (0 = one per core, the default)
   --no-memoize  simulate every grid cell independently: disable the
                 in-run dedup and the persistent result cache
   --no-cache    deprecated alias of --no-memoize
+  --shard-threshold N
+                fan a job out into intra-layer shard sub-jobs when its
+                layer's estimated MACs reach N (default: auto). Layers
+                below the decomposition floor (32M MACs) never have
+                shards, so values under the floor act like the floor.
+                Purely a scheduling knob — results are bit-identical
+                for any value, shard count and thread count
+  --no-shard    never fan jobs out (one worker per layer simulation)
   --cache-file PATH
                load the persistent result cache from PATH before the run
                (cold start if missing/corrupt) and save it back after, so
@@ -95,6 +110,10 @@ flags:
                 bound the memo table to N entries with LRU eviction
                 (bounds the load-time merge too); default unbounded
   --threads N   worker threads per request (0 = one per core)
+  --shard-threshold N
+                server-wide shard fan-out threshold override in layer
+                MACs (scheduling-only; default: per request / auto)
+  --no-shard    never fan jobs out, server-wide
   --help        this text
 
 config flags (the base config; requests may override per request):
@@ -122,6 +141,12 @@ flags:
                     strategy axis (default mixed)
   --threads N       worker threads for this request
   --no-memoize      disable memoization for this request
+  --shard-threshold N
+                    shard fan-out threshold for this request (MACs;
+                    layers under the 32M-MAC decomposition floor never
+                    shard, so values below it act like the floor)
+  --no-shard        disable intra-layer shard fan-out for this request
+                    (scheduling-only; the results are bit-identical)
   --op sweep|ping|shutdown
                     operation (default sweep)
   --raw LINE        send LINE verbatim instead of the built request
@@ -163,14 +188,20 @@ fn save_cache_flag(engine: &SweepEngine, path: Option<&str>) {
     }
 }
 
-/// Apply the shared engine flags (--threads / --no-memoize) as engine
-/// overrides so they reach specs built inside the drivers too.
+/// Apply the shared engine flags (--threads / --no-memoize /
+/// --shard-threshold / --no-shard) as engine overrides so they reach
+/// specs built inside the drivers too.
 fn apply_engine_flags(engine: &mut SweepEngine, flags: &Flags) {
     if let Some(n) = flags.num("threads") {
         engine.set_threads_override(Some(n));
     }
     if flags.get("no-memoize").is_some() || flags.get("no-cache").is_some() {
         engine.set_memoize_override(Some(false));
+    }
+    if flags.get("no-shard").is_some() {
+        engine.set_shard_threshold_override(Some(SHARD_OFF));
+    } else if let Some(t) = flags.num("shard-threshold") {
+        engine.set_shard_threshold_override(Some(t));
     }
 }
 
@@ -350,16 +381,23 @@ fn main() -> speed::Result<()> {
                     SweepSpec::benchmark_suite(&cfg)
                         .backends(vec![std::sync::Arc::new(AraAnalytic::default())]),
                 )],
+                "roofline" => vec![(
+                    "sweep",
+                    SweepSpec::benchmark_suite(&cfg)
+                        .backends(vec![std::sync::Arc::new(RooflineBound)]),
+                )],
                 "golden" => vec![("verify", SweepSpec::verification_suite(&cfg))],
                 "all" => vec![
                     (
                         "sweep",
-                        SweepSpec::benchmark_suite(&cfg).backend(AraAnalytic::default()),
+                        SweepSpec::benchmark_suite(&cfg)
+                            .backend(AraAnalytic::default())
+                            .backend(RooflineBound),
                     ),
                     ("verify", SweepSpec::verification_suite(&cfg)),
                 ],
                 other => {
-                    eprintln!("bad backend `{other}` (speed/ara/golden/all)");
+                    eprintln!("bad backend `{other}` (speed/ara/golden/roofline/all)");
                     std::process::exit(2);
                 }
             };
@@ -390,6 +428,11 @@ fn main() -> speed::Result<()> {
                 cache_file: flags.get("cache-file").map(String::from),
                 max_cache_entries: flags.num("max-cache-entries"),
                 threads: flags.num("threads"),
+                shard_threshold: if flags.get("no-shard").is_some() {
+                    Some(SHARD_OFF)
+                } else {
+                    flags.num("shard-threshold")
+                },
             };
             serve::run_server(opts)?;
         }
@@ -443,6 +486,12 @@ fn main() -> speed::Result<()> {
             }
             if flags.get("no-memoize").is_some() {
                 req.memoize = false;
+            }
+            if flags.get("no-shard").is_some() {
+                req.shard = false;
+            }
+            if let Some(t) = flags.num("shard-threshold") {
+                req.shard_threshold = Some(t);
             }
             req.overrides = serve::CfgOverrides {
                 lanes: flags.num("lanes"),

@@ -33,7 +33,7 @@ fn pick_subset(rng: &mut Prng, n: usize) -> Vec<usize> {
 
 fn random_request(rng: &mut Prng) -> Request {
     let nets = ["VGG16", "ResNet18", "GoogLeNet", "SqueezeNet"];
-    let backends = ["speed", "ara", "golden"];
+    let backends = ["speed", "ara", "golden", "roofline"];
     let precisions = [Precision::Int4, Precision::Int8, Precision::Int16];
     let strategies = [Strategy::FeatureFirst, Strategy::ChannelFirst, Strategy::Mixed];
     let mut req = Request {
@@ -65,6 +65,10 @@ fn random_request(rng: &mut Prng) -> Request {
         req.threads = Some(rng.below(16) as usize);
     }
     req.memoize = rng.below(4) != 0;
+    req.shard = rng.below(4) != 0;
+    if rng.below(2) == 1 {
+        req.shard_threshold = Some(rng.next_u64() >> 12);
+    }
     req.overrides = CfgOverrides {
         lanes: (rng.below(2) == 1).then(|| 1 << rng.range_usize(2, 4)),
         vlen: (rng.below(2) == 1).then(|| 512 << rng.range_usize(0, 2)),
@@ -108,6 +112,8 @@ fn malformed_requests_are_rejected_not_panics() {
         "{\"id\":1,\"strategies\":[\"zz\"]}",   // unknown strategy
         "{\"id\":1,\"network\":42}",            // wrong type
         "{\"id\":[1]}",                         // wrong shape
+        "{\"id\":1,\"shard\":1}",               // shard wants a bool
+        "{\"id\":1,\"shard_threshold\":\"x\"}", // threshold wants an int
     ] {
         assert!(Request::parse(bad).is_err(), "must reject {bad:?}");
     }
@@ -178,6 +184,11 @@ fn serve_session_streams_blocks_and_summaries_with_warm_repeat_zero_sims() {
     assert_eq!(summary_field(&lines[1], "sims"), 1);
     assert_eq!(summary_field(&lines[1], "jobs"), 1);
     assert_eq!(summary_field(&lines[1], "cache_entries"), 1);
+    // Tiny layer: below every shard threshold, so no fan-out — but the
+    // accounting fields are always present in the summary.
+    assert_eq!(summary_field(&lines[1], "sharded_jobs"), 0);
+    assert_eq!(summary_field(&lines[1], "shards"), 0);
+    let _ = summary_field(&lines[1], "slowest_job_ms");
     // Warm repeat: zero new simulations, served from the shared memo.
     assert_eq!(summary_field(&lines[4], "id"), 2);
     assert_eq!(summary_field(&lines[4], "sims"), 0);

@@ -1,0 +1,137 @@
+//! Intra-layer sharding parity contract: for every backend that
+//! shards, a decomposable layer's result is **bit-identical** however
+//! the shards are grouped into sub-jobs ({1, 2, 4, 7} groups), however
+//! many worker threads execute them ({1, 4}), and however the shard
+//! results arrive (merge is completion-order independent) — all equal
+//! to the unsharded (inline) run and to the serial single-layer API.
+
+use speed::arch::{Precision, SpeedConfig};
+use speed::coordinator::backend::{by_name, SimBackend, SpeedCycle, WorkerSlot, BACKEND_NAMES};
+use speed::coordinator::simulate_layer;
+use speed::coordinator::sweep::{SweepEngine, SweepSpec, SHARD_AUTO_MACS, SHARD_OFF};
+use speed::core::SimStats;
+use speed::dataflow::{ConvLayer, Strategy};
+
+/// Smallest comfortably-decomposable layer: just over the dataflow
+/// layer's decomposition bound, so the parity matrix stays cheap.
+fn big_layer() -> ConvLayer {
+    ConvLayer::new("big", 64, 64, 30, 30, 3, 1, 1)
+}
+
+fn atom_stats(backend: &dyn SimBackend, cfg: &SpeedConfig, layer: &ConvLayer) -> Vec<SimStats> {
+    let shards = backend.shard_layout(cfg, layer).expect("layer decomposes");
+    let mut slot = WorkerSlot::default();
+    shards
+        .iter()
+        .map(|sh| {
+            backend
+                .simulate_shard(&mut slot, cfg, layer, Precision::Int8, Strategy::FeatureFirst, sh)
+                .expect("shard simulates")
+        })
+        .collect()
+}
+
+fn merge_all<'a>(stats: impl Iterator<Item = &'a SimStats>) -> SimStats {
+    let mut total = SimStats::default();
+    for s in stats {
+        total.merge(s);
+    }
+    total
+}
+
+#[test]
+fn any_shard_grouping_is_bit_identical() {
+    // Group the fixed shard decomposition into {1, 2, 4, 7} contiguous
+    // sub-jobs; each sub-job merges its own shards, the groups merge in
+    // order. Every grouping must reproduce the backend's own composed
+    // result exactly — the property that lets the engine pick sub-job
+    // granularity freely (and cache at layer level) without changing a
+    // single bit.
+    let cfg = SpeedConfig::default();
+    let layer = big_layer();
+    let atoms = atom_stats(&SpeedCycle, &cfg, &layer);
+    assert!(atoms.len() >= 7, "need >= 7 shards for the grouping matrix");
+    let whole = SpeedCycle
+        .simulate(&mut WorkerSlot::default(), &cfg, &layer, Precision::Int8, Strategy::FeatureFirst)
+        .unwrap();
+    for groups in [1usize, 2, 4, 7] {
+        let per = atoms.len().div_ceil(groups);
+        let grouped: Vec<SimStats> =
+            atoms.chunks(per).map(|chunk| merge_all(chunk.iter())).collect();
+        assert!(grouped.len() <= groups.max(1));
+        let total = merge_all(grouped.iter());
+        assert_eq!(total, whole, "{groups} groups diverged from the composed result");
+    }
+    assert_eq!(whole.useful_macs, layer.macs());
+}
+
+#[test]
+fn shard_merge_is_completion_order_independent() {
+    // Workers finish in arbitrary order; the merge must not care. The
+    // engine merges in shard-index order regardless, but this pins the
+    // stronger property the scheduling relies on: the composition is a
+    // per-field sum, so *any* arrival order gives the same bits.
+    let cfg = SpeedConfig::default();
+    let layer = big_layer();
+    let atoms = atom_stats(&SpeedCycle, &cfg, &layer);
+    let inorder = merge_all(atoms.iter());
+    let n = atoms.len();
+    // A few deterministic permutations: reversed, odds-then-evens, and
+    // a stride walk.
+    let reversed: Vec<usize> = (0..n).rev().collect();
+    let odds_evens: Vec<usize> =
+        (0..n).filter(|i| i % 2 == 1).chain((0..n).filter(|i| i % 2 == 0)).collect();
+    let stride: Vec<usize> = (0..5).flat_map(|r| (r..n).step_by(5)).collect();
+    for (label, perm) in
+        [("reversed", reversed), ("odds-then-evens", odds_evens), ("stride-5", stride)]
+    {
+        assert_eq!(perm.len(), n, "{label}: bad permutation");
+        let shuffled = merge_all(perm.iter().map(|&i| &atoms[i]));
+        assert_eq!(shuffled, inorder, "{label}: completion order changed the merge");
+    }
+}
+
+#[test]
+fn engine_parity_across_fanout_and_threads() {
+    // The engine path end-to-end: fanned out at {1, 4} threads and
+    // inline (fan-out off) must emit bit-identical LayerResults, equal
+    // to the serial API.
+    let cfg = SpeedConfig::default();
+    let layer = big_layer();
+    let serial = simulate_layer(&cfg, &layer, Precision::Int8, Strategy::FeatureFirst).unwrap();
+    let spec_for = |threshold: u64, threads: usize| {
+        SweepSpec::new(cfg.clone())
+            .network("t", vec![layer.clone()])
+            .precisions(vec![Precision::Int8])
+            .strategies(vec![Strategy::FeatureFirst])
+            .shard_threshold(threshold)
+            .threads(threads)
+    };
+    for threads in [1usize, 4] {
+        let fanned = SweepEngine::new().run(&spec_for(SHARD_AUTO_MACS, threads)).unwrap();
+        assert_eq!(fanned.sharded_jobs, 1, "{threads} threads");
+        assert!(fanned.shards_spawned > 1, "{threads} threads");
+        assert_eq!(fanned.results[0], serial, "{threads} threads: fanned != serial");
+    }
+    let inline = SweepEngine::new().run(&spec_for(SHARD_OFF, 4)).unwrap();
+    assert_eq!(inline.shards_spawned, 0);
+    assert_eq!(inline.results[0], serial, "inline != serial");
+}
+
+#[test]
+fn every_sharding_backend_is_pinned() {
+    // The parity matrix above must cover every registered backend that
+    // decomposes layers: if a new backend starts sharding, this fails
+    // until the parity tests learn about it.
+    let cfg = SpeedConfig::default();
+    let layer = big_layer();
+    for name in BACKEND_NAMES {
+        let b = by_name(name).unwrap();
+        let shards = b.shard_layout(&cfg, &layer);
+        assert_eq!(
+            shards.is_some(),
+            name == "speed",
+            "backend `{name}`: sharding support changed — extend shard_parity.rs"
+        );
+    }
+}
