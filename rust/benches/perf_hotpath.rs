@@ -45,6 +45,26 @@ fn smoke_mode() -> bool {
     std::env::var("SPEED_BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
 }
 
+/// Write one bench-telemetry JSON record. `env_var` overrides the
+/// destination; otherwise full mode targets the committed repo-root
+/// baseline (cargo runs benches with the *package* directory as cwd)
+/// and smoke mode targets the temp dir, so reduced-iteration junk can
+/// never clobber a committed baseline.
+fn emit_bench_json(env_var: &str, file_name: &str, smoke: bool, json: &str) {
+    let path = std::env::var(env_var).unwrap_or_else(|_| {
+        if smoke {
+            std::env::temp_dir().join(file_name).to_string_lossy().into_owned()
+        } else {
+            format!("{}/../{}", env!("CARGO_MANIFEST_DIR"), file_name)
+        }
+    });
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("[bench] wrote {path}"),
+        Err(e) => println!("[bench] could not write {path}: {e}"),
+    }
+    print!("{json}");
+}
+
 fn main() {
     let smoke = smoke_mode();
     let cfg = SpeedConfig::default();
@@ -123,6 +143,7 @@ fn main() {
 
     sweep_throughput(&cfg, smoke);
     shard_critical_path(&cfg, smoke);
+    fastforward_steady_state(&cfg, smoke);
 }
 
 /// §Perf: batch-sweep engine throughput on the paper's four-network grid
@@ -268,17 +289,6 @@ fn shard_critical_path(cfg: &SpeedConfig, smoke: bool) {
     assert!(sharded.shards_spawned > 0, "grid must contain a decomposable layer");
     println!("[bench] sharded sweep bit-identical to the unsharded engine");
 
-    // Full mode defaults to the repo root (cargo runs benches with the
-    // *package* directory as cwd), where the committed trajectory
-    // baseline lives; smoke mode defaults to the temp dir so reduced-
-    // iteration junk can never clobber the committed baseline.
-    let path = std::env::var("SPEED_BENCH_SHARD_JSON").unwrap_or_else(|_| {
-        if smoke {
-            std::env::temp_dir().join("BENCH_shard.json").to_string_lossy().into_owned()
-        } else {
-            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_shard.json").to_string()
-        }
-    });
     let json = format!(
         concat!(
             "{{\"bench\":\"shard\",\"mode\":\"{}\",\"network\":\"{}\",\"precision\":8,",
@@ -298,9 +308,76 @@ fn shard_critical_path(cfg: &SpeedConfig, smoke: bool) {
         unsharded.slowest_job_secs,
         sharded.slowest_job_secs,
     );
-    match std::fs::write(&path, &json) {
-        Ok(()) => println!("[bench] wrote {path}"),
-        Err(e) => println!("[bench] could not write {path}: {e}"),
-    }
-    print!("{json}");
+    emit_bench_json("SPEED_BENCH_SHARD_JSON", "BENCH_shard.json", smoke, &json);
+}
+
+/// §Perf: loop-aware fast-forward vs step-by-step — the same cold grid
+/// with fast-forward off (every instruction stepped; the pre-PR cost
+/// model) and on (converged steady-state regions extrapolated),
+/// bit-identical results asserted, wall-clocks and the skipped-work
+/// fraction recorded to `BENCH_fastforward.json` (override with
+/// `SPEED_BENCH_FF_JSON`). Full mode sweeps cold VGG16 at int8/Mixed;
+/// smoke mode swaps in the dominant conv3x3 layer so CI still
+/// exercises both paths. Memoization is off so both runs really
+/// simulate every cell.
+fn fastforward_steady_state(cfg: &SpeedConfig, smoke: bool) {
+    let (grid_name, layers): (&str, Vec<ConvLayer>) = if smoke {
+        ("conv3x3_56", vec![ConvLayer::new("r3", 64, 64, 56, 56, 3, 1, 1)])
+    } else {
+        let vgg = all_models().into_iter().find(|m| m.name == "VGG16").expect("VGG16 in zoo");
+        ("VGG16", vgg.layers)
+    };
+    println!("\n== fast-forward: steady-state extrapolation ({grid_name} @int8 Mixed) ==");
+    let spec_for = |ff: bool| {
+        SweepSpec::new(cfg.clone())
+            .network(grid_name, layers.clone())
+            .precisions(vec![Precision::Int8])
+            .memoize(false)
+            .fast_forward(ff)
+    };
+
+    let t0 = Instant::now();
+    let stepped = SweepEngine::new().run(&spec_for(false)).expect("stepped sweep");
+    let dt_stepped = t0.elapsed().as_secs_f64();
+    println!(
+        "fast-forward off ({} threads)          {dt_stepped:>8.2}s  slowest job {:>6.2}s",
+        stepped.threads_used, stepped.slowest_job_secs
+    );
+
+    let t1 = Instant::now();
+    let fast = SweepEngine::new().run(&spec_for(true)).expect("fast-forward sweep");
+    let dt_fast = t1.elapsed().as_secs_f64();
+    println!(
+        "fast-forward on  ({} threads)          {dt_fast:>8.2}s  slowest job {:>6.2}s  ({} instrs skipped, {:.2}x)",
+        fast.threads_used,
+        fast.slowest_job_secs,
+        fast.fast_forwarded_instrs,
+        dt_stepped / dt_fast.max(1e-9)
+    );
+
+    // Acceptance: fast-forward is execution-strategy only — bit-identical.
+    assert_eq!(fast.results, stepped.results, "fast-forward diverged from stepping");
+    assert_eq!(stepped.fast_forwarded_instrs, 0);
+    assert!(fast.fast_forwarded_instrs > 0, "grid must contain steady-state regions");
+    println!("[bench] fast-forward sweep bit-identical to step-by-step execution");
+
+    let json = format!(
+        concat!(
+            "{{\"bench\":\"fastforward\",\"mode\":\"{}\",\"network\":\"{}\",\"precision\":8,",
+            "\"strategy\":\"mixed\",\"threads\":{},\"stepped_secs\":{:.3},",
+            "\"fastforward_secs\":{:.3},\"speedup\":{:.3},\"fast_forwarded_instrs\":{},",
+            "\"slowest_job_stepped_secs\":{:.3},\"slowest_job_fastforward_secs\":{:.3},",
+            "\"bit_identical\":true}}\n"
+        ),
+        if smoke { "smoke" } else { "full" },
+        grid_name,
+        fast.threads_used,
+        dt_stepped,
+        dt_fast,
+        dt_stepped / dt_fast.max(1e-9),
+        fast.fast_forwarded_instrs,
+        stepped.slowest_job_secs,
+        fast.slowest_job_secs,
+    );
+    emit_bench_json("SPEED_BENCH_FF_JSON", "BENCH_fastforward.json", smoke, &json);
 }

@@ -39,6 +39,10 @@ pub struct SpeedConfig {
     /// Systolic fill/drain latency per VSAM tile = `tile_r + tile_c`
     /// multiplied by this (1 = ideal skew registers).
     pub sa_fill_factor: f64,
+    /// Store-queue drain cycles appended to a standard vector store
+    /// (`vse`) after its DRAM stream: the write buffer flush between
+    /// the VRF read port and the memory interface.
+    pub store_drain_cycles: u64,
 }
 
 impl Default for SpeedConfig {
@@ -58,6 +62,7 @@ impl Default for SpeedConfig {
             vrf_bank_bytes: 8,
             issue_cycles: 1,
             sa_fill_factor: 1.0,
+            store_drain_cycles: 2,
         }
     }
 }

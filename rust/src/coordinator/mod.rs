@@ -15,7 +15,8 @@ pub mod serve;
 pub mod sweep;
 
 pub use backend::{
-    AraAnalytic, GoldenFunctional, RooflineBound, SimBackend, SpeedCycle, WorkerSlot,
+    config_fingerprint, AraAnalytic, DecodedProgram, GoldenFunctional, ProgramCache,
+    RooflineBound, SimBackend, SpeedCycle, WorkerSlot,
 };
 pub use serve::{Request, ServeStats, StreamSink};
 pub use runner::{

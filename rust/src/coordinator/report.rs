@@ -153,14 +153,16 @@ pub fn sweep_markdown(spec: &SweepSpec, out: &SweepOutcome) -> String {
         out.elapsed_secs,
         out.sims_per_sec()
     ));
-    // Shard/wall-clock telemetry: where the run's critical path went,
-    // and whether intra-layer fan-out was engaged to shorten it.
+    // Shard/wall-clock/fast-forward telemetry: where the run's critical
+    // path went, whether intra-layer fan-out was engaged to shorten it,
+    // and how much stepping the steady-state extrapolation removed.
     s.push_str(&format!(
-        "{} sharded jobs | {} shard sub-jobs | slowest unit {:.2}s | {:.2}s total sim work\n\n",
+        "{} sharded jobs | {} shard sub-jobs | slowest unit {:.2}s | {:.2}s total sim work | {} instrs fast-forwarded\n\n",
         out.sharded_jobs,
         out.shards_spawned,
         out.slowest_job_secs,
-        out.job_elapsed_total_secs
+        out.job_elapsed_total_secs,
+        out.fast_forwarded_instrs
     ));
     s.push_str("| backend | config | network | precision | strategy | cycles | GOPS |\n");
     s.push_str("|---|---|---|---|---|---|---|\n");

@@ -37,8 +37,10 @@
 //! (see [`BACKEND_NAMES`]), `precisions` (`[16,8,4]`), `strategies`
 //! (`["ff","cf","mixed"]`), `threads`, `memoize`, `shard` (intra-layer
 //! shard fan-out on/off, scheduling-only), `shard_threshold` (fan-out
-//! bound in layer MACs), and the config overrides `lanes`, `vlen`,
-//! `tile_r`, `tile_c`, `dram_bw`, `freq`.
+//! bound in layer MACs), `fast_forward` (loop-aware steady-state
+//! fast-forward on/off — bit-identical results either way), and the
+//! config overrides `lanes`, `vlen`, `tile_r`, `tile_c`, `dram_bw`,
+//! `freq`.
 //!
 //! Replies are line-delimited records tagged by `"type"`: one
 //! `"block"` line per layer result, streamed in deterministic job
@@ -48,8 +50,9 @@
 //! long cold sweeps should size `--timeout-secs` to the run, not to
 //! the line rate), then one `"summary"` line carrying the run's cache
 //! accounting (`sims`, `cache_hits`, `dedup_hits`, `evictions`,
-//! `cache_entries`) and its shard/wall-clock telemetry (`sharded_jobs`,
-//! `shards`, `slowest_job_ms`) — a warm repeat of an identical request reports
+//! `cache_entries`) and its shard/wall-clock/fast-forward telemetry
+//! (`sharded_jobs`,
+//! `shards`, `slowest_job_ms`, `ff_instrs`) — a warm repeat of an identical request reports
 //! `"sims":0`. `"ping"` answers `"pong"`; `"shutdown"` answers
 //! `"bye"`, flushes the cache file and stops the server (EOF on stdin
 //! does the same).
@@ -484,6 +487,10 @@ pub struct Request {
     /// Shard fan-out threshold in estimated layer MACs (`None` = the
     /// engine's auto threshold). Ignored when `shard` is off.
     pub shard_threshold: Option<u64>,
+    /// Loop-aware fast-forward on (default) or off for this request.
+    /// Bit-identical results either way; off re-steps every
+    /// instruction (verification/benchmark escape hatch).
+    pub fast_forward: bool,
     /// Machine-configuration overrides.
     pub overrides: CfgOverrides,
 }
@@ -502,6 +509,7 @@ impl Default for Request {
             memoize: true,
             shard: true,
             shard_threshold: None,
+            fast_forward: true,
             overrides: CfgOverrides::default(),
         }
     }
@@ -598,6 +606,7 @@ impl Request {
                 "shard_threshold" => {
                     req.shard_threshold = Some(val.as_u64("shard_threshold")?)
                 }
+                "fast_forward" => req.fast_forward = val.as_bool("fast_forward")?,
                 "lanes" => req.overrides.lanes = Some(val.as_u64("lanes")? as usize),
                 "vlen" => req.overrides.vlen = Some(val.as_u64("vlen")? as usize),
                 "tile_r" => req.overrides.tile_r = Some(val.as_u64("tile_r")? as usize),
@@ -654,6 +663,9 @@ impl Request {
         }
         if let Some(t) = self.shard_threshold {
             parts.push(format!("\"shard_threshold\":{t}"));
+        }
+        if !self.fast_forward {
+            parts.push("\"fast_forward\":false".to_string());
         }
         if let Some(v) = self.overrides.lanes {
             parts.push(format!("\"lanes\":{v}"));
@@ -735,6 +747,7 @@ impl Request {
         } else if let Some(t) = self.shard_threshold {
             spec = spec.shard_threshold(t);
         }
+        spec = spec.fast_forward(self.fast_forward);
         Ok(spec)
     }
 }
@@ -767,10 +780,13 @@ pub fn block_line(id: u64, backend: &str, network: &str, r: &LayerResult) -> Str
 /// The per-request `summary` record terminating a sweep reply.
 /// `shards` counts shard sub-jobs spawned by intra-layer fan-out;
 /// `slowest_job_ms` is the longest single scheduled unit — the
-/// request's critical-path floor, the number sharding shrinks.
+/// request's critical-path floor, the number sharding shrinks;
+/// `ff_instrs` counts instructions the timing backends skipped via
+/// loop-aware fast-forward (0 when the request set
+/// `"fast_forward":false` or was served from cache).
 pub fn summary_line(id: u64, out: &SweepOutcome, cache_entries: usize) -> String {
     format!(
-        "{{\"type\":\"summary\",\"id\":{id},\"jobs\":{},\"sims\":{},\"cache_hits\":{},\"dedup_hits\":{},\"evictions\":{},\"cache_entries\":{cache_entries},\"threads\":{},\"elapsed_ms\":{},\"sharded_jobs\":{},\"shards\":{},\"slowest_job_ms\":{}}}",
+        "{{\"type\":\"summary\",\"id\":{id},\"jobs\":{},\"sims\":{},\"cache_hits\":{},\"dedup_hits\":{},\"evictions\":{},\"cache_entries\":{cache_entries},\"threads\":{},\"elapsed_ms\":{},\"sharded_jobs\":{},\"shards\":{},\"slowest_job_ms\":{},\"ff_instrs\":{}}}",
         out.results.len(),
         out.executed_sims,
         out.cache_hits,
@@ -781,6 +797,7 @@ pub fn summary_line(id: u64, out: &SweepOutcome, cache_entries: usize) -> String
         out.sharded_jobs,
         out.shards_spawned,
         (out.slowest_job_secs * 1000.0).round() as u64,
+        out.fast_forwarded_instrs,
     )
 }
 
@@ -985,6 +1002,10 @@ pub struct ServerOptions {
     /// per-request/auto; [`super::sweep::SHARD_OFF`] disables fan-out
     /// server-wide). Scheduling-only — results never change.
     pub shard_threshold: Option<u64>,
+    /// Loop-aware fast-forward override for every request (`None` =
+    /// per-request; `Some(false)` = the server-wide
+    /// `--no-fast-forward` escape hatch). Bit-identical either way.
+    pub fast_forward: Option<bool>,
 }
 
 fn flush_cache(engine: &Mutex<SweepEngine>, path: Option<&str>) {
@@ -1011,6 +1032,9 @@ pub fn run_server(opts: ServerOptions) -> Result<()> {
     }
     if let Some(t) = opts.shard_threshold {
         engine.set_shard_threshold_override(Some(t));
+    }
+    if let Some(ff) = opts.fast_forward {
+        engine.set_fast_forward_override(Some(ff));
     }
     if let Some(path) = &opts.cache_file {
         if std::path::Path::new(path).exists() {
@@ -1357,6 +1381,26 @@ mod tests {
         // And the fields round-trip the wire format.
         let line = off.to_line();
         assert!(line.contains("\"shard\":false") && line.contains("\"shard_threshold\":123"));
+        assert_eq!(Request::parse(&line).unwrap(), off);
+    }
+
+    #[test]
+    fn fast_forward_field_reaches_the_spec() {
+        let base = SpeedConfig::default();
+        let req = Request {
+            id: 1,
+            network: "SqueezeNet".into(),
+            layers: Some(vec![1]),
+            ..Default::default()
+        };
+        // Default: on, and omitted from the wire format.
+        assert!(req.to_spec(&base).unwrap().fast_forward);
+        assert!(!req.to_line().contains("fast_forward"));
+        // Off: carried on the wire, lands in the spec, round-trips.
+        let off = Request { fast_forward: false, ..req };
+        assert!(!off.to_spec(&base).unwrap().fast_forward);
+        let line = off.to_line();
+        assert!(line.contains("\"fast_forward\":false"));
         assert_eq!(Request::parse(&line).unwrap(), off);
     }
 

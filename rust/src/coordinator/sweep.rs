@@ -50,6 +50,22 @@
 //!   ([`SweepOutcome::shards_spawned`] /
 //!   [`SweepOutcome::slowest_job_secs`] report what fan-out did to the
 //!   critical path);
+//! - work items are claimed in **LPT order** (heaviest estimated MACs
+//!   first), so the slowest simulation starts immediately instead of
+//!   becoming a lonely tail on an idle pool — scheduling-only, results
+//!   are keyed by item identity and bit-identical in any order;
+//! - **loop-aware fast-forward** ([`SweepSpec::fast_forward`], engine
+//!   override [`SweepEngine::set_fast_forward_override`], CLI
+//!   `--no-fast-forward`) lets the timing backends extrapolate
+//!   converged steady-state program regions instead of stepping every
+//!   instruction — cold simulation time scales with a layer's *loop
+//!   structure* rather than its instruction count, with bit-identical
+//!   [`SimStats`] guaranteed (irregular regions fall back to stepping;
+//!   [`SweepOutcome::fast_forwarded_instrs`] reports the skipped work)
+//!   — and each worker keeps a small pre-decoded
+//!   [`ProgramCache`](super::backend::ProgramCache) so cells repeated
+//!   within a run (duplicate shapes under `--no-memoize`) skip codegen
+//!   and word-by-word decode;
 //! - a [`ReportSink`] receives every per-layer [`LayerResult`] in
 //!   deterministic job order once the run completes
 //!   ([`SweepEngine::run_with_sink`]).
@@ -69,7 +85,8 @@ use std::thread;
 use std::time::Instant;
 
 use super::backend::{
-    fp_f64, fp_u64, GoldenFunctional, SimBackend, SpeedCycle, WorkerSlot, FP_SEED,
+    config_fingerprint, layer_shape as shape_of, GoldenFunctional, SimBackend, SpeedCycle,
+    WorkerSlot,
 };
 use super::persist;
 use super::runner::{LayerResult, NetworkResult};
@@ -135,6 +152,14 @@ pub struct SweepSpec {
     /// ([`SHARD_MIN_MACS`](crate::dataflow::SHARD_MIN_MACS)) behave
     /// like the floor — layers under it have no shards to fan out.
     pub shard_threshold: u64,
+    /// Loop-aware fast-forward in the timing backends (default on):
+    /// steady-state program regions whose per-iteration timing delta
+    /// has converged are extrapolated instead of stepped. Results are
+    /// bit-identical either way (the processor falls back to stepping
+    /// whenever convergence is not proven); the off switch exists for
+    /// benchmarking and belt-and-braces verification
+    /// (`--no-fast-forward`).
+    pub fast_forward: bool,
 }
 
 impl SweepSpec {
@@ -151,6 +176,7 @@ impl SweepSpec {
             threads: 0,
             memoize: true,
             shard_threshold: SHARD_AUTO_MACS,
+            fast_forward: true,
         }
     }
 
@@ -218,6 +244,13 @@ impl SweepSpec {
     /// [`SHARD_OFF`] disables fan-out.
     pub fn shard_threshold(mut self, macs: u64) -> Self {
         self.shard_threshold = macs;
+        self
+    }
+
+    /// Enable/disable loop-aware fast-forward (builder style);
+    /// bit-identical results either way.
+    pub fn fast_forward(mut self, on: bool) -> Self {
+        self.fast_forward = on;
         self
     }
 
@@ -371,6 +404,13 @@ pub struct SweepOutcome {
     /// `slowest_job_secs / elapsed_secs` ≈ tail imbalance,
     /// `job_elapsed_total_secs / elapsed_secs` ≈ effective parallelism).
     pub job_elapsed_total_secs: f64,
+    /// Instructions the timing backends skipped via loop-aware
+    /// fast-forward this run (0 with `--no-fast-forward`, with a cold
+    /// cacheless run of irregular programs, or when every cell came
+    /// from cache). The telemetry that makes the steady-state win
+    /// visible: skipped / (skipped + executed instructions) is the
+    /// fraction of simulation work the extrapolation removed.
+    pub fast_forwarded_instrs: u64,
     /// Start offset of each (backend, cfg, net, prec, strat) block in
     /// `results`.
     block_starts: Vec<usize>,
@@ -472,51 +512,6 @@ pub(crate) struct SimKey {
     pub(crate) cf: bool,
 }
 
-fn shape_of(l: &ConvLayer) -> [usize; 7] {
-    [l.cin, l.cout, l.h, l.w, l.k, l.stride, l.pad]
-}
-
-/// Stable fingerprint of a machine configuration (f64 fields hashed by
-/// bit pattern, FNV-1a — stable across processes and toolchains, which
-/// the on-disk cache requires).
-///
-/// Destructures `SpeedConfig` without `..` on purpose: adding a field
-/// to the config then breaks this function at compile time, so a new
-/// timing-relevant knob can never silently fall out of the memo-cache
-/// key (which would alias distinct configs in ablation sweeps).
-fn config_fingerprint(cfg: &SpeedConfig) -> u64 {
-    let SpeedConfig {
-        n_lanes,
-        vlen_bits,
-        n_vregs,
-        tile_r,
-        tile_c,
-        n_acc_banks,
-        queue_depth,
-        freq_mhz,
-        dram_bw_bytes_per_cycle,
-        dram_latency_cycles,
-        vrf_banks_per_lane,
-        vrf_bank_bytes,
-        issue_cycles,
-        sa_fill_factor,
-    } = cfg;
-    let mut h = fp_u64(FP_SEED, *n_lanes as u64);
-    h = fp_u64(h, *vlen_bits as u64);
-    h = fp_u64(h, *n_vregs as u64);
-    h = fp_u64(h, *tile_r as u64);
-    h = fp_u64(h, *tile_c as u64);
-    h = fp_u64(h, *n_acc_banks as u64);
-    h = fp_u64(h, *queue_depth as u64);
-    h = fp_f64(h, *freq_mhz);
-    h = fp_f64(h, *dram_bw_bytes_per_cycle);
-    h = fp_u64(h, *dram_latency_cycles);
-    h = fp_u64(h, *vrf_banks_per_lane as u64);
-    h = fp_u64(h, *vrf_bank_bytes as u64);
-    h = fp_u64(h, *issue_cycles);
-    h = fp_f64(h, *sa_fill_factor);
-    h
-}
 
 /// A memoized concrete simulation: the full statistics (which embed
 /// `cycles` and `useful_macs`).
@@ -650,6 +645,7 @@ pub struct SweepEngine {
     threads_override: Option<usize>,
     memoize_override: Option<bool>,
     shard_threshold_override: Option<u64>,
+    fast_forward_override: Option<bool>,
 }
 
 impl SweepEngine {
@@ -709,6 +705,13 @@ impl SweepEngine {
     /// fan-out). Scheduling-only — results never change.
     pub fn set_shard_threshold_override(&mut self, macs: Option<u64>) {
         self.shard_threshold_override = macs;
+    }
+
+    /// Override loop-aware fast-forward for every spec this engine runs
+    /// (`None` = respect each spec). Bit-identical results either way —
+    /// the CLI's `--no-fast-forward` escape hatch.
+    pub fn set_fast_forward_override(&mut self, on: Option<bool>) {
+        self.fast_forward_override = on;
     }
 
     /// Serialize the memo table to the versioned binary cache format
@@ -924,27 +927,57 @@ impl SweepEngine {
             spec_threads
         };
         let threads = requested_threads.min(items.len().max(1));
+        let fast_forward = self.fast_forward_override.unwrap_or(spec.fast_forward);
+
+        // LPT (longest-processing-time) ordering: workers claim the
+        // heaviest units first, so the slowest simulation starts as
+        // early as possible and cannot become a lonely tail on an
+        // otherwise idle pool. Estimated MACs order the queue; ties
+        // break on enumeration index so the order is deterministic.
+        // Scheduling-only: results are keyed by item identity, so any
+        // claim order produces bit-identical output
+        // (`tests/shard_parity.rs` pins order independence).
+        let mut order: Vec<usize> = (0..items.len()).collect();
+        {
+            let est: Vec<u64> = items
+                .iter()
+                .map(|it| {
+                    let t = slots[it.slot];
+                    let layer = &spec.networks[t.net].layers[t.layer];
+                    match &it.shard {
+                        Some(sh) => sh.macs(&spec.configs[t.cfg], layer),
+                        None if layer.degenerate() => 0,
+                        None => layer.macs(),
+                    }
+                })
+                .collect();
+            order.sort_by(|&a, &b| est[b].cmp(&est[a]).then(a.cmp(&b)));
+        }
 
         // 3) Execute the work items on the worker pool. Workers claim
-        //    items from a shared atomic index (self-scheduling queue)
-        //    and write into item-keyed outputs, so completion order is
-        //    irrelevant to the result.
+        //    items from a shared atomic index (self-scheduling queue,
+        //    walked in LPT order) and write into item-keyed outputs, so
+        //    completion order is irrelevant to the result.
         let mut sims: Vec<Option<CachedSim>> = prefilled;
         let mut slowest_job_secs = 0f64;
         let mut job_elapsed_total_secs = 0f64;
+        let mut fast_forwarded_instrs = 0u64;
         if !items.is_empty() {
             let n_cfgs = spec.configs.len();
             let n_worker_slots = spec.backends.len() * n_cfgs;
             type ItemOut = (usize, Result<SimStats>, f64);
-            let worker = |claim: &AtomicUsize| -> Vec<ItemOut> {
-                let mut pool: Vec<WorkerSlot> =
-                    (0..n_worker_slots).map(|_| WorkerSlot::default()).collect();
+            let order = &order;
+            let worker = |claim: &AtomicUsize| -> (Vec<ItemOut>, u64) {
+                let mut pool: Vec<WorkerSlot> = (0..n_worker_slots)
+                    .map(|_| WorkerSlot { fast_forward, ..WorkerSlot::default() })
+                    .collect();
                 let mut local = Vec::new();
                 loop {
-                    let i = claim.fetch_add(1, Ordering::Relaxed);
-                    if i >= items.len() {
+                    let pos = claim.fetch_add(1, Ordering::Relaxed);
+                    if pos >= order.len() {
                         break;
                     }
+                    let i = order[pos];
                     let item = &items[i];
                     let t = slots[item.slot];
                     let backend = &spec.backends[t.backend];
@@ -960,10 +993,11 @@ impl SweepEngine {
                     };
                     local.push((i, res, t0.elapsed().as_secs_f64()));
                 }
-                local
+                let skipped: u64 = pool.iter().map(|s| s.fast_forwarded_instrs).sum();
+                (local, skipped)
             };
 
-            let outs: Vec<Vec<ItemOut>> = if threads <= 1 {
+            let outs: Vec<(Vec<ItemOut>, u64)> = if threads <= 1 {
                 vec![worker(&AtomicUsize::new(0))]
             } else {
                 let claim = AtomicUsize::new(0);
@@ -979,7 +1013,8 @@ impl SweepEngine {
 
             let mut pending: Vec<Option<Result<SimStats>>> = Vec::new();
             pending.resize_with(items.len(), || None);
-            for out in outs {
+            for (out, skipped) in outs {
+                fast_forwarded_instrs += skipped;
                 for (item, res, elapsed) in out {
                     pending[item] = Some(res);
                     slowest_job_secs = slowest_job_secs.max(elapsed);
@@ -1055,6 +1090,7 @@ impl SweepEngine {
             shards_spawned,
             slowest_job_secs,
             job_elapsed_total_secs,
+            fast_forwarded_instrs,
             block_starts,
             dims: (
                 spec.backends.len(),
@@ -1426,6 +1462,37 @@ mod tests {
         assert_eq!(out.sharded_jobs, 0);
         assert_eq!(out.shards_spawned, 0);
         assert!(out.slowest_job_secs <= out.job_elapsed_total_secs);
+    }
+
+    #[test]
+    fn fast_forward_spec_and_override_are_bit_identical() {
+        // A layer with real steady-state loops plus the tiny shapes.
+        let mut layers = tiny_layers();
+        layers.push(ConvLayer::new("steady", 16, 32, 40, 40, 3, 1, 1));
+        let spec = SweepSpec::new(SpeedConfig::default())
+            .network("t", layers)
+            .precisions(vec![Precision::Int8])
+            .strategies(vec![Strategy::Mixed])
+            .threads(2);
+        assert!(spec.fast_forward, "fast-forward defaults on");
+        let on = SweepEngine::new().run(&spec).unwrap();
+        assert!(on.fast_forwarded_instrs > 0, "steady layer must fast-forward");
+        // Spec-level off.
+        let off = SweepEngine::new().run(&spec.clone().fast_forward(false)).unwrap();
+        assert_eq!(off.fast_forwarded_instrs, 0);
+        assert_eq!(on.results, off.results, "fast-forward must not move a single bit");
+        // Engine-level override beats the spec.
+        let mut engine = SweepEngine::new();
+        engine.set_fast_forward_override(Some(false));
+        let forced_off = engine.run(&spec).unwrap();
+        assert_eq!(forced_off.fast_forwarded_instrs, 0);
+        assert_eq!(forced_off.results, on.results);
+        engine.set_fast_forward_override(None);
+        // Cache hits report no skipped work (nothing executed).
+        let warm = engine.run(&spec).unwrap();
+        assert_eq!(warm.executed_sims, 0);
+        assert_eq!(warm.fast_forwarded_instrs, 0);
+        assert_eq!(warm.results, on.results);
     }
 
     #[test]

@@ -20,6 +20,32 @@
 //! SA cores → DRAM; both modes share this exact scheduler, so timing is
 //! identical — that is what makes whole-network sweeps tractable while
 //! keeping the numerics checkable against the XLA golden artifacts.
+//!
+//! ## Loop-aware fast-forward (timing mode)
+//!
+//! Compiled conv programs are thousands of near-identical tile passes;
+//! once the pipeline reaches steady state, every pass advances every
+//! timeline by the same amount. When a program carries
+//! [`Region`](crate::isa::Region) metadata (the dataflow compiler marks
+//! its own steady-state loops), [`Processor::run_decoded`] steps a
+//! region's first iterations normally while watching the per-iteration
+//! *delta* of the full timing state — the three timelines, the vreg and
+//! bank scoreboards, every statistics counter, the scalar register file
+//! and the architectural control state. Once two consecutive iterations
+//! produce the identical delta vector (and conservative safety guards
+//! on rate/value monotonicity hold), the
+//! remaining `trips` are applied algebraically in O(1): time-valued
+//! state and linear counters advance by `delta × remaining`, and
+//! control state is already iteration-invariant. Any difference in any
+//! delta component keeps the engine stepping — irregular programs, and
+//! all of functional mode, execute exactly as before. For well-formed
+//! regions (see the [`Region`] contract: every iteration shares one
+//! timing-homogeneous skeleton, which the compiler guarantees by
+//! construction), the result is **bit-identical [`SimStats`]** to
+//! step-by-step execution, pinned grid-wide by
+//! `tests/fastforward_parity.rs`; the empirical check cannot vet
+//! iterations it skips, so hand-written regions whose unmeasured tail
+//! differs structurally from the measured head are emitter bugs.
 
 use crate::arch::SpeedConfig;
 use crate::core::scalar::ScalarCore;
@@ -27,7 +53,7 @@ use crate::core::stats::SimStats;
 use crate::core::vidu::Vidu;
 use crate::core::vldu::Vldu;
 use crate::error::{Error, Result};
-use crate::isa::{Instr, LoadMode, Program, Vsacfg, Vsam};
+use crate::isa::{Instr, LoadMode, Program, Region, Strategy, Vsacfg, Vsam};
 use crate::lane::{alu, Lane};
 use crate::mem::Dram;
 use crate::sau::CsrState;
@@ -72,6 +98,15 @@ pub struct Processor {
     woff_rd: u32,
     woff_wr: u32,
     stats: SimStats,
+    /// Loop-aware fast-forward enable (timing mode only; default on).
+    fast_forward: bool,
+    /// Instructions skipped by fast-forward extrapolation this run.
+    ff_instrs: u64,
+    /// Configuration-value trace collected while stepping a region
+    /// iteration: every value a `vsetvli`/`vsacfg` folded into timing
+    /// state. Part of the convergence equality check — it catches
+    /// mid-iteration control differences that cancel by iteration end.
+    cfg_trace: Option<Vec<u64>>,
 }
 
 impl Processor {
@@ -102,12 +137,33 @@ impl Processor {
             woff_rd: 0,
             woff_wr: 0,
             stats: SimStats::default(),
+            fast_forward: true,
+            ff_instrs: 0,
+            cfg_trace: None,
         })
     }
 
     /// Current execution mode.
     pub fn mode(&self) -> ExecMode {
         self.mode
+    }
+
+    /// Enable or disable loop-aware fast-forward (on by default).
+    /// Scheduling-only: statistics are bit-identical either way —
+    /// disabling it exists for benchmarking and belt-and-braces CI.
+    pub fn set_fast_forward(&mut self, on: bool) {
+        self.fast_forward = on;
+    }
+
+    /// Whether loop-aware fast-forward is enabled.
+    pub fn fast_forward(&self) -> bool {
+        self.fast_forward
+    }
+
+    /// Instructions skipped by fast-forward extrapolation in the runs
+    /// since the last [`Processor::reset_timing`].
+    pub fn fast_forwarded_instrs(&self) -> u64 {
+        self.ff_instrs
     }
 
     /// Statistics accumulated so far.
@@ -148,6 +204,8 @@ impl Processor {
         self.lmul = 1;
         self.woff_rd = 0;
         self.woff_wr = 0;
+        self.ff_instrs = 0;
+        self.cfg_trace = None;
     }
 
     /// Full per-job reset for pooled reuse: architecturally equivalent to
@@ -192,12 +250,46 @@ impl Processor {
         }
     }
 
-    /// Run a whole program to completion.
+    /// Run a whole program to completion: decode the stream up front,
+    /// then execute with region fast-forward (see
+    /// [`Processor::run_decoded`]).
     pub fn run(&mut self, prog: &Program) -> Result<()> {
-        for &word in prog.words() {
-            let instr = self.vidu.decode(word)?;
-            self.vidu.classify(&instr);
-            self.step(&instr)?;
+        self.run_decoded(&prog.decode_all()?, prog.regions())
+    }
+
+    /// Run a pre-decoded instruction stream to completion. `regions`
+    /// marks steady-state repeat spans (sorted, non-overlapping;
+    /// malformed entries are ignored) which timing mode may
+    /// fast-forward — see the module docs. Pre-decoding is what the
+    /// sweep engine's per-worker program cache feeds: repeated grid
+    /// points skip the word-by-word decoder entirely.
+    pub fn run_decoded(&mut self, instrs: &[Instr], regions: &[Region]) -> Result<()> {
+        let ff = self.fast_forward && self.mode == ExecMode::Timing;
+        let mut next_region = 0usize;
+        let mut pc = 0usize;
+        while pc < instrs.len() {
+            // Advance past regions behind the pc or malformed (zero
+            // len/trips, overlap, out of bounds, arithmetic overflow).
+            while next_region < regions.len() {
+                let r = &regions[next_region];
+                let end = r.len.checked_mul(r.trips).and_then(|n| r.start.checked_add(n));
+                match end {
+                    Some(e) if r.start >= pc && r.len > 0 && r.trips > 0 && e <= instrs.len() => {
+                        break
+                    }
+                    _ => next_region += 1,
+                }
+            }
+            if ff && next_region < regions.len() && regions[next_region].start == pc {
+                let r = regions[next_region];
+                next_region += 1;
+                pc = self.run_region(instrs, &r)?;
+            } else {
+                let i = &instrs[pc];
+                self.vidu.classify(i);
+                self.step(i)?;
+                pc += 1;
+            }
         }
         // Final-cycle accounting: fold in the accumulator-port completion
         // times. The acc port (wb/ldacc/drain) runs concurrently with the
@@ -208,6 +300,321 @@ impl Processor {
         self.stats.cycles = self.t_issue.max(self.t_dram).max(self.t_sau).max(acc_end);
         self.stats.instrs = self.vidu.mix;
         Ok(())
+    }
+
+    /// Execute one repeat region, extrapolating its steady state.
+    ///
+    /// Iterations are stepped one at a time; after each, the full
+    /// timing-state delta against the previous iteration boundary is
+    /// computed. Two consecutive identical deltas (plus
+    /// [`Processor::extrapolation_is_safe`]) prove the loop has reached
+    /// its fixed point, and the remaining trips are applied as
+    /// `state += delta × remaining`. Returns the pc after the region.
+    fn run_region(&mut self, instrs: &[Instr], r: &Region) -> Result<usize> {
+        /// Measured iterations before giving up on convergence: past
+        /// this, the region keeps stepping but stops paying for
+        /// snapshots/delta comparisons — a region that has not reached
+        /// its fixed point in this many trips (typical convergence is
+        /// 3–5; dram-bound passes catching an issue-front lag take a
+        /// few more) is treated as irregular, bounding the overhead of
+        /// fast-forward-on to a constant per region.
+        const MAX_MEASURE_TRIPS: usize = 16;
+        let end = r.start + r.len * r.trips;
+        // Fewer than 3 trips can never amortize the two measurement
+        // iterations; step the span like straight-line code.
+        if r.trips < 3 {
+            for i in &instrs[r.start..end] {
+                self.vidu.classify(i);
+                self.step(i)?;
+            }
+            return Ok(end);
+        }
+        let mut prev = self.snapshot();
+        let mut prev_delta: Option<StateDelta> = None;
+        for it in 0..r.trips {
+            self.cfg_trace = Some(Vec::new());
+            let base = r.start + it * r.len;
+            for i in &instrs[base..base + r.len] {
+                self.vidu.classify(i);
+                if let Err(e) = self.step(i) {
+                    self.cfg_trace = None;
+                    return Err(e);
+                }
+            }
+            let trace = self.cfg_trace.take().unwrap_or_default();
+            let cur = self.snapshot();
+            let delta = StateDelta::between(&prev, &cur, trace);
+            let done = it + 1;
+            if done < r.trips
+                && prev_delta.as_ref() == Some(&delta)
+                && self.extrapolation_is_safe(&cur, &delta)
+            {
+                let k = (r.trips - done) as u64;
+                let target = delta.extrapolate(&cur, k);
+                self.write_back(&target);
+                self.ff_instrs += r.len as u64 * k;
+                return Ok(end);
+            }
+            prev_delta = Some(delta);
+            prev = cur;
+            if done >= MAX_MEASURE_TRIPS {
+                // Not converging: step the remaining span plainly.
+                for i in &instrs[r.start + done * r.len..end] {
+                    self.vidu.classify(i);
+                    self.step(i)?;
+                }
+                return Ok(end);
+            }
+        }
+        Ok(end)
+    }
+
+    /// Capture the complete timing-mode machine state at an iteration
+    /// boundary. Layout must match [`Processor::write_back`] exactly.
+    ///
+    /// `SimStats`, `InstrMix` and `CsrState` are destructured without
+    /// `..` on purpose (the same trick as `config_fingerprint`): adding
+    /// a field to any of them breaks this function at compile time, so
+    /// a new counter or timing-relevant CSR can never silently escape
+    /// the convergence check and diverge under extrapolation. (`Dram`
+    /// has private fields and cannot be destructured here — its four
+    /// public traffic counters are listed manually; keep them in sync.)
+    fn snapshot(&self) -> StateSnap {
+        let mut times = Vec::with_capacity(4 + 32 + self.bank_ready.len());
+        times.push(self.t_issue);
+        times.push(self.t_dram);
+        times.push(self.t_sau);
+        times.push(self.t_last_mac_end);
+        times.extend_from_slice(&self.vreg_ready);
+        times.extend_from_slice(&self.bank_ready);
+        let SimStats {
+            cycles,
+            instrs,
+            macs,
+            useful_macs,
+            dram_read,
+            dram_write,
+            vrf_read,
+            vrf_write,
+            sau_busy,
+            acc_busy,
+            dram_busy,
+            sa_fills,
+            operand_stall,
+        } = &self.stats;
+        let crate::core::stats::InstrMix {
+            scalar: si,
+            config: ci,
+            load: li,
+            mac: mi,
+            partial: pi,
+            store: sti,
+            alu: ai,
+        } = instrs;
+        let crate::core::stats::InstrMix { scalar, config, load, mac, partial, store, alu } =
+            &self.vidu.mix;
+        let mut counters = Vec::with_capacity(30 + 32);
+        counters.extend_from_slice(&[
+            *cycles,
+            *si,
+            *ci,
+            *li,
+            *mi,
+            *pi,
+            *sti,
+            *ai,
+            *macs,
+            *useful_macs,
+            *dram_read,
+            *dram_write,
+            *vrf_read,
+            *vrf_write,
+            *sau_busy,
+            *acc_busy,
+            *dram_busy,
+            *sa_fills,
+            *operand_stall,
+            *scalar,
+            *config,
+            *load,
+            *mac,
+            *partial,
+            *store,
+            *alu,
+            self.dram.bytes_read,
+            self.dram.bytes_written,
+            self.dram.read_txns,
+            self.dram.write_txns,
+        ]);
+        for r in 0..32u8 {
+            counters.push(self.scalar.read(r) as u64);
+        }
+        let CsrState {
+            precision,
+            strategy,
+            tile_h,
+            rowstride_elems,
+            runlen_elems,
+            runstride_elems,
+            aoffset_bytes,
+            aincr_bytes,
+            woffset_bytes,
+            outstride_bytes,
+            cstride_bytes,
+            shift,
+        } = &self.csr;
+        let q = &self.lanes[0].sau.queues;
+        let control = vec![
+            self.vl as u64,
+            self.sew_bits as u64,
+            self.lmul as u64,
+            self.woff_rd as u64,
+            self.woff_wr as u64,
+            precision.bits() as u64,
+            strategy_code(*strategy),
+            *tile_h as u64,
+            *rowstride_elems as u64,
+            *runlen_elems as u64,
+            *runstride_elems as u64,
+            *aoffset_bytes as u64,
+            *aincr_bytes as u64,
+            *woffset_bytes as u64,
+            *outstride_bytes as u64,
+            *cstride_bytes as u64,
+            *shift as u64,
+            q.occupancy() as u64,
+            q.max_occupancy as u64,
+        ];
+        StateSnap { times, counters, control }
+    }
+
+    /// Write an (extrapolated) snapshot back into the machine. Control
+    /// state is iteration-invariant by the convergence check, so only
+    /// time coordinates and linear counters move. The stats/mix structs
+    /// are rebuilt as full literals (no `..`) so a new field breaks
+    /// this function at compile time together with
+    /// [`Processor::snapshot`]; struct-literal fields evaluate in
+    /// written order, which mirrors the snapshot layout.
+    fn write_back(&mut self, s: &StateSnap) {
+        let mut t = s.times.iter().copied();
+        self.t_issue = t.next().expect("snapshot layout");
+        self.t_dram = t.next().expect("snapshot layout");
+        self.t_sau = t.next().expect("snapshot layout");
+        self.t_last_mac_end = t.next().expect("snapshot layout");
+        for v in self.vreg_ready.iter_mut() {
+            *v = t.next().expect("snapshot layout");
+        }
+        for b in self.bank_ready.iter_mut() {
+            *b = t.next().expect("snapshot layout");
+        }
+        let mut c = s.counters.iter().copied();
+        let mut n = || c.next().expect("snapshot layout");
+        use crate::core::stats::InstrMix;
+        self.stats = SimStats {
+            cycles: n(),
+            instrs: InstrMix {
+                scalar: n(),
+                config: n(),
+                load: n(),
+                mac: n(),
+                partial: n(),
+                store: n(),
+                alu: n(),
+            },
+            macs: n(),
+            useful_macs: n(),
+            dram_read: n(),
+            dram_write: n(),
+            vrf_read: n(),
+            vrf_write: n(),
+            sau_busy: n(),
+            acc_busy: n(),
+            dram_busy: n(),
+            sa_fills: n(),
+            operand_stall: n(),
+        };
+        self.vidu.mix = InstrMix {
+            scalar: n(),
+            config: n(),
+            load: n(),
+            mac: n(),
+            partial: n(),
+            store: n(),
+            alu: n(),
+        };
+        self.dram.bytes_read = n();
+        self.dram.bytes_written = n();
+        self.dram.read_txns = n();
+        self.dram.write_txns = n();
+        for r in 0..32u8 {
+            self.scalar.write(r, n() as i64);
+        }
+    }
+
+    /// Conservative guards that make applying a repeated delta exact
+    /// for every remaining iteration, not just the next one:
+    ///
+    /// - **control invariance** — vl/vtype, the SAU CSRs, the partial
+    ///   offsets and the queue occupancy are unchanged across the
+    ///   iteration (nonlinear state must not move at all);
+    /// - **monotone time** — no time coordinate moved backwards
+    ///   (a wrapped delta is a scoreboard rollback, not steady state);
+    /// - **rate/value monotonicity** — whenever coordinate `a`
+    ///   advances slower than coordinate `b`, `a` must already be
+    ///   *strictly* behind `b`. Slower coordinates then fall further
+    ///   behind every iteration and can never win a `max()` / flip a
+    ///   comparison they are currently losing, so the faster group
+    ///   evolves translation-invariantly and the observed delta repeats
+    ///   by induction. (The classic counterexample this rejects: a
+    ///   stalled timeline parked *ahead* of a slowly advancing issue
+    ///   front — extrapolation would freeze it forever, but stepping
+    ///   would eventually drag it forward. Exact ties are rejected too:
+    ///   a tie between unequal rates is the crossing instant, where
+    ///   `>=`-style comparisons flip on the very next iteration —
+    ///   waiting one more iteration separates the pair strictly.)
+    ///
+    /// One pair is provably irrelevant and exempted: a *stalled vreg
+    /// scoreboard entry* above the issue front. Every expression that
+    /// reads the vreg scoreboard also maxes a data timeline (`t_sau`
+    /// for MACs/ALU ops, `t_dram` for stores) which the remaining pair
+    /// checks force to dominate the stalled entry — so the issue front
+    /// crossing it can never change a comparison outcome. (If a
+    /// stalled-high entry *did* bind, it would freeze the downstream
+    /// timeline high, and that timeline's own pair against `t_issue`
+    /// fails the guard.) Without this exemption, dram-bound passes
+    /// with resident weights — whose weight registers stay ready far
+    /// above the lagging issue front — would never fast-forward.
+    fn extrapolation_is_safe(&self, cur: &StateSnap, d: &StateDelta) -> bool {
+        if !d.control_unchanged {
+            return false;
+        }
+        for &dt in &d.times {
+            if dt > u64::MAX / 2 {
+                return false; // negative movement
+            }
+        }
+        // Snapshot layout: [0] t_issue, [1] t_dram, [2] t_sau,
+        // [3] t_last_mac_end, [4..36] vreg_ready, [36..] bank_ready.
+        let is_stalled_vreg = |idx: usize| (4..36).contains(&idx) && d.times[idx] == 0;
+        for (a, (&va, &da)) in cur.times.iter().zip(&d.times).enumerate() {
+            for (b, (&vb, &db)) in cur.times.iter().zip(&d.times).enumerate().skip(a + 1) {
+                if (a == 0 && is_stalled_vreg(b)) || (b == 0 && is_stalled_vreg(a)) {
+                    continue;
+                }
+                if (da < db && va >= vb) || (db < da && vb >= va) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Record values a configuration instruction folded into timing
+    /// state (no-op outside region measurement).
+    fn trace_cfg(&mut self, vals: &[u64]) {
+        if let Some(t) = self.cfg_trace.as_mut() {
+            t.extend_from_slice(vals);
+        }
     }
 
     /// Execute one decoded instruction (timing + optional functional).
@@ -227,6 +634,12 @@ impl Processor {
                     if rs1 == 0 { self.vlmax() } else { self.scalar.read(rs1).max(0) as usize };
                 self.vl = avl.min(self.vlmax());
                 self.scalar.write(rd, self.vl as i64);
+                self.trace_cfg(&[
+                    0x10,
+                    self.vl as u64,
+                    vtype.sew_bits as u64,
+                    vtype.lmul as u64,
+                ]);
             }
             Instr::Vsacfg(cfg) => self.exec_vsacfg(cfg),
             Instr::Vsald { vd, rs1, mode } => self.exec_vsald(vd, rs1, mode)?,
@@ -256,7 +669,7 @@ impl Processor {
                 let addr = self.scalar.read(rs1) as u32;
                 let ready = self.vreg_span_ready(vs3, bytes / self.cfg.n_lanes);
                 let start = self.t_dram.max(self.t_issue).max(ready);
-                let end = start + self.dram.stream_cycles(bytes) + 2;
+                let end = start + self.dram.stream_cycles(bytes) + self.cfg.store_drain_cycles;
                 self.stats.dram_busy += end - start;
                 self.t_dram = end;
                 if self.mode == ExecMode::Functional {
@@ -321,30 +734,53 @@ impl Processor {
     }
 
     fn exec_vsacfg(&mut self, cfg: Vsacfg) {
+        // Every consumed value is traced: a region iteration must feed
+        // timing state the same configuration sequence as the previous
+        // one before fast-forward may extrapolate (mid-iteration
+        // differences that cancel by the boundary are caught here).
         match cfg {
             Vsacfg::Main { precision, strategy, tile_h } => {
                 self.csr.precision = precision;
                 self.csr.strategy = strategy;
                 self.csr.tile_h = tile_h;
+                self.trace_cfg(&[
+                    0x01,
+                    precision.bits() as u64,
+                    strategy_code(strategy),
+                    tile_h as u64,
+                ]);
             }
             Vsacfg::RowStride { rs1, aincr } => {
                 self.csr.rowstride_elems = self.scalar.read(rs1) as u32;
                 self.csr.aincr_bytes = aincr as u32;
+                self.trace_cfg(&[0x02, self.csr.rowstride_elems as u64, aincr as u64]);
             }
             Vsacfg::OutStride { rs1 } => {
-                self.csr.outstride_bytes = self.scalar.read(rs1) as u32
+                self.csr.outstride_bytes = self.scalar.read(rs1) as u32;
+                self.trace_cfg(&[0x03, self.csr.outstride_bytes as u64]);
             }
-            Vsacfg::Shift { uimm5 } => self.csr.shift = uimm5,
-            Vsacfg::AOffset { rs1 } => self.csr.aoffset_bytes = self.scalar.read(rs1) as u32,
+            Vsacfg::Shift { uimm5 } => {
+                self.csr.shift = uimm5;
+                self.trace_cfg(&[0x04, uimm5 as u64]);
+            }
+            Vsacfg::AOffset { rs1 } => {
+                self.csr.aoffset_bytes = self.scalar.read(rs1) as u32;
+                self.trace_cfg(&[0x05, self.csr.aoffset_bytes as u64]);
+            }
             Vsacfg::WOffset { rs1 } => {
                 self.csr.woffset_bytes = self.scalar.read(rs1) as u32;
                 self.woff_rd = self.csr.woffset_bytes;
                 self.woff_wr = self.csr.woffset_bytes;
+                self.trace_cfg(&[0x06, self.csr.woffset_bytes as u64]);
             }
-            Vsacfg::CStride { rs1 } => self.csr.cstride_bytes = self.scalar.read(rs1) as u32,
+            Vsacfg::CStride { rs1 } => {
+                self.csr.cstride_bytes = self.scalar.read(rs1) as u32;
+                self.trace_cfg(&[0x07, self.csr.cstride_bytes as u64]);
+            }
             Vsacfg::RunCfg { rs1, runlen } => {
                 self.csr.runstride_elems = self.scalar.read(rs1) as u32;
                 self.csr.runlen_elems = runlen as u32;
+                self.trace_cfg(&[0x08, self.csr.runstride_elems as u64, runlen as u64]);
             }
         }
     }
@@ -556,6 +992,86 @@ impl Processor {
             }
         }
         Ok(())
+    }
+}
+
+/// Stable numeric code for a strategy (snapshot/trace encoding only).
+fn strategy_code(s: Strategy) -> u64 {
+    match s {
+        Strategy::FeatureFirst => 0,
+        Strategy::ChannelFirst => 1,
+        Strategy::Mixed => 2,
+    }
+}
+
+/// Complete timing-mode machine state at a region iteration boundary,
+/// flattened into three classes with different extrapolation rules:
+///
+/// - `times` — time-valued coordinates (timelines + scoreboards), a
+///   max-plus system: they advance by their per-iteration delta;
+/// - `counters` — linearly-advancing counters (statistics, instruction
+///   mix, DRAM traffic, scalar registers as raw bits): they advance by
+///   their (possibly zero) per-iteration delta;
+/// - `control` — nonlinear architectural state (vl/vtype, SAU CSRs,
+///   partial offsets, queue occupancy): must be iteration-invariant
+///   for extrapolation to be exact.
+#[derive(Debug, Clone)]
+struct StateSnap {
+    times: Vec<u64>,
+    counters: Vec<u64>,
+    control: Vec<u64>,
+}
+
+/// Per-iteration state delta plus the iteration's configuration trace;
+/// fast-forward requires two consecutive iterations to produce equal
+/// values of this whole struct.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct StateDelta {
+    times: Vec<u64>,
+    counters: Vec<u64>,
+    control_unchanged: bool,
+    trace: Vec<u64>,
+}
+
+impl StateDelta {
+    fn between(prev: &StateSnap, cur: &StateSnap, trace: Vec<u64>) -> StateDelta {
+        StateDelta {
+            times: cur
+                .times
+                .iter()
+                .zip(&prev.times)
+                .map(|(c, p)| c.wrapping_sub(*p))
+                .collect(),
+            counters: cur
+                .counters
+                .iter()
+                .zip(&prev.counters)
+                .map(|(c, p)| c.wrapping_sub(*p))
+                .collect(),
+            control_unchanged: cur.control == prev.control,
+            trace,
+        }
+    }
+
+    /// The state `k` further iterations ahead of `cur`. Counters use
+    /// wrapping arithmetic so linearly-moving scalar registers (stored
+    /// as raw two's-complement bits) extrapolate exactly.
+    fn extrapolate(&self, cur: &StateSnap, k: u64) -> StateSnap {
+        StateSnap {
+            times: cur
+                .times
+                .iter()
+                .zip(&self.times)
+                .map(|(v, d)| v.wrapping_add(d.wrapping_mul(k)))
+                .collect(),
+            counters: cur
+                .counters
+                .iter()
+                .zip(&self.counters)
+                .map(|(v, d)| v.wrapping_add(d.wrapping_mul(k)))
+                .collect(),
+            control: cur.control.clone(),
+        }
     }
 }
 
@@ -813,6 +1329,139 @@ mod tests {
         m.reset(1 << 20);
         assert_eq!(m.dram.peek(0, 16).unwrap(), &[0; 16]);
         assert_eq!(m.lanes[0].vrf.peek(0, 0, 8).unwrap(), &[0; 8]);
+    }
+
+    /// A steady loop marked as a region must fast-forward — and produce
+    /// exactly the statistics of stepping every instruction.
+    #[test]
+    fn regular_region_fast_forwards_bit_identically() {
+        let trips = 8usize;
+        let build = || {
+            let mut b = Program::builder();
+            let mut marks = Vec::new();
+            for _ in 0..trips {
+                marks.push(b.len());
+                b.set_vl(64, 8, 1); // li t6, 64 ; vsetvli — same words every trip
+                b.emit(Instr::VaddVv { vd: 3, vs2: 1, vs1: 2 });
+            }
+            marks.push(b.len());
+            let mut p = b.build();
+            for r in crate::isa::Region::steady_runs(&marks, 3) {
+                p.push_region(r);
+            }
+            assert_eq!(p.regions().len(), 1);
+            assert_eq!(p.regions()[0].trips, trips);
+            p
+        };
+        let mut fast = machine(ExecMode::Timing);
+        fast.run(&build()).unwrap();
+        assert!(
+            fast.fast_forwarded_instrs() > 0,
+            "steady region must converge and extrapolate"
+        );
+        let mut slow = machine(ExecMode::Timing);
+        slow.set_fast_forward(false);
+        slow.run(&build()).unwrap();
+        assert_eq!(slow.fast_forwarded_instrs(), 0);
+        assert_eq!(*fast.stats(), *slow.stats(), "fast-forward must be bit-identical");
+    }
+
+    /// A region whose iterations never produce a repeating delta (here:
+    /// the vector length grows every trip) must fall back to stepping —
+    /// same statistics, nothing skipped.
+    #[test]
+    fn irregular_region_falls_back_to_stepping() {
+        let trips = 6usize;
+        let build = || {
+            let mut b = Program::builder();
+            let mut marks = Vec::new();
+            for it in 0..trips {
+                marks.push(b.len());
+                // growing avl: control state changes every iteration
+                b.set_vl(8 * (it as u32 + 1), 8, 1);
+                b.emit(Instr::VaddVv { vd: 3, vs2: 1, vs1: 2 });
+            }
+            marks.push(b.len());
+            let mut p = b.build();
+            for r in crate::isa::Region::steady_runs(&marks, 3) {
+                p.push_region(r);
+            }
+            assert_eq!(p.regions().len(), 1, "equal-length trips still form a region");
+            p
+        };
+        let mut fast = machine(ExecMode::Timing);
+        fast.run(&build()).unwrap();
+        assert_eq!(fast.fast_forwarded_instrs(), 0, "irregular region must not converge");
+        let mut slow = machine(ExecMode::Timing);
+        slow.set_fast_forward(false);
+        slow.run(&build()).unwrap();
+        assert_eq!(*fast.stats(), *slow.stats());
+    }
+
+    /// Functional mode moves real data, so regions are never
+    /// fast-forwarded there regardless of the toggle.
+    #[test]
+    fn functional_mode_never_fast_forwards() {
+        let mut b = Program::builder();
+        let mut marks = Vec::new();
+        for _ in 0..5 {
+            marks.push(b.len());
+            b.set_vl(64, 8, 1);
+            b.emit(Instr::VaddVv { vd: 3, vs2: 1, vs1: 2 });
+        }
+        marks.push(b.len());
+        let mut p = b.build();
+        for r in crate::isa::Region::steady_runs(&marks, 3) {
+            p.push_region(r);
+        }
+        let mut m = machine(ExecMode::Functional);
+        assert!(m.fast_forward(), "fast-forward defaults on");
+        m.run(&p).unwrap();
+        assert_eq!(m.fast_forwarded_instrs(), 0);
+    }
+
+    /// Malformed region metadata (out of bounds, overlapping, zero
+    /// length) is ignored — the program still runs step-by-step.
+    #[test]
+    fn malformed_regions_are_ignored() {
+        let build = || {
+            let mut b = Program::builder();
+            for _ in 0..4 {
+                b.set_vl(64, 8, 1);
+                b.emit(Instr::VaddVv { vd: 3, vs2: 1, vs1: 2 });
+            }
+            b.build()
+        };
+        let mut plain = machine(ExecMode::Timing);
+        plain.run(&build()).unwrap();
+        let mut broken = build();
+        broken.push_region(crate::isa::Region { start: 0, len: 0, trips: 9 });
+        broken.push_region(crate::isa::Region { start: 2, len: 3, trips: 100 }); // OOB
+        broken.push_region(crate::isa::Region { start: usize::MAX, len: 2, trips: 2 });
+        let mut m = machine(ExecMode::Timing);
+        m.run(&broken).unwrap();
+        assert_eq!(*m.stats(), *plain.stats());
+        assert_eq!(m.fast_forwarded_instrs(), 0);
+    }
+
+    /// The `vse` store-queue drain is an architectural parameter now —
+    /// stretching it must stretch the store's DRAM occupancy.
+    #[test]
+    fn store_drain_cycles_is_configurable() {
+        let run_with = |drain: u64| {
+            let mut cfg = SpeedConfig::default();
+            cfg.store_drain_cycles = drain;
+            let mut m = Processor::new(cfg, 1 << 20, ExecMode::Timing).unwrap();
+            let mut b = Program::builder();
+            b.set_vl(64, 8, 1);
+            b.li(12, 0);
+            b.emit(Instr::Vse { width: crate::isa::ElemWidth::E8, vs3: 3, rs1: 12 });
+            m.run(&b.build()).unwrap();
+            m.stats().clone()
+        };
+        let short = run_with(2);
+        let long = run_with(10);
+        assert_eq!(long.cycles, short.cycles + 8, "drain cycles must be additive");
     }
 
     #[test]

@@ -23,14 +23,27 @@
 //!           [FF, chunk<last: vsam.wb partials]
 //!       for x in batch: vsam.st (requant drain)   [CF]
 //! ```
+//!
+//! The compiler *generated* that loop nest, so it also knows exactly
+//! where the stream repeats: each pass's row-tile loop (falling back to
+//! the spatial-batch loop for shallow layers) is annotated as a
+//! [`Region`] on the emitted [`Program`], which is what lets the timing
+//! engine fast-forward converged steady-state execution
+//! ([`crate::core::Processor::run_decoded`]). Regions are metadata
+//! only — the emitted words are identical with or without them.
 
 use super::layer::ConvLayer;
 use super::tiling::{ConvShard, TilingPlan};
 use crate::arch::{Precision, SpeedConfig};
 use crate::error::{Error, Result};
 use crate::isa::instr::{Instr, LoadMode, Vsacfg, Vsam};
-use crate::isa::program::{Builder, Program};
+use crate::isa::program::{Builder, Program, Region};
 use crate::isa::Strategy;
+
+/// Minimum loop trips worth marking as a [`Region`]: the fast-forward
+/// engine steps at least two iterations to measure the steady-state
+/// delta, so shorter runs have nothing to skip.
+const MIN_REGION_TRIPS: usize = 4;
 
 /// A compiled layer: the instruction stream plus its DRAM image map.
 #[derive(Debug, Clone)]
@@ -213,8 +226,23 @@ fn compile_conv_impl(
                 emit_weight_loads(&mut b, &plan, ct, chunk, chunk);
             }
         }
+        // Steady-state region marking: the row-tile loop below is the
+        // layer's repeat structure — every `rt` iteration emits the same
+        // instruction skeleton with only linearly-advancing addresses.
+        // Record the iteration boundaries at both loop levels and mark
+        // whichever yields usable runs (rt-level preferred: one region
+        // covers the whole pass; xb-level rescues shallow layers whose
+        // row-tile count is too small to converge on). Runs split where
+        // `li` synthesis changes the iteration length, so the uniform
+        // tail still fast-forwards. Purely metadata — the emitted words
+        // are exactly what they were without regions.
+        let mut rt_marks: Vec<usize> = Vec::with_capacity(rt1 - rt0 + 1);
+        let mut xb_marks: Vec<Vec<usize>> = Vec::with_capacity(rt1 - rt0);
         for rt in rt0..rt1 {
+            rt_marks.push(b.len());
+            let mut marks: Vec<usize> = Vec::with_capacity(plan.n_xb + 1);
             for xb in 0..plan.n_xb {
+                marks.push(b.len());
                 for chunk in 0..plan.chunks {
                     if !plan.weights_resident {
                         emit_weight_loads(&mut b, &plan, ct, chunk, 0);
@@ -265,6 +293,21 @@ fn compile_conv_impl(
                         b.vsam_store(bank, addr as u32, relu);
                     }
                 }
+            }
+            marks.push(b.len());
+            xb_marks.push(marks);
+        }
+        rt_marks.push(b.len());
+        let rt_regions = Region::steady_runs(&rt_marks, MIN_REGION_TRIPS);
+        if rt_regions.is_empty() {
+            for marks in &xb_marks {
+                for r in Region::steady_runs(marks, MIN_REGION_TRIPS) {
+                    b.push_region(r);
+                }
+            }
+        } else {
+            for r in rt_regions {
+                b.push_region(r);
             }
         }
     }
@@ -348,6 +391,61 @@ mod tests {
         let p = &cc.plan;
         assert_eq!(macs, p.n_ct * p.n_rt * p.n_xb * p.chunks * p.w_b);
         assert_eq!(stores, p.n_ct * p.n_rt * p.n_xb * p.w_b);
+    }
+
+    #[test]
+    fn steady_regions_cover_the_tile_loops() {
+        // 40×40 input, tile_r 4 → 10 row tiles per pass; 32 couts → 2
+        // passes. Both strategies must mark structurally valid regions
+        // covering the bulk of the stream.
+        let layer = ConvLayer::new("t", 16, 32, 40, 40, 3, 1, 1);
+        for strat in [Strategy::FeatureFirst, Strategy::ChannelFirst] {
+            let cc = compile_conv(&cfg(), &layer, Precision::Int8, strat, 0, false).unwrap();
+            let regions = cc.program.regions();
+            assert!(!regions.is_empty(), "{strat}: no regions marked");
+            let mut prev_end = 0usize;
+            for r in regions {
+                assert!(r.start >= prev_end, "{strat}: regions overlap or unsorted");
+                assert!(r.len > 0 && r.trips >= 4, "{strat}: degenerate region {r:?}");
+                prev_end = r.end();
+                assert!(prev_end <= cc.program.len(), "{strat}: region out of bounds");
+            }
+            let covered: usize = regions.iter().map(|r| r.len * r.trips).sum();
+            assert!(
+                covered > cc.program.len() / 8,
+                "{strat}: regions cover too little ({covered}/{})",
+                cc.program.len()
+            );
+        }
+    }
+
+    /// The tentpole contract at the compiler level: executing a
+    /// compiled program with fast-forward produces *bit-identical*
+    /// statistics to stepping every instruction — and actually skips
+    /// work on at least one grid cell.
+    #[test]
+    fn fast_forward_matches_stepping_for_compiled_programs() {
+        use crate::core::{ExecMode, Processor};
+        let layer = ConvLayer::new("t", 16, 32, 40, 40, 3, 1, 1);
+        let mut skipped_total = 0u64;
+        for strat in [Strategy::FeatureFirst, Strategy::ChannelFirst] {
+            for p in [Precision::Int8, Precision::Int16] {
+                let cc = compile_conv(&cfg(), &layer, p, strat, 0, false).unwrap();
+                let run = |ff: bool| {
+                    let mut m =
+                        Processor::new(cfg(), cc.dram_bytes, ExecMode::Timing).unwrap();
+                    m.set_fast_forward(ff);
+                    m.run(&cc.program).unwrap();
+                    (m.stats().clone(), m.fast_forwarded_instrs())
+                };
+                let (fast, skipped) = run(true);
+                let (slow, zero) = run(false);
+                assert_eq!(zero, 0);
+                assert_eq!(fast, slow, "{strat} @{p}: fast-forward changed the stats");
+                skipped_total += skipped;
+            }
+        }
+        assert!(skipped_total > 0, "no grid cell fast-forwarded at all");
     }
 
     #[test]

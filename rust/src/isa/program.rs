@@ -4,22 +4,112 @@
 //! core fetches and hands to the VIDU. [`Program::builder`] provides the
 //! codegen API the dataflow compiler uses, including `li` constant
 //! synthesis (LUI+ADDI pairs, the standard RISC-V idiom).
+//!
+//! ## Repeat regions
+//!
+//! A program may additionally carry [`Region`] metadata: spans of the
+//! word stream that consist of `trips` consecutive loop iterations of
+//! exactly `len` words each. The dataflow compiler emits them for the
+//! steady-state tile-pass loops it generates (it knows where its own
+//! loops repeat), and the timing engine uses them to *fast-forward*
+//! converged steady-state execution (see
+//! [`crate::core::Processor::run_decoded`]). Regions are advisory:
+//! they never change what the words mean, only how fast the timing
+//! engine may execute them — a program with no regions (or with
+//! regions the engine's convergence check rejects) executes exactly
+//! one instruction at a time, as before.
 
 use super::decode::decode;
 use super::encode::encode;
 use super::instr::{Instr, LoadMode, VType, Vsacfg, Vsam};
 use crate::error::Result;
 
+/// One steady-state repeat region of a program: the words
+/// `[start, start + len * trips)` are `trips` loop iterations of
+/// exactly `len` words each.
+///
+/// Contract expected by the fast-forward engine: **every** iteration
+/// must be *timing-homogeneous* — the same instruction skeleton, with
+/// machine state that feeds timing (vector length, SAU CSRs,
+/// partial-offset counters) re-established to iteration-invariant
+/// values inside each iteration, and only linearly-advancing state
+/// (addresses, counters) differing between iterations. The engine
+/// verifies the contract empirically on the iterations it *steps* (it
+/// extrapolates only after two consecutive iterations produce an
+/// identical state delta, falling back to plain stepping otherwise),
+/// but it cannot inspect the iterations it skips: a region whose later
+/// iterations differ in timing-relevant structure from the measured
+/// ones is an **emitter bug** and may report statistics that differ
+/// from step-by-step execution. The dataflow compiler only marks loops
+/// whose iterations share one emission skeleton, which satisfies the
+/// contract by construction (pinned grid-wide by
+/// `tests/fastforward_parity.rs`); regions violating it merely in ways
+/// the measured iterations expose (changing vector lengths, drifting
+/// CSRs, irregular timing) are caught and cost nothing but the skipped
+/// optimization. Regions must be sorted by `start` and
+/// non-overlapping; malformed entries are ignored by the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Region {
+    /// Word index of the first iteration's first instruction.
+    pub start: usize,
+    /// Words per iteration.
+    pub len: usize,
+    /// Number of consecutive iterations.
+    pub trips: usize,
+}
+
+impl Region {
+    /// One-past-the-end word index of the region.
+    pub fn end(&self) -> usize {
+        self.start + self.len * self.trips
+    }
+
+    /// Derive regions from recorded loop-iteration boundaries.
+    ///
+    /// `boundaries` holds the word offset at the start of each
+    /// iteration plus one final entry for the loop end (so `n + 1`
+    /// entries describe `n` iterations). Iterations are grouped into
+    /// maximal runs of equal word length; each run of at least
+    /// `min_trips` iterations becomes one [`Region`]. Splitting on
+    /// length changes (rather than requiring the whole loop to be
+    /// uniform) keeps codegen artifacts like variable-length `li`
+    /// synthesis from discarding the whole loop: the long uniform tail
+    /// still fast-forwards.
+    pub fn steady_runs(boundaries: &[usize], min_trips: usize) -> Vec<Region> {
+        let mut out = Vec::new();
+        if boundaries.len() < 2 {
+            return out;
+        }
+        let n = boundaries.len() - 1;
+        let min_trips = min_trips.max(1);
+        let mut i = 0;
+        while i < n {
+            let len = boundaries[i + 1].saturating_sub(boundaries[i]);
+            let mut j = i + 1;
+            while j < n && boundaries[j + 1].saturating_sub(boundaries[j]) == len {
+                j += 1;
+            }
+            let trips = j - i;
+            if len > 0 && trips >= min_trips {
+                out.push(Region { start: boundaries[i], len, trips });
+            }
+            i = j;
+        }
+        out
+    }
+}
+
 /// An encoded instruction stream.
 #[derive(Debug, Clone, Default)]
 pub struct Program {
     words: Vec<u32>,
+    regions: Vec<Region>,
 }
 
 impl Program {
     /// Empty program.
     pub fn new() -> Self {
-        Program { words: Vec::new() }
+        Program { words: Vec::new(), regions: Vec::new() }
     }
 
     /// Start building a program.
@@ -56,6 +146,17 @@ impl Program {
     /// Decode the entire stream back to instruction form.
     pub fn decode_all(&self) -> Result<Vec<Instr>> {
         self.words.iter().map(|&w| decode(w)).collect()
+    }
+
+    /// Steady-state repeat regions, sorted by start offset.
+    pub fn regions(&self) -> &[Region] {
+        &self.regions
+    }
+
+    /// Attach a repeat region (callers keep them sorted and
+    /// non-overlapping; the engine ignores malformed entries).
+    pub fn push_region(&mut self, r: Region) {
+        self.regions.push(r);
     }
 
     /// Size of the binary in bytes.
@@ -187,6 +288,12 @@ impl Builder {
         self.emit(Instr::Vsam(Vsam::St { acc, rs1: 28, relu }))
     }
 
+    /// Attach a steady-state repeat region (see [`Region`]).
+    pub fn push_region(&mut self, r: Region) -> &mut Self {
+        self.prog.push_region(r);
+        self
+    }
+
     /// Finish and return the program.
     pub fn build(self) -> Program {
         self.prog
@@ -262,6 +369,51 @@ mod tests {
             let x = run_scalar(&b.build());
             assert_eq!(x[7] as i32 as u32, v, "li {v:#x}");
         }
+    }
+
+    #[test]
+    fn steady_runs_split_on_length_changes() {
+        // 2 iterations of 3 words, then 4 iterations of 5 words.
+        let b = [0, 3, 6, 11, 16, 21, 26];
+        let runs = Region::steady_runs(&b, 2);
+        assert_eq!(
+            runs,
+            vec![
+                Region { start: 0, len: 3, trips: 2 },
+                Region { start: 6, len: 5, trips: 4 },
+            ]
+        );
+        // A higher floor drops the short run but keeps the long tail.
+        let runs = Region::steady_runs(&b, 3);
+        assert_eq!(runs, vec![Region { start: 6, len: 5, trips: 4 }]);
+        assert_eq!(runs[0].end(), 26);
+    }
+
+    #[test]
+    fn steady_runs_edge_cases() {
+        assert!(Region::steady_runs(&[], 1).is_empty());
+        assert!(Region::steady_runs(&[7], 1).is_empty());
+        // zero-length iterations (empty loop bodies) never form regions
+        assert!(Region::steady_runs(&[4, 4, 4, 4], 1).is_empty());
+        // min_trips of 0 behaves as 1
+        assert_eq!(
+            Region::steady_runs(&[0, 2, 4], 0),
+            vec![Region { start: 0, len: 2, trips: 2 }]
+        );
+    }
+
+    #[test]
+    fn regions_ride_along_with_the_program() {
+        let mut b = Program::builder();
+        b.set_vl(8, 16, 8);
+        let mark = b.len();
+        for _ in 0..3 {
+            b.vsam_mac(0, 0, 8, true, false);
+        }
+        b.push_region(Region { start: mark, len: 1, trips: 3 });
+        let p = b.build();
+        assert_eq!(p.regions(), &[Region { start: mark, len: 1, trips: 3 }]);
+        assert_eq!(p.regions()[0].end(), p.len());
     }
 
     #[test]

@@ -42,7 +42,14 @@
 //!   `SweepEngine::save_cache`/`load_cache` (with an optional LRU
 //!   bound), and [`coordinator::serve`] parks the engine behind a
 //!   line-delimited request protocol (`speed serve` / `speed request`)
-//!   so a resident process serves sweeps from a hot cache.
+//!   so a resident process serves sweeps from a hot cache. Cold
+//!   simulation itself is **loop-aware**: the conv compiler marks its
+//!   steady-state tile-pass loops as [`isa::Region`]s and the timing
+//!   engine fast-forwards converged iterations algebraically
+//!   ([`core::Processor::run_decoded`]) with bit-identical statistics,
+//!   while per-worker pre-decoded program caches skip repeated
+//!   codegen/decode — so cold-sweep time scales with loop structure,
+//!   not instruction count.
 //!
 //! ## Example: one layer
 //!

@@ -4,13 +4,14 @@
 //! ```text
 //! speed fig3|fig4|fig5|table1 [--out DIR] [config flags]
 //! speed all   [--out DIR] [--threads N] [--no-memoize] [--cache-file PATH]
-//!             [--shard-threshold N | --no-shard] [config flags]
+//!             [--shard-threshold N | --no-shard] [--no-fast-forward] [config flags]
 //! speed sweep [--backend speed|ara|golden|roofline|all] [--threads N] [--no-memoize]
 //!             [--cache-file PATH] [--shard-threshold N | --no-shard]
+//!             [--no-fast-forward]
 //!             [--out DIR] [config flags]                       (see `speed sweep --help`)
 //! speed serve [--tcp ADDR] [--port-file PATH] [--cache-file PATH]
 //!             [--max-cache-entries N] [--threads N]
-//!             [--shard-threshold N | --no-shard] [config flags]
+//!             [--shard-threshold N | --no-shard] [--no-fast-forward] [config flags]
 //!                                         (long-running sweep server; `--help`)
 //! speed request (--emit | --tcp ADDR) [request flags]
 //!                                         (client for `speed serve`; `--help`)
@@ -72,6 +73,11 @@ flags:
                 Purely a scheduling knob — results are bit-identical
                 for any value, shard count and thread count
   --no-shard    never fan jobs out (one worker per layer simulation)
+  --no-fast-forward
+                step every instruction instead of extrapolating
+                converged steady-state loop regions (bit-identical
+                results; this is the verification/benchmark escape
+                hatch — the summary's fast-forward telemetry reads 0)
   --cache-file PATH
                load the persistent result cache from PATH before the run
                (cold start if missing/corrupt) and save it back after, so
@@ -114,6 +120,9 @@ flags:
                 server-wide shard fan-out threshold override in layer
                 MACs (scheduling-only; default: per request / auto)
   --no-shard    never fan jobs out, server-wide
+  --no-fast-forward
+                server-wide: step every instruction instead of
+                extrapolating steady-state loop regions (bit-identical)
   --help        this text
 
 config flags (the base config; requests may override per request):
@@ -147,6 +156,8 @@ flags:
                     shard, so values below it act like the floor)
   --no-shard        disable intra-layer shard fan-out for this request
                     (scheduling-only; the results are bit-identical)
+  --no-fast-forward disable loop-aware fast-forward for this request
+                    (bit-identical; the summary's ff_instrs reads 0)
   --op sweep|ping|shutdown
                     operation (default sweep)
   --raw LINE        send LINE verbatim instead of the built request
@@ -189,8 +200,8 @@ fn save_cache_flag(engine: &SweepEngine, path: Option<&str>) {
 }
 
 /// Apply the shared engine flags (--threads / --no-memoize /
-/// --shard-threshold / --no-shard) as engine overrides so they reach
-/// specs built inside the drivers too.
+/// --shard-threshold / --no-shard / --no-fast-forward) as engine
+/// overrides so they reach specs built inside the drivers too.
 fn apply_engine_flags(engine: &mut SweepEngine, flags: &Flags) {
     if let Some(n) = flags.num("threads") {
         engine.set_threads_override(Some(n));
@@ -202,6 +213,9 @@ fn apply_engine_flags(engine: &mut SweepEngine, flags: &Flags) {
         engine.set_shard_threshold_override(Some(SHARD_OFF));
     } else if let Some(t) = flags.num("shard-threshold") {
         engine.set_shard_threshold_override(Some(t));
+    }
+    if flags.get("no-fast-forward").is_some() {
+        engine.set_fast_forward_override(Some(false));
     }
 }
 
@@ -433,6 +447,7 @@ fn main() -> speed::Result<()> {
                 } else {
                     flags.num("shard-threshold")
                 },
+                fast_forward: flags.get("no-fast-forward").map(|_| false),
             };
             serve::run_server(opts)?;
         }
@@ -492,6 +507,9 @@ fn main() -> speed::Result<()> {
             }
             if let Some(t) = flags.num("shard-threshold") {
                 req.shard_threshold = Some(t);
+            }
+            if flags.get("no-fast-forward").is_some() {
+                req.fast_forward = false;
             }
             req.overrides = serve::CfgOverrides {
                 lanes: flags.num("lanes"),

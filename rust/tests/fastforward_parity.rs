@@ -1,0 +1,117 @@
+//! Fast-forward parity contract: loop-aware steady-state fast-forward
+//! must produce **bit-identical** `SimStats` to step-by-step execution
+//! over the benchmark grid — every network × {16, 8, 4}-bit ×
+//! {FF, CF, Mixed}. The default test covers every zoo network through
+//! its cheapest layers (plus a decomposable layer so shard fan-out and
+//! fast-forward compose); the `#[ignore]`d variant steps the *entire*
+//! benchmark grid twice and is run by CI's weekly full-grid job.
+//!
+//! A second contract rides along: a deliberately irregular program
+//! region (its per-iteration timing delta never converges) must fall
+//! back to full stepping — pinned at the processor level in
+//! `core::processor::tests::irregular_region_falls_back_to_stepping`
+//! and re-checked here through the public API.
+
+use speed::arch::{Precision, SpeedConfig};
+use speed::coordinator::sweep::{SweepEngine, SweepSpec, SHARD_OFF};
+use speed::core::{ExecMode, Processor};
+use speed::dataflow::{ConvLayer, Strategy};
+use speed::isa::{Instr, Program, Region};
+use speed::models::all_models;
+
+/// The full comparison axes of the contract.
+fn axes(spec: SweepSpec) -> SweepSpec {
+    spec.precisions(vec![Precision::Int16, Precision::Int8, Precision::Int4]).strategies(vec![
+        Strategy::FeatureFirst,
+        Strategy::ChannelFirst,
+        Strategy::Mixed,
+    ])
+}
+
+/// Run the grid with fast-forward on and off (fresh engines, so both
+/// actually simulate) and require bit-identical results.
+fn assert_parity(spec: &SweepSpec, expect_skips: bool) {
+    let on = SweepEngine::new().run(spec).expect("fast-forward sweep");
+    let off =
+        SweepEngine::new().run(&spec.clone().fast_forward(false)).expect("stepped sweep");
+    assert_eq!(
+        on.results, off.results,
+        "fast-forward must not move a single cycle anywhere in the grid"
+    );
+    assert_eq!(off.fast_forwarded_instrs, 0, "disabled fast-forward must step everything");
+    if expect_skips {
+        assert!(
+            on.fast_forwarded_instrs > 0,
+            "the grid must actually exercise fast-forward"
+        );
+    }
+}
+
+/// Every network, represented by its cheapest layers (capped per
+/// network so the doubled grid stays test-suite affordable), plus one
+/// decomposable layer exercising shard × fast-forward composition.
+#[test]
+fn representative_grid_is_bit_identical() {
+    let mut spec = axes(SweepSpec::new(SpeedConfig::default()));
+    for m in all_models() {
+        let mut layers = m.layers;
+        layers.sort_by_key(|l| l.macs());
+        layers.truncate(2);
+        spec = spec.network(m.name, layers);
+    }
+    spec = spec.network("shardable", vec![ConvLayer::new("big", 64, 64, 30, 30, 3, 1, 1)]);
+    assert_parity(&spec, true);
+}
+
+/// Shard fan-out disabled entirely: the inline shard composition path
+/// must agree with itself under fast-forward too.
+#[test]
+fn unsharded_composition_is_bit_identical() {
+    let spec = axes(SweepSpec::new(SpeedConfig::default()))
+        .network("shardable", vec![ConvLayer::new("big", 64, 64, 30, 30, 3, 1, 1)])
+        .shard_threshold(SHARD_OFF)
+        .threads(1);
+    assert_parity(&spec, true);
+}
+
+/// The paper's entire benchmark grid, stepped twice (fast-forward on
+/// vs off). Minutes of simulation — weekly CI (`cargo test -- --ignored`).
+#[test]
+#[ignore = "full benchmark grid twice (fast-forward on vs off) — minutes in a debug build"]
+fn full_benchmark_grid_is_bit_identical() {
+    let mut spec = axes(SweepSpec::new(SpeedConfig::default()));
+    for m in all_models() {
+        spec = spec.network(m.name, m.layers);
+    }
+    assert_parity(&spec, true);
+}
+
+/// Public-API form of the irregular-region fallback: a region whose
+/// iterations change the vector length can never converge, so
+/// fast-forward must step it — identical stats, nothing skipped.
+#[test]
+fn irregular_region_steps_through_the_public_api() {
+    let build = || {
+        let mut b = Program::builder();
+        let mut marks = Vec::new();
+        for it in 0..6u32 {
+            marks.push(b.len());
+            b.set_vl(8 * (it + 1), 8, 1);
+            b.emit(Instr::VaddVv { vd: 3, vs2: 1, vs1: 2 });
+        }
+        marks.push(b.len());
+        let mut p = b.build();
+        for r in Region::steady_runs(&marks, 3) {
+            p.push_region(r);
+        }
+        assert!(!p.regions().is_empty());
+        p
+    };
+    let mut fast = Processor::new(SpeedConfig::default(), 1 << 16, ExecMode::Timing).unwrap();
+    fast.run(&build()).unwrap();
+    assert_eq!(fast.fast_forwarded_instrs(), 0, "irregular region must not extrapolate");
+    let mut slow = Processor::new(SpeedConfig::default(), 1 << 16, ExecMode::Timing).unwrap();
+    slow.set_fast_forward(false);
+    slow.run(&build()).unwrap();
+    assert_eq!(fast.stats(), slow.stats());
+}

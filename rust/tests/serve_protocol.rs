@@ -69,6 +69,7 @@ fn random_request(rng: &mut Prng) -> Request {
     if rng.below(2) == 1 {
         req.shard_threshold = Some(rng.next_u64() >> 12);
     }
+    req.fast_forward = rng.below(4) != 0;
     req.overrides = CfgOverrides {
         lanes: (rng.below(2) == 1).then(|| 1 << rng.range_usize(2, 4)),
         vlen: (rng.below(2) == 1).then(|| 512 << rng.range_usize(0, 2)),
@@ -114,6 +115,7 @@ fn malformed_requests_are_rejected_not_panics() {
         "{\"id\":[1]}",                         // wrong shape
         "{\"id\":1,\"shard\":1}",               // shard wants a bool
         "{\"id\":1,\"shard_threshold\":\"x\"}", // threshold wants an int
+        "{\"id\":1,\"fast_forward\":1}",        // fast_forward wants a bool
     ] {
         assert!(Request::parse(bad).is_err(), "must reject {bad:?}");
     }

@@ -119,6 +119,47 @@ fn engine_parity_across_fanout_and_threads() {
 }
 
 #[test]
+fn work_order_is_result_invariant() {
+    // The engine claims work items in LPT order (heaviest estimated
+    // MACs first). That is pure scheduling: results are keyed by job
+    // identity, so enumerating the same jobs in any order — here the
+    // layer list forwards vs reversed, mixing a decomposable layer
+    // with small ones, at 1 and 4 threads — must produce the same
+    // per-layer bits.
+    let cfg = SpeedConfig::default();
+    let layers = vec![
+        ConvLayer::new("tiny", 8, 8, 8, 8, 3, 1, 1),
+        big_layer(),
+        ConvLayer::new("pw", 16, 8, 6, 6, 1, 1, 0),
+        ConvLayer::new("mid", 32, 32, 14, 14, 3, 1, 1),
+    ];
+    let spec_for = |layers: Vec<ConvLayer>, threads: usize| {
+        SweepSpec::new(cfg.clone())
+            .network("t", layers)
+            .precisions(vec![Precision::Int8])
+            .strategies(vec![Strategy::FeatureFirst])
+            .shard_threshold(SHARD_AUTO_MACS)
+            .threads(threads)
+    };
+    let mut reversed_layers = layers.clone();
+    reversed_layers.reverse();
+    let forward = SweepEngine::new().run(&spec_for(layers.clone(), 4)).unwrap();
+    assert_eq!(forward.sharded_jobs, 1, "the big layer must fan out");
+    for threads in [1usize, 4] {
+        let reversed =
+            SweepEngine::new().run(&spec_for(reversed_layers.clone(), threads)).unwrap();
+        for r in &forward.results {
+            let mate = reversed
+                .results
+                .iter()
+                .find(|o| o.name == r.name)
+                .expect("same jobs under any enumeration order");
+            assert_eq!(mate, r, "{threads} threads: enqueue order changed `{}`", r.name);
+        }
+    }
+}
+
+#[test]
 fn every_sharding_backend_is_pinned() {
     // The parity matrix above must cover every registered backend that
     // decomposes layers: if a new backend starts sharding, this fails
