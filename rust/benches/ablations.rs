@@ -32,7 +32,7 @@ fn bench_layers() -> Vec<ConvLayer> {
 /// One engine sweep over a config axis at one precision (Mixed
 /// strategy — the paper's dataflow).
 fn run_configs(
-    engine: &mut SweepEngine,
+    engine: &SweepEngine,
     configs: &[SpeedConfig],
     p: Precision,
 ) -> SweepOutcome {
@@ -66,7 +66,7 @@ fn print_row(label: &str, cfg: &SpeedConfig, cycles: u64, ops: u64) {
 
 fn main() {
     let base = SpeedConfig::default();
-    let mut engine = SweepEngine::new();
+    let engine = SweepEngine::new();
 
     println!("== SAU size (TILE_R x TILE_C), int8 ==");
     let sau_cfgs: Vec<(String, SpeedConfig)> = [(2usize, 2usize), (4, 4), (8, 8)]
@@ -79,7 +79,7 @@ fn main() {
         })
         .collect();
     let cfgs: Vec<SpeedConfig> = sau_cfgs.iter().map(|(_, c)| c.clone()).collect();
-    let out = run_configs(&mut engine, &cfgs, Precision::Int8);
+    let out = run_configs(&engine, &cfgs, Precision::Int8);
     for (i, (label, c)) in sau_cfgs.iter().enumerate() {
         let (cycles, ops) = block_totals(&out, i);
         print_row(label, c, cycles, ops);
@@ -96,7 +96,7 @@ fn main() {
         })
         .collect();
     let cfgs: Vec<SpeedConfig> = lane_cfgs.iter().map(|(_, c)| c.clone()).collect();
-    let out = run_configs(&mut engine, &cfgs, Precision::Int8);
+    let out = run_configs(&engine, &cfgs, Precision::Int8);
     for (i, (label, c)) in lane_cfgs.iter().enumerate() {
         let (cycles, ops) = block_totals(&out, i);
         print_row(label, c, cycles, ops);
@@ -112,7 +112,7 @@ fn main() {
             c
         })
         .collect();
-    let out = run_configs(&mut engine, &cfgs, Precision::Int4);
+    let out = run_configs(&engine, &cfgs, Precision::Int4);
     let mut last = f64::MAX;
     for (i, bw) in bws.iter().enumerate() {
         let (cycles, _) = block_totals(&out, i);

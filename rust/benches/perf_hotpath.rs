@@ -196,7 +196,7 @@ fn sweep_throughput(cfg: &SpeedConfig, smoke: bool) {
         base = base.network(name.clone(), layers.clone());
     }
     let spec_nocache = base.clone().memoize(false);
-    let mut engine = SweepEngine::new();
+    let engine = SweepEngine::new();
     let t1 = Instant::now();
     let out_nocache = engine.run(&spec_nocache).expect("sweep");
     let dt_nocache = t1.elapsed().as_secs_f64();
@@ -209,7 +209,7 @@ fn sweep_throughput(cfg: &SpeedConfig, smoke: bool) {
 
     // 3) engine, cold cache: + shape/strategy dedup
     let spec = base;
-    let mut engine = SweepEngine::new();
+    let engine = SweepEngine::new();
     let t2 = Instant::now();
     let out_cold = engine.run(&spec).expect("sweep");
     let dt_cold = t2.elapsed().as_secs_f64();

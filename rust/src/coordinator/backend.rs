@@ -24,8 +24,9 @@
 //!   [`conv2d_ref`](crate::mem::tensor::conv2d_ref); a mismatch fails
 //!   the job (and with it the sweep).
 
+use std::collections::HashMap;
 use std::fmt;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::arch::{AraConfig, Precision, SpeedConfig};
 use crate::baseline::simulate_layer_ara;
@@ -288,6 +289,71 @@ impl Default for WorkerSlot {
             fast_forward: true,
             fast_forwarded_instrs: 0,
         }
+    }
+}
+
+/// Total parked slots across all keys; check-ins beyond this are
+/// dropped instead of parked. Slots are a pure optimization (pooled
+/// processors and pre-decoded programs), so dropping one only costs a
+/// rebuild on some later checkout.
+const SLOT_POOL_CAP: usize = 64;
+
+/// Bounded hand-off pool of [`WorkerSlot`]s, keyed by (backend
+/// fingerprint, config fingerprint). Sweep workers check slots out at
+/// the start of a run and back in at the end, so in a resident server
+/// the pooled machines survive *across requests* instead of being
+/// rebuilt by every connection's run — the engine-level generalization
+/// of the per-run worker pools the engine used to build from scratch.
+///
+/// Fingerprint keying gives the same isolation the per-run indexing
+/// gave: a slot checked out for one (backend, config) pair is never
+/// handed to a different pair, so a pooled processor can't silently
+/// run under the wrong hardware or execution mode.
+#[derive(Debug, Default)]
+pub struct SlotPool {
+    state: Mutex<SlotPoolState>,
+}
+
+#[derive(Debug, Default)]
+struct SlotPoolState {
+    by_key: HashMap<(u64, u64), Vec<WorkerSlot>>,
+    total: usize,
+}
+
+impl SlotPool {
+    /// Take a parked slot for this (backend, config) pair, or a fresh
+    /// one. The returned slot always carries the caller's fast-forward
+    /// mode and a zeroed telemetry counter — run-scoped state never
+    /// leaks across requests.
+    pub fn check_out(&self, backend_fp: u64, cfg_fp: u64, fast_forward: bool) -> WorkerSlot {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        let parked = st.by_key.get_mut(&(backend_fp, cfg_fp)).and_then(Vec::pop);
+        let mut slot = match parked {
+            Some(slot) => {
+                st.total -= 1;
+                slot
+            }
+            None => WorkerSlot::default(),
+        };
+        slot.fast_forward = fast_forward;
+        slot.fast_forwarded_instrs = 0;
+        slot
+    }
+
+    /// Park a slot for later checkout; dropped silently once the pool
+    /// holds [`SLOT_POOL_CAP`] slots.
+    pub fn check_in(&self, backend_fp: u64, cfg_fp: u64, slot: WorkerSlot) {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        if st.total >= SLOT_POOL_CAP {
+            return;
+        }
+        st.total += 1;
+        st.by_key.entry((backend_fp, cfg_fp)).or_default().push(slot);
+    }
+
+    /// Slots currently parked (telemetry/tests).
+    pub fn parked(&self) -> usize {
+        self.state.lock().unwrap_or_else(|p| p.into_inner()).total
     }
 }
 

@@ -16,9 +16,9 @@ pub mod sweep;
 
 pub use backend::{
     config_fingerprint, AraAnalytic, DecodedProgram, GoldenFunctional, ProgramCache,
-    RooflineBound, SimBackend, SpeedCycle, WorkerSlot,
+    RooflineBound, SimBackend, SlotPool, SpeedCycle, WorkerSlot,
 };
-pub use serve::{Request, ServeStats, StreamSink};
+pub use serve::{Request, ServeLimits, ServeShared, ServeStats, StreamSink, TcpReport};
 pub use runner::{
     run_functional_conv, simulate_layer, simulate_network, LayerResult, NetworkResult,
 };

@@ -153,16 +153,21 @@ pub fn sweep_markdown(spec: &SweepSpec, out: &SweepOutcome) -> String {
         out.elapsed_secs,
         out.sims_per_sec()
     ));
-    // Shard/wall-clock/fast-forward telemetry: where the run's critical
-    // path went, whether intra-layer fan-out was engaged to shorten it,
-    // and how much stepping the steady-state extrapolation removed.
+    // Shard/wall-clock/fast-forward/concurrency telemetry: where the
+    // run's critical path went, whether intra-layer fan-out was engaged
+    // to shorten it, how much stepping the steady-state extrapolation
+    // removed, and what multi-tenancy cost or saved (cells served by a
+    // concurrent request's in-flight sim; time queued for a scheduler
+    // slot).
     s.push_str(&format!(
-        "{} sharded jobs | {} shard sub-jobs | slowest unit {:.2}s | {:.2}s total sim work | {} instrs fast-forwarded\n\n",
+        "{} sharded jobs | {} shard sub-jobs | slowest unit {:.2}s | {:.2}s total sim work | {} instrs fast-forwarded | {} coalesced | {:.2}s queued\n\n",
         out.sharded_jobs,
         out.shards_spawned,
         out.slowest_job_secs,
         out.job_elapsed_total_secs,
-        out.fast_forwarded_instrs
+        out.fast_forwarded_instrs,
+        out.coalesced_hits,
+        out.gate_wait_secs
     ));
     s.push_str("| backend | config | network | precision | strategy | cycles | GOPS |\n");
     s.push_str("|---|---|---|---|---|---|---|\n");

@@ -10,6 +10,25 @@
 //! the shared engine, so repeated cells across requests (and across
 //! clients) are served from cache without re-simulation.
 //!
+//! # Concurrency model
+//!
+//! The engine is internally synchronized, so sessions never serialize
+//! behind a serve-side lock: simulation runs concurrently across
+//! connections. Identical in-flight cells from different requests
+//! *coalesce* — the first arrival simulates, later arrivals block on
+//! the memo table's pending entry and report the cell as a
+//! `coalesced` hit, so N clients asking for the same cold network pay
+//! exactly one sweep. A per-request `priority` field (0–255, higher
+//! first) feeds the engine's scheduler, so a small interactive
+//! request overtakes a running full-grid sweep at the next work-item
+//! boundary. Admission control is two-level and configurable
+//! ([`ServeLimits`]): a connection cap at accept time and a
+//! concurrent-sweep cap per request, both answered with a structured
+//! `{"type":"error","code":"overload",...}` reply rather than a hang;
+//! an idle read timeout reaps half-dead clients. Results remain
+//! bit-identical at any concurrency level — scheduling never changes
+//! outcomes, only wall-clock.
+//!
 //! # Protocol
 //!
 //! One request per line; a dependency-free JSON subset (hand-rolled,
@@ -38,9 +57,10 @@
 //! (`["ff","cf","mixed"]`), `threads`, `memoize`, `shard` (intra-layer
 //! shard fan-out on/off, scheduling-only), `shard_threshold` (fan-out
 //! bound in layer MACs), `fast_forward` (loop-aware steady-state
-//! fast-forward on/off — bit-identical results either way), and the
-//! config overrides `lanes`, `vlen`, `tile_r`, `tile_c`, `dram_bw`,
-//! `freq`.
+//! fast-forward on/off — bit-identical results either way),
+//! `priority` (scheduler priority 0–255, higher first; scheduling
+//! only), and the config overrides `lanes`, `vlen`, `tile_r`,
+//! `tile_c`, `dram_bw`, `freq`.
 //!
 //! Replies are line-delimited records tagged by `"type"`: one
 //! `"block"` line per layer result, streamed in deterministic job
@@ -50,12 +70,15 @@
 //! long cold sweeps should size `--timeout-secs` to the run, not to
 //! the line rate), then one `"summary"` line carrying the run's cache
 //! accounting (`sims`, `cache_hits`, `dedup_hits`, `evictions`,
-//! `cache_entries`) and its shard/wall-clock/fast-forward telemetry
-//! (`sharded_jobs`,
-//! `shards`, `slowest_job_ms`, `ff_instrs`) — a warm repeat of an identical request reports
+//! `cache_entries`) and its shard/wall-clock/fast-forward/concurrency
+//! telemetry (`sharded_jobs`, `shards`, `slowest_job_ms`,
+//! `ff_instrs`, `coalesced` — cells served by another request's
+//! in-flight simulation — and `queue_ms`, time spent waiting for a
+//! scheduler slot) — a warm repeat of an identical request reports
 //! `"sims":0`. `"ping"` answers `"pong"`; `"shutdown"` answers
 //! `"bye"`, flushes the cache file and stops the server (EOF on stdin
-//! does the same).
+//! does the same). Requests refused by admission control are answered
+//! with an `error` record carrying `"code":"overload"`.
 //!
 //! `speed request` is the matching client: it builds a request from
 //! CLI flags (`--emit` prints the line for piping into a stdin-mode
@@ -65,8 +88,8 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::thread;
 use std::time::Duration;
 
@@ -491,6 +514,12 @@ pub struct Request {
     /// Bit-identical results either way; off re-steps every
     /// instruction (verification/benchmark escape hatch).
     pub fast_forward: bool,
+    /// Scheduler priority (0–255, higher first; default 0). Higher
+    /// priorities claim engine worker slots ahead of lower ones at
+    /// every work-item boundary, so a small interactive request
+    /// overtakes a running full-grid sweep. Scheduling-only: results
+    /// are bit-identical at any priority.
+    pub priority: u8,
     /// Machine-configuration overrides.
     pub overrides: CfgOverrides,
 }
@@ -510,6 +539,7 @@ impl Default for Request {
             shard: true,
             shard_threshold: None,
             fast_forward: true,
+            priority: 0,
             overrides: CfgOverrides::default(),
         }
     }
@@ -607,6 +637,15 @@ impl Request {
                     req.shard_threshold = Some(val.as_u64("shard_threshold")?)
                 }
                 "fast_forward" => req.fast_forward = val.as_bool("fast_forward")?,
+                "priority" => {
+                    let p = val.as_u64("priority")?;
+                    if p > u64::from(u8::MAX) {
+                        return Err(Error::protocol(format!(
+                            "field `priority`: {p} out of range (0-255)"
+                        )));
+                    }
+                    req.priority = p as u8;
+                }
                 "lanes" => req.overrides.lanes = Some(val.as_u64("lanes")? as usize),
                 "vlen" => req.overrides.vlen = Some(val.as_u64("vlen")? as usize),
                 "tile_r" => req.overrides.tile_r = Some(val.as_u64("tile_r")? as usize),
@@ -666,6 +705,9 @@ impl Request {
         }
         if !self.fast_forward {
             parts.push("\"fast_forward\":false".to_string());
+        }
+        if self.priority != 0 {
+            parts.push(format!("\"priority\":{}", self.priority));
         }
         if let Some(v) = self.overrides.lanes {
             parts.push(format!("\"lanes\":{v}"));
@@ -747,7 +789,7 @@ impl Request {
         } else if let Some(t) = self.shard_threshold {
             spec = spec.shard_threshold(t);
         }
-        spec = spec.fast_forward(self.fast_forward);
+        spec = spec.fast_forward(self.fast_forward).priority(self.priority);
         Ok(spec)
     }
 }
@@ -783,10 +825,14 @@ pub fn block_line(id: u64, backend: &str, network: &str, r: &LayerResult) -> Str
 /// request's critical-path floor, the number sharding shrinks;
 /// `ff_instrs` counts instructions the timing backends skipped via
 /// loop-aware fast-forward (0 when the request set
-/// `"fast_forward":false` or was served from cache).
+/// `"fast_forward":false` or was served from cache); `coalesced`
+/// counts cells served by another request's in-flight simulation of
+/// the identical cell (multi-tenant coalescing — no duplicate work);
+/// `queue_ms` is the total time this request's work items waited for
+/// an engine scheduler slot (contention, not simulation).
 pub fn summary_line(id: u64, out: &SweepOutcome, cache_entries: usize) -> String {
     format!(
-        "{{\"type\":\"summary\",\"id\":{id},\"jobs\":{},\"sims\":{},\"cache_hits\":{},\"dedup_hits\":{},\"evictions\":{},\"cache_entries\":{cache_entries},\"threads\":{},\"elapsed_ms\":{},\"sharded_jobs\":{},\"shards\":{},\"slowest_job_ms\":{},\"ff_instrs\":{}}}",
+        "{{\"type\":\"summary\",\"id\":{id},\"jobs\":{},\"sims\":{},\"cache_hits\":{},\"dedup_hits\":{},\"evictions\":{},\"cache_entries\":{cache_entries},\"threads\":{},\"elapsed_ms\":{},\"sharded_jobs\":{},\"shards\":{},\"slowest_job_ms\":{},\"ff_instrs\":{},\"coalesced\":{},\"queue_ms\":{}}}",
         out.results.len(),
         out.executed_sims,
         out.cache_hits,
@@ -798,12 +844,26 @@ pub fn summary_line(id: u64, out: &SweepOutcome, cache_entries: usize) -> String
         out.shards_spawned,
         (out.slowest_job_secs * 1000.0).round() as u64,
         out.fast_forwarded_instrs,
+        out.coalesced_hits,
+        (out.gate_wait_secs * 1000.0).round() as u64,
     )
 }
 
 /// A structured `error` reply (`id` 0 when the line never parsed).
 pub fn error_line(id: u64, msg: &str) -> String {
     format!("{{\"type\":\"error\",\"id\":{id},\"message\":{}}}", quote(msg))
+}
+
+/// A structured `error` reply carrying a machine-readable `code`
+/// clients can branch on without parsing the message. The only code
+/// today is `"overload"` — admission control refused the request
+/// (connection cap or concurrent-sweep cap); retry later.
+pub fn error_line_with_code(id: u64, code: &str, msg: &str) -> String {
+    format!(
+        "{{\"type\":\"error\",\"id\":{id},\"code\":{},\"message\":{}}}",
+        quote(code),
+        quote(msg)
+    )
 }
 
 fn pong_line(id: u64, cache_entries: usize) -> String {
@@ -869,25 +929,105 @@ pub struct ServeStats {
     pub requests: u64,
     /// Requests answered with an `error` record.
     pub errors: u64,
+    /// Sweep requests refused at the concurrent-sweep admission limit
+    /// (a subset of `errors`; answered with `"code":"overload"`).
+    pub overloads: u64,
     /// Whether a `shutdown` request ended the session.
     pub shutdown: bool,
 }
 
-fn lock_engine(engine: &Mutex<SweepEngine>) -> MutexGuard<'_, SweepEngine> {
-    // A panicked request must not wedge the server: take the poisoned
-    // guard (the cache is plain data, valid at every step).
-    engine.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+/// Admission limits for a multi-tenant server. Every field treats `0`
+/// as "unlimited / disabled", so a test or embedded caller can opt
+/// out per knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeLimits {
+    /// Maximum concurrently-served TCP connections; connections past
+    /// the cap get an `"overload"` error and are closed at accept.
+    pub max_connections: usize,
+    /// Maximum sweep requests executing at once across every session;
+    /// requests past the cap get an `"overload"` error immediately
+    /// instead of queueing (the client owns the retry policy).
+    pub max_concurrent_sweeps: usize,
+    /// Server-side idle read timeout per connection, in seconds: a
+    /// client that sends nothing for this long has its session ended
+    /// cleanly, so a half-dead peer can never pin a connection thread
+    /// (and a connection slot) forever.
+    pub idle_timeout_secs: u64,
+}
+
+impl Default for ServeLimits {
+    fn default() -> Self {
+        ServeLimits { max_connections: 128, max_concurrent_sweeps: 16, idle_timeout_secs: 600 }
+    }
+}
+
+/// State shared by every session of one server process: the
+/// internally-synchronized engine, the base machine configuration,
+/// the admission limits and the live concurrent-sweep count. Sessions
+/// run sweeps directly on `engine` — there is no serve-side lock to
+/// serialize behind, so concurrent identical requests coalesce inside
+/// the engine's memo table instead of queueing.
+#[derive(Debug)]
+pub struct ServeShared {
+    /// The shared engine (internally synchronized; [`SweepEngine::run`]
+    /// takes `&self`).
+    pub engine: Arc<SweepEngine>,
+    /// Base machine configuration; request overrides apply on top.
+    pub cfg: SpeedConfig,
+    /// Admission limits.
+    pub limits: ServeLimits,
+    active_sweeps: AtomicUsize,
+}
+
+impl ServeShared {
+    /// Bundle an engine, base config and limits for serving.
+    pub fn new(engine: Arc<SweepEngine>, cfg: SpeedConfig, limits: ServeLimits) -> Self {
+        ServeShared { engine, cfg, limits, active_sweeps: AtomicUsize::new(0) }
+    }
+
+    /// Sweep requests currently executing (admission-counted).
+    pub fn active_sweeps(&self) -> usize {
+        self.active_sweeps.load(Ordering::SeqCst)
+    }
+
+    /// Try to claim a concurrent-sweep slot; `None` means the server
+    /// is at `max_concurrent_sweeps` and the request must be refused.
+    /// The slot is released when the returned permit drops.
+    fn try_begin_sweep(&self) -> Option<SweepPermit<'_>> {
+        let cap = self.limits.max_concurrent_sweeps;
+        self.active_sweeps
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+                if cap != 0 && n >= cap {
+                    None
+                } else {
+                    Some(n + 1)
+                }
+            })
+            .ok()
+            .map(|_| SweepPermit { shared: self })
+    }
+}
+
+/// RAII concurrent-sweep slot; dropping releases it (on every exit
+/// path, including a panicking run).
+struct SweepPermit<'a> {
+    shared: &'a ServeShared,
+}
+
+impl Drop for SweepPermit<'_> {
+    fn drop(&mut self) {
+        self.shared.active_sweeps.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 /// Serve one line-delimited session: read requests from `reader`,
 /// stream reply records to `writer`, run sweeps on the shared
-/// `engine`. Used verbatim by stdin mode, per-connection TCP threads
+/// engine. Used verbatim by stdin mode, per-connection TCP threads
 /// and the in-process protocol tests. Read/write failures end the
-/// session (the transport is gone); they are never fatal to the
-/// caller.
+/// session (the transport is gone — including a server-side idle read
+/// timeout firing); they are never fatal to the caller.
 pub fn serve_lines<R: BufRead, W: Write>(
-    engine: &Mutex<SweepEngine>,
-    base_cfg: &SpeedConfig,
+    shared: &ServeShared,
     reader: R,
     mut writer: W,
 ) -> ServeStats {
@@ -911,19 +1051,19 @@ pub fn serve_lines<R: BufRead, W: Write>(
         };
         match req.op {
             Op::Ping => {
-                let entries = lock_engine(engine).cached_sims();
+                let entries = shared.engine.cached_sims();
                 if write_line(&mut writer, &pong_line(req.id, entries)).is_err() {
                     break;
                 }
             }
             Op::Shutdown => {
-                let entries = lock_engine(engine).cached_sims();
+                let entries = shared.engine.cached_sims();
                 let _ = write_line(&mut writer, &bye_line(req.id, entries));
                 stats.shutdown = true;
                 break;
             }
             Op::Sweep => {
-                let spec = match req.to_spec(base_cfg) {
+                let spec = match req.to_spec(&shared.cfg) {
                     Ok(spec) => spec,
                     Err(e) => {
                         stats.errors += 1;
@@ -934,18 +1074,35 @@ pub fn serve_lines<R: BufRead, W: Write>(
                         continue;
                     }
                 };
+                let Some(permit) = shared.try_begin_sweep() else {
+                    stats.errors += 1;
+                    stats.overloads += 1;
+                    let line = error_line_with_code(
+                        req.id,
+                        "overload",
+                        &format!(
+                            "server at max_concurrent_sweeps ({}); retry later",
+                            shared.limits.max_concurrent_sweeps
+                        ),
+                    );
+                    if write_line(&mut writer, &line).is_err() {
+                        break;
+                    }
+                    continue;
+                };
                 // Requests share the engine — and therefore the memo
                 // table — so a repeated cell is a cache hit regardless
-                // of which client simulated it first. The lock covers
-                // only the run itself: replies stream *outside* it, so
-                // a slow or stalled client can never wedge the other
-                // connections behind a blocked socket write.
-                let (run, entries) = {
-                    let mut eng = lock_engine(engine);
-                    let run = eng.run(&spec);
-                    let entries = eng.cached_sims();
-                    (run, entries)
-                };
+                // of which client simulated it first. The engine is
+                // internally synchronized and the run executes outside
+                // any serve-side lock: concurrent sessions simulate in
+                // parallel, identical in-flight cells coalesce on the
+                // memo table's pending entries, and replies stream
+                // after the permit is released, so a slow or stalled
+                // client can never wedge other connections (or hold a
+                // sweep slot) behind a blocked socket write.
+                let run = shared.engine.run(&spec);
+                let entries = shared.engine.cached_sims();
+                drop(permit);
                 match run {
                     Ok(out) => {
                         let backend_names: Vec<&'static str> =
@@ -1006,15 +1163,22 @@ pub struct ServerOptions {
     /// per-request; `Some(false)` = the server-wide
     /// `--no-fast-forward` escape hatch). Bit-identical either way.
     pub fast_forward: Option<bool>,
+    /// Admission limits: connection cap, concurrent-sweep cap, idle
+    /// read timeout (`0` = unlimited/disabled per knob).
+    pub limits: ServeLimits,
+    /// Engine-wide worker budget: the maximum simulation worker
+    /// threads in flight across *all* concurrent requests (`None` =
+    /// available parallelism). The knob the priority scheduler
+    /// allocates under.
+    pub worker_budget: Option<usize>,
 }
 
-fn flush_cache(engine: &Mutex<SweepEngine>, path: Option<&str>) {
+fn flush_cache(engine: &SweepEngine, path: Option<&str>) {
     let Some(path) = path else { return };
-    let eng = lock_engine(engine);
-    match eng.save_cache(path) {
+    match engine.save_cache(path) {
         Ok(()) => eprintln!(
             "serve: cache-file {path}: saved {} cached simulations",
-            eng.cached_sims()
+            engine.cached_sims()
         ),
         Err(e) => eprintln!("serve: cache-file {path}: save failed: {e}"),
     }
@@ -1036,6 +1200,7 @@ pub fn run_server(opts: ServerOptions) -> Result<()> {
     if let Some(ff) = opts.fast_forward {
         engine.set_fast_forward_override(Some(ff));
     }
+    engine.set_worker_budget(opts.worker_budget);
     if let Some(path) = &opts.cache_file {
         if std::path::Path::new(path).exists() {
             match engine.load_cache(path) {
@@ -1049,30 +1214,44 @@ pub fn run_server(opts: ServerOptions) -> Result<()> {
             eprintln!("serve: cache-file {path}: not found, starting cold");
         }
     }
-    let engine = Arc::new(Mutex::new(engine));
+    let shared =
+        Arc::new(ServeShared::new(Arc::new(engine), opts.cfg.clone(), opts.limits));
     match &opts.tcp {
         None => {
             let stdin = std::io::stdin();
             let stdout = std::io::stdout();
-            let stats = serve_lines(&engine, &opts.cfg, stdin.lock(), stdout.lock());
-            flush_cache(&engine, opts.cache_file.as_deref());
+            let stats = serve_lines(&shared, stdin.lock(), stdout.lock());
+            flush_cache(&shared.engine, opts.cache_file.as_deref());
             eprintln!(
-                "serve: handled {} request(s), {} error repl(y/ies){}",
+                "serve: handled {} request(s), {} error repl(y/ies), {} overload(s){}",
                 stats.requests,
                 stats.errors,
+                stats.overloads,
                 if stats.shutdown { ", shut down by request" } else { ", stdin closed" }
             );
             Ok(())
         }
-        Some(addr) => tcp_server(engine, opts.clone(), addr),
+        Some(addr) => tcp_server(&shared, &opts, addr),
     }
 }
 
-fn tcp_server(
-    engine: Arc<Mutex<SweepEngine>>,
-    opts: ServerOptions,
-    addr: &str,
-) -> Result<()> {
+/// Write `contents` to `path` atomically: write a sibling temp file,
+/// then rename it into place. A concurrent reader (a script polling
+/// `--port-file`) sees either nothing or the complete contents —
+/// never a truncated prefix.
+fn write_file_atomic(path: &str, contents: &str) -> std::io::Result<()> {
+    let tmp = format!("{path}.tmp.{}", std::process::id());
+    std::fs::write(&tmp, contents)?;
+    match std::fs::rename(&tmp, path) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            Err(e)
+        }
+    }
+}
+
+fn tcp_server(shared: &Arc<ServeShared>, opts: &ServerOptions, addr: &str) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
     {
@@ -1082,49 +1261,153 @@ fn tcp_server(
         let _ = write_line(&mut out, &listening_line(&local));
     }
     if let Some(pf) = &opts.port_file {
-        std::fs::write(pf, local.to_string())?;
+        write_file_atomic(pf, &local.to_string())?;
     }
     eprintln!("serve: listening on {local}");
-    let cfg = Arc::new(opts.cfg.clone());
     let shutdown = Arc::new(AtomicBool::new(false));
-    let mut handles = Vec::new();
-    for conn in listener.incoming() {
-        if shutdown.load(Ordering::SeqCst) {
-            break;
+    let report = run_tcp(shared, listener, opts.cache_file.as_deref(), &shutdown)?;
+    flush_cache(&shared.engine, opts.cache_file.as_deref());
+    eprintln!(
+        "serve: shut down after {} connection(s), {} rejected, {} panicked session(s)",
+        report.connections, report.rejected, report.panicked_sessions
+    );
+    Ok(())
+}
+
+/// What one [`run_tcp`] accept loop observed (serve telemetry).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TcpReport {
+    /// Connections accepted and handed to a session thread.
+    pub connections: u64,
+    /// Connections refused: at the `max_connections` admission limit
+    /// (answered with an `"overload"` error) or accepted in the
+    /// post-shutdown race window (closed unserved).
+    pub rejected: u64,
+    /// Session threads that ended in a panic. Every spawned thread is
+    /// *joined* — finished ones as the loop reaps, the rest at
+    /// shutdown — so a panicked session is always observed and
+    /// counted, never silently discarded.
+    pub panicked_sessions: u64,
+}
+
+/// Join every finished handle (a `retain` would discard the panic
+/// payload unobserved).
+fn reap_finished(handles: &mut Vec<thread::JoinHandle<()>>, report: &mut TcpReport) {
+    let mut i = 0;
+    while i < handles.len() {
+        if handles[i].is_finished() {
+            if handles.swap_remove(i).join().is_err() {
+                report.panicked_sessions += 1;
+                eprintln!("serve: a connection session panicked (counted, server continues)");
+            }
+        } else {
+            i += 1;
         }
-        let stream = match conn {
-            Ok(s) => s,
+    }
+}
+
+/// The TCP accept loop: admit connections under
+/// [`ServeLimits::max_connections`], serve each on its own thread via
+/// [`serve_lines`], and stop deterministically when `shutdown` is (or
+/// becomes) true. The listener runs nonblocking with a short poll
+/// sleep, so shutdown needs no self-connect wake-up and can never be
+/// lost: the flag is re-checked every iteration *and* after every
+/// accept, so a connection that slips in after `shutdown.store(true)`
+/// is closed unserved instead of being fully processed. Public so
+/// stress tests can drive a real socket accept loop against a
+/// pre-bound listener without a child process.
+pub fn run_tcp(
+    shared: &Arc<ServeShared>,
+    listener: TcpListener,
+    cache_file: Option<&str>,
+    shutdown: &Arc<AtomicBool>,
+) -> Result<TcpReport> {
+    listener.set_nonblocking(true)?;
+    let mut report = TcpReport::default();
+    let mut handles: Vec<thread::JoinHandle<()>> = Vec::new();
+    let active_conns = Arc::new(AtomicUsize::new(0));
+    while !shutdown.load(Ordering::SeqCst) {
+        let mut stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                reap_finished(&mut handles, &mut report);
+                thread::sleep(Duration::from_millis(20));
+                continue;
+            }
             Err(e) => {
                 eprintln!("serve: accept failed: {e}");
                 continue;
             }
         };
-        // Reap finished connection threads so a resident server does
-        // not accumulate one JoinHandle per connection forever.
-        handles.retain(|h: &thread::JoinHandle<()>| !h.is_finished());
-        let engine = Arc::clone(&engine);
-        let cfg = Arc::clone(&cfg);
-        let shutdown = Arc::clone(&shutdown);
-        let cache_file = opts.cache_file.clone();
+        // Deterministic shutdown: a connection accepted in the race
+        // window after the flag flipped is refused, not served.
+        if shutdown.load(Ordering::SeqCst) {
+            report.rejected += 1;
+            break;
+        }
+        reap_finished(&mut handles, &mut report);
+        let cap = shared.limits.max_connections;
+        let admitted = active_conns
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+                if cap != 0 && n >= cap {
+                    None
+                } else {
+                    Some(n + 1)
+                }
+            })
+            .is_ok();
+        if !admitted {
+            report.rejected += 1;
+            let _ = write_line(
+                &mut stream,
+                &error_line_with_code(
+                    0,
+                    "overload",
+                    &format!("server at max_connections ({cap}); retry later"),
+                ),
+            );
+            continue;
+        }
+        report.connections += 1;
+        let shared = Arc::clone(shared);
+        let shutdown = Arc::clone(shutdown);
+        let cache_file = cache_file.map(String::from);
+        let active_conns = Arc::clone(&active_conns);
         handles.push(thread::spawn(move || {
+            // Release the connection slot however the session ends —
+            // clean close, idle timeout, or a panic below.
+            struct ConnSlot(Arc<AtomicUsize>);
+            impl Drop for ConnSlot {
+                fn drop(&mut self) {
+                    self.0.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            let _slot = ConnSlot(active_conns);
+            if shared.limits.idle_timeout_secs != 0 {
+                // SO_RCVTIMEO is socket-wide, so the cloned read half
+                // below inherits it; an idle client's blocked read
+                // then errors out and ends the session cleanly.
+                let _ = stream.set_read_timeout(Some(Duration::from_secs(
+                    shared.limits.idle_timeout_secs,
+                )));
+            }
             let Ok(read_half) = stream.try_clone() else { return };
-            let stats =
-                serve_lines(&engine, &cfg, BufReader::new(read_half), &stream);
+            let stats = serve_lines(&shared, BufReader::new(read_half), &stream);
             if stats.shutdown {
                 // Flush before unblocking the accept loop, so the
                 // cache file is durable by the time the process exits.
-                flush_cache(&engine, cache_file.as_deref());
+                flush_cache(&shared.engine, cache_file.as_deref());
                 shutdown.store(true, Ordering::SeqCst);
-                let _ = TcpStream::connect(local);
             }
         }));
     }
     for h in handles {
-        let _ = h.join();
+        if h.join().is_err() {
+            report.panicked_sessions += 1;
+            eprintln!("serve: a connection session panicked (counted, server continues)");
+        }
     }
-    flush_cache(&engine, opts.cache_file.as_deref());
-    eprintln!("serve: shut down");
-    Ok(())
+    Ok(report)
 }
 
 // ---------------------------------------------------------------------------

@@ -54,6 +54,23 @@
 //!   first), so the slowest simulation starts immediately instead of
 //!   becoming a lonely tail on an idle pool — scheduling-only, results
 //!   are keyed by item identity and bit-identical in any order;
+//! - the engine is **internally synchronized and multi-tenant**
+//!   ([`SweepEngine::run`] takes `&self`; share one engine behind an
+//!   `Arc`): concurrent runs share the memo table, and a cell one
+//!   request is simulating is marked *pending*, so identical in-flight
+//!   cells in other requests **coalesce** onto that single simulation —
+//!   N cold requests for the same grid pay one sweep
+//!   ([`SweepOutcome::coalesced_hits`]); an engine-wide bounded worker
+//!   gate ([`SweepEngine::set_worker_budget`]) hands out simulation
+//!   permits to the highest-priority waiting run
+//!   ([`SweepSpec::priority`]) one work item at a time, so a small
+//!   interactive request overtakes a running full-grid sweep at item
+//!   granularity instead of queueing behind it
+//!   ([`SweepOutcome::gate_wait_secs`] reports the contention), and
+//!   worker state ([`WorkerSlot`] processors and program caches) is
+//!   handed off through a bounded engine-level pool
+//!   ([`SlotPool`](super::backend::SlotPool)) so pooled machines
+//!   survive across requests;
 //! - **loop-aware fast-forward** ([`SweepSpec::fast_forward`], engine
 //!   override [`SweepEngine::set_fast_forward_override`], CLI
 //!   `--no-fast-forward`) lets the timing backends extrapolate
@@ -77,16 +94,16 @@
 //! `tests/sweep_determinism.rs` (and against the old serial Ara /
 //! functional paths in `tests/backend_parity.rs`).
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::backend::{
-    config_fingerprint, layer_shape as shape_of, GoldenFunctional, SimBackend, SpeedCycle,
-    WorkerSlot,
+    config_fingerprint, layer_shape as shape_of, GoldenFunctional, SimBackend, SlotPool,
+    SpeedCycle, WorkerSlot,
 };
 use super::persist;
 use super::runner::{LayerResult, NetworkResult};
@@ -160,6 +177,13 @@ pub struct SweepSpec {
     /// benchmarking and belt-and-braces verification
     /// (`--no-fast-forward`).
     pub fast_forward: bool,
+    /// Scheduling priority of this run's work items on the engine-wide
+    /// worker gate (0–255, default 0; higher runs first). Only matters
+    /// when several runs share one engine concurrently — a resident
+    /// server gives interactive requests a higher priority so they
+    /// overtake full-grid sweeps. Scheduling-only: results are
+    /// bit-identical at any priority.
+    pub priority: u8,
 }
 
 impl SweepSpec {
@@ -177,6 +201,7 @@ impl SweepSpec {
             memoize: true,
             shard_threshold: SHARD_AUTO_MACS,
             fast_forward: true,
+            priority: 0,
         }
     }
 
@@ -251,6 +276,13 @@ impl SweepSpec {
     /// bit-identical results either way.
     pub fn fast_forward(mut self, on: bool) -> Self {
         self.fast_forward = on;
+        self
+    }
+
+    /// Set the gate priority (builder style); higher overtakes lower
+    /// when runs contend on one engine. Results never change.
+    pub fn priority(mut self, p: u8) -> Self {
+        self.priority = p;
         self
     }
 
@@ -384,6 +416,15 @@ pub struct SweepOutcome {
     /// Duplicate simulations avoided inside this run (shape/strategy
     /// sharing).
     pub dedup_hits: usize,
+    /// Cells another concurrent request had in flight when this run
+    /// planned, adopted from that request's published result instead of
+    /// re-simulated (cross-request coalescing; always 0 in
+    /// single-tenant runs).
+    pub coalesced_hits: usize,
+    /// Seconds this run's workers spent waiting for a simulation permit
+    /// on the engine-wide priority gate, summed across workers — the
+    /// queueing cost of sharing the engine (0 when uncontended).
+    pub gate_wait_secs: f64,
     /// Cache entries evicted during this run by the LRU bound
     /// ([`SweepEngine::set_max_cache_entries`]); 0 when unbounded.
     pub cache_evictions: u64,
@@ -521,6 +562,29 @@ pub(crate) struct CachedSim {
     pub(crate) stats: SimStats,
 }
 
+/// One memo-table cell as seen by a run planning its grid.
+#[derive(Debug, Clone)]
+pub(crate) enum Lookup {
+    /// Simulated and published — usable immediately.
+    Ready(CachedSim),
+    /// Claimed by another in-flight run; wait on the engine's condvar
+    /// for it to publish instead of simulating a duplicate.
+    Pending,
+    /// Not present (never simulated, evicted, or its claim was
+    /// aborted) — claim it and simulate.
+    Absent,
+}
+
+/// Stored state of one memo-table cell.
+#[derive(Debug)]
+enum Entry {
+    /// Published result plus its recency tick (indexed in the LRU).
+    Ready(CachedSim, u64),
+    /// Claimed by an in-flight run. Never in the LRU — a pending cell
+    /// cannot be evicted, only published or aborted by its owner.
+    Pending,
+}
+
 /// Bounded, LRU-evicting memo table — the engine's persistent cache.
 ///
 /// Recency is a monotonic per-entry tick plus a `BTreeMap<tick, key>`
@@ -531,9 +595,19 @@ pub(crate) struct CachedSim {
 /// least-recently-used entry — cache *hits* refresh recency, so a
 /// resident server's working set stays hot while one-off cells age out.
 /// `max_entries = Some(0)` retains nothing (every run re-simulates).
+///
+/// Cells additionally carry a *pending* state ([`Entry::Pending`]):
+/// a run claims the cells it is about to simulate, concurrent runs
+/// that plan the same cell wait for the claim to publish instead of
+/// simulating a duplicate, and an owner that fails aborts its claims
+/// so waiters recover. Pending cells are invisible to [`len`], [`iter`]
+/// (persistence) and eviction — only published results count.
+///
+/// [`len`]: MemoCache::len
+/// [`iter`]: MemoCache::iter
 #[derive(Debug, Default)]
 pub(crate) struct MemoCache {
-    map: HashMap<SimKey, (CachedSim, u64)>,
+    map: HashMap<SimKey, Entry>,
     lru: BTreeMap<u64, SimKey>,
     tick: u64,
     max_entries: Option<usize>,
@@ -542,23 +616,66 @@ pub(crate) struct MemoCache {
 
 impl MemoCache {
     /// Cached result for `key`, refreshing its recency on a hit.
+    /// Pending cells read as misses — use [`MemoCache::lookup`] to
+    /// distinguish them.
     pub(crate) fn get(&mut self, key: &SimKey) -> Option<CachedSim> {
-        let next = self.tick + 1;
-        let entry = self.map.get_mut(key)?;
-        let old = entry.1;
-        entry.1 = next;
-        let sim = entry.0.clone();
-        self.tick = next;
-        self.lru.remove(&old);
-        self.lru.insert(next, *key);
-        Some(sim)
+        match self.lookup(key) {
+            Lookup::Ready(sim) => Some(sim),
+            Lookup::Pending | Lookup::Absent => None,
+        }
     }
 
-    /// Insert (or refresh) an entry, evicting down to the bound.
+    /// Three-way cell state for `key`, refreshing recency when Ready.
+    pub(crate) fn lookup(&mut self, key: &SimKey) -> Lookup {
+        match self.map.get_mut(key) {
+            None => Lookup::Absent,
+            Some(Entry::Pending) => Lookup::Pending,
+            Some(Entry::Ready(sim, tick)) => {
+                let next = self.tick + 1;
+                let old = *tick;
+                *tick = next;
+                let sim = sim.clone();
+                self.tick = next;
+                self.lru.remove(&old);
+                self.lru.insert(next, *key);
+                Lookup::Ready(sim)
+            }
+        }
+    }
+
+    /// Claim an absent cell for an in-flight simulation. The owner must
+    /// later [`insert`](MemoCache::insert) (publish) or
+    /// [`abort_pending`](MemoCache::abort_pending) it.
+    pub(crate) fn begin_pending(&mut self, key: SimKey) {
+        debug_assert!(
+            !self.map.contains_key(&key),
+            "begin_pending on an occupied cell"
+        );
+        self.map.insert(key, Entry::Pending);
+    }
+
+    /// Withdraw a claim that will never publish (owner failed), leaving
+    /// the cell absent so a waiter can adopt it. A no-op on cells that
+    /// published in the meantime.
+    pub(crate) fn abort_pending(&mut self, key: &SimKey) {
+        if let Some(Entry::Pending) = self.map.get(key) {
+            self.map.remove(key);
+        }
+    }
+
+    /// Pending claims currently held (telemetry/tests).
+    pub(crate) fn pending(&self) -> usize {
+        self.map.len() - self.lru.len()
+    }
+
+    /// Insert (or refresh, or publish a pending cell as) an entry,
+    /// evicting down to the bound.
     pub(crate) fn insert(&mut self, key: SimKey, sim: CachedSim) {
         self.tick += 1;
         let next = self.tick;
-        if let Some((_, old_tick)) = self.map.insert(key, (sim, next)) {
+        if let Some(Entry::Ready(_, old_tick)) =
+            self.map.insert(key, Entry::Ready(sim, next))
+        {
             self.lru.remove(&old_tick);
         }
         self.lru.insert(next, key);
@@ -582,25 +699,34 @@ impl MemoCache {
         self.evictions
     }
 
-    /// Entries currently held.
+    /// Published entries currently held (pending claims don't count).
     pub(crate) fn len(&self) -> usize {
-        self.map.len()
+        self.lru.len()
     }
 
-    /// Drop every entry (does not count as eviction).
+    /// Drop every entry (does not count as eviction). Pending claims
+    /// are dropped too; an in-flight owner simply re-publishes into an
+    /// absent cell and any waiter adopts the cell itself.
     pub(crate) fn clear(&mut self) {
         self.map.clear();
         self.lru.clear();
     }
 
-    /// Iterate entries (arbitrary order; persistence sorts).
+    /// Iterate published entries (arbitrary order; persistence sorts).
+    /// Pending claims are excluded — a cache file never contains a
+    /// half-simulated cell.
     pub(crate) fn iter(&self) -> impl Iterator<Item = (&SimKey, &CachedSim)> {
-        self.map.iter().map(|(k, v)| (k, &v.0))
+        self.map.iter().filter_map(|(k, v)| match v {
+            Entry::Ready(sim, _) => Some((k, sim)),
+            Entry::Pending => None,
+        })
     }
 
     fn evict_over_cap(&mut self) {
         let Some(max) = self.max_entries else { return };
-        while self.map.len() > max {
+        // Bound counts published entries only — pending claims are
+        // transient and not evictable.
+        while self.lru.len() > max {
             match self.lru.pop_first() {
                 Some((_, victim)) => {
                     self.map.remove(&victim);
@@ -634,18 +760,131 @@ enum Plan {
     Best(usize, usize),
 }
 
+/// Lock a mutex, ignoring poisoning: every shared structure here is a
+/// plain data table that stays consistent under unwind (guards restore
+/// their counters on drop), so a panicked peer must not wedge the
+/// engine for everyone else.
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Engine-wide worker-permit gate: every concurrently running sweep
+/// draws its simulation slots from one bounded pool — one permit per
+/// work item — so the machine is never oversubscribed no matter how
+/// many requests run at once. Waiters are served highest priority
+/// first (FIFO within a priority), and because permits are re-acquired
+/// per *item* rather than held for a whole request, a high-priority
+/// small request overtakes a running full-grid sweep at item
+/// granularity instead of queueing behind it.
+#[derive(Debug, Default)]
+struct SchedGate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+#[derive(Debug, Default)]
+struct GateState {
+    in_use: usize,
+    next_ticket: u64,
+    /// Waiting claims ordered by (inverted priority, arrival ticket):
+    /// the first element is the next claim to be served.
+    queue: BTreeSet<(u8, u64)>,
+}
+
+impl SchedGate {
+    /// Block until a permit is free and this claim is first in line.
+    /// Returns the RAII permit (released on drop, unwind included) and
+    /// the seconds spent waiting.
+    fn acquire(&self, capacity: usize, priority: u8) -> (GatePermit<'_>, f64) {
+        let t0 = Instant::now();
+        let mut st = lock_ignore_poison(&self.state);
+        let key = (u8::MAX - priority, st.next_ticket);
+        st.next_ticket += 1;
+        st.queue.insert(key);
+        loop {
+            if st.in_use < capacity && st.queue.iter().next() == Some(&key) {
+                st.queue.remove(&key);
+                st.in_use += 1;
+                if st.in_use < capacity && !st.queue.is_empty() {
+                    // Capacity remains — pass the wake-up on so peers
+                    // woken by the same release don't oversleep.
+                    self.cv.notify_all();
+                }
+                return (GatePermit { gate: self }, t0.elapsed().as_secs_f64());
+            }
+            st = self.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+}
+
+/// One held simulation permit; releasing notifies the head waiter.
+struct GatePermit<'a> {
+    gate: &'a SchedGate,
+}
+
+impl Drop for GatePermit<'_> {
+    fn drop(&mut self) {
+        let mut st = lock_ignore_poison(&self.gate.state);
+        st.in_use = st.in_use.saturating_sub(1);
+        drop(st);
+        self.gate.cv.notify_all();
+    }
+}
+
+/// Drop guard over one run's pending-cell claims: any claim not
+/// published by the time the guard drops (error return or panic
+/// unwind) is aborted and waiters are woken, so a failed run can never
+/// strand another request on a cell that will never publish.
+struct ClaimGuard<'a> {
+    engine: &'a SweepEngine,
+    keys: Vec<SimKey>,
+}
+
+impl ClaimGuard<'_> {
+    /// Every claim has been published — nothing left to abort.
+    fn published(&mut self) {
+        self.keys.clear();
+    }
+}
+
+impl Drop for ClaimGuard<'_> {
+    fn drop(&mut self) {
+        if self.keys.is_empty() {
+            return;
+        }
+        let mut cache = self.engine.lock_cache();
+        for k in &self.keys {
+            cache.abort_pending(k);
+        }
+        drop(cache);
+        self.engine.cache_ready.notify_all();
+    }
+}
+
 /// The sweep executor. Owns the persistent memoization cache — reuse one
 /// engine across sweeps (e.g. Fig. 3 + Fig. 4 + Table I) and identical
 /// (backend, config, shape, precision, strategy) cells are simulated
 /// once ever; [`SweepEngine::save_cache`] / [`SweepEngine::load_cache`]
 /// extend that guarantee across process restarts.
+///
+/// The engine is internally synchronized: [`SweepEngine::run`] takes
+/// `&self`, so one engine behind an `Arc` serves many concurrent
+/// requests. Identical in-flight cells across requests coalesce onto
+/// one simulation (see [`MemoCache`]'s pending state), and all runs
+/// share one bounded, priority-ordered worker gate
+/// ([`SweepEngine::set_worker_budget`], [`SweepSpec::priority`]).
 #[derive(Debug, Default)]
 pub struct SweepEngine {
-    cache: MemoCache,
+    cache: Mutex<MemoCache>,
+    /// Signalled whenever pending cells publish or abort.
+    cache_ready: Condvar,
+    gate: SchedGate,
+    slot_pool: SlotPool,
     threads_override: Option<usize>,
     memoize_override: Option<bool>,
     shard_threshold_override: Option<u64>,
     fast_forward_override: Option<bool>,
+    worker_budget: Option<usize>,
 }
 
 impl SweepEngine {
@@ -654,14 +893,25 @@ impl SweepEngine {
         SweepEngine::default()
     }
 
+    fn lock_cache(&self) -> MutexGuard<'_, MemoCache> {
+        lock_ignore_poison(&self.cache)
+    }
+
     /// Number of memoized simulations held.
     pub fn cached_sims(&self) -> usize {
-        self.cache.len()
+        self.lock_cache().len()
+    }
+
+    /// Cells currently claimed by in-flight runs (pending — simulating
+    /// now, not yet published). Always 0 on an idle engine: every run
+    /// publishes or aborts its claims before returning.
+    pub fn pending_cells(&self) -> usize {
+        self.lock_cache().pending()
     }
 
     /// Drop every memoized result.
-    pub fn clear_cache(&mut self) {
-        self.cache.clear();
+    pub fn clear_cache(&self) {
+        self.lock_cache().clear();
     }
 
     /// Bound the memo table to `max` entries with LRU eviction (`None`
@@ -671,20 +921,20 @@ impl SweepEngine {
     /// `--max-cache-entries` can load an arbitrarily large on-disk
     /// cache without exceeding its memory budget. `Some(0)` retains
     /// nothing.
-    pub fn set_max_cache_entries(&mut self, max: Option<usize>) {
-        self.cache.set_max_entries(max);
+    pub fn set_max_cache_entries(&self, max: Option<usize>) {
+        self.lock_cache().set_max_entries(max);
     }
 
     /// The configured cache bound, if any.
     pub fn max_cache_entries(&self) -> Option<usize> {
-        self.cache.max_entries()
+        self.lock_cache().max_entries()
     }
 
     /// Cumulative count of cache entries evicted by the LRU bound over
     /// this engine's lifetime (see [`SweepOutcome::cache_evictions`]
     /// for a per-run delta).
     pub fn cache_evictions(&self) -> u64 {
-        self.cache.evictions()
+        self.lock_cache().evictions()
     }
 
     /// Override the worker-thread count of every spec this engine runs
@@ -714,10 +964,28 @@ impl SweepEngine {
         self.fast_forward_override = on;
     }
 
+    /// Bound the number of simulation permits the engine-wide priority
+    /// gate hands out at once (`None` = one per available core). All
+    /// concurrent runs share this budget, one permit per work item —
+    /// it caps the machine's total simulation parallelism regardless
+    /// of how many requests are in flight. Scheduling-only.
+    pub fn set_worker_budget(&mut self, budget: Option<usize>) {
+        self.worker_budget = budget;
+    }
+
+    /// Resolved gate capacity: the configured budget, else one permit
+    /// per available core, never zero.
+    fn worker_capacity(&self) -> usize {
+        self.worker_budget
+            .unwrap_or_else(|| thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+            .max(1)
+    }
+
     /// Serialize the memo table to the versioned binary cache format
     /// (deterministic: entries are sorted, the footer is a checksum).
     pub fn serialize_cache(&self) -> Vec<u8> {
-        persist::encode(self.cache.iter())
+        let cache = self.lock_cache();
+        persist::encode(cache.iter())
     }
 
     /// Merge a serialized cache into this engine's memo table.
@@ -729,12 +997,19 @@ impl SweepEngine {
     /// bounded — entries stream in deterministic file order through the
     /// LRU policy, so [`SweepEngine::cached_sims`] may end up smaller
     /// than the returned count.
-    pub fn load_cache_bytes(&mut self, bytes: &[u8]) -> Result<usize> {
+    pub fn load_cache_bytes(&self, bytes: &[u8]) -> Result<usize> {
         let loaded = persist::decode(bytes)?;
         let n = loaded.len();
+        let mut cache = self.lock_cache();
         for (key, sim) in loaded {
-            self.cache.insert(key, sim);
+            cache.insert(key, sim);
         }
+        drop(cache);
+        // A merged file may have published cells other runs have
+        // pending claims on — irrelevant to them (owners re-publish
+        // idempotently), but wake waiters in case a merge satisfied
+        // their cell first.
+        self.cache_ready.notify_all();
         Ok(n)
     }
 
@@ -748,126 +1023,172 @@ impl SweepEngine {
     /// Load and merge a cache file previously written by
     /// [`SweepEngine::save_cache`]. Same rejection semantics as
     /// [`SweepEngine::load_cache_bytes`].
-    pub fn load_cache(&mut self, path: impl AsRef<Path>) -> Result<usize> {
+    pub fn load_cache(&self, path: impl AsRef<Path>) -> Result<usize> {
         let bytes = std::fs::read(path)?;
         self.load_cache_bytes(&bytes)
     }
 
-    /// Execute the grid. Results are bit-identical for any thread count.
-    pub fn run(&mut self, spec: &SweepSpec) -> Result<SweepOutcome> {
+    /// Execute the grid. Results are bit-identical for any thread count,
+    /// any [`SweepSpec::priority`], and any number of concurrent runs
+    /// sharing this engine.
+    pub fn run(&self, spec: &SweepSpec) -> Result<SweepOutcome> {
         spec.validate()?;
         let t0 = Instant::now();
-        let evictions_before = self.cache.evictions();
         let memoize = self.memoize_override.unwrap_or(spec.memoize);
+        let priority = spec.priority;
         let cfg_fps: Vec<u64> = spec.configs.iter().map(config_fingerprint).collect();
         let backend_fps: Vec<u64> = spec.backends.iter().map(|b| b.fingerprint()).collect();
 
         // 1) Enumerate jobs and plan slots. `slot_of` dedupes concrete
         //    sims within the run (and against the persistent cache).
+        //    The whole plan happens under one cache lock, so each cell
+        //    resolves atomically to exactly one of: a published result
+        //    (cache hit), another run's in-flight claim (wait for it
+        //    to publish — cross-request coalescing), or a fresh claim
+        //    this run now owns and must simulate.
         let mut jobs: Vec<JobId> = Vec::with_capacity(spec.n_jobs());
         let mut plans: Vec<Plan> = Vec::with_capacity(spec.n_jobs());
         let mut block_starts: Vec<usize> = Vec::new();
         let mut slots: Vec<SimTask> = Vec::new();
         let mut prefilled: Vec<Option<CachedSim>> = Vec::new();
         let mut slot_keys: Vec<Option<SimKey>> = Vec::new();
+        let mut slot_wait: Vec<bool> = Vec::new();
         let mut seen: HashMap<SimKey, usize> = HashMap::new();
+        let mut claimed: Vec<SimKey> = Vec::new();
         let mut cache_hits = 0usize;
         let mut dedup_hits = 0usize;
+        let evictions_before;
 
-        let mut slot_of = |task: SimTask,
-                           slots: &mut Vec<SimTask>,
-                           prefilled: &mut Vec<Option<CachedSim>>,
-                           slot_keys: &mut Vec<Option<SimKey>>| {
-            if !memoize {
+        {
+            let mut cache = self.lock_cache();
+            evictions_before = cache.evictions();
+
+            let mut slot_of = |task: SimTask,
+                               cache: &mut MemoCache,
+                               slots: &mut Vec<SimTask>,
+                               prefilled: &mut Vec<Option<CachedSim>>,
+                               slot_keys: &mut Vec<Option<SimKey>>,
+                               slot_wait: &mut Vec<bool>| {
+                if !memoize {
+                    slots.push(task);
+                    prefilled.push(None);
+                    slot_keys.push(None);
+                    slot_wait.push(false);
+                    return slots.len() - 1;
+                }
+                let layer = &spec.networks[task.net].layers[task.layer];
+                let key = SimKey {
+                    backend_fp: backend_fps[task.backend],
+                    cfg_fp: cfg_fps[task.cfg],
+                    shape: shape_of(layer),
+                    prec: spec.precisions[task.prec],
+                    cf: task.cf,
+                };
+                if let Some(&s) = seen.get(&key) {
+                    dedup_hits += 1;
+                    return s;
+                }
+                let (hit, wait) = match cache.lookup(&key) {
+                    Lookup::Ready(sim) => {
+                        cache_hits += 1;
+                        (Some(sim), false)
+                    }
+                    Lookup::Pending => (None, true),
+                    Lookup::Absent => {
+                        cache.begin_pending(key);
+                        claimed.push(key);
+                        (None, false)
+                    }
+                };
                 slots.push(task);
-                prefilled.push(None);
-                slot_keys.push(None);
-                return slots.len() - 1;
-            }
-            let layer = &spec.networks[task.net].layers[task.layer];
-            let key = SimKey {
-                backend_fp: backend_fps[task.backend],
-                cfg_fp: cfg_fps[task.cfg],
-                shape: shape_of(layer),
-                prec: spec.precisions[task.prec],
-                cf: task.cf,
+                prefilled.push(hit);
+                slot_keys.push(Some(key));
+                slot_wait.push(wait);
+                seen.insert(key, slots.len() - 1);
+                slots.len() - 1
             };
-            if let Some(&s) = seen.get(&key) {
-                dedup_hits += 1;
-                return s;
-            }
-            let hit = self.cache.get(&key);
-            if hit.is_some() {
-                cache_hits += 1;
-            }
-            slots.push(task);
-            prefilled.push(hit);
-            slot_keys.push(Some(key));
-            seen.insert(key, slots.len() - 1);
-            slots.len() - 1
-        };
 
-        for b in 0..spec.backends.len() {
-            let sensitive = spec.backends[b].strategy_sensitive();
-            for cfg in 0..spec.configs.len() {
-                for net in 0..spec.networks.len() {
-                    for prec in 0..spec.precisions.len() {
-                        let supported =
-                            spec.backends[b].supports_precision(spec.precisions[prec]);
-                        for strat in 0..spec.strategies.len() {
-                            block_starts.push(jobs.len());
-                            if !supported {
-                                continue;
-                            }
-                            for layer in 0..spec.networks[net].layers.len() {
-                                jobs.push(JobId { backend: b, cfg, net, prec, strat, layer });
-                                // Strategy-insensitive backends collapse
-                                // the whole axis onto feature-first.
-                                let task = |cf: bool| SimTask {
-                                    backend: b,
-                                    cfg,
-                                    net,
-                                    layer,
-                                    prec,
-                                    cf: cf && sensitive,
-                                };
-                                let plan = match spec.strategies[strat] {
-                                    Strategy::FeatureFirst => Plan::Single(slot_of(
-                                        task(false),
-                                        &mut slots,
-                                        &mut prefilled,
-                                        &mut slot_keys,
-                                    )),
-                                    Strategy::ChannelFirst => Plan::Single(slot_of(
-                                        task(true),
-                                        &mut slots,
-                                        &mut prefilled,
-                                        &mut slot_keys,
-                                    )),
-                                    Strategy::Mixed => {
-                                        let f = slot_of(
+            for b in 0..spec.backends.len() {
+                let sensitive = spec.backends[b].strategy_sensitive();
+                for cfg in 0..spec.configs.len() {
+                    for net in 0..spec.networks.len() {
+                        for prec in 0..spec.precisions.len() {
+                            let supported =
+                                spec.backends[b].supports_precision(spec.precisions[prec]);
+                            for strat in 0..spec.strategies.len() {
+                                block_starts.push(jobs.len());
+                                if !supported {
+                                    continue;
+                                }
+                                for layer in 0..spec.networks[net].layers.len() {
+                                    jobs.push(JobId {
+                                        backend: b,
+                                        cfg,
+                                        net,
+                                        prec,
+                                        strat,
+                                        layer,
+                                    });
+                                    // Strategy-insensitive backends collapse
+                                    // the whole axis onto feature-first.
+                                    let task = |cf: bool| SimTask {
+                                        backend: b,
+                                        cfg,
+                                        net,
+                                        layer,
+                                        prec,
+                                        cf: cf && sensitive,
+                                    };
+                                    let plan = match spec.strategies[strat] {
+                                        Strategy::FeatureFirst => Plan::Single(slot_of(
                                             task(false),
+                                            &mut cache,
                                             &mut slots,
                                             &mut prefilled,
                                             &mut slot_keys,
-                                        );
-                                        let c = slot_of(
+                                            &mut slot_wait,
+                                        )),
+                                        Strategy::ChannelFirst => Plan::Single(slot_of(
                                             task(true),
+                                            &mut cache,
                                             &mut slots,
                                             &mut prefilled,
                                             &mut slot_keys,
-                                        );
-                                        Plan::Best(f, c)
-                                    }
-                                };
-                                plans.push(plan);
+                                            &mut slot_wait,
+                                        )),
+                                        Strategy::Mixed => {
+                                            let f = slot_of(
+                                                task(false),
+                                                &mut cache,
+                                                &mut slots,
+                                                &mut prefilled,
+                                                &mut slot_keys,
+                                                &mut slot_wait,
+                                            );
+                                            let c = slot_of(
+                                                task(true),
+                                                &mut cache,
+                                                &mut slots,
+                                                &mut prefilled,
+                                                &mut slot_keys,
+                                                &mut slot_wait,
+                                            );
+                                            Plan::Best(f, c)
+                                        }
+                                    };
+                                    plans.push(plan);
+                                }
                             }
                         }
                     }
                 }
             }
         }
-        drop(slot_of);
+
+        // From here on, any exit path that does not publish this run's
+        // claimed cells must abort them so waiters in other runs can
+        // adopt the cells instead of blocking forever.
+        let mut claims = ClaimGuard { engine: self, keys: claimed };
 
         // 2) Expand the missing slots into scheduling units. A slot
         //    whose layer the backend decomposes — and whose estimated
@@ -876,9 +1197,11 @@ impl SweepEngine {
         //    Fan-out is scheduling-only: the merged shard stats are the
         //    same composition the backend computes inline, so results
         //    are bit-identical at any threshold/shard/thread count.
-        let todo: Vec<usize> =
-            (0..slots.len()).filter(|&s| prefilled[s].is_none()).collect();
-        let executed_sims = todo.len();
+        //    Slots pending in another run are not work: they resolve in
+        //    the coalescing wait below.
+        let todo: Vec<usize> = (0..slots.len())
+            .filter(|&s| prefilled[s].is_none() && !slot_wait[s])
+            .collect();
         let shard_threshold =
             self.shard_threshold_override.unwrap_or(spec.shard_threshold);
 
@@ -957,21 +1280,34 @@ impl SweepEngine {
         // 3) Execute the work items on the worker pool. Workers claim
         //    items from a shared atomic index (self-scheduling queue,
         //    walked in LPT order) and write into item-keyed outputs, so
-        //    completion order is irrelevant to the result.
+        //    completion order is irrelevant to the result. Each item
+        //    additionally draws one permit from the engine-wide
+        //    priority gate, so concurrent runs share the machine's
+        //    simulation budget and higher-priority runs overtake this
+        //    one between items.
+        let capacity = self.worker_capacity();
         let mut sims: Vec<Option<CachedSim>> = prefilled;
         let mut slowest_job_secs = 0f64;
         let mut job_elapsed_total_secs = 0f64;
         let mut fast_forwarded_instrs = 0u64;
+        let mut gate_wait_secs = 0f64;
         if !items.is_empty() {
             let n_cfgs = spec.configs.len();
             let n_worker_slots = spec.backends.len() * n_cfgs;
             type ItemOut = (usize, Result<SimStats>, f64);
             let order = &order;
-            let worker = |claim: &AtomicUsize| -> (Vec<ItemOut>, u64) {
-                let mut pool: Vec<WorkerSlot> = (0..n_worker_slots)
-                    .map(|_| WorkerSlot { fast_forward, ..WorkerSlot::default() })
-                    .collect();
+            let backend_fps = &backend_fps;
+            let cfg_fps = &cfg_fps;
+            let worker = |claim: &AtomicUsize| -> (Vec<ItemOut>, u64, f64) {
+                // Worker state comes from the engine's hand-off pool,
+                // so pooled processors and pre-decoded programs survive
+                // across runs in a resident server. Checked out lazily
+                // (only the (backend, cfg) pairs this worker touches),
+                // checked back in at the end.
+                let mut pool: Vec<Option<WorkerSlot>> =
+                    (0..n_worker_slots).map(|_| None).collect();
                 let mut local = Vec::new();
+                let mut waited = 0f64;
                 loop {
                     let pos = claim.fetch_add(1, Ordering::Relaxed);
                     if pos >= order.len() {
@@ -985,36 +1321,67 @@ impl SweepEngine {
                     let layer = &spec.networks[t.net].layers[t.layer];
                     let p = spec.precisions[t.prec];
                     let s = if t.cf { Strategy::ChannelFirst } else { Strategy::FeatureFirst };
-                    let ws = &mut pool[t.backend * n_cfgs + t.cfg];
+                    let (permit, wait) = self.gate.acquire(capacity, priority);
+                    waited += wait;
+                    let ws = pool[t.backend * n_cfgs + t.cfg].get_or_insert_with(|| {
+                        self.slot_pool.check_out(
+                            backend_fps[t.backend],
+                            cfg_fps[t.cfg],
+                            fast_forward,
+                        )
+                    });
                     let t0 = Instant::now();
                     let res = match &item.shard {
                         None => backend.simulate(ws, cfg, layer, p, s),
                         Some(shard) => backend.simulate_shard(ws, cfg, layer, p, s, shard),
                     };
+                    drop(permit);
                     local.push((i, res, t0.elapsed().as_secs_f64()));
                 }
-                let skipped: u64 = pool.iter().map(|s| s.fast_forwarded_instrs).sum();
-                (local, skipped)
+                let mut skipped = 0u64;
+                for (idx, slot) in pool.into_iter().enumerate() {
+                    if let Some(mut ws) = slot {
+                        skipped += ws.fast_forwarded_instrs;
+                        ws.fast_forwarded_instrs = 0;
+                        self.slot_pool.check_in(
+                            backend_fps[idx / n_cfgs],
+                            cfg_fps[idx % n_cfgs],
+                            ws,
+                        );
+                    }
+                }
+                (local, skipped, waited)
             };
 
-            let outs: Vec<(Vec<ItemOut>, u64)> = if threads <= 1 {
+            let outs: Vec<(Vec<ItemOut>, u64, f64)> = if threads <= 1 {
                 vec![worker(&AtomicUsize::new(0))]
             } else {
                 let claim = AtomicUsize::new(0);
-                thread::scope(|scope| {
-                    let handles: Vec<_> =
-                        (0..threads).map(|_| scope.spawn(|| worker(&claim))).collect();
-                    handles
-                        .into_iter()
-                        .map(|h| h.join().expect("sweep worker panicked"))
-                        .collect()
-                })
+                let joined: Vec<thread::Result<(Vec<ItemOut>, u64, f64)>> =
+                    thread::scope(|scope| {
+                        let handles: Vec<_> =
+                            (0..threads).map(|_| scope.spawn(|| worker(&claim))).collect();
+                        handles.into_iter().map(|h| h.join()).collect()
+                    });
+                let mut outs = Vec::with_capacity(joined.len());
+                for r in joined {
+                    match r {
+                        Ok(out) => outs.push(out),
+                        // The error return drops `claims`, aborting this
+                        // run's pending cells so coalesced waiters in
+                        // other runs recover (a panicking worker's gate
+                        // permit was already released on its unwind).
+                        Err(_) => return Err(Error::sim("sweep worker panicked")),
+                    }
+                }
+                outs
             };
 
             let mut pending: Vec<Option<Result<SimStats>>> = Vec::new();
             pending.resize_with(items.len(), || None);
-            for (out, skipped) in outs {
+            for (out, skipped, waited) in outs {
                 fast_forwarded_instrs += skipped;
+                gate_wait_secs += waited;
                 for (item, res, elapsed) in out {
                     pending[item] = Some(res);
                     slowest_job_secs = slowest_job_secs.max(elapsed);
@@ -1038,17 +1405,61 @@ impl SweepEngine {
             }
         }
 
-        // 4) Feed the persistent cache (merged, layer-level results —
-        //    sharded and unsharded runs of a cell share one entry).
+        // 4) Publish this run's claimed cells into the persistent cache
+        //    (merged, layer-level results — sharded and unsharded runs
+        //    of a cell share one entry) and wake coalesced waiters.
+        //    Publishing *before* waiting on other runs' pending cells
+        //    (step 5) is what makes cross-request coalescing
+        //    deadlock-free: by the time any run blocks, everything it
+        //    owns is already visible.
         if memoize {
+            let mut cache = self.lock_cache();
             for &slot in &todo {
                 if let (Some(key), Some(sim)) = (slot_keys[slot], sims[slot].as_ref()) {
-                    self.cache.insert(key, sim.clone());
+                    cache.insert(key, sim.clone());
                 }
             }
+            drop(cache);
+            self.cache_ready.notify_all();
+            claims.published();
         }
 
-        // 5) Resolve jobs from slots (Mixed = best-of, ties to FF).
+        // 5) Resolve the cells another run had in flight when this run
+        //    planned: block on the engine condvar until the owner
+        //    publishes. If the owner aborted instead (error/panic), the
+        //    cell reads Absent — adopt it and simulate inline, drawing
+        //    a gate permit and a pooled worker slot like any other
+        //    item. Identical published results either way, so the
+        //    bit-identical contract holds at any interleaving.
+        let mut coalesced_hits = 0usize;
+        let mut adopted_sims = 0usize;
+        for slot in 0..slots.len() {
+            if !slot_wait[slot] || sims[slot].is_some() {
+                continue;
+            }
+            let key = slot_keys[slot].expect("waiting slot has a key");
+            let (sim, adopted) = self.wait_for_cell(
+                spec,
+                slots[slot],
+                key,
+                capacity,
+                priority,
+                fast_forward,
+                &backend_fps,
+                &cfg_fps,
+                &mut fast_forwarded_instrs,
+                &mut gate_wait_secs,
+            )?;
+            if adopted {
+                adopted_sims += 1;
+            } else {
+                coalesced_hits += 1;
+            }
+            sims[slot] = Some(sim);
+        }
+        let executed_sims = todo.len() + adopted_sims;
+
+        // 6) Resolve jobs from slots (Mixed = best-of, ties to FF).
         let mut results: Vec<LayerResult> = Vec::with_capacity(jobs.len());
         for (jid, plan) in jobs.iter().zip(&plans) {
             let layer = &spec.networks[jid.net].layers[jid.layer];
@@ -1083,7 +1494,9 @@ impl SweepEngine {
             executed_sims,
             cache_hits,
             dedup_hits,
-            cache_evictions: self.cache.evictions() - evictions_before,
+            coalesced_hits,
+            gate_wait_secs,
+            cache_evictions: self.lock_cache().evictions() - evictions_before,
             threads_used: threads,
             elapsed_secs: t0.elapsed().as_secs_f64(),
             sharded_jobs,
@@ -1102,10 +1515,77 @@ impl SweepEngine {
         })
     }
 
+    /// Resolve one cell another run claimed before this run planned:
+    /// wait for the owner to publish (the common case — a coalesced
+    /// hit), or adopt the cell and simulate it inline if the owner
+    /// aborted. Returns the published result and whether this run had
+    /// to adopt (true = counts as an executed simulation).
+    #[allow(clippy::too_many_arguments)]
+    fn wait_for_cell(
+        &self,
+        spec: &SweepSpec,
+        t: SimTask,
+        key: SimKey,
+        capacity: usize,
+        priority: u8,
+        fast_forward: bool,
+        backend_fps: &[u64],
+        cfg_fps: &[u64],
+        ff_instrs: &mut u64,
+        gate_wait: &mut f64,
+    ) -> Result<(CachedSim, bool)> {
+        let mut cache = self.lock_cache();
+        loop {
+            match cache.lookup(&key) {
+                Lookup::Ready(sim) => return Ok((sim, false)),
+                Lookup::Pending => {
+                    // Publishes and aborts notify immediately; the
+                    // timeout is only a backstop against a missed
+                    // wake-up, not a polling interval.
+                    cache = match self
+                        .cache_ready
+                        .wait_timeout(cache, Duration::from_millis(200))
+                    {
+                        Ok((guard, _)) => guard,
+                        Err(poisoned) => poisoned.into_inner().0,
+                    };
+                }
+                Lookup::Absent => {
+                    // The owner aborted (or the cell was cleared):
+                    // adopt it. The claim guard aborts in turn if this
+                    // simulation fails, so a chain of waiters drains
+                    // cleanly instead of deadlocking.
+                    cache.begin_pending(key);
+                    drop(cache);
+                    let mut claim = ClaimGuard { engine: self, keys: vec![key] };
+                    let backend = &spec.backends[t.backend];
+                    let cfg = &spec.configs[t.cfg];
+                    let layer = &spec.networks[t.net].layers[t.layer];
+                    let p = spec.precisions[t.prec];
+                    let s = if t.cf { Strategy::ChannelFirst } else { Strategy::FeatureFirst };
+                    let (permit, waited) = self.gate.acquire(capacity, priority);
+                    *gate_wait += waited;
+                    let mut ws =
+                        self.slot_pool.check_out(backend_fps[t.backend], cfg_fps[t.cfg], fast_forward);
+                    let res = backend.simulate(&mut ws, cfg, layer, p, s);
+                    drop(permit);
+                    *ff_instrs += ws.fast_forwarded_instrs;
+                    ws.fast_forwarded_instrs = 0;
+                    self.slot_pool.check_in(backend_fps[t.backend], cfg_fps[t.cfg], ws);
+                    let sim = CachedSim { stats: res? };
+                    self.lock_cache().insert(key, sim.clone());
+                    self.cache_ready.notify_all();
+                    claim.published();
+                    return Ok((sim, true));
+                }
+            }
+        }
+    }
+
     /// Execute the grid, then replay every result (in deterministic job
     /// order) into `sink` and hand it the finished outcome.
     pub fn run_with_sink(
-        &mut self,
+        &self,
         spec: &SweepSpec,
         sink: &mut dyn ReportSink,
     ) -> Result<SweepOutcome> {
@@ -1132,6 +1612,9 @@ fn assert_job_types_are_send_sync() {
     ok::<crate::core::Processor>();
     ok::<Error>();
     ok::<SweepOutcome>();
+    // The engine itself is shared behind an `Arc` by the server — the
+    // internal synchronization must make it `Sync`, not just `Send`.
+    ok::<SweepEngine>();
 }
 
 #[cfg(test)]
@@ -1205,7 +1688,7 @@ mod tests {
             .precisions(vec![Precision::Int8])
             .strategies(vec![Strategy::FeatureFirst])
             .threads(1);
-        let mut engine = SweepEngine::new();
+        let engine = SweepEngine::new();
         let cold = engine.run(&spec).unwrap();
         // 3 layers, one duplicated shape → 2 executed, 1 dedup hit
         assert_eq!(cold.executed_sims, 2);
@@ -1379,6 +1862,39 @@ mod tests {
     }
 
     #[test]
+    fn memo_cache_pending_claims_are_invisible_and_unevictable() {
+        let mut c = MemoCache::default();
+        c.set_max_entries(Some(1));
+        // A claim reads as Pending via lookup, as a miss via get, and
+        // never counts toward len/iter/persistence.
+        c.begin_pending(key(1));
+        assert!(matches!(c.lookup(&key(1)), Lookup::Pending));
+        assert!(c.get(&key(1)).is_none());
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.pending(), 1);
+        assert_eq!(c.iter().count(), 0);
+        // Published inserts churn through the 1-entry bound without
+        // ever evicting the pending claim.
+        c.insert(key(2), sim(2));
+        c.insert(key(3), sim(3));
+        assert_eq!(c.evictions(), 1);
+        assert!(matches!(c.lookup(&key(1)), Lookup::Pending), "claims are not evictable");
+        // Publishing the claim turns it Ready and counts normally
+        // (evicting key 3 under the bound).
+        c.insert(key(1), sim(1));
+        assert_eq!(c.pending(), 0);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(&key(1)).unwrap(), sim(1));
+        // Aborting a claim leaves the cell Absent for a waiter to
+        // adopt; aborting a published cell is a no-op.
+        c.begin_pending(key(4));
+        c.abort_pending(&key(4));
+        assert!(matches!(c.lookup(&key(4)), Lookup::Absent));
+        c.abort_pending(&key(1));
+        assert!(matches!(c.lookup(&key(1)), Lookup::Ready(_)), "abort must not drop results");
+    }
+
+    #[test]
     fn engine_eviction_bound_resimulates_evicted_cells() {
         let cfg = SpeedConfig::default();
         // Four unique shapes, one sim each.
@@ -1393,7 +1909,7 @@ mod tests {
             .precisions(vec![Precision::Int8])
             .strategies(vec![Strategy::FeatureFirst])
             .threads(1);
-        let mut engine = SweepEngine::new();
+        let engine = SweepEngine::new();
         engine.set_max_cache_entries(Some(2));
         assert_eq!(engine.max_cache_entries(), Some(2));
         let cold = engine.run(&spec).unwrap();
@@ -1408,7 +1924,7 @@ mod tests {
         assert_eq!(warm.cache_hits, 2);
         assert_eq!(warm.results, cold.results);
         // Unbounded engines never evict.
-        let mut free = SweepEngine::new();
+        let free = SweepEngine::new();
         let out = free.run(&spec).unwrap();
         assert_eq!(out.cache_evictions, 0);
         assert_eq!(free.cached_sims(), 4);
@@ -1429,7 +1945,7 @@ mod tests {
                 .shard_threshold(threshold)
                 .threads(threads)
         };
-        let mut engine = SweepEngine::new();
+        let engine = SweepEngine::new();
         let fanned = engine.run(&spec_for(SHARD_AUTO_MACS, 2)).unwrap();
         assert_eq!(fanned.sharded_jobs, 1);
         assert!(fanned.shards_spawned > 1, "{} shards", fanned.shards_spawned);

@@ -74,7 +74,7 @@
 //! let cfg = SpeedConfig::default();
 //! // VGG16 + ResNet18 + GoogLeNet + SqueezeNet × 16/8/4-bit × Mixed
 //! let spec = SweepSpec::benchmark_suite(&cfg); // threads = one per core
-//! let mut engine = SweepEngine::new();
+//! let engine = SweepEngine::new(); // internally synchronized: `run` is `&self`
 //! let out = engine.run(&spec).unwrap();
 //! println!(
 //!     "{} layer results from {} unique sims ({:.0} layer-sims/s)",

@@ -10,7 +10,9 @@
 //!             [--no-fast-forward]
 //!             [--out DIR] [config flags]                       (see `speed sweep --help`)
 //! speed serve [--tcp ADDR] [--port-file PATH] [--cache-file PATH]
-//!             [--max-cache-entries N] [--threads N]
+//!             [--max-cache-entries N] [--threads N] [--worker-budget N]
+//!             [--max-connections N] [--max-concurrent-sweeps N]
+//!             [--idle-timeout-secs N]
 //!             [--shard-threshold N | --no-shard] [--no-fast-forward] [config flags]
 //!                                         (long-running sweep server; `--help`)
 //! speed request (--emit | --tcp ADDR) [request flags]
@@ -98,16 +100,38 @@ Accepts line-delimited requests (the README's \"server mode\" grammar)
 on stdin (default) or a TCP listener, runs each on the shared sweep
 engine, and streams per-layer `block` records plus a terminating
 `summary` back per request. Requests share the memo table: a repeated
-cell is a cache hit, whoever simulated it first. Stops on stdin EOF or
-a `shutdown` request, flushing the cache file first.
+cell is a cache hit, whoever simulated it first, and identical cells
+*in flight* coalesce — concurrent clients asking for the same cold
+cell pay one simulation between them. Sessions run concurrently (the
+engine is internally synchronized); admission control answers
+over-limit requests with `{\"type\":\"error\",\"code\":\"overload\"}`.
+Stops on stdin EOF or a `shutdown` request, flushing the cache file
+first.
 
 flags:
   --tcp ADDR    listen on ADDR (e.g. 127.0.0.1:7878; port 0 picks an
                 ephemeral port) instead of stdin/stdout; the bound
                 address is printed as a `listening` record on stdout
   --port-file PATH
-                also write the bound TCP address to PATH (how scripts
-                discover an ephemeral port)
+                also write the bound TCP address to PATH atomically
+                (how scripts discover an ephemeral port)
+  --max-connections N
+                serve at most N TCP connections at once; extra
+                connections get an `overload` error and are closed
+                (default 128; 0 = unlimited)
+  --max-concurrent-sweeps N
+                execute at most N sweep requests at once across all
+                sessions; extra requests get an immediate `overload`
+                error instead of queueing (default 16; 0 = unlimited)
+  --idle-timeout-secs N
+                end a session cleanly after N seconds without a
+                request line, so half-dead clients can't pin
+                connection slots (default 600; 0 = disabled)
+  --worker-budget N
+                cap simulation worker threads across ALL concurrent
+                requests at N; the priority scheduler allocates these
+                slots, highest `priority` request first (default:
+                one per core)
   --cache-file PATH
                 load the persistent result cache from PATH at startup
                 (cold start if missing/corrupt) and flush it back on
@@ -158,6 +182,10 @@ flags:
                     (scheduling-only; the results are bit-identical)
   --no-fast-forward disable loop-aware fast-forward for this request
                     (bit-identical; the summary's ff_instrs reads 0)
+  --priority N      scheduler priority 0-255, higher first (default 0);
+                    lets a small interactive request overtake a running
+                    full-grid sweep (scheduling-only, results are
+                    bit-identical)
   --op sweep|ping|shutdown
                     operation (default sweep)
   --raw LINE        send LINE verbatim instead of the built request
@@ -448,6 +476,20 @@ fn main() -> speed::Result<()> {
                     flags.num("shard-threshold")
                 },
                 fast_forward: flags.get("no-fast-forward").map(|_| false),
+                limits: {
+                    let mut limits = serve::ServeLimits::default();
+                    if let Some(n) = flags.num("max-connections") {
+                        limits.max_connections = n;
+                    }
+                    if let Some(n) = flags.num("max-concurrent-sweeps") {
+                        limits.max_concurrent_sweeps = n;
+                    }
+                    if let Some(n) = flags.num("idle-timeout-secs") {
+                        limits.idle_timeout_secs = n;
+                    }
+                    limits
+                },
+                worker_budget: flags.num("worker-budget"),
             };
             serve::run_server(opts)?;
         }
@@ -510,6 +552,13 @@ fn main() -> speed::Result<()> {
             }
             if flags.get("no-fast-forward").is_some() {
                 req.fast_forward = false;
+            }
+            if let Some(p) = flags.num::<u64>("priority") {
+                if p > u64::from(u8::MAX) {
+                    eprintln!("bad value `{p}` for --priority (0-255)");
+                    std::process::exit(2);
+                }
+                req.priority = p as u8;
             }
             req.overrides = serve::CfgOverrides {
                 lanes: flags.num("lanes"),

@@ -188,7 +188,7 @@ fn golden_backend_agrees_with_run_functional_conv() {
 fn verification_suite_batches_golden_checks_through_engine() {
     let cfg = SpeedConfig::default();
     let spec = SweepSpec::verification_suite(&cfg).threads(2);
-    let mut engine = SweepEngine::new();
+    let engine = SweepEngine::new();
     let out = engine.run(&spec).unwrap();
     // 4 distinct shapes × 3 precisions × 2 concrete strategies.
     assert_eq!(out.results.len(), spec.n_jobs());

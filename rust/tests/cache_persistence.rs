@@ -34,7 +34,7 @@ fn scratch(tag: &str) -> std::path::PathBuf {
 fn save_reload_rerun_is_pure_cache_and_bit_identical() {
     let cfg = SpeedConfig::default();
     let spec = small_spec(&cfg);
-    let mut warm_engine = SweepEngine::new();
+    let warm_engine = SweepEngine::new();
     let cold = warm_engine.run(&spec).unwrap();
     assert!(cold.executed_sims > 0);
     assert_eq!(cold.cache_hits, 0);
@@ -43,7 +43,7 @@ fn save_reload_rerun_is_pure_cache_and_bit_identical() {
     warm_engine.save_cache(&path).unwrap();
 
     // A brand-new engine (≈ a restarted process) loads the file…
-    let mut fresh = SweepEngine::new();
+    let fresh = SweepEngine::new();
     assert_eq!(fresh.cached_sims(), 0);
     let loaded = fresh.load_cache(&path).unwrap();
     assert_eq!(loaded, warm_engine.cached_sims());
@@ -62,12 +62,12 @@ fn save_reload_rerun_is_pure_cache_and_bit_identical() {
 #[test]
 fn serialized_bytes_round_trip_and_are_deterministic() {
     let cfg = SpeedConfig::default();
-    let mut engine = SweepEngine::new();
+    let engine = SweepEngine::new();
     engine.run(&small_spec(&cfg)).unwrap();
     let a = engine.serialize_cache();
     let b = engine.serialize_cache();
     assert_eq!(a, b, "serialization must be deterministic");
-    let mut other = SweepEngine::new();
+    let other = SweepEngine::new();
     assert_eq!(other.load_cache_bytes(&a).unwrap(), engine.cached_sims());
     assert_eq!(other.serialize_cache(), a, "decode→encode must be the identity");
 }
@@ -76,11 +76,11 @@ fn serialized_bytes_round_trip_and_are_deterministic() {
 fn corrupted_and_mismatched_caches_are_rejected_without_panic() {
     let cfg = SpeedConfig::default();
     let spec = small_spec(&cfg);
-    let mut engine = SweepEngine::new();
+    let engine = SweepEngine::new();
     engine.run(&spec).unwrap();
     let good = engine.serialize_cache();
 
-    let mut victim = SweepEngine::new();
+    let victim = SweepEngine::new();
     // Garbage, empty, truncated, bit-flipped and version-bumped inputs
     // must all error out and leave the cache untouched (cold).
     assert!(victim.load_cache_bytes(b"definitely not a cache file").is_err());
@@ -110,13 +110,13 @@ fn bounded_engine_loads_huge_cache_file_without_exceeding_cap() {
     // LRU bound now applies to the load-time merge too.
     let cfg = SpeedConfig::default();
     let spec = small_spec(&cfg);
-    let mut donor = SweepEngine::new();
+    let donor = SweepEngine::new();
     donor.run(&spec).unwrap();
     assert!(donor.cached_sims() > 2, "need more entries than the bound");
     let path = scratch("bounded_load");
     donor.save_cache(&path).unwrap();
 
-    let mut bounded = SweepEngine::new();
+    let bounded = SweepEngine::new();
     bounded.set_max_cache_entries(Some(2));
     let loaded = bounded.load_cache(&path).unwrap();
     assert_eq!(loaded, donor.cached_sims(), "reports the file's entry count");
@@ -138,12 +138,12 @@ fn cache_files_merge_and_ignore_foreign_configurations() {
     // saved under one machine configuration never hits under another.
     let base = SpeedConfig::default();
     let spec_base = small_spec(&base);
-    let mut engine = SweepEngine::new();
+    let engine = SweepEngine::new();
     let cold = engine.run(&spec_base).unwrap();
     let bytes = engine.serialize_cache();
 
     let other_cfg = SpeedConfig { tile_r: 8, tile_c: 8, ..Default::default() };
-    let mut other = SweepEngine::new();
+    let other = SweepEngine::new();
     other.load_cache_bytes(&bytes).unwrap();
     let foreign_spec = SweepSpec::new(other_cfg)
         .network("t", vec![ConvLayer::new("c3", 8, 8, 8, 8, 3, 1, 1)])

@@ -99,7 +99,7 @@ fn stdin_mode_cold_warm_malformed_and_shutdown() {
     assert!(lines[5].contains("\"type\":\"bye\""), "{}", lines[5]);
 
     // Graceful shutdown flushed a loadable cache file.
-    let mut engine = speed::coordinator::sweep::SweepEngine::new();
+    let engine = speed::coordinator::sweep::SweepEngine::new();
     let loaded = engine.load_cache(&cache).expect("flushed cache file must decode");
     assert_eq!(loaded, 1, "exactly the one simulated cell is persisted");
     let _ = std::fs::remove_file(&cache);
@@ -201,7 +201,7 @@ fn tcp_mode_end_to_end_with_client_expectations() {
     let status = wait_for_exit(&mut child.0, "tcp-mode server");
     assert!(status.success(), "serve exited with {status}");
 
-    let mut engine = speed::coordinator::sweep::SweepEngine::new();
+    let engine = speed::coordinator::sweep::SweepEngine::new();
     assert_eq!(engine.load_cache(&cache).expect("flushed cache"), 1);
 
     let _ = std::fs::remove_file(&cache);

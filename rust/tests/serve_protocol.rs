@@ -7,7 +7,7 @@
 //! re-simulating on the next request.
 
 use std::io::BufReader;
-use std::sync::Mutex;
+use std::sync::Arc;
 
 use speed::arch::{Precision, SpeedConfig};
 use speed::coordinator::serve::{
@@ -70,6 +70,9 @@ fn random_request(rng: &mut Prng) -> Request {
         req.shard_threshold = Some(rng.next_u64() >> 12);
     }
     req.fast_forward = rng.below(4) != 0;
+    if rng.below(2) == 1 {
+        req.priority = rng.below(256) as u8;
+    }
     req.overrides = CfgOverrides {
         lanes: (rng.below(2) == 1).then(|| 1 << rng.range_usize(2, 4)),
         vlen: (rng.below(2) == 1).then(|| 512 << rng.range_usize(0, 2)),
@@ -116,17 +119,22 @@ fn malformed_requests_are_rejected_not_panics() {
         "{\"id\":1,\"shard\":1}",               // shard wants a bool
         "{\"id\":1,\"shard_threshold\":\"x\"}", // threshold wants an int
         "{\"id\":1,\"fast_forward\":1}",        // fast_forward wants a bool
+        "{\"id\":1,\"priority\":300}",          // priority out of u8 range
+        "{\"id\":1,\"priority\":\"high\"}",     // priority wants an int
     ] {
         assert!(Request::parse(bad).is_err(), "must reject {bad:?}");
     }
 }
 
 /// Drive one in-process serve session and return its reply lines.
-fn serve_session(engine: &Mutex<SweepEngine>, input: &str) -> (Vec<String>, serve::ServeStats) {
-    let cfg = SpeedConfig::default();
+fn serve_session(engine: &Arc<SweepEngine>, input: &str) -> (Vec<String>, serve::ServeStats) {
+    let shared = serve::ServeShared::new(
+        Arc::clone(engine),
+        SpeedConfig::default(),
+        serve::ServeLimits::default(),
+    );
     let mut out: Vec<u8> = Vec::new();
-    let stats =
-        serve::serve_lines(engine, &cfg, BufReader::new(input.as_bytes()), &mut out);
+    let stats = serve::serve_lines(&shared, BufReader::new(input.as_bytes()), &mut out);
     let text = String::from_utf8(out).expect("utf-8 reply stream");
     (text.lines().map(String::from).collect(), stats)
 }
@@ -168,7 +176,7 @@ fn serve_session_streams_blocks_and_summaries_with_warm_repeat_zero_sims() {
         warm.to_line(),
         Request { id: 9, op: Op::Shutdown, ..Default::default() }.to_line()
     );
-    let engine = Mutex::new(SweepEngine::new());
+    let engine = Arc::new(SweepEngine::new());
     let (lines, stats) = serve_session(&engine, &input);
 
     assert_eq!(stats.requests, 4);
@@ -191,6 +199,10 @@ fn serve_session_streams_blocks_and_summaries_with_warm_repeat_zero_sims() {
     assert_eq!(summary_field(&lines[1], "sharded_jobs"), 0);
     assert_eq!(summary_field(&lines[1], "shards"), 0);
     let _ = summary_field(&lines[1], "slowest_job_ms");
+    // Concurrency telemetry is always present; a serial session never
+    // coalesces on another request's in-flight cell.
+    assert_eq!(summary_field(&lines[1], "coalesced"), 0);
+    let _ = summary_field(&lines[1], "queue_ms");
     // Warm repeat: zero new simulations, served from the shared memo.
     assert_eq!(summary_field(&lines[4], "id"), 2);
     assert_eq!(summary_field(&lines[4], "sims"), 0);
@@ -207,7 +219,7 @@ fn serve_session_streams_blocks_and_summaries_with_warm_repeat_zero_sims() {
 
 #[test]
 fn serve_session_replies_errors_for_valid_lines_with_bad_semantics() {
-    let engine = Mutex::new(SweepEngine::new());
+    let engine = Arc::new(SweepEngine::new());
     let input = concat!(
         "{\"id\":3}\n",                         // sweep without network
         "{\"id\":4,\"network\":\"AlexNet\"}\n", // unknown network
@@ -225,7 +237,7 @@ fn serve_session_replies_errors_for_valid_lines_with_bad_semantics() {
     for (line, want) in lines.iter().zip([3u64, 4, 5, 6]) {
         assert_eq!(summary_field(line, "id"), want, "{line}");
     }
-    assert_eq!(engine.lock().unwrap().cached_sims(), 0, "no sweep ever ran");
+    assert_eq!(engine.cached_sims(), 0, "no sweep ever ran");
 }
 
 #[test]
@@ -246,9 +258,8 @@ fn eviction_bound_is_observable_through_a_serve_session() {
     let a_again = Request { id: 3, ..a.clone() };
     let input =
         format!("{}\n{}\n{}\n", a.to_line(), b.to_line(), a_again.to_line());
-    let mut engine = SweepEngine::new();
+    let engine = Arc::new(SweepEngine::new());
     engine.set_max_cache_entries(Some(1));
-    let engine = Mutex::new(engine);
     let (lines, _) = serve_session(&engine, &input);
     let summaries: Vec<&String> =
         lines.iter().filter(|l| record_type(l) == "summary").collect();
@@ -262,9 +273,8 @@ fn eviction_bound_is_observable_through_a_serve_session() {
         "A was evicted, so it must re-simulate"
     );
     assert_eq!(summary_field(summaries[2], "cache_entries"), 1);
-    let eng = engine.lock().unwrap();
-    assert_eq!(eng.cached_sims(), 1);
-    assert_eq!(eng.cache_evictions(), 2);
+    assert_eq!(engine.cached_sims(), 1);
+    assert_eq!(engine.cache_evictions(), 2);
 }
 
 #[test]
@@ -280,7 +290,7 @@ fn engine_eviction_insert_beyond_bound_and_resimulate() {
         .precisions(vec![Precision::Int8])
         .strategies(vec![Strategy::FeatureFirst])
         .threads(1);
-    let mut engine = SweepEngine::new();
+    let engine = SweepEngine::new();
     engine.set_max_cache_entries(Some(3));
     let cold = engine.run(&spec).unwrap();
     assert_eq!(cold.executed_sims, 5);
@@ -305,19 +315,19 @@ fn bounded_load_time_merge_respects_the_cap() {
         .precisions(vec![Precision::Int8])
         .strategies(vec![Strategy::FeatureFirst])
         .threads(1);
-    let mut donor = SweepEngine::new();
+    let donor = SweepEngine::new();
     donor.run(&spec).unwrap();
     assert_eq!(donor.cached_sims(), 6);
     let bytes = donor.serialize_cache();
 
-    let mut bounded = SweepEngine::new();
+    let bounded = SweepEngine::new();
     bounded.set_max_cache_entries(Some(2));
     let loaded = bounded.load_cache_bytes(&bytes).unwrap();
     assert_eq!(loaded, 6, "load reports the file's entry count");
     assert_eq!(bounded.cached_sims(), 2, "merge is bounded");
     assert_eq!(bounded.cache_evictions(), 4);
     // Loading the same bytes twice is deterministic (same survivors).
-    let mut again = SweepEngine::new();
+    let again = SweepEngine::new();
     again.set_max_cache_entries(Some(2));
     again.load_cache_bytes(&bytes).unwrap();
     assert_eq!(again.serialize_cache(), bounded.serialize_cache());

@@ -1,0 +1,591 @@
+//! Multi-tenant serve stress contract. Two layers of coverage:
+//!
+//! * **Engine-level**, with instrumented test backends whose gates make
+//!   the concurrency deterministic: identical cold runs from many
+//!   threads coalesce onto exactly one simulation; a failing backend
+//!   aborts its pending cell so concurrent waiters error instead of
+//!   deadlocking; a high-priority request overtakes a long low-priority
+//!   sweep on a single-permit engine.
+//! * **Serve/TCP-level**, over the real protocol: concurrent sessions
+//!   share one simulation across the whole fleet, the admission limit
+//!   answers `"code":"overload"` and recovers, and the accept loop
+//!   honours the connection cap, the idle read timeout and both
+//!   shutdown paths (by request and by external flag), returning an
+//!   accurate [`TcpReport`].
+//!
+//! Every assertion here is timing-*independent* (sums and orderings
+//! that hold under any interleaving); sleeps and gates only make the
+//! interesting interleavings overwhelmingly likely, they are never
+//! load-bearing for correctness of the assertions.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use speed::arch::{Precision, SpeedConfig};
+use speed::coordinator::backend::{SimBackend, WorkerSlot};
+use speed::coordinator::serve::{self, Op, Request, ServeLimits, ServeShared, Value};
+use speed::coordinator::sweep::{SweepEngine, SweepOutcome, SweepSpec};
+use speed::core::SimStats;
+use speed::dataflow::{ConvLayer, Strategy};
+
+const DEADLINE: Duration = Duration::from_secs(60);
+
+/// Deterministic synthetic stats: a pure function of the cell key, so
+/// any mix of coalescing / caching / re-simulation is bit-identical.
+fn synth_stats(layer: &ConvLayer, p: Precision, strategy: Strategy) -> SimStats {
+    let s = match strategy {
+        Strategy::FeatureFirst => 1,
+        Strategy::ChannelFirst => 2,
+        Strategy::Mixed => 3,
+    };
+    SimStats {
+        cycles: 1_000 + layer.cout as u64 * 17 + u64::from(p.bits()) * 7 + s,
+        macs: 4096,
+        useful_macs: 4096,
+        ..Default::default()
+    }
+}
+
+/// Blocks inside `simulate` until released, and counts entries — the
+/// test holds the one real simulation open while every other thread
+/// plans, which forces them all onto the pending cell.
+#[derive(Debug)]
+struct GatedBackend {
+    entered: Arc<AtomicUsize>,
+    release: Arc<AtomicBool>,
+}
+
+impl SimBackend for GatedBackend {
+    fn name(&self) -> &'static str {
+        "gated"
+    }
+
+    fn fingerprint(&self) -> u64 {
+        0x6A7E_D001
+    }
+
+    fn simulate(
+        &self,
+        _slot: &mut WorkerSlot,
+        _cfg: &SpeedConfig,
+        layer: &ConvLayer,
+        p: Precision,
+        strategy: Strategy,
+    ) -> speed::Result<SimStats> {
+        self.entered.fetch_add(1, Ordering::SeqCst);
+        let deadline = Instant::now() + DEADLINE;
+        while !self.release.load(Ordering::SeqCst) {
+            assert!(Instant::now() < deadline, "gated backend never released");
+            thread::sleep(Duration::from_millis(2));
+        }
+        Ok(synth_stats(layer, p, strategy))
+    }
+}
+
+/// Sleeps per cell (a "long" simulation) and counts entries.
+#[derive(Debug)]
+struct SlowBackend {
+    delay: Duration,
+    entered: Arc<AtomicUsize>,
+}
+
+impl SimBackend for SlowBackend {
+    fn name(&self) -> &'static str {
+        "slow"
+    }
+
+    fn fingerprint(&self) -> u64 {
+        0x510B_ACC4
+    }
+
+    fn simulate(
+        &self,
+        _slot: &mut WorkerSlot,
+        _cfg: &SpeedConfig,
+        layer: &ConvLayer,
+        p: Precision,
+        strategy: Strategy,
+    ) -> speed::Result<SimStats> {
+        self.entered.fetch_add(1, Ordering::SeqCst);
+        thread::sleep(self.delay);
+        Ok(synth_stats(layer, p, strategy))
+    }
+}
+
+/// Always errors — exercises the pending-abort path under concurrency.
+#[derive(Debug)]
+struct FailingBackend;
+
+impl SimBackend for FailingBackend {
+    fn name(&self) -> &'static str {
+        "failing"
+    }
+
+    fn fingerprint(&self) -> u64 {
+        0xFA11_FA11
+    }
+
+    fn simulate(
+        &self,
+        _slot: &mut WorkerSlot,
+        _cfg: &SpeedConfig,
+        _layer: &ConvLayer,
+        _p: Precision,
+        _strategy: Strategy,
+    ) -> speed::Result<SimStats> {
+        Err(speed::Error::sim("injected backend failure"))
+    }
+}
+
+fn one_layer_spec(cfg: &SpeedConfig, backend: Arc<dyn SimBackend>) -> SweepSpec {
+    SweepSpec::new(cfg.clone())
+        .network("t", vec![ConvLayer::new("c3", 8, 8, 8, 8, 3, 1, 1)])
+        .precisions(vec![Precision::Int8])
+        .strategies(vec![Strategy::FeatureFirst])
+        .backends(vec![backend])
+        .threads(1)
+}
+
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + DEADLINE;
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        thread::sleep(Duration::from_millis(5));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine-level concurrency
+// ---------------------------------------------------------------------------
+
+#[test]
+fn concurrent_identical_cold_runs_coalesce_onto_one_simulation() {
+    const N: usize = 8;
+    let entered = Arc::new(AtomicUsize::new(0));
+    let release = Arc::new(AtomicBool::new(false));
+    let backend: Arc<dyn SimBackend> = Arc::new(GatedBackend {
+        entered: Arc::clone(&entered),
+        release: Arc::clone(&release),
+    });
+    let cfg = SpeedConfig::default();
+    let spec = Arc::new(one_layer_spec(&cfg, backend));
+    let engine = Arc::new(SweepEngine::new());
+
+    let barrier = Arc::new(Barrier::new(N));
+    let mut runners = Vec::new();
+    for _ in 0..N {
+        let engine = Arc::clone(&engine);
+        let spec = Arc::clone(&spec);
+        let barrier = Arc::clone(&barrier);
+        runners.push(thread::spawn(move || {
+            barrier.wait();
+            engine.run(&spec).expect("coalesced run")
+        }));
+    }
+
+    // Exactly one thread claims the cell and blocks inside `simulate`;
+    // the grace period lets the rest plan and park on the pending
+    // entry before the owner is allowed to publish.
+    wait_until("first simulate entry", || entered.load(Ordering::SeqCst) >= 1);
+    thread::sleep(Duration::from_millis(100));
+    release.store(true, Ordering::SeqCst);
+
+    let outcomes: Vec<SweepOutcome> =
+        runners.into_iter().map(|h| h.join().expect("runner thread")).collect();
+
+    // The invariants below hold under ANY interleaving: one real
+    // simulation total, and every other run got the value either by
+    // coalescing onto the in-flight cell or from the cache afterwards.
+    assert_eq!(entered.load(Ordering::SeqCst), 1, "backend must run exactly once");
+    let sims: usize = outcomes.iter().map(|o| o.executed_sims).sum();
+    let coalesced: usize = outcomes.iter().map(|o| o.coalesced_hits).sum();
+    let cached: usize = outcomes.iter().map(|o| o.cache_hits).sum();
+    assert_eq!(sims, 1, "exactly one simulation across {N} identical cold requests");
+    assert_eq!(coalesced + cached, N - 1, "the other runs hit in-flight or cached");
+    // The gate held the owner open for 100ms after the others started,
+    // so at least one of them must have seen the pending cell.
+    assert!(coalesced >= 1, "expected cross-request coalescing, got {coalesced}");
+
+    // Bit-identical to a serial single-tenant run of the same spec.
+    let serial_backend: Arc<dyn SimBackend> = Arc::new(GatedBackend {
+        entered: Arc::new(AtomicUsize::new(0)),
+        release: Arc::new(AtomicBool::new(true)),
+    });
+    let serial = SweepEngine::new()
+        .run(&one_layer_spec(&cfg, serial_backend))
+        .expect("serial run");
+    for out in &outcomes {
+        assert_eq!(out.results, serial.results, "concurrent result must be bit-identical");
+        assert_eq!(out.jobs, serial.jobs);
+    }
+    assert_eq!(engine.pending_cells(), 0, "no pending cells may leak");
+}
+
+#[test]
+fn failing_backend_aborts_pending_so_waiters_error_instead_of_deadlocking() {
+    let cfg = SpeedConfig::default();
+    let spec = Arc::new(one_layer_spec(&cfg, Arc::new(FailingBackend)));
+    let engine = Arc::new(SweepEngine::new());
+
+    let barrier = Arc::new(Barrier::new(2));
+    let mut runners = Vec::new();
+    for _ in 0..2 {
+        let engine = Arc::clone(&engine);
+        let spec = Arc::clone(&spec);
+        let barrier = Arc::clone(&barrier);
+        runners.push(thread::spawn(move || {
+            barrier.wait();
+            engine.run(&spec)
+        }));
+    }
+    for h in runners {
+        let res = h.join().expect("runner thread must not deadlock or panic");
+        assert!(res.is_err(), "a failing backend must surface an error");
+    }
+    // The aborted pending cell is fully cleaned up: nothing cached,
+    // nothing in flight, and the engine still works afterwards.
+    assert_eq!(engine.pending_cells(), 0);
+    assert_eq!(engine.cached_sims(), 0);
+    assert!(engine.run(&spec).is_err(), "engine stays usable (and still errors)");
+}
+
+#[test]
+fn high_priority_request_overtakes_a_long_low_priority_sweep() {
+    let entered = Arc::new(AtomicUsize::new(0));
+    let backend: Arc<dyn SimBackend> = Arc::new(SlowBackend {
+        delay: Duration::from_millis(30),
+        entered: Arc::clone(&entered),
+    });
+    let cfg = SpeedConfig::default();
+
+    // One simulation permit engine-wide: every cell of every request
+    // funnels through the priority gate one at a time.
+    let mut engine = SweepEngine::new();
+    engine.set_worker_budget(Some(1));
+    let engine = Arc::new(engine);
+
+    // Ten distinct shapes = ten serialized 30ms cells for the big sweep.
+    let big_layers: Vec<ConvLayer> = (0..10)
+        .map(|i| ConvLayer::new(&format!("big{i}"), 8, 8 + i, 8, 8, 3, 1, 1))
+        .collect();
+    let big = SweepSpec::new(cfg.clone())
+        .network("big", big_layers)
+        .precisions(vec![Precision::Int8])
+        .strategies(vec![Strategy::FeatureFirst])
+        .backends(vec![Arc::clone(&backend)])
+        .threads(1)
+        .priority(0);
+    let small = SweepSpec::new(cfg.clone())
+        .network("small", vec![ConvLayer::new("sm", 8, 64, 8, 8, 1, 1, 0)])
+        .precisions(vec![Precision::Int8])
+        .strategies(vec![Strategy::FeatureFirst])
+        .backends(vec![Arc::clone(&backend)])
+        .threads(1)
+        .priority(9);
+
+    let order: Arc<Mutex<Vec<&'static str>>> = Arc::new(Mutex::new(Vec::new()));
+    let big_thread = {
+        let engine = Arc::clone(&engine);
+        let order = Arc::clone(&order);
+        thread::spawn(move || {
+            let out = engine.run(&big).expect("big sweep");
+            order.lock().unwrap().push("big");
+            out
+        })
+    };
+    // Only submit the small request once the big sweep is visibly
+    // mid-flight, so "small finishes first" can only come from the
+    // priority gate, not from lucky scheduling.
+    wait_until("big sweep underway", || entered.load(Ordering::SeqCst) >= 1);
+    let small_thread = {
+        let engine = Arc::clone(&engine);
+        let order = Arc::clone(&order);
+        thread::spawn(move || {
+            let out = engine.run(&small).expect("small sweep");
+            order.lock().unwrap().push("small");
+            out
+        })
+    };
+
+    let small_out = small_thread.join().expect("small thread");
+    let big_out = big_thread.join().expect("big thread");
+    let order = order.lock().unwrap();
+    assert_eq!(
+        *order,
+        ["small", "big"],
+        "priority 9 request must complete before the 10-cell priority-0 sweep"
+    );
+    assert_eq!(small_out.executed_sims, 1);
+    assert_eq!(big_out.executed_sims, 10);
+    assert_eq!(entered.load(Ordering::SeqCst), 11);
+}
+
+// ---------------------------------------------------------------------------
+// Serve-level (protocol) concurrency
+// ---------------------------------------------------------------------------
+
+/// A tiny cold sweep request: one small SqueezeNet layer, int8, FF.
+fn tiny_request(id: u64) -> Request {
+    Request {
+        id,
+        network: "SqueezeNet".into(),
+        layers: Some(vec![1]),
+        precisions: vec![Precision::Int8],
+        strategies: vec![Strategy::FeatureFirst],
+        threads: Some(1),
+        ..Default::default()
+    }
+}
+
+fn unlimited() -> ServeLimits {
+    ServeLimits { max_connections: 0, max_concurrent_sweeps: 0, idle_timeout_secs: 0 }
+}
+
+fn serve_session(shared: &ServeShared, input: &str) -> (Vec<String>, serve::ServeStats) {
+    let mut out: Vec<u8> = Vec::new();
+    let stats = serve::serve_lines(shared, BufReader::new(input.as_bytes()), &mut out);
+    let text = String::from_utf8(out).expect("utf-8 reply stream");
+    (text.lines().map(String::from).collect(), stats)
+}
+
+fn field_u64(line: &str, key: &str) -> u64 {
+    for (k, v) in serve::parse_record(line).expect("reply line parses") {
+        if k == key {
+            match v {
+                Value::Int(n) => return n,
+                other => panic!("field `{key}` is {other:?}, wanted int, in {line}"),
+            }
+        }
+    }
+    panic!("missing field `{key}` in {line}");
+}
+
+fn field_str(line: &str, key: &str) -> String {
+    for (k, v) in serve::parse_record(line).expect("reply line parses") {
+        if k == key {
+            match v {
+                Value::Str(s) => return s,
+                other => panic!("field `{key}` is {other:?}, wanted string, in {line}"),
+            }
+        }
+    }
+    panic!("missing field `{key}` in {line}");
+}
+
+#[test]
+fn concurrent_serve_sessions_share_one_simulation_across_the_fleet() {
+    const N: usize = 16;
+    let shared = Arc::new(ServeShared::new(
+        Arc::new(SweepEngine::new()),
+        SpeedConfig::default(),
+        unlimited(),
+    ));
+    let input = format!("{}\n", tiny_request(1).to_line());
+
+    let barrier = Arc::new(Barrier::new(N));
+    let mut sessions = Vec::new();
+    for _ in 0..N {
+        let shared = Arc::clone(&shared);
+        let input = input.clone();
+        let barrier = Arc::clone(&barrier);
+        sessions.push(thread::spawn(move || {
+            barrier.wait();
+            serve_session(&shared, &input)
+        }));
+    }
+    let replies: Vec<(Vec<String>, serve::ServeStats)> =
+        sessions.into_iter().map(|h| h.join().expect("session thread")).collect();
+
+    let mut sims = 0;
+    let mut coalesced = 0;
+    let mut cached = 0;
+    for (lines, stats) in &replies {
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.errors, 0);
+        assert_eq!(lines.len(), 2, "block + summary, got {lines:?}");
+        assert!(lines[0].contains("\"type\":\"block\""), "{}", lines[0]);
+        assert!(lines[1].contains("\"type\":\"summary\""), "{}", lines[1]);
+        sims += field_u64(&lines[1], "sims");
+        coalesced += field_u64(&lines[1], "coalesced");
+        cached += field_u64(&lines[1], "cache_hits");
+    }
+    assert_eq!(sims, 1, "one simulation total across {N} concurrent sessions");
+    assert_eq!(coalesced + cached, (N as u64) - 1);
+
+    // Every session saw the identical block line, and it matches a
+    // fresh single-tenant server answering the same request.
+    let (serial_lines, _) = serve_session(
+        &ServeShared::new(Arc::new(SweepEngine::new()), SpeedConfig::default(), unlimited()),
+        &input,
+    );
+    for (lines, _) in &replies {
+        assert_eq!(lines[0], serial_lines[0], "blocks must be bit-identical to serial");
+    }
+}
+
+#[test]
+fn sweep_admission_limit_answers_overload_and_recovers() {
+    let shared = Arc::new(ServeShared::new(
+        Arc::new(SweepEngine::new()),
+        SpeedConfig::default(),
+        ServeLimits { max_concurrent_sweeps: 1, ..unlimited() },
+    ));
+
+    // Session A: a multi-cell grid (2 layers × 2 precisions, mixed
+    // strategy) — long enough that B's admission check below runs
+    // strictly inside it (we poll for admission before sending B).
+    let big = Request {
+        id: 1,
+        network: "SqueezeNet".into(),
+        layers: Some(vec![1, 2]),
+        precisions: vec![Precision::Int8, Precision::Int4],
+        threads: Some(2),
+        ..Default::default()
+    };
+    let a = {
+        let shared = Arc::clone(&shared);
+        let input = format!("{}\n", big.to_line());
+        thread::spawn(move || serve_session(&shared, &input))
+    };
+    wait_until("big sweep admitted", || shared.active_sweeps() == 1);
+
+    // Session B is refused immediately with a structured overload
+    // error — it never queues and never touches the engine.
+    let (b_lines, b_stats) = serve_session(&shared, &format!("{}\n", tiny_request(2).to_line()));
+    assert_eq!(b_lines.len(), 1, "one refusal line, got {b_lines:?}");
+    assert_eq!(field_str(&b_lines[0], "type"), "error");
+    assert_eq!(field_str(&b_lines[0], "code"), "overload");
+    assert_eq!(field_u64(&b_lines[0], "id"), 2);
+    assert_eq!(b_stats.errors, 1);
+    assert_eq!(b_stats.overloads, 1);
+
+    let (a_lines, a_stats) = a.join().expect("session A");
+    assert_eq!(a_stats.overloads, 0);
+    assert!(a_lines.last().expect("reply").contains("\"type\":\"summary\""));
+
+    // The permit was released: the same request now succeeds, and the
+    // shared engine makes it pure cache.
+    assert_eq!(shared.active_sweeps(), 0);
+    let (c_lines, c_stats) = serve_session(&shared, &format!("{}\n", big.to_line()));
+    assert_eq!(c_stats.overloads, 0);
+    let summary = c_lines.last().expect("summary");
+    assert_eq!(field_u64(summary, "sims"), 0, "warm repeat must be pure cache: {summary}");
+}
+
+// ---------------------------------------------------------------------------
+// TCP accept loop
+// ---------------------------------------------------------------------------
+
+fn send_line(stream: &mut TcpStream, line: &str) {
+    stream.write_all(line.as_bytes()).expect("send line");
+    stream.write_all(b"\n").expect("send newline");
+    stream.flush().expect("flush");
+}
+
+fn read_reply(stream: &TcpStream) -> String {
+    let mut reader = BufReader::new(stream.try_clone().expect("clone for read"));
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("read reply");
+    line.trim_end().to_string()
+}
+
+/// One ping round-trip; `None` on any refusal or socket error (the
+/// caller retries). The generous read timeout only bounds a wedged
+/// server — a live one answers in microseconds.
+fn try_ping(addr: std::net::SocketAddr, id: u64) -> Option<String> {
+    let mut c = TcpStream::connect(addr).ok()?;
+    c.set_read_timeout(Some(Duration::from_secs(10))).ok()?;
+    let line = Request { id, op: Op::Ping, ..Default::default() }.to_line();
+    c.write_all(line.as_bytes()).ok()?;
+    c.write_all(b"\n").ok()?;
+    c.flush().ok()?;
+    let mut reply = String::new();
+    BufReader::new(c).read_line(&mut reply).ok()?;
+    let reply = reply.trim_end().to_string();
+    reply.contains("\"type\":\"pong\"").then_some(reply)
+}
+
+fn spawn_tcp(
+    shared: &Arc<ServeShared>,
+    listener: TcpListener,
+    shutdown: &Arc<AtomicBool>,
+) -> thread::JoinHandle<serve::TcpReport> {
+    let shared = Arc::clone(shared);
+    let shutdown = Arc::clone(shutdown);
+    thread::spawn(move || serve::run_tcp(&shared, listener, None, &shutdown).expect("run_tcp"))
+}
+
+#[test]
+fn tcp_connection_cap_idle_timeout_and_flag_shutdown() {
+    let shared = Arc::new(ServeShared::new(
+        Arc::new(SweepEngine::new()),
+        SpeedConfig::default(),
+        ServeLimits { max_connections: 1, max_concurrent_sweeps: 0, idle_timeout_secs: 1 },
+    ));
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("local addr");
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let server = spawn_tcp(&shared, listener, &shutdown);
+
+    // Connection 1 takes the only slot and goes idle.
+    let idle = TcpStream::connect(addr).expect("idle client connects");
+
+    // Connection 2 is over the cap: refused at accept with a
+    // structured overload error, then closed.
+    let over = TcpStream::connect(addr).expect("overflow client connects");
+    let refusal = read_reply(&over);
+    assert_eq!(field_str(&refusal, "type"), "error", "{refusal}");
+    assert_eq!(field_str(&refusal, "code"), "overload", "{refusal}");
+
+    // The idle session dies on the 1s read timeout, freeing the slot;
+    // a fresh client then gets served. Attempts that race the reaper
+    // are refused (overload line or a reset, depending on how far the
+    // client's write got before the server closed) — just retry.
+    let deadline = Instant::now() + DEADLINE;
+    let pong = loop {
+        assert!(Instant::now() < deadline, "slot never freed after idle timeout");
+        if let Some(reply) = try_ping(addr, 3) {
+            break reply;
+        }
+        thread::sleep(Duration::from_millis(100));
+    };
+    assert_eq!(field_u64(&pong, "id"), 3);
+    drop(idle);
+
+    // External-flag shutdown: the nonblocking accept loop notices the
+    // flag on its next poll — no wake-up connection required.
+    shutdown.store(true, Ordering::SeqCst);
+    let report = server.join().expect("server thread");
+    assert!(report.connections >= 2, "idle + served client at least: {report:?}");
+    assert!(report.rejected >= 1, "the over-cap client was refused: {report:?}");
+    assert_eq!(report.panicked_sessions, 0, "{report:?}");
+}
+
+#[test]
+fn tcp_shutdown_request_ends_the_accept_loop_deterministically() {
+    let shared = Arc::new(ServeShared::new(
+        Arc::new(SweepEngine::new()),
+        SpeedConfig::default(),
+        ServeLimits::default(),
+    ));
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("local addr");
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let server = spawn_tcp(&shared, listener, &shutdown);
+
+    let mut client = TcpStream::connect(addr).expect("client connects");
+    send_line(&mut client, &Request { id: 9, op: Op::Shutdown, ..Default::default() }.to_line());
+    let bye = read_reply(&client);
+    assert!(bye.contains("\"type\":\"bye\""), "{bye}");
+
+    // The session flips the flag; the accept loop exits on its own and
+    // every session thread is joined into the report.
+    let report = server.join().expect("server thread");
+    assert!(shutdown.load(Ordering::SeqCst));
+    assert_eq!(report.connections, 1, "{report:?}");
+    assert_eq!(report.panicked_sessions, 0, "{report:?}");
+}

@@ -114,7 +114,7 @@ fn cache_hits_never_change_cycles_or_gops() {
             .precisions(vec![p])
             .strategies(vec![s])
             .threads(1);
-        let mut engine = SweepEngine::new();
+        let engine = SweepEngine::new();
         let cold = engine.run(&spec).map_err(|e| e.to_string())?;
         let fresh = simulate_layer(&cfg, &layer, p, s).map_err(|e| e.to_string())?;
         let (a, b) = (&cold.results[0], &cold.results[1]);
