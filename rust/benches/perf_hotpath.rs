@@ -144,6 +144,7 @@ fn main() {
     sweep_throughput(&cfg, smoke);
     shard_critical_path(&cfg, smoke);
     fastforward_steady_state(&cfg, smoke);
+    delta_replay(&cfg, smoke);
 }
 
 /// §Perf: batch-sweep engine throughput on the paper's four-network grid
@@ -380,4 +381,119 @@ fn fastforward_steady_state(cfg: &SpeedConfig, smoke: bool) {
         fast.slowest_job_secs,
     );
     emit_bench_json("SPEED_BENCH_FF_JSON", "BENCH_fastforward.json", smoke, &json);
+}
+
+/// §Perf: the converged-delta cache vs full per-region convergence —
+/// the same cold grid with the delta cache off, on (cold: publishes),
+/// warm repeated on the same engine (replays: one verification
+/// iteration per region instead of full convergence) and replayed on a
+/// fresh engine from the persisted cache bytes. Bit-identical results
+/// asserted across all four runs; the "stepped fewer instructions"
+/// claim is asserted on telemetry (`fast_forwarded_instrs` strictly
+/// grows on the warm pass), never on wall-clock. Wall-clocks and hit
+/// counters land in `BENCH_delta.json` (override the path with
+/// `SPEED_BENCH_DELTA_JSON`). Full mode sweeps cold VGG16 at
+/// int8/Mixed; smoke mode swaps in the dominant conv3x3 layer.
+/// Memoization is off so every run really simulates every cell.
+fn delta_replay(cfg: &SpeedConfig, smoke: bool) {
+    let (grid_name, layers): (&str, Vec<ConvLayer>) = if smoke {
+        ("conv3x3_56", vec![ConvLayer::new("r3", 64, 64, 56, 56, 3, 1, 1)])
+    } else {
+        let vgg = all_models().into_iter().find(|m| m.name == "VGG16").expect("VGG16 in zoo");
+        ("VGG16", vgg.layers)
+    };
+    println!("\n== delta cache: analytic region replay ({grid_name} @int8 Mixed) ==");
+    let spec_for = |delta: bool| {
+        SweepSpec::new(cfg.clone())
+            .network(grid_name, layers.clone())
+            .precisions(vec![Precision::Int8])
+            .memoize(false)
+            .delta_cache(delta)
+    };
+
+    let t0 = Instant::now();
+    let off = SweepEngine::new().run(&spec_for(false)).expect("delta-off sweep");
+    let dt_off = t0.elapsed().as_secs_f64();
+    println!(
+        "delta cache off  ({} threads)          {dt_off:>8.2}s  {} instrs skipped",
+        off.threads_used, off.fast_forwarded_instrs
+    );
+
+    let engine = SweepEngine::new();
+    let t1 = Instant::now();
+    let cold = engine.run(&spec_for(true)).expect("delta-on cold sweep");
+    let dt_cold = t1.elapsed().as_secs_f64();
+    println!(
+        "delta cache cold ({} threads)          {dt_cold:>8.2}s  {} deltas published",
+        cold.threads_used,
+        engine.cached_deltas()
+    );
+
+    let t2 = Instant::now();
+    let warm = engine.run(&spec_for(true)).expect("delta-on warm sweep");
+    let dt_warm = t2.elapsed().as_secs_f64();
+    println!(
+        "delta cache warm ({} threads)          {dt_warm:>8.2}s  {} replays / {} regions  ({:.2}x vs off)",
+        warm.threads_used,
+        warm.delta_cache_hits,
+        warm.replayed_regions,
+        dt_off / dt_warm.max(1e-9)
+    );
+
+    // Persisted replay: a fresh engine (≈ restarted server) loads the
+    // cache bytes and replays the deltas on its first, cold-looking run.
+    let bytes = engine.serialize_cache();
+    let fresh = SweepEngine::new();
+    fresh.load_cache_bytes(&bytes).expect("load persisted cache");
+    let t3 = Instant::now();
+    let persisted = fresh.run(&spec_for(true)).expect("persisted-delta sweep");
+    let dt_persist = t3.elapsed().as_secs_f64();
+    println!(
+        "delta cache persisted ({} threads)     {dt_persist:>8.2}s  {} replays",
+        persisted.threads_used, persisted.delta_cache_hits
+    );
+
+    // Acceptance: replay is execution-strategy only — bit-identical —
+    // and the warm pass provably steps fewer instructions (telemetry,
+    // not wall-clock: replay extrapolates after ONE verified iteration
+    // where convergence needs several).
+    assert_eq!(cold.results, off.results, "delta-on cold diverged from delta-off");
+    assert_eq!(warm.results, off.results, "delta replay diverged from delta-off");
+    assert_eq!(persisted.results, off.results, "persisted replay diverged from delta-off");
+    assert_eq!(off.delta_cache_hits, 0, "disabled cache must not hit");
+    assert!(warm.delta_cache_hits > 0, "warm pass must replay cached deltas");
+    assert!(persisted.delta_cache_hits > 0, "persisted deltas must replay after reload");
+    assert!(
+        warm.fast_forwarded_instrs > cold.fast_forwarded_instrs,
+        "replay must skip strictly more instructions than full convergence ({} vs {})",
+        warm.fast_forwarded_instrs,
+        cold.fast_forwarded_instrs
+    );
+    println!("[bench] delta replay bit-identical across off/cold/warm/persisted runs");
+
+    let json = format!(
+        concat!(
+            "{{\"bench\":\"delta\",\"mode\":\"{}\",\"network\":\"{}\",\"precision\":8,",
+            "\"strategy\":\"mixed\",\"threads\":{},\"off_secs\":{:.3},\"cold_secs\":{:.3},",
+            "\"warm_secs\":{:.3},\"persisted_secs\":{:.3},\"warm_speedup\":{:.3},",
+            "\"cached_deltas\":{},\"delta_hits_warm\":{},\"replayed_regions_warm\":{},",
+            "\"delta_hits_persisted\":{},\"ff_instrs_cold\":{},\"ff_instrs_warm\":{},",
+            "\"bit_identical\":true}}\n"
+        ),
+        if smoke { "smoke" } else { "full" },
+        grid_name,
+        warm.threads_used,
+        dt_off,
+        dt_cold,
+        dt_warm,
+        dt_persist,
+        dt_off / dt_warm.max(1e-9),
+        engine.cached_deltas(),
+        warm.delta_cache_hits,
+        warm.replayed_regions,
+        persisted.delta_cache_hits,
+        cold.fast_forwarded_instrs,
+        warm.fast_forwarded_instrs,
+    );
+    emit_bench_json("SPEED_BENCH_DELTA_JSON", "BENCH_delta.json", smoke, &json);
 }

@@ -30,7 +30,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::arch::{AraConfig, Precision, SpeedConfig};
 use crate::baseline::simulate_layer_ara;
-use crate::core::{ExecMode, Processor, SimStats};
+use crate::core::{CachedDelta, DeltaStore, ExecMode, Processor, SimStats};
 use crate::cost::roofline_gops;
 use crate::dataflow::{
     compile_conv, compile_conv_shard, extract_ofmap, pack_ifmap_image, pack_weight_image,
@@ -143,6 +143,11 @@ pub struct DecodedProgram {
     pub dram_bytes: usize,
     /// Nominal useful MACs of the (sub-)program.
     pub useful_macs: u64,
+    /// Structure fingerprint of the compiled program
+    /// ([`crate::isa::Program::structure_fingerprint`]) — the
+    /// program-identity half of every region's delta-cache key,
+    /// computed once at compile time.
+    pub structure_fp: u64,
 }
 
 /// Identity of one compiled program in the per-worker cache: the full
@@ -179,20 +184,25 @@ impl ProgramKey {
     }
 }
 
-/// Entries kept per [`ProgramCache`]: compiled conv programs are large
-/// (layer-sized instruction vectors), so the cache holds only the hot
-/// working set — enough for an FF/CF pair plus the neighbouring cell —
-/// and evicts least-recently-used beyond that.
-const PROGRAM_CACHE_CAP: usize = 4;
+/// Default entry cap per [`ProgramCache`]: compiled conv programs are
+/// large (layer-sized instruction vectors), so the cache holds only
+/// the hot working set — enough for an FF/CF pair plus the
+/// neighbouring cell — and evicts least-recently-used beyond that.
+/// Overridable per sweep via
+/// [`SweepSpec::program_cache_cap`](super::sweep::SweepSpec) /
+/// `--program-cache-cap`.
+pub const PROGRAM_CACHE_CAP: usize = 4;
 
-/// Byte budget per [`ProgramCache`] (decoded instruction streams). A
-/// sweep holds one cache per (backend × config) slot per worker
-/// thread, so the count bound alone would let a many-config ablation
-/// grid pin `workers × configs × 4` full decoded programs; the byte
-/// bound caps that worst case. The newest entry is always retained —
-/// a single oversized program still runs, it just evicts everything
-/// else.
-const PROGRAM_CACHE_MAX_BYTES: usize = 24 << 20;
+/// Default byte budget per [`ProgramCache`] (decoded instruction
+/// streams). A sweep holds one cache per (backend × config) slot per
+/// worker thread, so the count bound alone would let a many-config
+/// ablation grid pin `workers × configs × cap` full decoded programs;
+/// the byte bound caps that worst case. The newest entry is always
+/// retained — a single oversized program still runs, it just evicts
+/// everything else. Overridable per sweep via
+/// [`SweepSpec::program_cache_bytes`](super::sweep::SweepSpec) /
+/// `--program-cache-bytes`.
+pub const PROGRAM_CACHE_MAX_BYTES: usize = 24 << 20;
 
 /// Small per-worker LRU of pre-decoded programs: repeated cells inside
 /// one engine run stop paying codegen + word-by-word decode. With
@@ -201,11 +211,27 @@ const PROGRAM_CACHE_MAX_BYTES: usize = 24 << 20;
 /// engine's slot dedup already collapses identical cells, so the cache
 /// mainly serves direct [`SimBackend::simulate`] callers that reuse a
 /// [`WorkerSlot`] (the pools themselves are rebuilt per engine run).
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct ProgramCache {
     entries: Vec<(ProgramKey, Arc<DecodedProgram>)>,
     hits: u64,
     misses: u64,
+    /// Entry cap (≥ 1 effective; the newest entry is always retained).
+    cap: usize,
+    /// Byte budget over all retained decoded streams.
+    max_bytes: usize,
+}
+
+impl Default for ProgramCache {
+    fn default() -> Self {
+        ProgramCache {
+            entries: Vec::new(),
+            hits: 0,
+            misses: 0,
+            cap: PROGRAM_CACHE_CAP,
+            max_bytes: PROGRAM_CACHE_MAX_BYTES,
+        }
+    }
 }
 
 /// Resident bytes of one cached program (the decoded stream dominates).
@@ -234,9 +260,9 @@ impl ProgramCache {
         // Evict oldest-first down to both bounds, always keeping the
         // entry just inserted.
         while self.entries.len() > 1
-            && (self.entries.len() > PROGRAM_CACHE_CAP
+            && (self.entries.len() > self.cap
                 || self.entries.iter().map(|(_, p)| program_bytes(p)).sum::<usize>()
-                    > PROGRAM_CACHE_MAX_BYTES)
+                    > self.max_bytes)
         {
             self.entries.remove(0);
         }
@@ -253,9 +279,107 @@ impl ProgramCache {
         self.entries.is_empty()
     }
 
-    /// Lifetime (hits, misses) of this cache.
+    /// (hits, misses) since construction or the last
+    /// [`ProgramCache::reset_stats`].
     pub fn stats(&self) -> (u64, u64) {
         (self.hits, self.misses)
+    }
+
+    /// Zero the hit/miss counters (run-scoped telemetry on pooled
+    /// slots; the cached programs themselves are kept).
+    pub fn reset_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+    }
+
+    /// Set the entry cap and byte budget (both clamped to ≥ 1 byte /
+    /// ≥ 1 entry), evicting oldest-first immediately if the new bounds
+    /// are tighter than the current contents.
+    pub fn set_limits(&mut self, cap: usize, max_bytes: usize) {
+        self.cap = cap.max(1);
+        self.max_bytes = max_bytes.max(1);
+        while self.entries.len() > 1
+            && (self.entries.len() > self.cap
+                || self.entries.iter().map(|(_, p)| program_bytes(p)).sum::<usize>()
+                    > self.max_bytes)
+        {
+            self.entries.remove(0);
+        }
+    }
+
+    /// Current (entry cap, byte budget).
+    pub fn limits(&self) -> (usize, usize) {
+        (self.cap, self.max_bytes)
+    }
+}
+
+/// Cap on distinct region keys held by a [`DeltaCache`]. Each entry is
+/// a few hundred bytes (one full timing-state delta), so the cap
+/// bounds the cache around tens of MiB; once full, *new* keys are
+/// dropped (existing keys still republish) — replay is an
+/// optimization, never a correctness dependency.
+const DELTA_CACHE_CAP: usize = 65_536;
+
+/// Engine-wide converged-delta cache: region-keyed
+/// [`CachedDelta`]s shared by every worker slot of a sweep engine (and
+/// thus across threads, requests and — via the persist layer — process
+/// restarts). Keys come from
+/// [`Region::fingerprint`](crate::isa::Region::fingerprint) chained
+/// off the program-level base fingerprint built in
+/// [`SpeedCycle::run_cached`] (program structure × config × precision
+/// × strategy), so two cells that could converge to different deltas
+/// can never alias. Internally synchronized; lock-scoped operations
+/// only (no I/O or simulation under the lock).
+#[derive(Debug, Default)]
+pub struct DeltaCache {
+    inner: Mutex<HashMap<u64, Arc<CachedDelta>>>,
+}
+
+impl DeltaCache {
+    /// Entries currently cached.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// All entries, sorted by key — the deterministic order the persist
+    /// layer serializes.
+    pub fn entries(&self) -> Vec<(u64, CachedDelta)> {
+        let m = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let mut out: Vec<(u64, CachedDelta)> =
+            m.iter().map(|(k, v)| (*k, (**v).clone())).collect();
+        out.sort_by_key(|(k, _)| *k);
+        out
+    }
+
+    /// Bulk-insert entries (cache warm-up from a persisted file),
+    /// respecting the entry cap. Existing keys are overwritten.
+    pub fn merge(&self, entries: impl IntoIterator<Item = (u64, CachedDelta)>) {
+        let mut m = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        for (k, d) in entries {
+            if m.len() >= DELTA_CACHE_CAP && !m.contains_key(&k) {
+                break;
+            }
+            m.insert(k, Arc::new(d));
+        }
+    }
+}
+
+impl DeltaStore for DeltaCache {
+    fn get(&self, key: u64) -> Option<Arc<CachedDelta>> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).get(&key).cloned()
+    }
+
+    fn put(&self, key: u64, delta: CachedDelta) {
+        let mut m = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        if m.len() >= DELTA_CACHE_CAP && !m.contains_key(&key) {
+            return;
+        }
+        m.insert(key, Arc::new(delta));
     }
 }
 
@@ -279,6 +403,18 @@ pub struct WorkerSlot {
     /// (telemetry; summed into
     /// [`SweepOutcome::fast_forwarded_instrs`](super::sweep::SweepOutcome::fast_forwarded_instrs)).
     pub fast_forwarded_instrs: u64,
+    /// Shared converged-delta cache (the engine's [`DeltaCache`], or
+    /// `None` when replay is disabled for the run). Scheduling-only:
+    /// results are bit-identical either way (verify-first protocol).
+    pub delta_store: Option<Arc<dyn DeltaStore>>,
+    /// Regions whose extrapolation fired off a verified cached delta
+    /// across this slot's runs (telemetry; summed into
+    /// `SweepOutcome::delta_cache_hits`).
+    pub delta_cache_hits: u64,
+    /// Regions replayed purely analytically — cached delta verified on
+    /// the first stepped iteration (telemetry; summed into
+    /// `SweepOutcome::replayed_regions`).
+    pub replayed_regions: u64,
 }
 
 impl Default for WorkerSlot {
@@ -288,6 +424,9 @@ impl Default for WorkerSlot {
             programs: ProgramCache::default(),
             fast_forward: true,
             fast_forwarded_instrs: 0,
+            delta_store: None,
+            delta_cache_hits: 0,
+            replayed_regions: 0,
         }
     }
 }
@@ -297,6 +436,33 @@ impl Default for WorkerSlot {
 /// processors and pre-decoded programs), so dropping one only costs a
 /// rebuild on some later checkout.
 const SLOT_POOL_CAP: usize = 64;
+
+/// Run-scoped options applied to every [`WorkerSlot`] at
+/// [`SlotPool::check_out`]: how the sweep spec (plus engine overrides)
+/// reaches the per-worker execution state. All scheduling-only —
+/// results are bit-identical under any combination.
+#[derive(Debug, Clone)]
+pub struct SlotOptions {
+    /// Loop-aware fast-forward enable (default on).
+    pub fast_forward: bool,
+    /// Shared converged-delta cache, `None` = replay disabled.
+    pub delta_store: Option<Arc<dyn DeltaStore>>,
+    /// Program-cache entry cap override (`None` = default).
+    pub program_cache_cap: Option<usize>,
+    /// Program-cache byte budget override (`None` = default).
+    pub program_cache_bytes: Option<usize>,
+}
+
+impl Default for SlotOptions {
+    fn default() -> Self {
+        SlotOptions {
+            fast_forward: true,
+            delta_store: None,
+            program_cache_cap: None,
+            program_cache_bytes: None,
+        }
+    }
+}
 
 /// Bounded hand-off pool of [`WorkerSlot`]s, keyed by (backend
 /// fingerprint, config fingerprint). Sweep workers check slots out at
@@ -322,10 +488,11 @@ struct SlotPoolState {
 
 impl SlotPool {
     /// Take a parked slot for this (backend, config) pair, or a fresh
-    /// one. The returned slot always carries the caller's fast-forward
-    /// mode and a zeroed telemetry counter — run-scoped state never
-    /// leaks across requests.
-    pub fn check_out(&self, backend_fp: u64, cfg_fp: u64, fast_forward: bool) -> WorkerSlot {
+    /// one. The returned slot always carries the caller's run options
+    /// (fast-forward mode, delta store, program-cache limits) and
+    /// zeroed telemetry counters — run-scoped state never leaks across
+    /// requests.
+    pub fn check_out(&self, backend_fp: u64, cfg_fp: u64, opts: &SlotOptions) -> WorkerSlot {
         let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
         let parked = st.by_key.get_mut(&(backend_fp, cfg_fp)).and_then(Vec::pop);
         let mut slot = match parked {
@@ -335,8 +502,16 @@ impl SlotPool {
             }
             None => WorkerSlot::default(),
         };
-        slot.fast_forward = fast_forward;
+        slot.fast_forward = opts.fast_forward;
         slot.fast_forwarded_instrs = 0;
+        slot.delta_store = opts.delta_store.clone();
+        slot.delta_cache_hits = 0;
+        slot.replayed_regions = 0;
+        slot.programs.set_limits(
+            opts.program_cache_cap.unwrap_or(PROGRAM_CACHE_CAP),
+            opts.program_cache_bytes.unwrap_or(PROGRAM_CACHE_MAX_BYTES),
+        );
+        slot.programs.reset_stats();
         slot
     }
 
@@ -550,16 +725,41 @@ impl SpeedCycle {
                 regions: cc.program.regions().to_vec(),
                 dram_bytes: cc.dram_bytes,
                 useful_macs: cc.useful_macs,
+                structure_fp: cc.program.structure_fingerprint(),
             })
         })?;
         let fast_forward = slot.fast_forward;
+        let delta_store = slot.delta_store.clone();
+        // Program-level half of the delta-cache key. The program
+        // structure fingerprint already commits to the exact
+        // instruction words and region geometry (so two shards with
+        // identical programs *may* share — correct, since timing is a
+        // pure function of the program); config/precision/strategy are
+        // folded in so cells that compile to the same words under
+        // different machines can never alias.
+        let delta_base_fp = {
+            let mut h = fp_u64(FP_SEED, prog.structure_fp);
+            h = fp_u64(h, config_fingerprint(cfg));
+            h = fp_u64(h, p.bits() as u64);
+            h = fp_str(
+                h,
+                match strategy {
+                    Strategy::FeatureFirst => "ff",
+                    Strategy::ChannelFirst => "cf",
+                    Strategy::Mixed => "mixed",
+                },
+            );
+            h
+        };
         let proc = slot.processor_for(cfg, prog.dram_bytes, ExecMode::Timing)?;
         proc.set_fast_forward(fast_forward);
+        proc.set_delta_store(delta_store, delta_base_fp);
         proc.run_decoded(&prog.instrs, &prog.regions)?;
         proc.set_useful_macs(prog.useful_macs);
         let stats = proc.stats().clone();
-        let skipped = proc.fast_forwarded_instrs();
-        slot.fast_forwarded_instrs += skipped;
+        slot.fast_forwarded_instrs += proc.fast_forwarded_instrs();
+        slot.delta_cache_hits += proc.delta_cache_hits();
+        slot.replayed_regions += proc.replayed_regions();
         Ok(stats)
     }
 }
@@ -1085,6 +1285,105 @@ mod tests {
         }
         assert!(on.fast_forwarded_instrs > 0, "steady layer must fast-forward");
         assert_eq!(off.fast_forwarded_instrs, 0);
+    }
+
+    #[test]
+    fn delta_cache_shares_converged_deltas_across_slots() {
+        let cfg = SpeedConfig::default();
+        let layer = ConvLayer::new("t", 16, 32, 40, 40, 3, 1, 1);
+        let cache = Arc::new(DeltaCache::default());
+        let mut cold_slot =
+            WorkerSlot { delta_store: Some(cache.clone()), ..WorkerSlot::default() };
+        let cold = SpeedCycle
+            .simulate(&mut cold_slot, &cfg, &layer, Precision::Int8, Strategy::FeatureFirst)
+            .unwrap();
+        assert!(!cache.is_empty(), "converged deltas must be published");
+        assert_eq!(cold_slot.delta_cache_hits, 0, "empty cache cannot hit");
+
+        // A different slot (different worker / later request) replays
+        // off the shared cache: bit-identical, strictly fewer stepped
+        // instructions.
+        let mut warm_slot =
+            WorkerSlot { delta_store: Some(cache.clone()), ..WorkerSlot::default() };
+        let warm = SpeedCycle
+            .simulate(&mut warm_slot, &cfg, &layer, Precision::Int8, Strategy::FeatureFirst)
+            .unwrap();
+        assert_eq!(cold, warm, "delta replay must be bit-identical");
+        assert!(warm_slot.delta_cache_hits > 0, "warm run must replay cached deltas");
+        assert!(warm_slot.replayed_regions <= warm_slot.delta_cache_hits);
+        assert!(
+            warm_slot.fast_forwarded_instrs > cold_slot.fast_forwarded_instrs,
+            "warm replay must step fewer instructions: {} !> {}",
+            warm_slot.fast_forwarded_instrs,
+            cold_slot.fast_forwarded_instrs
+        );
+
+        // Delta cache off (no store): same numbers, no telemetry.
+        let mut off_slot = WorkerSlot::default();
+        let off = SpeedCycle
+            .simulate(&mut off_slot, &cfg, &layer, Precision::Int8, Strategy::FeatureFirst)
+            .unwrap();
+        assert_eq!(off, cold);
+        assert_eq!(off_slot.delta_cache_hits, 0);
+
+        // A config differing only in `store_drain_cycles` must not
+        // share deltas (fingerprint isolation at the backend level).
+        let drain_cfg = SpeedConfig { store_drain_cycles: 7, ..SpeedConfig::default() };
+        let before = cache.len();
+        let mut iso_slot =
+            WorkerSlot { delta_store: Some(cache.clone()), ..WorkerSlot::default() };
+        SpeedCycle
+            .simulate(&mut iso_slot, &drain_cfg, &layer, Precision::Int8, Strategy::FeatureFirst)
+            .unwrap();
+        assert_eq!(iso_slot.delta_cache_hits, 0, "distinct config must not hit");
+        assert!(cache.len() > before, "distinct config publishes under its own keys");
+    }
+
+    #[test]
+    fn program_cache_limits_are_configurable() {
+        let cfg = SpeedConfig::default();
+        let mut slot = WorkerSlot::default();
+        assert_eq!(slot.programs.limits(), (PROGRAM_CACHE_CAP, PROGRAM_CACHE_MAX_BYTES));
+        // cap=1: each new program evicts the previous one.
+        slot.programs.set_limits(1, usize::MAX);
+        for (i, p) in [Precision::Int8, Precision::Int16, Precision::Int4].iter().enumerate() {
+            let layer = ConvLayer::new("t", 8, 8, 8, 8, 3, 1, 1);
+            SpeedCycle.simulate(&mut slot, &cfg, &layer, *p, Strategy::FeatureFirst).unwrap();
+            assert_eq!(slot.programs.len(), 1, "cap=1 must hold after program {i}");
+        }
+        // Tightening evicts immediately; zero clamps to one entry.
+        slot.programs.set_limits(0, 0);
+        assert_eq!(slot.programs.len(), 1, "newest entry is always retained");
+        assert_eq!(slot.programs.limits(), (1, 1));
+    }
+
+    #[test]
+    fn slot_pool_checkout_applies_options() {
+        let pool = SlotPool::default();
+        let cache: Arc<dyn DeltaStore> = Arc::new(DeltaCache::default());
+        let opts = SlotOptions {
+            fast_forward: false,
+            delta_store: Some(cache),
+            program_cache_cap: Some(2),
+            program_cache_bytes: Some(1 << 20),
+        };
+        let mut slot = pool.check_out(1, 2, &opts);
+        assert!(!slot.fast_forward);
+        assert!(slot.delta_store.is_some());
+        assert_eq!(slot.programs.limits(), (2, 1 << 20));
+        // Dirty the telemetry, park, and check out again with defaults:
+        // counters zero, options revert, cached state survives.
+        slot.fast_forwarded_instrs = 99;
+        slot.delta_cache_hits = 7;
+        slot.replayed_regions = 3;
+        pool.check_in(1, 2, slot);
+        let slot = pool.check_out(1, 2, &SlotOptions::default());
+        assert!(slot.fast_forward);
+        assert!(slot.delta_store.is_none());
+        assert_eq!(slot.fast_forwarded_instrs, 0);
+        assert_eq!(slot.delta_cache_hits, 0);
+        assert_eq!(slot.replayed_regions, 0);
+        assert_eq!(slot.programs.limits(), (PROGRAM_CACHE_CAP, PROGRAM_CACHE_MAX_BYTES));
     }
 
     #[test]

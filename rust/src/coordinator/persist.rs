@@ -1,24 +1,31 @@
-//! On-disk persistence of the sweep engine's memo table.
+//! On-disk persistence of the sweep engine's memo table and
+//! converged-delta cache.
 //!
 //! A dependency-free, versioned binary format (the offline crate set has
 //! no serde): fixed-width little-endian fields, a magic tag, a format
 //! version and a trailing FNV-1a checksum over everything before it.
-//! Decoding is strict — wrong magic, unknown version, truncated input,
+//! Decoding is strict — wrong magic, unknown version (including v1
+//! files written before the delta section existed), truncated input,
 //! trailing garbage or a checksum mismatch all reject the whole file
 //! with an error (never a panic), so callers fall back to a cold cache.
 //!
-//! Layout:
+//! Layout (version 2):
 //!
 //! ```text
 //! magic    8 B   b"SPEEDSWC"
-//! version  4 B   u32 LE (currently 1)
-//! count    8 B   u64 LE, number of entries
+//! version  4 B   u32 LE (currently 2)
+//! count    8 B   u64 LE, number of memo entries
 //! entries  count × 226 B, sorted by encoded key bytes (deterministic)
 //!   key:   backend_fp u64 | cfg_fp u64 | shape 7×u64 | prec-bits u8 | cf u8
 //!   stats: cycles, macs, useful_macs, dram_read, dram_write, vrf_read,
 //!          vrf_write, sau_busy, acc_busy, dram_busy, sa_fills,
 //!          operand_stall, instr {scalar, config, load, mac, partial,
 //!          store, alu} — 19×u64
+//! deltas   8 B   u64 LE, number of converged-delta records
+//! records  variable, keys strictly ascending (deterministic)
+//!   key u64 | word_count u64 | word_count × u64
+//!   (words are the [`CachedDelta`] wire form; see
+//!   [`CachedDelta::to_words`])
 //! footer   8 B   u64 LE FNV-1a checksum of all preceding bytes
 //! ```
 //!
@@ -26,16 +33,22 @@
 //! themselves: a cache written under one machine configuration simply
 //! never hits under another, and a fingerprint-scheme change (bumping a
 //! backend's `-vN` tag) invalidates old entries instead of aliasing
-//! them.
+//! them. Delta keys likewise fold the program structure, config,
+//! precision and strategy fingerprints, so a stale delta record can
+//! only miss — and even an aliased one is harmless, because replay
+//! verifies every cached delta against one stepped iteration before
+//! trusting it.
 
 use super::backend::{fp_bytes, FP_SEED};
 use super::sweep::{CachedSim, SimKey};
 use crate::arch::Precision;
-use crate::core::{InstrMix, SimStats};
+use crate::core::{CachedDelta, InstrMix, SimStats};
 use crate::error::{Error, Result};
 
 const MAGIC: &[u8; 8] = b"SPEEDSWC";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+/// Minimum bytes of one delta record (key + word count, zero words).
+const DELTA_RECORD_MIN_BYTES: usize = 16;
 const KEY_BYTES: usize = 8 + 8 + 7 * 8 + 1 + 1;
 const STATS_BYTES: usize = 19 * 8;
 const ENTRY_BYTES: usize = KEY_BYTES + STATS_BYTES;
@@ -86,9 +99,11 @@ fn encode_stats(out: &mut Vec<u8>, s: &SimStats) {
     }
 }
 
-/// Serialize a memo table. Deterministic: entries are sorted by their
-/// encoded key bytes, so identical caches produce identical files.
-pub(crate) fn encode<'a, I>(cache: I) -> Vec<u8>
+/// Serialize a memo table plus the converged-delta cache.
+/// Deterministic: memo entries are sorted by their encoded key bytes
+/// and delta records by key, so identical caches produce identical
+/// files.
+pub(crate) fn encode<'a, I>(cache: I, deltas: &[(u64, CachedDelta)]) -> Vec<u8>
 where
     I: Iterator<Item = (&'a SimKey, &'a CachedSim)>,
 {
@@ -101,6 +116,10 @@ where
         })
         .collect();
     entries.sort_unstable();
+    let mut records: Vec<(u64, Vec<u64>)> =
+        deltas.iter().map(|(k, d)| (*k, d.to_words())).collect();
+    records.sort_unstable_by_key(|(k, _)| *k);
+    records.dedup_by_key(|(k, _)| *k);
     let mut out = Vec::with_capacity(
         HEADER_BYTES + entries.len() * ENTRY_BYTES + FOOTER_BYTES,
     );
@@ -109,6 +128,14 @@ where
     put_u64(&mut out, entries.len() as u64);
     for e in entries {
         out.extend_from_slice(&e);
+    }
+    put_u64(&mut out, records.len() as u64);
+    for (key, words) in &records {
+        put_u64(&mut out, *key);
+        put_u64(&mut out, words.len() as u64);
+        for w in words {
+            put_u64(&mut out, *w);
+        }
     }
     let checksum = fp_bytes(FP_SEED, &out);
     put_u64(&mut out, checksum);
@@ -150,12 +177,16 @@ fn decode_precision(bits: u8) -> Result<Precision> {
     }
 }
 
-/// Parse a serialized memo table, in file (= sorted-key) order — the
-/// order matters to callers merging through a bounded LRU cache, where
-/// it decides deterministically which entries survive. Strict: any
-/// structural defect rejects the whole input with `Err` (callers keep
-/// their current cache).
-pub(crate) fn decode(bytes: &[u8]) -> Result<Vec<(SimKey, CachedSim)>> {
+/// Decoded cache file contents: (memo entries, delta records).
+pub(crate) type Decoded = (Vec<(SimKey, CachedSim)>, Vec<(u64, CachedDelta)>);
+
+/// Parse a serialized memo table plus delta cache, each in file
+/// (= sorted-key) order — the order matters to callers merging through
+/// a bounded LRU cache, where it decides deterministically which
+/// entries survive. Strict: any structural defect anywhere (including
+/// inside the delta section) rejects the whole input with `Err`
+/// (callers keep their current cache).
+pub(crate) fn decode(bytes: &[u8]) -> Result<Decoded> {
     if bytes.len() < HEADER_BYTES + FOOTER_BYTES {
         return Err(err("too short"));
     }
@@ -179,7 +210,7 @@ pub(crate) fn decode(bytes: &[u8]) -> Result<Vec<(SimKey, CachedSim)>> {
     let expect = count
         .checked_mul(ENTRY_BYTES)
         .ok_or_else(|| err("entry count overflows"))?;
-    if body.len() - r.pos != expect {
+    if body.len() - r.pos < expect {
         return Err(err("length does not match entry count"));
     }
     let mut out = Vec::with_capacity(count);
@@ -221,7 +252,44 @@ pub(crate) fn decode(bytes: &[u8]) -> Result<Vec<(SimKey, CachedSim)>> {
         };
         out.push((SimKey { backend_fp, cfg_fp, shape, prec, cf }, CachedSim { stats }));
     }
-    Ok(out)
+    let n_deltas = r.u64()? as usize;
+    let min_bytes = n_deltas
+        .checked_mul(DELTA_RECORD_MIN_BYTES)
+        .ok_or_else(|| err("delta count overflows"))?;
+    if min_bytes > body.len() - r.pos {
+        return Err(err("delta count exceeds file size"));
+    }
+    let mut deltas = Vec::with_capacity(n_deltas);
+    let mut prev_key: Option<u64> = None;
+    for _ in 0..n_deltas {
+        let key = r.u64()?;
+        // Strictly ascending keys make the encoding canonical (one
+        // byte stream per cache) and reject hand-spliced sections.
+        if let Some(p) = prev_key {
+            if p >= key {
+                return Err(err("delta keys not strictly ascending"));
+            }
+        }
+        prev_key = Some(key);
+        let n_words = r.u64()? as usize;
+        let word_bytes = n_words
+            .checked_mul(8)
+            .ok_or_else(|| err("delta record overflows"))?;
+        if word_bytes > body.len() - r.pos {
+            return Err(err("truncated delta record"));
+        }
+        let mut words = Vec::with_capacity(n_words);
+        for _ in 0..n_words {
+            words.push(r.u64()?);
+        }
+        let delta = CachedDelta::from_words(&words)
+            .ok_or_else(|| err("malformed delta record"))?;
+        deltas.push((key, delta));
+    }
+    if r.pos != body.len() {
+        return Err(err("trailing bytes after delta section"));
+    }
+    Ok((out, deltas))
 }
 
 #[cfg(test)]
@@ -255,25 +323,44 @@ mod tests {
         m
     }
 
+    /// Valid delta records built through the public wire form
+    /// (`CachedDelta` has no test constructor on purpose).
+    fn sample_deltas() -> Vec<(u64, CachedDelta)> {
+        vec![
+            // [n_times, times.., n_counters, counters.., flag, n_trace]
+            (0x10, CachedDelta::from_words(&[2, 5, 6, 1, 7, 1, 0]).unwrap()),
+            (0x20, CachedDelta::from_words(&[1, 9, 0, 0, 0]).unwrap()),
+            (0x30, CachedDelta::from_words(&[0, 2, 3, 4, 1, 0]).unwrap()),
+        ]
+    }
+
     #[test]
     fn round_trips_bit_exactly() {
         let m = sample();
-        let bytes = encode(m.iter());
-        let back: HashMap<SimKey, CachedSim> = decode(&bytes).unwrap().into_iter().collect();
+        let d = sample_deltas();
+        let bytes = encode(m.iter(), &d);
+        let (sims, deltas) = decode(&bytes).unwrap();
+        let back: HashMap<SimKey, CachedSim> = sims.into_iter().collect();
         assert_eq!(back, m);
+        assert_eq!(deltas, d);
     }
 
     #[test]
     fn encoding_is_deterministic() {
         let m = sample();
-        assert_eq!(encode(m.iter()), encode(m.iter()));
+        let d = sample_deltas();
+        assert_eq!(encode(m.iter(), &d), encode(m.iter(), &d));
+        // Delta input order must not matter either.
+        let mut rev = d.clone();
+        rev.reverse();
+        assert_eq!(encode(m.iter(), &d), encode(m.iter(), &rev));
     }
 
     #[test]
     fn decode_preserves_sorted_file_order() {
         // Bounded-merge determinism depends on decode yielding entries
         // in file order, which encode sorts by encoded key bytes.
-        let entries = decode(&encode(sample().iter())).unwrap();
+        let (entries, _) = decode(&encode(sample().iter(), &[])).unwrap();
         let keys: Vec<Vec<u8>> = entries
             .iter()
             .map(|(k, _)| {
@@ -290,13 +377,15 @@ mod tests {
     #[test]
     fn empty_cache_round_trips() {
         let m = HashMap::new();
-        let bytes = encode(m.iter());
-        assert_eq!(decode(&bytes).unwrap().len(), 0);
+        let bytes = encode(m.iter(), &[]);
+        let (sims, deltas) = decode(&bytes).unwrap();
+        assert_eq!(sims.len(), 0);
+        assert_eq!(deltas.len(), 0);
     }
 
     #[test]
     fn rejects_corruption() {
-        let bytes = encode(sample().iter());
+        let bytes = encode(sample().iter(), &sample_deltas());
         // truncation
         assert!(decode(&bytes[..bytes.len() - 1]).is_err());
         assert!(decode(&bytes[..HEADER_BYTES]).is_err());
@@ -329,5 +418,68 @@ mod tests {
         let sum = fp_bytes(FP_SEED, &bad[..n]);
         bad[n..].copy_from_slice(&sum.to_le_bytes());
         assert!(decode(&bad).is_err());
+    }
+
+    /// Recompute the footer so only the deliberate corruption is wrong.
+    fn refooter(mut bytes: Vec<u8>) -> Vec<u8> {
+        let n = bytes.len() - FOOTER_BYTES;
+        let sum = fp_bytes(FP_SEED, &bytes[..n]);
+        bytes[n..].copy_from_slice(&sum.to_le_bytes());
+        bytes
+    }
+
+    #[test]
+    fn rejects_v1_files_without_delta_section() {
+        // A v1 file is byte-identical up to the delta count; decoding
+        // must reject on the version tag, not misparse the tail.
+        let mut v1 = encode(sample().iter(), &[]);
+        v1[8..12].copy_from_slice(&1u32.to_le_bytes());
+        // Drop the (empty) delta count to mimic the true v1 layout.
+        let cut = v1.len() - FOOTER_BYTES - 8;
+        v1.truncate(cut);
+        let v1 = refooter({
+            let mut b = v1;
+            b.extend_from_slice(&[0u8; FOOTER_BYTES]);
+            b
+        });
+        let e = decode(&v1).unwrap_err().to_string();
+        assert!(e.contains("version"), "{e}");
+    }
+
+    #[test]
+    fn rejects_delta_section_corruption() {
+        let bytes = encode(sample().iter(), &sample_deltas());
+        let delta_count_at = HEADER_BYTES + 5 * ENTRY_BYTES;
+        // Inflated delta count (footer recomputed): must reject
+        // cleanly, not overrun or allocate absurdly.
+        let mut bad = bytes.clone();
+        bad[delta_count_at..delta_count_at + 8]
+            .copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode(&refooter(bad)).is_err());
+        let mut bad = bytes.clone();
+        bad[delta_count_at..delta_count_at + 8].copy_from_slice(&9u64.to_le_bytes());
+        assert!(decode(&refooter(bad)).is_err());
+        // Truncated mid-record (footer recomputed).
+        let mut bad = bytes.clone();
+        bad.truncate(bytes.len() - FOOTER_BYTES - 4);
+        bad.extend_from_slice(&[0u8; FOOTER_BYTES]);
+        assert!(decode(&refooter(bad)).is_err());
+        // Malformed words: zero out a record's word count so the
+        // remaining words read as trailing bytes.
+        let mut bad = bytes.clone();
+        let wc_at = delta_count_at + 8 + 8; // first record's word count
+        bad[wc_at..wc_at + 8].copy_from_slice(&0u64.to_le_bytes());
+        assert!(decode(&refooter(bad)).is_err());
+        // Non-ascending keys: copy the first record's key over the
+        // second's (record 1 is 7 words + key + count = 9×8 bytes).
+        let mut bad = bytes.clone();
+        let k2_at = delta_count_at + 8 + 9 * 8;
+        let k1: Vec<u8> = bad[delta_count_at + 8..delta_count_at + 16].to_vec();
+        bad[k2_at..k2_at + 8].copy_from_slice(&k1);
+        assert!(decode(&refooter(bad)).is_err());
+        // The uncorrupted file, refootered with its own checksum, still
+        // decodes — the rejections above are the corruption, not the
+        // refooter helper.
+        assert!(decode(&refooter(bytes)).is_ok());
     }
 }

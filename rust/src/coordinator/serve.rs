@@ -58,9 +58,10 @@
 //! shard fan-out on/off, scheduling-only), `shard_threshold` (fan-out
 //! bound in layer MACs), `fast_forward` (loop-aware steady-state
 //! fast-forward on/off — bit-identical results either way),
-//! `priority` (scheduler priority 0–255, higher first; scheduling
-//! only), and the config overrides `lanes`, `vlen`, `tile_r`,
-//! `tile_c`, `dram_bw`, `freq`.
+//! `delta_cache` (engine-wide converged-delta replay on/off —
+//! bit-identical results either way), `priority` (scheduler priority
+//! 0–255, higher first; scheduling only), and the config overrides
+//! `lanes`, `vlen`, `tile_r`, `tile_c`, `dram_bw`, `freq`.
 //!
 //! Replies are line-delimited records tagged by `"type"`: one
 //! `"block"` line per layer result, streamed in deterministic job
@@ -72,10 +73,11 @@
 //! accounting (`sims`, `cache_hits`, `dedup_hits`, `evictions`,
 //! `cache_entries`) and its shard/wall-clock/fast-forward/concurrency
 //! telemetry (`sharded_jobs`, `shards`, `slowest_job_ms`,
-//! `ff_instrs`, `coalesced` — cells served by another request's
-//! in-flight simulation — and `queue_ms`, time spent waiting for a
-//! scheduler slot) — a warm repeat of an identical request reports
-//! `"sims":0`. `"ping"` answers `"pong"`; `"shutdown"` answers
+//! `ff_instrs`, `delta_hits`/`replays` — converged-delta replay
+//! volume — `prog_hits`/`prog_misses` — program cache counters —
+//! `coalesced` — cells served by another request's in-flight
+//! simulation — and `queue_ms`, time spent waiting for a scheduler
+//! slot) — a warm repeat of an identical request reports `"sims":0`. `"ping"` answers `"pong"`; `"shutdown"` answers
 //! `"bye"`, flushes the cache file and stops the server (EOF on stdin
 //! does the same). Requests refused by admission control are answered
 //! with an `error` record carrying `"code":"overload"`.
@@ -514,6 +516,11 @@ pub struct Request {
     /// Bit-identical results either way; off re-steps every
     /// instruction (verification/benchmark escape hatch).
     pub fast_forward: bool,
+    /// Engine-wide converged-delta cache on (default) or off for this
+    /// request. Bit-identical results either way; off re-converges
+    /// every steady-state region from scratch
+    /// (verification/benchmark escape hatch).
+    pub delta_cache: bool,
     /// Scheduler priority (0–255, higher first; default 0). Higher
     /// priorities claim engine worker slots ahead of lower ones at
     /// every work-item boundary, so a small interactive request
@@ -539,6 +546,7 @@ impl Default for Request {
             shard: true,
             shard_threshold: None,
             fast_forward: true,
+            delta_cache: true,
             priority: 0,
             overrides: CfgOverrides::default(),
         }
@@ -637,6 +645,7 @@ impl Request {
                     req.shard_threshold = Some(val.as_u64("shard_threshold")?)
                 }
                 "fast_forward" => req.fast_forward = val.as_bool("fast_forward")?,
+                "delta_cache" => req.delta_cache = val.as_bool("delta_cache")?,
                 "priority" => {
                     let p = val.as_u64("priority")?;
                     if p > u64::from(u8::MAX) {
@@ -705,6 +714,9 @@ impl Request {
         }
         if !self.fast_forward {
             parts.push("\"fast_forward\":false".to_string());
+        }
+        if !self.delta_cache {
+            parts.push("\"delta_cache\":false".to_string());
         }
         if self.priority != 0 {
             parts.push(format!("\"priority\":{}", self.priority));
@@ -789,7 +801,10 @@ impl Request {
         } else if let Some(t) = self.shard_threshold {
             spec = spec.shard_threshold(t);
         }
-        spec = spec.fast_forward(self.fast_forward).priority(self.priority);
+        spec = spec
+            .fast_forward(self.fast_forward)
+            .delta_cache(self.delta_cache)
+            .priority(self.priority);
         Ok(spec)
     }
 }
@@ -825,14 +840,19 @@ pub fn block_line(id: u64, backend: &str, network: &str, r: &LayerResult) -> Str
 /// request's critical-path floor, the number sharding shrinks;
 /// `ff_instrs` counts instructions the timing backends skipped via
 /// loop-aware fast-forward (0 when the request set
-/// `"fast_forward":false` or was served from cache); `coalesced`
-/// counts cells served by another request's in-flight simulation of
-/// the identical cell (multi-tenant coalescing — no duplicate work);
-/// `queue_ms` is the total time this request's work items waited for
-/// an engine scheduler slot (contention, not simulation).
+/// `"fast_forward":false` or was served from cache); `delta_hits` /
+/// `replays` count regions that verified-and-replayed a cached
+/// converged delta (`replays` is the subset that skipped the entire
+/// measure phase; both 0 with `"delta_cache":false`); `prog_hits` /
+/// `prog_misses` are the per-worker pre-decoded program cache
+/// counters; `coalesced` counts cells served by another request's
+/// in-flight simulation of the identical cell (multi-tenant
+/// coalescing — no duplicate work); `queue_ms` is the total time this
+/// request's work items waited for an engine scheduler slot
+/// (contention, not simulation).
 pub fn summary_line(id: u64, out: &SweepOutcome, cache_entries: usize) -> String {
     format!(
-        "{{\"type\":\"summary\",\"id\":{id},\"jobs\":{},\"sims\":{},\"cache_hits\":{},\"dedup_hits\":{},\"evictions\":{},\"cache_entries\":{cache_entries},\"threads\":{},\"elapsed_ms\":{},\"sharded_jobs\":{},\"shards\":{},\"slowest_job_ms\":{},\"ff_instrs\":{},\"coalesced\":{},\"queue_ms\":{}}}",
+        "{{\"type\":\"summary\",\"id\":{id},\"jobs\":{},\"sims\":{},\"cache_hits\":{},\"dedup_hits\":{},\"evictions\":{},\"cache_entries\":{cache_entries},\"threads\":{},\"elapsed_ms\":{},\"sharded_jobs\":{},\"shards\":{},\"slowest_job_ms\":{},\"ff_instrs\":{},\"delta_hits\":{},\"replays\":{},\"prog_hits\":{},\"prog_misses\":{},\"coalesced\":{},\"queue_ms\":{}}}",
         out.results.len(),
         out.executed_sims,
         out.cache_hits,
@@ -844,6 +864,10 @@ pub fn summary_line(id: u64, out: &SweepOutcome, cache_entries: usize) -> String
         out.shards_spawned,
         (out.slowest_job_secs * 1000.0).round() as u64,
         out.fast_forwarded_instrs,
+        out.delta_cache_hits,
+        out.replayed_regions,
+        out.program_cache_hits,
+        out.program_cache_misses,
         out.coalesced_hits,
         (out.gate_wait_secs * 1000.0).round() as u64,
     )
@@ -1163,6 +1187,16 @@ pub struct ServerOptions {
     /// per-request; `Some(false)` = the server-wide
     /// `--no-fast-forward` escape hatch). Bit-identical either way.
     pub fast_forward: Option<bool>,
+    /// Converged-delta cache override for every request (`None` =
+    /// per-request; `Some(false)` = the server-wide
+    /// `--no-delta-cache` escape hatch). Bit-identical either way.
+    pub delta_cache: Option<bool>,
+    /// Per-worker pre-decoded program cache entry capacity override
+    /// (`None` = built-in default). Scheduling-only.
+    pub program_cache_cap: Option<usize>,
+    /// Per-worker pre-decoded program cache byte budget override
+    /// (`None` = built-in default). Scheduling-only.
+    pub program_cache_bytes: Option<usize>,
     /// Admission limits: connection cap, concurrent-sweep cap, idle
     /// read timeout (`0` = unlimited/disabled per knob).
     pub limits: ServeLimits,
@@ -1199,6 +1233,12 @@ pub fn run_server(opts: ServerOptions) -> Result<()> {
     }
     if let Some(ff) = opts.fast_forward {
         engine.set_fast_forward_override(Some(ff));
+    }
+    if let Some(dc) = opts.delta_cache {
+        engine.set_delta_cache_override(Some(dc));
+    }
+    if opts.program_cache_cap.is_some() || opts.program_cache_bytes.is_some() {
+        engine.set_program_cache_limits(opts.program_cache_cap, opts.program_cache_bytes);
     }
     engine.set_worker_budget(opts.worker_budget);
     if let Some(path) = &opts.cache_file {
@@ -1684,6 +1724,26 @@ mod tests {
         assert!(!off.to_spec(&base).unwrap().fast_forward);
         let line = off.to_line();
         assert!(line.contains("\"fast_forward\":false"));
+        assert_eq!(Request::parse(&line).unwrap(), off);
+    }
+
+    #[test]
+    fn delta_cache_field_reaches_the_spec() {
+        let base = SpeedConfig::default();
+        let req = Request {
+            id: 1,
+            network: "SqueezeNet".into(),
+            layers: Some(vec![1]),
+            ..Default::default()
+        };
+        // Default: on, and omitted from the wire format.
+        assert!(req.to_spec(&base).unwrap().delta_cache);
+        assert!(!req.to_line().contains("delta_cache"));
+        // Off: carried on the wire, lands in the spec, round-trips.
+        let off = Request { delta_cache: false, ..req };
+        assert!(!off.to_spec(&base).unwrap().delta_cache);
+        let line = off.to_line();
+        assert!(line.contains("\"delta_cache\":false"));
         assert_eq!(Request::parse(&line).unwrap(), off);
     }
 

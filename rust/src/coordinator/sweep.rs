@@ -82,7 +82,24 @@
 //!   — and each worker keeps a small pre-decoded
 //!   [`ProgramCache`](super::backend::ProgramCache) so cells repeated
 //!   within a run (duplicate shapes under `--no-memoize`) skip codegen
-//!   and word-by-word decode;
+//!   and word-by-word decode (capacity/byte budget configurable via
+//!   [`SweepSpec::program_cache_cap`] /
+//!   [`SweepSpec::program_cache_bytes`], hit/miss telemetry in
+//!   [`SweepOutcome::program_cache_hits`]);
+//! - an engine-wide **delta cache** ([`SweepSpec::delta_cache`], engine
+//!   override [`SweepEngine::set_delta_cache_override`], CLI
+//!   `--no-delta-cache`) shares *converged per-region timing deltas*
+//!   across cells, shards, runs and concurrent requests: a region whose
+//!   (program structure, config, precision, strategy) fingerprint has a
+//!   published delta verifies one stepped iteration against it and
+//!   extrapolates immediately instead of re-measuring until
+//!   convergence — repeat shape families become arithmetic. The
+//!   bit-identical contract is preserved by construction (any mismatch
+//!   falls back to full convergence and republishes);
+//!   [`SweepOutcome::delta_cache_hits`] /
+//!   [`SweepOutcome::replayed_regions`] report the replay volume, and
+//!   the persisted cache file carries the delta section so
+//!   `--cache-file` warms replay across restarts;
 //! - a [`ReportSink`] receives every per-layer [`LayerResult`] in
 //!   deterministic job order once the run completes
 //!   ([`SweepEngine::run_with_sink`]).
@@ -102,13 +119,14 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use super::backend::{
-    config_fingerprint, layer_shape as shape_of, GoldenFunctional, SimBackend, SlotPool,
-    SpeedCycle, WorkerSlot,
+    config_fingerprint, layer_shape as shape_of, DeltaCache, GoldenFunctional, SimBackend,
+    SlotOptions, SlotPool, SpeedCycle, WorkerSlot,
 };
 use super::persist;
 use super::runner::{LayerResult, NetworkResult};
 use crate::arch::{Precision, SpeedConfig};
-use crate::core::SimStats;
+use crate::core::{DeltaStore, SimStats};
+use crate::cost::roofline_gops;
 use crate::dataflow::{ConvLayer, ConvShard, Strategy, SHARD_MIN_MACS};
 use crate::error::{Error, Result};
 use crate::models::all_models;
@@ -177,6 +195,25 @@ pub struct SweepSpec {
     /// benchmarking and belt-and-braces verification
     /// (`--no-fast-forward`).
     pub fast_forward: bool,
+    /// Share converged per-region timing deltas through the engine-wide
+    /// delta cache (default on): a cache-hit region verifies one stepped
+    /// iteration against the published delta and extrapolates
+    /// immediately instead of re-measuring until convergence. Results
+    /// are bit-identical either way — any verification mismatch falls
+    /// back to the full convergence path and republishes. The off
+    /// switch (`--no-delta-cache`) exists for benchmarking and
+    /// belt-and-braces verification.
+    pub delta_cache: bool,
+    /// Per-worker pre-decoded program cache entry capacity (`None` =
+    /// the built-in default,
+    /// [`PROGRAM_CACHE_CAP`](super::backend::PROGRAM_CACHE_CAP)).
+    /// Scheduling-only: results never change.
+    pub program_cache_cap: Option<usize>,
+    /// Per-worker pre-decoded program cache byte budget (`None` = the
+    /// built-in default,
+    /// [`PROGRAM_CACHE_MAX_BYTES`](super::backend::PROGRAM_CACHE_MAX_BYTES)).
+    /// Scheduling-only: results never change.
+    pub program_cache_bytes: Option<usize>,
     /// Scheduling priority of this run's work items on the engine-wide
     /// worker gate (0–255, default 0; higher runs first). Only matters
     /// when several runs share one engine concurrently — a resident
@@ -201,6 +238,9 @@ impl SweepSpec {
             memoize: true,
             shard_threshold: SHARD_AUTO_MACS,
             fast_forward: true,
+            delta_cache: true,
+            program_cache_cap: None,
+            program_cache_bytes: None,
             priority: 0,
         }
     }
@@ -276,6 +316,27 @@ impl SweepSpec {
     /// bit-identical results either way.
     pub fn fast_forward(mut self, on: bool) -> Self {
         self.fast_forward = on;
+        self
+    }
+
+    /// Enable/disable the engine-wide converged-delta cache (builder
+    /// style); bit-identical results either way.
+    pub fn delta_cache(mut self, on: bool) -> Self {
+        self.delta_cache = on;
+        self
+    }
+
+    /// Set the per-worker program cache entry capacity (builder style).
+    /// Scheduling-only: results never change.
+    pub fn program_cache_cap(mut self, cap: usize) -> Self {
+        self.program_cache_cap = Some(cap);
+        self
+    }
+
+    /// Set the per-worker program cache byte budget (builder style).
+    /// Scheduling-only: results never change.
+    pub fn program_cache_bytes(mut self, bytes: usize) -> Self {
+        self.program_cache_bytes = Some(bytes);
         self
     }
 
@@ -452,6 +513,22 @@ pub struct SweepOutcome {
     /// visible: skipped / (skipped + executed instructions) is the
     /// fraction of simulation work the extrapolation removed.
     pub fast_forwarded_instrs: u64,
+    /// Regions that verified one stepped iteration against a cached
+    /// converged delta and extrapolated immediately this run (0 with
+    /// `--no-delta-cache` or on a fully cold cache). Counts every
+    /// replay, including regions that would have converged naturally
+    /// on the same iteration.
+    pub delta_cache_hits: u64,
+    /// Subset of [`SweepOutcome::delta_cache_hits`] that replayed on
+    /// the *first* stepped iteration — the pure-arithmetic case where
+    /// the region skipped the entire measure-until-converged phase.
+    pub replayed_regions: u64,
+    /// Pre-decoded program cache hits across this run's workers
+    /// (repeat shapes that skipped codegen + decode).
+    pub program_cache_hits: u64,
+    /// Pre-decoded program cache misses across this run's workers
+    /// (cells that paid codegen + word-by-word decode).
+    pub program_cache_misses: u64,
     /// Start offset of each (backend, cfg, net, prec, strat) block in
     /// `results`.
     block_starts: Vec<usize>,
@@ -760,6 +837,45 @@ enum Plan {
     Best(usize, usize),
 }
 
+/// Per-worker telemetry harvested from pooled [`WorkerSlot`]s at
+/// check-in and summed into the [`SweepOutcome`] counters.
+#[derive(Debug, Default, Clone, Copy)]
+struct WorkerTelemetry {
+    ff_instrs: u64,
+    gate_wait_secs: f64,
+    delta_cache_hits: u64,
+    replayed_regions: u64,
+    program_cache_hits: u64,
+    program_cache_misses: u64,
+}
+
+impl WorkerTelemetry {
+    /// Fold `other` into this accumulator.
+    fn absorb(&mut self, other: &WorkerTelemetry) {
+        self.ff_instrs += other.ff_instrs;
+        self.gate_wait_secs += other.gate_wait_secs;
+        self.delta_cache_hits += other.delta_cache_hits;
+        self.replayed_regions += other.replayed_regions;
+        self.program_cache_hits += other.program_cache_hits;
+        self.program_cache_misses += other.program_cache_misses;
+    }
+
+    /// Drain a slot's run-scoped counters into this accumulator,
+    /// zeroing them so the next checkout starts clean.
+    fn harvest(&mut self, ws: &mut WorkerSlot) {
+        self.ff_instrs += ws.fast_forwarded_instrs;
+        ws.fast_forwarded_instrs = 0;
+        self.delta_cache_hits += ws.delta_cache_hits;
+        ws.delta_cache_hits = 0;
+        self.replayed_regions += ws.replayed_regions;
+        ws.replayed_regions = 0;
+        let (hits, misses) = ws.programs.stats();
+        self.program_cache_hits += hits;
+        self.program_cache_misses += misses;
+        ws.programs.reset_stats();
+    }
+}
+
 /// Lock a mutex, ignoring poisoning: every shared structure here is a
 /// plain data table that stays consistent under unwind (guards restore
 /// their counters on drop), so a panicked peer must not wedge the
@@ -880,10 +996,16 @@ pub struct SweepEngine {
     cache_ready: Condvar,
     gate: SchedGate,
     slot_pool: SlotPool,
+    /// Engine-wide converged-delta cache, shared by every worker slot
+    /// of every concurrent run (internally synchronized).
+    delta_cache: Arc<DeltaCache>,
     threads_override: Option<usize>,
     memoize_override: Option<bool>,
     shard_threshold_override: Option<u64>,
     fast_forward_override: Option<bool>,
+    delta_cache_override: Option<bool>,
+    program_cache_cap_override: Option<usize>,
+    program_cache_bytes_override: Option<usize>,
     worker_budget: Option<usize>,
 }
 
@@ -964,6 +1086,28 @@ impl SweepEngine {
         self.fast_forward_override = on;
     }
 
+    /// Override the converged-delta cache for every spec this engine
+    /// runs (`None` = respect each spec). Bit-identical results either
+    /// way — the CLI's `--no-delta-cache` escape hatch.
+    pub fn set_delta_cache_override(&mut self, on: Option<bool>) {
+        self.delta_cache_override = on;
+    }
+
+    /// Override the per-worker program-cache limits for every spec this
+    /// engine runs (`None` = respect each spec, which itself defaults
+    /// to the built-in constants). Scheduling-only — results never
+    /// change.
+    pub fn set_program_cache_limits(&mut self, cap: Option<usize>, bytes: Option<usize>) {
+        self.program_cache_cap_override = cap;
+        self.program_cache_bytes_override = bytes;
+    }
+
+    /// Number of converged region deltas held in the engine-wide delta
+    /// cache.
+    pub fn cached_deltas(&self) -> usize {
+        self.delta_cache.len()
+    }
+
     /// Bound the number of simulation permits the engine-wide priority
     /// gate hands out at once (`None` = one per available core). All
     /// concurrent runs share this budget, one permit per work item —
@@ -981,11 +1125,13 @@ impl SweepEngine {
             .max(1)
     }
 
-    /// Serialize the memo table to the versioned binary cache format
-    /// (deterministic: entries are sorted, the footer is a checksum).
+    /// Serialize the memo table *and* the converged-delta cache to the
+    /// versioned binary cache format (deterministic: entries are
+    /// sorted, the footer is a checksum).
     pub fn serialize_cache(&self) -> Vec<u8> {
+        let deltas = self.delta_cache.entries();
         let cache = self.lock_cache();
-        persist::encode(cache.iter())
+        persist::encode(cache.iter(), &deltas)
     }
 
     /// Merge a serialized cache into this engine's memo table.
@@ -998,13 +1144,17 @@ impl SweepEngine {
     /// LRU policy, so [`SweepEngine::cached_sims`] may end up smaller
     /// than the returned count.
     pub fn load_cache_bytes(&self, bytes: &[u8]) -> Result<usize> {
-        let loaded = persist::decode(bytes)?;
+        let (loaded, deltas) = persist::decode(bytes)?;
         let n = loaded.len();
         let mut cache = self.lock_cache();
         for (key, sim) in loaded {
             cache.insert(key, sim);
         }
         drop(cache);
+        // Deltas merge outside the memo lock: the delta cache is
+        // internally synchronized and advisory (a stale or missing
+        // delta only costs re-convergence, never correctness).
+        self.delta_cache.merge(deltas);
         // A merged file may have published cells other runs have
         // pending claims on — irrelevant to them (owners re-publish
         // idempotently), but wake waiters in case a merge satisfied
@@ -1251,17 +1401,41 @@ impl SweepEngine {
         };
         let threads = requested_threads.min(items.len().max(1));
         let fast_forward = self.fast_forward_override.unwrap_or(spec.fast_forward);
+        let delta_on = self.delta_cache_override.unwrap_or(spec.delta_cache);
+        // One options value shared by every checkout of this run — the
+        // worker closure and the coalescing wait both borrow it.
+        let slot_opts = SlotOptions {
+            fast_forward,
+            delta_store: if delta_on {
+                Some(self.delta_cache.clone() as Arc<dyn DeltaStore>)
+            } else {
+                None
+            },
+            program_cache_cap: self.program_cache_cap_override.or(spec.program_cache_cap),
+            program_cache_bytes: self
+                .program_cache_bytes_override
+                .or(spec.program_cache_bytes),
+        };
 
-        // LPT (longest-processing-time) ordering: workers claim the
-        // heaviest units first, so the slowest simulation starts as
-        // early as possible and cannot become a lonely tail on an
-        // otherwise idle pool. Estimated MACs order the queue; ties
-        // break on enumeration index so the order is deterministic.
-        // Scheduling-only: results are keyed by item identity, so any
-        // claim order produces bit-identical output
-        // (`tests/shard_parity.rs` pins order independence).
-        let mut order: Vec<usize> = (0..items.len()).collect();
-        {
+        // Wavefront LPT (longest-processing-time) ordering: workers
+        // claim the heaviest units first, so the slowest simulation
+        // starts as early as possible and cannot become a lonely tail
+        // on an otherwise idle pool — but instead of one global queue,
+        // units are classified by their *roofline bound*
+        // ([`crate::cost::roofline_gops`]): DRAM-bandwidth-bound units
+        // in one class, compute (SAU)-bound units in the other, each
+        // LPT-sorted, then deterministically interleaved starting with
+        // the class holding the heaviest unit. Concurrent workers thus
+        // tend to stress complementary resources (memory bus vs MAC
+        // array) instead of piling onto the same bottleneck. Shards
+        // inherit their parent layer's class; degenerate layers (which
+        // the roofline model rejects) count as compute-bound.
+        // Estimated MACs order each class; ties break on enumeration
+        // index so the order is deterministic. Scheduling-only:
+        // results are keyed by item identity, so any claim order
+        // produces bit-identical output (`tests/shard_parity.rs` pins
+        // order independence).
+        let order: Vec<usize> = {
             let est: Vec<u64> = items
                 .iter()
                 .map(|it| {
@@ -1274,8 +1448,39 @@ impl SweepEngine {
                     }
                 })
                 .collect();
-            order.sort_by(|&a, &b| est[b].cmp(&est[a]).then(a.cmp(&b)));
-        }
+            let dram_bound: Vec<bool> = items
+                .iter()
+                .map(|it| {
+                    let t = slots[it.slot];
+                    let layer = &spec.networks[t.net].layers[t.layer];
+                    if layer.degenerate() {
+                        return false;
+                    }
+                    let cfg = &spec.configs[t.cfg];
+                    let p = spec.precisions[t.prec];
+                    roofline_gops(cfg, layer, p) < cfg.peak_gops(p)
+                })
+                .collect();
+            let mut dram: Vec<usize> = (0..items.len()).filter(|&i| dram_bound[i]).collect();
+            let mut sau: Vec<usize> = (0..items.len()).filter(|&i| !dram_bound[i]).collect();
+            dram.sort_by(|&a, &b| est[b].cmp(&est[a]).then(a.cmp(&b)));
+            sau.sort_by(|&a, &b| est[b].cmp(&est[a]).then(a.cmp(&b)));
+            let head = |v: &[usize]| v.first().map_or(0, |&i| est[i]);
+            let (lead, trail) = if head(&dram) >= head(&sau) { (dram, sau) } else { (sau, dram) };
+            let mut order = Vec::with_capacity(items.len());
+            let (mut li, mut ti) = (0, 0);
+            while li < lead.len() || ti < trail.len() {
+                if li < lead.len() {
+                    order.push(lead[li]);
+                    li += 1;
+                }
+                if ti < trail.len() {
+                    order.push(trail[ti]);
+                    ti += 1;
+                }
+            }
+            order
+        };
 
         // 3) Execute the work items on the worker pool. Workers claim
         //    items from a shared atomic index (self-scheduling queue,
@@ -1289,8 +1494,7 @@ impl SweepEngine {
         let mut sims: Vec<Option<CachedSim>> = prefilled;
         let mut slowest_job_secs = 0f64;
         let mut job_elapsed_total_secs = 0f64;
-        let mut fast_forwarded_instrs = 0u64;
-        let mut gate_wait_secs = 0f64;
+        let mut run_tel = WorkerTelemetry::default();
         if !items.is_empty() {
             let n_cfgs = spec.configs.len();
             let n_worker_slots = spec.backends.len() * n_cfgs;
@@ -1298,7 +1502,8 @@ impl SweepEngine {
             let order = &order;
             let backend_fps = &backend_fps;
             let cfg_fps = &cfg_fps;
-            let worker = |claim: &AtomicUsize| -> (Vec<ItemOut>, u64, f64) {
+            let slot_opts = &slot_opts;
+            let worker = |claim: &AtomicUsize| -> (Vec<ItemOut>, WorkerTelemetry) {
                 // Worker state comes from the engine's hand-off pool,
                 // so pooled processors and pre-decoded programs survive
                 // across runs in a resident server. Checked out lazily
@@ -1307,7 +1512,7 @@ impl SweepEngine {
                 let mut pool: Vec<Option<WorkerSlot>> =
                     (0..n_worker_slots).map(|_| None).collect();
                 let mut local = Vec::new();
-                let mut waited = 0f64;
+                let mut tel = WorkerTelemetry::default();
                 loop {
                     let pos = claim.fetch_add(1, Ordering::Relaxed);
                     if pos >= order.len() {
@@ -1322,12 +1527,12 @@ impl SweepEngine {
                     let p = spec.precisions[t.prec];
                     let s = if t.cf { Strategy::ChannelFirst } else { Strategy::FeatureFirst };
                     let (permit, wait) = self.gate.acquire(capacity, priority);
-                    waited += wait;
+                    tel.gate_wait_secs += wait;
                     let ws = pool[t.backend * n_cfgs + t.cfg].get_or_insert_with(|| {
                         self.slot_pool.check_out(
                             backend_fps[t.backend],
                             cfg_fps[t.cfg],
-                            fast_forward,
+                            slot_opts,
                         )
                     });
                     let t0 = Instant::now();
@@ -1338,11 +1543,9 @@ impl SweepEngine {
                     drop(permit);
                     local.push((i, res, t0.elapsed().as_secs_f64()));
                 }
-                let mut skipped = 0u64;
                 for (idx, slot) in pool.into_iter().enumerate() {
                     if let Some(mut ws) = slot {
-                        skipped += ws.fast_forwarded_instrs;
-                        ws.fast_forwarded_instrs = 0;
+                        tel.harvest(&mut ws);
                         self.slot_pool.check_in(
                             backend_fps[idx / n_cfgs],
                             cfg_fps[idx % n_cfgs],
@@ -1350,14 +1553,14 @@ impl SweepEngine {
                         );
                     }
                 }
-                (local, skipped, waited)
+                (local, tel)
             };
 
-            let outs: Vec<(Vec<ItemOut>, u64, f64)> = if threads <= 1 {
+            let outs: Vec<(Vec<ItemOut>, WorkerTelemetry)> = if threads <= 1 {
                 vec![worker(&AtomicUsize::new(0))]
             } else {
                 let claim = AtomicUsize::new(0);
-                let joined: Vec<thread::Result<(Vec<ItemOut>, u64, f64)>> =
+                let joined: Vec<thread::Result<(Vec<ItemOut>, WorkerTelemetry)>> =
                     thread::scope(|scope| {
                         let handles: Vec<_> =
                             (0..threads).map(|_| scope.spawn(|| worker(&claim))).collect();
@@ -1379,9 +1582,8 @@ impl SweepEngine {
 
             let mut pending: Vec<Option<Result<SimStats>>> = Vec::new();
             pending.resize_with(items.len(), || None);
-            for (out, skipped, waited) in outs {
-                fast_forwarded_instrs += skipped;
-                gate_wait_secs += waited;
+            for (out, tel) in outs {
+                run_tel.absorb(&tel);
                 for (item, res, elapsed) in out {
                     pending[item] = Some(res);
                     slowest_job_secs = slowest_job_secs.max(elapsed);
@@ -1444,11 +1646,10 @@ impl SweepEngine {
                 key,
                 capacity,
                 priority,
-                fast_forward,
+                &slot_opts,
                 &backend_fps,
                 &cfg_fps,
-                &mut fast_forwarded_instrs,
-                &mut gate_wait_secs,
+                &mut run_tel,
             )?;
             if adopted {
                 adopted_sims += 1;
@@ -1495,7 +1696,7 @@ impl SweepEngine {
             cache_hits,
             dedup_hits,
             coalesced_hits,
-            gate_wait_secs,
+            gate_wait_secs: run_tel.gate_wait_secs,
             cache_evictions: self.lock_cache().evictions() - evictions_before,
             threads_used: threads,
             elapsed_secs: t0.elapsed().as_secs_f64(),
@@ -1503,7 +1704,11 @@ impl SweepEngine {
             shards_spawned,
             slowest_job_secs,
             job_elapsed_total_secs,
-            fast_forwarded_instrs,
+            fast_forwarded_instrs: run_tel.ff_instrs,
+            delta_cache_hits: run_tel.delta_cache_hits,
+            replayed_regions: run_tel.replayed_regions,
+            program_cache_hits: run_tel.program_cache_hits,
+            program_cache_misses: run_tel.program_cache_misses,
             block_starts,
             dims: (
                 spec.backends.len(),
@@ -1528,11 +1733,10 @@ impl SweepEngine {
         key: SimKey,
         capacity: usize,
         priority: u8,
-        fast_forward: bool,
+        slot_opts: &SlotOptions,
         backend_fps: &[u64],
         cfg_fps: &[u64],
-        ff_instrs: &mut u64,
-        gate_wait: &mut f64,
+        tel: &mut WorkerTelemetry,
     ) -> Result<(CachedSim, bool)> {
         let mut cache = self.lock_cache();
         loop {
@@ -1564,13 +1768,15 @@ impl SweepEngine {
                     let p = spec.precisions[t.prec];
                     let s = if t.cf { Strategy::ChannelFirst } else { Strategy::FeatureFirst };
                     let (permit, waited) = self.gate.acquire(capacity, priority);
-                    *gate_wait += waited;
-                    let mut ws =
-                        self.slot_pool.check_out(backend_fps[t.backend], cfg_fps[t.cfg], fast_forward);
+                    tel.gate_wait_secs += waited;
+                    let mut ws = self.slot_pool.check_out(
+                        backend_fps[t.backend],
+                        cfg_fps[t.cfg],
+                        slot_opts,
+                    );
                     let res = backend.simulate(&mut ws, cfg, layer, p, s);
                     drop(permit);
-                    *ff_instrs += ws.fast_forwarded_instrs;
-                    ws.fast_forwarded_instrs = 0;
+                    tel.harvest(&mut ws);
                     self.slot_pool.check_in(backend_fps[t.backend], cfg_fps[t.cfg], ws);
                     let sim = CachedSim { stats: res? };
                     self.lock_cache().insert(key, sim.clone());
@@ -2031,5 +2237,95 @@ mod tests {
         let again = engine.run(&spec).unwrap();
         assert_eq!(again.executed_sims, 2);
         assert_eq!(out.results, again.results);
+    }
+
+    #[test]
+    fn delta_cache_spec_and_override_are_bit_identical() {
+        // memoize(false) forces every run to re-simulate, so a warm
+        // second run on the same engine exercises delta replay rather
+        // than the memo table.
+        let mut layers = tiny_layers();
+        layers.push(ConvLayer::new("steady", 16, 32, 40, 40, 3, 1, 1));
+        let spec = SweepSpec::new(SpeedConfig::default())
+            .network("t", layers)
+            .precisions(vec![Precision::Int8])
+            .strategies(vec![Strategy::Mixed])
+            .memoize(false)
+            .threads(2);
+        assert!(spec.delta_cache, "delta cache defaults on");
+        let engine = SweepEngine::new();
+        let cold = engine.run(&spec).unwrap();
+        assert!(engine.cached_deltas() > 0, "cold run must publish converged deltas");
+        let warm = engine.run(&spec).unwrap();
+        assert!(warm.delta_cache_hits > 0, "warm repeat must replay cached deltas");
+        assert!(warm.replayed_regions <= warm.delta_cache_hits);
+        assert!(
+            warm.fast_forwarded_instrs >= cold.fast_forwarded_instrs,
+            "replay can only skip more stepping: warm {} < cold {}",
+            warm.fast_forwarded_instrs,
+            cold.fast_forwarded_instrs
+        );
+        assert_eq!(warm.results, cold.results, "delta replay must not move a single bit");
+        // Spec-level off: no sharing, no publishing.
+        let off_engine = SweepEngine::new();
+        let off = off_engine.run(&spec.clone().delta_cache(false)).unwrap();
+        assert_eq!(off.delta_cache_hits, 0);
+        assert_eq!(off_engine.cached_deltas(), 0);
+        assert_eq!(off.results, cold.results);
+        // Engine-level override beats the spec.
+        let mut forced = SweepEngine::new();
+        forced.set_delta_cache_override(Some(false));
+        let forced_off = forced.run(&spec).unwrap();
+        assert_eq!(forced_off.delta_cache_hits, 0);
+        assert_eq!(forced.cached_deltas(), 0);
+        assert_eq!(forced_off.results, cold.results);
+    }
+
+    #[test]
+    fn program_cache_telemetry_and_limits_reach_the_outcome() {
+        // memoize(false) + a duplicated shape: the repeat skips codegen
+        // via the per-worker program cache and the counters surface it.
+        let spec = SweepSpec::new(SpeedConfig::default())
+            .network("t", tiny_layers())
+            .precisions(vec![Precision::Int8])
+            .strategies(vec![Strategy::FeatureFirst])
+            .memoize(false)
+            .threads(1);
+        let out = SweepEngine::new().run(&spec).unwrap();
+        assert!(out.program_cache_misses > 0, "cold cells pay decode");
+        assert!(out.program_cache_hits > 0, "duplicate shape must hit the program cache");
+        // Tight limits are scheduling-only: results never change.
+        let tight = SweepEngine::new()
+            .run(&spec.clone().program_cache_cap(1).program_cache_bytes(1 << 20))
+            .unwrap();
+        assert_eq!(tight.results, out.results);
+        // Engine override wins over the spec default.
+        let mut engine = SweepEngine::new();
+        engine.set_program_cache_limits(Some(1), None);
+        let overridden = engine.run(&spec).unwrap();
+        assert_eq!(overridden.results, out.results);
+    }
+
+    #[test]
+    fn wavefront_order_is_result_invariant_against_plain_runs() {
+        // A grid mixing compute-bound 3×3 layers and bandwidth-bound
+        // pointwise layers at 4-bit exercises both wavefront classes;
+        // results must match the serial single-layer API exactly.
+        let cfg = SpeedConfig::default();
+        let layers = vec![
+            ConvLayer::new("deep", 64, 64, 14, 14, 3, 1, 1),
+            ConvLayer::new("shallow_pw", 16, 16, 56, 56, 1, 1, 0),
+            ConvLayer::new("mid", 32, 32, 28, 28, 3, 1, 1),
+        ];
+        let spec = SweepSpec::new(cfg.clone())
+            .network("t", layers.clone())
+            .precisions(vec![Precision::Int4])
+            .strategies(vec![Strategy::FeatureFirst])
+            .threads(2);
+        let out = SweepEngine::new().run(&spec).unwrap();
+        for (i, l) in layers.iter().enumerate() {
+            let want = simulate_layer(&cfg, l, Precision::Int4, Strategy::FeatureFirst).unwrap();
+            assert_eq!(out.results[i], want, "wavefront order must not change {l}");
+        }
     }
 }

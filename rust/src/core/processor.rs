@@ -47,6 +47,8 @@
 //! iterations it skips, so hand-written regions whose unmeasured tail
 //! differs structurally from the measured head are emitter bugs.
 
+use std::sync::Arc;
+
 use crate::arch::SpeedConfig;
 use crate::core::scalar::ScalarCore;
 use crate::core::stats::SimStats;
@@ -57,6 +59,78 @@ use crate::isa::{Instr, LoadMode, Program, Region, Strategy, Vsacfg, Vsam};
 use crate::lane::{alu, Lane};
 use crate::mem::Dram;
 use crate::sau::CsrState;
+
+/// An opaque converged per-iteration region delta, as published to (and
+/// replayed from) a shared delta cache. The payload is the processor's
+/// private [`StateDelta`] — including the iteration's configuration
+/// trace — so replay verification runs the exact equality check that
+/// natural convergence uses. Serializable for cache persistence via
+/// [`CachedDelta::to_words`] / [`CachedDelta::from_words`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CachedDelta(StateDelta);
+
+impl CachedDelta {
+    /// Flatten to a stable little-endian word vector:
+    /// `[n_times, times.., n_counters, counters.., control_unchanged,
+    /// n_trace, trace..]`.
+    pub fn to_words(&self) -> Vec<u64> {
+        let d = &self.0;
+        let mut out = Vec::with_capacity(3 + d.times.len() + d.counters.len() + d.trace.len());
+        out.push(d.times.len() as u64);
+        out.extend_from_slice(&d.times);
+        out.push(d.counters.len() as u64);
+        out.extend_from_slice(&d.counters);
+        out.push(u64::from(d.control_unchanged));
+        out.push(d.trace.len() as u64);
+        out.extend_from_slice(&d.trace);
+        out
+    }
+
+    /// Rebuild from [`CachedDelta::to_words`] output. Strict: any
+    /// length mismatch, trailing word or non-boolean flag is `None`
+    /// (persisted-cache decoding treats that as corruption).
+    pub fn from_words(words: &[u64]) -> Option<CachedDelta> {
+        let mut it = words.iter().copied();
+        let mut take_vec = |it: &mut dyn Iterator<Item = u64>| -> Option<Vec<u64>> {
+            let n = usize::try_from(it.next()?).ok()?;
+            // Defensive bound: a corrupted length can never allocate
+            // more than the record actually carries.
+            if n > words.len() {
+                return None;
+            }
+            let v: Vec<u64> = it.by_ref().take(n).collect();
+            if v.len() == n {
+                Some(v)
+            } else {
+                None
+            }
+        };
+        let times = take_vec(&mut it)?;
+        let counters = take_vec(&mut it)?;
+        let control_unchanged = match it.next()? {
+            0 => false,
+            1 => true,
+            _ => return None,
+        };
+        let trace = take_vec(&mut it)?;
+        if it.next().is_some() {
+            return None;
+        }
+        Some(CachedDelta(StateDelta { times, counters, control_unchanged, trace }))
+    }
+}
+
+/// A shared store of converged region deltas, keyed by the region's
+/// delta-cache key (program-level fingerprint × region geometry, see
+/// [`Processor::set_delta_store`]). Implementations must be internally
+/// synchronized — one store is shared by every worker of a sweep
+/// engine, across threads and requests.
+pub trait DeltaStore: Send + Sync + std::fmt::Debug {
+    /// Look up the converged delta for a region key.
+    fn get(&self, key: u64) -> Option<Arc<CachedDelta>>;
+    /// Publish (or republish) a converged delta for a region key.
+    fn put(&self, key: u64, delta: CachedDelta);
+}
 
 /// Execution mode: full functional semantics or timing-only.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -107,6 +181,19 @@ pub struct Processor {
     /// state. Part of the convergence equality check — it catches
     /// mid-iteration control differences that cancel by iteration end.
     cfg_trace: Option<Vec<u64>>,
+    /// Shared converged-delta cache (see [`DeltaStore`]); `None`
+    /// disables replay entirely.
+    delta_store: Option<Arc<dyn DeltaStore>>,
+    /// Program-level base fingerprint mixed into every region's
+    /// delta-cache key (program structure × config × precision ×
+    /// strategy — computed by the caller).
+    delta_base_fp: u64,
+    /// Regions this run whose extrapolation fired off a verified cached
+    /// delta before natural convergence would have.
+    delta_hits: u64,
+    /// Subset of `delta_hits` that verified on the *first* stepped
+    /// iteration — pure analytic replay (one verify pass, zero warm-up).
+    replayed_regions: u64,
 }
 
 impl Processor {
@@ -140,6 +227,10 @@ impl Processor {
             fast_forward: true,
             ff_instrs: 0,
             cfg_trace: None,
+            delta_store: None,
+            delta_base_fp: 0,
+            delta_hits: 0,
+            replayed_regions: 0,
         })
     }
 
@@ -164,6 +255,33 @@ impl Processor {
     /// since the last [`Processor::reset_timing`].
     pub fn fast_forwarded_instrs(&self) -> u64 {
         self.ff_instrs
+    }
+
+    /// Attach (or detach, with `None`) a shared converged-delta cache,
+    /// and set the program-level base fingerprint mixed into every
+    /// region's cache key. The caller owns key hygiene: `base_fp` must
+    /// commit to everything that can change a region's converged delta
+    /// (program structure, full timing config, precision, strategy).
+    /// Replay is verify-first — a one-iteration mismatch falls back to
+    /// full convergence — so a *wrong* cached delta can never corrupt
+    /// results, only waste the lookup.
+    pub fn set_delta_store(&mut self, store: Option<Arc<dyn DeltaStore>>, base_fp: u64) {
+        self.delta_store = store;
+        self.delta_base_fp = base_fp;
+    }
+
+    /// Regions whose extrapolation fired off a verified cached delta
+    /// before natural convergence, since the last
+    /// [`Processor::reset_timing`].
+    pub fn delta_cache_hits(&self) -> u64 {
+        self.delta_hits
+    }
+
+    /// Regions replayed purely analytically (cached delta verified on
+    /// the first stepped iteration), since the last
+    /// [`Processor::reset_timing`]. Always ≤ [`Processor::delta_cache_hits`].
+    pub fn replayed_regions(&self) -> u64 {
+        self.replayed_regions
     }
 
     /// Statistics accumulated so far.
@@ -206,6 +324,8 @@ impl Processor {
         self.woff_wr = 0;
         self.ff_instrs = 0;
         self.cfg_trace = None;
+        self.delta_hits = 0;
+        self.replayed_regions = 0;
     }
 
     /// Full per-job reset for pooled reuse: architecturally equivalent to
@@ -329,6 +449,15 @@ impl Processor {
             }
             return Ok(end);
         }
+        // Delta-cache lookup: a previously converged delta for this
+        // exact (program fp × config fp × precision × strategy ×
+        // region geometry) key lets any iteration that reproduces it
+        // extrapolate immediately — including the first, which turns
+        // measure-until-converged into verify-once. The guard is the
+        // same equality the natural path uses, so a stale or colliding
+        // entry degrades to the ordinary convergence protocol.
+        let key = r.fingerprint(self.delta_base_fp);
+        let cached = self.delta_store.as_ref().and_then(|s| s.get(key));
         let mut prev = self.snapshot();
         let mut prev_delta: Option<StateDelta> = None;
         for it in 0..r.trips {
@@ -345,14 +474,27 @@ impl Processor {
             let cur = self.snapshot();
             let delta = StateDelta::between(&prev, &cur, trace);
             let done = it + 1;
+            let converged = prev_delta.as_ref() == Some(&delta);
+            let replayed = !converged && cached.as_ref().is_some_and(|c| c.0 == delta);
             if done < r.trips
-                && prev_delta.as_ref() == Some(&delta)
+                && (converged || replayed)
                 && self.extrapolation_is_safe(&cur, &delta)
             {
                 let k = (r.trips - done) as u64;
                 let target = delta.extrapolate(&cur, k);
                 self.write_back(&target);
                 self.ff_instrs += r.len as u64 * k;
+                if replayed {
+                    self.delta_hits += 1;
+                    if done == 1 {
+                        self.replayed_regions += 1;
+                    }
+                }
+                // (Re)publish so future runs of this key replay from
+                // iteration one, whichever path converged first.
+                if let Some(store) = &self.delta_store {
+                    store.put(key, CachedDelta(delta));
+                }
                 return Ok(end);
             }
             prev_delta = Some(delta);
@@ -1364,6 +1506,153 @@ mod tests {
         slow.run(&build()).unwrap();
         assert_eq!(slow.fast_forwarded_instrs(), 0);
         assert_eq!(*fast.stats(), *slow.stats(), "fast-forward must be bit-identical");
+    }
+
+    /// Minimal internally-synchronized [`DeltaStore`] for unit tests.
+    #[derive(Debug, Default)]
+    struct MapStore(std::sync::Mutex<std::collections::HashMap<u64, Arc<CachedDelta>>>);
+
+    impl MapStore {
+        fn len(&self) -> usize {
+            self.0.lock().unwrap().len()
+        }
+        fn insert_raw(&self, key: u64, delta: CachedDelta) {
+            self.0.lock().unwrap().insert(key, Arc::new(delta));
+        }
+        fn get_raw(&self, key: u64) -> Option<CachedDelta> {
+            self.0.lock().unwrap().get(&key).map(|a| (**a).clone())
+        }
+    }
+
+    impl DeltaStore for MapStore {
+        fn get(&self, key: u64) -> Option<Arc<CachedDelta>> {
+            self.0.lock().unwrap().get(&key).cloned()
+        }
+        fn put(&self, key: u64, delta: CachedDelta) {
+            self.0.lock().unwrap().insert(key, Arc::new(delta));
+        }
+    }
+
+    /// The steady-region program from
+    /// `regular_region_fast_forwards_bit_identically`, for the
+    /// delta-cache tests.
+    fn steady_program(trips: usize) -> Program {
+        let mut b = Program::builder();
+        let mut marks = Vec::new();
+        for _ in 0..trips {
+            marks.push(b.len());
+            b.set_vl(64, 8, 1);
+            b.emit(Instr::VaddVv { vd: 3, vs2: 1, vs1: 2 });
+        }
+        marks.push(b.len());
+        let mut p = b.build();
+        for r in crate::isa::Region::steady_runs(&marks, 3) {
+            p.push_region(r);
+        }
+        assert_eq!(p.regions().len(), 1);
+        p
+    }
+
+    /// Delta cache end to end at the processor level: a cold run
+    /// publishes its converged delta; a warm fresh machine with the
+    /// same store and base fingerprint verifies it on the FIRST stepped
+    /// iteration (pure analytic replay), skips strictly more
+    /// instructions than the cold run, and stays bit-identical. A
+    /// different base fingerprint must neither hit nor collide.
+    #[test]
+    fn cached_delta_replays_bit_identically() {
+        let trips = 8usize;
+        let base_fp = 0x1234_5678_9abc_def0u64;
+        let store = Arc::new(MapStore::default());
+
+        let mut cold = machine(ExecMode::Timing);
+        cold.set_delta_store(Some(store.clone()), base_fp);
+        cold.run(&steady_program(trips)).unwrap();
+        let cold_ff = cold.fast_forwarded_instrs();
+        assert!(cold_ff > 0, "steady region must converge");
+        assert_eq!(cold.delta_cache_hits(), 0, "empty cache cannot hit");
+        assert_eq!(store.len(), 1, "converged delta must be published");
+
+        let mut warm = machine(ExecMode::Timing);
+        warm.set_delta_store(Some(store.clone()), base_fp);
+        warm.run(&steady_program(trips)).unwrap();
+        assert_eq!(*warm.stats(), *cold.stats(), "replay must be bit-identical");
+        assert_eq!(warm.delta_cache_hits(), 1);
+        assert_eq!(warm.replayed_regions(), 1, "hit must fire on the first iteration");
+        assert!(
+            warm.fast_forwarded_instrs() > cold_ff,
+            "warm replay must step fewer instructions: warm ff {} !> cold ff {}",
+            warm.fast_forwarded_instrs(),
+            cold_ff
+        );
+
+        // Different base fingerprint: isolated — no hit, new entry.
+        let mut other = machine(ExecMode::Timing);
+        other.set_delta_store(Some(store.clone()), !base_fp);
+        other.run(&steady_program(trips)).unwrap();
+        assert_eq!(*other.stats(), *cold.stats());
+        assert_eq!(other.delta_cache_hits(), 0, "foreign base fp must not hit");
+        assert_eq!(store.len(), 2, "foreign base fp publishes under its own key");
+    }
+
+    /// A wrong cached delta (stale or colliding entry) must fail the
+    /// one-iteration verify, fall back to full natural convergence
+    /// bit-identically, and be republished with the correct delta.
+    #[test]
+    fn poisoned_cached_delta_falls_back_and_republishes() {
+        let trips = 8usize;
+        let base_fp = 0x0dd_ba11u64;
+        let prog = steady_program(trips);
+        let key = prog.regions()[0].fingerprint(base_fp);
+
+        let store = Arc::new(MapStore::default());
+        let poison = CachedDelta(StateDelta {
+            times: vec![1, 2, 3],
+            counters: vec![4, 5],
+            control_unchanged: true,
+            trace: Vec::new(),
+        });
+        store.insert_raw(key, poison.clone());
+
+        let mut m = machine(ExecMode::Timing);
+        m.set_delta_store(Some(store.clone()), base_fp);
+        m.run(&prog).unwrap();
+        assert_eq!(m.delta_cache_hits(), 0, "poisoned entry must not verify");
+        assert!(m.fast_forwarded_instrs() > 0, "natural convergence still fires");
+
+        let mut clean = machine(ExecMode::Timing);
+        clean.run(&steady_program(trips)).unwrap();
+        assert_eq!(*m.stats(), *clean.stats(), "fallback must be bit-identical");
+        let republished = store.get_raw(key).expect("entry still present");
+        assert_ne!(republished, poison, "converged delta must replace the poison");
+    }
+
+    /// `CachedDelta` word serialization round-trips exactly and rejects
+    /// truncated, extended or flag-corrupted records.
+    #[test]
+    fn cached_delta_words_round_trip_and_reject_corruption() {
+        let d = CachedDelta(StateDelta {
+            times: vec![7, 0, u64::MAX, 3],
+            counters: vec![9, 1],
+            control_unchanged: false,
+            trace: vec![42],
+        });
+        let words = d.to_words();
+        assert_eq!(CachedDelta::from_words(&words).as_ref(), Some(&d));
+
+        assert!(CachedDelta::from_words(&words[..words.len() - 1]).is_none(), "truncated");
+        let mut extended = words.clone();
+        extended.push(0);
+        assert!(CachedDelta::from_words(&extended).is_none(), "trailing word");
+        let mut bad_flag = words.clone();
+        // control_unchanged sits after [n_times, times.., n_counters,
+        // counters..].
+        bad_flag[1 + 4 + 1 + 2] = 2;
+        assert!(CachedDelta::from_words(&bad_flag).is_none(), "non-boolean flag");
+        let mut bad_len = words;
+        bad_len[0] = u64::MAX;
+        assert!(CachedDelta::from_words(&bad_len).is_none(), "oversized length");
+        assert!(CachedDelta::from_words(&[]).is_none(), "empty");
     }
 
     /// A region whose iterations never produce a repeating delta (here:

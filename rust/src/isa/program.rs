@@ -24,6 +24,25 @@ use super::encode::encode;
 use super::instr::{Instr, LoadMode, VType, Vsacfg, Vsam};
 use crate::error::Result;
 
+/// FNV-1a seed for structure fingerprints. Same constants as the
+/// coordinator's fingerprint helpers, defined locally so `isa` stays
+/// free of coordinator dependencies; the value is part of the
+/// persisted delta-cache format and must never change.
+const STRUCT_FP_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+const STRUCT_FP_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold one 64-bit value into an FNV-1a fingerprint, byte by byte
+/// (little-endian). Public because the timing engine derives
+/// per-region delta-cache keys from a program-level fingerprint with
+/// the same mixer.
+#[inline]
+pub fn mix_fp(mut h: u64, v: u64) -> u64 {
+    for b in v.to_le_bytes() {
+        h = (h ^ u64::from(b)).wrapping_mul(STRUCT_FP_PRIME);
+    }
+    h
+}
+
 /// One steady-state repeat region of a program: the words
 /// `[start, start + len * trips)` are `trips` loop iterations of
 /// exactly `len` words each.
@@ -62,6 +81,14 @@ impl Region {
     /// One-past-the-end word index of the region.
     pub fn end(&self) -> usize {
         self.start + self.len * self.trips
+    }
+
+    /// Fold this region's geometry into a program-level fingerprint,
+    /// producing the region's delta-cache key. `start` makes the key
+    /// unique within a program; `len`/`trips` guard against a region
+    /// at the same offset changing shape between compiler versions.
+    pub fn fingerprint(&self, base: u64) -> u64 {
+        mix_fp(mix_fp(mix_fp(base, self.start as u64), self.len as u64), self.trips as u64)
     }
 
     /// Derive regions from recorded loop-iteration boundaries.
@@ -162,6 +189,25 @@ impl Program {
     /// Size of the binary in bytes.
     pub fn byte_size(&self) -> usize {
         self.words.len() * 4
+    }
+
+    /// Stable structure fingerprint over the encoded word stream and
+    /// the region table. Two programs share a fingerprint iff they
+    /// fetch the same words and carry the same region geometry, so a
+    /// converged per-region state delta measured under one program is
+    /// only ever replayed under a bit-identical one (the delta cache's
+    /// first key component; config/precision/strategy are folded in by
+    /// the caller).
+    pub fn structure_fingerprint(&self) -> u64 {
+        let mut h = mix_fp(STRUCT_FP_SEED, self.words.len() as u64);
+        for &w in &self.words {
+            h = mix_fp(h, u64::from(w));
+        }
+        h = mix_fp(h, self.regions.len() as u64);
+        for r in &self.regions {
+            h = r.fingerprint(h);
+        }
+        h
     }
 }
 
@@ -414,6 +460,43 @@ mod tests {
         let p = b.build();
         assert_eq!(p.regions(), &[Region { start: mark, len: 1, trips: 3 }]);
         assert_eq!(p.regions()[0].end(), p.len());
+    }
+
+    #[test]
+    fn structure_fingerprint_tracks_words_and_regions() {
+        let build = |with_region: bool, extra: bool| {
+            let mut b = Program::builder();
+            b.set_vl(8, 16, 8);
+            let mark = b.len();
+            for _ in 0..3 {
+                b.vsam_mac(0, 0, 8, true, false);
+            }
+            if extra {
+                b.vsam_mac(1, 0, 8, true, false);
+            }
+            if with_region {
+                b.push_region(Region { start: mark, len: 1, trips: 3 });
+            }
+            b.build()
+        };
+        // Deterministic and sensitive to both word and region changes.
+        assert_eq!(
+            build(true, false).structure_fingerprint(),
+            build(true, false).structure_fingerprint()
+        );
+        assert_ne!(
+            build(true, false).structure_fingerprint(),
+            build(false, false).structure_fingerprint()
+        );
+        assert_ne!(
+            build(true, false).structure_fingerprint(),
+            build(true, true).structure_fingerprint()
+        );
+        // Region keys derived from the same base differ per region.
+        let base = build(true, false).structure_fingerprint();
+        let a = Region { start: 2, len: 1, trips: 3 }.fingerprint(base);
+        let b = Region { start: 5, len: 1, trips: 3 }.fingerprint(base);
+        assert_ne!(a, b);
     }
 
     #[test]

@@ -7,13 +7,16 @@
 //!             [--shard-threshold N | --no-shard] [--no-fast-forward] [config flags]
 //! speed sweep [--backend speed|ara|golden|roofline|all] [--threads N] [--no-memoize]
 //!             [--cache-file PATH] [--shard-threshold N | --no-shard]
-//!             [--no-fast-forward]
+//!             [--no-fast-forward] [--no-delta-cache]
+//!             [--program-cache-cap N] [--program-cache-bytes N]
 //!             [--out DIR] [config flags]                       (see `speed sweep --help`)
 //! speed serve [--tcp ADDR] [--port-file PATH] [--cache-file PATH]
 //!             [--max-cache-entries N] [--threads N] [--worker-budget N]
 //!             [--max-connections N] [--max-concurrent-sweeps N]
 //!             [--idle-timeout-secs N]
-//!             [--shard-threshold N | --no-shard] [--no-fast-forward] [config flags]
+//!             [--shard-threshold N | --no-shard] [--no-fast-forward]
+//!             [--no-delta-cache] [--program-cache-cap N]
+//!             [--program-cache-bytes N] [config flags]
 //!                                         (long-running sweep server; `--help`)
 //! speed request (--emit | --tcp ADDR) [request flags]
 //!                                         (client for `speed serve`; `--help`)
@@ -80,6 +83,17 @@ flags:
                 converged steady-state loop regions (bit-identical
                 results; this is the verification/benchmark escape
                 hatch — the summary's fast-forward telemetry reads 0)
+  --no-delta-cache
+                disable the engine-wide converged-delta cache: every
+                steady-state region re-converges from scratch instead
+                of replaying a cached per-iteration delta
+                (bit-identical; the delta telemetry reads 0)
+  --program-cache-cap N
+                per-worker decoded-program cache capacity in programs
+                (default 4; clamped to at least 1)
+  --program-cache-bytes N
+                per-worker decoded-program cache budget in bytes
+                (default 24 MiB; clamped to at least one program)
   --cache-file PATH
                load the persistent result cache from PATH before the run
                (cold start if missing/corrupt) and save it back after, so
@@ -147,6 +161,15 @@ flags:
   --no-fast-forward
                 server-wide: step every instruction instead of
                 extrapolating steady-state loop regions (bit-identical)
+  --no-delta-cache
+                server-wide: disable the shared converged-delta cache
+                (bit-identical; requests can't re-enable it)
+  --program-cache-cap N
+                server-wide per-worker decoded-program cache capacity
+                in programs (default 4)
+  --program-cache-bytes N
+                server-wide per-worker decoded-program cache budget in
+                bytes (default 24 MiB)
   --help        this text
 
 config flags (the base config; requests may override per request):
@@ -182,6 +205,8 @@ flags:
                     (scheduling-only; the results are bit-identical)
   --no-fast-forward disable loop-aware fast-forward for this request
                     (bit-identical; the summary's ff_instrs reads 0)
+  --no-delta-cache  disable converged-delta replay for this request
+                    (bit-identical; the summary's delta_hits reads 0)
   --priority N      scheduler priority 0-255, higher first (default 0);
                     lets a small interactive request overtake a running
                     full-grid sweep (scheduling-only, results are
@@ -244,6 +269,14 @@ fn apply_engine_flags(engine: &mut SweepEngine, flags: &Flags) {
     }
     if flags.get("no-fast-forward").is_some() {
         engine.set_fast_forward_override(Some(false));
+    }
+    if flags.get("no-delta-cache").is_some() {
+        engine.set_delta_cache_override(Some(false));
+    }
+    let pc_cap = flags.num("program-cache-cap");
+    let pc_bytes = flags.num("program-cache-bytes");
+    if pc_cap.is_some() || pc_bytes.is_some() {
+        engine.set_program_cache_limits(pc_cap, pc_bytes);
     }
 }
 
@@ -476,6 +509,9 @@ fn main() -> speed::Result<()> {
                     flags.num("shard-threshold")
                 },
                 fast_forward: flags.get("no-fast-forward").map(|_| false),
+                delta_cache: flags.get("no-delta-cache").map(|_| false),
+                program_cache_cap: flags.num("program-cache-cap"),
+                program_cache_bytes: flags.num("program-cache-bytes"),
                 limits: {
                     let mut limits = serve::ServeLimits::default();
                     if let Some(n) = flags.num("max-connections") {
@@ -552,6 +588,9 @@ fn main() -> speed::Result<()> {
             }
             if flags.get("no-fast-forward").is_some() {
                 req.fast_forward = false;
+            }
+            if flags.get("no-delta-cache").is_some() {
+                req.delta_cache = false;
             }
             if let Some(p) = flags.num::<u64>("priority") {
                 if p > u64::from(u8::MAX) {

@@ -24,6 +24,23 @@ fn small_spec(cfg: &SpeedConfig) -> SweepSpec {
         .threads(2)
 }
 
+/// Speed-backend spec with a layer steady enough to publish converged
+/// deltas (the analytic backends never do — delta records only exist
+/// for the cycle engine's steady-state regions).
+fn delta_spec(cfg: &SpeedConfig) -> SweepSpec {
+    SweepSpec::new(cfg.clone())
+        .network(
+            "t",
+            vec![
+                ConvLayer::new("c3", 8, 8, 8, 8, 3, 1, 1),
+                ConvLayer::new("steady", 16, 32, 40, 40, 3, 1, 1),
+            ],
+        )
+        .precisions(vec![Precision::Int8])
+        .strategies(vec![Strategy::Mixed])
+        .threads(2)
+}
+
 /// Unique scratch path per test (the test binary may run tests in
 /// parallel threads).
 fn scratch(tag: &str) -> std::path::PathBuf {
@@ -101,6 +118,54 @@ fn corrupted_and_mismatched_caches_are_rejected_without_panic() {
     // The cold engine still runs the grid fine afterwards.
     let out = victim.run(&spec).unwrap();
     assert!(out.executed_sims > 0);
+}
+
+#[test]
+fn persisted_deltas_replay_after_reload() {
+    let cfg = SpeedConfig::default();
+    let spec = delta_spec(&cfg);
+    let donor = SweepEngine::new();
+    let cold = donor.run(&spec).unwrap();
+    assert!(donor.cached_deltas() > 0, "the grid must publish converged deltas");
+    let bytes = donor.serialize_cache();
+
+    // A brand-new engine (≈ a restarted process) loads the deltas along
+    // with the memo entries…
+    let fresh = SweepEngine::new();
+    fresh.load_cache_bytes(&bytes).unwrap();
+    assert_eq!(fresh.cached_deltas(), donor.cached_deltas());
+    // …and a re-simulation (memoization off, so the memo table can't
+    // answer) replays them, bit-identically to the donor's cold run.
+    let warm = fresh.run(&spec.clone().memoize(false)).unwrap();
+    assert!(warm.executed_sims > 0, "memoize-off must actually re-simulate");
+    assert!(warm.delta_cache_hits > 0, "persisted deltas must replay");
+    assert_eq!(warm.results, cold.results, "delta replay must be bit-identical");
+}
+
+#[test]
+fn corrupted_delta_section_is_rejected_and_falls_back_cold() {
+    let cfg = SpeedConfig::default();
+    let spec = delta_spec(&cfg);
+    let donor = SweepEngine::new();
+    let cold = donor.run(&spec).unwrap();
+    assert!(donor.cached_deltas() > 0, "need a delta section to corrupt");
+    let good = donor.serialize_cache();
+
+    // Flip a byte inside the trailing delta records (the footer is the
+    // last 8 bytes; aim well before it): the checksum rejects the file
+    // and the engine stays cold on both tables.
+    let mut mangled = good.clone();
+    let at = mangled.len() - 16;
+    mangled[at] ^= 0x5A;
+    let victim = SweepEngine::new();
+    assert!(victim.load_cache_bytes(&mangled).is_err());
+    assert_eq!(victim.cached_sims(), 0, "rejected file must not seed the memo table");
+    assert_eq!(victim.cached_deltas(), 0, "rejected file must not seed the delta cache");
+
+    // The cold engine still simulates the grid fine, bit-identically.
+    let out = victim.run(&spec).unwrap();
+    assert!(out.executed_sims > 0);
+    assert_eq!(out.results, cold.results);
 }
 
 #[test]

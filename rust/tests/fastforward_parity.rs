@@ -74,6 +74,50 @@ fn unsharded_composition_is_bit_identical() {
     assert_parity(&spec, true);
 }
 
+/// Delta-cache parity contract: converged-delta replay must be
+/// bit-identical to full convergence over an every-network grid at two
+/// thread counts, cold *and* warm (the warm pass is where cached
+/// deltas actually replay). Memoization is off so the warm pass
+/// re-simulates every cell instead of answering from the memo table.
+#[test]
+fn delta_cache_is_bit_identical_across_thread_counts() {
+    let mut base = axes(SweepSpec::new(SpeedConfig::default())).memoize(false);
+    for m in all_models() {
+        let mut layers = m.layers;
+        layers.sort_by_key(|l| l.macs());
+        layers.truncate(1);
+        base = base.network(m.name, layers);
+    }
+    base = base.network("shardable", vec![ConvLayer::new("big", 64, 64, 30, 30, 3, 1, 1)]);
+    for threads in [1usize, 4] {
+        let spec = base.clone().threads(threads);
+        let engine = SweepEngine::new();
+        let cold = engine.run(&spec).expect("delta-on cold sweep");
+        let warm = engine.run(&spec).expect("delta-on warm sweep");
+        let off = SweepEngine::new()
+            .run(&spec.clone().delta_cache(false))
+            .expect("delta-off sweep");
+        assert_eq!(
+            cold.results, off.results,
+            "{threads} threads: delta cache moved a cycle on the cold pass"
+        );
+        assert_eq!(
+            warm.results, off.results,
+            "{threads} threads: delta replay moved a cycle on the warm pass"
+        );
+        assert_eq!(off.delta_cache_hits, 0, "{threads} threads: disabled cache must not hit");
+        assert!(engine.cached_deltas() > 0, "{threads} threads: no deltas were published");
+        assert!(
+            warm.delta_cache_hits > 0,
+            "{threads} threads: the warm pass must actually replay cached deltas"
+        );
+        assert!(
+            warm.fast_forwarded_instrs >= cold.fast_forwarded_instrs,
+            "{threads} threads: replay must never step more than full convergence"
+        );
+    }
+}
+
 /// The paper's entire benchmark grid, stepped twice (fast-forward on
 /// vs off). Minutes of simulation — weekly CI (`cargo test -- --ignored`).
 #[test]

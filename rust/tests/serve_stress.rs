@@ -226,6 +226,58 @@ fn concurrent_identical_cold_runs_coalesce_onto_one_simulation() {
 }
 
 #[test]
+fn concurrent_memoize_off_runs_share_the_delta_cache() {
+    // Memoization off: every tenant simulates every cell for itself, so
+    // the only thing the fleet can share is the engine-wide delta
+    // cache. Deltas are keyed by stable fingerprints and all tenants
+    // publish identical values, so the shared cache must converge to
+    // exactly the single-tenant count — and a later tenant must replay
+    // from it. All assertions hold under any interleaving.
+    const N: usize = 6;
+    let cfg = SpeedConfig::default();
+    let spec = Arc::new(
+        SweepSpec::new(cfg.clone())
+            .network("t", vec![ConvLayer::new("steady", 16, 32, 40, 40, 3, 1, 1)])
+            .precisions(vec![Precision::Int8])
+            .strategies(vec![Strategy::Mixed])
+            .memoize(false)
+            .threads(1),
+    );
+    let engine = Arc::new(SweepEngine::new());
+    let barrier = Arc::new(Barrier::new(N));
+    let mut runners = Vec::new();
+    for _ in 0..N {
+        let engine = Arc::clone(&engine);
+        let spec = Arc::clone(&spec);
+        let barrier = Arc::clone(&barrier);
+        runners.push(thread::spawn(move || {
+            barrier.wait();
+            engine.run(&spec).expect("memoize-off run")
+        }));
+    }
+    let outcomes: Vec<SweepOutcome> =
+        runners.into_iter().map(|h| h.join().expect("runner thread")).collect();
+
+    let solo = SweepEngine::new();
+    let solo_out = solo.run(&spec).expect("solo run");
+    assert!(solo.cached_deltas() > 0, "the layer must publish converged deltas");
+    for out in &outcomes {
+        assert_eq!(out.cache_hits, 0, "memoize-off tenants never hit the memo table");
+        assert!(out.executed_sims > 0);
+        assert_eq!(out.results, solo_out.results, "tenant result must be bit-identical");
+    }
+    assert_eq!(
+        engine.cached_deltas(),
+        solo.cached_deltas(),
+        "{N} concurrent publishers must agree on every delta key"
+    );
+    // A late tenant joining the warm fleet replays published deltas.
+    let warm = engine.run(&spec).expect("warm run");
+    assert!(warm.delta_cache_hits > 0, "a later tenant must replay the fleet's deltas");
+    assert_eq!(warm.results, solo_out.results);
+}
+
+#[test]
 fn failing_backend_aborts_pending_so_waiters_error_instead_of_deadlocking() {
     let cfg = SpeedConfig::default();
     let spec = Arc::new(one_layer_spec(&cfg, Arc::new(FailingBackend)));

@@ -157,6 +157,32 @@ fn work_order_is_result_invariant() {
             assert_eq!(mate, r, "{threads} threads: enqueue order changed `{}`", r.name);
         }
     }
+
+    // Wavefront ordering interleaves DRAM-bound and compute-bound work
+    // by roofline class — still pure scheduling. Pin it with a layer
+    // set that definitely lands in both classes: deep 3x3 convolutions
+    // (compute-bound) against large-spatial pointwise ones
+    // (DRAM-bound), forwards vs reversed at 1 and 4 threads.
+    let wave_layers = vec![
+        ConvLayer::new("deep3x3", 64, 64, 14, 14, 3, 1, 1),
+        ConvLayer::new("pw_wide", 16, 16, 56, 56, 1, 1, 0),
+        ConvLayer::new("mid3x3", 32, 32, 28, 28, 3, 1, 1),
+        ConvLayer::new("pw_mid", 8, 16, 40, 40, 1, 1, 0),
+    ];
+    let mut wave_reversed = wave_layers.clone();
+    wave_reversed.reverse();
+    let wavefront = SweepEngine::new().run(&spec_for(wave_layers, 4)).unwrap();
+    for threads in [1usize, 4] {
+        let rev = SweepEngine::new().run(&spec_for(wave_reversed.clone(), threads)).unwrap();
+        for r in &wavefront.results {
+            let mate = rev
+                .results
+                .iter()
+                .find(|o| o.name == r.name)
+                .expect("same jobs under any enumeration order");
+            assert_eq!(mate, r, "{threads} threads: wavefront order changed `{}`", r.name);
+        }
+    }
 }
 
 #[test]
