@@ -74,6 +74,15 @@ pub fn fp_str(h: u64, s: &str) -> u64 {
     fp_bytes(h, s.as_bytes())
 }
 
+/// Content fingerprint of a serialized cache blob (FNV-1a over the
+/// whole byte string). Persist encoding is deterministic, so equal
+/// cache states fingerprint equal — the content-addressing the fleet
+/// cache exchange uses to skip pushing a blob a node already holds
+/// (see the `cache_export` reply's `fp` field).
+pub fn blob_fingerprint(bytes: &[u8]) -> u64 {
+    fp_bytes(FP_SEED, bytes)
+}
+
 /// Stable fingerprint of a machine configuration (f64 fields hashed by
 /// bit pattern, FNV-1a — stable across processes and toolchains, which
 /// the on-disk cache requires).

@@ -1,0 +1,902 @@
+//! Distributed sweep fleet: a coordinator that fans one sweep request
+//! out over remote `speed serve` worker nodes.
+//!
+//! The paper's north star is scalability; the serve protocol
+//! ([`super::serve`], `docs/PROTOCOL.md`) and the versioned persist
+//! format (`docs/PERSIST.md`) are the two halves of the
+//! distribution story this module completes. `speed fleet --node
+//! HOST:PORT --node HOST:PORT ... <sweep flags>` decomposes the
+//! requested grid into single-cell work items — one
+//! (backend, precision, strategy, layer) request per item, in the
+//! engine's job enumeration order — and schedules them across the
+//! nodes with work-stealing: every node's connection thread pops the
+//! next item off one shared queue, so fast nodes naturally absorb more
+//! of the grid. Items enter the queue in the same wavefront LPT order
+//! a local engine would claim them (`sweep::wavefront_order`:
+//! DRAM-bound and compute-bound classes LPT-sorted and interleaved),
+//! and each node fans large layers out across its own worker pool
+//! (intra-layer sharding), so the fleet inherits both scheduler layers
+//! without new mechanism.
+//!
+//! # Failure handling
+//!
+//! Nodes are expected to die mid-sweep. Every item transaction runs
+//! under a socket timeout; a transport failure (connect refusal,
+//! timeout, mid-reply disconnect, unparseable reply) requeues the item
+//! for any surviving node and backs the failing connection off
+//! exponentially. `"overload"` error replies (the node's admission
+//! control) follow the same requeue/backoff path but are counted
+//! separately. A node failing [`FleetOptions::max_node_failures`]
+//! times *consecutively* is declared dead and its thread exits; the
+//! fleet fails only when an item exceeds
+//! [`FleetOptions::max_item_attempts`] or every node is dead with work
+//! outstanding. Non-`overload` error replies are deterministic request
+//! rejections — retrying elsewhere cannot help — and fail the fleet
+//! immediately. Per-node health/latency telemetry rides the final
+//! summary ([`NodeReport`], emitted as `node` records).
+//!
+//! # Cache exchange
+//!
+//! Before and after the sweep, nodes warm each other: the coordinator
+//! pulls every node's persist blob for the request's config
+//! fingerprint (`cache_export`), unions them (memo entries keyed by
+//! `SimKey`, delta records by their fingerprint key), and pushes the
+//! union back (`cache_import`) — skipping nodes whose exported blob
+//! already content-fingerprints equal to the union
+//! ([`super::backend::blob_fingerprint`]). A shape simulated anywhere
+//! in the fleet replays everywhere; a second fleet run over warm nodes
+//! executes zero simulations. Exchange failures are non-fatal (the
+//! exchange is an optimization; parity never depends on it).
+//!
+//! # Parity contract
+//!
+//! Bit-identical-to-local is the contract: the assembled `block`
+//! records — re-tagged with the coordinator's request id — and the
+//! fleet totals match a single local engine running the same request,
+//! at any node count and under injected node loss
+//! (`tests/fleet_parity.rs` pins this, kill and all). This holds by
+//! construction: items partition the grid's concrete cells, every node
+//! computes cells with the same deterministic engine, and assembly
+//! follows enumeration order, not completion order.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::backend::{blob_fingerprint, by_name, config_fingerprint, SimBackend};
+use super::persist;
+use super::serve::{hex_decode, hex_encode, parse_record, quote, Op, Request, Value};
+use super::sweep::{wavefront_order, CachedSim, SimKey};
+use crate::arch::SpeedConfig;
+use crate::core::CachedDelta;
+use crate::cost::roofline_gops;
+use crate::error::{Error, Result};
+use crate::models::model_by_name;
+
+/// `speed fleet` configuration.
+#[derive(Debug, Clone)]
+pub struct FleetOptions {
+    /// Worker node addresses (`HOST:PORT`), one `speed serve --tcp`
+    /// each. At least one required.
+    pub nodes: Vec<String>,
+    /// The coordinator's base machine configuration; request overrides
+    /// apply on top, exactly as they would on a local engine.
+    pub cfg: SpeedConfig,
+    /// The sweep request to distribute (its `id` tags every assembled
+    /// reply record).
+    pub request: Request,
+    /// Per-item socket timeout in seconds (connect, send and the full
+    /// reply stream). A node that blows this is failed and the item
+    /// requeued. Size it to the slowest expected cold item, not the
+    /// line rate — nodes stream blocks only after a cell completes.
+    pub item_timeout_secs: u64,
+    /// An item seen this many times without success fails the fleet
+    /// (the grid is not computable on the surviving nodes).
+    pub max_item_attempts: u32,
+    /// Consecutive failures (transport or `overload`) after which a
+    /// node is declared dead and stops taking work. A single success
+    /// resets the count.
+    pub max_node_failures: u32,
+    /// Base backoff after a node failure, in milliseconds; doubles per
+    /// consecutive failure, capped at 2 s.
+    pub backoff_base_ms: u64,
+    /// Pull/union/push persist blobs between nodes before and after
+    /// the sweep (on by default; scheduling/warmth only — parity never
+    /// depends on it).
+    pub cache_exchange: bool,
+}
+
+impl FleetOptions {
+    /// Options with the default failure policy (120 s item timeout,
+    /// 8 attempts per item, 3 consecutive failures per node, 50 ms
+    /// base backoff, cache exchange on).
+    pub fn new(nodes: Vec<String>, cfg: SpeedConfig, request: Request) -> Self {
+        FleetOptions {
+            nodes,
+            cfg,
+            request,
+            item_timeout_secs: 120,
+            max_item_attempts: 8,
+            max_node_failures: 3,
+            backoff_base_ms: 50,
+            cache_exchange: true,
+        }
+    }
+}
+
+/// Health/latency telemetry for one node, emitted as a `node` record
+/// ([`node_line`]) in the fleet reply.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct NodeReport {
+    /// The node's address as given.
+    pub addr: String,
+    /// Work items this node completed.
+    pub items_done: u64,
+    /// Transport failures (connect/timeout/disconnect/garbage) charged
+    /// to this node, including during cache exchange.
+    pub failures: u64,
+    /// `"overload"` replies from this node's admission control.
+    pub overloads: u64,
+    /// Whether the node was declared dead (hit
+    /// [`FleetOptions::max_node_failures`] consecutive failures).
+    pub dead: bool,
+    /// Total wall-clock this node spent on successful items.
+    pub busy_ms: u64,
+    /// Slowest successful item on this node — its critical-path floor.
+    pub max_item_ms: u64,
+    /// Records (memo + delta) pulled from this node by cache exchange.
+    pub pulled_entries: u64,
+    /// Records pushed to this node by cache exchange.
+    pub pushed_entries: u64,
+}
+
+/// What a fleet run produced: the assembled per-layer `block` lines
+/// (bit-identical to a local engine's, re-tagged with the
+/// coordinator's request id, in engine enumeration order) plus fleet
+/// totals and per-node telemetry.
+#[derive(Debug, Clone)]
+pub struct FleetOutcome {
+    /// Assembled `block` reply lines, in the local engine's job order.
+    pub blocks: Vec<String>,
+    /// Total jobs across every item (== `blocks.len()`).
+    pub jobs: u64,
+    /// Simulations the fleet actually executed (sum of item
+    /// summaries). A warm fleet reports 0.
+    pub sims: u64,
+    /// Cache hits summed across items.
+    pub cache_hits: u64,
+    /// Dedup hits summed across items.
+    pub dedup_hits: u64,
+    /// Coalesced cells summed across items.
+    pub coalesced: u64,
+    /// Items requeued after a node failure or `overload`.
+    pub requeues: u64,
+    /// Coordinator wall-clock for the whole run.
+    pub elapsed_ms: u64,
+    /// Per-node telemetry, in `--node` order.
+    pub nodes: Vec<NodeReport>,
+}
+
+/// One `node` telemetry record of the fleet reply.
+pub fn node_line(r: &NodeReport) -> String {
+    format!(
+        "{{\"type\":\"node\",\"addr\":{},\"items\":{},\"failures\":{},\"overloads\":{},\"dead\":{},\"busy_ms\":{},\"max_item_ms\":{},\"pulled_entries\":{},\"pushed_entries\":{}}}",
+        quote(&r.addr),
+        r.items_done,
+        r.failures,
+        r.overloads,
+        r.dead,
+        r.busy_ms,
+        r.max_item_ms,
+        r.pulled_entries,
+        r.pushed_entries,
+    )
+}
+
+/// The terminal `fleet_summary` record of the fleet reply.
+pub fn fleet_summary_line(id: u64, out: &FleetOutcome) -> String {
+    format!(
+        "{{\"type\":\"fleet_summary\",\"id\":{id},\"jobs\":{},\"sims\":{},\"cache_hits\":{},\"dedup_hits\":{},\"coalesced\":{},\"requeues\":{},\"nodes\":{},\"dead_nodes\":{},\"elapsed_ms\":{}}}",
+        out.jobs,
+        out.sims,
+        out.cache_hits,
+        out.dedup_hits,
+        out.coalesced,
+        out.requeues,
+        out.nodes.len(),
+        out.nodes.iter().filter(|n| n.dead).count(),
+        out.elapsed_ms,
+    )
+}
+
+/// Re-tag a reply record with the coordinator's request id (items
+/// travel under their own per-item ids; assembled output must carry
+/// the id the client asked with).
+pub(crate) fn rewrite_id(line: &str, id: u64) -> String {
+    let Some(pos) = line.find("\"id\":") else {
+        return line.to_string();
+    };
+    let start = pos + "\"id\":".len();
+    let end = line[start..]
+        .bytes()
+        .position(|b| !b.is_ascii_digit())
+        .map_or(line.len(), |o| start + o);
+    format!("{}{id}{}", &line[..start], &line[end..])
+}
+
+/// The decomposed grid: per-item single-cell requests in engine
+/// enumeration order, the wavefront dispatch order over them, and the
+/// resolved (override-applied) config the items run under.
+pub(crate) struct FleetPlan {
+    pub(crate) items: Vec<Request>,
+    pub(crate) order: Vec<usize>,
+    pub(crate) resolved_cfg: SpeedConfig,
+}
+
+/// Decompose `base` into single-cell work items. Enumeration follows
+/// the engine's job order — backend, precision, strategy, layer, with
+/// unsupported precision×backend cells skipped — so concatenating item
+/// blocks in item order reproduces a local engine's block order
+/// exactly. Item ids are 1-based item indices.
+pub(crate) fn plan_items(base: &Request, cfg: &SpeedConfig) -> Result<FleetPlan> {
+    // Full request validation (network, layers, overrides, backends)
+    // happens once here, on the coordinator, so a bad request fails
+    // fast instead of fanning out N deterministic rejections.
+    let spec = base.to_spec(cfg)?;
+    let resolved_cfg = spec.configs[0].clone();
+    let model = model_by_name(&base.network)
+        .ok_or_else(|| Error::protocol(format!("unknown network `{}`", base.network)))?;
+    let layer_idx: Vec<usize> = match &base.layers {
+        Some(idx) => idx.clone(),
+        None => (0..model.layers.len()).collect(),
+    };
+    let mut items = Vec::new();
+    let mut est: Vec<u64> = Vec::new();
+    let mut dram_bound: Vec<bool> = Vec::new();
+    for bname in &base.backends {
+        let backend = by_name(bname)
+            .ok_or_else(|| Error::protocol(format!("unknown backend `{bname}`")))?;
+        for &p in &base.precisions {
+            if !backend.supports_precision(p) {
+                // The engine enumerates an empty block here; there is
+                // nothing to dispatch.
+                continue;
+            }
+            for &s in &base.strategies {
+                for &li in &layer_idx {
+                    let layer = &model.layers[li];
+                    items.push(Request {
+                        id: items.len() as u64 + 1,
+                        op: Op::Sweep,
+                        network: base.network.clone(),
+                        layers: Some(vec![li]),
+                        backends: vec![bname.clone()],
+                        precisions: vec![p],
+                        strategies: vec![s],
+                        threads: base.threads,
+                        memoize: base.memoize,
+                        shard: base.shard,
+                        shard_threshold: base.shard_threshold,
+                        fast_forward: base.fast_forward,
+                        delta_cache: base.delta_cache,
+                        priority: base.priority,
+                        overrides: base.overrides,
+                        cfg_fp: None,
+                        blob: None,
+                    });
+                    est.push(if layer.degenerate() { 0 } else { layer.macs() });
+                    dram_bound.push(
+                        !layer.degenerate()
+                            && roofline_gops(&resolved_cfg, layer, p)
+                                < resolved_cfg.peak_gops(p),
+                    );
+                }
+            }
+        }
+    }
+    let order = wavefront_order(&est, &dram_bound);
+    Ok(FleetPlan { items, order, resolved_cfg })
+}
+
+/// What one completed item reported back.
+struct ItemReply {
+    blocks: Vec<String>,
+    jobs: u64,
+    sims: u64,
+    cache_hits: u64,
+    dedup_hits: u64,
+    coalesced: u64,
+}
+
+/// Scheduler state shared by every node thread.
+struct FleetState {
+    queue: VecDeque<usize>,
+    attempts: Vec<u32>,
+    results: Vec<Option<ItemReply>>,
+    remaining: usize,
+    requeues: u64,
+    fatal: Option<Error>,
+}
+
+fn lock_state(state: &Mutex<FleetState>) -> std::sync::MutexGuard<'_, FleetState> {
+    state.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn get<'a>(fields: &'a [(String, Value)], name: &str) -> Option<&'a Value> {
+    fields.iter().find(|(k, _)| k == name).map(|(_, v)| v)
+}
+
+fn get_u64(fields: &[(String, Value)], name: &str) -> Option<u64> {
+    match get(fields, name) {
+        Some(Value::Int(v)) => Some(*v),
+        _ => None,
+    }
+}
+
+fn get_str<'a>(fields: &'a [(String, Value)], name: &str) -> Option<&'a str> {
+    match get(fields, name) {
+        Some(Value::Str(s)) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+/// One persistent protocol connection to a node, reconnected lazily
+/// after failures.
+struct NodeConn {
+    addr: String,
+    timeout: Duration,
+    stream: Option<(BufReader<TcpStream>, TcpStream)>,
+}
+
+impl NodeConn {
+    fn new(addr: &str, timeout: Duration) -> Self {
+        NodeConn { addr: addr.to_string(), timeout, stream: None }
+    }
+
+    fn connect(&mut self) -> Result<()> {
+        let addrs = self
+            .addr
+            .to_socket_addrs()
+            .map_err(|e| Error::protocol(format!("fleet: node `{}`: {e}", self.addr)))?;
+        let mut last: Option<std::io::Error> = None;
+        for sa in addrs {
+            match TcpStream::connect_timeout(&sa, self.timeout) {
+                Ok(s) => {
+                    s.set_read_timeout(Some(self.timeout))?;
+                    s.set_write_timeout(Some(self.timeout))?;
+                    let read_half = s.try_clone()?;
+                    self.stream = Some((BufReader::new(read_half), s));
+                    return Ok(());
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(match last {
+            Some(e) => e.into(),
+            None => Error::protocol(format!(
+                "fleet: node `{}` resolved to no addresses",
+                self.addr
+            )),
+        })
+    }
+
+    /// Send one request line, read reply lines through the terminal
+    /// record. Any failure tears the connection down (the next call
+    /// reconnects) — a half-consumed reply stream is never reused.
+    fn transact(&mut self, line: &str) -> Result<Vec<String>> {
+        if self.stream.is_none() {
+            self.connect()?;
+        }
+        let out = self.try_transact(line);
+        if out.is_err() {
+            self.stream = None;
+        }
+        out
+    }
+
+    fn try_transact(&mut self, line: &str) -> Result<Vec<String>> {
+        let (reader, writer) = self.stream.as_mut().expect("connected by transact");
+        writeln!(writer, "{line}")?;
+        writer.flush()?;
+        let mut lines = Vec::new();
+        loop {
+            let mut buf = String::new();
+            if reader.read_line(&mut buf)? == 0 {
+                return Err(Error::protocol(format!(
+                    "fleet: node `{}` closed the connection before a terminal reply",
+                    self.addr
+                )));
+            }
+            let trimmed = buf.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let fields = parse_record(trimmed).map_err(|e| {
+                Error::protocol(format!(
+                    "fleet: node `{}` sent an unparseable reply: {e}",
+                    self.addr
+                ))
+            })?;
+            let ty = get_str(&fields, "type").ok_or_else(|| {
+                Error::protocol(format!(
+                    "fleet: node `{}` sent a reply without a `type`",
+                    self.addr
+                ))
+            })?;
+            let terminal = matches!(
+                ty,
+                "summary" | "error" | "pong" | "bye" | "cache" | "imported"
+            );
+            lines.push(trimmed.to_string());
+            if terminal {
+                return Ok(lines);
+            }
+        }
+    }
+}
+
+/// Why an item transaction did not succeed.
+enum ItemError {
+    /// Transport/node trouble or admission `overload`: requeue the
+    /// item, back off, maybe declare the node dead.
+    Retry { overload: bool, err: Error },
+    /// A deterministic request rejection: no node can serve this item;
+    /// fail the fleet.
+    Fatal(Error),
+}
+
+fn run_item(conn: &mut NodeConn, req: &Request) -> std::result::Result<ItemReply, ItemError> {
+    let lines = conn
+        .transact(&req.to_line())
+        .map_err(|err| ItemError::Retry { overload: false, err })?;
+    let mut blocks = Vec::new();
+    for line in &lines {
+        let fields = parse_record(line).expect("validated in transact");
+        match get_str(&fields, "type").expect("validated in transact") {
+            "block" => blocks.push(line.clone()),
+            "summary" => {
+                let n = |name: &str| get_u64(&fields, name).unwrap_or(0);
+                let reply = ItemReply {
+                    jobs: n("jobs"),
+                    sims: n("sims"),
+                    cache_hits: n("cache_hits"),
+                    dedup_hits: n("dedup_hits"),
+                    coalesced: n("coalesced"),
+                    blocks,
+                };
+                if reply.jobs != reply.blocks.len() as u64 {
+                    return Err(ItemError::Retry {
+                        overload: false,
+                        err: Error::protocol(format!(
+                            "fleet: node `{}` summarized {} job(s) but streamed {} block(s)",
+                            conn.addr,
+                            reply.jobs,
+                            reply.blocks.len()
+                        )),
+                    });
+                }
+                return Ok(reply);
+            }
+            "error" => {
+                let msg = get_str(&fields, "message").unwrap_or("unspecified").to_string();
+                return if get_str(&fields, "code") == Some("overload") {
+                    Err(ItemError::Retry {
+                        overload: true,
+                        err: Error::protocol(format!(
+                            "fleet: node `{}` overloaded: {msg}",
+                            conn.addr
+                        )),
+                    })
+                } else {
+                    Err(ItemError::Fatal(Error::protocol(format!(
+                        "fleet: node `{}` rejected item {}: {msg}",
+                        conn.addr, req.id
+                    ))))
+                };
+            }
+            other => {
+                return Err(ItemError::Retry {
+                    overload: false,
+                    err: Error::protocol(format!(
+                        "fleet: node `{}` sent unexpected `{other}` reply to a sweep item",
+                        conn.addr
+                    )),
+                })
+            }
+        }
+    }
+    Err(ItemError::Retry {
+        overload: false,
+        err: Error::protocol(format!(
+            "fleet: node `{}` reply stream ended without a summary",
+            conn.addr
+        )),
+    })
+}
+
+/// One node's scheduling loop: steal items off the shared queue until
+/// the grid is done, the fleet aborts, or this node dies.
+fn node_worker(
+    addr: &str,
+    items: &[Request],
+    state: &Mutex<FleetState>,
+    abort: &AtomicBool,
+    live_nodes: &AtomicUsize,
+    opts: &FleetOptions,
+) -> NodeReport {
+    enum Next {
+        Item(usize),
+        Wait,
+        Done,
+    }
+    let mut conn = NodeConn::new(addr, Duration::from_secs(opts.item_timeout_secs.max(1)));
+    let mut report = NodeReport { addr: addr.to_string(), ..Default::default() };
+    let mut consecutive = 0u32;
+    loop {
+        if abort.load(Ordering::SeqCst) {
+            break;
+        }
+        let next = {
+            let mut st = lock_state(state);
+            if st.fatal.is_some() || st.remaining == 0 {
+                Next::Done
+            } else {
+                match st.queue.pop_front() {
+                    None => Next::Wait,
+                    Some(i) => {
+                        st.attempts[i] += 1;
+                        if st.attempts[i] > opts.max_item_attempts {
+                            st.fatal = Some(Error::protocol(format!(
+                                "fleet: item {} failed {} attempt(s); giving up",
+                                i + 1,
+                                opts.max_item_attempts
+                            )));
+                            abort.store(true, Ordering::SeqCst);
+                            Next::Done
+                        } else {
+                            Next::Item(i)
+                        }
+                    }
+                }
+            }
+        };
+        let item = match next {
+            Next::Done => break,
+            Next::Wait => {
+                // Another node holds the last item(s); it may yet fail
+                // and requeue them, so idle nodes keep polling.
+                thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+            Next::Item(i) => i,
+        };
+        let t0 = Instant::now();
+        match run_item(&mut conn, &items[item]) {
+            Ok(reply) => {
+                let ms = t0.elapsed().as_millis() as u64;
+                report.items_done += 1;
+                report.busy_ms += ms;
+                report.max_item_ms = report.max_item_ms.max(ms);
+                consecutive = 0;
+                let mut st = lock_state(state);
+                st.results[item] = Some(reply);
+                st.remaining -= 1;
+            }
+            Err(ItemError::Fatal(e)) => {
+                let mut st = lock_state(state);
+                st.fatal = Some(e);
+                abort.store(true, Ordering::SeqCst);
+                break;
+            }
+            Err(ItemError::Retry { overload, err }) => {
+                if overload {
+                    report.overloads += 1;
+                } else {
+                    report.failures += 1;
+                }
+                consecutive += 1;
+                {
+                    let mut st = lock_state(state);
+                    st.queue.push_back(item);
+                    st.requeues += 1;
+                }
+                if consecutive >= opts.max_node_failures {
+                    report.dead = true;
+                    // The last node standing cannot abandon outstanding
+                    // work silently — that would hang the fleet.
+                    if live_nodes.fetch_sub(1, Ordering::SeqCst) == 1 {
+                        let mut st = lock_state(state);
+                        if st.remaining > 0 && st.fatal.is_none() {
+                            st.fatal = Some(Error::protocol(format!(
+                                "fleet: all nodes lost with {} item(s) unfinished (last: {err})",
+                                st.remaining
+                            )));
+                        }
+                        abort.store(true, Ordering::SeqCst);
+                    }
+                    break;
+                }
+                let exp = consecutive.saturating_sub(1).min(5);
+                let ms = opts.backoff_base_ms.saturating_mul(1 << exp).min(2000);
+                thread::sleep(Duration::from_millis(ms));
+            }
+        }
+    }
+    report
+}
+
+/// Pull every live node's blob for `cfg_fp`, union, push the union
+/// back to nodes that do not already hold it. Failures degrade to
+/// telemetry — the exchange is warmth, never correctness.
+fn exchange_caches(
+    opts: &FleetOptions,
+    cfg_fp: u64,
+    reports: &mut [NodeReport],
+    id_base: u64,
+) {
+    let timeout = Duration::from_secs(opts.item_timeout_secs.max(1));
+    let mut conns: Vec<NodeConn> =
+        opts.nodes.iter().map(|a| NodeConn::new(a, timeout)).collect();
+    let mut exported: Vec<Option<(u64, Vec<u8>)>> = vec![None; opts.nodes.len()];
+    for (ni, conn) in conns.iter_mut().enumerate() {
+        if reports[ni].dead {
+            continue;
+        }
+        let req = Request {
+            id: id_base + ni as u64,
+            op: Op::CacheExport,
+            cfg_fp: Some(cfg_fp),
+            ..Default::default()
+        };
+        let reply = conn.transact(&req.to_line()).ok().and_then(|lines| {
+            let fields = parse_record(lines.last()?).ok()?;
+            if get_str(&fields, "type")? != "cache" {
+                return None;
+            }
+            let blob = hex_decode(get_str(&fields, "blob")?).ok()?;
+            let pulled = get_u64(&fields, "entries")? + get_u64(&fields, "deltas")?;
+            Some((blob_fingerprint(&blob), blob, pulled))
+        });
+        match reply {
+            Some((fp, blob, pulled)) => {
+                reports[ni].pulled_entries += pulled;
+                exported[ni] = Some((fp, blob));
+            }
+            None => reports[ni].failures += 1,
+        }
+    }
+    // Union every blob's records. Memo values for the same key are
+    // bit-identical across nodes (the determinism contract), so
+    // first-in wins losslessly; delta records are advisory either way.
+    let mut memo: HashMap<SimKey, CachedSim> = HashMap::new();
+    let mut deltas: BTreeMap<u64, CachedDelta> = BTreeMap::new();
+    for export in exported.iter().flatten() {
+        let Ok((entries, ds)) = persist::decode(&export.1) else {
+            continue;
+        };
+        for (k, v) in entries {
+            memo.entry(k).or_insert(v);
+        }
+        for (k, d) in ds {
+            deltas.entry(k).or_insert(d);
+        }
+    }
+    let delta_vec: Vec<(u64, CachedDelta)> = deltas.into_iter().collect();
+    let union = persist::encode(memo.iter(), &delta_vec);
+    let union_fp = blob_fingerprint(&union);
+    let union_records = (memo.len() + delta_vec.len()) as u64;
+    let union_hex = hex_encode(&union);
+    for (ni, conn) in conns.iter_mut().enumerate() {
+        // Only push where it changes anything: a node whose export
+        // already fingerprints to the union holds every record.
+        let skip = match &exported[ni] {
+            Some((fp, _)) => *fp == union_fp,
+            None => true, // export failed; don't compound the failure
+        };
+        if skip || reports[ni].dead {
+            continue;
+        }
+        let req = Request {
+            id: id_base + opts.nodes.len() as u64 + ni as u64,
+            op: Op::CacheImport,
+            blob: Some(union_hex.clone()),
+            ..Default::default()
+        };
+        let ok = conn
+            .transact(&req.to_line())
+            .ok()
+            .and_then(|lines| {
+                let fields = parse_record(lines.last()?).ok()?;
+                (get_str(&fields, "type")? == "imported").then_some(())
+            })
+            .is_some();
+        if ok {
+            reports[ni].pushed_entries += union_records;
+        } else {
+            reports[ni].failures += 1;
+        }
+    }
+}
+
+/// Run one sweep request across the fleet. Returns the assembled
+/// outcome; the caller (the `speed fleet` subcommand or a test)
+/// prints the `block`/`node`/`fleet_summary` lines.
+pub fn run_fleet(opts: &FleetOptions) -> Result<FleetOutcome> {
+    if opts.nodes.is_empty() {
+        return Err(Error::protocol("fleet: need at least one node"));
+    }
+    if opts.request.op != Op::Sweep {
+        return Err(Error::protocol("fleet: only sweep requests distribute"));
+    }
+    let t0 = Instant::now();
+    let plan = plan_items(&opts.request, &opts.cfg)?;
+    let cfg_fp = config_fingerprint(&plan.resolved_cfg);
+    let mut reports: Vec<NodeReport> = opts
+        .nodes
+        .iter()
+        .map(|a| NodeReport { addr: a.clone(), ..Default::default() })
+        .collect();
+
+    // Pre-sweep exchange: whatever any node already knows about this
+    // config, every node knows before work starts.
+    if opts.cache_exchange {
+        exchange_caches(opts, cfg_fp, &mut reports, 1_000_000);
+    }
+
+    let n_items = plan.items.len();
+    let state = Mutex::new(FleetState {
+        queue: plan.order.iter().copied().collect(),
+        attempts: vec![0; n_items],
+        results: (0..n_items).map(|_| None).collect(),
+        remaining: n_items,
+        requeues: 0,
+        fatal: None,
+    });
+    let abort = AtomicBool::new(false);
+    let live_nodes = AtomicUsize::new(opts.nodes.len());
+    let items = &plan.items;
+    let worker_reports: Vec<NodeReport> = thread::scope(|s| {
+        let handles: Vec<_> = opts
+            .nodes
+            .iter()
+            .map(|addr| {
+                let state = &state;
+                let abort = &abort;
+                let live_nodes = &live_nodes;
+                s.spawn(move || node_worker(addr, items, state, abort, live_nodes, opts))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .zip(&opts.nodes)
+            .map(|(h, addr)| {
+                h.join().unwrap_or_else(|_| NodeReport {
+                    addr: addr.clone(),
+                    dead: true,
+                    ..Default::default()
+                })
+            })
+            .collect()
+    });
+    for (r, w) in reports.iter_mut().zip(worker_reports) {
+        r.items_done += w.items_done;
+        r.failures += w.failures;
+        r.overloads += w.overloads;
+        r.dead |= w.dead;
+        r.busy_ms += w.busy_ms;
+        r.max_item_ms = r.max_item_ms.max(w.max_item_ms);
+    }
+
+    let st = state.into_inner().unwrap_or_else(|p| p.into_inner());
+    if let Some(e) = st.fatal {
+        return Err(e);
+    }
+    debug_assert_eq!(st.remaining, 0);
+
+    // Post-sweep exchange: the fleet leaves every surviving node warm,
+    // so the next run — against any subset of nodes — is pure cache.
+    if opts.cache_exchange {
+        exchange_caches(opts, cfg_fp, &mut reports, 2_000_000);
+    }
+
+    let mut out = FleetOutcome {
+        blocks: Vec::new(),
+        jobs: 0,
+        sims: 0,
+        cache_hits: 0,
+        dedup_hits: 0,
+        coalesced: 0,
+        requeues: st.requeues,
+        elapsed_ms: t0.elapsed().as_millis() as u64,
+        nodes: reports,
+    };
+    for reply in st.results.into_iter() {
+        let reply = reply.expect("remaining == 0 implies every result present");
+        for b in &reply.blocks {
+            out.blocks.push(rewrite_id(b, opts.request.id));
+        }
+        out.jobs += reply.jobs;
+        out.sims += reply.sims;
+        out.cache_hits += reply.cache_hits;
+        out.dedup_hits += reply.dedup_hits;
+        out.coalesced += reply.coalesced;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Precision;
+    use crate::dataflow::Strategy;
+
+    #[test]
+    fn rewrite_id_replaces_only_the_id_run() {
+        let line = "{\"type\":\"block\",\"id\":17,\"layer\":\"id:1\",\"cycles\":42}";
+        assert_eq!(
+            rewrite_id(line, 7),
+            "{\"type\":\"block\",\"id\":7,\"layer\":\"id:1\",\"cycles\":42}"
+        );
+        assert_eq!(rewrite_id("{\"type\":\"x\"}", 7), "{\"type\":\"x\"}");
+        assert_eq!(rewrite_id("{\"id\":1}", 12345), "{\"id\":12345}");
+    }
+
+    #[test]
+    fn plan_follows_engine_enumeration_and_skips_unsupported() {
+        let base = Request {
+            id: 9,
+            network: "SqueezeNet".into(),
+            layers: Some(vec![1, 2]),
+            backends: vec!["speed".into(), "ara".into()],
+            precisions: vec![Precision::Int8, Precision::Int4],
+            strategies: vec![Strategy::FeatureFirst],
+            threads: Some(1),
+            ..Default::default()
+        };
+        let plan = plan_items(&base, &SpeedConfig::default()).unwrap();
+        // speed supports both precisions (2×2 cells), ara skips Int4
+        // (2 cells) — exactly like the engine's empty-block rule.
+        assert_eq!(plan.items.len(), 6);
+        let cell = |i: usize| {
+            let it = &plan.items[i];
+            (
+                it.backends[0].clone(),
+                it.precisions[0],
+                it.layers.clone().unwrap()[0],
+            )
+        };
+        assert_eq!(cell(0), ("speed".into(), Precision::Int8, 1));
+        assert_eq!(cell(1), ("speed".into(), Precision::Int8, 2));
+        assert_eq!(cell(2), ("speed".into(), Precision::Int4, 1));
+        assert_eq!(cell(3), ("speed".into(), Precision::Int4, 2));
+        assert_eq!(cell(4), ("ara".into(), Precision::Int8, 1));
+        assert_eq!(cell(5), ("ara".into(), Precision::Int8, 2));
+        // Item ids are 1-based indices; requests are single-cell.
+        for (i, it) in plan.items.iter().enumerate() {
+            assert_eq!(it.id, i as u64 + 1);
+            assert_eq!(it.layers.as_ref().unwrap().len(), 1);
+            assert_eq!(it.threads, Some(1));
+        }
+        // The dispatch order is a permutation of every item.
+        let mut seen = plan.order.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..plan.items.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn plan_rejects_what_the_engine_would() {
+        let bad = Request { id: 1, network: "NopeNet".into(), ..Default::default() };
+        assert!(plan_items(&bad, &SpeedConfig::default()).is_err());
+        let bad = Request {
+            id: 1,
+            network: "SqueezeNet".into(),
+            layers: Some(vec![999]),
+            ..Default::default()
+        };
+        assert!(plan_items(&bad, &SpeedConfig::default()).is_err());
+    }
+}

@@ -4,10 +4,13 @@
 //! roofline envelope), intra-layer shard fan-out for giant layers,
 //! persistent cross-process result caching with LRU bounding, the
 //! long-running sweep server (`speed serve`) with its line protocol,
-//! and the drivers that regenerate every figure/table of the paper.
+//! the fleet coordinator (`speed fleet`) that fans one sweep out over
+//! remote serve nodes, and the drivers that regenerate every
+//! figure/table of the paper.
 
 pub mod backend;
 pub mod experiments;
+pub mod fleet;
 mod persist;
 pub mod report;
 pub mod runner;
@@ -18,6 +21,7 @@ pub use backend::{
     config_fingerprint, AraAnalytic, DecodedProgram, GoldenFunctional, ProgramCache,
     RooflineBound, SimBackend, SlotPool, SpeedCycle, WorkerSlot,
 };
+pub use fleet::{run_fleet, FleetOptions, FleetOutcome, NodeReport};
 pub use serve::{Request, ServeLimits, ServeShared, ServeStats, StreamSink, TcpReport};
 pub use runner::{
     run_functional_conv, simulate_layer, simulate_network, LayerResult, NetworkResult,

@@ -482,4 +482,41 @@ mod tests {
         // refooter helper.
         assert!(decode(&refooter(bytes)).is_ok());
     }
+
+    /// `docs/PERSIST.md` is the normative description of this file;
+    /// hold its byte-level claims to the constants actually compiled
+    /// in, so a format change cannot land without the doc.
+    #[test]
+    fn docs_match_wire_constants() {
+        let doc = include_str!("../../docs/PERSIST.md");
+        let claims = [
+            format!("\"{}\"", std::str::from_utf8(MAGIC).unwrap()),
+            format!("currently {VERSION}"),
+            format!("count × {ENTRY_BYTES} B"),
+            format!("{ENTRY_BYTES} bytes = {KEY_BYTES}-byte key + {STATS_BYTES}-byte stats"),
+            format!("{STATS_BYTES} bytes = 19 × u64"),
+            format!("{DELTA_RECORD_MIN_BYTES} bytes minimum"),
+            format!("header + footer ({} bytes)", HEADER_BYTES + FOOTER_BYTES),
+        ];
+        for claim in &claims {
+            assert!(doc.contains(claim.as_str()), "PERSIST.md drifted: missing `{claim}`");
+        }
+        // Every stats field name the encoder writes, in prose order.
+        for field in [
+            "cycles", "macs", "useful_macs", "dram_read", "dram_write",
+            "vrf_read", "vrf_write", "sau_busy", "acc_busy", "dram_busy",
+            "sa_fills", "operand_stall", "instrs.scalar", "instrs.config",
+            "instrs.load", "instrs.mac", "instrs.partial", "instrs.store",
+            "instrs.alu",
+        ] {
+            assert!(doc.contains(field), "PERSIST.md drifted: missing stats field `{field}`");
+        }
+        // The rejection rules the decoder enforces.
+        for rule in [
+            "too short", "checksum mismatch", "bad magic", "unsupported version",
+            "strictly ascending", "trailing bytes",
+        ] {
+            assert!(doc.contains(rule), "PERSIST.md drifted: missing rejection rule `{rule}`");
+        }
+    }
 }

@@ -51,17 +51,23 @@
 //! structured `{"type":"error",...}` reply, never a process exit.
 //!
 //! Request fields (all optional except `id`; `network` is required for
-//! sweeps): `id`, `op` (`"sweep"` default | `"ping"` | `"shutdown"`),
-//! `network` (zoo model name), `layers` (index subset), `backends`
-//! (see [`BACKEND_NAMES`]), `precisions` (`[16,8,4]`), `strategies`
-//! (`["ff","cf","mixed"]`), `threads`, `memoize`, `shard` (intra-layer
-//! shard fan-out on/off, scheduling-only), `shard_threshold` (fan-out
-//! bound in layer MACs), `fast_forward` (loop-aware steady-state
-//! fast-forward on/off — bit-identical results either way),
-//! `delta_cache` (engine-wide converged-delta replay on/off —
-//! bit-identical results either way), `priority` (scheduler priority
-//! 0–255, higher first; scheduling only), and the config overrides
-//! `lanes`, `vlen`, `tile_r`, `tile_c`, `dram_bw`, `freq`.
+//! sweeps): `id`, `op` (`"sweep"` default | `"ping"` | `"shutdown"` |
+//! `"cache_export"` | `"cache_import"`), `network` (zoo model name),
+//! `layers` (index subset), `backends` (see [`BACKEND_NAMES`]),
+//! `precisions` (`[16,8,4]`), `strategies` (`["ff","cf","mixed"]`),
+//! `threads`, `memoize`, `shard` (intra-layer shard fan-out on/off,
+//! scheduling-only), `shard_threshold` (fan-out bound in layer MACs),
+//! `fast_forward` (loop-aware steady-state fast-forward on/off —
+//! bit-identical results either way), `delta_cache` (engine-wide
+//! converged-delta replay on/off — bit-identical results either way),
+//! `priority` (scheduler priority 0–255, higher first; scheduling
+//! only), the config overrides `lanes`, `vlen`, `tile_r`, `tile_c`,
+//! `dram_bw`, `freq`, and the cache-exchange fields `cfg_fp` (memo
+//! filter for `cache_export`) and `blob` (hex persist blob for
+//! `cache_import`). The normative field-by-field contract — including
+//! versioning/compat rules — lives in `docs/PROTOCOL.md`, which CI
+//! pins against [`REQUEST_FIELDS`]/[`REPLY_TYPES`]/[`ERROR_CODES`] so
+//! spec and implementation cannot drift.
 //!
 //! Replies are line-delimited records tagged by `"type"`: one
 //! `"block"` line per layer result, streamed in deterministic job
@@ -79,8 +85,11 @@
 //! simulation — and `queue_ms`, time spent waiting for a scheduler
 //! slot) — a warm repeat of an identical request reports `"sims":0`. `"ping"` answers `"pong"`; `"shutdown"` answers
 //! `"bye"`, flushes the cache file and stops the server (EOF on stdin
-//! does the same). Requests refused by admission control are answered
-//! with an `error` record carrying `"code":"overload"`.
+//! does the same); `"cache_export"` answers a `"cache"` record
+//! carrying a hex persist blob and its content fingerprint;
+//! `"cache_import"` answers `"imported"` (or a `"bad_blob"`-coded
+//! error, cache untouched). Requests refused by admission control are
+//! answered with an `error` record carrying `"code":"overload"`.
 //!
 //! `speed request` is the matching client: it builds a request from
 //! CLI flags (`--emit` prints the line for piping into a stdin-mode
@@ -95,7 +104,7 @@ use std::sync::Arc;
 use std::thread;
 use std::time::Duration;
 
-use super::backend::{by_name, BACKEND_NAMES};
+use super::backend::{blob_fingerprint, by_name, BACKEND_NAMES};
 use super::runner::LayerResult;
 use super::sweep::{JobId, ReportSink, SweepEngine, SweepOutcome, SweepSpec, SHARD_OFF};
 use crate::arch::{Precision, SpeedConfig};
@@ -213,7 +222,7 @@ fn quote_into(out: &mut String, s: &str) {
     out.push('"');
 }
 
-fn quote(s: &str) -> String {
+pub(crate) fn quote(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     quote_into(&mut out, s);
     out
@@ -429,6 +438,15 @@ pub enum Op {
     Ping,
     /// Flush the cache file and stop the server.
     Shutdown,
+    /// Export the engine's cache as a persist blob (`cache` reply).
+    /// With `cfg_fp` set, only memo entries for that config
+    /// fingerprint are included (delta records always travel whole —
+    /// they are verified before trust, so over-sharing is safe).
+    CacheExport,
+    /// Merge a persist blob (request field `blob`, hex) into the
+    /// engine's cache (`imported` reply). A corrupt blob is rejected
+    /// atomically with `"code":"bad_blob"` — the cache is untouched.
+    CacheImport,
 }
 
 fn strategy_token(s: Strategy) -> &'static str {
@@ -529,6 +547,14 @@ pub struct Request {
     pub priority: u8,
     /// Machine-configuration overrides.
     pub overrides: CfgOverrides,
+    /// `cache_export` only: restrict the exported memo entries to this
+    /// config fingerprint ([`super::backend::config_fingerprint`]).
+    /// `None` exports everything.
+    pub cfg_fp: Option<u64>,
+    /// `cache_import` only: the persist blob to merge, lower-hex
+    /// encoded ([`hex_encode`]). Content-addressed by
+    /// [`super::backend::blob_fingerprint`] on the `cache` reply.
+    pub blob: Option<String>,
 }
 
 impl Default for Request {
@@ -549,6 +575,8 @@ impl Default for Request {
             delta_cache: true,
             priority: 0,
             overrides: CfgOverrides::default(),
+            cfg_fp: None,
+            blob: None,
         }
     }
 }
@@ -590,9 +618,12 @@ impl Request {
                         "sweep" => Op::Sweep,
                         "ping" => Op::Ping,
                         "shutdown" => Op::Shutdown,
+                        "cache_export" => Op::CacheExport,
+                        "cache_import" => Op::CacheImport,
                         other => {
                             return Err(Error::protocol(format!(
-                                "field `op`: unknown op `{other}` (sweep/ping/shutdown)"
+                                "field `op`: unknown op `{other}` \
+                                 (sweep/ping/shutdown/cache_export/cache_import)"
                             )))
                         }
                     }
@@ -661,6 +692,8 @@ impl Request {
                 "tile_c" => req.overrides.tile_c = Some(val.as_u64("tile_c")? as usize),
                 "dram_bw" => req.overrides.dram_bw = Some(val.as_f64("dram_bw")?),
                 "freq" => req.overrides.freq = Some(val.as_f64("freq")?),
+                "cfg_fp" => req.cfg_fp = Some(val.as_u64("cfg_fp")?),
+                "blob" => req.blob = Some(val.as_str("blob")?.to_string()),
                 other => {
                     return Err(Error::protocol(format!("unknown field `{other}`")));
                 }
@@ -678,6 +711,8 @@ impl Request {
             Op::Sweep => {}
             Op::Ping => parts.push("\"op\":\"ping\"".to_string()),
             Op::Shutdown => parts.push("\"op\":\"shutdown\"".to_string()),
+            Op::CacheExport => parts.push("\"op\":\"cache_export\"".to_string()),
+            Op::CacheImport => parts.push("\"op\":\"cache_import\"".to_string()),
         }
         if !self.network.is_empty() {
             parts.push(format!("\"network\":{}", quote(&self.network)));
@@ -738,6 +773,12 @@ impl Request {
         }
         if let Some(v) = self.overrides.freq {
             parts.push(format!("\"freq\":{v}"));
+        }
+        if let Some(v) = self.cfg_fp {
+            parts.push(format!("\"cfg_fp\":{v}"));
+        }
+        if let Some(b) = &self.blob {
+            parts.push(format!("\"blob\":{}", quote(b)));
         }
         format!("{{{}}}", parts.join(","))
     }
@@ -879,9 +920,11 @@ pub fn error_line(id: u64, msg: &str) -> String {
 }
 
 /// A structured `error` reply carrying a machine-readable `code`
-/// clients can branch on without parsing the message. The only code
-/// today is `"overload"` — admission control refused the request
-/// (connection cap or concurrent-sweep cap); retry later.
+/// clients can branch on without parsing the message. The codes (see
+/// [`ERROR_CODES`]): `"overload"` — admission control refused the
+/// request (connection cap or concurrent-sweep cap), retry later —
+/// and `"bad_blob"` — a `cache_import` blob failed persist-format
+/// validation and was rejected without touching the cache.
 pub fn error_line_with_code(id: u64, code: &str, msg: &str) -> String {
     format!(
         "{{\"type\":\"error\",\"id\":{id},\"code\":{},\"message\":{}}}",
@@ -897,6 +940,124 @@ fn pong_line(id: u64, cache_entries: usize) -> String {
 fn bye_line(id: u64, cache_entries: usize) -> String {
     format!("{{\"type\":\"bye\",\"id\":{id},\"cache_entries\":{cache_entries}}}")
 }
+
+/// The `cache` reply to a `cache_export` request: `entries` memo
+/// entries and `deltas` delta records, serialized in the `SPEEDSWC`
+/// persist format (see `docs/PERSIST.md`) and lower-hex encoded in
+/// `blob`. `fp` is the blob's content fingerprint
+/// ([`blob_fingerprint`]) — encoding is deterministic, so two nodes
+/// holding the same cache state export byte-identical blobs with the
+/// same `fp`, and a coordinator can skip pushing a blob a node
+/// already has.
+pub fn cache_line(id: u64, entries: usize, deltas: usize, blob: &[u8]) -> String {
+    format!(
+        "{{\"type\":\"cache\",\"id\":{id},\"entries\":{entries},\"deltas\":{deltas},\"bytes\":{},\"fp\":{},\"blob\":{}}}",
+        blob.len(),
+        blob_fingerprint(blob),
+        quote(&hex_encode(blob)),
+    )
+}
+
+/// The `imported` reply to a successful `cache_import`: `entries` is
+/// how many records (memo + delta) the merge accepted,
+/// `cache_entries` the memo table size after the merge.
+pub fn imported_line(id: u64, entries: usize, cache_entries: usize) -> String {
+    format!(
+        "{{\"type\":\"imported\",\"id\":{id},\"entries\":{entries},\"cache_entries\":{cache_entries}}}"
+    )
+}
+
+/// Lower-hex encode a byte string (the wire encoding of persist blobs
+/// in `cache_export`/`cache_import`; two chars per byte, no prefix).
+pub fn hex_encode(bytes: &[u8]) -> String {
+    let mut out = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        out.push(char::from_digit(u32::from(b >> 4), 16).expect("nibble < 16"));
+        out.push(char::from_digit(u32::from(b & 0xf), 16).expect("nibble < 16"));
+    }
+    out
+}
+
+/// Strict inverse of [`hex_encode`]: odd length or any non-hex digit
+/// rejects the whole string (uppercase digits are accepted).
+pub fn hex_decode(s: &str) -> Result<Vec<u8>> {
+    let bytes = s.as_bytes();
+    if bytes.len() % 2 != 0 {
+        return Err(Error::protocol(format!(
+            "hex blob has odd length {}",
+            bytes.len()
+        )));
+    }
+    let nibble = |b: u8| -> Result<u8> {
+        match b {
+            b'0'..=b'9' => Ok(b - b'0'),
+            b'a'..=b'f' => Ok(b - b'a' + 10),
+            b'A'..=b'F' => Ok(b - b'A' + 10),
+            other => Err(Error::protocol(format!(
+                "hex blob: invalid digit `{}`",
+                other as char
+            ))),
+        }
+    };
+    let mut out = Vec::with_capacity(bytes.len() / 2);
+    for pair in bytes.chunks_exact(2) {
+        out.push((nibble(pair[0])? << 4) | nibble(pair[1])?);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Protocol vocabulary (docs-drift pins)
+// ---------------------------------------------------------------------------
+
+/// Every request field [`Request::parse`] accepts, in wire order.
+/// `docs/PROTOCOL.md` must mention each one (pinned by
+/// `tests/docs_drift.rs`), and `request_fields_const_matches_parser`
+/// pins this list against the parser itself.
+pub const REQUEST_FIELDS: &[&str] = &[
+    "id",
+    "op",
+    "network",
+    "layers",
+    "backends",
+    "precisions",
+    "strategies",
+    "threads",
+    "memoize",
+    "shard",
+    "shard_threshold",
+    "fast_forward",
+    "delta_cache",
+    "priority",
+    "lanes",
+    "vlen",
+    "tile_r",
+    "tile_c",
+    "dram_bw",
+    "freq",
+    "cfg_fp",
+    "blob",
+];
+
+/// Every `op` token [`Request::parse`] accepts.
+pub const OP_NAMES: &[&str] = &["sweep", "ping", "shutdown", "cache_export", "cache_import"];
+
+/// Every reply `type` a server or coordinator emits.
+pub const REPLY_TYPES: &[&str] = &[
+    "listening",
+    "block",
+    "summary",
+    "error",
+    "pong",
+    "bye",
+    "cache",
+    "imported",
+    "node",
+    "fleet_summary",
+];
+
+/// Every machine-readable error `code`.
+pub const ERROR_CODES: &[&str] = &["overload", "bad_blob"];
 
 fn write_line<W: Write>(w: &mut W, line: &str) -> std::io::Result<()> {
     writeln!(w, "{line}")?;
@@ -1085,6 +1246,48 @@ pub fn serve_lines<R: BufRead, W: Write>(
                 let _ = write_line(&mut writer, &bye_line(req.id, entries));
                 stats.shutdown = true;
                 break;
+            }
+            Op::CacheExport => {
+                let (blob, entries, deltas) = shared.engine.export_cache(req.cfg_fp);
+                if write_line(&mut writer, &cache_line(req.id, entries, deltas, &blob))
+                    .is_err()
+                {
+                    break;
+                }
+            }
+            Op::CacheImport => {
+                let Some(blob) = &req.blob else {
+                    stats.errors += 1;
+                    let line = error_line(req.id, "cache_import: missing `blob` field");
+                    if write_line(&mut writer, &line).is_err() {
+                        break;
+                    }
+                    continue;
+                };
+                // All-or-nothing by construction: hex and persist
+                // validation both complete before the first record is
+                // merged, so a rejected blob cannot poison the cache.
+                let merged = hex_decode(blob)
+                    .and_then(|bytes| shared.engine.load_cache_bytes(&bytes));
+                match merged {
+                    Ok(n) => {
+                        let line = imported_line(req.id, n, shared.engine.cached_sims());
+                        if write_line(&mut writer, &line).is_err() {
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        stats.errors += 1;
+                        let line = error_line_with_code(
+                            req.id,
+                            "bad_blob",
+                            &format!("cache_import rejected: {e}"),
+                        );
+                        if write_line(&mut writer, &line).is_err() {
+                            break;
+                        }
+                    }
+                }
             }
             Op::Sweep => {
                 let spec = match req.to_spec(&shared.cfg) {
@@ -1500,7 +1703,26 @@ pub fn run_client(opts: &ClientOptions) -> Result<i32> {
     let reader = BufReader::new(stream);
     let mut terminal: Option<(String, Vec<(String, Value)>)> = None;
     for reply in reader.lines() {
-        let reply = reply?;
+        // Distinguish the two ways a read dies (see docs/PROTOCOL.md
+        // § Timeouts): our own read timeout elapsing vs the peer
+        // closing the socket (handled as EOF below).
+        let reply = match reply {
+            Ok(reply) => reply,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                return Err(Error::protocol(format!(
+                    "read-timeout: no reply within --timeout-secs {}; the server may \
+                     still be computing (blocks stream only after a sweep completes) — \
+                     size --timeout-secs to the run, not the line rate",
+                    opts.timeout_secs.max(1)
+                )));
+            }
+            Err(e) => return Err(e.into()),
+        };
         let reply = reply.trim();
         if reply.is_empty() {
             continue;
@@ -1512,13 +1734,20 @@ pub fn run_client(opts: &ClientOptions) -> Result<i32> {
             Some(v) => v.as_str("type")?.to_string(),
             None => return Err(Error::protocol("reply record without a `type`")),
         };
-        if matches!(ty.as_str(), "summary" | "error" | "pong" | "bye") {
+        if matches!(
+            ty.as_str(),
+            "summary" | "error" | "pong" | "bye" | "cache" | "imported"
+        ) {
             terminal = Some((ty, fields));
             break;
         }
     }
     let Some((ty, fields)) = terminal else {
-        return Err(Error::protocol("connection closed before a terminal reply"));
+        return Err(Error::protocol(
+            "idle-disconnect: server closed the connection before a terminal reply \
+             (its --idle-timeout-secs, default 600, likely elapsed between requests, \
+             or the server shut down)",
+        ));
     };
     if opts.expect_error {
         if ty == "error" {
@@ -1766,5 +1995,186 @@ mod tests {
         assert_eq!(spec.configs[0].freq_mhz, 123.0);
         // base untouched
         assert_ne!(base.freq_mhz, 123.0);
+    }
+
+    #[test]
+    fn request_fields_const_matches_parser() {
+        // Every listed field must be known to the parser (given a
+        // type-appropriate value)...
+        for name in REQUEST_FIELDS {
+            let val = match *name {
+                "op" => "\"ping\"".to_string(),
+                "network" => "\"SqueezeNet\"".to_string(),
+                "layers" => "[1]".to_string(),
+                "backends" => "[\"speed\"]".to_string(),
+                "precisions" => "[8]".to_string(),
+                "strategies" => "[\"ff\"]".to_string(),
+                "memoize" | "shard" | "fast_forward" | "delta_cache" => "true".to_string(),
+                "blob" => "\"00\"".to_string(),
+                _ => "1".to_string(),
+            };
+            let line = format!("{{\"{name}\":{val}}}");
+            match Request::parse(&line) {
+                Ok(_) => {}
+                Err(e) => panic!("REQUEST_FIELDS lists `{name}` but the parser said: {e}"),
+            }
+        }
+        // ...and a field the list omits must be rejected as unknown.
+        let err = Request::parse("{\"not_a_field\":1}").unwrap_err();
+        assert!(err.to_string().contains("unknown field"));
+        assert!(!REQUEST_FIELDS.contains(&"not_a_field"));
+        // Op tokens likewise.
+        for op in OP_NAMES {
+            assert!(
+                Request::parse(&format!("{{\"id\":1,\"op\":\"{op}\"}}")).is_ok(),
+                "OP_NAMES lists `{op}` but the parser rejected it"
+            );
+        }
+        assert!(Request::parse("{\"id\":1,\"op\":\"dance\"}").is_err());
+    }
+
+    #[test]
+    fn hex_round_trips_and_rejects_garbage() {
+        let blob: Vec<u8> = (0..=255u8).collect();
+        let hex = hex_encode(&blob);
+        assert_eq!(hex.len(), 512);
+        assert_eq!(hex_decode(&hex).unwrap(), blob);
+        assert_eq!(hex_decode(&hex.to_uppercase()).unwrap(), blob);
+        assert_eq!(hex_decode("").unwrap(), Vec::<u8>::new());
+        assert!(hex_decode("abc").is_err(), "odd length");
+        assert!(hex_decode("zz").is_err(), "non-hex digit");
+        assert!(hex_decode("0 1").is_err(), "whitespace is not hex");
+    }
+
+    #[test]
+    fn cache_exchange_fields_round_trip() {
+        let req = Request {
+            id: 9,
+            op: Op::CacheExport,
+            cfg_fp: Some(u64::MAX),
+            ..Default::default()
+        };
+        let line = req.to_line();
+        assert!(line.contains("\"op\":\"cache_export\""));
+        assert!(line.contains("\"cfg_fp\":18446744073709551615"));
+        assert_eq!(Request::parse(&line).unwrap(), req);
+
+        let req = Request {
+            id: 10,
+            op: Op::CacheImport,
+            blob: Some("deadbeef".to_string()),
+            ..Default::default()
+        };
+        let line = req.to_line();
+        assert!(line.contains("\"op\":\"cache_import\""));
+        assert!(line.contains("\"blob\":\"deadbeef\""));
+        assert_eq!(Request::parse(&line).unwrap(), req);
+    }
+
+    #[test]
+    fn cache_reply_records_parse_back() {
+        let blob = [0xde, 0xad, 0xbe, 0xef];
+        let fields = parse_record(&cache_line(5, 3, 2, &blob)).unwrap();
+        assert_eq!(field(&fields, "type"), Some(&Value::Str("cache".into())));
+        assert_eq!(field(&fields, "id"), Some(&Value::Int(5)));
+        assert_eq!(field(&fields, "entries"), Some(&Value::Int(3)));
+        assert_eq!(field(&fields, "deltas"), Some(&Value::Int(2)));
+        assert_eq!(field(&fields, "bytes"), Some(&Value::Int(4)));
+        assert_eq!(
+            field(&fields, "fp"),
+            Some(&Value::Int(blob_fingerprint(&blob)))
+        );
+        assert_eq!(field(&fields, "blob"), Some(&Value::Str("deadbeef".into())));
+
+        let fields = parse_record(&imported_line(6, 12, 40)).unwrap();
+        assert_eq!(field(&fields, "type"), Some(&Value::Str("imported".into())));
+        assert_eq!(field(&fields, "entries"), Some(&Value::Int(12)));
+        assert_eq!(field(&fields, "cache_entries"), Some(&Value::Int(40)));
+    }
+
+    #[test]
+    fn cache_ops_round_trip_between_engines() {
+        use std::io::Cursor;
+        let shared_a = ServeShared::new(
+            Arc::new(SweepEngine::new()),
+            SpeedConfig::default(),
+            ServeLimits { max_connections: 0, max_concurrent_sweeps: 0, idle_timeout_secs: 0 },
+        );
+        // Warm node A with one simulated cell.
+        let mut out = Vec::new();
+        let sweep =
+            "{\"id\":1,\"network\":\"SqueezeNet\",\"layers\":[1],\"precisions\":[8],\"strategies\":[\"ff\"],\"threads\":1}";
+        serve_lines(&shared_a, Cursor::new(format!("{sweep}\n")), &mut out);
+        assert!(shared_a.engine.cached_sims() > 0);
+
+        // Export A's cache over the protocol.
+        let mut out = Vec::new();
+        serve_lines(
+            &shared_a,
+            Cursor::new("{\"id\":2,\"op\":\"cache_export\"}\n"),
+            &mut out,
+        );
+        let reply = String::from_utf8(out).unwrap();
+        let fields = parse_record(reply.trim()).unwrap();
+        assert_eq!(field(&fields, "type"), Some(&Value::Str("cache".into())));
+        let blob_hex = match field(&fields, "blob").unwrap() {
+            Value::Str(s) => s.clone(),
+            other => panic!("blob must be a string, got {other:?}"),
+        };
+
+        // Import it into cold node B; the warm repeat must then be
+        // served without a single new simulation.
+        let shared_b = ServeShared::new(
+            Arc::new(SweepEngine::new()),
+            SpeedConfig::default(),
+            ServeLimits { max_connections: 0, max_concurrent_sweeps: 0, idle_timeout_secs: 0 },
+        );
+        let import = format!("{{\"id\":3,\"op\":\"cache_import\",\"blob\":\"{blob_hex}\"}}\n");
+        let mut out = Vec::new();
+        serve_lines(&shared_b, Cursor::new(import), &mut out);
+        let reply = String::from_utf8(out).unwrap();
+        let fields = parse_record(reply.trim()).unwrap();
+        assert_eq!(field(&fields, "type"), Some(&Value::Str("imported".into())));
+        assert_eq!(shared_b.engine.cached_sims(), shared_a.engine.cached_sims());
+
+        let mut out = Vec::new();
+        serve_lines(&shared_b, Cursor::new(format!("{sweep}\n")), &mut out);
+        let reply = String::from_utf8(out).unwrap();
+        let summary = reply.lines().find(|l| l.contains("\"type\":\"summary\"")).unwrap();
+        let fields = parse_record(summary).unwrap();
+        assert_eq!(field(&fields, "sims"), Some(&Value::Int(0)), "warm after import");
+    }
+
+    #[test]
+    fn corrupt_import_is_rejected_without_poisoning() {
+        use std::io::Cursor;
+        let shared = ServeShared::new(
+            Arc::new(SweepEngine::new()),
+            SpeedConfig::default(),
+            ServeLimits::default(),
+        );
+        for bad in [
+            "{\"id\":1,\"op\":\"cache_import\"}",                    // missing blob
+            "{\"id\":1,\"op\":\"cache_import\",\"blob\":\"zz\"}",    // not hex
+            "{\"id\":1,\"op\":\"cache_import\",\"blob\":\"dead\"}",  // not a persist blob
+        ] {
+            let mut out = Vec::new();
+            let stats = serve_lines(&shared, Cursor::new(format!("{bad}\n")), &mut out);
+            assert_eq!(stats.errors, 1, "must reject: {bad}");
+            let reply = String::from_utf8(out).unwrap();
+            assert!(reply.contains("\"type\":\"error\""), "got: {reply}");
+        }
+        assert_eq!(shared.engine.cached_sims(), 0, "rejections must not poison the cache");
+        // A well-formed empty blob is fine (vacuous merge).
+        let (empty, n, d) = shared.engine.export_cache(None);
+        assert_eq!((n, d), (0, 0));
+        let line = format!(
+            "{{\"id\":2,\"op\":\"cache_import\",\"blob\":\"{}\"}}\n",
+            hex_encode(&empty)
+        );
+        let mut out = Vec::new();
+        let stats = serve_lines(&shared, Cursor::new(line), &mut out);
+        assert_eq!(stats.errors, 0);
+        assert!(String::from_utf8(out).unwrap().contains("\"type\":\"imported\""));
     }
 }

@@ -977,6 +977,41 @@ impl Drop for ClaimGuard<'_> {
     }
 }
 
+/// Wavefront LPT (longest-processing-time) ordering over work items:
+/// `est[i]` is item `i`'s estimated cost (MACs) and `dram_bound[i]`
+/// its roofline class (DRAM-bandwidth-bound vs compute-bound). Each
+/// class is LPT-sorted (ties break on index, so the order is
+/// deterministic), then the two are interleaved starting with the
+/// class holding the heaviest item — concurrent workers tend to
+/// stress complementary resources instead of piling onto the same
+/// bottleneck. Scheduling-only by construction: callers key results
+/// by item identity, so any claim order is bit-identical. Shared by
+/// [`SweepEngine::run`] and the fleet coordinator
+/// ([`super::fleet`]), so a fleet dispatches items in the same
+/// wavefront order a local engine would claim them.
+pub(crate) fn wavefront_order(est: &[u64], dram_bound: &[bool]) -> Vec<usize> {
+    assert_eq!(est.len(), dram_bound.len());
+    let mut dram: Vec<usize> = (0..est.len()).filter(|&i| dram_bound[i]).collect();
+    let mut sau: Vec<usize> = (0..est.len()).filter(|&i| !dram_bound[i]).collect();
+    dram.sort_by(|&a, &b| est[b].cmp(&est[a]).then(a.cmp(&b)));
+    sau.sort_by(|&a, &b| est[b].cmp(&est[a]).then(a.cmp(&b)));
+    let head = |v: &[usize]| v.first().map_or(0, |&i| est[i]);
+    let (lead, trail) = if head(&dram) >= head(&sau) { (dram, sau) } else { (sau, dram) };
+    let mut order = Vec::with_capacity(est.len());
+    let (mut li, mut ti) = (0, 0);
+    while li < lead.len() || ti < trail.len() {
+        if li < lead.len() {
+            order.push(lead[li]);
+            li += 1;
+        }
+        if ti < trail.len() {
+            order.push(trail[ti]);
+            ti += 1;
+        }
+    }
+    order
+}
+
 /// The sweep executor. Owns the persistent memoization cache — reuse one
 /// engine across sweeps (e.g. Fig. 3 + Fig. 4 + Table I) and identical
 /// (backend, config, shape, precision, strategy) cells are simulated
@@ -1129,9 +1164,37 @@ impl SweepEngine {
     /// versioned binary cache format (deterministic: entries are
     /// sorted, the footer is a checksum).
     pub fn serialize_cache(&self) -> Vec<u8> {
+        self.export_cache(None).0
+    }
+
+    /// Serialize the cache as an exchangeable persist blob, optionally
+    /// restricted to the memo entries of one config fingerprint
+    /// (`cfg_fp` — see [`super::backend::config_fingerprint`]). Delta
+    /// records always travel whole: they are advisory (verified before
+    /// trust, keyed by their own config-aware fingerprint), so
+    /// over-sharing costs bytes, never correctness. Returns
+    /// `(blob, memo_entries, delta_records)`. Encoding is
+    /// deterministic, so equal cache states yield byte-identical blobs
+    /// — the content-addressing the fleet's cache exchange relies on.
+    pub fn export_cache(&self, cfg_fp: Option<u64>) -> (Vec<u8>, usize, usize) {
         let deltas = self.delta_cache.entries();
         let cache = self.lock_cache();
-        persist::encode(cache.iter(), &deltas)
+        match cfg_fp {
+            None => {
+                let n = cache.len();
+                (persist::encode(cache.iter(), &deltas), n, deltas.len())
+            }
+            Some(fp) => {
+                let picked: Vec<(&SimKey, &CachedSim)> =
+                    cache.iter().filter(|(k, _)| k.cfg_fp == fp).collect();
+                let n = picked.len();
+                (
+                    persist::encode(picked.into_iter(), &deltas),
+                    n,
+                    deltas.len(),
+                )
+            }
+        }
     }
 
     /// Merge a serialized cache into this engine's memo table.
@@ -1461,25 +1524,7 @@ impl SweepEngine {
                     roofline_gops(cfg, layer, p) < cfg.peak_gops(p)
                 })
                 .collect();
-            let mut dram: Vec<usize> = (0..items.len()).filter(|&i| dram_bound[i]).collect();
-            let mut sau: Vec<usize> = (0..items.len()).filter(|&i| !dram_bound[i]).collect();
-            dram.sort_by(|&a, &b| est[b].cmp(&est[a]).then(a.cmp(&b)));
-            sau.sort_by(|&a, &b| est[b].cmp(&est[a]).then(a.cmp(&b)));
-            let head = |v: &[usize]| v.first().map_or(0, |&i| est[i]);
-            let (lead, trail) = if head(&dram) >= head(&sau) { (dram, sau) } else { (sau, dram) };
-            let mut order = Vec::with_capacity(items.len());
-            let (mut li, mut ti) = (0, 0);
-            while li < lead.len() || ti < trail.len() {
-                if li < lead.len() {
-                    order.push(lead[li]);
-                    li += 1;
-                }
-                if ti < trail.len() {
-                    order.push(trail[ti]);
-                    ti += 1;
-                }
-            }
-            order
+            wavefront_order(&est, &dram_bound)
         };
 
         // 3) Execute the work items on the worker pool. Workers claim
@@ -1910,6 +1955,65 @@ mod tests {
         assert_eq!(a.cycles, b.cycles);
         assert_eq!(a.stats, b.stats);
         assert_eq!(b.name, "c3_dup");
+    }
+
+    #[test]
+    fn wavefront_order_interleaves_classes_lpt_first() {
+        // est:        10  50  30   5  40
+        // dram_bound:  T   F   T   F   T
+        // classes: dram = [4(40), 2(30), 0(10)], sau = [1(50), 3(5)];
+        // sau holds the heaviest head (50), so it leads the interleave.
+        let est = [10, 50, 30, 5, 40];
+        let dram = [true, false, true, false, true];
+        assert_eq!(wavefront_order(&est, &dram), vec![1, 4, 3, 2, 0]);
+        // One empty class degrades to plain LPT; ties break on index.
+        assert_eq!(wavefront_order(&[7, 9, 9], &[false; 3]), vec![1, 2, 0]);
+        assert_eq!(wavefront_order(&[], &[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn export_cache_filters_by_config_fingerprint() {
+        use crate::coordinator::backend::config_fingerprint;
+        let base = SpeedConfig::default();
+        let mut wide = base.clone();
+        wide.n_lanes *= 2;
+        let engine = SweepEngine::new();
+        let spec = |cfg: &SpeedConfig| {
+            SweepSpec::new(cfg.clone())
+                .network("t", tiny_layers())
+                .precisions(vec![Precision::Int8])
+                .strategies(vec![Strategy::FeatureFirst])
+                .threads(1)
+        };
+        engine.run(&spec(&base)).unwrap();
+        engine.run(&spec(&wide)).unwrap();
+        assert_eq!(engine.cached_sims(), 4);
+
+        let (all, n_all, _) = engine.export_cache(None);
+        assert_eq!(n_all, 4);
+        let (base_only, n_base, _) = engine.export_cache(Some(config_fingerprint(&base)));
+        assert_eq!(n_base, 2);
+        let (none, n_none, _) = engine.export_cache(Some(0xdead_beef));
+        assert_eq!(n_none, 0);
+
+        // Filtered blobs merge back losslessly and stay well-formed.
+        for blob in [&all, &base_only, &none] {
+            let fresh = SweepEngine::new();
+            fresh.load_cache_bytes(blob).unwrap();
+        }
+        let fresh = SweepEngine::new();
+        assert_eq!(fresh.load_cache_bytes(&base_only).unwrap(), 2);
+        assert_eq!(fresh.cached_sims(), 2);
+        // Warm parity through the filtered blob: the base-config run
+        // is now pure cache, the wide-config run still simulates.
+        let warm = fresh.run(&spec(&base)).unwrap();
+        assert_eq!(warm.executed_sims, 0);
+        let cold = fresh.run(&spec(&wide)).unwrap();
+        assert_eq!(cold.executed_sims, 2);
+        // Determinism: equal state → byte-identical blob (the
+        // content-addressing contract of the fleet cache exchange).
+        let (all2, _, _) = engine.export_cache(None);
+        assert_eq!(all, all2);
     }
 
     #[test]

@@ -42,7 +42,11 @@
 //!   `SweepEngine::save_cache`/`load_cache` (with an optional LRU
 //!   bound), and [`coordinator::serve`] parks the engine behind a
 //!   line-delimited request protocol (`speed serve` / `speed request`)
-//!   so a resident process serves sweeps from a hot cache. Cold
+//!   so a resident process serves sweeps from a hot cache, while
+//!   [`coordinator::fleet`] fans one sweep out over many such servers
+//!   (`speed fleet`) with work-stealing, node-loss recovery and
+//!   content-addressed cache exchange — still bit-identical to one
+//!   local engine. Cold
 //!   simulation itself is **loop-aware**: the conv compiler marks its
 //!   steady-state tile-pass loops as [`isa::Region`]s and the timing
 //!   engine fast-forwards converged iterations algebraically
@@ -50,6 +54,11 @@
 //!   while per-worker pre-decoded program caches skip repeated
 //!   codegen/decode — so cold-sweep time scales with loop structure,
 //!   not instruction count.
+//!
+//! A one-page map of these layers, the memo/delta/program cache
+//! hierarchy and the fleet topology lives in `docs/ARCHITECTURE.md`;
+//! the serve/fleet wire protocol is specified in `docs/PROTOCOL.md`
+//! and the cache file format in `docs/PERSIST.md` (all under `rust/`).
 //!
 //! ## Example: one layer
 //!

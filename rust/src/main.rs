@@ -20,6 +20,11 @@
 //!                                         (long-running sweep server; `--help`)
 //! speed request (--emit | --tcp ADDR) [request flags]
 //!                                         (client for `speed serve`; `--help`)
+//! speed fleet --node HOST:PORT [--node HOST:PORT ...] [request flags]
+//!             [--item-timeout-secs N] [--max-item-retries N]
+//!             [--max-node-failures N] [--backoff-ms N]
+//!             [--no-cache-exchange] [--expect-sims N]
+//!                                         (coordinator over serve nodes; `--help`)
 //! speed sim --model NAME [--prec 4|8|16] [--strategy ff|cf|mixed]
 //! speed asm FILE.s            # assemble + hexdump
 //! speed disasm FILE.bin       # disassemble 32-bit words
@@ -31,6 +36,7 @@
 
 use speed::arch::{Precision, SpeedConfig};
 use speed::coordinator::backend::{AraAnalytic, RooflineBound};
+use speed::coordinator::fleet;
 use speed::coordinator::serve;
 use speed::coordinator::sweep::SHARD_OFF;
 use speed::coordinator::experiments::{
@@ -45,7 +51,7 @@ use speed::dataflow::Strategy;
 use speed::models::model_by_name;
 
 fn usage() -> ! {
-    eprintln!("{}", "usage: speed <fig3|fig4|fig5|table1|all|sweep|serve|request|sim|asm|disasm|golden-check> [flags]\n  `speed sweep --help`, `speed serve --help` and `speed request --help` list the\n  per-command flags; see README.md for the rest");
+    eprintln!("{}", "usage: speed <fig3|fig4|fig5|table1|all|sweep|serve|request|fleet|sim|asm|disasm|golden-check> [flags]\n  `speed sweep --help`, `speed serve --help`, `speed request --help` and\n  `speed fleet --help` list the per-command flags; see README.md for the rest");
     std::process::exit(2);
 }
 
@@ -211,8 +217,12 @@ flags:
                     lets a small interactive request overtake a running
                     full-grid sweep (scheduling-only, results are
                     bit-identical)
-  --op sweep|ping|shutdown
+  --op sweep|ping|shutdown|cache_export|cache_import
                     operation (default sweep)
+  --cfg-fp N        cache_export only: restrict the exported memo
+                    entries to this config fingerprint
+  --blob HEX        cache_import only: the persist blob to merge,
+                    lower-hex encoded (a `cache` reply's `blob` field)
   --raw LINE        send LINE verbatim instead of the built request
   --expect-sims N   exit non-zero unless the summary reports exactly N
                     executed simulations (0 = assert pure cache)
@@ -220,11 +230,62 @@ flags:
                     `error` record
   --timeout-secs N  socket read timeout (default 120); replies stream
                     only after the run completes, so size this to the
-                    whole run for a big cold sweep
+                    whole run for a big cold sweep. This is client-side
+                    only — the server independently closes sessions
+                    idle longer than its --idle-timeout-secs (default
+                    600). A blown read timeout fails with a
+                    `read-timeout:` error while the request may still
+                    be computing server-side; a server-side idle close
+                    surfaces as an `idle-disconnect:` error (see
+                    docs/PROTOCOL.md, \"Timeouts\")
 
 config override flags (applied server-side, this request only):
   --lanes N --vlen BITS --tile-r N --tile-c N --dram-bw BYTES/CYC
   --freq MHZ";
+
+const FLEET_HELP: &str = "\
+speed fleet — coordinator: fan one sweep out over `speed serve` nodes
+
+Decomposes the request grid into single-cell work items, schedules
+them across the nodes with work-stealing (wavefront LPT dispatch
+order, same as a local engine), and assembles the streamed `block`
+records back into the local engine's order with the coordinator's
+request id. The output is bit-identical to `speed request` against a
+single server — including under node loss: failed or timed-out items
+are requeued onto surviving nodes with exponential backoff. Before
+and after the sweep, nodes warm each other through content-addressed
+cache exchange (`cache_export`/`cache_import`), so a shape simulated
+anywhere replays everywhere. Prints per-node `node` telemetry records
+and a terminal `fleet_summary` after the blocks; see
+docs/PROTOCOL.md for the record grammar.
+
+flags:
+  --node HOST:PORT  a worker node (repeat per node; at least one).
+                    Start each with `speed serve --tcp HOST:PORT`
+  --item-timeout-secs N
+                    per-item socket timeout (default 120); size it to
+                    the slowest expected cold item — a node blowing it
+                    fails the item onto another node
+  --max-item-retries N
+                    attempts per item before the fleet gives up
+                    (default 8)
+  --max-node-failures N
+                    consecutive failures after which a node is
+                    declared dead (default 3); a success resets it
+  --backoff-ms N    base backoff after a node failure (default 50;
+                    doubles per consecutive failure, capped at 2 s)
+  --no-cache-exchange
+                    skip the pre/post cache exchange (warmth only —
+                    results are bit-identical either way)
+  --expect-sims N   exit non-zero unless the fleet total is exactly N
+                    executed simulations (0 = assert pure cache)
+  --help            this text
+
+plus every `speed request` sweep flag: --id --network --layers
+--backends --prec --strategy --threads --no-memoize --no-shard
+--shard-threshold --no-fast-forward --no-delta-cache --priority and
+the config override flags (--lanes --vlen --tile-r --tile-c
+--dram-bw --freq; applied on every node, this request only).";
 
 /// Load `--cache-file` into the engine if present; a missing file is a
 /// cold start, a malformed one is reported and ignored (cold cache).
@@ -309,6 +370,16 @@ impl Flags {
         self.0.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
     }
 
+    /// Every value of a repeatable flag (`--node A --node B`), in
+    /// order of appearance.
+    fn get_all(&self, key: &str) -> Vec<&str> {
+        self.0
+            .iter()
+            .filter(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+            .collect()
+    }
+
     /// Parsed value of a numeric flag. A flag that is present but
     /// malformed exits loudly — a typo'd `--expect-sims` or
     /// `--max-cache-entries` must never silently become "unset".
@@ -367,6 +438,94 @@ fn parse_strategy(s: &str) -> Strategy {
             std::process::exit(2);
         }
     }
+}
+
+/// Build a protocol [`serve::Request`] from the shared request flags
+/// (`speed request` and `speed fleet` accept the same sweep surface).
+fn request_from_flags(flags: &Flags) -> serve::Request {
+    let mut req = serve::Request::default();
+    if let Some(id) = flags.num("id") {
+        req.id = id;
+    }
+    if let Some(op) = flags.get("op") {
+        req.op = match op {
+            "sweep" => serve::Op::Sweep,
+            "ping" => serve::Op::Ping,
+            "shutdown" => serve::Op::Shutdown,
+            "cache_export" => serve::Op::CacheExport,
+            "cache_import" => serve::Op::CacheImport,
+            other => {
+                eprintln!(
+                    "bad op `{other}` (sweep/ping/shutdown/cache_export/cache_import)"
+                );
+                std::process::exit(2);
+            }
+        };
+    }
+    if let Some(n) = flags.get("network") {
+        req.network = n.to_string();
+    }
+    if let Some(ls) = flags.get("layers") {
+        let parsed: Vec<usize> = ls
+            .split(',')
+            .map(|t| {
+                t.trim().parse().unwrap_or_else(|_| {
+                    eprintln!("bad layer index `{t}`");
+                    std::process::exit(2);
+                })
+            })
+            .collect();
+        req.layers = Some(parsed);
+    }
+    if let Some(bs) = flags.get("backends") {
+        req.backends = bs.split(',').map(|t| t.trim().to_string()).collect();
+    }
+    if let Some(ps) = flags.get("prec") {
+        req.precisions = ps.split(',').map(|t| parse_precision(t.trim())).collect();
+    }
+    if let Some(ss) = flags.get("strategy") {
+        req.strategies = ss.split(',').map(|t| parse_strategy(t.trim())).collect();
+    }
+    if let Some(t) = flags.num("threads") {
+        req.threads = Some(t);
+    }
+    if flags.get("no-memoize").is_some() {
+        req.memoize = false;
+    }
+    if flags.get("no-shard").is_some() {
+        req.shard = false;
+    }
+    if let Some(t) = flags.num("shard-threshold") {
+        req.shard_threshold = Some(t);
+    }
+    if flags.get("no-fast-forward").is_some() {
+        req.fast_forward = false;
+    }
+    if flags.get("no-delta-cache").is_some() {
+        req.delta_cache = false;
+    }
+    if let Some(p) = flags.num::<u64>("priority") {
+        if p > u64::from(u8::MAX) {
+            eprintln!("bad value `{p}` for --priority (0-255)");
+            std::process::exit(2);
+        }
+        req.priority = p as u8;
+    }
+    req.overrides = serve::CfgOverrides {
+        lanes: flags.num("lanes"),
+        vlen: flags.num("vlen"),
+        tile_r: flags.num("tile-r"),
+        tile_c: flags.num("tile-c"),
+        dram_bw: flags.num("dram-bw"),
+        freq: flags.num("freq"),
+    };
+    if let Some(fp) = flags.num("cfg-fp") {
+        req.cfg_fp = Some(fp);
+    }
+    if let Some(b) = flags.get("blob") {
+        req.blob = Some(b.to_string());
+    }
+    req
 }
 
 fn write_out(dir: Option<&str>, name: &str, content: &str) {
@@ -535,78 +694,7 @@ fn main() -> speed::Result<()> {
                 println!("{REQUEST_HELP}");
                 return Ok(());
             }
-            let mut req = serve::Request::default();
-            if let Some(id) = flags.num("id") {
-                req.id = id;
-            }
-            if let Some(op) = flags.get("op") {
-                req.op = match op {
-                    "sweep" => serve::Op::Sweep,
-                    "ping" => serve::Op::Ping,
-                    "shutdown" => serve::Op::Shutdown,
-                    other => {
-                        eprintln!("bad op `{other}` (sweep/ping/shutdown)");
-                        std::process::exit(2);
-                    }
-                };
-            }
-            if let Some(n) = flags.get("network") {
-                req.network = n.to_string();
-            }
-            if let Some(ls) = flags.get("layers") {
-                let parsed: Vec<usize> = ls
-                    .split(',')
-                    .map(|t| {
-                        t.trim().parse().unwrap_or_else(|_| {
-                            eprintln!("bad layer index `{t}`");
-                            std::process::exit(2);
-                        })
-                    })
-                    .collect();
-                req.layers = Some(parsed);
-            }
-            if let Some(bs) = flags.get("backends") {
-                req.backends = bs.split(',').map(|t| t.trim().to_string()).collect();
-            }
-            if let Some(ps) = flags.get("prec") {
-                req.precisions = ps.split(',').map(|t| parse_precision(t.trim())).collect();
-            }
-            if let Some(ss) = flags.get("strategy") {
-                req.strategies = ss.split(',').map(|t| parse_strategy(t.trim())).collect();
-            }
-            if let Some(t) = flags.num("threads") {
-                req.threads = Some(t);
-            }
-            if flags.get("no-memoize").is_some() {
-                req.memoize = false;
-            }
-            if flags.get("no-shard").is_some() {
-                req.shard = false;
-            }
-            if let Some(t) = flags.num("shard-threshold") {
-                req.shard_threshold = Some(t);
-            }
-            if flags.get("no-fast-forward").is_some() {
-                req.fast_forward = false;
-            }
-            if flags.get("no-delta-cache").is_some() {
-                req.delta_cache = false;
-            }
-            if let Some(p) = flags.num::<u64>("priority") {
-                if p > u64::from(u8::MAX) {
-                    eprintln!("bad value `{p}` for --priority (0-255)");
-                    std::process::exit(2);
-                }
-                req.priority = p as u8;
-            }
-            req.overrides = serve::CfgOverrides {
-                lanes: flags.num("lanes"),
-                vlen: flags.num("vlen"),
-                tile_r: flags.num("tile-r"),
-                tile_c: flags.num("tile-c"),
-                dram_bw: flags.num("dram-bw"),
-                freq: flags.num("freq"),
-            };
+            let req = request_from_flags(&flags);
             let copts = serve::ClientOptions {
                 tcp: flags.get("tcp").map(String::from),
                 emit: flags.get("emit").is_some(),
@@ -619,6 +707,54 @@ fn main() -> speed::Result<()> {
             let code = serve::run_client(&copts)?;
             if code != 0 {
                 std::process::exit(code);
+            }
+        }
+        "fleet" => {
+            // Coordinator over remote serve nodes (see `speed fleet
+            // --help` and docs/PROTOCOL.md).
+            if flags.get("help").is_some() {
+                println!("{FLEET_HELP}");
+                return Ok(());
+            }
+            let nodes: Vec<String> =
+                flags.get_all("node").into_iter().map(String::from).collect();
+            if nodes.is_empty() {
+                eprintln!("speed fleet: need at least one --node HOST:PORT");
+                std::process::exit(2);
+            }
+            let mut opts =
+                fleet::FleetOptions::new(nodes, cfg, request_from_flags(&flags));
+            if let Some(n) = flags.num("item-timeout-secs") {
+                opts.item_timeout_secs = n;
+            }
+            if let Some(n) = flags.num("max-item-retries") {
+                opts.max_item_attempts = n;
+            }
+            if let Some(n) = flags.num("max-node-failures") {
+                opts.max_node_failures = n;
+            }
+            if let Some(n) = flags.num("backoff-ms") {
+                opts.backoff_base_ms = n;
+            }
+            if flags.get("no-cache-exchange").is_some() {
+                opts.cache_exchange = false;
+            }
+            let outcome = fleet::run_fleet(&opts)?;
+            for b in &outcome.blocks {
+                println!("{b}");
+            }
+            for n in &outcome.nodes {
+                println!("{}", fleet::node_line(n));
+            }
+            println!("{}", fleet::fleet_summary_line(opts.request.id, &outcome));
+            if let Some(want) = flags.num::<u64>("expect-sims") {
+                if outcome.sims != want {
+                    eprintln!(
+                        "expect-sims: wanted {want}, fleet executed {}",
+                        outcome.sims
+                    );
+                    std::process::exit(1);
+                }
             }
         }
         "sim" => {

@@ -1,0 +1,103 @@
+//! Docs-drift guard: `docs/*.md` are the normative protocol and
+//! format references, so their vocabulary is pinned to the constants
+//! the implementation actually exports (`serve::REQUEST_FIELDS`,
+//! `OP_NAMES`, `REPLY_TYPES`, `ERROR_CODES`). Adding a request field,
+//! op, reply type or error code without documenting it fails here —
+//! the CI docs leg runs exactly this test.
+
+use speed::coordinator::serve;
+
+const PROTOCOL_MD: &str = include_str!("../docs/PROTOCOL.md");
+const ARCHITECTURE_MD: &str = include_str!("../docs/ARCHITECTURE.md");
+const PERSIST_MD: &str = include_str!("../docs/PERSIST.md");
+
+/// A protocol token counts as documented when it appears backticked
+/// (`` `tok` ``) or as a table cell (`| `tok` |` renders via the same
+/// backticks) anywhere in PROTOCOL.md.
+fn documented(tok: &str) -> bool {
+    PROTOCOL_MD.contains(&format!("`{tok}`"))
+}
+
+#[test]
+fn every_request_field_is_documented() {
+    for field in serve::REQUEST_FIELDS {
+        assert!(
+            documented(field),
+            "PROTOCOL.md drifted: request field `{field}` is not documented"
+        );
+    }
+}
+
+#[test]
+fn every_op_is_documented() {
+    for op in serve::OP_NAMES {
+        assert!(documented(op), "PROTOCOL.md drifted: op `{op}` is not documented");
+    }
+}
+
+#[test]
+fn every_reply_type_is_documented() {
+    for ty in serve::REPLY_TYPES {
+        assert!(
+            documented(ty),
+            "PROTOCOL.md drifted: reply type `{ty}` is not documented"
+        );
+    }
+}
+
+#[test]
+fn every_error_code_is_documented() {
+    for code in serve::ERROR_CODES {
+        assert!(
+            documented(code),
+            "PROTOCOL.md drifted: error code `{code}` is not documented"
+        );
+    }
+}
+
+#[test]
+fn protocol_md_documents_both_timeout_knobs() {
+    // Satellite of the fix for the --timeout-secs / --idle-timeout-secs
+    // confusion: the doc must name both knobs and both structured
+    // error prefixes the client distinguishes them with.
+    for needle in ["--timeout-secs", "--idle-timeout-secs", "read-timeout:", "idle-disconnect:"] {
+        assert!(
+            PROTOCOL_MD.contains(needle),
+            "PROTOCOL.md drifted: timeout documentation lost `{needle}`"
+        );
+    }
+}
+
+#[test]
+fn architecture_md_covers_the_layer_and_cache_maps() {
+    for needle in [
+        "isa", "dataflow", "coordinator", // the layer map
+        "SimKey", "backend_fp", "cfg_fp", // memo key
+        "delta", "program cache", "FNV-1a", // the cache hierarchy
+        "speed fleet", "cache_export", "cache_import", // fleet topology
+        "wavefront",
+    ] {
+        assert!(
+            ARCHITECTURE_MD.contains(needle),
+            "ARCHITECTURE.md drifted: missing `{needle}`"
+        );
+    }
+}
+
+#[test]
+fn persist_md_matches_protocol_vocabulary() {
+    // Byte-level constants are pinned inside persist.rs
+    // (docs_match_wire_constants); here: the pieces shared with the
+    // protocol surface.
+    for needle in ["SPEEDSWC", "cache_export", "cache_import", "bad_blob", "blob_fingerprint"] {
+        assert!(PERSIST_MD.contains(needle), "PERSIST.md drifted: missing `{needle}`");
+    }
+}
+
+#[test]
+fn docs_cross_link_each_other() {
+    assert!(PROTOCOL_MD.contains("PERSIST.md"));
+    assert!(ARCHITECTURE_MD.contains("PROTOCOL.md"));
+    assert!(ARCHITECTURE_MD.contains("PERSIST.md"));
+    assert!(PERSIST_MD.contains("PROTOCOL.md"));
+}

@@ -1,0 +1,312 @@
+//! Fleet parity contract: `speed fleet` over N in-process TCP serve
+//! nodes produces bit-identical blocks and totals to one local engine
+//! answering the same request — at any node count, with cache
+//! exchange on or off, and under injected failures (a node killed
+//! mid-item, a node that only answers `overload`, a node fed a
+//! corrupt `cache_import` blob). Every assertion is
+//! timing-independent: parity and conservation sums hold under any
+//! interleaving; only *which node* computed a given item varies.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+use speed::arch::{Precision, SpeedConfig};
+use speed::coordinator::fleet::{run_fleet, FleetOptions};
+use speed::coordinator::serve::{self, Op, Request, ServeLimits, ServeShared};
+use speed::coordinator::sweep::SweepEngine;
+use speed::dataflow::Strategy;
+
+fn unlimited() -> ServeLimits {
+    ServeLimits { max_connections: 0, max_concurrent_sweeps: 0, idle_timeout_secs: 0 }
+}
+
+/// The grid every parity test distributes: 3 distinct SqueezeNet
+/// layers × 2 precisions × feature-first = 6 single-cell work items.
+fn grid_request(id: u64) -> Request {
+    Request {
+        id,
+        network: "SqueezeNet".into(),
+        layers: Some(vec![1, 2, 3]),
+        precisions: vec![Precision::Int8, Precision::Int4],
+        strategies: vec![Strategy::FeatureFirst],
+        threads: Some(1),
+        ..Default::default()
+    }
+}
+
+/// Reference run: one local engine answering `req` over the serve
+/// layer. Returns (block lines, executed sims).
+fn local_reference(req: &Request) -> (Vec<String>, u64) {
+    let shared =
+        ServeShared::new(Arc::new(SweepEngine::new()), SpeedConfig::default(), unlimited());
+    let input = format!("{}\n", req.to_line());
+    let mut out: Vec<u8> = Vec::new();
+    let stats = serve::serve_lines(&shared, BufReader::new(input.as_bytes()), &mut out);
+    assert_eq!(stats.errors, 0);
+    let lines: Vec<String> =
+        String::from_utf8(out).expect("utf-8").lines().map(String::from).collect();
+    let (summary, blocks) = lines.split_last().expect("summary line");
+    assert!(summary.contains("\"type\":\"summary\""), "{summary}");
+    let sims = field_u64(summary, "sims");
+    (blocks.to_vec(), sims)
+}
+
+fn field_u64(line: &str, key: &str) -> u64 {
+    for (k, v) in serve::parse_record(line).expect("line parses") {
+        if k == key {
+            if let serve::Value::Int(n) = v {
+                return n;
+            }
+            panic!("field `{key}` is not an int in {line}");
+        }
+    }
+    panic!("missing field `{key}` in {line}");
+}
+
+/// One in-process worker node: its own engine behind the real TCP
+/// accept loop.
+struct Node {
+    addr: String,
+    shutdown: Arc<AtomicBool>,
+    handle: thread::JoinHandle<serve::TcpReport>,
+}
+
+fn spawn_node() -> Node {
+    let shared = Arc::new(ServeShared::new(
+        Arc::new(SweepEngine::new()),
+        SpeedConfig::default(),
+        unlimited(),
+    ));
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let handle = {
+        let shared = Arc::clone(&shared);
+        let shutdown = Arc::clone(&shutdown);
+        thread::spawn(move || serve::run_tcp(&shared, listener, None, &shutdown).expect("run_tcp"))
+    };
+    Node { addr, shutdown, handle }
+}
+
+impl Node {
+    fn stop(self) -> serve::TcpReport {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.handle.join().expect("node thread")
+    }
+}
+
+fn send_line(stream: &mut TcpStream, line: &str) {
+    stream.write_all(line.as_bytes()).expect("send");
+    stream.write_all(b"\n").expect("newline");
+    stream.flush().expect("flush");
+}
+
+fn read_reply(reader: &mut BufReader<TcpStream>) -> String {
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("read reply");
+    line.trim_end().to_string()
+}
+
+#[test]
+fn fleet_matches_local_engine_bit_for_bit_and_warms_every_node() {
+    let (local_blocks, local_sims) = local_reference(&grid_request(7));
+    assert_eq!(local_blocks.len(), 6);
+    assert_eq!(local_sims, 6);
+
+    let nodes: Vec<Node> = (0..2).map(|_| spawn_node()).collect();
+    let opts = FleetOptions::new(
+        nodes.iter().map(|n| n.addr.clone()).collect(),
+        SpeedConfig::default(),
+        grid_request(7),
+    );
+
+    // Cold fleet: same blocks, same ids, same order, same totals.
+    let cold = run_fleet(&opts).expect("cold fleet");
+    assert_eq!(cold.blocks, local_blocks, "fleet blocks must be bit-identical to local");
+    assert_eq!(cold.jobs, 6);
+    assert_eq!(cold.sims, local_sims, "fleet executes exactly the local sim count");
+    assert_eq!(cold.requeues, 0);
+    let items: u64 = cold.nodes.iter().map(|n| n.items_done).sum();
+    assert_eq!(items, 6, "every item completed exactly once: {:?}", cold.nodes);
+    assert!(cold.nodes.iter().all(|n| !n.dead), "{:?}", cold.nodes);
+    // The post-sweep exchange pushed the union to at least one node
+    // (each node computed only part of the grid).
+    let pushed: u64 = cold.nodes.iter().map(|n| n.pushed_entries).sum();
+    assert!(pushed > 0, "cache exchange must have warmed someone: {:?}", cold.nodes);
+
+    // Warm fleet: every node already holds the union, so the same
+    // request is pure cache everywhere — and still bit-identical.
+    let warm = run_fleet(&opts).expect("warm fleet");
+    assert_eq!(warm.blocks, local_blocks);
+    assert_eq!(warm.sims, 0, "warm fleet must execute zero simulations");
+
+    for n in nodes {
+        let report = n.stop();
+        assert_eq!(report.panicked_sessions, 0, "{report:?}");
+    }
+}
+
+#[test]
+fn node_killed_mid_item_is_requeued_bit_identically() {
+    // The killer accepts exactly one connection, reads the request,
+    // streams a non-terminal reply line and drops the connection *and*
+    // the listener — every later connect is refused outright.
+    let killer_listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let killer_addr = killer_listener.local_addr().expect("addr").to_string();
+    // Detached on purpose: joining would hang if the accept never
+    // fires; the `dead`/`requeues` assertions below prove it did.
+    thread::spawn(move || {
+        let (stream, _) = killer_listener.accept().expect("one victim connection");
+        let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("read request");
+        let mut stream = stream;
+        send_line(&mut stream, "{\"type\":\"block\",\"id\":1,\"note\":\"about to die\"}");
+        // stream + listener drop here: mid-reply EOF, then refusals.
+    });
+
+    let real = spawn_node();
+    let (local_blocks, _) = local_reference(&grid_request(7));
+
+    let mut opts = FleetOptions::new(
+        vec![killer_addr, real.addr.clone()],
+        SpeedConfig::default(),
+        grid_request(7),
+    );
+    opts.cache_exchange = false; // the first killer connection must be a sweep item
+    opts.max_node_failures = 2;
+    opts.backoff_base_ms = 1;
+
+    let out = run_fleet(&opts).expect("fleet survives the node kill");
+
+    assert_eq!(out.blocks, local_blocks, "node loss must not perturb a single bit");
+    assert_eq!(out.sims, 6);
+    assert!(out.requeues >= 1, "the killed item must have been requeued: {out:?}");
+    assert!(out.nodes[0].dead, "the killer node must be declared dead: {:?}", out.nodes);
+    assert!(out.nodes[0].failures >= 2, "{:?}", out.nodes);
+    assert!(!out.nodes[1].dead, "{:?}", out.nodes);
+    assert_eq!(out.nodes[1].items_done, 6, "the survivor absorbed the whole grid");
+
+    real.stop();
+}
+
+#[test]
+fn overloaded_node_backs_off_and_items_retry_elsewhere() {
+    // A node whose admission control permanently refuses: every request
+    // line is answered with a terminal `overload` error on a healthy
+    // connection.
+    let busy_listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let busy_addr = busy_listener.local_addr().expect("addr").to_string();
+    thread::spawn(move || {
+        for stream in busy_listener.incoming() {
+            let Ok(stream) = stream else { break };
+            let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+            let mut writer = stream;
+            let mut line = String::new();
+            while reader.read_line(&mut line).map(|n| n > 0).unwrap_or(false) {
+                let id = Request::parse(line.trim()).map(|r| r.id).unwrap_or(0);
+                send_line(
+                    &mut writer,
+                    &serve::error_line_with_code(id, "overload", "permanently busy"),
+                );
+                line.clear();
+            }
+        }
+    });
+
+    let real = spawn_node();
+    let (local_blocks, _) = local_reference(&grid_request(7));
+
+    let mut opts = FleetOptions::new(
+        vec![busy_addr, real.addr.clone()],
+        SpeedConfig::default(),
+        grid_request(7),
+    );
+    opts.cache_exchange = false;
+    opts.max_node_failures = 3;
+    opts.backoff_base_ms = 1;
+
+    let out = run_fleet(&opts).expect("fleet routes around the overloaded node");
+    assert_eq!(out.blocks, local_blocks);
+    assert_eq!(out.sims, 6);
+    assert!(out.requeues >= 1, "{out:?}");
+    assert!(out.nodes[0].overloads >= 1, "{:?}", out.nodes);
+    assert_eq!(out.nodes[0].items_done, 0, "{:?}", out.nodes);
+    assert_eq!(out.nodes[1].items_done, 6, "{:?}", out.nodes);
+
+    real.stop();
+}
+
+#[test]
+fn corrupt_cache_import_is_rejected_without_poisoning_the_node() {
+    let node = spawn_node();
+    let stream = TcpStream::connect(&node.addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut stream = stream;
+
+    // Garbage hex and valid-hex-garbage-bytes both reject atomically.
+    for blob in ["zz", "deadbeef"] {
+        let req = Request {
+            id: 1,
+            op: Op::CacheImport,
+            blob: Some(blob.into()),
+            ..Default::default()
+        };
+        send_line(&mut stream, &req.to_line());
+        let reply = read_reply(&mut reader);
+        assert!(reply.contains("\"type\":\"error\""), "{reply}");
+        assert!(reply.contains("\"code\":\"bad_blob\""), "{reply}");
+    }
+
+    // The node is not poisoned: a sweep on the same connection still
+    // simulates from a clean cache and exports a healthy blob.
+    send_line(
+        &mut stream,
+        &Request {
+            id: 2,
+            network: "SqueezeNet".into(),
+            layers: Some(vec![1]),
+            precisions: vec![Precision::Int8],
+            strategies: vec![Strategy::FeatureFirst],
+            threads: Some(1),
+            ..Default::default()
+        }
+        .to_line(),
+    );
+    let block = read_reply(&mut reader);
+    assert!(block.contains("\"type\":\"block\""), "{block}");
+    let summary = read_reply(&mut reader);
+    assert_eq!(field_u64(&summary, "sims"), 1, "{summary}");
+
+    send_line(
+        &mut stream,
+        &Request { id: 3, op: Op::CacheExport, ..Default::default() }.to_line(),
+    );
+    let cache = read_reply(&mut reader);
+    assert!(cache.contains("\"type\":\"cache\""), "{cache}");
+    assert_eq!(field_u64(&cache, "entries"), 1, "{cache}");
+
+    drop(stream);
+    drop(reader);
+    node.stop();
+}
+
+#[test]
+fn losing_every_node_fails_with_work_outstanding() {
+    // A dead address: bind, learn the port, close the listener.
+    let addr = {
+        let l = TcpListener::bind("127.0.0.1:0").expect("bind");
+        l.local_addr().expect("addr").to_string()
+    };
+    let mut opts =
+        FleetOptions::new(vec![addr], SpeedConfig::default(), grid_request(7));
+    opts.cache_exchange = false;
+    opts.max_node_failures = 2;
+    opts.backoff_base_ms = 1;
+    let err = run_fleet(&opts).expect_err("no nodes, no fleet");
+    let msg = err.to_string();
+    assert!(msg.contains("all nodes lost"), "{msg}");
+}
