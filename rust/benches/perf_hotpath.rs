@@ -145,6 +145,7 @@ fn main() {
     shard_critical_path(&cfg, smoke);
     fastforward_steady_state(&cfg, smoke);
     delta_replay(&cfg, smoke);
+    summary_replay(&cfg, smoke);
 }
 
 /// §Perf: batch-sweep engine throughput on the paper's four-network grid
@@ -496,4 +497,110 @@ fn delta_replay(cfg: &SpeedConfig, smoke: bool) {
         warm.fast_forwarded_instrs,
     );
     emit_bench_json("SPEED_BENCH_DELTA_JSON", "BENCH_delta.json", smoke, &json);
+}
+
+/// §Perf: whole-program summary replay vs the delta-cache steady state —
+/// the same cold grid with the summary cache off (deltas still replay),
+/// then the record → shadow-validate → replay protocol walked on one
+/// engine: cold (steps fully, records untrusted summaries),
+/// delta-warm (steps fully again, publishes summaries after the
+/// bit-exact shadow comparison) and summary-warm (final machine state
+/// reconstructed by pure arithmetic — `summary_replays > 0` asserted on
+/// telemetry, never on wall-clock). Bit-identical results asserted
+/// across all four runs; wall-clocks and counters land in
+/// `BENCH_replay.json` (override the path with
+/// `SPEED_BENCH_REPLAY_JSON`). Full mode sweeps cold VGG16 at
+/// int8/Mixed; smoke mode swaps in the dominant conv3x3 layer.
+/// Memoization is off so every run really enters the simulation path.
+fn summary_replay(cfg: &SpeedConfig, smoke: bool) {
+    let (grid_name, layers): (&str, Vec<ConvLayer>) = if smoke {
+        ("conv3x3_56", vec![ConvLayer::new("r3", 64, 64, 56, 56, 3, 1, 1)])
+    } else {
+        let vgg = all_models().into_iter().find(|m| m.name == "VGG16").expect("VGG16 in zoo");
+        ("VGG16", vgg.layers)
+    };
+    println!("\n== summary cache: whole-program analytic replay ({grid_name} @int8 Mixed) ==");
+    let spec_for = |summary: bool| {
+        SweepSpec::new(cfg.clone())
+            .network(grid_name, layers.clone())
+            .precisions(vec![Precision::Int8])
+            .memoize(false)
+            .summary_cache(summary)
+    };
+
+    let t0 = Instant::now();
+    let off = SweepEngine::new().run(&spec_for(false)).expect("summary-off sweep");
+    let dt_off = t0.elapsed().as_secs_f64();
+    println!(
+        "summary cache off   ({} threads)       {dt_off:>8.2}s  {} delta replays",
+        off.threads_used, off.replayed_regions
+    );
+
+    let engine = SweepEngine::new();
+    let t1 = Instant::now();
+    let cold = engine.run(&spec_for(true)).expect("summary-on cold sweep");
+    let dt_cold = t1.elapsed().as_secs_f64();
+    println!(
+        "cold (records)      ({} threads)       {dt_cold:>8.2}s  {} summaries recorded",
+        cold.threads_used,
+        engine.cached_summaries()
+    );
+
+    let t2 = Instant::now();
+    let validated = engine.run(&spec_for(true)).expect("shadow-validation sweep");
+    let dt_validate = t2.elapsed().as_secs_f64();
+    println!(
+        "delta-warm (shadow) ({} threads)       {dt_validate:>8.2}s  {} shadow validations",
+        validated.threads_used, validated.shadow_validations
+    );
+
+    let t3 = Instant::now();
+    let warm = engine.run(&spec_for(true)).expect("summary-warm sweep");
+    let dt_warm = t3.elapsed().as_secs_f64();
+    println!(
+        "summary-warm        ({} threads)       {dt_warm:>8.2}s  {} replays / {} hits  ({:.2}x vs off)",
+        warm.threads_used,
+        warm.summary_replays,
+        warm.summary_hits,
+        dt_off / dt_warm.max(1e-9)
+    );
+
+    // Acceptance: summary replay is execution-strategy only —
+    // bit-identical — and the warm pass provably replays whole programs
+    // without a shadow pass (telemetry, not wall-clock: every key is
+    // trusted by the end of the validation run, so run 3 steps nothing
+    // for the summarized programs).
+    assert_eq!(cold.results, off.results, "summary-on cold diverged from summary-off");
+    assert_eq!(validated.results, off.results, "shadow validation diverged from summary-off");
+    assert_eq!(warm.results, off.results, "summary replay diverged from summary-off");
+    assert_eq!(off.summary_hits, 0, "disabled cache must not hit");
+    assert!(engine.cached_summaries() > 0, "cold run must record summaries");
+    assert!(warm.summary_replays > 0, "warm pass must replay whole programs");
+    assert_eq!(warm.shadow_validations, 0, "trusted summaries must skip the shadow pass");
+    println!("[bench] summary replay bit-identical across off/cold/validated/warm runs");
+
+    let json = format!(
+        concat!(
+            "{{\"bench\":\"replay\",\"mode\":\"{}\",\"network\":\"{}\",\"precision\":8,",
+            "\"strategy\":\"mixed\",\"threads\":{},\"off_secs\":{:.3},\"cold_secs\":{:.3},",
+            "\"validate_secs\":{:.3},\"warm_secs\":{:.3},\"warm_speedup\":{:.3},",
+            "\"cached_summaries\":{},\"summary_hits_warm\":{},\"summary_replays_warm\":{},",
+            "\"shadow_validations_validate\":{},\"delta_evictions\":{},",
+            "\"bit_identical\":true}}\n"
+        ),
+        if smoke { "smoke" } else { "full" },
+        grid_name,
+        warm.threads_used,
+        dt_off,
+        dt_cold,
+        dt_validate,
+        dt_warm,
+        dt_off / dt_warm.max(1e-9),
+        engine.cached_summaries(),
+        warm.summary_hits,
+        warm.summary_replays,
+        validated.shadow_validations,
+        warm.delta_evictions,
+    );
+    emit_bench_json("SPEED_BENCH_REPLAY_JSON", "BENCH_replay.json", smoke, &json);
 }

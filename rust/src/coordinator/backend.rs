@@ -24,13 +24,13 @@
 //!   [`conv2d_ref`](crate::mem::tensor::conv2d_ref); a mismatch fails
 //!   the job (and with it the sweep).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::fmt;
 use std::sync::{Arc, Mutex};
 
 use crate::arch::{AraConfig, Precision, SpeedConfig};
 use crate::baseline::simulate_layer_ara;
-use crate::core::{CachedDelta, DeltaStore, ExecMode, Processor, SimStats};
+use crate::core::{CachedDelta, DeltaStore, ExecMode, Processor, ProgramSummary, SimStats};
 use crate::cost::roofline_gops;
 use crate::dataflow::{
     compile_conv, compile_conv_shard, extract_ofmap, pack_ifmap_image, pack_weight_image,
@@ -324,10 +324,84 @@ impl ProgramCache {
 
 /// Cap on distinct region keys held by a [`DeltaCache`]. Each entry is
 /// a few hundred bytes (one full timing-state delta), so the cap
-/// bounds the cache around tens of MiB; once full, *new* keys are
-/// dropped (existing keys still republish) — replay is an
-/// optimization, never a correctness dependency.
+/// bounds the cache around tens of MiB; past it the least-recently
+/// *touched* key is evicted (a hit refreshes recency) and counted —
+/// replay is an optimization, never a correctness dependency, so a
+/// sweep bigger than the cap degrades to re-verifying cold regions
+/// instead of silently never caching new ones.
 const DELTA_CACHE_CAP: usize = 65_536;
+
+/// Cap on whole-program summaries held by a [`SummaryCache`]. A
+/// summary is a few KiB (segment deltas over the full timing-state
+/// vector), so the cap bounds the cache around tens of MiB; LRU past
+/// the cap, same discipline as [`DeltaCache`].
+const SUMMARY_CACHE_CAP: usize = 4_096;
+
+/// Shared LRU bookkeeping behind [`DeltaCache`] and [`SummaryCache`]:
+/// a key → value map plus a recency index (`tick → key`, ticks
+/// strictly monotonic, so `BTreeMap::pop_first` is exactly the LRU
+/// victim). Same discipline as the sweep engine's `MemoCache`; kept as
+/// one private type so the two shared caches can't drift apart.
+#[derive(Debug)]
+struct LruState<V> {
+    map: HashMap<u64, (V, u64)>,
+    recency: BTreeMap<u64, u64>,
+    tick: u64,
+    evictions: u64,
+    cap: usize,
+}
+
+impl<V: Clone> LruState<V> {
+    fn new(cap: usize) -> Self {
+        LruState {
+            map: HashMap::new(),
+            recency: BTreeMap::new(),
+            tick: 0,
+            evictions: 0,
+            cap,
+        }
+    }
+
+    /// Fetch a value, refreshing its recency.
+    fn get(&mut self, key: u64) -> Option<V> {
+        self.tick += 1;
+        let tick = self.tick;
+        let (v, t) = self.map.get_mut(&key)?;
+        self.recency.remove(t);
+        *t = tick;
+        self.recency.insert(tick, key);
+        Some(v.clone())
+    }
+
+    /// Insert or overwrite a value (refreshing recency), then evict
+    /// least-recently-touched entries while over cap.
+    fn insert(&mut self, key: u64, value: V) {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some((_, old_tick)) = self.map.insert(key, (value, tick)) {
+            self.recency.remove(&old_tick);
+        }
+        self.recency.insert(tick, key);
+        while self.map.len() > self.cap {
+            match self.recency.pop_first() {
+                Some((_, victim)) => {
+                    self.map.remove(&victim);
+                    self.evictions += 1;
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// All entries, sorted by key — the deterministic order the persist
+    /// layer serializes.
+    fn entries_sorted(&self) -> Vec<(u64, V)> {
+        let mut out: Vec<(u64, V)> =
+            self.map.iter().map(|(k, (v, _))| (*k, v.clone())).collect();
+        out.sort_by_key(|(k, _)| *k);
+        out
+    }
+}
 
 /// Engine-wide converged-delta cache: region-keyed
 /// [`CachedDelta`]s shared by every worker slot of a sweep engine (and
@@ -337,17 +411,24 @@ const DELTA_CACHE_CAP: usize = 65_536;
 /// off the program-level base fingerprint built in
 /// [`SpeedCycle::run_cached`] (program structure × config × precision
 /// × strategy), so two cells that could converge to different deltas
-/// can never alias. Internally synchronized; lock-scoped operations
-/// only (no I/O or simulation under the lock).
-#[derive(Debug, Default)]
+/// can never alias. LRU-bounded at [`DELTA_CACHE_CAP`]. Internally
+/// synchronized; lock-scoped operations only (no I/O or simulation
+/// under the lock).
+#[derive(Debug)]
 pub struct DeltaCache {
-    inner: Mutex<HashMap<u64, Arc<CachedDelta>>>,
+    inner: Mutex<LruState<Arc<CachedDelta>>>,
+}
+
+impl Default for DeltaCache {
+    fn default() -> Self {
+        DeltaCache { inner: Mutex::new(LruState::new(DELTA_CACHE_CAP)) }
+    }
 }
 
 impl DeltaCache {
     /// Entries currently cached.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap_or_else(|p| p.into_inner()).len()
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).map.len()
     }
 
     /// True when nothing is cached.
@@ -355,24 +436,25 @@ impl DeltaCache {
         self.len() == 0
     }
 
+    /// Keys evicted LRU-first since construction (telemetry; surfaced
+    /// as `SweepOutcome::delta_evictions` and in the serve summary).
+    pub fn evictions(&self) -> u64 {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).evictions
+    }
+
     /// All entries, sorted by key — the deterministic order the persist
     /// layer serializes.
     pub fn entries(&self) -> Vec<(u64, CachedDelta)> {
         let m = self.inner.lock().unwrap_or_else(|p| p.into_inner());
-        let mut out: Vec<(u64, CachedDelta)> =
-            m.iter().map(|(k, v)| (*k, (**v).clone())).collect();
-        out.sort_by_key(|(k, _)| *k);
-        out
+        m.entries_sorted().into_iter().map(|(k, v)| (k, (*v).clone())).collect()
     }
 
-    /// Bulk-insert entries (cache warm-up from a persisted file),
-    /// respecting the entry cap. Existing keys are overwritten.
+    /// Bulk-insert entries (cache warm-up from a persisted file).
+    /// Existing keys are overwritten; past the cap the least-recently
+    /// touched keys are evicted, newest-merged-last wins.
     pub fn merge(&self, entries: impl IntoIterator<Item = (u64, CachedDelta)>) {
         let mut m = self.inner.lock().unwrap_or_else(|p| p.into_inner());
         for (k, d) in entries {
-            if m.len() >= DELTA_CACHE_CAP && !m.contains_key(&k) {
-                break;
-            }
             m.insert(k, Arc::new(d));
         }
     }
@@ -380,15 +462,111 @@ impl DeltaCache {
 
 impl DeltaStore for DeltaCache {
     fn get(&self, key: u64) -> Option<Arc<CachedDelta>> {
-        self.inner.lock().unwrap_or_else(|p| p.into_inner()).get(&key).cloned()
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).get(key)
     }
 
     fn put(&self, key: u64, delta: CachedDelta) {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).insert(key, Arc::new(delta));
+    }
+}
+
+/// One cached whole-program summary plus its trust state. `trusted`
+/// starts `false` when the summary is first recorded by a cold run;
+/// the next run of the same key *shadow-validates* it — steps the full
+/// program again and compares the fresh recording bit-exactly against
+/// the stored one ([`ProgramSummary::replays_identically`]) — and only
+/// then flips the flag. Replay only ever fires from trusted entries,
+/// so a corrupted or non-deterministic recording can delay replay but
+/// never change a reported result.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CachedSummary {
+    /// The recorded whole-program transfer function.
+    pub summary: ProgramSummary,
+    /// Whether a shadow-validation pass confirmed the recording.
+    pub trusted: bool,
+}
+
+/// Engine-wide whole-program summary cache: the third rung of the
+/// shard → fast-forward → delta-cache ladder. Keyed by the *same*
+/// program-level fingerprint chain as the delta cache (program
+/// structure × config × precision × strategy, shard-aware through the
+/// structure fingerprint), so a summary can never replay against a
+/// cell it wasn't recorded from. LRU-bounded at [`SUMMARY_CACHE_CAP`];
+/// internally synchronized, lock-scoped operations only. See
+/// [`SpeedCycle::run_cached`] for the record → shadow-validate →
+/// replay protocol.
+#[derive(Debug)]
+pub struct SummaryCache {
+    inner: Mutex<LruState<Arc<CachedSummary>>>,
+}
+
+impl Default for SummaryCache {
+    fn default() -> Self {
+        SummaryCache { inner: Mutex::new(LruState::new(SUMMARY_CACHE_CAP)) }
+    }
+}
+
+impl SummaryCache {
+    /// Summaries currently cached (trusted or not).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).map.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Keys evicted LRU-first since construction (telemetry).
+    pub fn evictions(&self) -> u64 {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).evictions
+    }
+
+    /// Fetch the cached summary for `key`, refreshing its recency.
+    pub fn get(&self, key: u64) -> Option<Arc<CachedSummary>> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).get(key)
+    }
+
+    /// Store a freshly recorded, not-yet-validated summary (overwrites
+    /// any previous entry for the key — the re-record path after a
+    /// failed shadow validation).
+    pub fn record(&self, key: u64, summary: ProgramSummary) {
+        self.inner
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .insert(key, Arc::new(CachedSummary { summary, trusted: false }));
+    }
+
+    /// Promote `key`'s summary to trusted after a successful shadow
+    /// validation. No-op when the key is absent (evicted between the
+    /// lookup and the validation finishing — safe, just re-records
+    /// later).
+    pub fn mark_trusted(&self, key: u64) {
         let mut m = self.inner.lock().unwrap_or_else(|p| p.into_inner());
-        if m.len() >= DELTA_CACHE_CAP && !m.contains_key(&key) {
-            return;
+        if let Some(e) = m.get(key) {
+            if !e.trusted {
+                let promoted = CachedSummary { summary: e.summary.clone(), trusted: true };
+                m.insert(key, Arc::new(promoted));
+            }
         }
-        m.insert(key, Arc::new(delta));
+    }
+
+    /// All entries (with trust flags), sorted by key — the
+    /// deterministic order the persist layer serializes.
+    pub fn entries(&self) -> Vec<(u64, CachedSummary)> {
+        let m = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        m.entries_sorted().into_iter().map(|(k, v)| (k, (*v).clone())).collect()
+    }
+
+    /// Bulk-insert entries (warm-up from a persisted file or a fleet
+    /// exchange), keeping their trust flags: a persisted trusted
+    /// summary was shadow-validated before it was ever written out.
+    /// Existing keys are overwritten, LRU past the cap.
+    pub fn merge(&self, entries: impl IntoIterator<Item = (u64, CachedSummary)>) {
+        let mut m = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        for (k, s) in entries {
+            m.insert(k, Arc::new(s));
+        }
     }
 }
 
@@ -424,6 +602,23 @@ pub struct WorkerSlot {
     /// the first stepped iteration (telemetry; summed into
     /// `SweepOutcome::replayed_regions`).
     pub replayed_regions: u64,
+    /// Shared whole-program summary cache (the engine's
+    /// [`SummaryCache`], or `None` when summary replay is disabled).
+    /// Scheduling-only: results are bit-identical either way
+    /// (record → shadow-validate → replay protocol).
+    pub summary_store: Option<Arc<SummaryCache>>,
+    /// Runs whose summary lookup found a cached entry, trusted or not
+    /// (telemetry; summed into `SweepOutcome::summary_hits`).
+    pub summary_hits: u64,
+    /// Runs reconstructed purely arithmetically from a trusted summary
+    /// — zero decode, zero stepping (telemetry; summed into
+    /// `SweepOutcome::summary_replays`).
+    pub summary_replays: u64,
+    /// Shadow-validation passes performed: full stepped re-runs whose
+    /// recording was compared bit-exactly against a cached untrusted
+    /// summary (telemetry; summed into
+    /// `SweepOutcome::shadow_validations`).
+    pub shadow_validations: u64,
 }
 
 impl Default for WorkerSlot {
@@ -436,6 +631,10 @@ impl Default for WorkerSlot {
             delta_store: None,
             delta_cache_hits: 0,
             replayed_regions: 0,
+            summary_store: None,
+            summary_hits: 0,
+            summary_replays: 0,
+            shadow_validations: 0,
         }
     }
 }
@@ -456,6 +655,9 @@ pub struct SlotOptions {
     pub fast_forward: bool,
     /// Shared converged-delta cache, `None` = replay disabled.
     pub delta_store: Option<Arc<dyn DeltaStore>>,
+    /// Shared whole-program summary cache, `None` = summary replay
+    /// disabled.
+    pub summary_store: Option<Arc<SummaryCache>>,
     /// Program-cache entry cap override (`None` = default).
     pub program_cache_cap: Option<usize>,
     /// Program-cache byte budget override (`None` = default).
@@ -467,6 +669,7 @@ impl Default for SlotOptions {
         SlotOptions {
             fast_forward: true,
             delta_store: None,
+            summary_store: None,
             program_cache_cap: None,
             program_cache_bytes: None,
         }
@@ -516,6 +719,10 @@ impl SlotPool {
         slot.delta_store = opts.delta_store.clone();
         slot.delta_cache_hits = 0;
         slot.replayed_regions = 0;
+        slot.summary_store = opts.summary_store.clone();
+        slot.summary_hits = 0;
+        slot.summary_replays = 0;
+        slot.shadow_validations = 0;
         slot.programs.set_limits(
             opts.program_cache_cap.unwrap_or(PROGRAM_CACHE_CAP),
             opts.program_cache_bytes.unwrap_or(PROGRAM_CACHE_MAX_BYTES),
@@ -697,14 +904,18 @@ pub fn by_name(name: &str) -> Option<std::sync::Arc<dyn SimBackend>> {
 ///
 /// # Fast execution, identical numbers
 ///
-/// Two cold-path optimizations ride on the worker slot, both
-/// bit-identical by contract (pinned by `tests/fastforward_parity.rs`):
-/// compiled programs are kept pre-decoded in the slot's
-/// [`ProgramCache`] (cells repeated against the same slot skip codegen
-/// and the word-by-word decoder), and timing runs honor the slot's
-/// [`fast_forward`](WorkerSlot::fast_forward) flag, letting the
-/// processor extrapolate converged steady-state loop regions instead
-/// of stepping every instruction.
+/// Three cold-path optimizations ride on the worker slot, all
+/// bit-identical by contract (pinned by `tests/fastforward_parity.rs`
+/// and `tests/replay_parity.rs`): compiled programs are kept
+/// pre-decoded in the slot's [`ProgramCache`] (cells repeated against
+/// the same slot skip codegen and the word-by-word decoder), timing
+/// runs honor the slot's [`fast_forward`](WorkerSlot::fast_forward)
+/// flag, letting the processor extrapolate converged steady-state loop
+/// regions instead of stepping every instruction, and whole programs
+/// whose shadow-validated [`ProgramSummary`] sits in the slot's
+/// [`SummaryCache`] replay as pure arithmetic — no decode, no
+/// stepping, no per-region verification iteration (the third rung of
+/// the shard → fast-forward → delta-cache ladder).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SpeedCycle;
 
@@ -760,15 +971,68 @@ impl SpeedCycle {
             );
             h
         };
+        // Whole-program summary protocol (see [`SummaryCache`]):
+        // replay trusted summaries arithmetically, shadow-validate
+        // recorded-but-untrusted ones, record on a cold key. The
+        // summary key is the delta base fingerprint itself — the
+        // program-level chain commits to everything timing depends on.
+        let summary_store = slot.summary_store.clone();
+        let cached_summary = summary_store.as_ref().and_then(|s| s.get(delta_base_fp));
+        let mut summary_hit = 0u64;
+        let mut summary_replay = 0u64;
+        let mut shadow_validation = 0u64;
         let proc = slot.processor_for(cfg, prog.dram_bytes, ExecMode::Timing)?;
         proc.set_fast_forward(fast_forward);
         proc.set_delta_store(delta_store, delta_base_fp);
-        proc.run_decoded(&prog.instrs, &prog.regions)?;
+        let mut replayed_whole = false;
+        if let Some(entry) = &cached_summary {
+            summary_hit = 1;
+            if entry.trusted && proc.replay_summary(&entry.summary) {
+                replayed_whole = true;
+                summary_replay = 1;
+            }
+        }
+        if !replayed_whole {
+            if summary_store.is_some() {
+                proc.begin_summary_capture();
+            }
+            proc.run_decoded(&prog.instrs, &prog.regions)?;
+            if let Some(store) = &summary_store {
+                if let Some(fresh) = proc.take_summary() {
+                    match &cached_summary {
+                        Some(entry) if !entry.trusted => {
+                            // Shadow validation: this stepped run re-
+                            // recorded the transfer function; the
+                            // cached summary is published (trusted)
+                            // only if the two recordings agree
+                            // bit-exactly. A mismatch discards the
+                            // poisoned entry and re-records from the
+                            // stepped truth — which then has to
+                            // survive its own validation pass.
+                            shadow_validation = 1;
+                            if entry.summary.replays_identically(&fresh) {
+                                store.mark_trusted(delta_base_fp);
+                            } else {
+                                store.record(delta_base_fp, fresh);
+                            }
+                        }
+                        // A trusted entry whose replay guard refused
+                        // (control-state divergence): leave it — the
+                        // stepped result stands on its own.
+                        Some(_) => {}
+                        None => store.record(delta_base_fp, fresh),
+                    }
+                }
+            }
+        }
         proc.set_useful_macs(prog.useful_macs);
         let stats = proc.stats().clone();
         slot.fast_forwarded_instrs += proc.fast_forwarded_instrs();
         slot.delta_cache_hits += proc.delta_cache_hits();
         slot.replayed_regions += proc.replayed_regions();
+        slot.summary_hits += summary_hit;
+        slot.summary_replays += summary_replay;
+        slot.shadow_validations += shadow_validation;
         Ok(stats)
     }
 }
@@ -1373,25 +1637,34 @@ mod tests {
         let opts = SlotOptions {
             fast_forward: false,
             delta_store: Some(cache),
+            summary_store: Some(Arc::new(SummaryCache::default())),
             program_cache_cap: Some(2),
             program_cache_bytes: Some(1 << 20),
         };
         let mut slot = pool.check_out(1, 2, &opts);
         assert!(!slot.fast_forward);
         assert!(slot.delta_store.is_some());
+        assert!(slot.summary_store.is_some());
         assert_eq!(slot.programs.limits(), (2, 1 << 20));
         // Dirty the telemetry, park, and check out again with defaults:
         // counters zero, options revert, cached state survives.
         slot.fast_forwarded_instrs = 99;
         slot.delta_cache_hits = 7;
         slot.replayed_regions = 3;
+        slot.summary_hits = 5;
+        slot.summary_replays = 4;
+        slot.shadow_validations = 2;
         pool.check_in(1, 2, slot);
         let slot = pool.check_out(1, 2, &SlotOptions::default());
         assert!(slot.fast_forward);
         assert!(slot.delta_store.is_none());
+        assert!(slot.summary_store.is_none());
         assert_eq!(slot.fast_forwarded_instrs, 0);
         assert_eq!(slot.delta_cache_hits, 0);
         assert_eq!(slot.replayed_regions, 0);
+        assert_eq!(slot.summary_hits, 0);
+        assert_eq!(slot.summary_replays, 0);
+        assert_eq!(slot.shadow_validations, 0);
         assert_eq!(slot.programs.limits(), (PROGRAM_CACHE_CAP, PROGRAM_CACHE_MAX_BYTES));
     }
 
@@ -1434,6 +1707,141 @@ mod tests {
         let mut cfg = SpeedConfig::default();
         cfg.store_drain_cycles = 7;
         assert_ne!(base, config_fingerprint(&cfg), "store drain must move the key");
+    }
+
+    #[test]
+    fn delta_cache_evicts_lru_past_cap() {
+        // Minimal well-formed delta: empty times/counters, control
+        // unchanged, no trace — the decode path the persist layer uses.
+        let tiny = || CachedDelta::from_words(&[0, 0, 1, 0]).expect("minimal delta decodes");
+        let cache = DeltaCache::default();
+        for k in 0..DELTA_CACHE_CAP as u64 {
+            cache.put(k, tiny());
+        }
+        assert_eq!(cache.len(), DELTA_CACHE_CAP);
+        assert_eq!(cache.evictions(), 0, "at cap is not over cap");
+        // Touch key 0 so it is no longer the LRU victim, then overflow:
+        // key 1 (now least recently touched) must go, key 0 must stay.
+        // The old behavior silently refused the new key instead.
+        assert!(cache.get(0).is_some());
+        cache.put(DELTA_CACHE_CAP as u64, tiny());
+        assert_eq!(cache.len(), DELTA_CACHE_CAP, "cap holds after eviction");
+        assert_eq!(cache.evictions(), 1);
+        assert!(cache.get(1).is_none(), "LRU key was evicted");
+        assert!(cache.get(0).is_some(), "recently touched key survives");
+        assert!(cache.get(DELTA_CACHE_CAP as u64).is_some(), "new key was admitted");
+        // Overwriting an existing key never evicts.
+        cache.put(0, tiny());
+        assert_eq!(cache.evictions(), 1);
+        // merge() admits new keys past the cap the same way.
+        cache.merge([(u64::MAX, tiny()), (u64::MAX - 1, tiny())]);
+        assert_eq!(cache.len(), DELTA_CACHE_CAP);
+        assert_eq!(cache.evictions(), 3);
+        assert!(cache.get(u64::MAX).is_some());
+        assert!(cache.get(u64::MAX - 1).is_some());
+    }
+
+    #[test]
+    fn summary_cache_replays_whole_programs_after_shadow_validation() {
+        let cfg = SpeedConfig::default();
+        let layer = ConvLayer::new("t", 16, 32, 40, 40, 3, 1, 1);
+        let cache = Arc::new(SummaryCache::default());
+        let fresh_slot = || WorkerSlot {
+            summary_store: Some(Arc::clone(&cache)),
+            ..WorkerSlot::default()
+        };
+
+        // Run 1 (cold key): steps fully and records an untrusted
+        // summary — never replays off its own recording.
+        let mut s1 = fresh_slot();
+        let cold = SpeedCycle
+            .simulate(&mut s1, &cfg, &layer, Precision::Int8, Strategy::FeatureFirst)
+            .unwrap();
+        assert_eq!((s1.summary_hits, s1.summary_replays, s1.shadow_validations), (0, 0, 0));
+        assert_eq!(cache.len(), 1, "cold run records one summary");
+        assert!(!cache.entries()[0].1.trusted, "fresh recording starts untrusted");
+
+        // Run 2: finds the untrusted entry, steps fully anyway, and
+        // the bit-exact shadow comparison publishes (trusts) it.
+        let mut s2 = fresh_slot();
+        let validated = SpeedCycle
+            .simulate(&mut s2, &cfg, &layer, Precision::Int8, Strategy::FeatureFirst)
+            .unwrap();
+        assert_eq!(validated, cold);
+        assert_eq!((s2.summary_hits, s2.summary_replays, s2.shadow_validations), (1, 0, 1));
+        assert!(cache.entries()[0].1.trusted, "agreeing shadow run publishes");
+
+        // Run 3: trusted summary → pure arithmetic replay, zero
+        // stepped instructions (ff telemetry covers the whole program).
+        let mut s3 = fresh_slot();
+        let replayed = SpeedCycle
+            .simulate(&mut s3, &cfg, &layer, Precision::Int8, Strategy::FeatureFirst)
+            .unwrap();
+        assert_eq!(replayed, cold, "summary replay must be bit-identical");
+        assert_eq!((s3.summary_hits, s3.summary_replays, s3.shadow_validations), (1, 1, 0));
+        assert!(
+            s3.fast_forwarded_instrs >= s1.fast_forwarded_instrs,
+            "replay skips at least everything fast-forward skipped"
+        );
+
+        // Summary cache off: same numbers, no telemetry, no recording.
+        let mut off = WorkerSlot::default();
+        let plain = SpeedCycle
+            .simulate(&mut off, &cfg, &layer, Precision::Int8, Strategy::FeatureFirst)
+            .unwrap();
+        assert_eq!(plain, cold);
+        assert_eq!((off.summary_hits, off.summary_replays, off.shadow_validations), (0, 0, 0));
+    }
+
+    #[test]
+    fn poisoned_summary_is_discarded_by_shadow_validation() {
+        let cfg = SpeedConfig::default();
+        let layer = ConvLayer::new("t", 16, 32, 40, 40, 3, 1, 1);
+        let cache = Arc::new(SummaryCache::default());
+        let fresh_slot = || WorkerSlot {
+            summary_store: Some(Arc::clone(&cache)),
+            ..WorkerSlot::default()
+        };
+        let mut s1 = fresh_slot();
+        let cold = SpeedCycle
+            .simulate(&mut s1, &cfg, &layer, Precision::Int8, Strategy::FeatureFirst)
+            .unwrap();
+
+        // Poison the recorded (still untrusted) summary: bump one
+        // counter delta. It still decodes — only the shadow comparison
+        // can tell it from the truth.
+        let (key, entry) = cache.entries().remove(0);
+        let mut words = entry.summary.to_words();
+        let last = words.len() - 1;
+        words[last] = words[last].wrapping_add(1);
+        let poisoned = ProgramSummary::from_words(&words).expect("tampered counters decode");
+        assert!(!entry.summary.replays_identically(&poisoned));
+        cache.record(key, poisoned);
+
+        // Shadow validation detects the mismatch, the stepped result
+        // wins, and the poisoned entry is replaced by a fresh
+        // untrusted recording — which then survives its own pass.
+        let mut s2 = fresh_slot();
+        let stepped = SpeedCycle
+            .simulate(&mut s2, &cfg, &layer, Precision::Int8, Strategy::FeatureFirst)
+            .unwrap();
+        assert_eq!(stepped, cold, "stepped truth wins over a poisoned summary");
+        assert_eq!((s2.summary_hits, s2.summary_replays, s2.shadow_validations), (1, 0, 1));
+        assert!(!cache.entries()[0].1.trusted, "mismatch re-records, never publishes");
+
+        let mut s3 = fresh_slot();
+        SpeedCycle
+            .simulate(&mut s3, &cfg, &layer, Precision::Int8, Strategy::FeatureFirst)
+            .unwrap();
+        assert_eq!(s3.shadow_validations, 1);
+        assert!(cache.entries()[0].1.trusted, "clean re-recording publishes");
+
+        let mut s4 = fresh_slot();
+        let replayed = SpeedCycle
+            .simulate(&mut s4, &cfg, &layer, Precision::Int8, Strategy::FeatureFirst)
+            .unwrap();
+        assert_eq!(replayed, cold);
+        assert_eq!(s4.summary_replays, 1, "recovered entry replays");
     }
 
     #[test]

@@ -40,7 +40,10 @@
 //! Before and after the sweep, nodes warm each other: the coordinator
 //! pulls every node's persist blob for the request's config
 //! fingerprint (`cache_export`), unions them (memo entries keyed by
-//! `SimKey`, delta records by their fingerprint key), and pushes the
+//! `SimKey`, delta and program-summary records by their fingerprint
+//! keys; for a summary key held by several nodes a trusted recording
+//! wins over an untrusted one, so shadow-validation work done anywhere
+//! in the fleet is never discarded), and pushes the
 //! union back (`cache_import`) — skipping nodes whose exported blob
 //! already content-fingerprints equal to the union
 //! ([`super::backend::blob_fingerprint`]). A shape simulated anywhere
@@ -67,7 +70,7 @@ use std::sync::Mutex;
 use std::thread;
 use std::time::{Duration, Instant};
 
-use super::backend::{blob_fingerprint, by_name, config_fingerprint, SimBackend};
+use super::backend::{blob_fingerprint, by_name, config_fingerprint, CachedSummary, SimBackend};
 use super::persist;
 use super::serve::{hex_decode, hex_encode, parse_record, quote, Op, Request, Value};
 use super::sweep::{wavefront_order, CachedSim, SimKey};
@@ -148,7 +151,8 @@ pub struct NodeReport {
     pub busy_ms: u64,
     /// Slowest successful item on this node — its critical-path floor.
     pub max_item_ms: u64,
-    /// Records (memo + delta) pulled from this node by cache exchange.
+    /// Records (memo + delta + summary) pulled from this node by cache
+    /// exchange.
     pub pulled_entries: u64,
     /// Records pushed to this node by cache exchange.
     pub pushed_entries: u64,
@@ -283,6 +287,8 @@ pub(crate) fn plan_items(base: &Request, cfg: &SpeedConfig) -> Result<FleetPlan>
                         shard_threshold: base.shard_threshold,
                         fast_forward: base.fast_forward,
                         delta_cache: base.delta_cache,
+                        summary_cache: base.summary_cache,
+                        deadline_ms: base.deadline_ms,
                         priority: base.priority,
                         overrides: base.overrides,
                         cfg_fp: None,
@@ -658,7 +664,9 @@ fn exchange_caches(
                 return None;
             }
             let blob = hex_decode(get_str(&fields, "blob")?).ok()?;
-            let pulled = get_u64(&fields, "entries")? + get_u64(&fields, "deltas")?;
+            let pulled = get_u64(&fields, "entries")?
+                + get_u64(&fields, "deltas")?
+                + get_u64(&fields, "summaries")?;
             Some((blob_fingerprint(&blob), blob, pulled))
         });
         match reply {
@@ -672,10 +680,14 @@ fn exchange_caches(
     // Union every blob's records. Memo values for the same key are
     // bit-identical across nodes (the determinism contract), so
     // first-in wins losslessly; delta records are advisory either way.
+    // For a summary key several nodes hold, a trusted recording wins
+    // over an untrusted one — importing nodes then replay immediately
+    // instead of re-earning trust with their own shadow validation.
     let mut memo: HashMap<SimKey, CachedSim> = HashMap::new();
     let mut deltas: BTreeMap<u64, CachedDelta> = BTreeMap::new();
+    let mut summaries: BTreeMap<u64, CachedSummary> = BTreeMap::new();
     for export in exported.iter().flatten() {
-        let Ok((entries, ds)) = persist::decode(&export.1) else {
+        let Ok((entries, ds, ss)) = persist::decode(&export.1) else {
             continue;
         };
         for (k, v) in entries {
@@ -684,11 +696,21 @@ fn exchange_caches(
         for (k, d) in ds {
             deltas.entry(k).or_insert(d);
         }
+        for (k, s) in ss {
+            let replace = match summaries.get(&k) {
+                None => true,
+                Some(cur) => s.trusted && !cur.trusted,
+            };
+            if replace {
+                summaries.insert(k, s);
+            }
+        }
     }
     let delta_vec: Vec<(u64, CachedDelta)> = deltas.into_iter().collect();
-    let union = persist::encode(memo.iter(), &delta_vec);
+    let summary_vec: Vec<(u64, CachedSummary)> = summaries.into_iter().collect();
+    let union = persist::encode(memo.iter(), &delta_vec, &summary_vec);
     let union_fp = blob_fingerprint(&union);
-    let union_records = (memo.len() + delta_vec.len()) as u64;
+    let union_records = (memo.len() + delta_vec.len() + summary_vec.len()) as u64;
     let union_hex = hex_encode(&union);
     for (ni, conn) in conns.iter_mut().enumerate() {
         // Only push where it changes anything: a node whose export

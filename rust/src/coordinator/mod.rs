@@ -18,8 +18,8 @@ pub mod serve;
 pub mod sweep;
 
 pub use backend::{
-    config_fingerprint, AraAnalytic, DecodedProgram, GoldenFunctional, ProgramCache,
-    RooflineBound, SimBackend, SlotPool, SpeedCycle, WorkerSlot,
+    config_fingerprint, AraAnalytic, CachedSummary, DecodedProgram, GoldenFunctional,
+    ProgramCache, RooflineBound, SimBackend, SlotPool, SpeedCycle, SummaryCache, WorkerSlot,
 };
 pub use fleet::{run_fleet, FleetOptions, FleetOutcome, NodeReport};
 pub use serve::{Request, ServeLimits, ServeShared, ServeStats, StreamSink, TcpReport};

@@ -1,5 +1,5 @@
-//! On-disk persistence of the sweep engine's memo table and
-//! converged-delta cache.
+//! On-disk persistence of the sweep engine's memo table, the
+//! converged-delta cache and the whole-program summary cache.
 //!
 //! A dependency-free, versioned binary format (the offline crate set has
 //! no serde): fixed-width little-endian fields, a magic tag, a format
@@ -8,47 +8,65 @@
 //! files written before the delta section existed), truncated input,
 //! trailing garbage or a checksum mismatch all reject the whole file
 //! with an error (never a panic), so callers fall back to a cold cache.
+//! One deliberate exception: version-2 files (written before the
+//! summary section existed) still decode, yielding zero summaries, so
+//! upgrading never throws away a warm on-disk cache.
 //!
-//! Layout (version 2):
+//! Layout (version 3):
 //!
 //! ```text
-//! magic    8 B   b"SPEEDSWC"
-//! version  4 B   u32 LE (currently 2)
-//! count    8 B   u64 LE, number of memo entries
-//! entries  count × 226 B, sorted by encoded key bytes (deterministic)
-//!   key:   backend_fp u64 | cfg_fp u64 | shape 7×u64 | prec-bits u8 | cf u8
-//!   stats: cycles, macs, useful_macs, dram_read, dram_write, vrf_read,
-//!          vrf_write, sau_busy, acc_busy, dram_busy, sa_fills,
-//!          operand_stall, instr {scalar, config, load, mac, partial,
-//!          store, alu} — 19×u64
-//! deltas   8 B   u64 LE, number of converged-delta records
-//! records  variable, keys strictly ascending (deterministic)
+//! magic     8 B   b"SPEEDSWC"
+//! version   4 B   u32 LE (currently 3)
+//! count     8 B   u64 LE, number of memo entries
+//! entries   count × 226 B, sorted by encoded key bytes (deterministic)
+//!   key:    backend_fp u64 | cfg_fp u64 | shape 7×u64 | prec-bits u8 | cf u8
+//!   stats:  cycles, macs, useful_macs, dram_read, dram_write, vrf_read,
+//!           vrf_write, sau_busy, acc_busy, dram_busy, sa_fills,
+//!           operand_stall, instr {scalar, config, load, mac, partial,
+//!           store, alu} — 19×u64
+//! deltas    8 B   u64 LE, number of converged-delta records
+//! records   variable, keys strictly ascending (deterministic)
 //!   key u64 | word_count u64 | word_count × u64
 //!   (words are the [`CachedDelta`] wire form; see
 //!   [`CachedDelta::to_words`])
-//! footer   8 B   u64 LE FNV-1a checksum of all preceding bytes
+//! summaries 8 B   u64 LE, number of program-summary records
+//!           (section absent entirely in version-2 files)
+//! records   variable, keys strictly ascending (deterministic)
+//!   key u64 | trusted u64 (0 or 1, strict) | word_count u64
+//!   | word_count × u64
+//!   (words are the [`ProgramSummary`] wire form; see
+//!   [`ProgramSummary::to_words`])
+//! footer    8 B   u64 LE FNV-1a checksum of all preceding bytes
 //! ```
 //!
 //! Keys embed the backend/config *fingerprints*, not the structures
 //! themselves: a cache written under one machine configuration simply
 //! never hits under another, and a fingerprint-scheme change (bumping a
 //! backend's `-vN` tag) invalidates old entries instead of aliasing
-//! them. Delta keys likewise fold the program structure, config,
-//! precision and strategy fingerprints, so a stale delta record can
+//! them. Delta and summary keys likewise fold the program structure,
+//! config, precision and strategy fingerprints, so a stale record can
 //! only miss — and even an aliased one is harmless, because replay
-//! verifies every cached delta against one stepped iteration before
-//! trusting it.
+//! verifies every cached delta against one stepped iteration, and a
+//! summary only replays once marked trusted (persisted trust was earned
+//! by a bit-exact shadow-validation pass before the file was written;
+//! control-state guards still refuse any summary that does not match
+//! the live machine).
 
-use super::backend::{fp_bytes, FP_SEED};
+use super::backend::{fp_bytes, CachedSummary, FP_SEED};
 use super::sweep::{CachedSim, SimKey};
 use crate::arch::Precision;
-use crate::core::{CachedDelta, InstrMix, SimStats};
+use crate::core::{CachedDelta, InstrMix, ProgramSummary, SimStats};
 use crate::error::{Error, Result};
 
 const MAGIC: &[u8; 8] = b"SPEEDSWC";
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
+/// Last prior version still accepted by [`decode`] (no summary section).
+const COMPAT_VERSION: u32 = 2;
 /// Minimum bytes of one delta record (key + word count, zero words).
 const DELTA_RECORD_MIN_BYTES: usize = 16;
+/// Minimum bytes of one summary record (key + trusted flag + word
+/// count, zero words).
+const SUMMARY_RECORD_MIN_BYTES: usize = 24;
 const KEY_BYTES: usize = 8 + 8 + 7 * 8 + 1 + 1;
 const STATS_BYTES: usize = 19 * 8;
 const ENTRY_BYTES: usize = KEY_BYTES + STATS_BYTES;
@@ -99,11 +117,15 @@ fn encode_stats(out: &mut Vec<u8>, s: &SimStats) {
     }
 }
 
-/// Serialize a memo table plus the converged-delta cache.
-/// Deterministic: memo entries are sorted by their encoded key bytes
-/// and delta records by key, so identical caches produce identical
-/// files.
-pub(crate) fn encode<'a, I>(cache: I, deltas: &[(u64, CachedDelta)]) -> Vec<u8>
+/// Serialize a memo table plus the converged-delta and program-summary
+/// caches. Deterministic: memo entries are sorted by their encoded key
+/// bytes and delta/summary records by key, so identical caches produce
+/// identical files.
+pub(crate) fn encode<'a, I>(
+    cache: I,
+    deltas: &[(u64, CachedDelta)],
+    summaries: &[(u64, CachedSummary)],
+) -> Vec<u8>
 where
     I: Iterator<Item = (&'a SimKey, &'a CachedSim)>,
 {
@@ -120,6 +142,12 @@ where
         deltas.iter().map(|(k, d)| (*k, d.to_words())).collect();
     records.sort_unstable_by_key(|(k, _)| *k);
     records.dedup_by_key(|(k, _)| *k);
+    let mut summary_records: Vec<(u64, bool, Vec<u64>)> = summaries
+        .iter()
+        .map(|(k, s)| (*k, s.trusted, s.summary.to_words()))
+        .collect();
+    summary_records.sort_unstable_by_key(|(k, _, _)| *k);
+    summary_records.dedup_by_key(|(k, _, _)| *k);
     let mut out = Vec::with_capacity(
         HEADER_BYTES + entries.len() * ENTRY_BYTES + FOOTER_BYTES,
     );
@@ -132,6 +160,15 @@ where
     put_u64(&mut out, records.len() as u64);
     for (key, words) in &records {
         put_u64(&mut out, *key);
+        put_u64(&mut out, words.len() as u64);
+        for w in words {
+            put_u64(&mut out, *w);
+        }
+    }
+    put_u64(&mut out, summary_records.len() as u64);
+    for (key, trusted, words) in &summary_records {
+        put_u64(&mut out, *key);
+        put_u64(&mut out, u64::from(*trusted));
         put_u64(&mut out, words.len() as u64);
         for w in words {
             put_u64(&mut out, *w);
@@ -177,15 +214,22 @@ fn decode_precision(bits: u8) -> Result<Precision> {
     }
 }
 
-/// Decoded cache file contents: (memo entries, delta records).
-pub(crate) type Decoded = (Vec<(SimKey, CachedSim)>, Vec<(u64, CachedDelta)>);
+/// Decoded cache file contents: (memo entries, delta records,
+/// program-summary records).
+pub(crate) type Decoded = (
+    Vec<(SimKey, CachedSim)>,
+    Vec<(u64, CachedDelta)>,
+    Vec<(u64, CachedSummary)>,
+);
 
-/// Parse a serialized memo table plus delta cache, each in file
-/// (= sorted-key) order — the order matters to callers merging through
-/// a bounded LRU cache, where it decides deterministically which
-/// entries survive. Strict: any structural defect anywhere (including
-/// inside the delta section) rejects the whole input with `Err`
-/// (callers keep their current cache).
+/// Parse a serialized memo table plus delta and summary caches, each in
+/// file (= sorted-key) order — the order matters to callers merging
+/// through a bounded LRU cache, where it decides deterministically
+/// which entries survive. Strict: any structural defect anywhere
+/// (including inside the delta or summary sections) rejects the whole
+/// input with `Err` (callers keep their current cache). Version-2
+/// files — which end right after the delta section — decode to zero
+/// summaries.
 pub(crate) fn decode(bytes: &[u8]) -> Result<Decoded> {
     if bytes.len() < HEADER_BYTES + FOOTER_BYTES {
         return Err(err("too short"));
@@ -200,7 +244,7 @@ pub(crate) fn decode(bytes: &[u8]) -> Result<Decoded> {
         return Err(err("bad magic (not a sweep cache file)"));
     }
     let version = u32::from_le_bytes(r.take(4)?.try_into().expect("4 bytes"));
-    if version != VERSION {
+    if version != VERSION && version != COMPAT_VERSION {
         return Err(err(format!("unsupported version {version} (want {VERSION})")));
     }
     let count = r.u64()? as usize;
@@ -286,10 +330,54 @@ pub(crate) fn decode(bytes: &[u8]) -> Result<Decoded> {
             .ok_or_else(|| err("malformed delta record"))?;
         deltas.push((key, delta));
     }
-    if r.pos != body.len() {
-        return Err(err("trailing bytes after delta section"));
+    if version == COMPAT_VERSION {
+        // v2 files end here — no summary section.
+        if r.pos != body.len() {
+            return Err(err("trailing bytes after delta section"));
+        }
+        return Ok((out, deltas, Vec::new()));
     }
-    Ok((out, deltas))
+    let n_summaries = r.u64()? as usize;
+    let min_bytes = n_summaries
+        .checked_mul(SUMMARY_RECORD_MIN_BYTES)
+        .ok_or_else(|| err("summary count overflows"))?;
+    if min_bytes > body.len() - r.pos {
+        return Err(err("summary count exceeds file size"));
+    }
+    let mut summaries = Vec::with_capacity(n_summaries);
+    let mut prev_key: Option<u64> = None;
+    for _ in 0..n_summaries {
+        let key = r.u64()?;
+        if let Some(p) = prev_key {
+            if p >= key {
+                return Err(err("summary keys not strictly ascending"));
+            }
+        }
+        prev_key = Some(key);
+        let trusted = match r.u64()? {
+            0 => false,
+            1 => true,
+            t => return Err(err(format!("bad summary trust tag {t}"))),
+        };
+        let n_words = r.u64()? as usize;
+        let word_bytes = n_words
+            .checked_mul(8)
+            .ok_or_else(|| err("summary record overflows"))?;
+        if word_bytes > body.len() - r.pos {
+            return Err(err("truncated summary record"));
+        }
+        let mut words = Vec::with_capacity(n_words);
+        for _ in 0..n_words {
+            words.push(r.u64()?);
+        }
+        let summary = ProgramSummary::from_words(&words)
+            .ok_or_else(|| err("malformed summary record"))?;
+        summaries.push((key, CachedSummary { summary, trusted }));
+    }
+    if r.pos != body.len() {
+        return Err(err("trailing bytes after summary section"));
+    }
+    Ok((out, deltas, summaries))
 }
 
 #[cfg(test)]
@@ -334,33 +422,55 @@ mod tests {
         ]
     }
 
+    /// Valid summary records built through the public wire form, one
+    /// trusted and one not (the flag must survive a round trip).
+    fn sample_summaries() -> Vec<(u64, CachedSummary)> {
+        // [n_start, start.., n_final, final.., times_len, counters_len,
+        //  total_instrs, n_segments, (instrs, times.., counters..)…]
+        let a = ProgramSummary::from_words(&[
+            1, 7, 1, 9, 2, 1, 10, 2, 4, 11, 12, 13, 6, 14, 15, 16,
+        ])
+        .unwrap();
+        let b = ProgramSummary::from_words(&[0, 0, 0, 0, 5, 1, 5]).unwrap();
+        vec![
+            (0x40, CachedSummary { summary: a, trusted: true }),
+            (0x50, CachedSummary { summary: b, trusted: false }),
+        ]
+    }
+
     #[test]
     fn round_trips_bit_exactly() {
         let m = sample();
         let d = sample_deltas();
-        let bytes = encode(m.iter(), &d);
-        let (sims, deltas) = decode(&bytes).unwrap();
+        let s = sample_summaries();
+        let bytes = encode(m.iter(), &d, &s);
+        let (sims, deltas, summaries) = decode(&bytes).unwrap();
         let back: HashMap<SimKey, CachedSim> = sims.into_iter().collect();
         assert_eq!(back, m);
         assert_eq!(deltas, d);
+        assert_eq!(summaries, s);
+        assert!(summaries[0].1.trusted && !summaries[1].1.trusted);
     }
 
     #[test]
     fn encoding_is_deterministic() {
         let m = sample();
         let d = sample_deltas();
-        assert_eq!(encode(m.iter(), &d), encode(m.iter(), &d));
-        // Delta input order must not matter either.
-        let mut rev = d.clone();
-        rev.reverse();
-        assert_eq!(encode(m.iter(), &d), encode(m.iter(), &rev));
+        let s = sample_summaries();
+        assert_eq!(encode(m.iter(), &d, &s), encode(m.iter(), &d, &s));
+        // Delta and summary input order must not matter either.
+        let mut rev_d = d.clone();
+        rev_d.reverse();
+        let mut rev_s = s.clone();
+        rev_s.reverse();
+        assert_eq!(encode(m.iter(), &d, &s), encode(m.iter(), &rev_d, &rev_s));
     }
 
     #[test]
     fn decode_preserves_sorted_file_order() {
         // Bounded-merge determinism depends on decode yielding entries
         // in file order, which encode sorts by encoded key bytes.
-        let (entries, _) = decode(&encode(sample().iter(), &[])).unwrap();
+        let (entries, _, _) = decode(&encode(sample().iter(), &[], &[])).unwrap();
         let keys: Vec<Vec<u8>> = entries
             .iter()
             .map(|(k, _)| {
@@ -377,15 +487,16 @@ mod tests {
     #[test]
     fn empty_cache_round_trips() {
         let m = HashMap::new();
-        let bytes = encode(m.iter(), &[]);
-        let (sims, deltas) = decode(&bytes).unwrap();
+        let bytes = encode(m.iter(), &[], &[]);
+        let (sims, deltas, summaries) = decode(&bytes).unwrap();
         assert_eq!(sims.len(), 0);
         assert_eq!(deltas.len(), 0);
+        assert_eq!(summaries.len(), 0);
     }
 
     #[test]
     fn rejects_corruption() {
-        let bytes = encode(sample().iter(), &sample_deltas());
+        let bytes = encode(sample().iter(), &sample_deltas(), &sample_summaries());
         // truncation
         assert!(decode(&bytes[..bytes.len() - 1]).is_err());
         assert!(decode(&bytes[..HEADER_BYTES]).is_err());
@@ -432,10 +543,11 @@ mod tests {
     fn rejects_v1_files_without_delta_section() {
         // A v1 file is byte-identical up to the delta count; decoding
         // must reject on the version tag, not misparse the tail.
-        let mut v1 = encode(sample().iter(), &[]);
+        let mut v1 = encode(sample().iter(), &[], &[]);
         v1[8..12].copy_from_slice(&1u32.to_le_bytes());
-        // Drop the (empty) delta count to mimic the true v1 layout.
-        let cut = v1.len() - FOOTER_BYTES - 8;
+        // Drop the (empty) delta and summary counts to mimic the true
+        // v1 layout.
+        let cut = v1.len() - FOOTER_BYTES - 16;
         v1.truncate(cut);
         let v1 = refooter({
             let mut b = v1;
@@ -448,7 +560,7 @@ mod tests {
 
     #[test]
     fn rejects_delta_section_corruption() {
-        let bytes = encode(sample().iter(), &sample_deltas());
+        let bytes = encode(sample().iter(), &sample_deltas(), &[]);
         let delta_count_at = HEADER_BYTES + 5 * ENTRY_BYTES;
         // Inflated delta count (footer recomputed): must reject
         // cleanly, not overrun or allocate absurdly.
@@ -483,6 +595,79 @@ mod tests {
         assert!(decode(&refooter(bytes)).is_ok());
     }
 
+    #[test]
+    fn rejects_summary_section_corruption() {
+        let s = sample_summaries();
+        let bytes = encode(sample().iter(), &sample_deltas(), &s);
+        // key + trusted + word count + words, all u64.
+        let summary_bytes: usize =
+            s.iter().map(|(_, c)| (3 + c.summary.to_words().len()) * 8).sum();
+        let count_at = bytes.len() - FOOTER_BYTES - summary_bytes - 8;
+        // Inflated summary count (footer recomputed): must reject
+        // cleanly, not overrun or allocate absurdly.
+        let mut bad = bytes.clone();
+        bad[count_at..count_at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode(&refooter(bad)).is_err());
+        let mut bad = bytes.clone();
+        bad[count_at..count_at + 8].copy_from_slice(&9u64.to_le_bytes());
+        assert!(decode(&refooter(bad)).is_err());
+        // Non-boolean trust tag on the first record.
+        let mut bad = bytes.clone();
+        bad[count_at + 16..count_at + 24].copy_from_slice(&7u64.to_le_bytes());
+        let e = decode(&refooter(bad)).unwrap_err().to_string();
+        assert!(e.contains("trust tag"), "{e}");
+        // Zeroed word count: the record's words then misparse as keys,
+        // and `ProgramSummary::from_words(&[])` rejects.
+        let mut bad = bytes.clone();
+        bad[count_at + 24..count_at + 32].copy_from_slice(&0u64.to_le_bytes());
+        assert!(decode(&refooter(bad)).is_err());
+        // Truncated mid summary section (footer recomputed).
+        let mut bad = bytes.clone();
+        bad.truncate(bytes.len() - FOOTER_BYTES - 4);
+        bad.extend_from_slice(&[0u8; FOOTER_BYTES]);
+        assert!(decode(&refooter(bad)).is_err());
+        // Non-ascending keys: copy the first record's key over the
+        // second's.
+        let first_record_bytes = (3 + s[0].1.summary.to_words().len()) * 8;
+        let k2_at = count_at + 8 + first_record_bytes;
+        let mut bad = bytes.clone();
+        let k1: Vec<u8> = bad[count_at + 8..count_at + 16].to_vec();
+        bad[k2_at..k2_at + 8].copy_from_slice(&k1);
+        let e = decode(&refooter(bad)).unwrap_err().to_string();
+        assert!(e.contains("ascending"), "{e}");
+        // Tampered summary payload whose segment sum no longer matches
+        // its instruction total: `from_words` rejects the record.
+        let mut bad = bytes.clone();
+        let last_word_at = bytes.len() - FOOTER_BYTES - 8;
+        bad[last_word_at..last_word_at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        let e = decode(&refooter(bad)).unwrap_err().to_string();
+        assert!(e.contains("malformed summary"), "{e}");
+        // Sanity: the pristine file still decodes after refootering.
+        assert!(decode(&refooter(bytes)).is_ok());
+    }
+
+    #[test]
+    fn v2_files_decode_with_zero_summaries() {
+        // A v2 file is a v3 file minus the summary section, tagged 2.
+        let v3 = encode(sample().iter(), &sample_deltas(), &[]);
+        let mut v2 = v3.clone();
+        v2[8..12].copy_from_slice(&2u32.to_le_bytes());
+        // Drop the (empty) 8-byte summary count.
+        let cut = v2.len() - FOOTER_BYTES - 8;
+        v2.drain(cut..cut + 8);
+        let v2 = refooter(v2);
+        let (sims, deltas, summaries) = decode(&v2).unwrap();
+        assert_eq!(sims.len(), 5);
+        assert_eq!(deltas.len(), 3);
+        assert!(summaries.is_empty(), "v2 files carry no summaries");
+        // A version-2 tag with a summary section left in place is
+        // trailing garbage, not a silent reinterpretation.
+        let mut bad = v3;
+        bad[8..12].copy_from_slice(&2u32.to_le_bytes());
+        let e = decode(&refooter(bad)).unwrap_err().to_string();
+        assert!(e.contains("trailing bytes"), "{e}");
+    }
+
     /// `docs/PERSIST.md` is the normative description of this file;
     /// hold its byte-level claims to the constants actually compiled
     /// in, so a format change cannot land without the doc.
@@ -496,6 +681,8 @@ mod tests {
             format!("{ENTRY_BYTES} bytes = {KEY_BYTES}-byte key + {STATS_BYTES}-byte stats"),
             format!("{STATS_BYTES} bytes = 19 × u64"),
             format!("{DELTA_RECORD_MIN_BYTES} bytes minimum"),
+            format!("{SUMMARY_RECORD_MIN_BYTES} bytes minimum"),
+            format!("version {COMPAT_VERSION} files still decode"),
             format!("header + footer ({} bytes)", HEADER_BYTES + FOOTER_BYTES),
         ];
         for claim in &claims {
@@ -514,7 +701,7 @@ mod tests {
         // The rejection rules the decoder enforces.
         for rule in [
             "too short", "checksum mismatch", "bad magic", "unsupported version",
-            "strictly ascending", "trailing bytes",
+            "strictly ascending", "trailing bytes", "trust tag",
         ] {
             assert!(doc.contains(rule), "PERSIST.md drifted: missing rejection rule `{rule}`");
         }

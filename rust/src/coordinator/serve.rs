@@ -60,6 +60,11 @@
 //! `fast_forward` (loop-aware steady-state fast-forward on/off —
 //! bit-identical results either way), `delta_cache` (engine-wide
 //! converged-delta replay on/off — bit-identical results either way),
+//! `summary_cache` (engine-wide whole-program summary replay on/off —
+//! bit-identical results either way), `deadline_ms` (per-request
+//! deadline in milliseconds: work items still waiting for a scheduler
+//! slot when it expires are dropped and the request is answered with
+//! a structured `"code":"deadline"` error instead of running late),
 //! `priority` (scheduler priority 0–255, higher first; scheduling
 //! only), the config overrides `lanes`, `vlen`, `tile_r`, `tile_c`,
 //! `dram_bw`, `freq`, and the cache-exchange fields `cfg_fp` (memo
@@ -80,16 +85,24 @@
 //! `cache_entries`) and its shard/wall-clock/fast-forward/concurrency
 //! telemetry (`sharded_jobs`, `shards`, `slowest_job_ms`,
 //! `ff_instrs`, `delta_hits`/`replays` — converged-delta replay
-//! volume — `prog_hits`/`prog_misses` — program cache counters —
-//! `coalesced` — cells served by another request's in-flight
-//! simulation — and `queue_ms`, time spent waiting for a scheduler
-//! slot) — a warm repeat of an identical request reports `"sims":0`. `"ping"` answers `"pong"`; `"shutdown"` answers
+//! volume — `summary_hits`/`summary_replays`/`shadow_validations` —
+//! whole-program summary replay volume (`summary_replays` counts
+//! programs reconstructed with zero stepped instructions;
+//! `shadow_validations` counts full stepped runs spent earning trust)
+//! — `delta_evictions` — LRU evictions from the engine's delta cache
+//! during the run — `prog_hits`/`prog_misses` — program cache
+//! counters — `coalesced` — cells served by another request's
+//! in-flight simulation — and `queue_ms`, time spent waiting for a
+//! scheduler slot) — a warm repeat of an identical request reports
+//! `"sims":0`. `"ping"` answers `"pong"`; `"shutdown"` answers
 //! `"bye"`, flushes the cache file and stops the server (EOF on stdin
 //! does the same); `"cache_export"` answers a `"cache"` record
 //! carrying a hex persist blob and its content fingerprint;
 //! `"cache_import"` answers `"imported"` (or a `"bad_blob"`-coded
 //! error, cache untouched). Requests refused by admission control are
-//! answered with an `error` record carrying `"code":"overload"`.
+//! answered with an `error` record carrying `"code":"overload"`;
+//! requests whose `deadline_ms` expired before their work could be
+//! scheduled get `"code":"deadline"`.
 //!
 //! `speed request` is the matching client: it builds a request from
 //! CLI flags (`--emit` prints the line for piping into a stdin-mode
@@ -440,8 +453,10 @@ pub enum Op {
     Shutdown,
     /// Export the engine's cache as a persist blob (`cache` reply).
     /// With `cfg_fp` set, only memo entries for that config
-    /// fingerprint are included (delta records always travel whole —
-    /// they are verified before trust, so over-sharing is safe).
+    /// fingerprint are included (delta and summary records always
+    /// travel whole — deltas are verified before trust and summaries
+    /// only replay under control-state guards, so over-sharing is
+    /// safe).
     CacheExport,
     /// Merge a persist blob (request field `blob`, hex) into the
     /// engine's cache (`imported` reply). A corrupt blob is rejected
@@ -539,6 +554,17 @@ pub struct Request {
     /// every steady-state region from scratch
     /// (verification/benchmark escape hatch).
     pub delta_cache: bool,
+    /// Engine-wide whole-program summary cache on (default) or off for
+    /// this request. Bit-identical results either way; off re-steps
+    /// repeat shapes the summary cache would have replayed with pure
+    /// arithmetic (verification/benchmark escape hatch).
+    pub summary_cache: bool,
+    /// Per-request deadline in milliseconds, measured from when the
+    /// engine starts the run (`None` = no deadline). Work items still
+    /// waiting for a scheduler slot when it expires are dropped and
+    /// the request is answered with a `"code":"deadline"` error
+    /// instead of running arbitrarily late under load.
+    pub deadline_ms: Option<u64>,
     /// Scheduler priority (0–255, higher first; default 0). Higher
     /// priorities claim engine worker slots ahead of lower ones at
     /// every work-item boundary, so a small interactive request
@@ -573,6 +599,8 @@ impl Default for Request {
             shard_threshold: None,
             fast_forward: true,
             delta_cache: true,
+            summary_cache: true,
+            deadline_ms: None,
             priority: 0,
             overrides: CfgOverrides::default(),
             cfg_fp: None,
@@ -677,6 +705,8 @@ impl Request {
                 }
                 "fast_forward" => req.fast_forward = val.as_bool("fast_forward")?,
                 "delta_cache" => req.delta_cache = val.as_bool("delta_cache")?,
+                "summary_cache" => req.summary_cache = val.as_bool("summary_cache")?,
+                "deadline_ms" => req.deadline_ms = Some(val.as_u64("deadline_ms")?),
                 "priority" => {
                     let p = val.as_u64("priority")?;
                     if p > u64::from(u8::MAX) {
@@ -752,6 +782,12 @@ impl Request {
         }
         if !self.delta_cache {
             parts.push("\"delta_cache\":false".to_string());
+        }
+        if !self.summary_cache {
+            parts.push("\"summary_cache\":false".to_string());
+        }
+        if let Some(ms) = self.deadline_ms {
+            parts.push(format!("\"deadline_ms\":{ms}"));
         }
         if self.priority != 0 {
             parts.push(format!("\"priority\":{}", self.priority));
@@ -845,6 +881,8 @@ impl Request {
         spec = spec
             .fast_forward(self.fast_forward)
             .delta_cache(self.delta_cache)
+            .summary_cache(self.summary_cache)
+            .deadline_ms(self.deadline_ms)
             .priority(self.priority);
         Ok(spec)
     }
@@ -884,7 +922,14 @@ pub fn block_line(id: u64, backend: &str, network: &str, r: &LayerResult) -> Str
 /// `"fast_forward":false` or was served from cache); `delta_hits` /
 /// `replays` count regions that verified-and-replayed a cached
 /// converged delta (`replays` is the subset that skipped the entire
-/// measure phase; both 0 with `"delta_cache":false`); `prog_hits` /
+/// measure phase; both 0 with `"delta_cache":false`);
+/// `summary_hits` / `summary_replays` / `shadow_validations` are the
+/// whole-program summary cache counters (`summary_replays` counts
+/// programs reconstructed with pure arithmetic — zero stepped
+/// instructions; `shadow_validations` counts full stepped runs spent
+/// earning a recording's trust; all 0 with `"summary_cache":false`);
+/// `delta_evictions` counts LRU evictions from the engine's
+/// converged-delta cache during this run; `prog_hits` /
 /// `prog_misses` are the per-worker pre-decoded program cache
 /// counters; `coalesced` counts cells served by another request's
 /// in-flight simulation of the identical cell (multi-tenant
@@ -893,7 +938,7 @@ pub fn block_line(id: u64, backend: &str, network: &str, r: &LayerResult) -> Str
 /// (contention, not simulation).
 pub fn summary_line(id: u64, out: &SweepOutcome, cache_entries: usize) -> String {
     format!(
-        "{{\"type\":\"summary\",\"id\":{id},\"jobs\":{},\"sims\":{},\"cache_hits\":{},\"dedup_hits\":{},\"evictions\":{},\"cache_entries\":{cache_entries},\"threads\":{},\"elapsed_ms\":{},\"sharded_jobs\":{},\"shards\":{},\"slowest_job_ms\":{},\"ff_instrs\":{},\"delta_hits\":{},\"replays\":{},\"prog_hits\":{},\"prog_misses\":{},\"coalesced\":{},\"queue_ms\":{}}}",
+        "{{\"type\":\"summary\",\"id\":{id},\"jobs\":{},\"sims\":{},\"cache_hits\":{},\"dedup_hits\":{},\"evictions\":{},\"cache_entries\":{cache_entries},\"threads\":{},\"elapsed_ms\":{},\"sharded_jobs\":{},\"shards\":{},\"slowest_job_ms\":{},\"ff_instrs\":{},\"delta_hits\":{},\"replays\":{},\"summary_hits\":{},\"summary_replays\":{},\"shadow_validations\":{},\"delta_evictions\":{},\"prog_hits\":{},\"prog_misses\":{},\"coalesced\":{},\"queue_ms\":{}}}",
         out.results.len(),
         out.executed_sims,
         out.cache_hits,
@@ -907,6 +952,10 @@ pub fn summary_line(id: u64, out: &SweepOutcome, cache_entries: usize) -> String
         out.fast_forwarded_instrs,
         out.delta_cache_hits,
         out.replayed_regions,
+        out.summary_hits,
+        out.summary_replays,
+        out.shadow_validations,
+        out.delta_evictions,
         out.program_cache_hits,
         out.program_cache_misses,
         out.coalesced_hits,
@@ -923,8 +972,10 @@ pub fn error_line(id: u64, msg: &str) -> String {
 /// clients can branch on without parsing the message. The codes (see
 /// [`ERROR_CODES`]): `"overload"` — admission control refused the
 /// request (connection cap or concurrent-sweep cap), retry later —
-/// and `"bad_blob"` — a `cache_import` blob failed persist-format
-/// validation and was rejected without touching the cache.
+/// `"bad_blob"` — a `cache_import` blob failed persist-format
+/// validation and was rejected without touching the cache — and
+/// `"deadline"` — the request's `deadline_ms` expired before its work
+/// could be scheduled, so it was dropped instead of running late.
 pub fn error_line_with_code(id: u64, code: &str, msg: &str) -> String {
     format!(
         "{{\"type\":\"error\",\"id\":{id},\"code\":{},\"message\":{}}}",
@@ -942,16 +993,22 @@ fn bye_line(id: u64, cache_entries: usize) -> String {
 }
 
 /// The `cache` reply to a `cache_export` request: `entries` memo
-/// entries and `deltas` delta records, serialized in the `SPEEDSWC`
-/// persist format (see `docs/PERSIST.md`) and lower-hex encoded in
-/// `blob`. `fp` is the blob's content fingerprint
-/// ([`blob_fingerprint`]) — encoding is deterministic, so two nodes
-/// holding the same cache state export byte-identical blobs with the
-/// same `fp`, and a coordinator can skip pushing a blob a node
-/// already has.
-pub fn cache_line(id: u64, entries: usize, deltas: usize, blob: &[u8]) -> String {
+/// entries, `deltas` delta records and `summaries` program-summary
+/// records, serialized in the `SPEEDSWC` persist format (see
+/// `docs/PERSIST.md`) and lower-hex encoded in `blob`. `fp` is the
+/// blob's content fingerprint ([`blob_fingerprint`]) — encoding is
+/// deterministic, so two nodes holding the same cache state export
+/// byte-identical blobs with the same `fp`, and a coordinator can
+/// skip pushing a blob a node already has.
+pub fn cache_line(
+    id: u64,
+    entries: usize,
+    deltas: usize,
+    summaries: usize,
+    blob: &[u8],
+) -> String {
     format!(
-        "{{\"type\":\"cache\",\"id\":{id},\"entries\":{entries},\"deltas\":{deltas},\"bytes\":{},\"fp\":{},\"blob\":{}}}",
+        "{{\"type\":\"cache\",\"id\":{id},\"entries\":{entries},\"deltas\":{deltas},\"summaries\":{summaries},\"bytes\":{},\"fp\":{},\"blob\":{}}}",
         blob.len(),
         blob_fingerprint(blob),
         quote(&hex_encode(blob)),
@@ -959,8 +1016,9 @@ pub fn cache_line(id: u64, entries: usize, deltas: usize, blob: &[u8]) -> String
 }
 
 /// The `imported` reply to a successful `cache_import`: `entries` is
-/// how many records (memo + delta) the merge accepted,
-/// `cache_entries` the memo table size after the merge.
+/// how many memo entries the file carried (delta and summary records
+/// merge alongside), `cache_entries` the memo table size after the
+/// merge.
 pub fn imported_line(id: u64, entries: usize, cache_entries: usize) -> String {
     format!(
         "{{\"type\":\"imported\",\"id\":{id},\"entries\":{entries},\"cache_entries\":{cache_entries}}}"
@@ -1028,6 +1086,8 @@ pub const REQUEST_FIELDS: &[&str] = &[
     "shard_threshold",
     "fast_forward",
     "delta_cache",
+    "summary_cache",
+    "deadline_ms",
     "priority",
     "lanes",
     "vlen",
@@ -1057,7 +1117,7 @@ pub const REPLY_TYPES: &[&str] = &[
 ];
 
 /// Every machine-readable error `code`.
-pub const ERROR_CODES: &[&str] = &["overload", "bad_blob"];
+pub const ERROR_CODES: &[&str] = &["overload", "bad_blob", "deadline"];
 
 fn write_line<W: Write>(w: &mut W, line: &str) -> std::io::Result<()> {
     writeln!(w, "{line}")?;
@@ -1248,9 +1308,13 @@ pub fn serve_lines<R: BufRead, W: Write>(
                 break;
             }
             Op::CacheExport => {
-                let (blob, entries, deltas) = shared.engine.export_cache(req.cfg_fp);
-                if write_line(&mut writer, &cache_line(req.id, entries, deltas, &blob))
-                    .is_err()
+                let (blob, entries, deltas, summaries) =
+                    shared.engine.export_cache(req.cfg_fp);
+                if write_line(
+                    &mut writer,
+                    &cache_line(req.id, entries, deltas, summaries, &blob),
+                )
+                .is_err()
                 {
                     break;
                 }
@@ -1350,9 +1414,18 @@ pub fn serve_lines<R: BufRead, W: Write>(
                     }
                     Err(e) => {
                         stats.errors += 1;
-                        if write_line(&mut writer, &error_line(req.id, &e.to_string()))
-                            .is_err()
-                        {
+                        // An expired deadline is machine-readable so a
+                        // client can branch (resubmit, lower scope)
+                        // without parsing the message.
+                        let line = match &e {
+                            Error::Deadline(_) => error_line_with_code(
+                                req.id,
+                                "deadline",
+                                &e.to_string(),
+                            ),
+                            _ => error_line(req.id, &e.to_string()),
+                        };
+                        if write_line(&mut writer, &line).is_err() {
                             break;
                         }
                     }
@@ -1394,6 +1467,10 @@ pub struct ServerOptions {
     /// per-request; `Some(false)` = the server-wide
     /// `--no-delta-cache` escape hatch). Bit-identical either way.
     pub delta_cache: Option<bool>,
+    /// Whole-program summary cache override for every request (`None`
+    /// = per-request; `Some(false)` = the server-wide
+    /// `--no-summary-cache` escape hatch). Bit-identical either way.
+    pub summary_cache: Option<bool>,
     /// Per-worker pre-decoded program cache entry capacity override
     /// (`None` = built-in default). Scheduling-only.
     pub program_cache_cap: Option<usize>,
@@ -1439,6 +1516,9 @@ pub fn run_server(opts: ServerOptions) -> Result<()> {
     }
     if let Some(dc) = opts.delta_cache {
         engine.set_delta_cache_override(Some(dc));
+    }
+    if let Some(sc) = opts.summary_cache {
+        engine.set_summary_cache_override(Some(sc));
     }
     if opts.program_cache_cap.is_some() || opts.program_cache_bytes.is_some() {
         engine.set_program_cache_limits(opts.program_cache_cap, opts.program_cache_bytes);
@@ -1977,6 +2057,46 @@ mod tests {
     }
 
     #[test]
+    fn summary_cache_field_reaches_the_spec() {
+        let base = SpeedConfig::default();
+        let req = Request {
+            id: 1,
+            network: "SqueezeNet".into(),
+            layers: Some(vec![1]),
+            ..Default::default()
+        };
+        // Default: on, and omitted from the wire format.
+        assert!(req.to_spec(&base).unwrap().summary_cache);
+        assert!(!req.to_line().contains("summary_cache"));
+        // Off: carried on the wire, lands in the spec, round-trips.
+        let off = Request { summary_cache: false, ..req };
+        assert!(!off.to_spec(&base).unwrap().summary_cache);
+        let line = off.to_line();
+        assert!(line.contains("\"summary_cache\":false"));
+        assert_eq!(Request::parse(&line).unwrap(), off);
+    }
+
+    #[test]
+    fn deadline_field_reaches_the_spec() {
+        let base = SpeedConfig::default();
+        let req = Request {
+            id: 1,
+            network: "SqueezeNet".into(),
+            layers: Some(vec![1]),
+            ..Default::default()
+        };
+        // Default: no deadline, and omitted from the wire format.
+        assert_eq!(req.to_spec(&base).unwrap().deadline_ms, None);
+        assert!(!req.to_line().contains("deadline_ms"));
+        // Set: carried on the wire, lands in the spec, round-trips.
+        let tight = Request { deadline_ms: Some(1500), ..req };
+        assert_eq!(tight.to_spec(&base).unwrap().deadline_ms, Some(1500));
+        let line = tight.to_line();
+        assert!(line.contains("\"deadline_ms\":1500"));
+        assert_eq!(Request::parse(&line).unwrap(), tight);
+    }
+
+    #[test]
     fn overrides_reach_the_spec_config() {
         let base = SpeedConfig::default();
         let req = Request {
@@ -2009,7 +2129,9 @@ mod tests {
                 "backends" => "[\"speed\"]".to_string(),
                 "precisions" => "[8]".to_string(),
                 "strategies" => "[\"ff\"]".to_string(),
-                "memoize" | "shard" | "fast_forward" | "delta_cache" => "true".to_string(),
+                "memoize" | "shard" | "fast_forward" | "delta_cache" | "summary_cache" => {
+                    "true".to_string()
+                }
                 "blob" => "\"00\"".to_string(),
                 _ => "1".to_string(),
             };
@@ -2074,11 +2196,12 @@ mod tests {
     #[test]
     fn cache_reply_records_parse_back() {
         let blob = [0xde, 0xad, 0xbe, 0xef];
-        let fields = parse_record(&cache_line(5, 3, 2, &blob)).unwrap();
+        let fields = parse_record(&cache_line(5, 3, 2, 1, &blob)).unwrap();
         assert_eq!(field(&fields, "type"), Some(&Value::Str("cache".into())));
         assert_eq!(field(&fields, "id"), Some(&Value::Int(5)));
         assert_eq!(field(&fields, "entries"), Some(&Value::Int(3)));
         assert_eq!(field(&fields, "deltas"), Some(&Value::Int(2)));
+        assert_eq!(field(&fields, "summaries"), Some(&Value::Int(1)));
         assert_eq!(field(&fields, "bytes"), Some(&Value::Int(4)));
         assert_eq!(
             field(&fields, "fp"),
@@ -2166,8 +2289,8 @@ mod tests {
         }
         assert_eq!(shared.engine.cached_sims(), 0, "rejections must not poison the cache");
         // A well-formed empty blob is fine (vacuous merge).
-        let (empty, n, d) = shared.engine.export_cache(None);
-        assert_eq!((n, d), (0, 0));
+        let (empty, n, d, s) = shared.engine.export_cache(None);
+        assert_eq!((n, d, s), (0, 0, 0));
         let line = format!(
             "{{\"id\":2,\"op\":\"cache_import\",\"blob\":\"{}\"}}\n",
             hex_encode(&empty)

@@ -100,6 +100,23 @@
 //!   [`SweepOutcome::replayed_regions`] report the replay volume, and
 //!   the persisted cache file carries the delta section so
 //!   `--cache-file` warms replay across restarts;
+//! - an engine-wide **program-summary cache** ([`SweepSpec::summary_cache`],
+//!   engine override [`SweepEngine::set_summary_cache_override`], CLI
+//!   `--no-summary-cache`) caps the ladder: the first full timing run
+//!   of a program records its complete machine-state transfer function
+//!   as segment deltas, a second run *shadow-validates* the recording
+//!   (steps fully, compares bit-exactly, publishes on agreement), and
+//!   every later run of the same (program structure, config,
+//!   precision, strategy) key replays the whole program as pure
+//!   arithmetic — no decode, no stepping, no per-region verification
+//!   ([`SweepOutcome::summary_hits`] / [`SweepOutcome::summary_replays`]
+//!   / [`SweepOutcome::shadow_validations`] report the protocol;
+//!   summaries ride the persisted cache file too);
+//! - a per-request **deadline** ([`SweepSpec::deadline_ms`], serve/CLI
+//!   `--deadline-ms`): work items whose deadline passed are dropped at
+//!   worker-gate acquisition and the run fails with a structured
+//!   deadline error — a resident server sheds work its client already
+//!   gave up on;
 //! - a [`ReportSink`] receives every per-layer [`LayerResult`] in
 //!   deterministic job order once the run completes
 //!   ([`SweepEngine::run_with_sink`]).
@@ -120,7 +137,7 @@ use std::time::{Duration, Instant};
 
 use super::backend::{
     config_fingerprint, layer_shape as shape_of, DeltaCache, GoldenFunctional, SimBackend,
-    SlotOptions, SlotPool, SpeedCycle, WorkerSlot,
+    SlotOptions, SlotPool, SpeedCycle, SummaryCache, WorkerSlot,
 };
 use super::persist;
 use super::runner::{LayerResult, NetworkResult};
@@ -221,6 +238,22 @@ pub struct SweepSpec {
     /// overtake full-grid sweeps. Scheduling-only: results are
     /// bit-identical at any priority.
     pub priority: u8,
+    /// Share whole-program summaries through the engine-wide summary
+    /// cache (default on): a program whose shadow-validated summary is
+    /// cached replays as pure arithmetic — no decode, no stepping, no
+    /// per-region verification iteration. Results are bit-identical
+    /// either way (record → shadow-validate → replay protocol; any
+    /// divergence falls back to stepping). The off switch
+    /// (`--no-summary-cache`) exists for benchmarking and
+    /// belt-and-braces verification.
+    pub summary_cache: bool,
+    /// Per-request deadline in milliseconds from the moment
+    /// [`SweepEngine::run`] starts (`None` = no deadline). Work items
+    /// whose deadline has passed are dropped at worker-gate
+    /// acquisition and the run fails with
+    /// [`Error::Deadline`](crate::error::Error::Deadline) — how a
+    /// resident server sheds work a client has already given up on.
+    pub deadline_ms: Option<u64>,
 }
 
 impl SweepSpec {
@@ -242,6 +275,8 @@ impl SweepSpec {
             program_cache_cap: None,
             program_cache_bytes: None,
             priority: 0,
+            summary_cache: true,
+            deadline_ms: None,
         }
     }
 
@@ -344,6 +379,20 @@ impl SweepSpec {
     /// when runs contend on one engine. Results never change.
     pub fn priority(mut self, p: u8) -> Self {
         self.priority = p;
+        self
+    }
+
+    /// Enable/disable the engine-wide whole-program summary cache
+    /// (builder style); bit-identical results either way.
+    pub fn summary_cache(mut self, on: bool) -> Self {
+        self.summary_cache = on;
+        self
+    }
+
+    /// Set the per-request deadline in milliseconds (builder style);
+    /// `None` = no deadline.
+    pub fn deadline_ms(mut self, ms: Option<u64>) -> Self {
+        self.deadline_ms = ms;
         self
     }
 
@@ -529,6 +578,20 @@ pub struct SweepOutcome {
     /// Pre-decoded program cache misses across this run's workers
     /// (cells that paid codegen + word-by-word decode).
     pub program_cache_misses: u64,
+    /// Runs whose whole-program summary lookup found a cached entry,
+    /// trusted or not (0 with `--no-summary-cache` or on a fully cold
+    /// summary cache).
+    pub summary_hits: u64,
+    /// Runs reconstructed purely arithmetically from a trusted
+    /// whole-program summary — zero decode, zero stepped instructions.
+    pub summary_replays: u64,
+    /// Shadow-validation passes this run performed: full stepped
+    /// re-runs compared bit-exactly against a recorded summary before
+    /// publishing (trusting) it.
+    pub shadow_validations: u64,
+    /// Converged-delta cache entries evicted by its LRU bound during
+    /// this run (0 until the delta cache overflows its cap).
+    pub delta_evictions: u64,
     /// Start offset of each (backend, cfg, net, prec, strat) block in
     /// `results`.
     block_starts: Vec<usize>,
@@ -847,6 +910,9 @@ struct WorkerTelemetry {
     replayed_regions: u64,
     program_cache_hits: u64,
     program_cache_misses: u64,
+    summary_hits: u64,
+    summary_replays: u64,
+    shadow_validations: u64,
 }
 
 impl WorkerTelemetry {
@@ -858,6 +924,9 @@ impl WorkerTelemetry {
         self.replayed_regions += other.replayed_regions;
         self.program_cache_hits += other.program_cache_hits;
         self.program_cache_misses += other.program_cache_misses;
+        self.summary_hits += other.summary_hits;
+        self.summary_replays += other.summary_replays;
+        self.shadow_validations += other.shadow_validations;
     }
 
     /// Drain a slot's run-scoped counters into this accumulator,
@@ -869,6 +938,12 @@ impl WorkerTelemetry {
         ws.delta_cache_hits = 0;
         self.replayed_regions += ws.replayed_regions;
         ws.replayed_regions = 0;
+        self.summary_hits += ws.summary_hits;
+        ws.summary_hits = 0;
+        self.summary_replays += ws.summary_replays;
+        ws.summary_replays = 0;
+        self.shadow_validations += ws.shadow_validations;
+        ws.shadow_validations = 0;
         let (hits, misses) = ws.programs.stats();
         self.program_cache_hits += hits;
         self.program_cache_misses += misses;
@@ -1034,11 +1109,15 @@ pub struct SweepEngine {
     /// Engine-wide converged-delta cache, shared by every worker slot
     /// of every concurrent run (internally synchronized).
     delta_cache: Arc<DeltaCache>,
+    /// Engine-wide whole-program summary cache, shared the same way
+    /// (internally synchronized; record → shadow-validate → replay).
+    summary_cache: Arc<SummaryCache>,
     threads_override: Option<usize>,
     memoize_override: Option<bool>,
     shard_threshold_override: Option<u64>,
     fast_forward_override: Option<bool>,
     delta_cache_override: Option<bool>,
+    summary_cache_override: Option<bool>,
     program_cache_cap_override: Option<usize>,
     program_cache_bytes_override: Option<usize>,
     worker_budget: Option<usize>,
@@ -1128,6 +1207,13 @@ impl SweepEngine {
         self.delta_cache_override = on;
     }
 
+    /// Override the whole-program summary cache for every spec this
+    /// engine runs (`None` = respect each spec). Bit-identical results
+    /// either way — the CLI's `--no-summary-cache` escape hatch.
+    pub fn set_summary_cache_override(&mut self, on: Option<bool>) {
+        self.summary_cache_override = on;
+    }
+
     /// Override the per-worker program-cache limits for every spec this
     /// engine runs (`None` = respect each spec, which itself defaults
     /// to the built-in constants). Scheduling-only — results never
@@ -1141,6 +1227,19 @@ impl SweepEngine {
     /// cache.
     pub fn cached_deltas(&self) -> usize {
         self.delta_cache.len()
+    }
+
+    /// Number of whole-program summaries held in the engine-wide
+    /// summary cache (trusted or not).
+    pub fn cached_summaries(&self) -> usize {
+        self.summary_cache.len()
+    }
+
+    /// The engine-wide whole-program summary cache itself — tests and
+    /// telemetry probes inspect trust states and inject poisoned
+    /// recordings through it.
+    pub fn summary_cache(&self) -> &Arc<SummaryCache> {
+        &self.summary_cache
     }
 
     /// Bound the number of simulation permits the engine-wide priority
@@ -1160,9 +1259,10 @@ impl SweepEngine {
             .max(1)
     }
 
-    /// Serialize the memo table *and* the converged-delta cache to the
-    /// versioned binary cache format (deterministic: entries are
-    /// sorted, the footer is a checksum).
+    /// Serialize the memo table, the converged-delta cache *and* the
+    /// whole-program summary cache to the versioned binary cache
+    /// format (deterministic: entries are sorted, the footer is a
+    /// checksum).
     pub fn serialize_cache(&self) -> Vec<u8> {
         self.export_cache(None).0
     }
@@ -1170,28 +1270,37 @@ impl SweepEngine {
     /// Serialize the cache as an exchangeable persist blob, optionally
     /// restricted to the memo entries of one config fingerprint
     /// (`cfg_fp` — see [`super::backend::config_fingerprint`]). Delta
-    /// records always travel whole: they are advisory (verified before
-    /// trust, keyed by their own config-aware fingerprint), so
-    /// over-sharing costs bytes, never correctness. Returns
-    /// `(blob, memo_entries, delta_records)`. Encoding is
-    /// deterministic, so equal cache states yield byte-identical blobs
-    /// — the content-addressing the fleet's cache exchange relies on.
-    pub fn export_cache(&self, cfg_fp: Option<u64>) -> (Vec<u8>, usize, usize) {
+    /// and summary records always travel whole: they are advisory
+    /// (verified / shadow-validated before trust, keyed by their own
+    /// config-aware fingerprints), so over-sharing costs bytes, never
+    /// correctness. Returns
+    /// `(blob, memo_entries, delta_records, summary_records)`.
+    /// Encoding is deterministic, so equal cache states yield
+    /// byte-identical blobs — the content-addressing the fleet's cache
+    /// exchange relies on.
+    pub fn export_cache(&self, cfg_fp: Option<u64>) -> (Vec<u8>, usize, usize, usize) {
         let deltas = self.delta_cache.entries();
+        let summaries = self.summary_cache.entries();
         let cache = self.lock_cache();
         match cfg_fp {
             None => {
                 let n = cache.len();
-                (persist::encode(cache.iter(), &deltas), n, deltas.len())
+                (
+                    persist::encode(cache.iter(), &deltas, &summaries),
+                    n,
+                    deltas.len(),
+                    summaries.len(),
+                )
             }
             Some(fp) => {
                 let picked: Vec<(&SimKey, &CachedSim)> =
                     cache.iter().filter(|(k, _)| k.cfg_fp == fp).collect();
                 let n = picked.len();
                 (
-                    persist::encode(picked.into_iter(), &deltas),
+                    persist::encode(picked.into_iter(), &deltas, &summaries),
                     n,
                     deltas.len(),
+                    summaries.len(),
                 )
             }
         }
@@ -1207,17 +1316,21 @@ impl SweepEngine {
     /// LRU policy, so [`SweepEngine::cached_sims`] may end up smaller
     /// than the returned count.
     pub fn load_cache_bytes(&self, bytes: &[u8]) -> Result<usize> {
-        let (loaded, deltas) = persist::decode(bytes)?;
+        let (loaded, deltas, summaries) = persist::decode(bytes)?;
         let n = loaded.len();
         let mut cache = self.lock_cache();
         for (key, sim) in loaded {
             cache.insert(key, sim);
         }
         drop(cache);
-        // Deltas merge outside the memo lock: the delta cache is
-        // internally synchronized and advisory (a stale or missing
-        // delta only costs re-convergence, never correctness).
+        // Deltas and summaries merge outside the memo lock: both
+        // caches are internally synchronized and advisory (a stale or
+        // missing entry only costs re-convergence / re-recording,
+        // never correctness; summaries keep their persisted trust
+        // state — a trusted record was shadow-validated before it was
+        // written out).
         self.delta_cache.merge(deltas);
+        self.summary_cache.merge(summaries);
         // A merged file may have published cells other runs have
         // pending claims on — irrelevant to them (owners re-publish
         // idempotently), but wake waiters in case a merge satisfied
@@ -1249,6 +1362,10 @@ impl SweepEngine {
         let t0 = Instant::now();
         let memoize = self.memoize_override.unwrap_or(spec.memoize);
         let priority = spec.priority;
+        // Per-request deadline: an absolute instant computed once at
+        // run start, checked at every worker-gate acquisition.
+        let deadline = spec.deadline_ms.map(|ms| t0 + Duration::from_millis(ms));
+        let delta_evictions_before = self.delta_cache.evictions();
         let cfg_fps: Vec<u64> = spec.configs.iter().map(config_fingerprint).collect();
         let backend_fps: Vec<u64> = spec.backends.iter().map(|b| b.fingerprint()).collect();
 
@@ -1465,6 +1582,7 @@ impl SweepEngine {
         let threads = requested_threads.min(items.len().max(1));
         let fast_forward = self.fast_forward_override.unwrap_or(spec.fast_forward);
         let delta_on = self.delta_cache_override.unwrap_or(spec.delta_cache);
+        let summary_on = self.summary_cache_override.unwrap_or(spec.summary_cache);
         // One options value shared by every checkout of this run — the
         // worker closure and the coalescing wait both borrow it.
         let slot_opts = SlotOptions {
@@ -1474,6 +1592,7 @@ impl SweepEngine {
             } else {
                 None
             },
+            summary_store: if summary_on { Some(self.summary_cache.clone()) } else { None },
             program_cache_cap: self.program_cache_cap_override.or(spec.program_cache_cap),
             program_cache_bytes: self
                 .program_cache_bytes_override
@@ -1573,6 +1692,23 @@ impl SweepEngine {
                     let s = if t.cf { Strategy::ChannelFirst } else { Strategy::FeatureFirst };
                     let (permit, wait) = self.gate.acquire(capacity, priority);
                     tel.gate_wait_secs += wait;
+                    // Deadline check at permit acquisition: an expired
+                    // item is dropped (never simulated) and reports the
+                    // structured deadline error instead of a result.
+                    if let Some(d) = deadline {
+                        if Instant::now() >= d {
+                            drop(permit);
+                            local.push((
+                                i,
+                                Err(Error::deadline(format!(
+                                    "request deadline ({} ms) passed before item could run",
+                                    spec.deadline_ms.unwrap_or(0)
+                                ))),
+                                0.0,
+                            ));
+                            continue;
+                        }
+                    }
                     let ws = pool[t.backend * n_cfgs + t.cfg].get_or_insert_with(|| {
                         self.slot_pool.check_out(
                             backend_fps[t.backend],
@@ -1691,6 +1827,7 @@ impl SweepEngine {
                 key,
                 capacity,
                 priority,
+                deadline,
                 &slot_opts,
                 &backend_fps,
                 &cfg_fps,
@@ -1754,6 +1891,10 @@ impl SweepEngine {
             replayed_regions: run_tel.replayed_regions,
             program_cache_hits: run_tel.program_cache_hits,
             program_cache_misses: run_tel.program_cache_misses,
+            summary_hits: run_tel.summary_hits,
+            summary_replays: run_tel.summary_replays,
+            shadow_validations: run_tel.shadow_validations,
+            delta_evictions: self.delta_cache.evictions() - delta_evictions_before,
             block_starts,
             dims: (
                 spec.backends.len(),
@@ -1778,6 +1919,7 @@ impl SweepEngine {
         key: SimKey,
         capacity: usize,
         priority: u8,
+        deadline: Option<Instant>,
         slot_opts: &SlotOptions,
         backend_fps: &[u64],
         cfg_fps: &[u64],
@@ -1814,6 +1956,18 @@ impl SweepEngine {
                     let s = if t.cf { Strategy::ChannelFirst } else { Strategy::FeatureFirst };
                     let (permit, waited) = self.gate.acquire(capacity, priority);
                     tel.gate_wait_secs += waited;
+                    // Same deadline policy as the worker loop: an
+                    // adopted cell whose request deadline passed is
+                    // dropped, not simulated.
+                    if let Some(d) = deadline {
+                        if Instant::now() >= d {
+                            drop(permit);
+                            return Err(Error::deadline(format!(
+                                "request deadline ({} ms) passed before adopted cell could run",
+                                spec.deadline_ms.unwrap_or(0)
+                            )));
+                        }
+                    }
                     let mut ws = self.slot_pool.check_out(
                         backend_fps[t.backend],
                         cfg_fps[t.cfg],
@@ -1989,11 +2143,11 @@ mod tests {
         engine.run(&spec(&wide)).unwrap();
         assert_eq!(engine.cached_sims(), 4);
 
-        let (all, n_all, _) = engine.export_cache(None);
+        let (all, n_all, _, _) = engine.export_cache(None);
         assert_eq!(n_all, 4);
-        let (base_only, n_base, _) = engine.export_cache(Some(config_fingerprint(&base)));
+        let (base_only, n_base, _, _) = engine.export_cache(Some(config_fingerprint(&base)));
         assert_eq!(n_base, 2);
-        let (none, n_none, _) = engine.export_cache(Some(0xdead_beef));
+        let (none, n_none, _, _) = engine.export_cache(Some(0xdead_beef));
         assert_eq!(n_none, 0);
 
         // Filtered blobs merge back losslessly and stay well-formed.
@@ -2012,7 +2166,7 @@ mod tests {
         assert_eq!(cold.executed_sims, 2);
         // Determinism: equal state → byte-identical blob (the
         // content-addressing contract of the fleet cache exchange).
-        let (all2, _, _) = engine.export_cache(None);
+        let (all2, _, _, _) = engine.export_cache(None);
         assert_eq!(all, all2);
     }
 
@@ -2341,6 +2495,26 @@ mod tests {
         let again = engine.run(&spec).unwrap();
         assert_eq!(again.executed_sims, 2);
         assert_eq!(out.results, again.results);
+    }
+
+    #[test]
+    fn expired_deadline_drops_items_with_a_deadline_error() {
+        let spec = SweepSpec::new(SpeedConfig::default())
+            .network("t", tiny_layers())
+            .precisions(vec![Precision::Int8])
+            .strategies(vec![Strategy::FeatureFirst])
+            .threads(1)
+            .deadline_ms(Some(0));
+        let engine = SweepEngine::new();
+        // A zero deadline has always passed by the time a worker
+        // acquires its scheduler permit: every item is dropped unrun.
+        let err = engine.run(&spec).unwrap_err();
+        assert!(matches!(err, Error::Deadline(_)), "wanted deadline error, got {err}");
+        assert_eq!(engine.cached_sims(), 0, "dropped items must publish nothing");
+        assert_eq!(engine.pending_cells(), 0, "no pending cells may leak");
+        // Lifting the deadline leaves the engine fully usable.
+        let out = engine.run(&spec.clone().deadline_ms(None)).unwrap();
+        assert_eq!(out.executed_sims, 2);
     }
 
     #[test]

@@ -7,5 +7,5 @@ pub mod stats;
 pub mod vidu;
 pub mod vldu;
 
-pub use processor::{CachedDelta, DeltaStore, ExecMode, Processor};
+pub use processor::{CachedDelta, DeltaStore, ExecMode, Processor, ProgramSummary, SegmentDelta};
 pub use stats::{InstrMix, SimStats};

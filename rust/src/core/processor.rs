@@ -46,6 +46,21 @@
 //! `tests/fastforward_parity.rs`; the empirical check cannot vet
 //! iterations it skips, so hand-written regions whose unmeasured tail
 //! differs structurally from the measured head are emitter bugs.
+//!
+//! ## Whole-program summary replay (timing mode)
+//!
+//! One rung above per-region extrapolation: a captured run records the
+//! *entire* program as a [`ProgramSummary`] — one state delta per span
+//! of the program's segment partition ([`crate::isa::segments`]),
+//! straight-line interludes included. Because deltas of recorded
+//! execution telescope, folding them over the same reset state the
+//! recording started from reproduces the final state bit-exactly, so a
+//! later run of the same program × configuration reconstructs its
+//! [`SimStats`] with pure arithmetic ([`Processor::replay_summary`]) —
+//! no decode, no stepping, no per-region verification iteration.
+//! Replay guards control-state equality and falls back to stepping on
+//! divergence; deciding *when* a summary may be trusted (shadow
+//! validation) belongs to the caller.
 
 use std::sync::Arc;
 
@@ -132,6 +147,256 @@ pub trait DeltaStore: Send + Sync + std::fmt::Debug {
     fn put(&self, key: u64, delta: CachedDelta);
 }
 
+/// Captured summary segments past this bound fold into the final
+/// segment: the replayed telescoping sum is unchanged, only
+/// per-segment granularity is lost, so summary memory stays bounded
+/// for pathological region tables.
+const MAX_SUMMARY_SEGMENTS: usize = 192;
+
+/// One span of a recorded [`ProgramSummary`]: the whole-machine
+/// timing-state movement across a straight-line stretch or one whole
+/// repeat region, stored as wrapping differences of the processor's
+/// private snapshot vectors. Straight-line interludes are real
+/// recorded diffs, so cross-region coupling (pipeline state carried
+/// between regions) is part of the record rather than assumed away.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SegmentDelta {
+    /// Instructions the span covers (stepped or extrapolated).
+    instrs: u64,
+    times: Vec<u64>,
+    counters: Vec<u64>,
+}
+
+impl SegmentDelta {
+    fn between(prev: &StateSnap, cur: &StateSnap, instrs: u64) -> SegmentDelta {
+        SegmentDelta {
+            instrs,
+            times: cur.times.iter().zip(&prev.times).map(|(c, p)| c.wrapping_sub(*p)).collect(),
+            counters: cur
+                .counters
+                .iter()
+                .zip(&prev.counters)
+                .map(|(c, p)| c.wrapping_sub(*p))
+                .collect(),
+        }
+    }
+
+    /// Fold a following span into this one (telescoping sums are exact
+    /// under composition, so coalescing never changes the replay).
+    fn absorb(&mut self, other: &SegmentDelta) {
+        self.instrs += other.instrs;
+        for (a, b) in self.times.iter_mut().zip(&other.times) {
+            *a = a.wrapping_add(*b);
+        }
+        for (a, b) in self.counters.iter_mut().zip(&other.counters) {
+            *a = a.wrapping_add(*b);
+        }
+    }
+}
+
+/// The complete machine-state transfer function of one program under
+/// one configuration: an ordered sequence of [`SegmentDelta`]s whose
+/// telescoping sum maps the reset state a run starts from to the
+/// final state it ends in. Replaying is pure arithmetic — no decode,
+/// no stepping, no per-region verification iteration
+/// ([`Processor::replay_summary`]). Exactness does not rely on the
+/// fast-forward extrapolation guards: deltas of *recorded execution*
+/// telescope, so `start + Σ deltas` is bit-identical to the recorded
+/// final state whenever the start states match — which
+/// [`Processor::replay_summary`] enforces by comparing the
+/// architectural control vector and falling back to stepping on any
+/// divergence. Trust in the recording itself is the caller's problem:
+/// the backend only replays summaries that survived a shadow-validation
+/// pass (a second full stepped run compared bit-exactly).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProgramSummary {
+    /// Architectural control vector the recording started from (the
+    /// pooled-reset state); replay refuses to fire from any other.
+    start_control: Vec<u64>,
+    /// Control vector at program end — compared during shadow
+    /// validation. Replay does not install it: pooled processors reset
+    /// before every program, and [`SimStats`] lives entirely in the
+    /// counter vector.
+    final_control: Vec<u64>,
+    times_len: usize,
+    counters_len: usize,
+    total_instrs: u64,
+    segments: Vec<SegmentDelta>,
+}
+
+impl ProgramSummary {
+    /// Total instructions the summary covers — a replay credits all of
+    /// them to [`Processor::fast_forwarded_instrs`], so telemetry can
+    /// prove zero instructions were stepped.
+    pub fn total_instrs(&self) -> u64 {
+        self.total_instrs
+    }
+
+    /// Number of recorded segments (straight-line spans + regions,
+    /// post-coalescing).
+    pub fn segment_count(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Whether two recordings are interchangeable: same start/end
+    /// control vectors, same instruction count, and identical
+    /// telescoped state movement. Segment *partitions* may differ; only
+    /// the folded sum is observable at replay time, so this is exactly
+    /// the bit-identity the shadow-validation pass needs.
+    pub fn replays_identically(&self, other: &ProgramSummary) -> bool {
+        self.start_control == other.start_control
+            && self.final_control == other.final_control
+            && self.total_instrs == other.total_instrs
+            && self.times_len == other.times_len
+            && self.counters_len == other.counters_len
+            && self.folded() == other.folded()
+    }
+
+    fn folded(&self) -> (Vec<u64>, Vec<u64>) {
+        let mut times = vec![0u64; self.times_len];
+        let mut counters = vec![0u64; self.counters_len];
+        for s in &self.segments {
+            for (a, b) in times.iter_mut().zip(&s.times) {
+                *a = a.wrapping_add(*b);
+            }
+            for (a, b) in counters.iter_mut().zip(&s.counters) {
+                *a = a.wrapping_add(*b);
+            }
+        }
+        (times, counters)
+    }
+
+    /// Flatten to a stable little-endian word vector:
+    /// `[n_start_control, start_control.., n_final_control,
+    /// final_control.., times_len, counters_len, total_instrs,
+    /// n_segments, (instrs, times×times_len, counters×counters_len)…]`.
+    pub fn to_words(&self) -> Vec<u64> {
+        let mut out = Vec::with_capacity(
+            6 + self.start_control.len()
+                + self.final_control.len()
+                + self.segments.len() * (1 + self.times_len + self.counters_len),
+        );
+        out.push(self.start_control.len() as u64);
+        out.extend_from_slice(&self.start_control);
+        out.push(self.final_control.len() as u64);
+        out.extend_from_slice(&self.final_control);
+        out.push(self.times_len as u64);
+        out.push(self.counters_len as u64);
+        out.push(self.total_instrs);
+        out.push(self.segments.len() as u64);
+        for s in &self.segments {
+            out.push(s.instrs);
+            out.extend_from_slice(&s.times);
+            out.extend_from_slice(&s.counters);
+        }
+        out
+    }
+
+    /// Rebuild from [`ProgramSummary::to_words`] output. Strict: any
+    /// length mismatch, trailing word, or an instruction total that
+    /// does not equal the segment sum is `None` (persisted-cache
+    /// decoding treats that as corruption).
+    pub fn from_words(words: &[u64]) -> Option<ProgramSummary> {
+        let mut it = words.iter().copied();
+        let mut take_vec = |it: &mut dyn Iterator<Item = u64>, n: usize| -> Option<Vec<u64>> {
+            // Defensive bound: a corrupted length can never allocate
+            // more than the record actually carries.
+            if n > words.len() {
+                return None;
+            }
+            let v: Vec<u64> = it.by_ref().take(n).collect();
+            if v.len() == n {
+                Some(v)
+            } else {
+                None
+            }
+        };
+        let n = usize::try_from(it.next()?).ok()?;
+        let start_control = take_vec(&mut it, n)?;
+        let n = usize::try_from(it.next()?).ok()?;
+        let final_control = take_vec(&mut it, n)?;
+        let times_len = usize::try_from(it.next()?).ok()?;
+        let counters_len = usize::try_from(it.next()?).ok()?;
+        let total_instrs = it.next()?;
+        let n_segments = usize::try_from(it.next()?).ok()?;
+        if n_segments > words.len() {
+            return None;
+        }
+        let mut segments = Vec::with_capacity(n_segments);
+        for _ in 0..n_segments {
+            let instrs = it.next()?;
+            let times = take_vec(&mut it, times_len)?;
+            let counters = take_vec(&mut it, counters_len)?;
+            segments.push(SegmentDelta { instrs, times, counters });
+        }
+        if it.next().is_some() {
+            return None;
+        }
+        if segments.iter().map(|s| s.instrs).sum::<u64>() != total_instrs {
+            return None;
+        }
+        Some(ProgramSummary {
+            start_control,
+            final_control,
+            times_len,
+            counters_len,
+            total_instrs,
+            segments,
+        })
+    }
+}
+
+/// In-progress whole-program summary recording (see
+/// [`Processor::begin_summary_capture`]): tracks the snapshot at the
+/// last segment boundary and accumulates segment deltas as the run
+/// crosses the program's segment partition.
+#[derive(Debug)]
+struct SummaryCapture {
+    start_control: Vec<u64>,
+    prev: StateSnap,
+    boundary: usize,
+    segments: Vec<SegmentDelta>,
+}
+
+impl SummaryCapture {
+    fn new(snap: StateSnap) -> SummaryCapture {
+        SummaryCapture {
+            start_control: snap.control.clone(),
+            prev: snap,
+            boundary: 0,
+            segments: Vec::new(),
+        }
+    }
+
+    /// Close the segment `[boundary, pc)` against the current state.
+    fn close(&mut self, cur: StateSnap, pc: usize) {
+        let instrs = (pc - self.boundary) as u64;
+        let seg = SegmentDelta::between(&self.prev, &cur, instrs);
+        if self.segments.len() >= MAX_SUMMARY_SEGMENTS {
+            self.segments.last_mut().expect("cap is positive").absorb(&seg);
+        } else {
+            self.segments.push(seg);
+        }
+        self.prev = cur;
+        self.boundary = pc;
+    }
+
+    /// Close the trailing segment (which also carries the final-cycle
+    /// accounting delta) and seal the summary.
+    fn finish(mut self, cur: StateSnap, end: usize) -> ProgramSummary {
+        self.close(cur, end);
+        let total_instrs = self.segments.iter().map(|s| s.instrs).sum();
+        ProgramSummary {
+            start_control: self.start_control,
+            final_control: self.prev.control.clone(),
+            times_len: self.prev.times.len(),
+            counters_len: self.prev.counters.len(),
+            total_instrs,
+            segments: self.segments,
+        }
+    }
+}
+
 /// Execution mode: full functional semantics or timing-only.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExecMode {
@@ -194,6 +459,11 @@ pub struct Processor {
     /// Subset of `delta_hits` that verified on the *first* stepped
     /// iteration — pure analytic replay (one verify pass, zero warm-up).
     replayed_regions: u64,
+    /// Whole-program summary capture armed for the next run (see
+    /// [`Processor::begin_summary_capture`]).
+    capture_summary: bool,
+    /// Summary recorded by the last captured run.
+    captured_summary: Option<ProgramSummary>,
 }
 
 impl Processor {
@@ -231,6 +501,8 @@ impl Processor {
             delta_base_fp: 0,
             delta_hits: 0,
             replayed_regions: 0,
+            capture_summary: false,
+            captured_summary: None,
         })
     }
 
@@ -284,6 +556,67 @@ impl Processor {
         self.replayed_regions
     }
 
+    /// Arm whole-program summary capture for the next
+    /// [`Processor::run_decoded`] (timing mode only; a no-op in
+    /// functional mode). The run records one [`SegmentDelta`] per span
+    /// of the program's segment partition
+    /// ([`crate::isa::segments`]) — retrieve the sealed summary with
+    /// [`Processor::take_summary`] afterwards.
+    pub fn begin_summary_capture(&mut self) {
+        self.capture_summary = true;
+        self.captured_summary = None;
+    }
+
+    /// Take the summary recorded by the last captured run, disarming
+    /// capture. `None` when capture was never armed, the run failed,
+    /// or the machine is in functional mode.
+    pub fn take_summary(&mut self) -> Option<ProgramSummary> {
+        self.capture_summary = false;
+        self.captured_summary.take()
+    }
+
+    /// Replay a recorded whole-program summary: reconstruct the final
+    /// machine statistics by folding the summary's segment deltas over
+    /// the current (reset) state — pure arithmetic, no decode, no
+    /// stepping, no per-region verification iteration. All
+    /// `total_instrs` covered instructions are credited to
+    /// [`Processor::fast_forwarded_instrs`].
+    ///
+    /// Returns `false` — leaving the machine untouched — on any
+    /// control-state divergence (the machine is not in the state the
+    /// recording started from) or shape mismatch (different bank
+    /// count); the caller then falls back to the stepped path. The
+    /// caller owns *trust*: only replay summaries that survived
+    /// shadow validation (see the backend's `SummaryCache`).
+    pub fn replay_summary(&mut self, s: &ProgramSummary) -> bool {
+        if self.mode != ExecMode::Timing {
+            return false;
+        }
+        let snap = self.snapshot();
+        if snap.control != s.start_control
+            || snap.times.len() != s.times_len
+            || snap.counters.len() != s.counters_len
+        {
+            return false;
+        }
+        let mut times = snap.times;
+        let mut counters = snap.counters;
+        for seg in &s.segments {
+            if seg.times.len() != times.len() || seg.counters.len() != counters.len() {
+                return false;
+            }
+            for (a, b) in times.iter_mut().zip(&seg.times) {
+                *a = a.wrapping_add(*b);
+            }
+            for (a, b) in counters.iter_mut().zip(&seg.counters) {
+                *a = a.wrapping_add(*b);
+            }
+        }
+        self.write_back(&StateSnap { times, counters, control: snap.control });
+        self.ff_instrs += s.total_instrs;
+        true
+    }
+
     /// Statistics accumulated so far.
     pub fn stats(&self) -> &SimStats {
         &self.stats
@@ -326,6 +659,8 @@ impl Processor {
         self.cfg_trace = None;
         self.delta_hits = 0;
         self.replayed_regions = 0;
+        self.capture_summary = false;
+        self.captured_summary = None;
     }
 
     /// Full per-job reset for pooled reuse: architecturally equivalent to
@@ -385,6 +720,23 @@ impl Processor {
     /// points skip the word-by-word decoder entirely.
     pub fn run_decoded(&mut self, instrs: &[Instr], regions: &[Region]) -> Result<()> {
         let ff = self.fast_forward && self.mode == ExecMode::Timing;
+        let mut cap = if self.capture_summary && self.mode == ExecMode::Timing {
+            Some(SummaryCapture::new(self.snapshot()))
+        } else {
+            None
+        };
+        // Segment boundaries for summary capture, from the program's
+        // segment partition (same malformed-region filtering as the
+        // walk below). The pc only ever lands exactly on partition
+        // boundaries — straight-line code advances one instruction at
+        // a time and regions jump start → end, both of which are
+        // boundaries — so closing segments at `pc == bound` is exact.
+        let bounds: Vec<usize> = if cap.is_some() {
+            crate::isa::segments(instrs.len(), regions).iter().map(|s| s.end()).collect()
+        } else {
+            Vec::new()
+        };
+        let mut next_bound = 0usize;
         let mut next_region = 0usize;
         let mut pc = 0usize;
         while pc < instrs.len() {
@@ -410,6 +762,14 @@ impl Processor {
                 self.step(i)?;
                 pc += 1;
             }
+            if let Some(c) = cap.as_mut() {
+                while next_bound < bounds.len() && bounds[next_bound] <= pc {
+                    if bounds[next_bound] == pc {
+                        c.close(self.snapshot(), pc);
+                    }
+                    next_bound += 1;
+                }
+            }
         }
         // Final-cycle accounting: fold in the accumulator-port completion
         // times. The acc port (wb/ldacc/drain) runs concurrently with the
@@ -419,6 +779,14 @@ impl Processor {
         let acc_end = self.bank_ready.iter().copied().max().unwrap_or(0);
         self.stats.cycles = self.t_issue.max(self.t_dram).max(self.t_sau).max(acc_end);
         self.stats.instrs = self.vidu.mix;
+        if let Some(c) = cap {
+            // The trailing segment also carries the accounting fold
+            // above, so a replayed summary lands on the *post*-
+            // accounting state and needs no re-accounting.
+            let snap = self.snapshot();
+            self.captured_summary = Some(c.finish(snap, instrs.len()));
+            self.capture_summary = false;
+        }
         Ok(())
     }
 
@@ -1593,6 +1961,125 @@ mod tests {
         assert_eq!(*other.stats(), *cold.stats());
         assert_eq!(other.delta_cache_hits(), 0, "foreign base fp must not hit");
         assert_eq!(store.len(), 2, "foreign base fp publishes under its own key");
+    }
+
+    /// A program with a straight-line prefix, a steady region, and a
+    /// straight-line tail — exercises every segment kind of the
+    /// summary recorder.
+    fn segmented_program(trips: usize) -> Program {
+        let mut b = Program::builder();
+        b.li(9, 7); // straight-line prefix
+        b.li(10, 3);
+        let mut marks = Vec::new();
+        for _ in 0..trips {
+            marks.push(b.len());
+            b.set_vl(64, 8, 1);
+            b.emit(Instr::VaddVv { vd: 3, vs2: 1, vs1: 2 });
+        }
+        marks.push(b.len());
+        b.li(11, 5); // straight-line tail
+        let mut p = b.build();
+        for r in crate::isa::Region::steady_runs(&marks, 3) {
+            p.push_region(r);
+        }
+        assert_eq!(p.regions().len(), 1);
+        p
+    }
+
+    /// Whole-program summary end to end at the processor level: a
+    /// captured run seals a summary whose replay on a fresh machine is
+    /// bit-identical, credits the entire program to `ff_instrs`, and
+    /// steps nothing.
+    #[test]
+    fn program_summary_replays_bit_identically() {
+        let prog = segmented_program(8);
+        let mut cold = machine(ExecMode::Timing);
+        cold.begin_summary_capture();
+        cold.run(&prog).unwrap();
+        let summary = cold.take_summary().expect("captured run seals a summary");
+        assert_eq!(summary.total_instrs(), prog.len() as u64, "summary covers every instruction");
+        // Partition: [prefix][region][tail] closes 3 segments, plus the
+        // trailing accounting segment.
+        assert_eq!(summary.segment_count(), 4);
+
+        let mut warm = machine(ExecMode::Timing);
+        assert!(warm.replay_summary(&summary), "fresh reset state must replay");
+        assert_eq!(*warm.stats(), *cold.stats(), "replay must be bit-identical");
+        assert_eq!(
+            warm.fast_forwarded_instrs(),
+            prog.len() as u64,
+            "the whole program is credited as fast-forwarded"
+        );
+        // Re-capture of an identical run is interchangeable with the
+        // original — the shadow-validation equality.
+        let mut again = machine(ExecMode::Timing);
+        again.begin_summary_capture();
+        again.run(&prog).unwrap();
+        let second = again.take_summary().unwrap();
+        assert!(summary.replays_identically(&second));
+    }
+
+    /// Replay refuses to fire from any state other than the recorded
+    /// start: control divergence and functional mode both fall back.
+    #[test]
+    fn summary_replay_guards_divergence() {
+        let prog = segmented_program(8);
+        let mut cold = machine(ExecMode::Timing);
+        cold.begin_summary_capture();
+        cold.run(&prog).unwrap();
+        let summary = cold.take_summary().unwrap();
+
+        // A machine that already ran something has divergent control
+        // state (vl/vtype moved) — replay must refuse and leave the
+        // stats untouched.
+        let mut dirty = machine(ExecMode::Timing);
+        dirty.run(&segmented_program(4)).unwrap();
+        let before = dirty.stats().clone();
+        assert!(!dirty.replay_summary(&summary), "divergent control must not replay");
+        assert_eq!(*dirty.stats(), before);
+
+        // Functional mode never replays (it must move real data).
+        let mut func = machine(ExecMode::Functional);
+        assert!(!func.replay_summary(&summary));
+        // Nor does functional mode capture.
+        func.begin_summary_capture();
+        func.run(&segmented_program(4)).unwrap();
+        assert!(func.take_summary().is_none());
+    }
+
+    /// `to_words`/`from_words` roundtrip exactly and reject corruption
+    /// strictly — persisted-cache decoding relies on this.
+    #[test]
+    fn summary_words_roundtrip_strictly() {
+        let prog = segmented_program(8);
+        let mut m = machine(ExecMode::Timing);
+        m.begin_summary_capture();
+        m.run(&prog).unwrap();
+        let summary = m.take_summary().unwrap();
+        let words = summary.to_words();
+        assert_eq!(ProgramSummary::from_words(&words).unwrap(), summary);
+
+        // Trailing word, truncation, and a lying instruction total are
+        // all corruption.
+        let mut trailing = words.clone();
+        trailing.push(0);
+        assert!(ProgramSummary::from_words(&trailing).is_none());
+        assert!(ProgramSummary::from_words(&words[..words.len() - 1]).is_none());
+        let mut lying = words.clone();
+        // [1 len][19 start_control][1 len][19 final_control][times_len]
+        // [counters_len] → total_instrs sits at index 42.
+        let total_idx = 2 + 2 * 19 + 2;
+        lying[total_idx] = lying[total_idx].wrapping_add(1);
+        assert!(ProgramSummary::from_words(&lying).is_none());
+
+        // A tampered segment counter still decodes (the total holds)
+        // but is no longer interchangeable with the original — exactly
+        // what the shadow-validation pass must catch.
+        let mut poisoned = words;
+        let n = poisoned.len();
+        poisoned[n - 1] = poisoned[n - 1].wrapping_add(1);
+        let poisoned = ProgramSummary::from_words(&poisoned).unwrap();
+        assert!(!summary.replays_identically(&poisoned));
     }
 
     /// A wrong cached delta (stale or colliding entry) must fail the

@@ -41,6 +41,12 @@ pub enum Error {
     /// error record instead of exiting.
     Protocol(String),
 
+    /// A per-client deadline expired before the work could be
+    /// scheduled (see `SweepSpec::deadline_ms`). Servers answer these
+    /// with a structured `"code":"deadline"` record instead of
+    /// exiting.
+    Deadline(String),
+
     /// Underlying I/O failure.
     Io(std::io::Error),
 }
@@ -57,6 +63,7 @@ impl fmt::Display for Error {
             Error::Mapping(msg) => write!(f, "dataflow mapping error: {msg}"),
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
             Error::Protocol(msg) => write!(f, "protocol error: {msg}"),
+            Error::Deadline(msg) => write!(f, "deadline exceeded: {msg}"),
             Error::Io(e) => write!(f, "{e}"),
         }
     }
@@ -101,6 +108,10 @@ impl Error {
     pub fn protocol(msg: impl Into<String>) -> Self {
         Error::Protocol(msg.into())
     }
+    /// Shorthand constructor for expired-deadline errors.
+    pub fn deadline(msg: impl Into<String>) -> Self {
+        Error::Deadline(msg.into())
+    }
 }
 
 #[cfg(test)]
@@ -118,6 +129,7 @@ mod tests {
         assert_eq!(Error::mapping("z").to_string(), "dataflow mapping error: z");
         assert_eq!(Error::runtime("w").to_string(), "runtime error: w");
         assert_eq!(Error::protocol("v").to_string(), "protocol error: v");
+        assert_eq!(Error::deadline("u").to_string(), "deadline exceeded: u");
     }
 
     #[test]

@@ -36,4 +36,4 @@ pub use decode::decode;
 pub use disasm::disassemble;
 pub use encode::encode;
 pub use instr::{ElemWidth, Instr, LoadMode, Strategy, Vsacfg, Vsam, VType};
-pub use program::{Program, Region};
+pub use program::{segments, Program, Region, Segment};

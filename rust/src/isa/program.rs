@@ -126,6 +126,57 @@ impl Region {
     }
 }
 
+/// One span of a program's segment partition (see [`segments`]): either
+/// a straight-line stretch of code or one whole repeat [`Region`]
+/// (all `trips` iterations). Segments tile the program exactly — the
+/// whole-program summary recorder captures one machine-state delta per
+/// segment, so cross-region coupling (pipeline state carried through
+/// the straight-line interludes between regions) is part of the record
+/// rather than assumed away.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Segment {
+    /// Word index of the span's first instruction.
+    pub start: usize,
+    /// Total instruction count of the span (for regions, `len × trips`).
+    pub len: usize,
+    /// `Some` when the span is a fast-forwardable repeat region.
+    pub region: Option<Region>,
+}
+
+impl Segment {
+    /// One-past-the-end word index of the span.
+    pub fn end(&self) -> usize {
+        self.start + self.len
+    }
+}
+
+/// Partition `[0, n_instrs)` into the alternating straight-line /
+/// region spans the processor's `run_decoded` loop executes, applying
+/// the *same* malformed-region filtering rules (regions must appear in
+/// order, be non-empty, not overlap an earlier span, and fit inside
+/// the program — anything else is ignored). Returns an exact tiling:
+/// spans are contiguous, non-overlapping, and cover every instruction.
+pub fn segments(n_instrs: usize, regions: &[Region]) -> Vec<Segment> {
+    let mut out = Vec::new();
+    let mut pc = 0usize;
+    for r in regions {
+        let end = r.len.checked_mul(r.trips).and_then(|n| r.start.checked_add(n));
+        let end = match end {
+            Some(e) if r.start >= pc && r.len > 0 && r.trips > 0 && e <= n_instrs => e,
+            _ => continue,
+        };
+        if r.start > pc {
+            out.push(Segment { start: pc, len: r.start - pc, region: None });
+        }
+        out.push(Segment { start: r.start, len: end - r.start, region: Some(*r) });
+        pc = end;
+    }
+    if pc < n_instrs {
+        out.push(Segment { start: pc, len: n_instrs - pc, region: None });
+    }
+    out
+}
+
 /// An encoded instruction stream.
 #[derive(Debug, Clone, Default)]
 pub struct Program {
@@ -208,6 +259,11 @@ impl Program {
             h = r.fingerprint(h);
         }
         h
+    }
+
+    /// The program's segment partition (see [`segments`]).
+    pub fn segments(&self) -> Vec<Segment> {
+        segments(self.words.len(), &self.regions)
     }
 }
 
@@ -446,6 +502,58 @@ mod tests {
             Region::steady_runs(&[0, 2, 4], 0),
             vec![Region { start: 0, len: 2, trips: 2 }]
         );
+    }
+
+    #[test]
+    fn segments_tile_the_program_exactly() {
+        // [0,2) straight, [2,8) region, [8,10) straight, [10,14) region.
+        let regions =
+            [Region { start: 2, len: 3, trips: 2 }, Region { start: 10, len: 2, trips: 2 }];
+        let segs = segments(15, &regions);
+        assert_eq!(
+            segs,
+            vec![
+                Segment { start: 0, len: 2, region: None },
+                Segment { start: 2, len: 6, region: Some(regions[0]) },
+                Segment { start: 8, len: 2, region: None },
+                Segment { start: 10, len: 4, region: Some(regions[1]) },
+                Segment { start: 14, len: 1, region: None },
+            ]
+        );
+        // Exact tiling: contiguous from 0 to n.
+        let mut pc = 0;
+        for s in &segs {
+            assert_eq!(s.start, pc);
+            pc = s.end();
+        }
+        assert_eq!(pc, 15);
+    }
+
+    #[test]
+    fn segments_ignore_malformed_regions_like_the_engine() {
+        // Zero len, zero trips, out of bounds, overlapping an earlier
+        // span, and arithmetic overflow are all dropped; the program
+        // still tiles completely.
+        let regions = [
+            Region { start: 1, len: 0, trips: 4 },
+            Region { start: 1, len: 2, trips: 0 },
+            Region { start: 2, len: 2, trips: 3 },
+            Region { start: 4, len: 1, trips: 2 }, // overlaps previous span
+            Region { start: 9, len: usize::MAX, trips: 2 }, // overflow
+            Region { start: 9, len: 5, trips: 2 }, // out of bounds
+        ];
+        let segs = segments(10, &regions);
+        assert_eq!(
+            segs,
+            vec![
+                Segment { start: 0, len: 2, region: None },
+                Segment { start: 2, len: 6, region: Some(regions[2]) },
+                Segment { start: 8, len: 2, region: None },
+            ]
+        );
+        // No regions at all → one straight-line span; empty → none.
+        assert_eq!(segments(3, &[]), vec![Segment { start: 0, len: 3, region: None }]);
+        assert!(segments(0, &[]).is_empty());
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //!             [--shard-threshold N | --no-shard] [--no-fast-forward] [config flags]
 //! speed sweep [--backend speed|ara|golden|roofline|all] [--threads N] [--no-memoize]
 //!             [--cache-file PATH] [--shard-threshold N | --no-shard]
-//!             [--no-fast-forward] [--no-delta-cache]
+//!             [--no-fast-forward] [--no-delta-cache] [--no-summary-cache]
 //!             [--program-cache-cap N] [--program-cache-bytes N]
 //!             [--out DIR] [config flags]                       (see `speed sweep --help`)
 //! speed serve [--tcp ADDR] [--port-file PATH] [--cache-file PATH]
@@ -15,7 +15,8 @@
 //!             [--max-connections N] [--max-concurrent-sweeps N]
 //!             [--idle-timeout-secs N]
 //!             [--shard-threshold N | --no-shard] [--no-fast-forward]
-//!             [--no-delta-cache] [--program-cache-cap N]
+//!             [--no-delta-cache] [--no-summary-cache]
+//!             [--program-cache-cap N]
 //!             [--program-cache-bytes N] [config flags]
 //!                                         (long-running sweep server; `--help`)
 //! speed request (--emit | --tcp ADDR) [request flags]
@@ -94,6 +95,11 @@ flags:
                 steady-state region re-converges from scratch instead
                 of replaying a cached per-iteration delta
                 (bit-identical; the delta telemetry reads 0)
+  --no-summary-cache
+                disable whole-program summary replay: every repeated
+                program shape steps instruction-by-instruction instead
+                of replaying its recorded machine-state transfer
+                function (bit-identical; the summary telemetry reads 0)
   --program-cache-cap N
                 per-worker decoded-program cache capacity in programs
                 (default 4; clamped to at least 1)
@@ -170,6 +176,9 @@ flags:
   --no-delta-cache
                 server-wide: disable the shared converged-delta cache
                 (bit-identical; requests can't re-enable it)
+  --no-summary-cache
+                server-wide: disable whole-program summary replay
+                (bit-identical; requests can't re-enable it)
   --program-cache-cap N
                 server-wide per-worker decoded-program cache capacity
                 in programs (default 4)
@@ -213,6 +222,13 @@ flags:
                     (bit-identical; the summary's ff_instrs reads 0)
   --no-delta-cache  disable converged-delta replay for this request
                     (bit-identical; the summary's delta_hits reads 0)
+  --no-summary-cache
+                    disable whole-program summary replay for this
+                    request (bit-identical; the summary's
+                    summary_replays reads 0)
+  --deadline-ms MS  per-request deadline: items still queued MS ms
+                    after submission are dropped and the request is
+                    answered with a `\"code\":\"deadline\"` error record
   --priority N      scheduler priority 0-255, higher first (default 0);
                     lets a small interactive request overtake a running
                     full-grid sweep (scheduling-only, results are
@@ -283,9 +299,10 @@ flags:
 
 plus every `speed request` sweep flag: --id --network --layers
 --backends --prec --strategy --threads --no-memoize --no-shard
---shard-threshold --no-fast-forward --no-delta-cache --priority and
-the config override flags (--lanes --vlen --tile-r --tile-c
---dram-bw --freq; applied on every node, this request only).";
+--shard-threshold --no-fast-forward --no-delta-cache
+--no-summary-cache --deadline-ms --priority and the config override
+flags (--lanes --vlen --tile-r --tile-c --dram-bw --freq; applied on
+every node, this request only).";
 
 /// Load `--cache-file` into the engine if present; a missing file is a
 /// cold start, a malformed one is reported and ignored (cold cache).
@@ -333,6 +350,9 @@ fn apply_engine_flags(engine: &mut SweepEngine, flags: &Flags) {
     }
     if flags.get("no-delta-cache").is_some() {
         engine.set_delta_cache_override(Some(false));
+    }
+    if flags.get("no-summary-cache").is_some() {
+        engine.set_summary_cache_override(Some(false));
     }
     let pc_cap = flags.num("program-cache-cap");
     let pc_bytes = flags.num("program-cache-bytes");
@@ -504,6 +524,12 @@ fn request_from_flags(flags: &Flags) -> serve::Request {
     if flags.get("no-delta-cache").is_some() {
         req.delta_cache = false;
     }
+    if flags.get("no-summary-cache").is_some() {
+        req.summary_cache = false;
+    }
+    if let Some(ms) = flags.num("deadline-ms") {
+        req.deadline_ms = Some(ms);
+    }
     if let Some(p) = flags.num::<u64>("priority") {
         if p > u64::from(u8::MAX) {
             eprintln!("bad value `{p}` for --priority (0-255)");
@@ -669,6 +695,7 @@ fn main() -> speed::Result<()> {
                 },
                 fast_forward: flags.get("no-fast-forward").map(|_| false),
                 delta_cache: flags.get("no-delta-cache").map(|_| false),
+                summary_cache: flags.get("no-summary-cache").map(|_| false),
                 program_cache_cap: flags.num("program-cache-cap"),
                 program_cache_bytes: flags.num("program-cache-bytes"),
                 limits: {

@@ -1,0 +1,268 @@
+//! Whole-program summary replay: engine-level parity and soundness.
+//!
+//! The contract under test: with the program-summary cache on, a
+//! repeat-shape simulation reconstructs its final machine state from
+//! the recorded segment deltas — zero stepped instructions — and the
+//! result is **bit-identical** to stepping. Soundness comes from the
+//! trust protocol (a summary only replays after a bit-exact shadow
+//! validation pass) and from strict decoding of persisted summaries.
+//!
+//! Coverage:
+//! * summary on/off bit-identity across networks × {1,4} threads ×
+//!   {sharded, unsharded}, with the record → validate → replay
+//!   telemetry asserted at each step;
+//! * a poisoned recorded summary is discarded by shadow validation —
+//!   the stepped result wins and the entry re-earns trust;
+//! * a trusted summary persisted through the cache blob replays
+//!   immediately after reload into a fresh engine;
+//! * a corrupt v3 summary section rejects the whole blob and the
+//!   engine falls back cold;
+//! * a version-2 blob (pre-summary) still loads, with zero summaries.
+
+use speed::arch::{Precision, SpeedConfig};
+use speed::coordinator::backend::{fp_bytes, FP_SEED};
+use speed::coordinator::sweep::{SweepEngine, SweepSpec, SHARD_AUTO_MACS, SHARD_OFF};
+use speed::core::ProgramSummary;
+use speed::dataflow::{ConvLayer, Strategy};
+
+/// A layer with real steady-state loops but under the 32M-MAC shard
+/// decomposition floor: one program, one summary key.
+fn steady_layers() -> Vec<ConvLayer> {
+    vec![
+        ConvLayer::new("steady", 16, 32, 40, 40, 3, 1, 1),
+        ConvLayer::new("pw", 8, 12, 6, 6, 1, 1, 0),
+    ]
+}
+
+/// A single layer just over the decomposition floor, so an auto shard
+/// threshold fans it out into shard sub-programs.
+fn fanout_layers() -> Vec<ConvLayer> {
+    vec![ConvLayer::new("big", 64, 64, 30, 30, 3, 1, 1)]
+}
+
+/// Build the grid spec: memoization off, so every run re-simulates and
+/// the summary protocol (not the memo table) carries the repeats.
+fn spec_for(
+    layers: &[ConvLayer],
+    threads: usize,
+    shard_threshold: u64,
+    summary_on: bool,
+) -> SweepSpec {
+    SweepSpec::new(SpeedConfig::default())
+        .network("t", layers.to_vec())
+        .precisions(vec![Precision::Int8])
+        .strategies(vec![Strategy::Mixed])
+        .memoize(false)
+        .threads(threads)
+        .shard_threshold(shard_threshold)
+        .summary_cache(summary_on)
+}
+
+#[test]
+fn summary_replay_is_bit_identical_across_threads_and_sharding() {
+    for layers in [steady_layers(), fanout_layers()] {
+        // Reference: summary cache off, serial, unsharded.
+        let off_engine = SweepEngine::new();
+        let reference = off_engine.run(&spec_for(&layers, 1, SHARD_OFF, false)).unwrap();
+        assert_eq!(
+            (reference.summary_hits, reference.summary_replays, reference.shadow_validations),
+            (0, 0, 0),
+            "summary cache off must report zero summary telemetry"
+        );
+        assert_eq!(off_engine.cached_summaries(), 0, "off runs must record nothing");
+
+        for threads in [1usize, 4] {
+            for shard_threshold in [SHARD_AUTO_MACS, SHARD_OFF] {
+                let tag = format!(
+                    "{} layers, {threads} threads, shard {}",
+                    layers.len(),
+                    if shard_threshold == SHARD_OFF { "off" } else { "auto" },
+                );
+                let spec = spec_for(&layers, threads, shard_threshold, true);
+                let engine = SweepEngine::new();
+                // Run 1: cold — steps fully, records untrusted summaries.
+                let cold = engine.run(&spec).unwrap();
+                assert_eq!(cold.results, reference.results, "cold parity ({tag})");
+                assert!(engine.cached_summaries() > 0, "cold run must record ({tag})");
+                // Run 2: shadow validation — steps fully, compares
+                // bit-exactly, and publishes (trusts) the recordings.
+                let validated = engine.run(&spec).unwrap();
+                assert_eq!(validated.results, reference.results, "shadow parity ({tag})");
+                // Run 3: trusted summaries — pure arithmetic replay.
+                let warm = engine.run(&spec).unwrap();
+                assert_eq!(warm.results, reference.results, "replay parity ({tag})");
+                assert!(warm.summary_replays > 0, "run 3 must replay ({tag})");
+                assert_eq!(warm.shadow_validations, 0, "trusted entries skip shadow ({tag})");
+                assert!(
+                    warm.summary_hits >= warm.summary_replays,
+                    "every replay is a hit ({tag})"
+                );
+                if cold.sharded_jobs == 0 {
+                    // Unsharded: no key repeats within a run, so the
+                    // record → validate → replay phases land exactly on
+                    // runs 1 → 2 → 3. (Identical shard sub-programs
+                    // share a key, so a sharded run can walk the whole
+                    // protocol internally — only parity is pinned there.)
+                    assert_eq!(cold.summary_replays, 0, "nothing to replay cold ({tag})");
+                    assert!(validated.shadow_validations > 0, "run 2 must validate ({tag})");
+                    assert_eq!(validated.summary_replays, 0, "run 2 still steps ({tag})");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn poisoned_summary_is_discarded_and_stepped_result_wins() {
+    let layers = steady_layers();
+    let spec = spec_for(&layers, 1, SHARD_OFF, true);
+    let engine = SweepEngine::new();
+    let cold = engine.run(&spec).unwrap();
+
+    // Poison one recorded (still untrusted) summary: bump its last
+    // counter delta. It still decodes — only the bit-exact shadow
+    // comparison can tell it from the truth.
+    let entries = engine.summary_cache().entries();
+    assert!(!entries.is_empty());
+    let (key, entry) = entries.into_iter().next().unwrap();
+    let mut words = entry.summary.to_words();
+    let last = words.len() - 1;
+    words[last] = words[last].wrapping_add(1);
+    let poisoned = ProgramSummary::from_words(&words).expect("tampered summary still decodes");
+    assert!(!entry.summary.replays_identically(&poisoned));
+    engine.summary_cache().record(key, poisoned);
+
+    // Shadow validation detects the mismatch: the stepped result wins,
+    // nothing replays, and the poisoned entry is replaced by a fresh
+    // untrusted recording.
+    let stepped = engine.run(&spec).unwrap();
+    assert_eq!(stepped.results, cold.results, "stepped truth wins over poison");
+    assert_eq!(stepped.summary_replays, 0, "a poisoned entry must never replay");
+    assert!(stepped.shadow_validations > 0);
+    assert!(
+        engine.summary_cache().entries().iter().all(|(k, e)| *k != key || !e.trusted),
+        "a mismatching recording must not be published"
+    );
+
+    // The clean re-recording earns trust on the next pass and replays
+    // after that — recovery is complete.
+    let validated = engine.run(&spec).unwrap();
+    assert_eq!(validated.results, cold.results);
+    let warm = engine.run(&spec).unwrap();
+    assert_eq!(warm.results, cold.results);
+    assert!(warm.summary_replays > 0, "recovered entry must replay");
+}
+
+#[test]
+fn persisted_trusted_summaries_replay_after_reload() {
+    let layers = steady_layers();
+    let spec = spec_for(&layers, 1, SHARD_OFF, true);
+    let source = SweepEngine::new();
+    let reference = source.run(&spec).unwrap();
+    source.run(&spec).unwrap(); // shadow-validate → trusted
+    let (blob, _, _, n_summaries) = source.export_cache(None);
+    assert!(n_summaries > 0, "export must carry the summary records");
+
+    // A fresh engine loading the blob replays on its very first run:
+    // trust earned (by bit-exact shadow validation) before the save
+    // survives the round-trip.
+    let fresh = SweepEngine::new();
+    fresh.load_cache_bytes(&blob).unwrap();
+    assert_eq!(fresh.cached_summaries(), source.cached_summaries());
+    assert!(
+        fresh.summary_cache().entries().iter().any(|(_, e)| e.trusted),
+        "trust flags must persist"
+    );
+    let warm = fresh.run(&spec).unwrap();
+    assert_eq!(warm.results, reference.results, "reloaded replay must be bit-identical");
+    assert!(warm.summary_replays > 0, "first run after reload must replay");
+    assert_eq!(warm.shadow_validations, 0, "persisted trust skips shadow validation");
+}
+
+/// Recompute the blob's trailing FNV-1a footer so only the deliberate
+/// corruption is wrong (a plain byte flip would just trip the checksum).
+fn refooter(mut bytes: Vec<u8>) -> Vec<u8> {
+    let n = bytes.len() - 8;
+    let sum = fp_bytes(FP_SEED, &bytes[..n]);
+    bytes[n..].copy_from_slice(&sum.to_le_bytes());
+    bytes
+}
+
+#[test]
+fn corrupt_summary_section_rejects_the_blob_and_engine_falls_back_cold() {
+    let layers = steady_layers();
+    let spec = spec_for(&layers, 1, SHARD_OFF, true);
+    let source = SweepEngine::new();
+    source.run(&spec).unwrap();
+    let (blob, _, _, n_summaries) = source.export_cache(None);
+    assert!(n_summaries > 0);
+
+    // Locate the summary section from the end of the blob: it is the
+    // last section before the 8-byte footer, sized by its own records.
+    let summary_bytes: usize = source
+        .summary_cache()
+        .entries()
+        .iter()
+        .map(|(_, e)| (3 + e.summary.to_words().len()) * 8)
+        .sum();
+    let count_at = blob.len() - 8 - summary_bytes - 8;
+    // Break the first record's trust tag (a strict 0-or-1 field).
+    let mut bad = blob.clone();
+    bad[count_at + 16..count_at + 24].copy_from_slice(&7u64.to_le_bytes());
+    let err = SweepEngine::new().load_cache_bytes(&refooter(bad)).unwrap_err().to_string();
+    assert!(err.contains("trust tag"), "{err}");
+    // A plain byte flip in the section trips the checksum instead.
+    let mut flipped = blob.clone();
+    flipped[count_at + 8] ^= 0xFF;
+    assert!(SweepEngine::new().load_cache_bytes(&flipped).is_err());
+
+    // Either way the rejection is total — the engine stays cold and
+    // fully usable (load merged nothing, a fresh run still works).
+    let fresh = SweepEngine::new();
+    assert!(fresh.load_cache_bytes(&refooter({
+        let mut b = blob.clone();
+        b[count_at + 16..count_at + 24].copy_from_slice(&7u64.to_le_bytes());
+        b
+    }))
+    .is_err());
+    assert_eq!(fresh.cached_sims(), 0);
+    assert_eq!(fresh.cached_summaries(), 0);
+    let out = fresh.run(&spec).unwrap();
+    assert!(out.executed_sims > 0, "cold fallback simulates normally");
+    // Sanity: the pristine blob still loads.
+    assert!(SweepEngine::new().load_cache_bytes(&blob).is_ok());
+}
+
+#[test]
+fn version_2_blobs_load_with_zero_summaries() {
+    // A v3 blob with an empty summary section (summary cache off for
+    // the producing run) differs from a v2 file only by the version tag
+    // and the trailing zero summary count — strip both to fabricate the
+    // exact bytes a pre-summary build would have written.
+    let layers = steady_layers();
+    let engine = SweepEngine::new();
+    engine
+        .run(
+            &SweepSpec::new(SpeedConfig::default())
+                .network("t", layers)
+                .precisions(vec![Precision::Int8])
+                .strategies(vec![Strategy::Mixed])
+                .threads(1)
+                .summary_cache(false),
+        )
+        .unwrap();
+    let (blob, n_memo, _, n_summaries) = engine.export_cache(None);
+    assert!(n_memo > 0);
+    assert_eq!(n_summaries, 0);
+
+    let mut v2 = blob.clone();
+    v2[8..12].copy_from_slice(&2u32.to_le_bytes());
+    let cut = v2.len() - 8 - 8; // the empty summary count, before the footer
+    v2.drain(cut..cut + 8);
+    let v2 = refooter(v2);
+
+    let fresh = SweepEngine::new();
+    let loaded = fresh.load_cache_bytes(&v2).unwrap();
+    assert_eq!(loaded, n_memo, "every v2 memo entry must merge");
+    assert_eq!(fresh.cached_summaries(), 0, "v2 files carry no summaries");
+}

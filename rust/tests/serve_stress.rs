@@ -528,6 +528,32 @@ fn sweep_admission_limit_answers_overload_and_recovers() {
     assert_eq!(field_u64(summary, "sims"), 0, "warm repeat must be pure cache: {summary}");
 }
 
+#[test]
+fn expired_deadline_is_answered_with_a_structured_deadline_error() {
+    let shared = Arc::new(ServeShared::new(
+        Arc::new(SweepEngine::new()),
+        SpeedConfig::default(),
+        unlimited(),
+    ));
+    // A zero deadline has always already passed by the time the worker
+    // acquires a scheduler permit, so the item is dropped rather than
+    // simulated and the session answers with `"code":"deadline"`.
+    let req = Request { deadline_ms: Some(0), ..tiny_request(7) };
+    let (lines, stats) = serve_session(&shared, &format!("{}\n", req.to_line()));
+    assert_eq!(lines.len(), 1, "one structured error line, got {lines:?}");
+    assert_eq!(field_str(&lines[0], "type"), "error");
+    assert_eq!(field_str(&lines[0], "code"), "deadline");
+    assert_eq!(field_u64(&lines[0], "id"), 7);
+    assert_eq!(stats.errors, 1);
+    assert_eq!(stats.overloads, 0, "a deadline drop is not an admission refusal");
+    // Nothing was simulated or published for the dropped work.
+    assert_eq!(shared.engine.cached_sims(), 0);
+    // The same request without a deadline then succeeds normally.
+    let (ok_lines, ok_stats) = serve_session(&shared, &format!("{}\n", tiny_request(8).to_line()));
+    assert_eq!(ok_stats.errors, 0);
+    assert!(ok_lines.last().expect("reply").contains("\"type\":\"summary\""));
+}
+
 // ---------------------------------------------------------------------------
 // TCP accept loop
 // ---------------------------------------------------------------------------
