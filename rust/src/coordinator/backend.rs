@@ -50,7 +50,10 @@ const FP_PRIME: u64 = 0x0000_0100_0000_01b3;
 /// `std::collections::hash_map::DefaultHasher`, this is stable across
 /// processes *and* toolchain versions, which the on-disk result cache
 /// depends on (a fingerprint change silently invalidates cache entries
-/// instead of aliasing them — safe, but worth keeping stable).
+/// instead of aliasing them — safe, but worth keeping stable). The
+/// `SPEEDSWJ` journal (`coordinator::journal`) also frames every
+/// record with a CRC built from this chain, so journal recovery
+/// inherits the same cross-process stability guarantee.
 pub fn fp_bytes(mut h: u64, bytes: &[u8]) -> u64 {
     for &b in bytes {
         h ^= b as u64;

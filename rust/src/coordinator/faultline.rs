@@ -1,0 +1,383 @@
+//! Deterministic fault-injection plans for crash-safety testing.
+//!
+//! A *fault plan* is a comma-separated list of triggers, each naming an
+//! injection **site** wired into the persist / serve / fleet I/O paths,
+//! a fault **kind**, and the 1-based hit **count** at which it fires:
+//!
+//! ```text
+//! plan    := trigger (',' trigger)*
+//! trigger := site ':' kind '@' ['item'] count
+//! ```
+//!
+//! e.g. `persist.write:torn@1`, `net.read:reset@7,node.item:crash@2`.
+//! The optional `item` prefix on the count is cosmetic (reads naturally
+//! for per-item sites: `fleet.item:crash@item12`).
+//!
+//! Sites (each keeps its own process-wide hit counter):
+//!
+//! | site            | consulted                                            |
+//! |-----------------|------------------------------------------------------|
+//! | `persist.write` | once per atomic cache-snapshot write                 |
+//! | `journal.write` | once per journal frame append                        |
+//! | `net.read`      | every read on a fault-wrapped connection             |
+//! | `net.write`     | every write on a fault-wrapped connection            |
+//! | `node.item`     | serve side, at the start of each sweep request       |
+//! | `fleet.item`    | coordinator side, after journaling an item completion|
+//!
+//! Kinds: `fail` (synthetic I/O error), `torn` (write a prefix of the
+//! payload, then error), `short` (premature EOF on read / broken pipe
+//! after a half write), `reset` (connection reset), `stall` (sleep
+//! [`STALL_MS`] ms, then proceed normally), `crash`
+//! (`std::process::abort()` — the moral equivalent of SIGKILL: no
+//! destructors, no flush).
+//!
+//! The plan is installed process-wide from `SPEED_FAULT_PLAN` or
+//! `--fault-plan` (see `main.rs`). Injection is compiled in
+//! unconditionally but **inert** when no plan is set: every consult is
+//! a single relaxed atomic load. Counters make plans deterministic —
+//! the same plan over the same workload fires at the same operation
+//! every run, which is what lets CI pin recovery behaviour to exact
+//! byte-identical outputs.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::error::{Error, Result};
+
+/// How long a `stall` fault sleeps before letting the operation
+/// proceed. Fixed (not configurable per trigger) so stalled-reply
+/// scenarios stay single-command: pick client/fleet timeouts below or
+/// above 2 s to decide whether the stall is fatal.
+pub const STALL_MS: u64 = 2000;
+
+/// What a trigger injects when its site's hit counter reaches `at`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Return a synthetic I/O error without touching the operation.
+    Fail,
+    /// Premature EOF: reads return `Ok(0)`; writes write half the
+    /// buffer then fail with `BrokenPipe`.
+    Short,
+    /// Write a prefix of the payload, then return an error (torn
+    /// write). On reads, behaves like `short`.
+    Torn,
+    /// `ConnectionReset` error.
+    Reset,
+    /// Sleep [`STALL_MS`] ms, then let the operation proceed normally.
+    Stall,
+    /// `std::process::abort()` — simulates SIGKILL (no destructors).
+    Crash,
+}
+
+impl FaultKind {
+    fn parse(s: &str) -> Option<FaultKind> {
+        Some(match s {
+            "fail" => FaultKind::Fail,
+            "torn" => FaultKind::Torn,
+            "short" => FaultKind::Short,
+            "reset" => FaultKind::Reset,
+            "stall" => FaultKind::Stall,
+            "crash" => FaultKind::Crash,
+            _ => return None,
+        })
+    }
+}
+
+/// One parsed trigger: fire `kind` on the `at`-th hit of `site`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Trigger {
+    pub site: String,
+    pub kind: FaultKind,
+    /// 1-based hit count at which the trigger fires (exactly once).
+    pub at: u64,
+}
+
+/// A parsed fault plan plus its per-site hit counters.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    triggers: Vec<Trigger>,
+    counters: HashMap<String, u64>,
+}
+
+impl FaultPlan {
+    /// Parse a plan string (see module docs for the grammar). Empty
+    /// strings parse to an empty (never-firing) plan.
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut triggers = Vec::new();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (site, rest) = part
+                .split_once(':')
+                .ok_or_else(|| bad_plan(part, "expected site:kind@count"))?;
+            let (kind, count) = rest
+                .split_once('@')
+                .ok_or_else(|| bad_plan(part, "expected site:kind@count"))?;
+            let kind = FaultKind::parse(kind)
+                .ok_or_else(|| bad_plan(part, "unknown fault kind"))?;
+            let digits = count.strip_prefix("item").unwrap_or(count);
+            let at: u64 = digits
+                .parse()
+                .ok()
+                .filter(|&n| n >= 1)
+                .ok_or_else(|| bad_plan(part, "count must be a positive integer"))?;
+            if site.is_empty() {
+                return Err(bad_plan(part, "empty site"));
+            }
+            triggers.push(Trigger { site: site.to_string(), kind, at });
+        }
+        Ok(FaultPlan { triggers, counters: HashMap::new() })
+    }
+
+    /// Record one hit of `site` and return the fault to inject, if any
+    /// trigger matches the new count.
+    fn hit(&mut self, site: &str) -> Option<FaultKind> {
+        if !self.triggers.iter().any(|t| t.site == site) {
+            return None;
+        }
+        let n = self.counters.entry(site.to_string()).or_insert(0);
+        *n += 1;
+        let n = *n;
+        self.triggers.iter().find(|t| t.site == site && t.at == n).map(|t| t.kind)
+    }
+}
+
+fn bad_plan(part: &str, why: &str) -> Error {
+    Error::runtime(format!("fault plan: bad trigger {part:?}: {why}"))
+}
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+
+fn state() -> &'static Mutex<Option<FaultPlan>> {
+    static STATE: OnceLock<Mutex<Option<FaultPlan>>> = OnceLock::new();
+    STATE.get_or_init(|| Mutex::new(None))
+}
+
+/// Install `plan` process-wide (replacing any previous plan and
+/// resetting all hit counters). An empty plan string uninstalls.
+pub fn install(plan: &str) -> Result<()> {
+    let parsed = FaultPlan::parse(plan)?;
+    let active = !parsed.triggers.is_empty();
+    let mut g = state().lock().unwrap_or_else(|p| p.into_inner());
+    *g = if active { Some(parsed) } else { None };
+    // Flip the fast-path flag only while holding the lock so a
+    // concurrent consult never observes ACTIVE without a plan.
+    ACTIVE.store(active, Ordering::Release);
+    Ok(())
+}
+
+/// Remove the installed plan (tests). Counters are discarded.
+pub fn clear() {
+    let mut g = state().lock().unwrap_or_else(|p| p.into_inner());
+    ACTIVE.store(false, Ordering::Release);
+    *g = None;
+}
+
+/// True when a plan with at least one trigger is installed.
+pub fn active() -> bool {
+    ACTIVE.load(Ordering::Acquire)
+}
+
+/// Record one hit of `site` against the installed plan. Returns the
+/// fault to inject, or `None`. This is the single consult point every
+/// injection site goes through; when no plan is installed it is one
+/// relaxed atomic load.
+pub fn hit(site: &str) -> Option<FaultKind> {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return None;
+    }
+    let mut g = state().lock().unwrap_or_else(|p| p.into_inner());
+    g.as_mut().and_then(|p| p.hit(site))
+}
+
+/// Consult `site` for a *control-point* fault (no byte stream to
+/// corrupt): `crash` aborts the process, `stall` sleeps, every other
+/// kind maps to a synthetic error the caller propagates.
+pub fn control_point(site: &str) -> io::Result<()> {
+    match hit(site) {
+        None => Ok(()),
+        Some(FaultKind::Crash) => std::process::abort(),
+        Some(FaultKind::Stall) => {
+            std::thread::sleep(std::time::Duration::from_millis(STALL_MS));
+            Ok(())
+        }
+        Some(k) => Err(io_fault(site, k)),
+    }
+}
+
+fn io_fault(site: &str, kind: FaultKind) -> io::Error {
+    let ek = match kind {
+        FaultKind::Reset => io::ErrorKind::ConnectionReset,
+        FaultKind::Short | FaultKind::Torn => io::ErrorKind::BrokenPipe,
+        _ => io::ErrorKind::Other,
+    };
+    io::Error::new(ek, format!("fault injected: {site} {kind:?}"))
+}
+
+/// Consult `site` for a buffered write of `bytes` to `w`: on `torn`,
+/// writes `bytes[..len/2]` and errors; on `crash`, aborts; on `stall`,
+/// sleeps then writes normally. Returns `Ok(true)` when the caller
+/// should proceed with the (full) write itself — i.e. no fault, or a
+/// stall that already elapsed.
+pub(crate) fn faulted_write(site: &str, w: &mut impl Write, bytes: &[u8]) -> io::Result<bool> {
+    match hit(site) {
+        None => Ok(true),
+        Some(FaultKind::Crash) => std::process::abort(),
+        Some(FaultKind::Stall) => {
+            std::thread::sleep(std::time::Duration::from_millis(STALL_MS));
+            Ok(true)
+        }
+        Some(FaultKind::Torn) | Some(FaultKind::Short) => {
+            w.write_all(&bytes[..bytes.len() / 2])?;
+            w.flush()?;
+            Err(io_fault(site, FaultKind::Torn))
+        }
+        Some(k) => Err(io_fault(site, k)),
+    }
+}
+
+/// A `Read + Write` wrapper that consults the `net.read` / `net.write`
+/// sites on every call. Wrapped around serve session streams and fleet
+/// `NodeConn` streams; one relaxed atomic load per call when inert.
+#[derive(Debug)]
+pub struct FaultStream<S> {
+    inner: S,
+}
+
+impl<S> FaultStream<S> {
+    pub fn new(inner: S) -> FaultStream<S> {
+        FaultStream { inner }
+    }
+
+    pub fn get_ref(&self) -> &S {
+        &self.inner
+    }
+}
+
+impl<S: Read> Read for FaultStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match hit("net.read") {
+            None => self.inner.read(buf),
+            Some(FaultKind::Crash) => std::process::abort(),
+            Some(FaultKind::Stall) => {
+                std::thread::sleep(std::time::Duration::from_millis(STALL_MS));
+                self.inner.read(buf)
+            }
+            // A short (or torn) read is a premature-EOF: the peer's
+            // line never completes.
+            Some(FaultKind::Short) | Some(FaultKind::Torn) => Ok(0),
+            Some(k) => Err(io_fault("net.read", k)),
+        }
+    }
+}
+
+impl<S: Write> Write for FaultStream<S> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match hit("net.write") {
+            None => self.inner.write(buf),
+            Some(FaultKind::Crash) => std::process::abort(),
+            Some(FaultKind::Stall) => {
+                std::thread::sleep(std::time::Duration::from_millis(STALL_MS));
+                self.inner.write(buf)
+            }
+            Some(FaultKind::Torn) | Some(FaultKind::Short) => {
+                let half = buf.len() / 2;
+                if half > 0 {
+                    let _ = self.inner.write(&buf[..half]);
+                    let _ = self.inner.flush();
+                }
+                Err(io_fault("net.write", FaultKind::Torn))
+            }
+            Some(k) => Err(io_fault("net.write", k)),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_documented_grammar() {
+        let p = FaultPlan::parse("persist.write:torn@3, net.read:reset@7,node.item:crash@item12")
+            .expect("parse");
+        assert_eq!(
+            p.triggers,
+            vec![
+                Trigger { site: "persist.write".into(), kind: FaultKind::Torn, at: 3 },
+                Trigger { site: "net.read".into(), kind: FaultKind::Reset, at: 7 },
+                Trigger { site: "node.item".into(), kind: FaultKind::Crash, at: 12 },
+            ]
+        );
+        assert!(FaultPlan::parse("").expect("empty ok").triggers.is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_triggers() {
+        for bad in [
+            "persist.write",          // no kind
+            "persist.write:torn",     // no count
+            "persist.write:melt@3",   // unknown kind
+            "persist.write:torn@0",   // counts are 1-based
+            "persist.write:torn@x",   // not a number
+            ":torn@3",                // empty site
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn counters_fire_each_trigger_exactly_once_at_its_count() {
+        let mut p = FaultPlan::parse("a.b:fail@2,a.b:reset@4,c.d:stall@1").expect("parse");
+        assert_eq!(p.hit("a.b"), None); // hit 1
+        assert_eq!(p.hit("a.b"), Some(FaultKind::Fail)); // hit 2
+        assert_eq!(p.hit("a.b"), None); // hit 3
+        assert_eq!(p.hit("a.b"), Some(FaultKind::Reset)); // hit 4
+        assert_eq!(p.hit("a.b"), None); // hit 5: all spent
+        assert_eq!(p.hit("c.d"), Some(FaultKind::Stall)); // independent counter
+        assert_eq!(p.hit("unlisted.site"), None);
+    }
+
+    #[test]
+    fn unlisted_sites_never_touch_counters() {
+        let mut p = FaultPlan::parse("a.b:fail@1").expect("parse");
+        for _ in 0..10 {
+            assert_eq!(p.hit("x.y"), None);
+        }
+        assert!(p.counters.is_empty(), "unlisted sites must not allocate counters");
+        assert_eq!(p.hit("a.b"), Some(FaultKind::Fail));
+    }
+
+    // The one test that touches process-global state: it only ever
+    // names sites that no production code consults, so it cannot
+    // perturb unit tests running concurrently in this binary.
+    #[test]
+    fn global_install_hit_and_clear() {
+        assert_eq!(hit("faultline.test.site"), None, "inert before install");
+        install("faultline.test.site:fail@2").expect("install");
+        assert!(active());
+        assert_eq!(hit("faultline.test.site"), None);
+        assert_eq!(hit("faultline.test.site"), Some(FaultKind::Fail));
+        install("").expect("empty plan uninstalls");
+        assert!(!active());
+        assert_eq!(hit("faultline.test.site"), None);
+        clear();
+    }
+
+    #[test]
+    fn fault_stream_is_transparent_when_inert() {
+        let data = b"hello world".to_vec();
+        let mut r = FaultStream::new(&data[..]);
+        let mut out = Vec::new();
+        r.read_to_end(&mut out).expect("read");
+        assert_eq!(out, data);
+        let mut w = FaultStream::new(Vec::new());
+        w.write_all(b"abc").expect("write");
+        w.flush().expect("flush");
+        assert_eq!(w.get_ref(), &b"abc".to_vec());
+    }
+}

@@ -51,6 +51,20 @@
 //! executes zero simulations. Exchange failures are non-fatal (the
 //! exchange is an optimization; parity never depends on it).
 //!
+//! # Crash safety
+//!
+//! With [`FleetOptions::journal`] set, the coordinator write-ahead
+//! journals (`SPEEDSWJ`, [`super::journal`]) a `FleetPlan` identity
+//! frame at start and one `FleetItem` frame per completed item — the
+//! node's exact reply lines, fsync'd before the completion is visible
+//! in memory. A coordinator killed mid-sweep reruns with
+//! [`FleetOptions::resume`]: finished items replay from disk
+//! byte-identically and only unfinished work is dispatched. A journal
+//! covering every item makes the resumed run a pure replay with zero
+//! node transactions. Resume refuses (and recreates) a journal whose
+//! plan frame does not match the request, so stale state can never
+//! masquerade as results.
+//!
 //! # Parity contract
 //!
 //! Bit-identical-to-local is the contract: the assembled `block`
@@ -70,7 +84,11 @@ use std::sync::Mutex;
 use std::thread;
 use std::time::{Duration, Instant};
 
-use super::backend::{blob_fingerprint, by_name, config_fingerprint, CachedSummary, SimBackend};
+use super::backend::{
+    blob_fingerprint, by_name, config_fingerprint, fp_bytes, CachedSummary, SimBackend, FP_SEED,
+};
+use super::faultline;
+use super::journal::{Journal, Record};
 use super::persist;
 use super::serve::{hex_decode, hex_encode, parse_record, quote, Op, Request, Value};
 use super::sweep::{wavefront_order, CachedSim, SimKey};
@@ -111,6 +129,17 @@ pub struct FleetOptions {
     /// the sweep (on by default; scheduling/warmth only — parity never
     /// depends on it).
     pub cache_exchange: bool,
+    /// Write-ahead journal (`SPEEDSWJ`) path for coordinator crash
+    /// recovery: every completed item is journaled as it lands, so a
+    /// killed coordinator rerun with [`FleetOptions::resume`] replays
+    /// finished items from disk instead of re-dispatching them.
+    /// `None` = journaling off.
+    pub journal: Option<String>,
+    /// Resume from `journal` if it exists and its plan frame matches
+    /// this request (same request line, same item count); otherwise
+    /// start fresh with a notice. A journal covering every item makes
+    /// the resumed run a pure replay — zero node transactions.
+    pub resume: bool,
 }
 
 impl FleetOptions {
@@ -127,6 +156,8 @@ impl FleetOptions {
             max_node_failures: 3,
             backoff_base_ms: 50,
             cache_exchange: true,
+            journal: None,
+            resume: false,
         }
     }
 }
@@ -151,6 +182,10 @@ pub struct NodeReport {
     pub busy_ms: u64,
     /// Slowest successful item on this node — its critical-path floor.
     pub max_item_ms: u64,
+    /// Per-item wall-clock samples for every successful item, in
+    /// completion order (the raw series behind the `p50_item_ms` /
+    /// `p95_item_ms` fields of [`node_line`]).
+    pub item_ms: Vec<u64>,
     /// Records (memo + delta + summary) pulled from this node by cache
     /// exchange.
     pub pulled_entries: u64,
@@ -185,10 +220,25 @@ pub struct FleetOutcome {
     pub nodes: Vec<NodeReport>,
 }
 
+/// Nearest-rank p50/p95 over latency samples (`(0, 0)` when empty).
+fn percentiles(samples: &[u64]) -> (u64, u64) {
+    if samples.is_empty() {
+        return (0, 0);
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_unstable();
+    let rank = |p: u64| {
+        let idx = (p * sorted.len() as u64).div_ceil(100).max(1) as usize - 1;
+        sorted[idx.min(sorted.len() - 1)]
+    };
+    (rank(50), rank(95))
+}
+
 /// One `node` telemetry record of the fleet reply.
 pub fn node_line(r: &NodeReport) -> String {
+    let (p50, p95) = percentiles(&r.item_ms);
     format!(
-        "{{\"type\":\"node\",\"addr\":{},\"items\":{},\"failures\":{},\"overloads\":{},\"dead\":{},\"busy_ms\":{},\"max_item_ms\":{},\"pulled_entries\":{},\"pushed_entries\":{}}}",
+        "{{\"type\":\"node\",\"addr\":{},\"items\":{},\"failures\":{},\"overloads\":{},\"dead\":{},\"busy_ms\":{},\"max_item_ms\":{},\"p50_item_ms\":{p50},\"p95_item_ms\":{p95},\"pulled_entries\":{},\"pushed_entries\":{}}}",
         quote(&r.addr),
         r.items_done,
         r.failures,
@@ -203,8 +253,13 @@ pub fn node_line(r: &NodeReport) -> String {
 
 /// The terminal `fleet_summary` record of the fleet reply.
 pub fn fleet_summary_line(id: u64, out: &FleetOutcome) -> String {
+    let mut all: Vec<u64> = Vec::new();
+    for n in &out.nodes {
+        all.extend_from_slice(&n.item_ms);
+    }
+    let (p50, p95) = percentiles(&all);
     format!(
-        "{{\"type\":\"fleet_summary\",\"id\":{id},\"jobs\":{},\"sims\":{},\"cache_hits\":{},\"dedup_hits\":{},\"coalesced\":{},\"requeues\":{},\"nodes\":{},\"dead_nodes\":{},\"elapsed_ms\":{}}}",
+        "{{\"type\":\"fleet_summary\",\"id\":{id},\"jobs\":{},\"sims\":{},\"cache_hits\":{},\"dedup_hits\":{},\"coalesced\":{},\"requeues\":{},\"nodes\":{},\"dead_nodes\":{},\"p50_item_ms\":{p50},\"p95_item_ms\":{p95},\"elapsed_ms\":{}}}",
         out.jobs,
         out.sims,
         out.cache_hits,
@@ -316,6 +371,9 @@ struct ItemReply {
     cache_hits: u64,
     dedup_hits: u64,
     coalesced: u64,
+    /// The node's raw terminal `summary` line, journaled verbatim so a
+    /// resumed coordinator replays byte-identical reply material.
+    summary_line: String,
 }
 
 /// Scheduler state shared by every node thread.
@@ -326,6 +384,9 @@ struct FleetState {
     remaining: usize,
     requeues: u64,
     fatal: Option<Error>,
+    /// Coordinator write-ahead journal; completions append under the
+    /// state lock so the on-disk record order is the completion order.
+    journal: Option<Journal>,
 }
 
 fn lock_state(state: &Mutex<FleetState>) -> std::sync::MutexGuard<'_, FleetState> {
@@ -355,7 +416,13 @@ fn get_str<'a>(fields: &'a [(String, Value)], name: &str) -> Option<&'a str> {
 struct NodeConn {
     addr: String,
     timeout: Duration,
-    stream: Option<(BufReader<TcpStream>, TcpStream)>,
+    /// Both halves route through the fault-injection layer so a
+    /// `net.read` / `net.write` plan on the coordinator exercises
+    /// resets, short reads and stalls against real node sockets.
+    stream: Option<(
+        BufReader<faultline::FaultStream<TcpStream>>,
+        faultline::FaultStream<TcpStream>,
+    )>,
 }
 
 impl NodeConn {
@@ -375,7 +442,10 @@ impl NodeConn {
                     s.set_read_timeout(Some(self.timeout))?;
                     s.set_write_timeout(Some(self.timeout))?;
                     let read_half = s.try_clone()?;
-                    self.stream = Some((BufReader::new(read_half), s));
+                    self.stream = Some((
+                        BufReader::new(faultline::FaultStream::new(read_half)),
+                        faultline::FaultStream::new(s),
+                    ));
                     return Ok(());
                 }
                 Err(e) => last = Some(e),
@@ -473,6 +543,7 @@ fn run_item(conn: &mut NodeConn, req: &Request) -> std::result::Result<ItemReply
                     dedup_hits: n("dedup_hits"),
                     coalesced: n("coalesced"),
                     blocks,
+                    summary_line: line.clone(),
                 };
                 if reply.jobs != reply.blocks.len() as u64 {
                     return Err(ItemError::Retry {
@@ -587,10 +658,34 @@ fn node_worker(
                 report.items_done += 1;
                 report.busy_ms += ms;
                 report.max_item_ms = report.max_item_ms.max(ms);
+                report.item_ms.push(ms);
                 consecutive = 0;
-                let mut st = lock_state(state);
-                st.results[item] = Some(reply);
-                st.remaining -= 1;
+                {
+                    let mut st = lock_state(state);
+                    if let Some(j) = st.journal.as_mut() {
+                        // Journal the completion before recording it
+                        // in memory: a coordinator killed past this
+                        // point resumes without re-dispatching.
+                        let mut lines = reply.blocks.clone();
+                        lines.push(reply.summary_line.clone());
+                        let rec = Record::FleetItem { item: item as u64, lines };
+                        if let Err(e) = j.append(&rec) {
+                            eprintln!(
+                                "warning: fleet journal append failed at {}: {e}",
+                                j.path().display()
+                            );
+                        }
+                    }
+                    st.results[item] = Some(reply);
+                    st.remaining -= 1;
+                }
+                // Deterministic fault injection: a `fleet.item` trigger
+                // fires after the completion is journaled — `crash`
+                // aborts the coordinator mid-run so the chaos tests can
+                // prove `--resume` picks up from the journal; `stall`
+                // sleeps; the I/O kinds are ignored here (the
+                // completion already landed).
+                let _ = faultline::control_point("fleet.item");
             }
             Err(ItemError::Fatal(e)) => {
                 let mut st = lock_state(state);
@@ -744,6 +839,87 @@ fn exchange_caches(
     }
 }
 
+/// Identity of one fleet plan: fingerprint of the request line (id
+/// zeroed — a resumed run may retag) plus the planned item count.
+/// Written as the journal's `FleetPlan` frame and checked on resume.
+fn plan_fingerprint(req: &Request, n_items: usize) -> u64 {
+    let mut canonical = req.clone();
+    canonical.id = 0;
+    let mut bytes = canonical.to_line().into_bytes();
+    bytes.extend_from_slice(&(n_items as u64).to_le_bytes());
+    fp_bytes(FP_SEED, &bytes)
+}
+
+/// Rebuild an [`ItemReply`] from journaled reply lines (blocks then
+/// the terminal summary). `None` — the item is treated as not done —
+/// if the material does not hold together.
+fn reply_from_lines(lines: &[String]) -> Option<ItemReply> {
+    let (summary_line, blocks) = lines.split_last()?;
+    let fields = parse_record(summary_line).ok()?;
+    if get_str(&fields, "type")? != "summary" {
+        return None;
+    }
+    let n = |name: &str| get_u64(&fields, name).unwrap_or(0);
+    let reply = ItemReply {
+        jobs: n("jobs"),
+        sims: n("sims"),
+        cache_hits: n("cache_hits"),
+        dedup_hits: n("dedup_hits"),
+        coalesced: n("coalesced"),
+        blocks: blocks.to_vec(),
+        summary_line: summary_line.clone(),
+    };
+    (reply.jobs == reply.blocks.len() as u64).then_some(reply)
+}
+
+/// Open the coordinator journal per the options: a fresh journal
+/// stamped with this plan's identity frame, or — on resume — the
+/// existing journal replayed into per-item results. A missing or
+/// plan-mismatched journal on resume degrades to a fresh start with a
+/// notice, never an error: the worst case is recomputing.
+fn setup_journal(
+    opts: &FleetOptions,
+    plan_fp: u64,
+    n_items: usize,
+) -> Result<(Option<Journal>, Vec<Option<ItemReply>>)> {
+    let mut resumed: Vec<Option<ItemReply>> = (0..n_items).map(|_| None).collect();
+    let Some(jpath) = &opts.journal else {
+        return Ok((None, resumed));
+    };
+    if opts.resume && std::path::Path::new(jpath).exists() {
+        let (journal, records) = Journal::open_or_recover(jpath, 1)?;
+        let mut plan_ok = false;
+        for rec in &records {
+            match rec {
+                Record::FleetPlan { fp, items } => {
+                    plan_ok = *fp == plan_fp && *items == n_items as u64;
+                    if !plan_ok {
+                        break;
+                    }
+                }
+                Record::FleetItem { item, lines } if plan_ok => {
+                    let i = *item as usize;
+                    if i < n_items {
+                        resumed[i] = reply_from_lines(lines);
+                    }
+                }
+                _ => {}
+            }
+        }
+        if plan_ok {
+            return Ok((Some(journal), resumed));
+        }
+        eprintln!("fleet: journal {jpath}: belongs to a different plan; starting fresh");
+        resumed.iter_mut().for_each(|r| *r = None);
+        drop(journal);
+    } else if opts.resume {
+        eprintln!("fleet: journal {jpath}: not found; starting fresh");
+    }
+    let mut journal = Journal::create(jpath, 1)?;
+    journal.append(&Record::FleetPlan { fp: plan_fp, items: n_items as u64 })?;
+    Ok((Some(journal), resumed))
+}
+
 /// Run one sweep request across the fleet. Returns the assembled
 /// outcome; the caller (the `speed fleet` subcommand or a test)
 /// prints the `block`/`node`/`fleet_summary` lines.
@@ -770,13 +946,23 @@ pub fn run_fleet(opts: &FleetOptions) -> Result<FleetOutcome> {
     }
 
     let n_items = plan.items.len();
+    let plan_fp = plan_fingerprint(&opts.request, n_items);
+    let (journal, resumed) = setup_journal(opts, plan_fp, n_items)?;
+    let resumed_count = resumed.iter().filter(|r| r.is_some()).count();
+    if resumed_count > 0 {
+        eprintln!(
+            "fleet: journal {}: resumed {resumed_count}/{n_items} completed item(s)",
+            opts.journal.as_deref().unwrap_or("?")
+        );
+    }
     let state = Mutex::new(FleetState {
-        queue: plan.order.iter().copied().collect(),
+        queue: plan.order.iter().copied().filter(|&i| resumed[i].is_none()).collect(),
         attempts: vec![0; n_items],
-        results: (0..n_items).map(|_| None).collect(),
-        remaining: n_items,
+        remaining: n_items - resumed_count,
+        results: resumed,
         requeues: 0,
         fatal: None,
+        journal,
     });
     let abort = AtomicBool::new(false);
     let live_nodes = AtomicUsize::new(opts.nodes.len());
@@ -811,6 +997,7 @@ pub fn run_fleet(opts: &FleetOptions) -> Result<FleetOutcome> {
         r.dead |= w.dead;
         r.busy_ms += w.busy_ms;
         r.max_item_ms = r.max_item_ms.max(w.max_item_ms);
+        r.item_ms.extend(w.item_ms);
     }
 
     let st = state.into_inner().unwrap_or_else(|p| p.into_inner());
@@ -907,6 +1094,46 @@ mod tests {
         let mut seen = plan.order.clone();
         seen.sort_unstable();
         assert_eq!(seen, (0..plan.items.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn percentiles_use_nearest_rank() {
+        assert_eq!(percentiles(&[]), (0, 0));
+        assert_eq!(percentiles(&[7]), (7, 7));
+        assert_eq!(percentiles(&[1, 2]), (1, 2));
+        // 100 samples 1..=100: p50 = 50th value, p95 = 95th value.
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentiles(&v), (50, 95));
+        // Unsorted input is sorted on a copy, not in place.
+        assert_eq!(percentiles(&[30, 10, 20]), (20, 30));
+    }
+
+    #[test]
+    fn plan_fingerprint_ignores_request_id_only() {
+        let a = Request { id: 1, network: "SqueezeNet".into(), ..Default::default() };
+        let b = Request { id: 99, ..a.clone() };
+        assert_eq!(plan_fingerprint(&a, 4), plan_fingerprint(&b, 4));
+        assert_ne!(plan_fingerprint(&a, 4), plan_fingerprint(&a, 5));
+        let c = Request { network: "AlexNet".into(), ..a.clone() };
+        assert_ne!(plan_fingerprint(&a, 4), plan_fingerprint(&c, 4));
+    }
+
+    #[test]
+    fn reply_from_lines_round_trips_and_rejects_mismatches() {
+        let block = "{\"type\":\"block\",\"id\":3,\"cycles\":42}".to_string();
+        let summary = "{\"type\":\"summary\",\"id\":3,\"jobs\":1,\"sims\":1,\
+                       \"cache_hits\":0,\"dedup_hits\":0,\"coalesced\":0}"
+            .to_string();
+        let reply = reply_from_lines(&[block.clone(), summary.clone()]).unwrap();
+        assert_eq!(reply.blocks, vec![block.clone()]);
+        assert_eq!(reply.jobs, 1);
+        assert_eq!(reply.sims, 1);
+        assert_eq!(reply.summary_line, summary);
+        // Job/block count mismatch, missing summary, empty material:
+        // all read as "not done", never as bogus results.
+        assert!(reply_from_lines(&[summary.clone()]).is_none());
+        assert!(reply_from_lines(&[block.clone(), block.clone()]).is_none());
+        assert!(reply_from_lines(&[]).is_none());
     }
 
     #[test]

@@ -1,0 +1,607 @@
+//! `SPEEDSWJ` — the append-only write-ahead journal that makes sweep
+//! state crash-safe.
+//!
+//! The snapshot format (`SPEEDSWC`, see `persist.rs`) is all-or-nothing
+//! by design: great for integrity, useless for a node that is SIGKILL'd
+//! between flushes. The journal closes that gap: every published memo
+//! cell, converged delta and program summary is appended as one
+//! CRC-framed record the moment it is published, fsync'd on a
+//! configurable cadence. On startup the engine replays the journal over
+//! the last good snapshot, **truncating at the first bad frame** — a
+//! torn tail (the expected result of dying mid-append) costs exactly
+//! the torn records, never the file. The fleet coordinator reuses the
+//! same container to journal item completions (`speed fleet --resume`).
+//!
+//! Layout:
+//!
+//! ```text
+//! magic     8 B   b"SPEEDSWJ"
+//! version   4 B   u32 LE (currently 1)
+//! frames    *     until EOF, each:
+//!   kind    1 B   record kind (see below)
+//!   len     4 B   u32 LE payload length
+//!   payload len B
+//!   crc     8 B   u64 LE FNV-1a over kind + len + payload
+//! ```
+//!
+//! Header: 12 bytes. Frame overhead: 13 bytes. Record kinds and their
+//! payloads:
+//!
+//! | kind | record          | payload                                      |
+//! |------|-----------------|----------------------------------------------|
+//! | 1    | memo cell       | one 226-byte `SPEEDSWC` memo entry           |
+//! | 2    | delta           | one `SPEEDSWC` delta record                  |
+//! | 3    | summary         | one `SPEEDSWC` summary record                |
+//! | 4    | fleet item      | item u64, n_lines u64, (len u64, utf-8)…     |
+//! | 5    | fleet plan      | plan fingerprint u64, item count u64         |
+//!
+//! Kinds 1–3 reuse the snapshot wire forms byte for byte
+//! (`persist::encode_entry` & co.), so a journaled record can never
+//! diverge from the snapshot encoding of the same state.
+//!
+//! Replay rules (in order, per frame): incomplete frame header, payload
+//! length above [`MAX_PAYLOAD_BYTES`], truncated payload/CRC, CRC
+//! mismatch, unknown kind, or a payload its kind's decoder rejects —
+//! any of these stops replay *at the frame boundary*; everything before
+//! is applied, the file is truncated to the last good frame, and
+//! appending resumes there. Replay is total: never a panic, never a
+//! partially-applied frame.
+//!
+//! Compaction: a successful atomic snapshot write
+//! ([`write_bytes_atomic`], tmp + `sync_all` + rename) makes every
+//! journaled record redundant, so `SweepEngine::save_cache` truncates
+//! the journal back to its 12-byte header under the journal lock.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use super::backend::{fp_bytes, CachedSummary, FP_SEED};
+use super::faultline;
+use super::persist;
+use super::sweep::{CachedSim, SimKey};
+use crate::core::CachedDelta;
+use crate::error::{Error, Result};
+
+pub(crate) const MAGIC: &[u8; 8] = b"SPEEDSWJ";
+pub(crate) const VERSION: u32 = 1;
+pub(crate) const HEADER_BYTES: usize = 8 + 4;
+/// kind (1) + len (4) + crc (8).
+pub(crate) const FRAME_OVERHEAD: usize = 13;
+/// Upper bound on a single frame payload. Far above any real record
+/// (the largest are program summaries, a few KiB); a corrupt length
+/// field must not feed a bogus allocation.
+pub(crate) const MAX_PAYLOAD_BYTES: usize = 1 << 26;
+
+fn err(msg: impl Into<String>) -> Error {
+    Error::runtime(format!("sweep journal: {}", msg.into()))
+}
+
+/// One journal record. Kinds 1–3 carry engine cache state; kinds 4–5
+/// belong to the fleet coordinator's resume protocol.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum Record {
+    /// A published memo cell (kind 1).
+    Memo(SimKey, CachedSim),
+    /// A converged delta (kind 2).
+    Delta(u64, CachedDelta),
+    /// A program summary with its trust flag (kind 3). Trust upgrades
+    /// re-append: replay order makes the later (trusted) record win.
+    Summary(u64, CachedSummary),
+    /// A completed fleet item: plan index + the exact reply lines
+    /// (blocks then summary) the node produced (kind 4).
+    FleetItem { item: u64, lines: Vec<String> },
+    /// The identity of the fleet sweep this journal belongs to (kind
+    /// 5): fingerprint of the request line plus the planned item
+    /// count. `--resume` refuses a journal bound to a different plan.
+    FleetPlan { fp: u64, items: u64 },
+}
+
+impl Record {
+    fn kind(&self) -> u8 {
+        match self {
+            Record::Memo(..) => 1,
+            Record::Delta(..) => 2,
+            Record::Summary(..) => 3,
+            Record::FleetItem { .. } => 4,
+            Record::FleetPlan { .. } => 5,
+        }
+    }
+
+    fn payload(&self) -> Vec<u8> {
+        match self {
+            Record::Memo(k, v) => persist::encode_entry(k, v),
+            Record::Delta(k, d) => persist::encode_delta_record(*k, d),
+            Record::Summary(k, s) => persist::encode_summary_record(*k, s),
+            Record::FleetItem { item, lines } => {
+                let mut out = Vec::new();
+                out.extend_from_slice(&item.to_le_bytes());
+                out.extend_from_slice(&(lines.len() as u64).to_le_bytes());
+                for l in lines {
+                    out.extend_from_slice(&(l.len() as u64).to_le_bytes());
+                    out.extend_from_slice(l.as_bytes());
+                }
+                out
+            }
+            Record::FleetPlan { fp, items } => {
+                let mut out = Vec::with_capacity(16);
+                out.extend_from_slice(&fp.to_le_bytes());
+                out.extend_from_slice(&items.to_le_bytes());
+                out
+            }
+        }
+    }
+
+    fn decode(kind: u8, payload: &[u8]) -> Result<Record> {
+        fn u64_at(b: &[u8], pos: &mut usize) -> Result<u64> {
+            let s = b
+                .get(*pos..*pos + 8)
+                .ok_or_else(|| err("truncated record payload"))?;
+            *pos += 8;
+            Ok(u64::from_le_bytes(s.try_into().expect("8 bytes")))
+        }
+        match kind {
+            1 => persist::decode_entry(payload).map(|(k, v)| Record::Memo(k, v)),
+            2 => persist::decode_delta_record(payload).map(|(k, d)| Record::Delta(k, d)),
+            3 => persist::decode_summary_record(payload).map(|(k, s)| Record::Summary(k, s)),
+            4 => {
+                let mut pos = 0;
+                let item = u64_at(payload, &mut pos)?;
+                let n_lines = u64_at(payload, &mut pos)? as usize;
+                let mut lines = Vec::new();
+                for _ in 0..n_lines {
+                    let n = u64_at(payload, &mut pos)? as usize;
+                    let s = payload
+                        .get(pos..pos.checked_add(n).ok_or_else(|| err("line length overflows"))?)
+                        .ok_or_else(|| err("truncated item line"))?;
+                    pos += n;
+                    lines.push(
+                        std::str::from_utf8(s)
+                            .map_err(|_| err("item line is not utf-8"))?
+                            .to_string(),
+                    );
+                }
+                if pos != payload.len() {
+                    return Err(err("trailing bytes after item record"));
+                }
+                Ok(Record::FleetItem { item, lines })
+            }
+            5 => {
+                if payload.len() != 16 {
+                    return Err(err("bad plan record length"));
+                }
+                let mut pos = 0;
+                let fp = u64_at(payload, &mut pos)?;
+                let items = u64_at(payload, &mut pos)?;
+                Ok(Record::FleetPlan { fp, items })
+            }
+            k => Err(err(format!("unknown record kind {k}"))),
+        }
+    }
+}
+
+/// Serialize one frame: kind + len + payload + CRC.
+fn frame(rec: &Record) -> Vec<u8> {
+    let payload = rec.payload();
+    let mut out = Vec::with_capacity(FRAME_OVERHEAD + payload.len());
+    out.push(rec.kind());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    let crc = fp_bytes(FP_SEED, &out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Replay result: the records of every intact frame, in append order,
+/// plus the byte length of the valid prefix (header + intact frames) —
+/// the offset recovery truncates to.
+#[derive(Debug, Default)]
+pub(crate) struct Replay {
+    pub records: Vec<Record>,
+    pub valid_len: usize,
+}
+
+/// Decode a journal byte stream, stopping at the first bad frame. A
+/// missing or corrupt 12-byte header yields zero records and
+/// `valid_len == 0` (recovery rewrites the header). Total: never
+/// panics, never yields a partially-decoded frame.
+pub(crate) fn replay_bytes(bytes: &[u8]) -> Replay {
+    if bytes.len() < HEADER_BYTES
+        || &bytes[..8] != MAGIC
+        || u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes")) != VERSION
+    {
+        return Replay::default();
+    }
+    let mut records = Vec::new();
+    let mut pos = HEADER_BYTES;
+    loop {
+        let Some(head) = bytes.get(pos..pos + 5) else { break };
+        let kind = head[0];
+        let len = u32::from_le_bytes(head[1..5].try_into().expect("4 bytes")) as usize;
+        if len > MAX_PAYLOAD_BYTES {
+            break;
+        }
+        let Some(body) = bytes.get(pos..pos + 5 + len) else { break };
+        let Some(crc_bytes) = bytes.get(pos + 5 + len..pos + 5 + len + 8) else { break };
+        let crc = u64::from_le_bytes(crc_bytes.try_into().expect("8 bytes"));
+        if fp_bytes(FP_SEED, body) != crc {
+            break;
+        }
+        let Ok(rec) = Record::decode(kind, &body[5..]) else { break };
+        records.push(rec);
+        pos += 5 + len + 8;
+    }
+    Replay { records, valid_len: pos }
+}
+
+/// An open journal file positioned for appending. All methods are
+/// `&mut self`; callers wrap the journal in their own lock (the engine
+/// holds one beside the memo cache, the fleet keeps it inside its
+/// state mutex).
+#[derive(Debug)]
+pub(crate) struct Journal {
+    file: File,
+    path: PathBuf,
+    /// fsync after this many appends; 1 = every append (the durable
+    /// default), 0 = never (the OS decides — cheapest, weakest).
+    sync_every: u64,
+    unsynced: u64,
+    /// Frames appended since creation/recovery/compaction (telemetry).
+    appended: u64,
+}
+
+impl Journal {
+    /// Create (or truncate) a fresh journal at `path`.
+    pub(crate) fn create(path: impl AsRef<Path>, sync_every: u64) -> Result<Journal> {
+        let path = path.as_ref().to_path_buf();
+        let mut file = File::create(&path)?;
+        file.write_all(MAGIC)?;
+        file.write_all(&VERSION.to_le_bytes())?;
+        file.sync_data()?;
+        Ok(Journal { file, path, sync_every, unsynced: 0, appended: 0 })
+    }
+
+    /// Open `path`, replay every intact frame, truncate the torn tail
+    /// (if any) and position for appending. A missing file — or one
+    /// whose header is unreadable — is (re)created empty.
+    pub(crate) fn open_or_recover(
+        path: impl AsRef<Path>,
+        sync_every: u64,
+    ) -> Result<(Journal, Vec<Record>)> {
+        let path = path.as_ref().to_path_buf();
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(e.into()),
+        };
+        let replay = replay_bytes(&bytes);
+        if replay.valid_len == 0 {
+            return Ok((Journal::create(&path, sync_every)?, Vec::new()));
+        }
+        let file = OpenOptions::new().write(true).open(&path)?;
+        if replay.valid_len < bytes.len() {
+            // Torn tail: drop it so the next append starts at a frame
+            // boundary instead of extending garbage.
+            file.set_len(replay.valid_len as u64)?;
+            file.sync_data()?;
+        }
+        let mut j = Journal { file, path, sync_every, unsynced: 0, appended: 0 };
+        j.file.seek(SeekFrom::End(0))?;
+        Ok((j, replay.records))
+    }
+
+    pub(crate) fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Frames appended since creation/recovery/compaction.
+    pub(crate) fn appended(&self) -> u64 {
+        self.appended
+    }
+
+    /// Append one record, fsync'ing per the configured cadence. The
+    /// `journal.write` fault site fires here; a torn injected write
+    /// leaves exactly the torn tail replay is built to truncate.
+    pub(crate) fn append(&mut self, rec: &Record) -> Result<()> {
+        let bytes = frame(rec);
+        if faultline::faulted_write("journal.write", &mut self.file, &bytes)? {
+            self.file.write_all(&bytes)?;
+        }
+        self.appended += 1;
+        self.unsynced += 1;
+        if self.sync_every > 0 && self.unsynced >= self.sync_every {
+            self.sync()?;
+        }
+        Ok(())
+    }
+
+    /// True when the configured cadence syncs at all *and* appends are
+    /// waiting — callers use this to make run boundaries durability
+    /// points without overriding an explicit `sync_every = 0`.
+    pub(crate) fn wants_sync(&self) -> bool {
+        self.sync_every > 0 && self.unsynced > 0
+    }
+
+    /// Flush appended frames to stable storage now.
+    pub(crate) fn sync(&mut self) -> Result<()> {
+        self.file.sync_data()?;
+        self.unsynced = 0;
+        Ok(())
+    }
+
+    /// Drop every frame (the snapshot now covers them): truncate back
+    /// to the 12-byte header and sync.
+    pub(crate) fn compact(&mut self) -> Result<()> {
+        self.file.set_len(HEADER_BYTES as u64)?;
+        self.file.seek(SeekFrom::End(0))?;
+        self.file.sync_data()?;
+        self.unsynced = 0;
+        self.appended = 0;
+        Ok(())
+    }
+}
+
+/// Write `bytes` to `path` atomically: tmp sibling + `sync_all` +
+/// rename, extending the serve port-file pattern with durability. The
+/// `persist.write` fault site fires on the tmp write — a torn injected
+/// write leaves the previous snapshot untouched (the rename never
+/// happens), which is exactly the recovery contract the chaos suite
+/// pins. Used by `SweepEngine::save_cache` and the serve cache flush.
+pub(crate) fn write_bytes_atomic(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
+    let path = path.as_ref();
+    let tmp = path.with_file_name(format!(
+        "{}.tmp.{}",
+        path.file_name().and_then(|n| n.to_str()).unwrap_or("cache"),
+        std::process::id()
+    ));
+    let write = (|| -> Result<()> {
+        let mut f = File::create(&tmp)?;
+        if faultline::faulted_write("persist.write", &mut f, bytes)? {
+            f.write_all(bytes)?;
+        }
+        f.sync_all()?;
+        Ok(())
+    })();
+    if let Err(e) = write {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    std::fs::rename(&tmp, path)?;
+    // Make the rename itself durable where the platform allows opening
+    // a directory (best-effort: a crash here re-runs recovery anyway).
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Precision;
+    use crate::core::{InstrMix, ProgramSummary, SimStats};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// Fresh path under the OS temp dir (no tempfile crate offline).
+    fn tmp_path(tag: &str) -> PathBuf {
+        static N: AtomicU64 = AtomicU64::new(0);
+        let n = N.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!(
+            "speed-journal-test-{}-{tag}-{n}.swj",
+            std::process::id()
+        ))
+    }
+
+    fn sample_records() -> Vec<Record> {
+        let key = SimKey {
+            backend_fp: 0xB0,
+            cfg_fp: 0xC0,
+            shape: [1, 2, 3, 4, 5, 6, 7],
+            prec: Precision::Int8,
+            cf: false,
+        };
+        let sim = CachedSim {
+            stats: SimStats {
+                cycles: 1234,
+                macs: 99,
+                instrs: InstrMix { mac: 7, ..Default::default() },
+                ..Default::default()
+            },
+        };
+        let delta = CachedDelta::from_words(&[2, 5, 6, 1, 7, 1, 0]).unwrap();
+        let summary = ProgramSummary::from_words(&[
+            1, 7, 1, 9, 2, 1, 10, 2, 4, 11, 12, 13, 6, 14, 15, 16,
+        ])
+        .unwrap();
+        vec![
+            Record::FleetPlan { fp: 0xF00D, items: 3 },
+            Record::Memo(key, sim),
+            Record::Delta(0x10, delta),
+            Record::Summary(0x40, CachedSummary { summary, trusted: true }),
+            Record::FleetItem {
+                item: 2,
+                lines: vec![
+                    "{\"type\":\"block\",\"id\":1}".into(),
+                    "{\"type\":\"summary\",\"id\":1,\"sims\":1}".into(),
+                ],
+            },
+        ]
+    }
+
+    fn journal_bytes(records: &[Record]) -> Vec<u8> {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        for r in records {
+            bytes.extend_from_slice(&frame(r));
+        }
+        bytes
+    }
+
+    #[test]
+    fn frames_round_trip_in_order() {
+        let records = sample_records();
+        let replay = replay_bytes(&journal_bytes(&records));
+        assert_eq!(replay.records, records);
+        assert_eq!(replay.valid_len, journal_bytes(&records).len());
+    }
+
+    #[test]
+    fn replay_rejects_bad_headers_whole() {
+        let records = sample_records();
+        let bytes = journal_bytes(&records);
+        // Wrong magic / wrong version / too short: zero records, zero
+        // valid length (recovery rewrites the file).
+        for mutate in [0usize, 8] {
+            let mut bad = bytes.clone();
+            bad[mutate] ^= 0xFF;
+            let r = replay_bytes(&bad);
+            assert!(r.records.is_empty());
+            assert_eq!(r.valid_len, 0);
+        }
+        assert_eq!(replay_bytes(&bytes[..7]).valid_len, 0);
+        assert_eq!(replay_bytes(&[]).valid_len, 0);
+    }
+
+    /// The property the recovery story rests on: for *every* truncation
+    /// length and *every* single-bit flip, replay yields an exact
+    /// prefix of the original records and a frame-aligned valid length
+    /// — never a panic, never a partial or altered record.
+    #[test]
+    fn truncation_and_bitflips_yield_exact_prefixes() {
+        let records = sample_records();
+        let bytes = journal_bytes(&records);
+        // Frame-aligned prefix lengths, for mapping valid_len back to
+        // a record count.
+        let mut boundaries = vec![HEADER_BYTES];
+        for r in &records {
+            boundaries.push(boundaries.last().unwrap() + frame(r).len());
+        }
+        for cut in 0..=bytes.len() {
+            let r = replay_bytes(&bytes[..cut]);
+            let n = boundaries.iter().position(|&b| b == r.valid_len);
+            if cut < HEADER_BYTES {
+                assert_eq!(r.valid_len, 0, "cut={cut}");
+                assert!(r.records.is_empty());
+            } else {
+                let n = n.unwrap_or_else(|| panic!("valid_len {} not frame-aligned", r.valid_len));
+                assert_eq!(r.records, records[..n], "cut={cut}");
+                assert!(r.valid_len <= cut);
+            }
+        }
+        for byte in 0..bytes.len() {
+            for bit in 0..8 {
+                let mut bad = bytes.clone();
+                bad[byte] ^= 1 << bit;
+                let r = replay_bytes(&bad);
+                if byte < HEADER_BYTES {
+                    assert_eq!(r.valid_len, 0, "byte={byte} bit={bit}");
+                    continue;
+                }
+                let n = boundaries
+                    .iter()
+                    .position(|&b| b == r.valid_len)
+                    .unwrap_or_else(|| panic!("byte={byte} bit={bit}: valid_len not aligned"));
+                assert_eq!(r.records, records[..n], "byte={byte} bit={bit}");
+            }
+        }
+    }
+
+    #[test]
+    fn append_recover_truncate_append_cycle() {
+        let path = tmp_path("cycle");
+        let records = sample_records();
+        {
+            let mut j = Journal::create(&path, 1).expect("create");
+            for r in &records {
+                j.append(r).expect("append");
+            }
+            assert_eq!(j.appended(), records.len() as u64);
+        }
+        // Clean reopen: everything comes back, in order.
+        let (mut j, got) = Journal::open_or_recover(&path, 1).expect("reopen");
+        assert_eq!(got, records);
+        // Tear the tail mid-frame (simulates dying inside write_all),
+        // then recover: the torn frame is dropped, the file truncated,
+        // and a fresh append lands on the boundary.
+        j.append(&records[1]).expect("append");
+        drop(j);
+        let full = std::fs::read(&path).expect("read");
+        std::fs::write(&path, &full[..full.len() - 5]).expect("tear");
+        let (mut j, got) = Journal::open_or_recover(&path, 1).expect("recover");
+        assert_eq!(got, records, "torn frame dropped, intact prefix kept");
+        j.append(&records[2]).expect("append after recovery");
+        drop(j);
+        let (_, got) = Journal::open_or_recover(&path, 1).expect("final");
+        let mut want = records.clone();
+        want.push(records[2].clone());
+        assert_eq!(got, want);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compact_drops_frames_and_keeps_the_file_appendable() {
+        let path = tmp_path("compact");
+        let records = sample_records();
+        let mut j = Journal::create(&path, 0).expect("create");
+        for r in &records {
+            j.append(r).expect("append");
+        }
+        j.compact().expect("compact");
+        assert_eq!(j.appended(), 0);
+        j.append(&records[0]).expect("append after compact");
+        j.sync().expect("sync");
+        drop(j);
+        let (_, got) = Journal::open_or_recover(&path, 0).expect("reopen");
+        assert_eq!(got, records[..1]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn garbage_file_recovers_to_a_fresh_journal() {
+        let path = tmp_path("garbage");
+        std::fs::write(&path, b"not a journal at all").expect("write");
+        let (mut j, got) = Journal::open_or_recover(&path, 1).expect("recover");
+        assert!(got.is_empty());
+        j.append(&sample_records()[0]).expect("append");
+        drop(j);
+        let (_, got) = Journal::open_or_recover(&path, 1).expect("reopen");
+        assert_eq!(got.len(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn write_bytes_atomic_replaces_content() {
+        let path = tmp_path("atomic");
+        write_bytes_atomic(&path, b"first").expect("write");
+        assert_eq!(std::fs::read(&path).expect("read"), b"first");
+        write_bytes_atomic(&path, b"second-longer").expect("overwrite");
+        assert_eq!(std::fs::read(&path).expect("read"), b"second-longer");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// `docs/PERSIST.md` documents this format too; pin its claims the
+    /// same way `docs_match_wire_constants` pins the snapshot's.
+    #[test]
+    fn journal_docs_match_wire_constants() {
+        let doc = include_str!("../../docs/PERSIST.md");
+        let claims = [
+            format!("\"{}\"", std::str::from_utf8(MAGIC).unwrap()),
+            format!("currently {VERSION})"),
+            format!("Header: {HEADER_BYTES} bytes. Frame overhead: {FRAME_OVERHEAD} bytes"),
+        ];
+        for claim in &claims {
+            assert!(doc.contains(claim.as_str()), "PERSIST.md drifted: missing `{claim}`");
+        }
+        for rule in [
+            "truncating at the first bad frame",
+            "CRC mismatch",
+            "unknown kind",
+            "truncated payload",
+        ] {
+            assert!(doc.contains(rule), "PERSIST.md drifted: missing journal rule `{rule}`");
+        }
+    }
+}

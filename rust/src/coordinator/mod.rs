@@ -5,12 +5,15 @@
 //! persistent cross-process result caching with LRU bounding, the
 //! long-running sweep server (`speed serve`) with its line protocol,
 //! the fleet coordinator (`speed fleet`) that fans one sweep out over
-//! remote serve nodes, and the drivers that regenerate every
-//! figure/table of the paper.
+//! remote serve nodes, the crash-safety layer (`SPEEDSWJ` write-ahead
+//! journal + deterministic `faultline` fault injection), and the
+//! drivers that regenerate every figure/table of the paper.
 
 pub mod backend;
 pub mod experiments;
+pub mod faultline;
 pub mod fleet;
+mod journal;
 mod persist;
 pub mod report;
 pub mod runner;

@@ -69,7 +69,9 @@ const DELTA_RECORD_MIN_BYTES: usize = 16;
 const SUMMARY_RECORD_MIN_BYTES: usize = 24;
 const KEY_BYTES: usize = 8 + 8 + 7 * 8 + 1 + 1;
 const STATS_BYTES: usize = 19 * 8;
-const ENTRY_BYTES: usize = KEY_BYTES + STATS_BYTES;
+/// One memo entry on the wire — also the payload of a `SPEEDSWJ`
+/// journal memo frame (see `journal.rs`), byte-identical in both.
+pub(crate) const ENTRY_BYTES: usize = KEY_BYTES + STATS_BYTES;
 const HEADER_BYTES: usize = 8 + 4 + 8;
 const FOOTER_BYTES: usize = 8;
 
@@ -259,42 +261,7 @@ pub(crate) fn decode(bytes: &[u8]) -> Result<Decoded> {
     }
     let mut out = Vec::with_capacity(count);
     for _ in 0..count {
-        let backend_fp = r.u64()?;
-        let cfg_fp = r.u64()?;
-        let mut shape = [0usize; 7];
-        for d in &mut shape {
-            *d = r.u64()? as usize;
-        }
-        let prec = decode_precision(r.u8()?)?;
-        let cf = match r.u8()? {
-            0 => false,
-            1 => true,
-            b => return Err(err(format!("bad strategy tag {b}"))),
-        };
-        let stats = SimStats {
-            cycles: r.u64()?,
-            macs: r.u64()?,
-            useful_macs: r.u64()?,
-            dram_read: r.u64()?,
-            dram_write: r.u64()?,
-            vrf_read: r.u64()?,
-            vrf_write: r.u64()?,
-            sau_busy: r.u64()?,
-            acc_busy: r.u64()?,
-            dram_busy: r.u64()?,
-            sa_fills: r.u64()?,
-            operand_stall: r.u64()?,
-            instrs: InstrMix {
-                scalar: r.u64()?,
-                config: r.u64()?,
-                load: r.u64()?,
-                mac: r.u64()?,
-                partial: r.u64()?,
-                store: r.u64()?,
-                alu: r.u64()?,
-            },
-        };
-        out.push((SimKey { backend_fp, cfg_fp, shape, prec, cf }, CachedSim { stats }));
+        out.push(read_entry(&mut r)?);
     }
     let n_deltas = r.u64()? as usize;
     let min_bytes = n_deltas
@@ -315,20 +282,7 @@ pub(crate) fn decode(bytes: &[u8]) -> Result<Decoded> {
             }
         }
         prev_key = Some(key);
-        let n_words = r.u64()? as usize;
-        let word_bytes = n_words
-            .checked_mul(8)
-            .ok_or_else(|| err("delta record overflows"))?;
-        if word_bytes > body.len() - r.pos {
-            return Err(err("truncated delta record"));
-        }
-        let mut words = Vec::with_capacity(n_words);
-        for _ in 0..n_words {
-            words.push(r.u64()?);
-        }
-        let delta = CachedDelta::from_words(&words)
-            .ok_or_else(|| err("malformed delta record"))?;
-        deltas.push((key, delta));
+        deltas.push((key, read_delta_body(&mut r)?));
     }
     if version == COMPAT_VERSION {
         // v2 files end here — no summary section.
@@ -354,30 +308,160 @@ pub(crate) fn decode(bytes: &[u8]) -> Result<Decoded> {
             }
         }
         prev_key = Some(key);
-        let trusted = match r.u64()? {
-            0 => false,
-            1 => true,
-            t => return Err(err(format!("bad summary trust tag {t}"))),
-        };
-        let n_words = r.u64()? as usize;
-        let word_bytes = n_words
-            .checked_mul(8)
-            .ok_or_else(|| err("summary record overflows"))?;
-        if word_bytes > body.len() - r.pos {
-            return Err(err("truncated summary record"));
-        }
-        let mut words = Vec::with_capacity(n_words);
-        for _ in 0..n_words {
-            words.push(r.u64()?);
-        }
-        let summary = ProgramSummary::from_words(&words)
-            .ok_or_else(|| err("malformed summary record"))?;
-        summaries.push((key, CachedSummary { summary, trusted }));
+        summaries.push((key, read_summary_body(&mut r)?));
     }
     if r.pos != body.len() {
         return Err(err("trailing bytes after summary section"));
     }
     Ok((out, deltas, summaries))
+}
+
+fn read_entry(r: &mut Reader) -> Result<(SimKey, CachedSim)> {
+    let backend_fp = r.u64()?;
+    let cfg_fp = r.u64()?;
+    let mut shape = [0usize; 7];
+    for d in &mut shape {
+        *d = r.u64()? as usize;
+    }
+    let prec = decode_precision(r.u8()?)?;
+    let cf = match r.u8()? {
+        0 => false,
+        1 => true,
+        b => return Err(err(format!("bad strategy tag {b}"))),
+    };
+    let stats = SimStats {
+        cycles: r.u64()?,
+        macs: r.u64()?,
+        useful_macs: r.u64()?,
+        dram_read: r.u64()?,
+        dram_write: r.u64()?,
+        vrf_read: r.u64()?,
+        vrf_write: r.u64()?,
+        sau_busy: r.u64()?,
+        acc_busy: r.u64()?,
+        dram_busy: r.u64()?,
+        sa_fills: r.u64()?,
+        operand_stall: r.u64()?,
+        instrs: InstrMix {
+            scalar: r.u64()?,
+            config: r.u64()?,
+            load: r.u64()?,
+            mac: r.u64()?,
+            partial: r.u64()?,
+            store: r.u64()?,
+            alu: r.u64()?,
+        },
+    };
+    Ok((SimKey { backend_fp, cfg_fp, shape, prec, cf }, CachedSim { stats }))
+}
+
+/// Delta record body after the key: word count + words.
+fn read_delta_body(r: &mut Reader) -> Result<CachedDelta> {
+    let n_words = r.u64()? as usize;
+    let word_bytes = n_words
+        .checked_mul(8)
+        .ok_or_else(|| err("delta record overflows"))?;
+    if word_bytes > r.bytes.len() - r.pos {
+        return Err(err("truncated delta record"));
+    }
+    let mut words = Vec::with_capacity(n_words);
+    for _ in 0..n_words {
+        words.push(r.u64()?);
+    }
+    CachedDelta::from_words(&words).ok_or_else(|| err("malformed delta record"))
+}
+
+/// Summary record body after the key: trust tag + word count + words.
+fn read_summary_body(r: &mut Reader) -> Result<CachedSummary> {
+    let trusted = match r.u64()? {
+        0 => false,
+        1 => true,
+        t => return Err(err(format!("bad summary trust tag {t}"))),
+    };
+    let n_words = r.u64()? as usize;
+    let word_bytes = n_words
+        .checked_mul(8)
+        .ok_or_else(|| err("summary record overflows"))?;
+    if word_bytes > r.bytes.len() - r.pos {
+        return Err(err("truncated summary record"));
+    }
+    let mut words = Vec::with_capacity(n_words);
+    for _ in 0..n_words {
+        words.push(r.u64()?);
+    }
+    let summary =
+        ProgramSummary::from_words(&words).ok_or_else(|| err("malformed summary record"))?;
+    Ok(CachedSummary { summary, trusted })
+}
+
+// ---------------------------------------------------------------------
+// Single-record forms — the payloads of `SPEEDSWJ` journal frames (see
+// `journal.rs`). Byte-identical to the corresponding sections of the
+// snapshot encoding above, so a journaled record and a snapshotted one
+// can never diverge. Each decoder is as strict as [`decode`]: exact
+// length, no trailing bytes, never a panic.
+
+/// One memo entry (exactly [`ENTRY_BYTES`] bytes): key + stats.
+pub(crate) fn encode_entry(k: &SimKey, v: &CachedSim) -> Vec<u8> {
+    let mut e = Vec::with_capacity(ENTRY_BYTES);
+    encode_key(&mut e, k);
+    encode_stats(&mut e, &v.stats);
+    e
+}
+
+/// Decode one memo entry; rejects any length other than [`ENTRY_BYTES`].
+pub(crate) fn decode_entry(bytes: &[u8]) -> Result<(SimKey, CachedSim)> {
+    if bytes.len() != ENTRY_BYTES {
+        return Err(err("bad memo entry length"));
+    }
+    read_entry(&mut Reader { bytes, pos: 0 })
+}
+
+/// One delta record: key + word count + words.
+pub(crate) fn encode_delta_record(key: u64, d: &CachedDelta) -> Vec<u8> {
+    let words = d.to_words();
+    let mut out = Vec::with_capacity((2 + words.len()) * 8);
+    put_u64(&mut out, key);
+    put_u64(&mut out, words.len() as u64);
+    for w in &words {
+        put_u64(&mut out, *w);
+    }
+    out
+}
+
+/// Decode one delta record; rejects truncation and trailing bytes.
+pub(crate) fn decode_delta_record(bytes: &[u8]) -> Result<(u64, CachedDelta)> {
+    let mut r = Reader { bytes, pos: 0 };
+    let key = r.u64()?;
+    let delta = read_delta_body(&mut r)?;
+    if r.pos != bytes.len() {
+        return Err(err("trailing bytes after delta record"));
+    }
+    Ok((key, delta))
+}
+
+/// One summary record: key + trust tag + word count + words.
+pub(crate) fn encode_summary_record(key: u64, s: &CachedSummary) -> Vec<u8> {
+    let words = s.summary.to_words();
+    let mut out = Vec::with_capacity((3 + words.len()) * 8);
+    put_u64(&mut out, key);
+    put_u64(&mut out, u64::from(s.trusted));
+    put_u64(&mut out, words.len() as u64);
+    for w in &words {
+        put_u64(&mut out, *w);
+    }
+    out
+}
+
+/// Decode one summary record; rejects truncation and trailing bytes.
+pub(crate) fn decode_summary_record(bytes: &[u8]) -> Result<(u64, CachedSummary)> {
+    let mut r = Reader { bytes, pos: 0 };
+    let key = r.u64()?;
+    let summary = read_summary_body(&mut r)?;
+    if r.pos != bytes.len() {
+        return Err(err("trailing bytes after summary record"));
+    }
+    Ok((key, summary))
 }
 
 #[cfg(test)]
@@ -666,6 +750,61 @@ mod tests {
         bad[8..12].copy_from_slice(&2u32.to_le_bytes());
         let e = decode(&refooter(bad)).unwrap_err().to_string();
         assert!(e.contains("trailing bytes"), "{e}");
+    }
+
+    #[test]
+    fn single_record_forms_round_trip_and_reject_bad_lengths() {
+        for (k, v) in sample() {
+            let e = encode_entry(&k, &v);
+            assert_eq!(e.len(), ENTRY_BYTES);
+            assert_eq!(decode_entry(&e).unwrap(), (k, v));
+            assert!(decode_entry(&e[..e.len() - 1]).is_err());
+            let mut long = e.clone();
+            long.push(0);
+            assert!(decode_entry(&long).is_err());
+        }
+        for (k, d) in sample_deltas() {
+            let e = encode_delta_record(k, &d);
+            assert_eq!(decode_delta_record(&e).unwrap(), (k, d));
+            assert!(decode_delta_record(&e[..e.len() - 1]).is_err());
+            let mut long = e.clone();
+            long.extend_from_slice(&[0u8; 8]);
+            assert!(decode_delta_record(&long).is_err(), "trailing bytes must reject");
+        }
+        for (k, s) in sample_summaries() {
+            let e = encode_summary_record(k, &s);
+            assert_eq!(decode_summary_record(&e).unwrap(), (k, s));
+            assert!(decode_summary_record(&e[..e.len() - 1]).is_err());
+            let mut bad = e.clone();
+            bad[8..16].copy_from_slice(&7u64.to_le_bytes());
+            assert!(decode_summary_record(&bad).is_err(), "trust tag is strict");
+        }
+    }
+
+    #[test]
+    fn single_record_forms_match_the_snapshot_encoding() {
+        // A journal frame payload and the corresponding snapshot section
+        // must be byte-identical — that is what lets replay merge them
+        // interchangeably.
+        let m = sample();
+        let d = sample_deltas();
+        let s = sample_summaries();
+        let blob = encode(m.iter(), &d, &s);
+        for (k, v) in &m {
+            let e = encode_entry(k, v);
+            assert!(
+                blob.windows(e.len()).any(|w| w == &e[..]),
+                "memo entry bytes must appear verbatim in the snapshot"
+            );
+        }
+        for (k, delta) in &d {
+            let e = encode_delta_record(*k, delta);
+            assert!(blob.windows(e.len()).any(|w| w == &e[..]));
+        }
+        for (k, sum) in &s {
+            let e = encode_summary_record(*k, sum);
+            assert!(blob.windows(e.len()).any(|w| w == &e[..]));
+        }
     }
 
     /// `docs/PERSIST.md` is the normative description of this file;

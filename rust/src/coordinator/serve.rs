@@ -112,12 +112,13 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::backend::{blob_fingerprint, by_name, BACKEND_NAMES};
+use super::faultline;
 use super::runner::LayerResult;
 use super::sweep::{JobId, ReportSink, SweepEngine, SweepOutcome, SweepSpec, SHARD_OFF};
 use crate::arch::{Precision, SpeedConfig};
@@ -935,10 +936,15 @@ pub fn block_line(id: u64, backend: &str, network: &str, r: &LayerResult) -> Str
 /// in-flight simulation of the identical cell (multi-tenant
 /// coalescing — no duplicate work); `queue_ms` is the total time this
 /// request's work items waited for an engine scheduler slot
-/// (contention, not simulation).
+/// (contention, not simulation); `gate_ms` is the wall-clock delay
+/// from run start until the request's *first* work item got a
+/// scheduler slot — the per-client queueing latency a caller actually
+/// observes before any simulation starts (0 when everything came from
+/// cache), as opposed to the summed per-worker contention in
+/// `queue_ms`.
 pub fn summary_line(id: u64, out: &SweepOutcome, cache_entries: usize) -> String {
     format!(
-        "{{\"type\":\"summary\",\"id\":{id},\"jobs\":{},\"sims\":{},\"cache_hits\":{},\"dedup_hits\":{},\"evictions\":{},\"cache_entries\":{cache_entries},\"threads\":{},\"elapsed_ms\":{},\"sharded_jobs\":{},\"shards\":{},\"slowest_job_ms\":{},\"ff_instrs\":{},\"delta_hits\":{},\"replays\":{},\"summary_hits\":{},\"summary_replays\":{},\"shadow_validations\":{},\"delta_evictions\":{},\"prog_hits\":{},\"prog_misses\":{},\"coalesced\":{},\"queue_ms\":{}}}",
+        "{{\"type\":\"summary\",\"id\":{id},\"jobs\":{},\"sims\":{},\"cache_hits\":{},\"dedup_hits\":{},\"evictions\":{},\"cache_entries\":{cache_entries},\"threads\":{},\"elapsed_ms\":{},\"sharded_jobs\":{},\"shards\":{},\"slowest_job_ms\":{},\"ff_instrs\":{},\"delta_hits\":{},\"replays\":{},\"summary_hits\":{},\"summary_replays\":{},\"shadow_validations\":{},\"delta_evictions\":{},\"prog_hits\":{},\"prog_misses\":{},\"coalesced\":{},\"queue_ms\":{},\"gate_ms\":{}}}",
         out.results.len(),
         out.executed_sims,
         out.cache_hits,
@@ -960,6 +966,7 @@ pub fn summary_line(id: u64, out: &SweepOutcome, cache_entries: usize) -> String
         out.program_cache_misses,
         out.coalesced_hits,
         (out.gate_wait_secs * 1000.0).round() as u64,
+        (out.gate_delay_secs * 1000.0).round() as u64,
     )
 }
 
@@ -1179,6 +1186,10 @@ pub struct ServeStats {
     pub overloads: u64,
     /// Whether a `shutdown` request ended the session.
     pub shutdown: bool,
+    /// Periodic background cache flushes performed while the session
+    /// ran (stdin mode only — the TCP accept loop owns the flush
+    /// timer and counts into [`TcpReport::flushes`] instead).
+    pub flushes: u64,
 }
 
 /// Admission limits for a multi-tenant server. Every field treats `0`
@@ -1354,6 +1365,20 @@ pub fn serve_lines<R: BufRead, W: Write>(
                 }
             }
             Op::Sweep => {
+                // Deterministic fault injection: a `node.item` trigger
+                // fires once per sweep request. `crash` aborts the
+                // process (simulating a mid-item kill), `stall` sleeps
+                // then proceeds, and the I/O kinds fail just this
+                // request with an error reply. Zero-cost when no plan
+                // is installed.
+                if let Err(e) = faultline::control_point("node.item") {
+                    stats.errors += 1;
+                    let line = error_line(req.id, &format!("fault injected: {e}"));
+                    if write_line(&mut writer, &line).is_err() {
+                        break;
+                    }
+                    continue;
+                }
                 let spec = match req.to_spec(&shared.cfg) {
                     Ok(spec) => spec,
                     Err(e) => {
@@ -1485,16 +1510,43 @@ pub struct ServerOptions {
     /// available parallelism). The knob the priority scheduler
     /// allocates under.
     pub worker_budget: Option<usize>,
+    /// Seconds between periodic background cache flushes while
+    /// serving (`0` = flush on shutdown only, the default). Bounds
+    /// data loss on a long-lived node even without the journal.
+    pub flush_interval_secs: u64,
+    /// Write-ahead journal (`SPEEDSWJ`) path: replayed over the cache
+    /// snapshot at startup, appended to as results publish, compacted
+    /// on every snapshot save. `None` = journaling off.
+    pub journal_file: Option<String>,
+    /// fsync the journal every N appended frames (`1` = every frame,
+    /// the durable default; `0` = never fsync mid-run, leaving
+    /// durability to run-boundary syncs and the OS).
+    pub journal_sync_every: u64,
 }
 
-fn flush_cache(engine: &SweepEngine, path: Option<&str>) {
-    let Some(path) = path else { return };
+/// Flush the engine's cache to `path` (no-op without a path). A
+/// failure is reported as a structured warning record on stderr —
+/// machine-readable path and error — because a dropped flush is a
+/// durability gap the operator must be able to alert on. Returns
+/// whether a flush was performed successfully.
+fn flush_cache(engine: &SweepEngine, path: Option<&str>) -> bool {
+    let Some(path) = path else { return false };
     match engine.save_cache(path) {
-        Ok(()) => eprintln!(
-            "serve: cache-file {path}: saved {} cached simulations",
-            engine.cached_sims()
-        ),
-        Err(e) => eprintln!("serve: cache-file {path}: save failed: {e}"),
+        Ok(()) => {
+            eprintln!(
+                "serve: cache-file {path}: saved {} cached simulations",
+                engine.cached_sims()
+            );
+            true
+        }
+        Err(e) => {
+            eprintln!(
+                "{{\"type\":\"warning\",\"warning\":\"cache_flush_failed\",\"path\":{},\"error\":{}}}",
+                quote(path),
+                quote(&e.to_string())
+            );
+            false
+        }
     }
 }
 
@@ -1537,24 +1589,96 @@ pub fn run_server(opts: ServerOptions) -> Result<()> {
             eprintln!("serve: cache-file {path}: not found, starting cold");
         }
     }
+    if let Some(jpath) = &opts.journal_file {
+        // The journal is an explicit durability request: failing to
+        // open it is fatal, never a silent downgrade to lossy mode.
+        let n = engine.attach_journal(jpath, opts.journal_sync_every)?;
+        eprintln!(
+            "serve: journal {jpath}: replayed {n} record(s) ({} cached simulations)",
+            engine.cached_sims()
+        );
+    }
     let shared =
         Arc::new(ServeShared::new(Arc::new(engine), opts.cfg.clone(), opts.limits));
     match &opts.tcp {
         None => {
             let stdin = std::io::stdin();
             let stdout = std::io::stdout();
-            let stats = serve_lines(&shared, stdin.lock(), stdout.lock());
+            let flusher = PeriodicFlusher::start(
+                &shared,
+                opts.cache_file.as_deref(),
+                opts.flush_interval_secs,
+            );
+            let mut stats = serve_lines(&shared, stdin.lock(), stdout.lock());
+            stats.flushes = flusher.stop();
             flush_cache(&shared.engine, opts.cache_file.as_deref());
             eprintln!(
-                "serve: handled {} request(s), {} error repl(y/ies), {} overload(s){}",
+                "serve: handled {} request(s), {} error repl(y/ies), {} overload(s), \
+                 {} periodic flush(es){}",
                 stats.requests,
                 stats.errors,
                 stats.overloads,
+                stats.flushes,
                 if stats.shutdown { ", shut down by request" } else { ", stdin closed" }
             );
             Ok(())
         }
         Some(addr) => tcp_server(&shared, &opts, addr),
+    }
+}
+
+/// Background thread flushing the cache every `interval_secs` while a
+/// stdin-mode session runs (the TCP accept loop drives its own timer
+/// inline instead). Inert when the interval is `0` or there is no
+/// cache file.
+struct PeriodicFlusher {
+    stop: Arc<AtomicBool>,
+    count: Arc<AtomicU64>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl PeriodicFlusher {
+    fn start(
+        shared: &Arc<ServeShared>,
+        cache_file: Option<&str>,
+        interval_secs: u64,
+    ) -> PeriodicFlusher {
+        let stop = Arc::new(AtomicBool::new(false));
+        let count = Arc::new(AtomicU64::new(0));
+        let handle = match (cache_file, interval_secs) {
+            (Some(path), secs) if secs > 0 => {
+                let shared = Arc::clone(shared);
+                let path = path.to_string();
+                let stop = Arc::clone(&stop);
+                let count = Arc::clone(&count);
+                Some(thread::spawn(move || {
+                    let interval = Duration::from_secs(secs);
+                    let mut last = Instant::now();
+                    // Poll the stop flag on a short cadence so shutdown
+                    // never waits out a long flush interval.
+                    while !stop.load(Ordering::SeqCst) {
+                        thread::sleep(Duration::from_millis(50));
+                        if last.elapsed() >= interval {
+                            if flush_cache(&shared.engine, Some(&path)) {
+                                count.fetch_add(1, Ordering::SeqCst);
+                            }
+                            last = Instant::now();
+                        }
+                    }
+                }))
+            }
+            _ => None,
+        };
+        PeriodicFlusher { stop, count, handle }
+    }
+
+    /// Stop the flusher and return how many periodic flushes ran.
+    fn stop(self) -> u64 {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle {
+            let _ = h.join();
+        }
+        self.count.load(Ordering::SeqCst)
     }
 }
 
@@ -1588,11 +1712,18 @@ fn tcp_server(shared: &Arc<ServeShared>, opts: &ServerOptions, addr: &str) -> Re
     }
     eprintln!("serve: listening on {local}");
     let shutdown = Arc::new(AtomicBool::new(false));
-    let report = run_tcp(shared, listener, opts.cache_file.as_deref(), &shutdown)?;
+    let report = run_tcp(
+        shared,
+        listener,
+        opts.cache_file.as_deref(),
+        opts.flush_interval_secs,
+        &shutdown,
+    )?;
     flush_cache(&shared.engine, opts.cache_file.as_deref());
     eprintln!(
-        "serve: shut down after {} connection(s), {} rejected, {} panicked session(s)",
-        report.connections, report.rejected, report.panicked_sessions
+        "serve: shut down after {} connection(s), {} rejected, {} panicked session(s), \
+         {} periodic flush(es)",
+        report.connections, report.rejected, report.panicked_sessions, report.flushes
     );
     Ok(())
 }
@@ -1611,6 +1742,9 @@ pub struct TcpReport {
     /// shutdown — so a panicked session is always observed and
     /// counted, never silently discarded.
     pub panicked_sessions: u64,
+    /// Periodic background cache flushes performed by the accept loop
+    /// (`--flush-interval-secs`; `0` leaves this at zero).
+    pub flushes: u64,
 }
 
 /// Join every finished handle (a `retain` would discard the panic
@@ -1643,13 +1777,28 @@ pub fn run_tcp(
     shared: &Arc<ServeShared>,
     listener: TcpListener,
     cache_file: Option<&str>,
+    flush_interval_secs: u64,
     shutdown: &Arc<AtomicBool>,
 ) -> Result<TcpReport> {
     listener.set_nonblocking(true)?;
     let mut report = TcpReport::default();
     let mut handles: Vec<thread::JoinHandle<()>> = Vec::new();
     let active_conns = Arc::new(AtomicUsize::new(0));
+    let flush_every = (flush_interval_secs > 0 && cache_file.is_some())
+        .then(|| Duration::from_secs(flush_interval_secs));
+    let mut last_flush = Instant::now();
     while !shutdown.load(Ordering::SeqCst) {
+        // Periodic durability flush, checked every loop iteration so
+        // it fires under load (busy accepts) and at idle (poll sleeps)
+        // alike.
+        if let Some(every) = flush_every {
+            if last_flush.elapsed() >= every {
+                if flush_cache(&shared.engine, cache_file) {
+                    report.flushes += 1;
+                }
+                last_flush = Instant::now();
+            }
+        }
         let mut stream = match listener.accept() {
             Ok((s, _)) => s,
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -1715,7 +1864,15 @@ pub fn run_tcp(
                 )));
             }
             let Ok(read_half) = stream.try_clone() else { return };
-            let stats = serve_lines(&shared, BufReader::new(read_half), &stream);
+            // Both halves route through the fault-injection layer so a
+            // `net.read` / `net.write` plan can exercise connection
+            // resets, short reads and stalled replies on a real
+            // socket. Zero-cost pass-through when no plan is set.
+            let stats = serve_lines(
+                &shared,
+                BufReader::new(faultline::FaultStream::new(read_half)),
+                faultline::FaultStream::new(stream),
+            );
             if stats.shutdown {
                 // Flush before unblocking the accept loop, so the
                 // cache file is durable by the time the process exits.

@@ -128,9 +128,9 @@
 //! `tests/sweep_determinism.rs` (and against the old serial Ara /
 //! functional paths in `tests/backend_parity.rs`).
 
-use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -139,6 +139,7 @@ use super::backend::{
     config_fingerprint, layer_shape as shape_of, DeltaCache, GoldenFunctional, SimBackend,
     SlotOptions, SlotPool, SpeedCycle, SummaryCache, WorkerSlot,
 };
+use super::journal::{Journal, Record};
 use super::persist;
 use super::runner::{LayerResult, NetworkResult};
 use crate::arch::{Precision, SpeedConfig};
@@ -535,6 +536,12 @@ pub struct SweepOutcome {
     /// on the engine-wide priority gate, summed across workers — the
     /// queueing cost of sharing the engine (0 when uncontended).
     pub gate_wait_secs: f64,
+    /// Wall-clock seconds from run start until the *first* simulation
+    /// permit was granted — the scheduling delay a client observes
+    /// before any of its work starts, as opposed to the summed
+    /// per-worker contention above (0 when nothing needed simulating).
+    /// Surfaced per request as `gate_ms` in the serve summary.
+    pub gate_delay_secs: f64,
     /// Cache entries evicted during this run by the LRU bound
     /// ([`SweepEngine::set_max_cache_entries`]); 0 when unbounded.
     pub cache_evictions: u64,
@@ -1121,6 +1128,25 @@ pub struct SweepEngine {
     program_cache_cap_override: Option<usize>,
     program_cache_bytes_override: Option<usize>,
     worker_budget: Option<usize>,
+    /// Crash-safety write-ahead journal (`None` until
+    /// [`SweepEngine::attach_journal`]). Locked independently of the
+    /// memo cache; publish paths take it only *after* releasing the
+    /// cache lock, and [`SweepEngine::save_cache`] holds it across
+    /// snapshot + compaction, so a concurrent publish lands either in
+    /// the snapshot or in the compacted journal — never nowhere.
+    journal: Mutex<Option<JournalState>>,
+}
+
+/// Engine-side journal bookkeeping: the open journal plus which
+/// delta/summary keys (and trust states) it already recorded, so
+/// end-of-run appends are diffs instead of full cache dumps.
+#[derive(Debug)]
+struct JournalState {
+    journal: Journal,
+    seen_deltas: HashSet<u64>,
+    /// key → trust flag as last journaled; a trust upgrade re-appends
+    /// (replay order makes the later, trusted record win).
+    seen_summaries: HashMap<u64, bool>,
 }
 
 impl SweepEngine {
@@ -1340,9 +1366,20 @@ impl SweepEngine {
     }
 
     /// Write the memo table to `path` (see
-    /// [`SweepEngine::serialize_cache`]).
+    /// [`SweepEngine::serialize_cache`]) — atomically: tmp sibling +
+    /// `sync_all` + rename, so a crash mid-flush leaves the previous
+    /// snapshot intact instead of a torn file the next start rejects
+    /// back to cold. With a journal attached, a successful snapshot
+    /// also compacts the journal (every journaled record is now covered
+    /// by the snapshot); the journal lock is held across both, so a
+    /// concurrent publish is never dropped.
     pub fn save_cache(&self, path: impl AsRef<Path>) -> Result<()> {
-        std::fs::write(path, self.serialize_cache())?;
+        let mut guard = lock_ignore_poison(&self.journal);
+        let bytes = self.serialize_cache();
+        super::journal::write_bytes_atomic(path, &bytes)?;
+        if let Some(st) = guard.as_mut() {
+            st.journal.compact()?;
+        }
         Ok(())
     }
 
@@ -1352,6 +1389,125 @@ impl SweepEngine {
     pub fn load_cache(&self, path: impl AsRef<Path>) -> Result<usize> {
         let bytes = std::fs::read(path)?;
         self.load_cache_bytes(&bytes)
+    }
+
+    /// Attach the crash-safety write-ahead journal at `path`: replay
+    /// any intact frames over whatever snapshot is already loaded
+    /// (truncating a torn tail at the first bad frame), then keep the
+    /// journal open — every memo cell published from here on is
+    /// appended as a CRC-framed record, and converged deltas / program
+    /// summaries are diffed in at each run boundary. `sync_every`
+    /// controls the fsync cadence: 1 (the durable default) syncs every
+    /// append, N batches, 0 leaves it to the OS. Returns the number of
+    /// records replayed. See `docs/PERSIST.md` (`SPEEDSWJ`).
+    pub fn attach_journal(&self, path: impl AsRef<Path>, sync_every: u64) -> Result<usize> {
+        let (j, records) = Journal::open_or_recover(path, sync_every)?;
+        let n = records.len();
+        let mut deltas = Vec::new();
+        let mut summaries = Vec::new();
+        let mut cache = self.lock_cache();
+        for rec in records {
+            match rec {
+                Record::Memo(key, sim) => {
+                    cache.insert(key, sim);
+                }
+                Record::Delta(key, d) => deltas.push((key, d)),
+                Record::Summary(key, s) => summaries.push((key, s)),
+                // Fleet frames belong to coordinator journals; an
+                // engine pointed at one ignores them rather than
+                // rejecting the whole file.
+                Record::FleetItem { .. } | Record::FleetPlan { .. } => {}
+            }
+        }
+        drop(cache);
+        self.delta_cache.merge(deltas);
+        self.summary_cache.merge(summaries);
+        self.cache_ready.notify_all();
+        // Seed the diff trackers from the live caches: everything
+        // resident right now is covered by the snapshot that was
+        // loaded or by the journal frames just replayed, so only
+        // *new* keys (or trust upgrades) append from here on.
+        let seen_deltas: HashSet<u64> =
+            self.delta_cache.entries().into_iter().map(|(k, _)| k).collect();
+        let seen_summaries: HashMap<u64, bool> = self
+            .summary_cache
+            .entries()
+            .into_iter()
+            .map(|(k, s)| (k, s.trusted))
+            .collect();
+        *lock_ignore_poison(&self.journal) =
+            Some(JournalState { journal: j, seen_deltas, seen_summaries });
+        Ok(n)
+    }
+
+    /// Whether a journal is attached.
+    pub fn journal_attached(&self) -> bool {
+        lock_ignore_poison(&self.journal).is_some()
+    }
+
+    /// Journal freshly published memo cells. Called by the publish
+    /// paths *after* the cache lock is released; a write failure
+    /// degrades to a warning (the run's results are unaffected — only
+    /// crash recovery weakens until the next successful snapshot).
+    fn journal_publish(&self, cells: &[(SimKey, CachedSim)]) {
+        if cells.is_empty() {
+            return;
+        }
+        let mut guard = lock_ignore_poison(&self.journal);
+        let Some(st) = guard.as_mut() else { return };
+        for (key, sim) in cells {
+            if let Err(e) = st.journal.append(&Record::Memo(*key, sim.clone())) {
+                eprintln!(
+                    "warning: sweep journal append failed at {}: {e}",
+                    st.journal.path().display()
+                );
+                return;
+            }
+        }
+    }
+
+    /// Journal converged-delta and summary records that appeared (or
+    /// changed trust) since the journal last saw them. Called at every
+    /// run boundary — deltas and summaries are advisory, so
+    /// run-granular durability is enough; memo cells, which carry the
+    /// bit-identity contract, journal per publish instead.
+    fn journal_run_end(&self) {
+        let mut guard = lock_ignore_poison(&self.journal);
+        let Some(st) = guard.as_mut() else { return };
+        for (key, d) in self.delta_cache.entries() {
+            if st.seen_deltas.insert(key) {
+                if let Err(e) = st.journal.append(&Record::Delta(key, d)) {
+                    eprintln!(
+                        "warning: sweep journal append failed at {}: {e}",
+                        st.journal.path().display()
+                    );
+                    return;
+                }
+            }
+        }
+        for (key, s) in self.summary_cache.entries() {
+            if st.seen_summaries.get(&key) == Some(&s.trusted) {
+                continue;
+            }
+            st.seen_summaries.insert(key, s.trusted);
+            if let Err(e) = st.journal.append(&Record::Summary(key, s)) {
+                eprintln!(
+                    "warning: sweep journal append failed at {}: {e}",
+                    st.journal.path().display()
+                );
+                return;
+            }
+        }
+        // Run boundaries are natural durability points — but only when
+        // the configured cadence asks for syncing at all.
+        if st.journal.wants_sync() {
+            if let Err(e) = st.journal.sync() {
+                eprintln!(
+                    "warning: sweep journal sync failed at {}: {e}",
+                    st.journal.path().display()
+                );
+            }
+        }
     }
 
     /// Execute the grid. Results are bit-identical for any thread count,
@@ -1659,6 +1815,9 @@ impl SweepEngine {
         let mut slowest_job_secs = 0f64;
         let mut job_elapsed_total_secs = 0f64;
         let mut run_tel = WorkerTelemetry::default();
+        // Microseconds from t0 to the first permit grant across all
+        // workers (u64::MAX = nothing simulated).
+        let first_permit_us = AtomicU64::new(u64::MAX);
         if !items.is_empty() {
             let n_cfgs = spec.configs.len();
             let n_worker_slots = spec.backends.len() * n_cfgs;
@@ -1667,6 +1826,7 @@ impl SweepEngine {
             let backend_fps = &backend_fps;
             let cfg_fps = &cfg_fps;
             let slot_opts = &slot_opts;
+            let first_permit_us = &first_permit_us;
             let worker = |claim: &AtomicUsize| -> (Vec<ItemOut>, WorkerTelemetry) {
                 // Worker state comes from the engine's hand-off pool,
                 // so pooled processors and pre-decoded programs survive
@@ -1692,6 +1852,8 @@ impl SweepEngine {
                     let s = if t.cf { Strategy::ChannelFirst } else { Strategy::FeatureFirst };
                     let (permit, wait) = self.gate.acquire(capacity, priority);
                     tel.gate_wait_secs += wait;
+                    first_permit_us
+                        .fetch_min(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
                     // Deadline check at permit acquisition: an expired
                     // item is dropped (never simulated) and reports the
                     // structured deadline error instead of a result.
@@ -1796,15 +1958,23 @@ impl SweepEngine {
         //    deadlock-free: by the time any run blocks, everything it
         //    owns is already visible.
         if memoize {
+            let mut published: Vec<(SimKey, CachedSim)> = Vec::new();
             let mut cache = self.lock_cache();
             for &slot in &todo {
                 if let (Some(key), Some(sim)) = (slot_keys[slot], sims[slot].as_ref()) {
                     cache.insert(key, sim.clone());
+                    published.push((key, sim.clone()));
                 }
             }
             drop(cache);
             self.cache_ready.notify_all();
             claims.published();
+            // Journal after the cache lock is released (and after the
+            // cells are visible): a concurrent save_cache either
+            // snapshots them or they re-append to the compacted
+            // journal — duplicates are bit-identical and merge
+            // idempotently.
+            self.journal_publish(&published);
         }
 
         // 5) Resolve the cells another run had in flight when this run
@@ -1871,6 +2041,10 @@ impl SweepEngine {
             });
         }
 
+        // Run boundary: diff freshly converged deltas / summaries into
+        // the journal (no-op without one attached).
+        self.journal_run_end();
+
         Ok(SweepOutcome {
             jobs,
             results,
@@ -1879,6 +2053,10 @@ impl SweepEngine {
             dedup_hits,
             coalesced_hits,
             gate_wait_secs: run_tel.gate_wait_secs,
+            gate_delay_secs: match first_permit_us.load(Ordering::Relaxed) {
+                u64::MAX => 0.0,
+                us => us as f64 / 1e6,
+            },
             cache_evictions: self.lock_cache().evictions() - evictions_before,
             threads_used: threads,
             elapsed_secs: t0.elapsed().as_secs_f64(),
@@ -1981,6 +2159,7 @@ impl SweepEngine {
                     self.lock_cache().insert(key, sim.clone());
                     self.cache_ready.notify_all();
                     claim.published();
+                    self.journal_publish(&[(key, sim.clone())]);
                     return Ok((sim, true));
                 }
             }

@@ -11,6 +11,8 @@
 //!             [--program-cache-cap N] [--program-cache-bytes N]
 //!             [--out DIR] [config flags]                       (see `speed sweep --help`)
 //! speed serve [--tcp ADDR] [--port-file PATH] [--cache-file PATH]
+//!             [--flush-interval-secs N] [--journal-file PATH | --no-journal]
+//!             [--journal-sync-every N]
 //!             [--max-cache-entries N] [--threads N] [--worker-budget N]
 //!             [--max-connections N] [--max-concurrent-sweeps N]
 //!             [--idle-timeout-secs N]
@@ -25,7 +27,12 @@
 //!             [--item-timeout-secs N] [--max-item-retries N]
 //!             [--max-node-failures N] [--backoff-ms N]
 //!             [--no-cache-exchange] [--expect-sims N]
+//!             [--journal PATH [--resume]]
 //!                                         (coordinator over serve nodes; `--help`)
+//!
+//! Every command takes `--fault-plan PLAN` (or the SPEED_FAULT_PLAN
+//! env var) to arm deterministic fault injection; see the README's
+//! "Crash safety & fault injection" section.
 //! speed sim --model NAME [--prec 4|8|16] [--strategy ff|cf|mixed]
 //! speed asm FILE.s            # assemble + hexdump
 //! speed disasm FILE.bin       # disassemble 32-bit words
@@ -110,6 +117,20 @@ flags:
                load the persistent result cache from PATH before the run
                (cold start if missing/corrupt) and save it back after, so
                a rerun skips every previously simulated cell
+  --journal-file PATH
+               crash-safety write-ahead journal (SPEEDSWJ): every
+               published result appends to PATH as it lands and replays
+               over the cache file on the next start, so a killed run
+               restarts warm (default: <cache-file>.swj when
+               --cache-file is set; no cache file = no journal)
+  --no-journal  disable the write-ahead journal
+  --journal-sync-every N
+               fsync the journal every N appended frames (default 1 =
+               every frame, fully durable; 0 = never mid-run)
+  --fault-plan PLAN
+               arm deterministic fault injection (also via the
+               SPEED_FAULT_PLAN env var); see the README's \"Crash
+               safety & fault injection\" section for the grammar
   --out DIR     also write the markdown report(s) into DIR
   --help        this text
 
@@ -162,6 +183,24 @@ flags:
                 load the persistent result cache from PATH at startup
                 (cold start if missing/corrupt) and flush it back on
                 shutdown
+  --flush-interval-secs N
+                also flush the cache file every N seconds while
+                serving (default 0 = shutdown-only), bounding data
+                loss on a long-lived node
+  --journal-file PATH
+                crash-safety write-ahead journal (SPEEDSWJ): results
+                append to PATH as they publish and replay over the
+                cache snapshot at startup, so a SIGKILL'd node
+                restarts warm (default: <cache-file>.swj when
+                --cache-file is set; no cache file = no journal)
+  --no-journal  disable the write-ahead journal
+  --journal-sync-every N
+                fsync the journal every N appended frames (default 1 =
+                every frame, fully durable; 0 = never mid-run)
+  --fault-plan PLAN
+                arm deterministic fault injection (also via the
+                SPEED_FAULT_PLAN env var); see the README's \"Crash
+                safety & fault injection\" section for the grammar
   --max-cache-entries N
                 bound the memo table to N entries with LRU eviction
                 (bounds the load-time merge too); default unbounded
@@ -293,6 +332,19 @@ flags:
   --no-cache-exchange
                     skip the pre/post cache exchange (warmth only —
                     results are bit-identical either way)
+  --journal PATH    crash-safety write-ahead journal (SPEEDSWJ): every
+                    completed item's reply lines append to PATH as
+                    they land, so a killed coordinator loses no
+                    finished work
+  --resume          replay completed items from --journal instead of
+                    re-dispatching them; the assembled blocks are
+                    byte-identical to an uninterrupted run (fresh
+                    start with a notice if the journal is missing or
+                    belongs to a different plan)
+  --fault-plan PLAN
+                    arm deterministic fault injection (also via the
+                    SPEED_FAULT_PLAN env var); see the README's
+                    \"Crash safety & fault injection\" section
   --expect-sims N   exit non-zero unless the fleet total is exactly N
                     executed simulations (0 = assert pure cache)
   --help            this text
@@ -316,6 +368,33 @@ fn load_cache_flag(engine: &mut SweepEngine, path: Option<&str>) {
         Ok(n) => eprintln!("cache-file {path}: loaded {n} cached simulations"),
         Err(e) => eprintln!("cache-file {path}: {e}; starting cold"),
     }
+}
+
+/// Resolve the `SPEEDSWJ` write-ahead journal path from the flags: an
+/// explicit `--journal-file`, else `<cache-file>.swj` alongside
+/// `--cache-file`, suppressed entirely by `--no-journal`.
+fn journal_path_flag(flags: &Flags) -> Option<String> {
+    if flags.get("no-journal").is_some() {
+        return None;
+    }
+    flags
+        .get("journal-file")
+        .map(String::from)
+        .or_else(|| flags.get("cache-file").map(|p| format!("{p}.swj")))
+}
+
+/// Attach the write-ahead journal per the flags (see
+/// [`journal_path_flag`]); replayed records warm the engine over the
+/// snapshot `load_cache_flag` loaded. Fatal on failure — a requested
+/// journal must never silently degrade to lossy operation.
+fn attach_journal_flag(engine: &SweepEngine, flags: &Flags) -> speed::Result<()> {
+    let Some(path) = journal_path_flag(flags) else { return Ok(()) };
+    let sync_every = flags.num("journal-sync-every").unwrap_or(1);
+    let n = engine.attach_journal(&path, sync_every)?;
+    if n > 0 {
+        eprintln!("journal {path}: replayed {n} record(s)");
+    }
+    Ok(())
 }
 
 /// Save the engine's cache back to `--cache-file` (best-effort).
@@ -570,6 +649,21 @@ fn main() -> speed::Result<()> {
     }
     let cmd = args[0].as_str();
     let (pos, flags) = Flags::parse(&args[1..]);
+    // Deterministic fault injection: `--fault-plan` (or the
+    // SPEED_FAULT_PLAN environment variable) arms the faultline layer
+    // for this process; without either it stays a zero-cost check.
+    let fault_plan = flags
+        .get("fault-plan")
+        .map(String::from)
+        .or_else(|| std::env::var("SPEED_FAULT_PLAN").ok())
+        .filter(|p| !p.is_empty());
+    if let Some(plan) = fault_plan {
+        if let Err(e) = speed::coordinator::faultline::install(&plan) {
+            eprintln!("bad --fault-plan: {e}");
+            std::process::exit(2);
+        }
+        eprintln!("fault plan armed: {plan}");
+    }
     let cfg = config_from(&flags);
     let out = flags.get("out");
 
@@ -606,6 +700,7 @@ fn main() -> speed::Result<()> {
             let mut engine = SweepEngine::new();
             apply_engine_flags(&mut engine, &flags);
             load_cache_flag(&mut engine, flags.get("cache-file"));
+            attach_journal_flag(&engine, &flags)?;
             let f3 = run_fig3_with(&mut engine, &cfg)?;
             let f4 = run_fig4_with(&mut engine, &cfg)?;
             let f5 = run_fig5(&cfg);
@@ -666,6 +761,7 @@ fn main() -> speed::Result<()> {
             // same path serves `sweep` and `all`.
             apply_engine_flags(&mut engine, &flags);
             load_cache_flag(&mut engine, flags.get("cache-file"));
+            attach_journal_flag(&engine, &flags)?;
             for (name, spec) in &specs {
                 let out_come = engine.run(spec)?;
                 let md = report::sweep_markdown(spec, &out_come);
@@ -712,6 +808,9 @@ fn main() -> speed::Result<()> {
                     limits
                 },
                 worker_budget: flags.num("worker-budget"),
+                flush_interval_secs: flags.num("flush-interval-secs").unwrap_or(0),
+                journal_file: journal_path_flag(&flags),
+                journal_sync_every: flags.num("journal-sync-every").unwrap_or(1),
             };
             serve::run_server(opts)?;
         }
@@ -766,6 +865,8 @@ fn main() -> speed::Result<()> {
             if flags.get("no-cache-exchange").is_some() {
                 opts.cache_exchange = false;
             }
+            opts.journal = flags.get("journal").map(String::from);
+            opts.resume = flags.get("resume").is_some();
             let outcome = fleet::run_fleet(&opts)?;
             for b in &outcome.blocks {
                 println!("{b}");

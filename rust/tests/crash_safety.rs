@@ -1,0 +1,535 @@
+//! Crash safety end to end: the `SPEEDSWJ` write-ahead journal, atomic
+//! snapshot saves and the deterministic `faultline` fault-injection
+//! layer, exercised through the same public surfaces the CLI uses.
+//!
+//! Every test takes one file-wide lock: fault plans are process-global
+//! (exactly like the `SPEED_FAULT_PLAN` env var they model), so tests
+//! must not interleave — a plan installed by one test must never be
+//! consumed by another's persist or serve traffic. The lock's guard
+//! also clears any installed plan on drop, panic included, so no test
+//! can leak triggers into the rest of the binary.
+
+use std::fs;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use speed::arch::{Precision, SpeedConfig};
+use speed::coordinator::faultline;
+use speed::coordinator::fleet::{fleet_summary_line, node_line, run_fleet, FleetOptions};
+use speed::coordinator::serve::{self, Request, ServeLimits, ServeShared};
+use speed::coordinator::sweep::{SweepEngine, SweepSpec};
+use speed::dataflow::Strategy;
+
+static GLOBAL: Mutex<()> = Mutex::new(());
+
+/// File-wide serialization + fault-plan hygiene (see module doc).
+struct TestLock {
+    _guard: MutexGuard<'static, ()>,
+}
+
+impl TestLock {
+    fn take() -> TestLock {
+        TestLock { _guard: GLOBAL.lock().unwrap_or_else(|p| p.into_inner()) }
+    }
+}
+
+impl Drop for TestLock {
+    fn drop(&mut self) {
+        faultline::clear();
+    }
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    static N: AtomicU64 = AtomicU64::new(0);
+    let n = N.fetch_add(1, Ordering::SeqCst);
+    std::env::temp_dir().join(format!("speed-crash-{}-{n}-{tag}", std::process::id()))
+}
+
+fn unlimited() -> ServeLimits {
+    ServeLimits { max_connections: 0, max_concurrent_sweeps: 0, idle_timeout_secs: 0 }
+}
+
+/// One cold simulation: the smallest real workload that populates the
+/// memo/delta/summary caches.
+fn single_cell_request(id: u64) -> Request {
+    Request {
+        id,
+        network: "SqueezeNet".into(),
+        layers: Some(vec![1]),
+        precisions: vec![Precision::Int8],
+        strategies: vec![Strategy::FeatureFirst],
+        threads: Some(1),
+        ..Default::default()
+    }
+}
+
+/// The grid the fleet tests distribute: 3 single-cell items.
+fn grid_request(id: u64) -> Request {
+    Request {
+        id,
+        network: "SqueezeNet".into(),
+        layers: Some(vec![1, 2, 3]),
+        precisions: vec![Precision::Int8],
+        strategies: vec![Strategy::FeatureFirst],
+        threads: Some(1),
+        ..Default::default()
+    }
+}
+
+fn spec_of(req: &Request) -> SweepSpec {
+    req.to_spec(&SpeedConfig::default()).expect("valid request")
+}
+
+fn field_u64(line: &str, key: &str) -> u64 {
+    for (k, v) in serve::parse_record(line).expect("line parses") {
+        if k == key {
+            if let serve::Value::Int(n) = v {
+                return n;
+            }
+            panic!("field `{key}` is not an int in {line}");
+        }
+    }
+    panic!("missing field `{key}` in {line}");
+}
+
+/// Reference run: one local engine answering `req` over the serve
+/// layer. Returns (block lines, executed sims).
+fn local_reference(req: &Request) -> (Vec<String>, u64) {
+    let shared =
+        ServeShared::new(Arc::new(SweepEngine::new()), SpeedConfig::default(), unlimited());
+    let input = format!("{}\n", req.to_line());
+    let mut out: Vec<u8> = Vec::new();
+    let stats = serve::serve_lines(&shared, BufReader::new(input.as_bytes()), &mut out);
+    assert_eq!(stats.errors, 0);
+    let lines: Vec<String> =
+        String::from_utf8(out).expect("utf-8").lines().map(String::from).collect();
+    let (summary, blocks) = lines.split_last().expect("summary line");
+    assert!(summary.contains("\"type\":\"summary\""), "{summary}");
+    (blocks.to_vec(), field_u64(summary, "sims"))
+}
+
+/// One in-process worker node: its own engine behind the real TCP
+/// accept loop.
+struct Node {
+    addr: String,
+    shutdown: Arc<AtomicBool>,
+    handle: thread::JoinHandle<serve::TcpReport>,
+}
+
+fn spawn_node() -> Node {
+    let shared = Arc::new(ServeShared::new(
+        Arc::new(SweepEngine::new()),
+        SpeedConfig::default(),
+        unlimited(),
+    ));
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let handle = {
+        let shared = Arc::clone(&shared);
+        let shutdown = Arc::clone(&shutdown);
+        thread::spawn(move || {
+            serve::run_tcp(&shared, listener, None, 0, &shutdown).expect("run_tcp")
+        })
+    };
+    Node { addr, shutdown, handle }
+}
+
+impl Node {
+    fn stop(self) -> serve::TcpReport {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.handle.join().expect("node thread")
+    }
+}
+
+/// An address nothing listens on (bind, learn the port, close).
+fn dead_addr() -> String {
+    let l = TcpListener::bind("127.0.0.1:0").expect("bind");
+    l.local_addr().expect("addr").to_string()
+}
+
+// ---------------------------------------------------------------------------
+// Persist fuzzing: decode never panics, merges are all-or-nothing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn persist_load_survives_every_truncation_and_bit_flip() {
+    let _lock = TestLock::take();
+    let blob = {
+        let engine = SweepEngine::new();
+        engine.run(&spec_of(&single_cell_request(1))).expect("seed run");
+        engine.serialize_cache()
+    };
+    let full = SweepEngine::new();
+    let n_full = full.load_cache_bytes(&blob).expect("pristine blob loads");
+    assert!(n_full >= 1);
+    let loaded_sims = full.cached_sims();
+
+    // Every truncation point: never a panic, and a rejected blob must
+    // merge nothing (all-or-nothing, exactly like `cache_import`).
+    for cut in 0..blob.len() {
+        let engine = SweepEngine::new();
+        match engine.load_cache_bytes(&blob[..cut]) {
+            Ok(_) => assert_eq!(
+                engine.cached_sims(),
+                loaded_sims,
+                "a prefix of {cut} bytes claimed a full merge",
+            ),
+            Err(_) => assert_eq!(
+                engine.cached_sims(),
+                0,
+                "a rejected {cut}-byte prefix half-merged into the cache",
+            ),
+        }
+    }
+
+    // Every single-bit flip at every offset: same contract.
+    for i in 0..blob.len() {
+        for bit in 0..8 {
+            let mut corrupt = blob.clone();
+            corrupt[i] ^= 1 << bit;
+            let engine = SweepEngine::new();
+            if engine.load_cache_bytes(&corrupt).is_err() {
+                assert_eq!(
+                    engine.cached_sims(),
+                    0,
+                    "rejected flip at byte {i} bit {bit} half-merged",
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Atomic snapshot saves under injected torn writes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn torn_snapshot_write_leaves_the_previous_snapshot_intact() {
+    let _lock = TestLock::take();
+    let path = tmp_path("torn-save.swc");
+    let engine = SweepEngine::new();
+    engine.run(&spec_of(&single_cell_request(1))).expect("seed run");
+    engine.save_cache(&path).expect("clean save");
+    let v1 = fs::read(&path).expect("snapshot exists");
+
+    // First write to the `persist.write` site tears mid-blob: the tmp
+    // sibling dies, the rename never happens, the old snapshot stays.
+    faultline::install("persist.write:torn@1").expect("valid plan");
+    engine.save_cache(&path).expect_err("torn write must surface as an error");
+    faultline::clear();
+    assert_eq!(fs::read(&path).expect("still there"), v1, "old snapshot must be intact");
+
+    // With the plan cleared the same engine saves fine, and the result
+    // loads warm.
+    engine.save_cache(&path).expect("save after fault clears");
+    let fresh = SweepEngine::new();
+    assert!(fresh.load_cache(&path).expect("reload") >= 1);
+    assert_eq!(fresh.run(&spec_of(&single_cell_request(2))).expect("warm").executed_sims, 0);
+    let _ = fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------------
+// Engine journal: warm restart, snapshot interplay, compaction
+// ---------------------------------------------------------------------------
+
+#[test]
+fn journal_replays_a_killed_engines_results_bit_identically() {
+    let _lock = TestLock::take();
+    let jpath = tmp_path("engine.swj");
+    let snap = tmp_path("engine.swc");
+    let spec = spec_of(&single_cell_request(1));
+
+    // "Crash": engine A journals its run and is dropped without ever
+    // calling save_cache — exactly what SIGKILL leaves behind.
+    let blob_a = {
+        let a = SweepEngine::new();
+        assert_eq!(a.attach_journal(&jpath, 1).expect("attach"), 0);
+        assert!(a.journal_attached());
+        let out = a.run(&spec).expect("cold run");
+        assert!(out.executed_sims >= 1);
+        a.serialize_cache()
+    };
+
+    // Warm restart purely from the journal: every published record
+    // replays, the rerun is pure cache, the serialized state is
+    // byte-identical to what the dead engine held.
+    let b = SweepEngine::new();
+    let replayed = b.attach_journal(&jpath, 1).expect("recover");
+    assert!(replayed >= 1, "the journal must hold the crashed run's records");
+    assert_eq!(b.serialize_cache(), blob_a, "journal replay must be bit-identical");
+    assert_eq!(b.run(&spec).expect("warm run").executed_sims, 0);
+
+    // save_cache writes the snapshot atomically and compacts the
+    // journal down to its bare header (12 bytes: magic + version).
+    b.save_cache(&snap).expect("snapshot");
+    assert_eq!(
+        fs::metadata(&jpath).expect("journal exists").len(),
+        12,
+        "snapshot save must compact the journal",
+    );
+
+    // A third engine restarting from snapshot + compacted journal sees
+    // the same world: zero journal records, zero sims to redo.
+    let c = SweepEngine::new();
+    assert!(c.load_cache(&snap).expect("snapshot loads") >= 1);
+    assert_eq!(c.attach_journal(&jpath, 1).expect("attach"), 0);
+    assert_eq!(c.serialize_cache(), blob_a);
+    assert_eq!(c.run(&spec).expect("still warm").executed_sims, 0);
+    let _ = fs::remove_file(&jpath);
+    let _ = fs::remove_file(&snap);
+}
+
+#[test]
+fn truncated_journal_tail_recovers_to_the_last_good_frame() {
+    let _lock = TestLock::take();
+    let jpath = tmp_path("torn-tail.swj");
+    let spec = spec_of(&single_cell_request(1));
+    {
+        let a = SweepEngine::new();
+        a.attach_journal(&jpath, 1).expect("attach");
+        a.run(&spec).expect("run");
+    }
+    let full = fs::read(&jpath).expect("journal bytes");
+    assert!(full.len() > 12, "journal must hold frames");
+
+    // Chop one byte off the tail — a torn final frame. Recovery must
+    // truncate at the frame boundary and keep every earlier record;
+    // the engine re-simulates only what the torn frame lost.
+    fs::write(&jpath, &full[..full.len() - 1]).expect("tear the tail");
+    let b = SweepEngine::new();
+    b.attach_journal(&jpath, 1).expect("recovery never errors on a torn tail");
+    let out = b.run(&spec).expect("rerun");
+    // The torn record is re-published into the recovered journal, so a
+    // third start replays the complete run again.
+    let c = SweepEngine::new();
+    assert!(c.attach_journal(&jpath, 1).expect("attach") >= 1);
+    assert_eq!(c.run(&spec).expect("warm").executed_sims, 0);
+    // Whatever the tear cost, it never exceeds the full cold run.
+    assert!(out.executed_sims <= 1, "{out:?}");
+    let _ = fs::remove_file(&jpath);
+}
+
+// ---------------------------------------------------------------------------
+// Serve-side fault injection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn node_item_fault_fails_exactly_the_planned_request() {
+    let _lock = TestLock::take();
+    faultline::install("node.item:fail@1").expect("valid plan");
+    let shared =
+        ServeShared::new(Arc::new(SweepEngine::new()), SpeedConfig::default(), unlimited());
+    let input = format!(
+        "{}\n{}\n",
+        single_cell_request(1).to_line(),
+        single_cell_request(2).to_line(),
+    );
+    let mut out: Vec<u8> = Vec::new();
+    let stats = serve::serve_lines(&shared, BufReader::new(input.as_bytes()), &mut out);
+    faultline::clear();
+    let text = String::from_utf8(out).expect("utf-8");
+    let lines: Vec<&str> = text.lines().collect();
+
+    // First request: injected failure, structured error reply. Second
+    // request (the trigger is spent): a clean block + summary.
+    assert_eq!(stats.requests, 2);
+    assert_eq!(stats.errors, 1);
+    assert!(
+        lines[0].contains("\"type\":\"error\"") && lines[0].contains("fault injected"),
+        "{}",
+        lines[0],
+    );
+    let summary = lines.last().expect("summary");
+    assert!(summary.contains("\"type\":\"summary\""), "{summary}");
+    assert_eq!(field_u64(summary, "sims"), 1, "{summary}");
+    // Latency telemetry rides every summary.
+    let _ = field_u64(summary, "elapsed_ms");
+    let _ = field_u64(summary, "gate_ms");
+}
+
+#[test]
+fn periodic_flush_persists_the_cache_while_serving() {
+    let _lock = TestLock::take();
+    let cache = tmp_path("periodic.swc");
+    let cache_str = cache.to_str().expect("utf-8 path").to_string();
+    let shared = Arc::new(ServeShared::new(
+        Arc::new(SweepEngine::new()),
+        SpeedConfig::default(),
+        unlimited(),
+    ));
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let handle = {
+        let shared = Arc::clone(&shared);
+        let shutdown = Arc::clone(&shutdown);
+        thread::spawn(move || {
+            serve::run_tcp(&shared, listener, Some(&cache_str), 1, &shutdown).expect("run_tcp")
+        })
+    };
+
+    // Simulate something worth saving, over a real connection.
+    let stream = TcpStream::connect(&addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut writer = stream;
+    writeln!(writer, "{}", single_cell_request(1).to_line()).expect("send");
+    writer.flush().expect("flush");
+    loop {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).expect("reply") > 0, "server hung up");
+        if line.contains("\"type\":\"summary\"") {
+            break;
+        }
+    }
+
+    // The accept loop flushes on its own cadence — no shutdown
+    // needed. An early flush may capture the engine before the sweep
+    // landed, so poll until a flushed file *loads* the simulation
+    // (saves are atomic renames, so each read sees a complete file).
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut persisted = 0;
+    while Instant::now() < deadline {
+        if cache.exists() {
+            persisted = SweepEngine::new().load_cache(&cache).expect("flushed file loads");
+            if persisted >= 1 {
+                break;
+            }
+        }
+        thread::sleep(Duration::from_millis(50));
+    }
+    assert!(persisted >= 1, "periodic flush never persisted the simulation");
+
+    drop(writer);
+    drop(reader);
+    shutdown.store(true, Ordering::SeqCst);
+    let report = handle.join().expect("accept loop");
+    assert!(report.flushes >= 1, "{report:?}");
+    let _ = fs::remove_file(&cache);
+}
+
+// ---------------------------------------------------------------------------
+// Fleet coordinator resume
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fleet_resume_from_a_complete_journal_is_a_pure_replay() {
+    let _lock = TestLock::take();
+    let jpath = tmp_path("fleet-complete.swj");
+    let jstr = jpath.to_str().expect("utf-8 path").to_string();
+    let (local_blocks, local_sims) = local_reference(&grid_request(7));
+
+    let node = spawn_node();
+    let mut opts = FleetOptions::new(
+        vec![node.addr.clone()],
+        SpeedConfig::default(),
+        grid_request(7),
+    );
+    opts.cache_exchange = false;
+    opts.journal = Some(jstr.clone());
+    let out = run_fleet(&opts).expect("journaled fleet");
+    assert_eq!(out.blocks, local_blocks);
+    assert_eq!(out.sims, local_sims);
+    // Per-node latency telemetry: percentile fields ride the records.
+    let nline = node_line(&out.nodes[0]);
+    assert!(field_u64(&nline, "p95_item_ms") >= field_u64(&nline, "p50_item_ms"), "{nline}");
+    let sline = fleet_summary_line(7, &out);
+    assert!(sline.contains("\"p50_item_ms\":") && sline.contains("\"p95_item_ms\":"), "{sline}");
+    node.stop();
+
+    // Resume against a node nothing listens on: a complete journal
+    // replays the whole grid without one node transaction.
+    let mut opts2 =
+        FleetOptions::new(vec![dead_addr()], SpeedConfig::default(), grid_request(7));
+    opts2.cache_exchange = false;
+    opts2.journal = Some(jstr);
+    opts2.resume = true;
+    let resumed = run_fleet(&opts2).expect("pure replay needs no nodes");
+    assert_eq!(resumed.blocks, local_blocks, "resumed blocks must be byte-identical");
+    assert_eq!(resumed.nodes[0].items_done, 0, "{:?}", resumed.nodes);
+    assert_eq!(resumed.nodes[0].failures, 0, "{:?}", resumed.nodes);
+    assert_eq!(resumed.requeues, 0);
+    let _ = fs::remove_file(&jpath);
+}
+
+#[test]
+fn fleet_resume_after_a_torn_journal_redispatches_only_the_tail() {
+    let _lock = TestLock::take();
+    let jpath = tmp_path("fleet-torn.swj");
+    let jstr = jpath.to_str().expect("utf-8 path").to_string();
+    let (local_blocks, _) = local_reference(&grid_request(7));
+
+    let node = spawn_node();
+    let mut opts = FleetOptions::new(
+        vec![node.addr.clone()],
+        SpeedConfig::default(),
+        grid_request(7),
+    );
+    opts.cache_exchange = false;
+    opts.journal = Some(jstr.clone());
+    let out = run_fleet(&opts).expect("journaled fleet");
+    assert_eq!(out.blocks, local_blocks);
+
+    // Tear the journal mid-frame (a coordinator killed mid-append):
+    // recovery drops exactly the torn final record, so the resumed run
+    // re-dispatches one item — to the same still-live node — and the
+    // assembled output stays byte-identical.
+    let full = fs::read(&jpath).expect("journal bytes");
+    fs::write(&jpath, &full[..full.len() - 1]).expect("tear the tail");
+    let mut opts2 = FleetOptions::new(
+        vec![node.addr.clone()],
+        SpeedConfig::default(),
+        grid_request(7),
+    );
+    opts2.cache_exchange = false;
+    opts2.journal = Some(jstr);
+    opts2.resume = true;
+    let resumed = run_fleet(&opts2).expect("partial resume");
+    assert_eq!(resumed.blocks, local_blocks, "partial resume must not perturb a bit");
+    let redone: u64 = resumed.nodes.iter().map(|n| n.items_done).sum();
+    assert_eq!(redone, 1, "exactly the torn item re-dispatches: {:?}", resumed.nodes);
+
+    node.stop();
+    let _ = fs::remove_file(&jpath);
+}
+
+#[test]
+fn fleet_resume_refuses_a_journal_from_a_different_plan() {
+    let _lock = TestLock::take();
+    let jpath = tmp_path("fleet-mismatch.swj");
+    let jstr = jpath.to_str().expect("utf-8 path").to_string();
+
+    let node = spawn_node();
+    let mut opts = FleetOptions::new(
+        vec![node.addr.clone()],
+        SpeedConfig::default(),
+        single_cell_request(3),
+    );
+    opts.cache_exchange = false;
+    opts.journal = Some(jstr.clone());
+    run_fleet(&opts).expect("seed journal");
+
+    // Same journal path, different grid: the plan frame mismatches, so
+    // resume recomputes from scratch instead of trusting stale state.
+    let (local_blocks, _) = local_reference(&grid_request(7));
+    let mut opts2 = FleetOptions::new(
+        vec![node.addr.clone()],
+        SpeedConfig::default(),
+        grid_request(7),
+    );
+    opts2.cache_exchange = false;
+    opts2.journal = Some(jstr);
+    opts2.resume = true;
+    let out = run_fleet(&opts2).expect("fresh start on mismatch");
+    assert_eq!(out.blocks, local_blocks);
+    let done: u64 = out.nodes.iter().map(|n| n.items_done).sum();
+    assert_eq!(done, 3, "every item of the new plan must be dispatched: {:?}", out.nodes);
+
+    node.stop();
+    let _ = fs::remove_file(&jpath);
+}

@@ -86,7 +86,9 @@ fn spawn_node() -> Node {
     let handle = {
         let shared = Arc::clone(&shared);
         let shutdown = Arc::clone(&shutdown);
-        thread::spawn(move || serve::run_tcp(&shared, listener, None, &shutdown).expect("run_tcp"))
+        thread::spawn(move || {
+            serve::run_tcp(&shared, listener, None, 0, &shutdown).expect("run_tcp")
+        })
     };
     Node { addr, shutdown, handle }
 }

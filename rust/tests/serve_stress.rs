@@ -594,7 +594,7 @@ fn spawn_tcp(
 ) -> thread::JoinHandle<serve::TcpReport> {
     let shared = Arc::clone(shared);
     let shutdown = Arc::clone(shutdown);
-    thread::spawn(move || serve::run_tcp(&shared, listener, None, &shutdown).expect("run_tcp"))
+    thread::spawn(move || serve::run_tcp(&shared, listener, None, 0, &shutdown).expect("run_tcp"))
 }
 
 #[test]
